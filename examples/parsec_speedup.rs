@@ -1,0 +1,60 @@
+//! END-TO-END DRIVER (DESIGN.md §5): the paper's headline experiment on
+//! the full three-layer stack.
+//!
+//! Boots the simulated 40-core / 4-node R910, launches the Fig-7 PARSEC
+//! mix (12 measured apps + half-CPU/half-memory background), and runs
+//! the complete pipeline with the **AOT PJRT artifacts on the scoring
+//! hot path** (L1 Pallas kernel -> L2 JAX graph -> HLO text -> PJRT CPU
+//! client -> L3 scheduler). Python is not involved at any point of this
+//! binary's execution.
+//!
+//! Prerequisite: `make artifacts`.
+//! Run: `cargo run --release --offline --example parsec_speedup`
+
+use numasched::config::PolicyKind;
+use numasched::experiments::report::{f2, pct, Table};
+use numasched::experiments::{fig7, runner};
+use numasched::workloads::parsec;
+
+fn main() {
+    let use_pjrt = std::env::args().all(|a| a != "--no-pjrt");
+    let seed = 42;
+    println!(
+        "end-to-end: Fig-7 mix on r910-40core, scoring backend = {}",
+        if use_pjrt { "AOT PJRT artifacts" } else { "pure rust" }
+    );
+
+    let base = runner::run(&fig7::params(PolicyKind::Default, seed, false));
+    let prop = runner::run(&fig7::params(PolicyKind::Proposed, seed, use_pjrt));
+
+    let mut t = Table::new(
+        "per-app completion time and speedup (proposed vs default)",
+        &["app", "default ms", "proposed ms", "speedup"],
+    );
+    let mut best = f64::NEG_INFINITY;
+    for name in parsec::NAMES {
+        let (Some(b), Some(p)) = (base.runtime_of(name), prop.runtime_of(name)) else {
+            continue;
+        };
+        best = best.max(b / p - 1.0);
+        t.row(vec![name.into(), format!("{b:.0}"), format!("{p:.0}"), f2(b / p)]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\nheadline: up to {} faster (paper: up to 25%)",
+        pct(best.max(0.0))
+    );
+    println!(
+        "scheduler: {} decisions, {} process migrations, {} pages migrated",
+        prop.scheduler_decisions, prop.total_migrations, prop.total_pages_migrated
+    );
+    if prop.epoch_ns.count() > 0 {
+        println!(
+            "scoring epoch (monitor+reporter+{}): mean {:.1} us, max {:.1} us over {} epochs",
+            if use_pjrt { "pjrt" } else { "rust" },
+            prop.epoch_ns.mean() / 1e3,
+            prop.epoch_ns.max() / 1e3,
+            prop.epoch_ns.count()
+        );
+    }
+}

@@ -1,0 +1,67 @@
+//! Quickstart: the numasched public API in ~40 lines.
+//!
+//! Boots a small simulated NUMA machine, launches two workloads (one
+//! important, one background hog), runs the full Monitor -> Reporter ->
+//! Scheduler pipeline, and prints what happened.
+//!
+//! Run: `cargo run --release --offline --example quickstart`
+
+use numasched::config::SchedulerConfig;
+use numasched::monitor::Monitor;
+use numasched::reporter::{Backend, Reporter};
+use numasched::scheduler::UserScheduler;
+use numasched::sim::{Machine, Placement, TaskBehavior};
+use numasched::topology::NumaTopology;
+
+fn main() {
+    // A 2-node, 8-core machine.
+    let topo = NumaTopology::from_config(
+        &numasched::config::MachineConfig::preset("2node-8core").unwrap(),
+    );
+    let mut machine = Machine::new(topo.clone(), 1);
+
+    // An important memory-bound app, placed NUMA-blind by the "OS"...
+    let app = machine.spawn("myapp", TaskBehavior::mem_bound(4_000.0), 3.0, 2,
+                            Placement::LeastLoaded);
+    // ...and a background memory hog.
+    machine.spawn("hog", TaskBehavior::mem_bound(f64::INFINITY), 0.5, 2,
+                  Placement::LeastLoaded);
+
+    // The paper's pipeline. The Monitor reads the machine purely through
+    // procfs/sysfs text; importance comes from user space.
+    let monitor = Monitor::discover(&machine).expect("discover topology");
+    let mut reporter = Reporter::new(
+        Backend::Cpu, // or Backend::Pjrt(ScoringEngine::load(...)) after `make artifacts`
+        monitor.topo.distance.clone(),
+        topo.bandwidth_gbs.clone(),
+    );
+    reporter.importance.insert("myapp".into(), 3.0);
+    let mut scheduler = UserScheduler::new(&SchedulerConfig::default());
+    scheduler.cores_per_node = topo.cores_per_node;
+
+    // Drive everything on virtual time: sample every 10 ms, act on the
+    // Reporter's signal.
+    while machine.now_ms < 20_000.0 && machine.process(app).unwrap().is_running() {
+        machine.step();
+        if (machine.now_ms as u64) % 10 == 0 {
+            let snapshot = monitor.sample(&machine, machine.now_ms);
+            if let Some(report) = reporter.ingest(&snapshot) {
+                for d in scheduler.apply(&report, &mut machine) {
+                    println!(
+                        "t={:>6.0}ms  {:?}: {} node {} -> {} ({} sticky pages)",
+                        d.t_ms, d.reason, d.comm, d.from, d.to, d.sticky_pages
+                    );
+                }
+            }
+        }
+    }
+
+    let p = machine.process(app).unwrap();
+    println!(
+        "\nmyapp finished in {:.0} ms at mean speed {:.2} after {} migration(s)",
+        p.runtime_ms().unwrap_or(f64::NAN),
+        p.mean_speed(),
+        p.migrations
+    );
+    println!("scheduler took {} decisions total", scheduler.decisions.len());
+}

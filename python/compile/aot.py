@@ -1,0 +1,88 @@
+"""AOT compile path: lower the L2 graphs to HLO text artifacts.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py and README gotchas.
+
+Run once via ``make artifacts``; the Rust binary is self-contained after.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--tmax 64] [--nmax 8]
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import params, placement
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def write_manifest(out_dir, tmax, nmax, entries):
+    """Record the artifact contract the Rust runtime asserts against."""
+    lines = [
+        "# numasched AOT manifest — parsed by rust/src/runtime/manifest.rs",
+        f"tmax = {tmax}",
+        f"nmax = {nmax}",
+        f"block_t = {params.BLOCK_T}",
+        f"alpha = {params.ALPHA}",
+        f"beta = {params.BETA}",
+        f"gamma = {params.GAMMA}",
+        f"d_local = {params.D_LOCAL}",
+        f"rho_max = {params.RHO_MAX}",
+        f"vmem_bytes_per_step = {placement.vmem_bytes(params.BLOCK_T, nmax)}",
+    ]
+    for name, n_in, n_out in entries:
+        lines.append(f"entry = {name} inputs={n_in} outputs={n_out}")
+    path = os.path.join(out_dir, "manifest.txt")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--tmax", type=int, default=params.TMAX)
+    ap.add_argument("--nmax", type=int, default=params.NMAX)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    score_specs = model.aot_input_specs(args.tmax, args.nmax)
+    stats_specs = model.node_stats_input_specs(args.tmax, args.nmax)
+
+    artifacts = [
+        ("placement_score", model.score_placement, score_specs, 4),
+        ("node_stats", model.node_stats, stats_specs, 3),
+    ]
+    entries = []
+    for name, fn, specs, n_out in artifacts:
+        text = lower_entry(fn, specs)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>8} chars -> {path}")
+        entries.append((name, len(specs), n_out))
+
+    manifest = write_manifest(args.out_dir, args.tmax, args.nmax, entries)
+    print(f"wrote manifest -> {manifest}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Layer-1 Pallas kernels for the numasched scoring hot path.
+
+``placement`` holds the fused placement-score kernel (the compute the
+Reporter runs every scheduling epoch); ``ref`` is the pure-jnp oracle the
+kernels are validated against at build time.
+"""

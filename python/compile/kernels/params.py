@@ -1,0 +1,41 @@
+"""Shared constants of the placement-scoring model.
+
+These are the *contract* between the three layers: the Pallas kernel (L1),
+the JAX graph lowered to HLO (L2), and the pure-Rust fallback scorer in
+``rust/src/reporter/factors.rs`` (L3).  Any change here must be mirrored in
+``rust/src/reporter/factors.rs::consts`` — the cross-layer integration test
+(``rust/tests/hlo_equivalence.rs``) pins the two together numerically.
+
+Model recap (see DESIGN.md §3):
+
+* ``R = rownorm(A) @ D`` — mean SLIT access distance of a task if it were
+  scheduled on node ``n`` (SLIT local distance is 10, remote >= 11).
+* ``rho = clip((U + mi) / B, 0, RHO_MAX)`` — post-move utilization of node
+  ``n``'s memory controller, ``C = mi * rho / (1 - rho)`` the M/M/1-style
+  queueing (contention) penalty.
+* ``loc = ALPHA*(R - D_LOCAL)/D_LOCAL + BETA*C`` — predicted degradation of
+  the task when running on node ``n`` (the paper's *contention degradation
+  factor* is ``loc`` evaluated at the current node).
+* ``S = w * (d_cur - loc) - mig`` — importance-weighted predicted speedup of
+  moving to ``n``, less the sticky-page migration cost.
+"""
+
+# Degradation model weights.
+ALPHA = 1.0     # weight of the remote-access (latency) term
+BETA = 1.0      # weight of the queueing-contention term
+GAMMA = 0.02    # weight of the sticky-page migration cost term
+
+# SLIT distance to local memory (ACPI convention).
+D_LOCAL = 10.0
+
+# Utilization clip: rho/(1-rho) diverges at 1; the paper's scheduler treats
+# any controller past this point as saturated.
+RHO_MAX = 0.95
+
+# AOT-compiled (padded) problem size: the rust coordinator packs up to TMAX
+# live tasks over up to NMAX NUMA nodes and masks the rest.
+TMAX = 64
+NMAX = 8
+
+# Pallas task-dimension tile.
+BLOCK_T = 16

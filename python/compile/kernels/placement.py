@@ -1,0 +1,119 @@
+"""Layer-1 Pallas kernel: fused placement scoring.
+
+One kernel computes everything the Reporter needs per scheduling epoch:
+the ``rownorm(A) @ D`` mean-distance matmul (MXU work), the queueing
+contention penalty, the per-task degradation factor, and the final
+importance-weighted placement score — fused so each ``(BLOCK_T, N)`` task
+tile is read from HBM into VMEM exactly once and all elementwise math runs
+on the VMEM-resident tile.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid iterates over task
+tiles; ``D`` (N x N, N <= 8 padded into a single lane tile) stays resident
+across the whole grid; VMEM per step is
+``BLOCK_T*(4N + 3)*4 + N*N*4`` bytes ~= 2 KiB at the AOT shape — far under
+the 16 MiB VMEM budget, so a simple double-buffered pipeline saturates.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; correctness is validated through the interpret path and
+real-TPU performance is *estimated* from the VMEM/MXU structure (DESIGN.md
+§Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import params
+
+
+def _score_kernel(a_ref, d_ref, mi_ref, w_ref, u_ref, b_ref, cur_ref,
+                  mask_ref, s_ref, dcur_ref, r_ref, c_ref):
+    """Fused per-tile scoring body. Shapes per grid step:
+
+    a (BT, N) | d (N, N) | mi/w/mask (BT, 1) | u/b (1, N) | cur (BT, N)
+    outputs: s/r/c (BT, N), dcur (BT, 1)
+    """
+    a = a_ref[...]
+    d = d_ref[...]
+    mi = mi_ref[...]
+    w = w_ref[...]
+    u = u_ref[...]
+    b = b_ref[...]
+    cur = cur_ref[...]
+    mask = mask_ref[...]
+
+    # Row-normalized page heat; rowsum reused by the migration-cost term.
+    rowsum = jnp.sum(a, axis=1, keepdims=True)
+    ahat = a / jnp.maximum(rowsum, 1.0)
+
+    # Mean SLIT access distance per candidate node — the MXU matmul.
+    r = jnp.dot(ahat, d, preferred_element_type=jnp.float32)
+
+    # M/M/1 queueing contention penalty per candidate node. The task's
+    # own measured traffic (mi spread over its pages) is subtracted from
+    # the node totals first — see ref.contention_penalty.
+    u_bg = jnp.maximum(u - mi * ahat, 0.0)
+    rho = jnp.clip((u_bg + mi) / b, 0.0, params.RHO_MAX)
+    c = mi * rho / (1.0 - rho)
+
+    # Predicted degradation on each node; evaluated at the current node it
+    # is the paper's contention degradation factor.
+    loc = params.ALPHA * (r - params.D_LOCAL) / params.D_LOCAL + params.BETA * c
+    d_cur = jnp.sum(loc * cur, axis=1, keepdims=True)
+
+    # Sticky-page migration cost (zero for staying put: cur @ d == 10).
+    hop = jnp.dot(cur, d, preferred_element_type=jnp.float32) / params.D_LOCAL - 1.0
+    mig = params.GAMMA * jnp.log1p(rowsum) * hop
+
+    s_ref[...] = (w * (d_cur - loc) - mig) * mask
+    dcur_ref[...] = d_cur * mask
+    r_ref[...] = r * mask
+    c_ref[...] = c * mask
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def placement_score(a, d, mi, w, u, b, cur, mask, *, block_t=params.BLOCK_T):
+    """Pallas-tiled placement scoring; same contract as ``ref.placement_score``.
+
+    ``T`` must be a multiple of ``block_t`` (the AOT wrapper in ``model.py``
+    pads); ``N`` is carried whole in the lane dimension.
+    """
+    t, n = a.shape
+    if t % block_t != 0:
+        raise ValueError(f"T={t} not a multiple of block_t={block_t}")
+    grid = (t // block_t,)
+
+    tile_tn = pl.BlockSpec((block_t, n), lambda i: (i, 0))
+    tile_t1 = pl.BlockSpec((block_t, 1), lambda i: (i, 0))
+    full_nn = pl.BlockSpec((n, n), lambda i: (0, 0))
+    full_1n = pl.BlockSpec((1, n), lambda i: (0, 0))
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((t, n), jnp.float32),   # s
+        jax.ShapeDtypeStruct((t, 1), jnp.float32),   # d_cur
+        jax.ShapeDtypeStruct((t, n), jnp.float32),   # r
+        jax.ShapeDtypeStruct((t, n), jnp.float32),   # c
+    )
+    return pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[tile_tn, full_nn, tile_t1, tile_t1, full_1n, full_1n,
+                  tile_tn, tile_t1],
+        out_specs=[tile_tn, tile_t1, tile_tn, tile_tn],
+        out_shape=out_shapes,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a, d, mi, w, u, b, cur, mask)
+
+
+def vmem_bytes(block_t=params.BLOCK_T, n=params.NMAX):
+    """Estimated VMEM working set per grid step, in bytes (f32).
+
+    Inputs: a, cur (BT,N); mi, w, mask (BT,1); d (N,N); u, b (1,N).
+    Outputs: s, r, c (BT,N); dcur (BT,1).  Intermediates (ahat, rho, loc,
+    mig) at most 4 more (BT,N) tiles.
+    """
+    tiles_tn = 2 + 3 + 4           # inputs + outputs + intermediates
+    tiles_t1 = 3 + 1 + 2           # mi/w/mask + dcur + rowsum/d_cur
+    return 4 * (tiles_tn * block_t * n + tiles_t1 * block_t + n * n + 2 * n)

@@ -1,0 +1,108 @@
+"""Pure-jnp oracle for the placement-scoring model.
+
+This is the ground truth the Pallas kernel (``placement.py``) and the Rust
+fallback scorer are both validated against.  It accepts arbitrary ``(T, N)``
+shapes (no padding / tiling constraints), which makes it the natural target
+for hypothesis property sweeps.
+"""
+
+import jax.numpy as jnp
+
+from . import params
+
+
+def row_normalize(a):
+    """Normalize page-heat rows to access-probability distributions.
+
+    Rows that sum to < 1 page are left (numerically) untouched by dividing
+    by ``max(rowsum, 1)`` — a task with no resident pages scores as if it
+    had uniform zero heat rather than producing NaNs.
+    """
+    rowsum = jnp.sum(a, axis=1, keepdims=True)
+    return a / jnp.maximum(rowsum, 1.0), rowsum
+
+
+def contention_penalty(mi, u, b, ahat):
+    """M/M/1-style queueing penalty of running a task on each node.
+
+    ``u`` is the *total* controller demand per node as the Monitor
+    measures it — which includes the candidate task's own traffic (spread
+    over its pages, ``mi * ahat``). That share must be subtracted before
+    adding the task's demand at the candidate node, otherwise every task
+    sees phantom contention relief on any node it has no pages on and the
+    scheduler ping-pongs. ``rho`` is then the post-move utilization and
+    the penalty the classic ``rho / (1 - rho)`` waiting-time factor,
+    scaled by how memory-bound the task is.
+    """
+    u_bg = jnp.maximum(u - mi * ahat, 0.0)
+    rho = jnp.clip((u_bg + mi) / b, 0.0, params.RHO_MAX)
+    return mi * rho / (1.0 - rho)
+
+
+def local_degradation(r, c):
+    """Predicted degradation of a task if it runs on node ``n``.
+
+    The first term is the normalized extra SLIT distance paid per access
+    (zero when all pages are local), the second the queueing contention.
+    This evaluated at the *current* node is the paper's contention
+    degradation factor.
+    """
+    return params.ALPHA * (r - params.D_LOCAL) / params.D_LOCAL + params.BETA * c
+
+
+def migration_cost(rowsum, cur, d):
+    """Sticky-page migration cost of moving a task's pages to node ``n``.
+
+    Proportional to ``log1p(pages)`` (migration is batched; cost grows
+    sub-linearly) and to the SLIT distance between the current node and the
+    target, normalized so staying put costs exactly zero.
+    """
+    hop = (cur @ d) / params.D_LOCAL - 1.0
+    return params.GAMMA * jnp.log1p(rowsum) * hop
+
+
+def placement_score(a, d, mi, w, u, b, cur, mask):
+    """Full scoring pass — the Reporter's per-epoch analytics.
+
+    Args:
+      a:    (T, N) page heat of task t on node n  (>= 0)
+      d:    (N, N) SLIT distance matrix (diag == 10)
+      mi:   (T, 1) memory intensity (controller demand) of each task
+      w:    (T, 1) user-space importance weight
+      u:    (1, N) controller demand per node, excluding the moving task
+      b:    (1, N) controller bandwidth capacity per node (> 0)
+      cur:  (T, N) one-hot current node of each task
+      mask: (T, 1) 1.0 for live tasks, 0.0 for padding
+
+    Returns:
+      s:     (T, N) importance-weighted predicted speedup of moving t -> n
+      d_out: (T, 1) contention degradation factor at the current placement
+      r:     (T, N) mean SLIT access distance if t ran on n
+      c:     (T, N) queueing contention penalty if t ran on n
+    """
+    ahat, rowsum = row_normalize(a)
+    r = ahat @ d
+    c = contention_penalty(mi, u, b, ahat)
+    loc = local_degradation(r, c)
+    d_cur = jnp.sum(loc * cur, axis=1, keepdims=True)
+    mig = migration_cost(rowsum, cur, d)
+    s = (w * (d_cur - loc) - mig) * mask
+    return s, d_cur * mask, r * mask, c * mask
+
+
+def node_stats(a, mi, b):
+    """Per-node pressure summary used by the Reporter's trigger logic.
+
+    Returns:
+      demand:    (1, N) aggregate controller demand attracted by each node
+                 (each task's intensity split by its page distribution)
+      rho:       (1, N) utilization = demand / capacity
+      imbalance: (1, 1) (max - min) / mean demand — the Reporter fires a
+                 reschedule when this exceeds its threshold
+    """
+    ahat, _ = row_normalize(a)
+    demand = jnp.sum(ahat * mi, axis=0, keepdims=True)
+    rho = demand / b
+    mean = jnp.maximum(jnp.mean(demand), 1e-6)
+    imbalance = (jnp.max(demand) - jnp.min(demand)) / mean
+    return demand, rho, imbalance.reshape(1, 1)

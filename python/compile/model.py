@@ -1,0 +1,88 @@
+"""Layer-2 JAX model: the Reporter's per-epoch analytics graph.
+
+Wraps the Layer-1 Pallas kernel with padding / masking so the Rust
+coordinator can call one fixed-shape AOT artifact regardless of how many
+tasks are currently live, and adds the (small, pure-jnp) node-pressure
+summary the Reporter's trigger logic uses.
+
+Build-time only: ``aot.py`` lowers these functions to HLO text once; the
+Rust runtime (``rust/src/runtime``) loads and executes the artifacts on the
+scheduling hot path.  Python is never on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import params, placement, ref
+
+
+def pad_inputs(a, d, mi, w, u, b, cur, mask, tmax=params.TMAX, nmax=params.NMAX):
+    """Pad arbitrary (T, N) problem tensors to the AOT shape (TMAX, NMAX).
+
+    Padding rows carry mask=0 and score to exactly zero; padding node
+    columns get bandwidth 1 and demand RHO_MAX so no real task is ever
+    attracted to them (their contention penalty saturates), and distance
+    4 * D_LOCAL so their remote term is maximal.
+    """
+    t, n = a.shape
+    if t > tmax or n > nmax:
+        raise ValueError(f"problem ({t},{n}) exceeds AOT shape ({tmax},{nmax})")
+    a_p = jnp.zeros((tmax, nmax), jnp.float32).at[:t, :n].set(a)
+    d_p = jnp.full((nmax, nmax), 4.0 * params.D_LOCAL, jnp.float32)
+    d_p = d_p.at[:n, :n].set(d)
+    d_p = d_p.at[jnp.arange(nmax), jnp.arange(nmax)].set(params.D_LOCAL)
+    mi_p = jnp.zeros((tmax, 1), jnp.float32).at[:t].set(mi)
+    w_p = jnp.zeros((tmax, 1), jnp.float32).at[:t].set(w)
+    u_p = jnp.full((1, nmax), params.RHO_MAX, jnp.float32).at[:, :n].set(u)
+    b_p = jnp.ones((1, nmax), jnp.float32).at[:, :n].set(b)
+    # Padding tasks "sit" on node 0 so cur stays one-hot.
+    cur_p = jnp.zeros((tmax, nmax), jnp.float32).at[:, 0].set(1.0)
+    cur_p = cur_p.at[:t, :n].set(cur)
+    cur_p = cur_p.at[:t, 0].set(cur[:, 0] if n > 0 else 1.0)
+    mask_p = jnp.zeros((tmax, 1), jnp.float32).at[:t].set(mask)
+    return a_p, d_p, mi_p, w_p, u_p, b_p, cur_p, mask_p
+
+
+def score_placement(a, d, mi, w, u, b, cur, mask):
+    """The AOT entry point: fixed (TMAX, NMAX) fused scoring pass.
+
+    All shape/layout decisions live in the Rust packer
+    (``rust/src/runtime/pack.rs``); this function assumes already-padded
+    inputs and simply invokes the Pallas kernel.
+    """
+    return placement.placement_score(a, d, mi, w, u, b, cur, mask)
+
+
+def score_placement_ref(a, d, mi, w, u, b, cur, mask):
+    """Oracle twin of ``score_placement`` (pure jnp, any shape)."""
+    return ref.placement_score(a, d, mi, w, u, b, cur, mask)
+
+
+def node_stats(a, mi, b):
+    """The AOT entry point for the Reporter's node-pressure summary."""
+    return ref.node_stats(a, mi, b)
+
+
+def aot_input_specs(tmax=params.TMAX, nmax=params.NMAX):
+    """ShapeDtypeStructs of ``score_placement``, in argument order."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((tmax, nmax), f32),  # a
+        jax.ShapeDtypeStruct((nmax, nmax), f32),  # d
+        jax.ShapeDtypeStruct((tmax, 1), f32),     # mi
+        jax.ShapeDtypeStruct((tmax, 1), f32),     # w
+        jax.ShapeDtypeStruct((1, nmax), f32),     # u
+        jax.ShapeDtypeStruct((1, nmax), f32),     # b
+        jax.ShapeDtypeStruct((tmax, nmax), f32),  # cur
+        jax.ShapeDtypeStruct((tmax, 1), f32),     # mask
+    )
+
+
+def node_stats_input_specs(tmax=params.TMAX, nmax=params.NMAX):
+    """ShapeDtypeStructs of ``node_stats``, in argument order."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((tmax, nmax), f32),  # a
+        jax.ShapeDtypeStruct((tmax, 1), f32),     # mi
+        jax.ShapeDtypeStruct((1, nmax), f32),     # b
+    )

@@ -1,0 +1,89 @@
+"""L2 model tests: padding contract, node stats, AOT specs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import params, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def small_problem(rng, t, n):
+    a = rng.uniform(0, 100, (t, n)).astype(np.float32)
+    d = np.full((n, n), 21.0, np.float32)
+    np.fill_diagonal(d, 10.0)
+    mi = rng.uniform(0, 2, (t, 1)).astype(np.float32)
+    w = np.ones((t, 1), np.float32)
+    u = rng.uniform(0, 4, (1, n)).astype(np.float32)
+    b = np.full((1, n), 10.0, np.float32)
+    cur = np.zeros((t, n), np.float32)
+    cur[np.arange(t), rng.integers(0, n, t)] = 1.0
+    mask = np.ones((t, 1), np.float32)
+    return tuple(jnp.asarray(x) for x in (a, d, mi, w, u, b, cur, mask))
+
+
+@settings(max_examples=20, deadline=None)
+@given(t=st.integers(1, 64), n=st.integers(1, 8), seed=st.integers(0, 10**6))
+def test_padding_preserves_live_scores(t, n, seed):
+    """Scores of live tasks are identical before and after padding."""
+    rng = np.random.default_rng(seed)
+    args = small_problem(rng, t, n)
+    s_small, d_small, r_small, c_small = ref.placement_score(*args)
+    padded = model.pad_inputs(*args)
+    s_pad, d_pad, r_pad, c_pad = model.score_placement(*padded)
+    np.testing.assert_allclose(s_pad[:t, :n], s_small, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(d_pad[:t], d_small, atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(t=st.integers(1, 63), n=st.integers(1, 7), seed=st.integers(0, 10**6))
+def test_padding_never_attracts_tasks(t, n, seed):
+    """No live task may score a padding node above its best real node."""
+    rng = np.random.default_rng(seed)
+    args = small_problem(rng, t, n)
+    padded = model.pad_inputs(*args)
+    s_pad, *_ = model.score_placement(*padded)
+    s_pad = np.asarray(s_pad)
+    best_real = s_pad[:t, :n].max(axis=1)
+    best_fake = s_pad[:t, n:].max(axis=1)
+    assert np.all(best_fake <= best_real + 1e-5)
+
+
+def test_node_stats_matches_manual():
+    rng = np.random.default_rng(3)
+    t, n = 8, 4
+    a = rng.uniform(0, 50, (t, n)).astype(np.float32)
+    mi = rng.uniform(0, 2, (t, 1)).astype(np.float32)
+    b = np.full((1, n), 10.0, np.float32)
+    demand, rho, imb = model.node_stats(jnp.asarray(a), jnp.asarray(mi),
+                                        jnp.asarray(b))
+    ahat = a / np.maximum(a.sum(1, keepdims=True), 1.0)
+    want = (ahat * mi).sum(0, keepdims=True)
+    np.testing.assert_allclose(demand, want, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(rho, want / 10.0, atol=1e-5, rtol=1e-5)
+    want_imb = (want.max() - want.min()) / max(want.mean(), 1e-6)
+    np.testing.assert_allclose(np.asarray(imb)[0, 0], want_imb, rtol=1e-5)
+
+
+def test_node_stats_balanced_is_zero_imbalance():
+    a = np.ones((4, 4), np.float32) * 25.0
+    mi = np.ones((4, 1), np.float32)
+    b = np.ones((1, 4), np.float32)
+    _, _, imb = model.node_stats(*[jnp.asarray(x) for x in (a, mi, b)])
+    np.testing.assert_allclose(np.asarray(imb)[0, 0], 0.0, atol=1e-6)
+
+
+def test_aot_specs_shapes():
+    specs = model.aot_input_specs()
+    assert [tuple(s.shape) for s in specs] == [
+        (params.TMAX, params.NMAX), (params.NMAX, params.NMAX),
+        (params.TMAX, 1), (params.TMAX, 1), (1, params.NMAX),
+        (1, params.NMAX), (params.TMAX, params.NMAX), (params.TMAX, 1),
+    ]
+    stats = model.node_stats_input_specs()
+    assert [tuple(s.shape) for s in stats] == [
+        (params.TMAX, params.NMAX), (params.TMAX, 1), (1, params.NMAX),
+    ]

@@ -1,0 +1,50 @@
+//! Ablation A1: importance weights off (every task weighs 1.0).
+//!
+//! The paper's central claim is that user-space importance knowledge is
+//! what kernel schedulers cannot have. Removing it should shrink the
+//! speedup of the *important* (measured) apps under the proposed
+//! policy. `cargo bench --bench ablation_importance`
+
+use numasched::config::PolicyKind;
+use numasched::experiments::report::{f2, Table};
+use numasched::experiments::runner::run;
+use numasched::experiments::fig7;
+use numasched::util::stats;
+use numasched::workloads::parsec;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let base = run(&fig7::params(PolicyKind::Default, 42, false));
+    let with = run(&fig7::params(PolicyKind::Proposed, 42, false));
+    let mut flat_params = fig7::params(PolicyKind::Proposed, 42, false);
+    for s in &mut flat_params.specs {
+        s.importance = 1.0;
+    }
+    let without = run(&flat_params);
+
+    let mut t = Table::new(
+        "Ablation A1 — user-space importance on vs off (speedup of measured apps vs default)",
+        &["app", "with importance", "without", "delta"],
+    );
+    let mut gains_with = Vec::new();
+    let mut gains_without = Vec::new();
+    for name in parsec::NAMES {
+        let (Some(b), Some(w), Some(wo)) = (
+            base.runtime_of(name),
+            with.runtime_of(name),
+            without.runtime_of(name),
+        ) else {
+            continue;
+        };
+        gains_with.push(b / w);
+        gains_without.push(b / wo);
+        t.row(vec![name.into(), f2(b / w), f2(b / wo), f2(b / w - b / wo)]);
+    }
+    print!("{}", t.render());
+    println!(
+        "geomean: with {} | without {}  (importance should help the measured apps)",
+        f2(stats::geomean(&gains_with)),
+        f2(stats::geomean(&gains_without)),
+    );
+    eprintln!("[ablation_importance in {:.2?}]", t0.elapsed());
+}

@@ -1,0 +1,54 @@
+//! Ablation A2: sticky-page migration off (CPU moves only).
+//!
+//! Algorithm 3 migrates "the processes and their sticky pages" when
+//! contention degradation is high. Without the page half, moved tasks
+//! keep paying remote-access latency — this bench quantifies how much
+//! of the proposed system's win comes from memory following the task.
+//! `cargo bench --bench ablation_sticky_pages`
+
+use numasched::config::PolicyKind;
+use numasched::experiments::report::{f2, Table};
+use numasched::experiments::runner::run;
+use numasched::experiments::fig7;
+use numasched::util::stats;
+use numasched::workloads::parsec;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let base = run(&fig7::params(PolicyKind::Default, 42, false));
+    let with = run(&fig7::params(PolicyKind::Proposed, 42, false));
+    // Sticky migration off: degradation threshold above any reachable
+    // factor value disables both the move-time page drag and the
+    // consolidation pass.
+    let mut no_sticky = fig7::params(PolicyKind::Proposed, 42, false);
+    no_sticky.scheduler.degradation_threshold = f64::INFINITY;
+    let without = run(&no_sticky);
+
+    let mut t = Table::new(
+        "Ablation A2 — sticky-page migration on vs off (speedup vs default)",
+        &["app", "with sticky", "cpu-move only", "delta"],
+    );
+    let mut gw = Vec::new();
+    let mut go = Vec::new();
+    for name in parsec::NAMES {
+        let (Some(b), Some(w), Some(wo)) = (
+            base.runtime_of(name),
+            with.runtime_of(name),
+            without.runtime_of(name),
+        ) else {
+            continue;
+        };
+        gw.push(b / w);
+        go.push(b / wo);
+        t.row(vec![name.into(), f2(b / w), f2(b / wo), f2(b / w - b / wo)]);
+    }
+    print!("{}", t.render());
+    println!(
+        "geomean: with sticky {} | cpu-move only {}  | pages migrated: {} vs {}",
+        f2(stats::geomean(&gw)),
+        f2(stats::geomean(&go)),
+        with.total_pages_migrated,
+        without.total_pages_migrated,
+    );
+    eprintln!("[ablation_sticky_pages in {:.2?}]", t0.elapsed());
+}

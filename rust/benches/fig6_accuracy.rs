@@ -1,0 +1,11 @@
+//! Bench: regenerate Figure 6 (accuracy of the contention degradation
+//! factor). `cargo bench --bench fig6_accuracy`
+
+use numasched::experiments::fig6;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let results = fig6::run(42);
+    print!("{}", fig6::render(&results));
+    eprintln!("[fig6 regenerated in {:.2?}]", t0.elapsed());
+}

@@ -1,0 +1,50 @@
+//! Bench: regenerate Figure 7 (speedup vs Automatic NUMA Balancing and
+//! Static Tuning on the 40-core platform), plus the static-tuning
+//! consistency sweep backing the paper's "we were not able to obtain
+//! consistent results with the Static Tuning method".
+//!
+//! `cargo bench --bench fig7_speedup`
+
+use numasched::config::PolicyKind;
+use numasched::experiments::report::{f2, Table};
+use numasched::experiments::runner::run;
+use numasched::experiments::fig7;
+use numasched::util::stats;
+use numasched::workloads::parsec;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let results = fig7::run_all(42, false);
+    print!("{}", fig7::render(&results));
+
+    // Static-tuning consistency: same workload, three admin draws.
+    let seeds = [42u64, 43, 44];
+    let base = results.result(PolicyKind::Default);
+    let mut t = Table::new(
+        "Static Tuning consistency across admin node choices (speedup vs default, seed 42 baseline)",
+        &["app", "admin#1", "admin#2", "admin#3", "spread"],
+    );
+    let mut statics = Vec::new();
+    for &s in &seeds {
+        statics.push(run(&fig7::params(PolicyKind::StaticTuning, s, false)));
+    }
+    for name in parsec::NAMES {
+        let Some(b) = base.runtime_of(name) else { continue };
+        let speedups: Vec<f64> = statics
+            .iter()
+            .filter_map(|r| r.runtime_of(name).map(|x| b / x))
+            .collect();
+        if speedups.len() != seeds.len() {
+            continue;
+        }
+        t.row(vec![
+            name.into(),
+            f2(speedups[0]),
+            f2(speedups[1]),
+            f2(speedups[2]),
+            f2(stats::max(&speedups) - stats::min(&speedups)),
+        ]);
+    }
+    print!("{}", t.render());
+    eprintln!("[fig7 + consistency sweep regenerated in {:.2?}]", t0.elapsed());
+}

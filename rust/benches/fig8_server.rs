@@ -1,0 +1,11 @@
+//! Bench: regenerate Figure 8 (Apache / MySQL throughput improvement in
+//! the server environment). `cargo bench --bench fig8_server`
+
+use numasched::experiments::fig8;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let results = fig8::run_all(&[11, 12, 13, 14, 15]);
+    print!("{}", fig8::render(&results));
+    eprintln!("[fig8 regenerated in {:.2?}]", t0.elapsed());
+}

@@ -1,0 +1,128 @@
+//! Perf bench P1: the scoring-epoch hot path.
+//!
+//! Measures, at the AOT problem size (TMAX x NMAX):
+//!   * pack()            — Reporter view -> padded tensors
+//!   * score_cpu()       — pure-Rust scorer (fallback backend)
+//!   * engine.score()    — AOT PJRT artifact (the three-layer path)
+//!   * reporter.ingest() — full epoch including estimation + ranking
+//!
+//! The L3 target (DESIGN.md §Perf): one epoch far below the 10 ms
+//! monitor period. `cargo bench --bench perf_hotpath`
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use numasched::monitor::Monitor;
+use numasched::reporter::{factors, Backend, Reporter};
+use numasched::runtime::pack::{pack, ScoreProblem, TaskRow, NMAX, TMAX};
+use numasched::runtime::ScoringEngine;
+use numasched::sim::{Machine, Placement, TaskBehavior};
+use numasched::topology::NumaTopology;
+use numasched::util::rng::Rng;
+use numasched::util::stats;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // Warmup.
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let mut ns = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        ns.push(t0.elapsed().as_nanos() as f64);
+    }
+    println!(
+        "{name:<24} mean {:>10.1} ns   p50 {:>10.1}   p99 {:>10.1}   ({iters} iters)",
+        stats::mean(&ns),
+        stats::percentile(&ns, 50.0),
+        stats::percentile(&ns, 99.0),
+    );
+    stats::mean(&ns)
+}
+
+fn full_problem(rng: &mut Rng) -> ScoreProblem {
+    ScoreProblem {
+        tasks: (0..TMAX)
+            .map(|i| TaskRow {
+                pid: i as i32,
+                pages_per_node: (0..NMAX).map(|_| rng.range(0.0, 1e5)).collect(),
+                mem_intensity: rng.range(0.0, 4.0),
+                importance: rng.range(0.1, 5.0),
+                node: rng.below(NMAX),
+            })
+            .collect(),
+        distance: (0..NMAX)
+            .map(|i| (0..NMAX).map(|j| if i == j { 10.0 } else { 21.0 }).collect())
+            .collect(),
+        node_demand: (0..NMAX).map(|_| rng.range(0.0, 15.0)).collect(),
+        node_bandwidth: vec![20.0; NMAX],
+    }
+}
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let problem = full_problem(&mut rng);
+    let packed = pack(&problem).unwrap();
+
+    println!("## P1 — scoring-epoch hot path ({}x{} padded problem)", TMAX, NMAX);
+    bench("pack", 2_000, || {
+        std::hint::black_box(pack(&problem).unwrap());
+    });
+    bench("score_cpu (rust)", 2_000, || {
+        std::hint::black_box(factors::score_cpu(&packed));
+    });
+
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match ScoringEngine::load(&artifacts) {
+        Ok(engine) => {
+            bench("engine.score (pjrt)", 500, || {
+                std::hint::black_box(engine.score(&packed).unwrap());
+            });
+            bench("engine.node_stats", 500, || {
+                std::hint::black_box(engine.node_stats(&packed).unwrap());
+            });
+        }
+        Err(e) => println!("pjrt engine unavailable ({e}) — run `make artifacts`"),
+    }
+
+    // Full Reporter epoch against a live simulated machine (40 tasks).
+    let mut m = Machine::new(NumaTopology::r910_40core(), 11);
+    for i in 0..40 {
+        m.spawn(&format!("w{i}"), TaskBehavior::mem_bound(1e12), 1.0, 2,
+                Placement::LeastLoaded);
+    }
+    for _ in 0..50 {
+        m.step();
+    }
+    let monitor = Monitor::discover(&m).unwrap();
+    let mut reporter = Reporter::new(
+        Backend::Cpu,
+        monitor.topo.distance.clone(),
+        m.topo.bandwidth_gbs.clone(),
+    );
+    let mut t = m.now_ms;
+    bench("monitor.sample (40p)", 1_000, || {
+        std::hint::black_box(monitor.sample(&m, t));
+    });
+    bench("reporter.ingest (40p)", 1_000, || {
+        t += 10.0;
+        let snap = monitor.sample(&m, t);
+        std::hint::black_box(reporter.ingest(&snap));
+    });
+
+    // Simulator throughput (DESIGN.md §Perf: >= 1e6 task-ticks/s).
+    let t0 = Instant::now();
+    let ticks = 20_000;
+    for _ in 0..ticks {
+        m.step();
+    }
+    let el = t0.elapsed().as_secs_f64();
+    let task_ticks = ticks as f64 * 40.0;
+    println!(
+        "sim throughput: {:.2e} task-ticks/s ({} ticks x 40 procs in {:.2}s)",
+        task_ticks / el,
+        ticks,
+        el
+    );
+}

@@ -1,0 +1,11 @@
+//! Bench: regenerate Table 1 (PARSEC characteristics, configured +
+//! measured). `cargo bench --bench table1_characteristics`
+
+use numasched::experiments::table1;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let measured = table1::run(42);
+    print!("{}", table1::render(&measured));
+    eprintln!("[table1 regenerated in {:.2?}]", t0.elapsed());
+}

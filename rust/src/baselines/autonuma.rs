@@ -1,0 +1,161 @@
+//! Simulated kernel Automatic NUMA Balancing (the Fig-7 "Automatic NUMA
+//! Scheduling" baseline).
+//!
+//! Mechanism (mirroring the LKML v9 series the paper cites): the kernel
+//! periodically unmaps ranges to provoke NUMA hinting faults, learns
+//! which node a task actually runs on, and rate-limited-migrates its
+//! pages toward that node; when most of a task's memory is remote it
+//! also tries to move the *task* to its memory. Crucially it is blind to
+//! user-space importance and to cross-application contention — exactly
+//! the gap the paper's user-level scheduler fills.
+
+use crate::sim::Machine;
+
+/// The balancer's knobs (Linux defaults scaled to our virtual clock).
+pub struct AutoNuma {
+    /// Scan period, virtual ms (`numa_balancing_scan_period`).
+    pub scan_ms: f64,
+    /// Pages migrated per scan per process (rate limit).
+    pub pages_per_scan: u64,
+    /// Page fraction on one node above which the task follows its memory.
+    pub task_follow_threshold: f64,
+    last_scan_ms: f64,
+}
+
+impl AutoNuma {
+    pub fn new(scan_ms: f64) -> Self {
+        Self {
+            scan_ms,
+            pages_per_scan: 2560, // ~10 MB per scan: Linux's ratelimit scale
+            // The kernel prefers whichever node accumulates the most
+            // hinting faults — a plurality, not a supermajority.
+            task_follow_threshold: 0.35,
+            last_scan_ms: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Run one balancing opportunity; call every sim tick.
+    pub fn step(&mut self, machine: &mut Machine) {
+        if machine.now_ms - self.last_scan_ms < self.scan_ms {
+            return;
+        }
+        self.last_scan_ms = machine.now_ms;
+
+        let nodes = machine.topo.nodes;
+        let cpn = machine.topo.cores_per_node;
+        let pids = machine.running_pids();
+        for pid in pids {
+            let Some(p) = machine.process(pid) else { continue };
+            // Where does the task run, where is its memory?
+            let home = p.home_node(nodes, cpn);
+            let fracs = p.pages.fractions();
+            let (mem_node, mem_frac) = fracs
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(n, &f)| (n, f))
+                .unwrap_or((home, 0.0));
+
+            if mem_node != home && mem_frac >= self.task_follow_threshold {
+                // task_numa_migrate: move the task to its memory, and set
+                // the numa-preferred node so the load balancer respects
+                // it (the kernel's numa_preferred_nid bias).
+                machine.pin_process(pid, mem_node);
+            } else {
+                // NUMA hinting faults: pull pages toward the CPU node,
+                // rate-limited.
+                let remote: u64 = p
+                    .pages
+                    .per_node
+                    .iter()
+                    .enumerate()
+                    .filter(|&(n, _)| n != home)
+                    .map(|(_, &c)| c)
+                    .sum();
+                if remote > 0 {
+                    machine.migrate_pages(pid, home, self.pages_per_scan);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Placement, TaskBehavior};
+    use crate::topology::NumaTopology;
+
+    fn machine() -> Machine {
+        let mut m = Machine::new(NumaTopology::r910_40core(), 3);
+        m.os_balance = false;
+        m
+    }
+
+    #[test]
+    fn converges_task_and_pages_onto_one_node() {
+        let mut m = machine();
+        let pid = m.spawn("w", TaskBehavior::mem_bound(1e9), 1.0, 2, Placement::Node(0));
+        {
+            // Strand most memory remotely.
+            let p = m.process_mut(pid).unwrap();
+            let total = p.pages.total();
+            p.pages.per_node = vec![total * 2 / 5, total - total * 2 / 5, 0, 0];
+        }
+        let mut an = AutoNuma::new(10.0);
+        for _ in 0..2000 {
+            an.step(&mut m);
+            m.step();
+        }
+        // Wherever the balancer settled the task, its pages follow it.
+        let p = m.process(pid).unwrap();
+        let home = p.home_node(4, 10);
+        let fr = p.pages.fractions();
+        assert!(fr[home] > 0.95, "pages should converge to home {home}: {fr:?}");
+    }
+
+    #[test]
+    fn follows_memory_when_mostly_remote() {
+        let mut m = machine();
+        let pid = m.spawn("w", TaskBehavior::mem_bound(1e9), 1.0, 2, Placement::Node(0));
+        {
+            let p = m.process_mut(pid).unwrap();
+            let total = p.pages.total();
+            p.pages.per_node = vec![total / 10, 0, total - total / 10, 0];
+        }
+        let mut an = AutoNuma::new(10.0);
+        an.step(&mut m); // immediate scan
+        let p = m.process(pid).unwrap();
+        assert_eq!(p.home_node(4, 10), 2, "task should follow its memory");
+    }
+
+    #[test]
+    fn rate_limit_bounds_migration_volume() {
+        let mut m = machine();
+        let pid = m.spawn("w", TaskBehavior::mem_bound(1e9), 1.0, 2, Placement::Node(0));
+        {
+            let p = m.process_mut(pid).unwrap();
+            let total = p.pages.total();
+            p.pages.per_node = vec![total / 2, total - total / 2, 0, 0];
+        }
+        let mut an = AutoNuma::new(10.0);
+        an.step(&mut m);
+        assert!(m.total_pages_migrated <= an.pages_per_scan);
+    }
+
+    #[test]
+    fn idle_between_scans() {
+        let mut m = machine();
+        let pid = m.spawn("w", TaskBehavior::mem_bound(1e9), 1.0, 1, Placement::Node(0));
+        {
+            let p = m.process_mut(pid).unwrap();
+            p.pages.per_node = vec![500, 500, 0, 0];
+        }
+        let mut an = AutoNuma::new(100.0);
+        an.step(&mut m); // scan at t=0
+        let after_first = m.total_pages_migrated;
+        m.step(); // t=1ms
+        an.step(&mut m); // within the period: no work
+        assert_eq!(m.total_pages_migrated, after_first);
+    }
+}

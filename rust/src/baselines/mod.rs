@@ -1,0 +1,9 @@
+//! Baseline schedulers the paper compares against (Fig 7):
+//! the OS default (first-touch, NUMA-blind balancing — i.e. doing
+//! nothing beyond what `sim::Machine` already models), kernel Automatic
+//! NUMA Balancing, and admin Static Tuning.
+
+pub mod autonuma;
+pub mod static_tuning;
+
+pub use autonuma::AutoNuma;

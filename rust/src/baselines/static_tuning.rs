@@ -1,0 +1,129 @@
+//! Static Tuning baseline — manual CPU-affinity optimization
+//! (Blagodurov-style, the paper's second Fig-7 comparator).
+//!
+//! An administrator pins each application to a node with `taskset` +
+//! `numactl --membind`. We model the *competent* admin: workloads are
+//! round-robined across nodes so each socket hosts a similar thread
+//! count, and pinned memory is bound (migrated) to the pinned node. The
+//! paper's observation — this wins for coarse low-sharing apps like
+//! blackscholes/bodytrack/fluidanimate but is inconsistent elsewhere
+//! and "not practical" — emerges from the pins being static while load
+//! and phases move.
+
+use crate::config::StaticPin;
+use crate::sim::Machine;
+
+/// Apply explicit admin pins (comm -> node) to all matching processes.
+///
+/// `bind_memory = false` models the paper's Static Tuning baseline: the
+/// CPU-affinity technique (taskset) that "statically fixes tasks into a
+/// specific NUMA node" and thereby "damages the effective memory
+/// utilization" — pages stay where first-touch left them. `true` models
+/// the diligent `numactl --membind` admin (used for explicit config pins
+/// and the round-robin helper).
+pub fn apply_pins(machine: &mut Machine, pins: &[StaticPin], bind_memory: bool) {
+    let pids = machine.running_pids();
+    for pid in pids {
+        let Some(p) = machine.process(pid) else { continue };
+        let Some(pin) = pins.iter().find(|pin| pin.process == p.comm) else {
+            continue;
+        };
+        let node = pin.node;
+        let rss = p.pages.total();
+        machine.pin_process(pid, node);
+        if bind_memory {
+            machine.migrate_pages(pid, node, rss);
+        }
+    }
+}
+
+/// The "competent admin" assignment: walk processes in pid order and
+/// round-robin them across nodes, pinning threads and memory together.
+/// Returns the generated pin list (for logging).
+pub fn round_robin_pins(machine: &mut Machine) -> Vec<StaticPin> {
+    let nodes = machine.topo.nodes;
+    let mut out = Vec::new();
+    let pids = machine.running_pids();
+    for (i, pid) in pids.into_iter().enumerate() {
+        let node = i % nodes;
+        let Some(p) = machine.process(pid) else { continue };
+        let comm = p.comm.clone();
+        let rss = p.pages.total();
+        machine.pin_process(pid, node);
+        machine.migrate_pages(pid, node, rss);
+        out.push(StaticPin { process: comm, node });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Placement, TaskBehavior};
+    use crate::topology::NumaTopology;
+
+    fn machine() -> Machine {
+        Machine::new(NumaTopology::r910_40core(), 9)
+    }
+
+    #[test]
+    fn apply_pins_moves_threads_and_memory() {
+        let mut m = machine();
+        let pid = m.spawn("mysqld", TaskBehavior::mem_bound(1e9), 1.0, 4, Placement::Node(0));
+        apply_pins(
+            &mut m,
+            &[StaticPin { process: "mysqld".into(), node: 2 }],
+            true,
+        );
+        let p = m.process(pid).unwrap();
+        assert_eq!(p.home_node(4, 10), 2);
+        assert_eq!(p.pinned_node, Some(2));
+        let fr = p.pages.fractions();
+        assert!(fr[2] > 0.99, "memory should be bound: {fr:?}");
+    }
+
+    #[test]
+    fn cpu_only_pins_leave_memory_behind() {
+        let mut m = machine();
+        let pid = m.spawn("mysqld", TaskBehavior::mem_bound(1e9), 1.0, 4, Placement::Node(0));
+        apply_pins(
+            &mut m,
+            &[StaticPin { process: "mysqld".into(), node: 2 }],
+            false,
+        );
+        let p = m.process(pid).unwrap();
+        assert_eq!(p.home_node(4, 10), 2);
+        // The paper's complaint about CPU-affinity tuning: the task moved
+        // but its memory did not.
+        let fr = p.pages.fractions();
+        assert!(fr[0] > 0.99, "pages stranded at first touch: {fr:?}");
+    }
+
+    #[test]
+    fn apply_pins_ignores_unmatched_comms() {
+        let mut m = machine();
+        let pid = m.spawn("other", TaskBehavior::cpu_bound(1e9), 1.0, 2, Placement::Node(1));
+        apply_pins(&mut m, &[StaticPin { process: "mysqld".into(), node: 2 }], true);
+        let p = m.process(pid).unwrap();
+        assert_eq!(p.pinned_node, None);
+        assert_eq!(p.home_node(4, 10), 1);
+    }
+
+    #[test]
+    fn round_robin_spreads_processes() {
+        let mut m = machine();
+        for i in 0..8 {
+            m.spawn(&format!("w{i}"), TaskBehavior::cpu_bound(1e9), 1.0, 2, Placement::LeastLoaded);
+        }
+        let pins = round_robin_pins(&mut m);
+        assert_eq!(pins.len(), 8);
+        // Two processes per node on the 4-node box.
+        for node in 0..4 {
+            assert_eq!(pins.iter().filter(|p| p.node == node).count(), 2);
+        }
+        // Every process actually pinned.
+        for p in m.processes() {
+            assert!(p.pinned_node.is_some());
+        }
+    }
+}

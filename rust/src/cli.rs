@@ -1,0 +1,153 @@
+//! Hand-rolled CLI (the vendor set has no `clap`).
+//!
+//! Subcommands mirror the experiment index:
+//! `numasched run|table1|fig6|fig7|fig8|host-monitor|inspect [flags]`.
+
+use std::path::PathBuf;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub command: String,
+    pub config: Option<PathBuf>,
+    pub seed: u64,
+    pub seeds: Vec<u64>,
+    pub horizon_ms: Option<f64>,
+    pub policy: Option<String>,
+    pub use_pjrt: bool,
+    pub artifacts_dir: Option<String>,
+    pub csv: bool,
+    pub verbose: bool,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+pub const USAGE: &str = "\
+numasched — user-level NUMA-aware memory scheduler (paper reproduction)
+
+USAGE:
+    numasched <COMMAND> [FLAGS]
+
+COMMANDS:
+    run            run a workload under one policy (see --policy)
+    table1         regenerate Table 1 (PARSEC characteristics)
+    fig6           regenerate Figure 6 (degradation-factor accuracy)
+    fig7           regenerate Figure 7 (speedup vs baselines, 40 cores)
+    fig8           regenerate Figure 8 (Apache/MySQL throughput)
+    host-monitor   run the Monitor against this host's real /proc
+    inspect        print machine presets and the workload catalog
+
+FLAGS:
+    --config <file>      TOML config (machine/scheduler/workloads)
+    --seed <n>           experiment seed (default 42)
+    --seeds <a,b,c>      multiple seeds (fig8 trials)
+    --horizon <ms>       virtual-time horizon
+    --policy <p>         default | autonuma | static | proposed
+    --use-pjrt           score via AOT PJRT artifacts (default: pure Rust)
+    --artifacts <dir>    artifact directory (default: artifacts)
+    --csv                emit CSV instead of an ASCII table
+    --verbose            debug logging
+";
+
+/// Parse argv (minus argv[0]). Returns Err(message) on bad input.
+pub fn parse(args: &[String]) -> Result<Cli, String> {
+    let mut cli = Cli { seed: 42, ..Default::default() };
+    let mut it = args.iter().peekable();
+    let Some(cmd) = it.next() else {
+        return Err("missing command".into());
+    };
+    cli.command = cmd.clone();
+    while let Some(arg) = it.next() {
+        let mut value = |name: &str| -> Result<String, String> {
+            it.next()
+                .cloned()
+                .ok_or_else(|| format!("{name} needs a value"))
+        };
+        match arg.as_str() {
+            "--config" => cli.config = Some(PathBuf::from(value("--config")?)),
+            "--seed" => {
+                cli.seed = value("--seed")?
+                    .parse()
+                    .map_err(|_| "--seed must be an integer".to_string())?
+            }
+            "--seeds" => {
+                cli.seeds = value("--seeds")?
+                    .split(',')
+                    .map(|s| s.trim().parse::<u64>())
+                    .collect::<Result<_, _>>()
+                    .map_err(|_| "--seeds must be comma-separated integers".to_string())?
+            }
+            "--horizon" => {
+                cli.horizon_ms = Some(
+                    value("--horizon")?
+                        .parse()
+                        .map_err(|_| "--horizon must be a number".to_string())?,
+                )
+            }
+            "--policy" => cli.policy = Some(value("--policy")?),
+            "--use-pjrt" => cli.use_pjrt = true,
+            "--artifacts" => cli.artifacts_dir = Some(value("--artifacts")?),
+            "--csv" => cli.csv = true,
+            "--verbose" => cli.verbose = true,
+            "--help" | "-h" => return Err(USAGE.to_string()),
+            other if other.starts_with("--") => {
+                return Err(format!("unknown flag {other} (try --help)"));
+            }
+            other => cli.positional.push(other.to_string()),
+        }
+    }
+    Ok(cli)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_basic_command() {
+        let c = parse(&argv("fig7 --seed 9 --use-pjrt")).unwrap();
+        assert_eq!(c.command, "fig7");
+        assert_eq!(c.seed, 9);
+        assert!(c.use_pjrt);
+        assert!(!c.csv);
+    }
+
+    #[test]
+    fn parses_seeds_list() {
+        let c = parse(&argv("fig8 --seeds 1,2,3")).unwrap();
+        assert_eq!(c.seeds, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn parses_policy_and_horizon() {
+        let c = parse(&argv("run --policy autonuma --horizon 5000")).unwrap();
+        assert_eq!(c.policy.as_deref(), Some("autonuma"));
+        assert_eq!(c.horizon_ms, Some(5000.0));
+    }
+
+    #[test]
+    fn rejects_unknown_flags() {
+        assert!(parse(&argv("run --bogus")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_values() {
+        assert!(parse(&argv("run --seed")).is_err());
+        assert!(parse(&argv("run --seed zebra")).is_err());
+    }
+
+    #[test]
+    fn missing_command_errors() {
+        assert!(parse(&[]).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let c = parse(&argv("inspect canneal")).unwrap();
+        assert_eq!(c.positional, vec!["canneal"]);
+    }
+}

@@ -1,0 +1,503 @@
+//! Typed configuration for machines, scheduler policy, and workloads.
+//!
+//! Configs are plain TOML-subset files (see `toml.rs`); every experiment
+//! binary accepts `--config <file>` and overrides via CLI flags. The same
+//! structs carry the defaults used by the paper-reproduction presets.
+
+pub mod toml;
+
+use std::fmt;
+use std::path::Path;
+
+use self::toml::Value;
+
+/// Which scheduling policy drives the run (the Fig-7 contenders).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PolicyKind {
+    /// OS default: first-touch allocation, NUMA-blind load balancing.
+    Default,
+    /// Simulated kernel Automatic NUMA Balancing (hinting faults).
+    AutoNuma,
+    /// Static admin CPU/memory pinning (Blagodurov-style).
+    StaticTuning,
+    /// The paper's user-level NUMA-aware memory scheduler.
+    Proposed,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "default" | "none" | "first-touch" => Some(Self::Default),
+            "autonuma" | "auto-numa" | "auto" => Some(Self::AutoNuma),
+            "static" | "static-tuning" | "pin" => Some(Self::StaticTuning),
+            "proposed" | "numasched" | "user" => Some(Self::Proposed),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Default => "default",
+            Self::AutoNuma => "autonuma",
+            Self::StaticTuning => "static",
+            Self::Proposed => "proposed",
+        }
+    }
+
+    pub const ALL: [PolicyKind; 4] =
+        [Self::Default, Self::AutoNuma, Self::StaticTuning, Self::Proposed];
+}
+
+impl fmt::Display for PolicyKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Machine shape handed to `topology::NumaTopology`.
+#[derive(Clone, Debug)]
+pub struct MachineConfig {
+    /// Preset name: "r910-40core" (the paper's testbed), "2node-8core",
+    /// "8node-64core". Explicit fields below override preset values.
+    pub preset: String,
+    pub nodes: usize,
+    pub cores_per_node: usize,
+    /// DRAM per node, GiB.
+    pub mem_gib_per_node: f64,
+    /// Memory-controller bandwidth per node, GB/s.
+    pub bandwidth_gbs: f64,
+    /// Remote-access SLIT distance for 1-hop neighbours (local is 10).
+    pub remote_distance: f64,
+    /// Optional full SLIT matrix (row-major), overrides `remote_distance`.
+    pub distance: Option<Vec<Vec<f64>>>,
+}
+
+impl Default for MachineConfig {
+    /// The paper's testbed: DELL R910, 4x Intel Xeon E7-4850 — 4 NUMA
+    /// nodes x 10 cores, 32 GiB total, QPI interconnect. ~20 GB/s of
+    /// sustainable per-socket memory bandwidth (4-channel DDR3-1066).
+    fn default() -> Self {
+        Self {
+            preset: "r910-40core".into(),
+            nodes: 4,
+            cores_per_node: 10,
+            mem_gib_per_node: 8.0,
+            bandwidth_gbs: 20.0,
+            remote_distance: 21.0,
+            distance: None,
+        }
+    }
+}
+
+impl MachineConfig {
+    pub fn preset(name: &str) -> Option<Self> {
+        match name {
+            "r910-40core" => Some(Self::default()),
+            "2node-8core" => Some(Self {
+                preset: name.into(),
+                nodes: 2,
+                cores_per_node: 4,
+                mem_gib_per_node: 4.0,
+                bandwidth_gbs: 10.0,
+                remote_distance: 20.0,
+                distance: None,
+            }),
+            "8node-64core" => Some(Self {
+                preset: name.into(),
+                nodes: 8,
+                cores_per_node: 8,
+                mem_gib_per_node: 16.0,
+                bandwidth_gbs: 16.0,
+                remote_distance: 21.0,
+                distance: None,
+            }),
+            _ => None,
+        }
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.nodes * self.cores_per_node
+    }
+}
+
+/// A static CPU/memory pin supplied by the administrator (Algorithm 3's
+/// "static CPU pin from manual input").
+#[derive(Clone, Debug, PartialEq)]
+pub struct StaticPin {
+    /// Process name the pin applies to (exact match on comm).
+    pub process: String,
+    /// NUMA node the process is pinned to.
+    pub node: usize,
+}
+
+/// Knobs of the Monitor / Reporter / Scheduler pipeline.
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    pub policy: PolicyKind,
+    /// Algorithm 1's sampling period ("sleep for an NUMA specific data").
+    pub monitor_period_ms: u64,
+    /// Reporter evaluation period (>= monitor period).
+    pub report_period_ms: u64,
+    /// Node-demand imbalance (max-min)/mean above which the Reporter
+    /// triggers a reschedule.
+    pub imbalance_threshold: f64,
+    /// Contention degradation factor above which sticky pages migrate
+    /// along with the task (Algorithm 3's "too big" test).
+    pub degradation_threshold: f64,
+    /// Hysteresis: a move must predict at least this score gain.
+    /// (Score units: importance x degradation-factor delta.)
+    pub min_gain: f64,
+    /// Per-task cooldown between migrations, in virtual ms.
+    pub migration_cooldown_ms: u64,
+    /// Run scoring through the AOT PJRT artifacts (vs pure-Rust fallback).
+    pub use_pjrt: bool,
+    pub artifacts_dir: String,
+    /// Admin static pins (used by StaticTuning, honored by Proposed).
+    pub static_pins: Vec<StaticPin>,
+    /// EWMA half-life (in samples) for monitor smoothing.
+    pub smoothing_half_life: f64,
+    /// AutoNuma baseline: page-scan period.
+    pub autonuma_scan_ms: u64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self {
+            policy: PolicyKind::Proposed,
+            monitor_period_ms: 10,
+            report_period_ms: 50,
+            imbalance_threshold: 0.35,
+            degradation_threshold: 0.60,
+            min_gain: 0.15,
+            migration_cooldown_ms: 500,
+            use_pjrt: false,
+            artifacts_dir: "artifacts".into(),
+            static_pins: Vec::new(),
+            smoothing_half_life: 4.0,
+            autonuma_scan_ms: 100,
+        }
+    }
+}
+
+/// One workload instance to launch.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    /// Catalog name ("canneal", "apache", ...) — see `workloads::catalog`.
+    pub name: String,
+    /// Thread count override (0 = catalog default).
+    pub threads: usize,
+    /// User-space importance weight (the paper's differentiator).
+    pub importance: f64,
+    /// Instances of this workload to launch.
+    pub count: usize,
+}
+
+/// Top-level config.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub machine: MachineConfig,
+    pub scheduler: SchedulerConfig,
+    pub workloads: Vec<WorkloadSpec>,
+    /// Experiment seed (every run is reproducible from it).
+    pub seed: u64,
+    /// Virtual-time horizon for a run, ms.
+    pub horizon_ms: u64,
+}
+
+#[derive(Debug)]
+pub struct ConfigError(pub String);
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+fn cfg_err<T>(msg: impl Into<String>) -> Result<T, ConfigError> {
+    Err(ConfigError(msg.into()))
+}
+
+impl Config {
+    pub fn load(path: &Path) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError(format!("read {}: {e}", path.display())))?;
+        Self::from_str(&text)
+    }
+
+    pub fn from_str(text: &str) -> Result<Self, ConfigError> {
+        let root = toml::parse(text).map_err(|e| ConfigError(e.to_string()))?;
+        let mut cfg = Config::default();
+
+        if let Some(v) = root.get("seed") {
+            cfg.seed = v.as_int().ok_or(ConfigError("seed must be int".into()))? as u64;
+        }
+        if let Some(v) = root.get("horizon_ms") {
+            cfg.horizon_ms =
+                v.as_int().ok_or(ConfigError("horizon_ms must be int".into()))? as u64;
+        }
+
+        if let Some(m) = root.get("machine") {
+            cfg.machine = parse_machine(m)?;
+        }
+        if let Some(s) = root.get("scheduler") {
+            cfg.scheduler = parse_scheduler(s)?;
+        }
+        if let Some(Value::Array(ws)) = root.get("workload") {
+            for w in ws {
+                cfg.workloads.push(parse_workload(w)?);
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.machine.nodes == 0 || self.machine.cores_per_node == 0 {
+            return cfg_err("machine must have nodes and cores");
+        }
+        if self.machine.nodes > crate::runtime::pack::NMAX {
+            return cfg_err(format!(
+                "machine.nodes {} exceeds AOT NMAX {}",
+                self.machine.nodes,
+                crate::runtime::pack::NMAX
+            ));
+        }
+        if let Some(d) = &self.machine.distance {
+            if d.len() != self.machine.nodes
+                || d.iter().any(|row| row.len() != self.machine.nodes)
+            {
+                return cfg_err("distance matrix shape must be nodes x nodes");
+            }
+        }
+        if self.scheduler.report_period_ms < self.scheduler.monitor_period_ms {
+            return cfg_err("report_period_ms must be >= monitor_period_ms");
+        }
+        if !(0.0..=1.0).contains(&0.0) {
+            unreachable!()
+        }
+        for pin in &self.scheduler.static_pins {
+            if pin.node >= self.machine.nodes {
+                return cfg_err(format!(
+                    "static pin for {:?} targets node {} on a {}-node machine",
+                    pin.process, pin.node, self.machine.nodes
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_machine(v: &Value) -> Result<MachineConfig, ConfigError> {
+    let mut m = match v.get("preset").and_then(Value::as_str) {
+        Some(p) => MachineConfig::preset(p)
+            .ok_or_else(|| ConfigError(format!("unknown machine preset {p:?}")))?,
+        None => MachineConfig::default(),
+    };
+    if let Some(n) = v.get("nodes").and_then(Value::as_int) {
+        m.nodes = n as usize;
+    }
+    if let Some(c) = v.get("cores_per_node").and_then(Value::as_int) {
+        m.cores_per_node = c as usize;
+    }
+    if let Some(x) = v.get("mem_gib_per_node").and_then(Value::as_float) {
+        m.mem_gib_per_node = x;
+    }
+    if let Some(x) = v.get("bandwidth_gbs").and_then(Value::as_float) {
+        m.bandwidth_gbs = x;
+    }
+    if let Some(x) = v.get("remote_distance").and_then(Value::as_float) {
+        m.remote_distance = x;
+    }
+    if let Some(rows) = v.get("distance").and_then(Value::as_array) {
+        let mut matrix = Vec::new();
+        for row in rows {
+            let row = row
+                .as_array()
+                .ok_or(ConfigError("distance rows must be arrays".into()))?;
+            matrix.push(
+                row.iter()
+                    .map(|x| x.as_float().ok_or(ConfigError("distance must be numeric".into())))
+                    .collect::<Result<Vec<_>, _>>()?,
+            );
+        }
+        m.distance = Some(matrix);
+    }
+    Ok(m)
+}
+
+fn parse_scheduler(v: &Value) -> Result<SchedulerConfig, ConfigError> {
+    let mut s = SchedulerConfig::default();
+    if let Some(p) = v.get("policy").and_then(Value::as_str) {
+        s.policy = PolicyKind::parse(p)
+            .ok_or_else(|| ConfigError(format!("unknown policy {p:?}")))?;
+    }
+    macro_rules! int_field {
+        ($name:ident) => {
+            if let Some(x) = v.get(stringify!($name)).and_then(Value::as_int) {
+                s.$name = x as u64;
+            }
+        };
+    }
+    macro_rules! float_field {
+        ($name:ident) => {
+            if let Some(x) = v.get(stringify!($name)).and_then(Value::as_float) {
+                s.$name = x;
+            }
+        };
+    }
+    int_field!(monitor_period_ms);
+    int_field!(report_period_ms);
+    int_field!(migration_cooldown_ms);
+    int_field!(autonuma_scan_ms);
+    float_field!(imbalance_threshold);
+    float_field!(degradation_threshold);
+    float_field!(min_gain);
+    float_field!(smoothing_half_life);
+    if let Some(x) = v.get("use_pjrt").and_then(Value::as_bool) {
+        s.use_pjrt = x;
+    }
+    if let Some(x) = v.get("artifacts_dir").and_then(Value::as_str) {
+        s.artifacts_dir = x.to_string();
+    }
+    if let Some(pins) = v.get("static_pins").and_then(Value::as_array) {
+        for pin in pins {
+            // Each pin is a 2-element array: ["process", node].
+            let parts = pin
+                .as_array()
+                .ok_or(ConfigError("static_pins entries must be [name, node]".into()))?;
+            if parts.len() != 2 {
+                return cfg_err("static_pins entries must be [name, node]");
+            }
+            s.static_pins.push(StaticPin {
+                process: parts[0]
+                    .as_str()
+                    .ok_or(ConfigError("pin process must be string".into()))?
+                    .to_string(),
+                node: parts[1]
+                    .as_int()
+                    .ok_or(ConfigError("pin node must be int".into()))? as usize,
+            });
+        }
+    }
+    Ok(s)
+}
+
+fn parse_workload(v: &Value) -> Result<WorkloadSpec, ConfigError> {
+    let name = v
+        .get("name")
+        .and_then(Value::as_str)
+        .ok_or(ConfigError("workload needs a name".into()))?
+        .to_string();
+    Ok(WorkloadSpec {
+        name,
+        threads: v.get("threads").and_then(Value::as_int).unwrap_or(0) as usize,
+        importance: v.get("importance").and_then(Value::as_float).unwrap_or(1.0),
+        count: v.get("count").and_then(Value::as_int).unwrap_or(1) as usize,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_the_paper_testbed() {
+        let c = Config::default();
+        assert_eq!(c.machine.nodes, 4);
+        assert_eq!(c.machine.total_cores(), 40);
+        assert_eq!(c.scheduler.policy, PolicyKind::Proposed);
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let c = Config::from_str(
+            r#"
+            seed = 7
+            horizon_ms = 5000
+
+            [machine]
+            preset = "2node-8core"
+            bandwidth_gbs = 11.5
+
+            [scheduler]
+            policy = "autonuma"
+            monitor_period_ms = 20
+            report_period_ms = 60
+            imbalance_threshold = 0.5
+            static_pins = [["mysql", 1]]
+
+            [[workload]]
+            name = "canneal"
+            importance = 3.0
+
+            [[workload]]
+            name = "swaptions"
+            threads = 2
+            count = 3
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.machine.nodes, 2);
+        assert_eq!(c.machine.bandwidth_gbs, 11.5);
+        assert_eq!(c.scheduler.policy, PolicyKind::AutoNuma);
+        assert_eq!(c.scheduler.static_pins,
+                   vec![StaticPin { process: "mysql".into(), node: 1 }]);
+        assert_eq!(c.workloads.len(), 2);
+        assert_eq!(c.workloads[1].count, 3);
+        assert_eq!(c.workloads[0].importance, 3.0);
+    }
+
+    #[test]
+    fn preset_unknown_rejected() {
+        assert!(Config::from_str("[machine]\npreset = \"cray\"").is_err());
+    }
+
+    #[test]
+    fn policy_aliases() {
+        for (alias, kind) in [
+            ("none", PolicyKind::Default),
+            ("auto-numa", PolicyKind::AutoNuma),
+            ("pin", PolicyKind::StaticTuning),
+            ("numasched", PolicyKind::Proposed),
+        ] {
+            assert_eq!(PolicyKind::parse(alias), Some(kind));
+        }
+        assert_eq!(PolicyKind::parse("cfs"), None);
+    }
+
+    #[test]
+    fn validation_rejects_bad_periods() {
+        let e = Config::from_str(
+            "[scheduler]\nmonitor_period_ms = 100\nreport_period_ms = 10",
+        );
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn validation_rejects_pin_out_of_range() {
+        let e = Config::from_str(
+            "[machine]\nnodes = 2\n[scheduler]\nstatic_pins = [[\"x\", 5]]",
+        );
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn validation_rejects_too_many_nodes() {
+        assert!(Config::from_str("[machine]\nnodes = 9").is_err());
+    }
+
+    #[test]
+    fn distance_matrix_shape_checked() {
+        let e = Config::from_str(
+            "[machine]\nnodes = 2\ndistance = [[10, 21, 30], [21, 10, 30]]",
+        );
+        assert!(e.is_err());
+        let ok = Config::from_str(
+            "[machine]\nnodes = 2\ncores_per_node = 2\ndistance = [[10, 21], [21, 10]]",
+        );
+        assert!(ok.is_ok());
+    }
+}

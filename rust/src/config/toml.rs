@@ -1,0 +1,404 @@
+//! Minimal TOML-subset parser (the vendor set has no `toml`/`serde`).
+//!
+//! Supports what numasched configs use: `[table]`, `[a.b]` dotted headers,
+//! `[[array-of-tables]]`, `key = value` with strings, integers, floats,
+//! booleans, homogeneous arrays, and `#` comments. Unsupported TOML
+//! (multi-line strings, dates, inline tables) is rejected with a line-
+//! numbered error rather than silently misparsed.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parsed value tree.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+    Table(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`bandwidth = 12` is 12.0).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Dotted-path lookup: `get("machine.nodes")`.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.as_table()?.get(part)?;
+        }
+        Some(cur)
+    }
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn err<T>(line: usize, message: impl Into<String>) -> Result<T, ParseError> {
+    Err(ParseError { line, message: message.into() })
+}
+
+/// Parse a full document into a root table.
+pub fn parse(input: &str) -> Result<Value, ParseError> {
+    let mut root = BTreeMap::new();
+    // Path of the currently-open table header.
+    let mut current: Vec<String> = Vec::new();
+    // Whether `current` points into an array-of-tables element.
+    for (idx, raw) in input.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(header) = line.strip_prefix("[[") {
+            let header = match header.strip_suffix("]]") {
+                Some(h) => h.trim(),
+                None => return err(lineno, "unterminated [[header]]"),
+            };
+            let path = parse_key_path(header, lineno)?;
+            push_array_table(&mut root, &path, lineno)?;
+            current = path;
+        } else if let Some(header) = line.strip_prefix('[') {
+            let header = match header.strip_suffix(']') {
+                Some(h) => h.trim(),
+                None => return err(lineno, "unterminated [header]"),
+            };
+            let path = parse_key_path(header, lineno)?;
+            ensure_table(&mut root, &path, lineno)?;
+            current = path;
+        } else {
+            let eq = match find_top_level_eq(line) {
+                Some(i) => i,
+                None => return err(lineno, format!("expected key = value, got {line:?}")),
+            };
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return err(lineno, "empty key");
+            }
+            let value = parse_value(line[eq + 1..].trim(), lineno)?;
+            let table = open_table(&mut root, &current, lineno)?;
+            if table.insert(key.to_string(), value).is_some() {
+                return err(lineno, format!("duplicate key {key:?}"));
+            }
+        }
+    }
+    Ok(Value::Table(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn find_top_level_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn parse_key_path(s: &str, lineno: usize) -> Result<Vec<String>, ParseError> {
+    let parts: Vec<String> = s.split('.').map(|p| p.trim().to_string()).collect();
+    if parts.iter().any(|p| p.is_empty()) {
+        return err(lineno, format!("bad table header {s:?}"));
+    }
+    Ok(parts)
+}
+
+/// Walk/create the table at `path`, traversing into the *last element* of
+/// any array-of-tables encountered.
+fn open_table<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut BTreeMap<String, Value>, ParseError> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Value::Table(BTreeMap::new()));
+        cur = match entry {
+            Value::Table(t) => t,
+            Value::Array(a) => match a.last_mut() {
+                Some(Value::Table(t)) => t,
+                _ => return err(lineno, format!("{part:?} is not a table")),
+            },
+            _ => return err(lineno, format!("{part:?} is not a table")),
+        };
+    }
+    Ok(cur)
+}
+
+fn ensure_table(
+    root: &mut BTreeMap<String, Value>,
+    path: &[String],
+    lineno: usize,
+) -> Result<(), ParseError> {
+    open_table(root, path, lineno).map(|_| ())
+}
+
+fn push_array_table(
+    root: &mut BTreeMap<String, Value>,
+    path: &[String],
+    lineno: usize,
+) -> Result<(), ParseError> {
+    let (last, prefix) = path.split_last().expect("non-empty path");
+    let parent = open_table(root, prefix, lineno)?;
+    let entry = parent
+        .entry(last.clone())
+        .or_insert_with(|| Value::Array(Vec::new()));
+    match entry {
+        Value::Array(a) => {
+            a.push(Value::Table(BTreeMap::new()));
+            Ok(())
+        }
+        _ => err(lineno, format!("{last:?} already used as non-array")),
+    }
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value, ParseError> {
+    if s.is_empty() {
+        return err(lineno, "missing value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let Some(end) = rest.find('"') else {
+            return err(lineno, "unterminated string");
+        };
+        if !rest[end + 1..].trim().is_empty() {
+            return err(lineno, "trailing characters after string");
+        }
+        return Ok(Value::Str(rest[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        return parse_array(s, lineno);
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    err(lineno, format!("cannot parse value {s:?}"))
+}
+
+fn parse_array(s: &str, lineno: usize) -> Result<Value, ParseError> {
+    let inner = s
+        .strip_prefix('[')
+        .and_then(|x| x.strip_suffix(']'))
+        .ok_or(ParseError { line: lineno, message: "unterminated array".into() })?;
+    let mut items = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in inner.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                let part = inner[start..i].trim();
+                if !part.is_empty() {
+                    items.push(parse_value(part, lineno)?);
+                }
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    let tail = inner[start..].trim();
+    if !tail.is_empty() {
+        items.push(parse_value(tail, lineno)?);
+    }
+    Ok(Value::Array(items))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_comments() {
+        let v = parse(
+            r#"
+            # machine section
+            name = "r910"     # trailing comment
+            nodes = 4
+            bw = 12.5
+            smt = false
+            "#,
+        )
+        .unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("r910"));
+        assert_eq!(v.get("nodes").unwrap().as_int(), Some(4));
+        assert_eq!(v.get("bw").unwrap().as_float(), Some(12.5));
+        assert_eq!(v.get("smt").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let v = parse("x = 3").unwrap();
+        assert_eq!(v.get("x").unwrap().as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let v = parse("big = 1_000_000").unwrap();
+        assert_eq!(v.get("big").unwrap().as_int(), Some(1_000_000));
+    }
+
+    #[test]
+    fn nested_tables() {
+        let v = parse(
+            r#"
+            [machine]
+            nodes = 2
+            [machine.memctl]
+            bandwidth = 10.0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(v.get("machine.nodes").unwrap().as_int(), Some(2));
+        assert_eq!(v.get("machine.memctl.bandwidth").unwrap().as_float(), Some(10.0));
+    }
+
+    #[test]
+    fn arrays() {
+        let v = parse(r#"dist = [10, 21, 21, 10]"#).unwrap();
+        let a = v.get("dist").unwrap().as_array().unwrap();
+        assert_eq!(a.len(), 4);
+        assert_eq!(a[0].as_int(), Some(10));
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let v = parse(r#"m = [[10, 21], [21, 10]]"#).unwrap();
+        let rows = v.get("m").unwrap().as_array().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].as_array().unwrap()[0].as_int(), Some(21));
+    }
+
+    #[test]
+    fn array_of_tables() {
+        let v = parse(
+            r#"
+            [[workload]]
+            name = "canneal"
+            [[workload]]
+            name = "dedup"
+            threads = 4
+            "#,
+        )
+        .unwrap();
+        let ws = v.get("workload").unwrap().as_array().unwrap();
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws[0].get("name").unwrap().as_str(), Some("canneal"));
+        assert_eq!(ws[1].get("threads").unwrap().as_int(), Some(4));
+    }
+
+    #[test]
+    fn string_with_hash_and_equals() {
+        let v = parse(r#"s = "a # not comment = ok""#).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a # not comment = ok"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("x = ").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn unterminated_header_rejected() {
+        assert!(parse("[machine").is_err());
+        assert!(parse("[[w]").is_err());
+    }
+
+    #[test]
+    fn get_missing_path_is_none() {
+        let v = parse("[a]\nb = 1").unwrap();
+        assert!(v.get("a.c").is_none());
+        assert!(v.get("z").is_none());
+    }
+}

@@ -1,0 +1,176 @@
+//! Figure 6 — accuracy of the contention degradation factor.
+//!
+//! The paper's upper panels plot measured performance degradation under
+//! memory contention; the lower panels plot the predicted contention
+//! degradation factor; the claim is that the factor tracks reality (and
+//! that PARSEC degrades >90 % at the deep end).
+//!
+//! Protocol: for each app, pin one measured instance to node 0 with its
+//! memory local (isolating *contention* from *placement*), add
+//! 0..=MAX_HOGS infinite memory-bound co-runners on the same node,
+//! measure the slowdown vs solo, and capture the Reporter's degradation
+//! factor for the measured pid mid-run. Report the per-app correlation.
+
+use crate::config::MachineConfig;
+use crate::monitor::Monitor;
+use crate::reporter::{Backend, Reporter};
+use crate::sim::{Machine, Placement};
+use crate::topology::NumaTopology;
+use crate::util::stats;
+use crate::workloads::parsec;
+
+use super::report::{f3, pct, Table};
+
+/// Co-runner counts swept per app (single-threaded hogs: each adds
+/// ~0.2 utilization to the shared controller, giving a graded sweep up
+/// to saturation at the deep end).
+pub const HOG_LEVELS: [usize; 5] = [0, 1, 2, 3, 5];
+
+/// One app's sweep results.
+#[derive(Clone, Debug)]
+pub struct AppAccuracy {
+    pub name: &'static str,
+    /// Measured degradation (1 - speed_ratio) per hog level.
+    pub measured: Vec<f64>,
+    /// Predicted contention degradation factor per hog level.
+    pub predicted: Vec<f64>,
+    pub pearson: f64,
+    pub spearman: f64,
+}
+
+/// Run one (app, hogs) cell; returns (measured slowdown, predicted factor).
+fn run_cell(app: &parsec::ParsecApp, hogs: usize, seed: u64) -> (f64, f64) {
+    let topo = NumaTopology::from_config(&MachineConfig::default());
+    let mut m = Machine::new(topo.clone(), seed);
+    m.os_balance = false; // isolate contention: nothing moves
+
+    let mut behavior = app.behavior();
+    behavior.work_units = f64::INFINITY; // measure speed, not completion
+    let pid = m.spawn(app.name, behavior, 2.0, 1, Placement::Node(0));
+    for i in 0..hogs {
+        let mut hog = parsec::app("canneal").unwrap().behavior();
+        hog.work_units = f64::INFINITY;
+        m.spawn(&format!("hog{i}"), hog, 0.5, 1, Placement::Node(0));
+    }
+
+    // Passive Reporter: monitors and scores, never schedules.
+    let monitor = Monitor::discover(&m).unwrap();
+    let mut reporter = Reporter::new(
+        Backend::Cpu,
+        monitor.topo.distance.clone(),
+        topo.bandwidth_gbs.clone(),
+    );
+
+    let mut degradation = Vec::new();
+    let warmup = 500.0;
+    while m.now_ms < 3_000.0 {
+        m.step();
+        if (m.now_ms as u64) % 50 == 0 {
+            let snap = monitor.sample(&m, m.now_ms);
+            if let Some(rep) = reporter.ingest(&snap) {
+                if m.now_ms > warmup {
+                    if let Some(r) = rep.by_speedup.iter().find(|r| r.pid == pid) {
+                        degradation.push(r.degradation);
+                    }
+                }
+            }
+        }
+    }
+    let speed = m.process(pid).unwrap().mean_speed();
+    (speed, stats::mean(&degradation))
+}
+
+/// Sweep one app over the hog levels.
+pub fn sweep_app(app: &parsec::ParsecApp, seed: u64) -> AppAccuracy {
+    let mut measured = Vec::new();
+    let mut predicted = Vec::new();
+    let mut solo_speed = None;
+    for &hogs in &HOG_LEVELS {
+        let (speed, factor) = run_cell(app, hogs, seed);
+        let solo = *solo_speed.get_or_insert(speed);
+        measured.push((1.0 - speed / solo).max(0.0));
+        predicted.push(factor);
+    }
+    AppAccuracy {
+        name: app.name,
+        pearson: stats::pearson(&measured, &predicted),
+        spearman: stats::spearman(&measured, &predicted),
+        measured,
+        predicted,
+    }
+}
+
+/// The full Figure-6 regeneration.
+pub fn run(seed: u64) -> Vec<AppAccuracy> {
+    parsec::APPS.iter().map(|a| sweep_app(a, seed)).collect()
+}
+
+/// Render the figure as the paper's two panels (per-app rows).
+pub fn render(results: &[AppAccuracy]) -> String {
+    let mut headers: Vec<String> = vec!["app".into()];
+    for &h in &HOG_LEVELS {
+        headers.push(format!("meas@{h}"));
+    }
+    for &h in &HOG_LEVELS {
+        headers.push(format!("pred@{h}"));
+    }
+    headers.push("pearson".into());
+    headers.push("spearman".into());
+    let headers_ref: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut t = Table::new(
+        "Figure 6 — accuracy of the contention degradation factor",
+        &headers_ref,
+    );
+    for r in results {
+        let mut row = vec![r.name.to_string()];
+        row.extend(r.measured.iter().map(|&x| pct(x)));
+        row.extend(r.predicted.iter().map(|&x| f3(x)));
+        row.push(f3(r.pearson));
+        row.push(f3(r.spearman));
+        t.row(row);
+    }
+    let mut out = t.render();
+    let mem_max: Vec<f64> = results
+        .iter()
+        .filter(|r| parsec::app(r.name).unwrap().is_memory_intensive())
+        .map(|r| *r.measured.last().unwrap())
+        .collect();
+    out.push_str(&format!(
+        "\nmemory-intensive apps max degradation: {} (paper: >90% => suitable contention workload)\n",
+        pct(stats::max(&mem_max))
+    ));
+    let mean_rho: f64 =
+        stats::mean(&results.iter().map(|r| r.spearman).collect::<Vec<_>>());
+    out.push_str(&format!("mean rank correlation (factor accuracy): {}\n", f3(mean_rho)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factor_tracks_contention_for_canneal() {
+        let acc = sweep_app(parsec::app("canneal").unwrap(), 1);
+        // Monotone-ish: more hogs, more measured degradation.
+        assert!(acc.measured.last().unwrap() > &acc.measured[0]);
+        assert!(
+            acc.spearman > 0.7,
+            "factor must rank contention levels: {acc:?}"
+        );
+        // Deep-end degradation is severe for the memory hog.
+        assert!(acc.measured.last().unwrap() > &0.5, "{:?}", acc.measured);
+    }
+
+    #[test]
+    fn compute_bound_app_degrades_far_less_than_the_hog() {
+        let swap = sweep_app(parsec::app("swaptions").unwrap(), 1);
+        let hog = sweep_app(parsec::app("canneal").unwrap(), 1);
+        let s = *swap.measured.last().unwrap();
+        let h = *hog.measured.last().unwrap();
+        assert!(
+            s < h * 0.6,
+            "swaptions ({s:.3}) should degrade far less than canneal ({h:.3})"
+        );
+    }
+}

@@ -1,0 +1,148 @@
+//! Figure 7 — speedup of the proposed system vs Automatic NUMA
+//! Balancing and Static Tuning on the 40-core platform.
+//!
+//! Protocol (the paper's eval setup): all 12 PARSEC apps launched
+//! together with half-CPU / half-memory background pressure on the
+//! 4-node 40-core machine; each policy runs the identical workload and
+//! seed; per-app speedup is `t_default / t_policy`.
+
+use crate::config::{MachineConfig, PolicyKind, SchedulerConfig};
+use crate::util::stats;
+use crate::workloads::{mix, parsec};
+
+use super::report::{f2, pct, Table};
+use super::runner::{run, RunParams, RunResult};
+
+/// Per-policy, per-app completion times.
+#[derive(Clone, Debug)]
+pub struct Fig7Results {
+    /// Policy results in `PolicyKind::ALL` order.
+    pub runs: Vec<RunResult>,
+}
+
+pub fn params(policy: PolicyKind, seed: u64, use_pjrt: bool) -> RunParams {
+    RunParams {
+        machine: MachineConfig::default(), // the R910 40-core preset
+        scheduler: SchedulerConfig { policy, use_pjrt, ..Default::default() },
+        specs: mix::fig7_mix(),
+        seed,
+        horizon_ms: 120_000.0,
+        window_ms: 1_000.0,
+    }
+}
+
+pub fn run_all(seed: u64, use_pjrt: bool) -> Fig7Results {
+    Fig7Results {
+        runs: PolicyKind::ALL
+            .iter()
+            .map(|&p| run(&params(p, seed, use_pjrt)))
+            .collect(),
+    }
+}
+
+impl Fig7Results {
+    pub fn result(&self, policy: PolicyKind) -> &RunResult {
+        self.runs
+            .iter()
+            .find(|r| r.policy == policy)
+            .expect("policy run present")
+    }
+
+    /// Speedup of `policy` over Default for one app.
+    pub fn speedup(&self, policy: PolicyKind, app: &str) -> Option<f64> {
+        let base = self.result(PolicyKind::Default).runtime_of(app)?;
+        let t = self.result(policy).runtime_of(app)?;
+        Some(base / t)
+    }
+
+    /// Geomean speedup over all measured apps.
+    pub fn geomean_speedup(&self, policy: PolicyKind) -> f64 {
+        let xs: Vec<f64> = parsec::NAMES
+            .iter()
+            .filter_map(|n| self.speedup(policy, n))
+            .collect();
+        stats::geomean(&xs)
+    }
+
+    /// Best per-app improvement of `policy` vs Default (the paper's
+    /// "up to 25%" metric), as a fraction.
+    pub fn max_improvement(&self, policy: PolicyKind) -> f64 {
+        parsec::NAMES
+            .iter()
+            .filter_map(|n| self.speedup(policy, n))
+            .map(|s| s - 1.0)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+pub fn render(r: &Fig7Results) -> String {
+    let mut t = Table::new(
+        "Figure 7 — per-app speedup vs Default (40-core platform)",
+        &["app", "autonuma", "static", "proposed", "winner"],
+    );
+    for name in parsec::NAMES {
+        let auto = r.speedup(PolicyKind::AutoNuma, name).unwrap_or(f64::NAN);
+        let stat = r.speedup(PolicyKind::StaticTuning, name).unwrap_or(f64::NAN);
+        let prop = r.speedup(PolicyKind::Proposed, name).unwrap_or(f64::NAN);
+        let winner = [("autonuma", auto), ("static", stat), ("proposed", prop)]
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap()
+            .0;
+        t.row(vec![
+            name.to_string(),
+            f2(auto),
+            f2(stat),
+            f2(prop),
+            winner.to_string(),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "\ngeomean speedup: autonuma {} | static {} | proposed {}\n",
+        f2(r.geomean_speedup(PolicyKind::AutoNuma)),
+        f2(r.geomean_speedup(PolicyKind::StaticTuning)),
+        f2(r.geomean_speedup(PolicyKind::Proposed)),
+    ));
+    out.push_str(&format!(
+        "max improvement (paper: up to 25%): proposed {}\n",
+        pct(r.max_improvement(PolicyKind::Proposed)),
+    ));
+    let static_wins = parsec::NAMES
+        .iter()
+        .filter(|n| {
+            r.speedup(PolicyKind::StaticTuning, n).unwrap_or(0.0)
+                > r.speedup(PolicyKind::Proposed, n).unwrap_or(0.0)
+        })
+        .count();
+    out.push_str(&format!(
+        "apps where static tuning beats proposed (paper: 3 of 12): {static_wins} of 12\n",
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Smaller horizon / subset smoke (full Fig-7 runs in the bench).
+    #[test]
+    fn proposed_beats_default_on_the_mix() {
+        let mut p = params(PolicyKind::Default, 7, false);
+        p.horizon_ms = 60_000.0;
+        let base = run(&p);
+        let mut p = params(PolicyKind::Proposed, 7, false);
+        p.horizon_ms = 60_000.0;
+        let prop = run(&p);
+        // Geomean over apps that finished under both.
+        let mut speedups = Vec::new();
+        for n in parsec::NAMES {
+            if let (Some(b), Some(x)) = (base.runtime_of(n), prop.runtime_of(n)) {
+                speedups.push(b / x);
+            }
+        }
+        assert!(!speedups.is_empty(), "no apps finished");
+        let g = stats::geomean(&speedups);
+        assert!(g > 1.0, "proposed must help overall: geomean {g:.3} over {speedups:?}");
+    }
+}

@@ -1,0 +1,118 @@
+//! Figure 8 — Apache webserver and MySQL database throughput in a "real
+//! server environment" with many service daemons.
+//!
+//! The paper reports, per service, the average / worst / deviation of
+//! the throughput improvement of the proposed system over the existing
+//! system (12.6 % Apache, 7 % MySQL, no manual optimization).
+//!
+//! Protocol: the Fig-8 mix (apache workers + mysqld + daemons + batch
+//! memory hogs) runs under Default and Proposed with identical seeds;
+//! steady-state window throughputs are compared window-by-window over
+//! several seeds to produce avg/worst/stddev improvements.
+
+use crate::config::{MachineConfig, PolicyKind, SchedulerConfig};
+use crate::util::stats;
+use crate::workloads::mix;
+
+use super::report::{pct, Table};
+use super::runner::{run, RunParams};
+
+/// Improvement summary for one service.
+#[derive(Clone, Debug)]
+pub struct ServiceImprovement {
+    pub service: &'static str,
+    /// Per-seed mean throughput improvement (fraction).
+    pub per_seed: Vec<f64>,
+    pub avg: f64,
+    pub worst: f64,
+    pub deviation: f64,
+}
+
+fn params(policy: PolicyKind, seed: u64) -> RunParams {
+    RunParams {
+        machine: MachineConfig::default(),
+        scheduler: SchedulerConfig { policy, ..Default::default() },
+        specs: mix::fig8_mix(6, 8),
+        seed,
+        horizon_ms: 40_000.0,
+        window_ms: 1_000.0,
+    }
+}
+
+/// Run the comparison over `seeds` trials.
+pub fn run_all(seeds: &[u64]) -> Vec<ServiceImprovement> {
+    let mut apache = Vec::new();
+    let mut mysql = Vec::new();
+    for &seed in seeds {
+        let base = run(&params(PolicyKind::Default, seed));
+        let prop = run(&params(PolicyKind::Proposed, seed));
+        let imp = |svc: &str| -> f64 {
+            let b = base.throughput_of(svc);
+            let p = prop.throughput_of(svc);
+            if b <= 0.0 {
+                0.0
+            } else {
+                p / b - 1.0
+            }
+        };
+        apache.push(imp("apache"));
+        mysql.push(imp("mysqld"));
+    }
+    let summarize = |service: &'static str, per_seed: Vec<f64>| ServiceImprovement {
+        service,
+        avg: stats::mean(&per_seed),
+        worst: stats::min(&per_seed),
+        deviation: stats::stddev(&per_seed),
+        per_seed,
+    };
+    vec![summarize("apache", apache), summarize("mysqld", mysql)]
+}
+
+pub fn render(results: &[ServiceImprovement]) -> String {
+    let mut t = Table::new(
+        "Figure 8 — service throughput improvement (proposed vs default)",
+        &["service", "avg improvement", "worst improvement", "deviation"],
+    );
+    for r in results {
+        t.row(vec![
+            r.service.to_string(),
+            pct(r.avg),
+            pct(r.worst),
+            pct(r.deviation),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(
+        "\npaper reference: apache +12.6%, mysql +7.0% (shape target: apache gain > mysql gain > 0)\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn services_improve_under_proposed() {
+        // Per-seed outcomes are noisy (the paper reports avg/worst/dev
+        // for the same reason); the multi-seed means must be positive.
+        let res = run_all(&[11, 12, 13]);
+        let apache = &res[0];
+        let mysql = &res[1];
+        assert!(
+            apache.avg > 0.0,
+            "apache should gain on average: {:?}",
+            apache.per_seed
+        );
+        // Known deviation (EXPERIMENTS.md): mysqld is a *spread*
+        // multi-node pool our process-granular scheduler cannot place as
+        // one unit, so its gain is weaker / can dip negative; the paper's
+        // apache > mysql ordering must still hold.
+        assert!(
+            apache.avg > mysql.avg,
+            "paper ordering (apache gain > mysql gain) violated: {:?} vs {:?}",
+            apache.per_seed,
+            mysql.per_seed
+        );
+    }
+}

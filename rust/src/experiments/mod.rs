@@ -1,0 +1,16 @@
+//! Experiment drivers regenerating every table and figure of the
+//! paper's evaluation (see DESIGN.md §4 for the index):
+//!
+//! * [`table1`] — PARSEC characteristics (configured + measured);
+//! * [`fig6`] — accuracy of the contention degradation factor;
+//! * [`fig7`] — speedup vs Automatic NUMA Balancing / Static Tuning;
+//! * [`fig8`] — Apache/MySQL throughput in the server environment;
+//! * [`runner`] — the shared policy driver;
+//! * [`report`] — table rendering.
+
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod report;
+pub mod runner;
+pub mod table1;

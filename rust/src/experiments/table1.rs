@@ -1,0 +1,101 @@
+//! Table 1 — key characteristics of the PARSEC benchmarks, as
+//! configured (the paper's qualitative table) plus *measured* proxies
+//! from a short solo run of each model (so the table is backed by the
+//! simulator, not just restated).
+
+use crate::config::MachineConfig;
+use crate::sim::{Machine, Placement};
+use crate::topology::NumaTopology;
+use crate::workloads::parsec;
+
+use super::report::{f2, Table};
+
+/// Measured per-app proxies from a short solo run.
+#[derive(Clone, Debug)]
+pub struct Measured {
+    pub name: &'static str,
+    /// Mean controller utilization induced on the home node.
+    pub home_rho: f64,
+    /// Mean observed speed when solo+local (1.0 = unimpeded).
+    pub solo_speed: f64,
+}
+
+pub fn measure(app: &parsec::ParsecApp, seed: u64) -> Measured {
+    let topo = NumaTopology::from_config(&MachineConfig::default());
+    let mut m = Machine::new(topo, seed);
+    m.os_balance = false;
+    let mut b = app.behavior();
+    b.work_units = f64::INFINITY;
+    let pid = m.spawn(app.name, b, 1.0, parsec::DEFAULT_THREADS, Placement::Node(0));
+    let mut rho_sum = 0.0;
+    let mut n = 0;
+    while m.now_ms < 1_000.0 {
+        m.step();
+        rho_sum += m.node_rho()[0];
+        n += 1;
+    }
+    Measured {
+        name: app.name,
+        home_rho: rho_sum / n as f64,
+        solo_speed: m.process(pid).unwrap().mean_speed(),
+    }
+}
+
+pub fn run(seed: u64) -> Vec<Measured> {
+    parsec::APPS.iter().map(|a| measure(a, seed)).collect()
+}
+
+pub fn render(measured: &[Measured]) -> String {
+    let mut t = Table::new(
+        "Table 1 — key characteristics of PARSEC benchmarks (configured + measured)",
+        &[
+            "program", "application domain", "model", "granularity",
+            "sharing", "exchange", "mem-intensity", "ws(pages)",
+            "rho@home", "solo speed",
+        ],
+    );
+    for (app, m) in parsec::APPS.iter().zip(measured) {
+        assert_eq!(app.name, m.name);
+        t.row(vec![
+            app.name.into(),
+            app.domain.into(),
+            app.model.into(),
+            app.granularity.into(),
+            format!("{:?}", app.sharing).to_lowercase(),
+            format!("{:?}", app.exchange).to_lowercase(),
+            f2(app.mem_intensity),
+            app.ws_pages.to_string(),
+            f2(m.home_rho),
+            f2(m.solo_speed),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_hogs_pressure_their_home_controller() {
+        let canneal = measure(parsec::app("canneal").unwrap(), 5);
+        let swaptions = measure(parsec::app("swaptions").unwrap(), 5);
+        assert!(
+            canneal.home_rho > 4.0 * swaptions.home_rho.max(1e-9),
+            "canneal {canneal:?} vs swaptions {swaptions:?}"
+        );
+    }
+
+    #[test]
+    fn solo_local_speed_is_reasonable() {
+        // Compute-bound apps run near full speed; canneal at 4 threads is
+        // legitimately bandwidth-bound even solo (it saturates its own
+        // controller), so its solo speed sits well below 1.
+        let bs = measure(parsec::app("blackscholes").unwrap(), 6);
+        assert!(bs.solo_speed > 0.85, "{bs:?}");
+        assert!(bs.solo_speed <= 1.0, "{bs:?}");
+        let cn = measure(parsec::app("canneal").unwrap(), 6);
+        assert!(cn.solo_speed > 0.10, "{cn:?}");
+        assert!(cn.solo_speed < 0.60, "{cn:?}");
+    }
+}

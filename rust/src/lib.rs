@@ -1,0 +1,34 @@
+//! # numasched — user-level NUMA-aware memory scheduler
+//!
+//! Reproduction of Lim & Suh, *"User-Level Memory Scheduler for
+//! Optimizing Application Performance in NUMA-Based Multicore Systems"*,
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's Monitor → Reporter → Scheduler
+//!   pipeline ([`monitor`], [`reporter`], [`scheduler`]), the baselines
+//!   it is compared against ([`baselines`]), and every substrate it
+//!   needs: a NUMA machine simulator ([`sim`]), procfs/sysfs parsers and
+//!   facades ([`procfs`]), topology ([`topology`]), workload models
+//!   ([`workloads`]), a config system ([`config`]), and the experiment
+//!   harness ([`experiments`]).
+//! * **L2/L1 (build time)** — the Reporter's scoring analytics as a JAX
+//!   graph wrapping a fused Pallas kernel, AOT-lowered to HLO text and
+//!   executed from [`runtime`] via the PJRT CPU client. Python never
+//!   runs on the scheduling path.
+//!
+//! See `DESIGN.md` for the architecture and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod experiments;
+pub mod monitor;
+pub mod procfs;
+pub mod reporter;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod topology;
+pub mod util;
+pub mod workloads;

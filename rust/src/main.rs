@@ -1,0 +1,223 @@
+//! numasched CLI — leader entrypoint.
+
+use std::time::Duration;
+
+use numasched::cli::{self, Cli, USAGE};
+use numasched::config::{Config, PolicyKind};
+use numasched::experiments::{fig6, fig7, fig8, report::Table, runner, table1};
+use numasched::monitor::{thread::MonitorThread, Monitor};
+use numasched::procfs::host::HostProcfs;
+use numasched::util::log::{set_max_level, Level};
+use numasched::workloads;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = match cli::parse(&args) {
+        Ok(c) => c,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(if msg == USAGE { 0 } else { 2 });
+        }
+    };
+    if cli.verbose {
+        set_max_level(Level::Debug);
+    }
+    let code = match cli.command.as_str() {
+        "run" => cmd_run(&cli),
+        "table1" => cmd_table1(&cli),
+        "fig6" => cmd_fig6(&cli),
+        "fig7" => cmd_fig7(&cli),
+        "fig8" => cmd_fig8(&cli),
+        "host-monitor" => cmd_host_monitor(&cli),
+        "inspect" => cmd_inspect(&cli),
+        other => {
+            eprintln!("unknown command {other:?}\n\n{USAGE}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Build run parameters from config file + CLI overrides.
+fn build_params(cli: &Cli) -> Result<runner::RunParams, String> {
+    let cfg = match &cli.config {
+        Some(path) => Config::load(path).map_err(|e| e.to_string())?,
+        None => Config::default(),
+    };
+    let mut params = runner::RunParams {
+        machine: cfg.machine.clone(),
+        scheduler: cfg.scheduler.clone(),
+        seed: if cfg.seed != 0 { cfg.seed } else { cli.seed },
+        horizon_ms: if cfg.horizon_ms != 0 {
+            cfg.horizon_ms as f64
+        } else {
+            60_000.0
+        },
+        ..Default::default()
+    };
+    for w in &cfg.workloads {
+        for _ in 0..w.count.max(1) {
+            let mut spec = workloads::by_name(&w.name)
+                .ok_or_else(|| format!("unknown workload {:?}", w.name))?;
+            if w.threads > 0 {
+                spec.threads = w.threads;
+            }
+            spec.importance = w.importance;
+            params.specs.push(spec);
+        }
+    }
+    if params.specs.is_empty() {
+        params.specs = workloads::mix::fig7_mix();
+    }
+    if let Some(policy) = &cli.policy {
+        params.scheduler.policy = PolicyKind::parse(policy)
+            .ok_or_else(|| format!("unknown policy {policy:?}"))?;
+    }
+    if let Some(h) = cli.horizon_ms {
+        params.horizon_ms = h;
+    }
+    if cli.seed != 42 {
+        params.seed = cli.seed;
+    }
+    params.scheduler.use_pjrt |= cli.use_pjrt;
+    if let Some(dir) = &cli.artifacts_dir {
+        params.scheduler.artifacts_dir = dir.clone();
+    }
+    Ok(params)
+}
+
+fn cmd_run(cli: &Cli) -> i32 {
+    let params = match build_params(cli) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    println!(
+        "running {} workloads under policy {} (seed {}, horizon {} ms, backend {})",
+        params.specs.len(),
+        params.scheduler.policy,
+        params.seed,
+        params.horizon_ms,
+        if params.scheduler.use_pjrt { "pjrt" } else { "rust" },
+    );
+    let result = runner::run(&params);
+    let mut t = Table::new(
+        &format!("run result — policy {}", result.policy),
+        &["comm", "pid", "runtime_ms", "mean speed", "migrations", "throughput"],
+    );
+    for p in &result.procs {
+        t.row(vec![
+            p.comm.clone(),
+            p.pid.to_string(),
+            p.runtime_ms.map(|x| format!("{x:.0}")).unwrap_or("daemon".into()),
+            format!("{:.3}", p.mean_speed),
+            p.migrations.to_string(),
+            if p.window_throughput.is_empty() {
+                "-".into()
+            } else {
+                format!("{:.1}/win", numasched::util::stats::mean(&p.window_throughput))
+            },
+        ]);
+    }
+    print!("{}", if cli.csv { t.to_csv() } else { t.render() });
+    println!(
+        "total: {} process migrations, {} pages migrated, {} scheduler decisions, end t={:.0} ms",
+        result.total_migrations,
+        result.total_pages_migrated,
+        result.scheduler_decisions,
+        result.end_ms
+    );
+    if result.epoch_ns.count() > 0 {
+        println!(
+            "scoring epoch: mean {:.1} us, max {:.1} us over {} epochs",
+            result.epoch_ns.mean() / 1e3,
+            result.epoch_ns.max() / 1e3,
+            result.epoch_ns.count()
+        );
+    }
+    0
+}
+
+fn cmd_table1(cli: &Cli) -> i32 {
+    let measured = table1::run(cli.seed);
+    print!("{}", table1::render(&measured));
+    0
+}
+
+fn cmd_fig6(cli: &Cli) -> i32 {
+    let results = fig6::run(cli.seed);
+    print!("{}", fig6::render(&results));
+    0
+}
+
+fn cmd_fig7(cli: &Cli) -> i32 {
+    let results = fig7::run_all(cli.seed, cli.use_pjrt);
+    print!("{}", fig7::render(&results));
+    0
+}
+
+fn cmd_fig8(cli: &Cli) -> i32 {
+    let seeds = if cli.seeds.is_empty() {
+        vec![cli.seed, cli.seed + 1, cli.seed + 2]
+    } else {
+        cli.seeds.clone()
+    };
+    let results = fig8::run_all(&seeds);
+    print!("{}", fig8::render(&results));
+    0
+}
+
+fn cmd_host_monitor(cli: &Cli) -> i32 {
+    let source = HostProcfs::new();
+    let monitor = match Monitor::discover(&source) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("discover failed: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "host topology: {} node(s), >= {} cores/node",
+        monitor.topo.nodes, monitor.topo.cores_per_node
+    );
+    let samples = cli.horizon_ms.unwrap_or(3.0) as usize;
+    let thread = MonitorThread::spawn(monitor, source, Duration::from_millis(500));
+    for _ in 0..samples.max(1) {
+        match thread.snapshots.recv_timeout(Duration::from_secs(5)) {
+            Ok(snap) => {
+                let total_rss: u64 = snap.tasks.iter().map(|t| t.rss_pages).sum();
+                println!(
+                    "t={:.0}ms: {} tasks, {} resident pages, node counters {:?}",
+                    snap.t_ms,
+                    snap.tasks.len(),
+                    total_rss,
+                    snap.nodes.iter().map(|n| n.total()).collect::<Vec<_>>()
+                );
+            }
+            Err(e) => {
+                eprintln!("no snapshot: {e}");
+                return 1;
+            }
+        }
+    }
+    thread.stop();
+    0
+}
+
+fn cmd_inspect(_cli: &Cli) -> i32 {
+    println!("machine presets: r910-40core (paper testbed), 2node-8core, 8node-64core");
+    let mut t = Table::new("workload catalog", &["name", "threads", "mem-intensity", "daemon"]);
+    for name in workloads::all_names() {
+        let s = workloads::by_name(name).unwrap();
+        t.row(vec![
+            name.to_string(),
+            s.threads.to_string(),
+            format!("{:.2}", s.behavior.mem_intensity),
+            s.behavior.is_daemon().to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    0
+}

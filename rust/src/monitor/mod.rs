@@ -1,0 +1,206 @@
+//! The runtime Monitor — Algorithm 1 of the paper.
+//!
+//! > "Create a new thread for receiving and dealing with the run-time
+//! >  monitoring data. Repeat monitoring until user-space NUMA scheduler
+//! >  stops: sleep for a NUMA-specific period, collect the data monitored
+//! >  from proc file system (/proc/<pid>/{stat | numa maps})."
+//!
+//! The Monitor only consumes *kernel text* through the [`ProcSource`]
+//! trait; it is byte-identical code whether the source is the live host
+//! or the simulator. Discovery (node count, cpulists, SLIT matrix) runs
+//! once at startup from sysfs, sampling runs every period.
+
+pub mod sample;
+pub mod thread;
+
+use crate::procfs::{numa_maps, stat, sysnode, ProcSource};
+
+pub use sample::{NodeSample, Snapshot, TaskSample, TopoView};
+
+/// The Monitor: discovered topology + sampling over a `ProcSource`.
+pub struct Monitor {
+    pub topo: TopoView,
+    /// Ignore pids whose comm is not in this allowlist (empty = all).
+    /// Used on live hosts to restrict monitoring to managed daemons.
+    pub comm_filter: Vec<String>,
+}
+
+impl Monitor {
+    /// Discover the topology from sysfs text. Falls back to a single
+    /// node spanning every observed CPU when NUMA sysfs is absent.
+    pub fn discover(source: &dyn ProcSource) -> Result<Self, String> {
+        let topo = Self::discover_topo(source)?;
+        Ok(Self { topo, comm_filter: Vec::new() })
+    }
+
+    fn discover_topo(source: &dyn ProcSource) -> Result<TopoView, String> {
+        let Some(online) = source.read_nodes_online() else {
+            // No NUMA sysfs at all: single-node fallback.
+            return Ok(TopoView { nodes: 1, cores_per_node: 1, distance: vec![vec![10.0]] });
+        };
+        let ids = sysnode::parse_cpulist(online.trim())
+            .ok_or_else(|| format!("bad nodes online {online:?}"))?;
+        if ids.is_empty() {
+            return Err("no online NUMA nodes".into());
+        }
+        let nodes = ids.len();
+        let mut cores_per_node = usize::MAX;
+        let mut distance = Vec::with_capacity(nodes);
+        for &n in &ids {
+            let cl = source
+                .read_node_cpulist(n)
+                .ok_or_else(|| format!("missing cpulist for node {n}"))?;
+            let cores = sysnode::parse_cpulist(cl.trim())
+                .ok_or_else(|| format!("bad cpulist {cl:?}"))?;
+            cores_per_node = cores_per_node.min(cores.len().max(1));
+            let dist = source
+                .read_node_distance(n)
+                .ok_or_else(|| format!("missing distance for node {n}"))?;
+            let row = sysnode::parse_distance_row(&dist)
+                .ok_or_else(|| format!("bad distance {dist:?}"))?;
+            if row.len() != nodes {
+                return Err(format!("distance row {n} has {} entries", row.len()));
+            }
+            distance.push(row);
+        }
+        Ok(TopoView { nodes, cores_per_node, distance })
+    }
+
+    /// One sampling pass (the body of Algorithm 1's loop).
+    pub fn sample(&self, source: &dyn ProcSource, t_ms: f64) -> Snapshot {
+        let mut snap = Snapshot { t_ms, ..Default::default() };
+        for pid in source.list_pids() {
+            let Some(stat_text) = source.read_stat(pid) else { continue };
+            let Some(ps) = stat::parse(stat_text.trim()) else { continue };
+            if !self.comm_filter.is_empty()
+                && !self.comm_filter.iter().any(|c| c == &ps.comm)
+            {
+                continue;
+            }
+            let pages_per_node = match source.read_numa_maps(pid) {
+                Some(text) => numa_maps::parse(&text).pages_per_node(self.topo.nodes),
+                // numa_maps can be absent (no CONFIG_NUMA): attribute the
+                // whole rss to the node the task runs on.
+                None => {
+                    let mut v = vec![0u64; self.topo.nodes];
+                    let node = self.topo.node_of_core(ps.processor.max(0) as usize);
+                    v[node] = ps.rss.max(0) as u64;
+                    v
+                }
+            };
+            snap.tasks.push(TaskSample {
+                pid: ps.pid,
+                comm: ps.comm,
+                node: self.topo.node_of_core(ps.processor.max(0) as usize),
+                threads: ps.num_threads,
+                cpu_ms: ps.utime + ps.stime,
+                rss_pages: ps.rss.max(0) as u64,
+                pages_per_node,
+            });
+        }
+        for n in 0..self.topo.nodes {
+            let ns = source
+                .read_node_numastat(n)
+                .map(|text| {
+                    let s = sysnode::parse_numastat(&text);
+                    NodeSample { served_local: s.numa_hit, served_remote: s.numa_miss }
+                })
+                .unwrap_or_default();
+            snap.nodes.push(ns);
+        }
+        snap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Machine, Placement, TaskBehavior};
+    use crate::topology::NumaTopology;
+
+    fn sim() -> Machine {
+        Machine::new(NumaTopology::r910_40core(), 1)
+    }
+
+    #[test]
+    fn discovers_sim_topology() {
+        let m = sim();
+        let mon = Monitor::discover(&m).unwrap();
+        assert_eq!(mon.topo.nodes, 4);
+        assert_eq!(mon.topo.cores_per_node, 10);
+        assert_eq!(mon.topo.distance[0][0], 10.0);
+        assert!(mon.topo.distance[0][1] > 10.0);
+    }
+
+    #[test]
+    fn samples_running_tasks() {
+        let mut m = sim();
+        let pid = m.spawn("ferret", TaskBehavior::mem_bound(1e9), 1.0, 4, Placement::Node(2));
+        for _ in 0..5 {
+            m.step();
+        }
+        let mon = Monitor::discover(&m).unwrap();
+        let snap = mon.sample(&m, m.now_ms);
+        let task = snap.task(pid).expect("task sampled");
+        assert_eq!(task.comm, "ferret");
+        assert_eq!(task.node, 2);
+        assert_eq!(task.threads, 4);
+        assert!(task.cpu_ms > 0);
+        assert_eq!(task.pages_per_node[2], task.rss_pages);
+        assert_eq!(snap.nodes.len(), 4);
+    }
+
+    #[test]
+    fn comm_filter_restricts() {
+        let mut m = sim();
+        m.spawn("apache", TaskBehavior::cpu_bound(1e9), 1.0, 1, Placement::Node(0));
+        m.spawn("noise", TaskBehavior::cpu_bound(1e9), 1.0, 1, Placement::Node(0));
+        let mut mon = Monitor::discover(&m).unwrap();
+        mon.comm_filter = vec!["apache".into()];
+        let snap = mon.sample(&m, 0.0);
+        assert_eq!(snap.tasks.len(), 1);
+        assert_eq!(snap.tasks[0].comm, "apache");
+    }
+
+    #[test]
+    fn numastat_flows_into_snapshot() {
+        let mut m = sim();
+        m.spawn("hog", TaskBehavior::mem_bound(1e9), 1.0, 8, Placement::Node(0));
+        for _ in 0..10 {
+            m.step();
+        }
+        let mon = Monitor::discover(&m).unwrap();
+        let snap = mon.sample(&m, m.now_ms);
+        assert!(snap.nodes[0].total() > 0);
+    }
+
+    #[test]
+    fn single_node_fallback_when_sysfs_missing() {
+        struct NoSysfs;
+        impl crate::procfs::ProcSource for NoSysfs {
+            fn list_pids(&self) -> Vec<i32> {
+                vec![]
+            }
+            fn read_stat(&self, _: i32) -> Option<String> {
+                None
+            }
+            fn read_numa_maps(&self, _: i32) -> Option<String> {
+                None
+            }
+            fn read_nodes_online(&self) -> Option<String> {
+                None
+            }
+            fn read_node_cpulist(&self, _: usize) -> Option<String> {
+                None
+            }
+            fn read_node_distance(&self, _: usize) -> Option<String> {
+                None
+            }
+            fn read_node_numastat(&self, _: usize) -> Option<String> {
+                None
+            }
+        }
+        let mon = Monitor::discover(&NoSysfs).unwrap();
+        assert_eq!(mon.topo.nodes, 1);
+    }
+}

@@ -1,0 +1,100 @@
+//! Sample types produced by the runtime Monitor (Algorithm 1).
+
+/// One task's state as read from `/proc/<pid>/{stat, numa_maps}`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskSample {
+    pub pid: i32,
+    pub comm: String,
+    /// NUMA node of the CPU the task last ran on (stat field 39).
+    pub node: usize,
+    pub threads: i64,
+    /// utime + stime, jiffies (== virtual ms in the simulator).
+    pub cpu_ms: u64,
+    /// Resident pages.
+    pub rss_pages: u64,
+    /// Resident pages per NUMA node (numa_maps aggregation).
+    pub pages_per_node: Vec<u64>,
+}
+
+/// One node's cumulative served-access counters (numastat).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NodeSample {
+    /// Accesses served for local threads.
+    pub served_local: u64,
+    /// Accesses served for remote threads.
+    pub served_remote: u64,
+}
+
+impl NodeSample {
+    pub fn total(&self) -> u64 {
+        self.served_local + self.served_remote
+    }
+}
+
+/// A full monitoring snapshot at one sampling instant.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    /// Monotonic sample time, ms (virtual in sim, wall on host).
+    pub t_ms: f64,
+    pub tasks: Vec<TaskSample>,
+    pub nodes: Vec<NodeSample>,
+}
+
+impl Snapshot {
+    pub fn task(&self, pid: i32) -> Option<&TaskSample> {
+        self.tasks.iter().find(|t| t.pid == pid)
+    }
+}
+
+/// The topology view the Monitor discovers from sysfs at startup.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TopoView {
+    pub nodes: usize,
+    pub cores_per_node: usize,
+    /// SLIT distance matrix.
+    pub distance: Vec<Vec<f64>>,
+}
+
+impl TopoView {
+    pub fn node_of_core(&self, core: usize) -> usize {
+        (core / self.cores_per_node.max(1)).min(self.nodes.saturating_sub(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_sample_total() {
+        let s = NodeSample { served_local: 3, served_remote: 4 };
+        assert_eq!(s.total(), 7);
+    }
+
+    #[test]
+    fn snapshot_task_lookup() {
+        let snap = Snapshot {
+            t_ms: 1.0,
+            tasks: vec![TaskSample {
+                pid: 9,
+                comm: "x".into(),
+                node: 0,
+                threads: 1,
+                cpu_ms: 0,
+                rss_pages: 0,
+                pages_per_node: vec![],
+            }],
+            nodes: vec![],
+        };
+        assert!(snap.task(9).is_some());
+        assert!(snap.task(10).is_none());
+    }
+
+    #[test]
+    fn topo_view_core_mapping_clamps() {
+        let t = TopoView { nodes: 2, cores_per_node: 4, distance: vec![] };
+        assert_eq!(t.node_of_core(0), 0);
+        assert_eq!(t.node_of_core(7), 1);
+        assert_eq!(t.node_of_core(99), 1); // hotplugged core: clamp
+    }
+}

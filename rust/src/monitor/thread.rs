@@ -1,0 +1,102 @@
+//! Threaded Monitor driver — Algorithm 1's "create a new thread".
+//!
+//! For live-host mode the Monitor runs on its own OS thread, publishing
+//! snapshots over a channel until the scheduler signals shutdown (the
+//! paper's "repeat until user-space NUMA scheduler stops"). Simulation
+//! experiments instead drive `Monitor::sample` synchronously on virtual
+//! time — the sampling code is shared.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::procfs::ProcSource;
+
+use super::{Monitor, Snapshot};
+
+/// Handle to a running monitor thread.
+pub struct MonitorThread {
+    pub snapshots: Receiver<Snapshot>,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MonitorThread {
+    /// Spawn the sampling loop over `source` with the given period.
+    /// Snapshots are delivered over a bounded channel; if the consumer
+    /// lags, the oldest pending snapshot is dropped (monitoring is lossy
+    /// by design — the freshest data wins).
+    pub fn spawn<S>(monitor: Monitor, source: S, period: Duration) -> Self
+    where
+        S: ProcSource + Send + 'static,
+    {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let (tx, rx): (SyncSender<Snapshot>, Receiver<Snapshot>) = sync_channel(4);
+        let join = std::thread::Builder::new()
+            .name("numasched-monitor".into())
+            .spawn(move || {
+                let t0 = Instant::now();
+                while !stop2.load(Ordering::Relaxed) {
+                    let snap =
+                        monitor.sample(&source, t0.elapsed().as_secs_f64() * 1e3);
+                    match tx.try_send(snap) {
+                        Ok(()) | Err(TrySendError::Full(_)) => {}
+                        Err(TrySendError::Disconnected(_)) => break,
+                    }
+                    std::thread::sleep(period);
+                }
+            })
+            .expect("spawn monitor thread");
+        Self { snapshots: rx, stop, join: Some(join) }
+    }
+
+    /// Signal the loop to stop and join it.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for MonitorThread {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::procfs::host::HostProcfs;
+
+    #[test]
+    fn monitors_live_host_and_stops() {
+        let source = HostProcfs::new();
+        let monitor = Monitor::discover(&source).expect("discover host");
+        let thread =
+            MonitorThread::spawn(monitor, source, Duration::from_millis(10));
+        // Collect at least one snapshot containing our own process.
+        let snap = thread
+            .snapshots
+            .recv_timeout(Duration::from_secs(5))
+            .expect("snapshot");
+        let me = std::process::id() as i32;
+        assert!(snap.tasks.iter().any(|t| t.pid == me));
+        thread.stop();
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let source = HostProcfs::new();
+        let monitor = Monitor::discover(&source).expect("discover host");
+        let thread =
+            MonitorThread::spawn(monitor, source, Duration::from_millis(5));
+        drop(thread); // must not hang or panic
+    }
+}

@@ -1,0 +1,143 @@
+//! `ProcSource` backed by the live host's /proc and /sys.
+//!
+//! Used by the `host-monitor` subcommand and `examples/host_monitor.rs`
+//! to prove the Monitor's parsers run unmodified against real kernel
+//! text. On non-NUMA hosts sysfs reads degrade gracefully (node0 only or
+//! absent) and the Monitor falls back to a single-node view.
+
+use std::path::PathBuf;
+
+use super::ProcSource;
+
+/// Reads kernel text from configurable roots (so tests can point it at a
+/// fixture tree).
+pub struct HostProcfs {
+    proc_root: PathBuf,
+    sys_root: PathBuf,
+}
+
+impl HostProcfs {
+    pub fn new() -> Self {
+        Self::with_roots("/proc".into(), "/sys".into())
+    }
+
+    pub fn with_roots(proc_root: PathBuf, sys_root: PathBuf) -> Self {
+        Self { proc_root, sys_root }
+    }
+
+    fn node_file(&self, node: usize, file: &str) -> Option<String> {
+        std::fs::read_to_string(
+            self.sys_root
+                .join("devices/system/node")
+                .join(format!("node{node}"))
+                .join(file),
+        )
+        .ok()
+    }
+}
+
+impl Default for HostProcfs {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ProcSource for HostProcfs {
+    fn list_pids(&self) -> Vec<i32> {
+        let Ok(entries) = std::fs::read_dir(&self.proc_root) else {
+            return Vec::new();
+        };
+        let mut pids: Vec<i32> = entries
+            .filter_map(|e| e.ok())
+            .filter_map(|e| e.file_name().to_str().and_then(|s| s.parse().ok()))
+            .collect();
+        pids.sort_unstable();
+        pids
+    }
+
+    fn read_stat(&self, pid: i32) -> Option<String> {
+        std::fs::read_to_string(self.proc_root.join(pid.to_string()).join("stat")).ok()
+    }
+
+    fn read_numa_maps(&self, pid: i32) -> Option<String> {
+        std::fs::read_to_string(self.proc_root.join(pid.to_string()).join("numa_maps"))
+            .ok()
+    }
+
+    fn read_nodes_online(&self) -> Option<String> {
+        std::fs::read_to_string(self.sys_root.join("devices/system/node/online")).ok()
+    }
+
+    fn read_node_cpulist(&self, node: usize) -> Option<String> {
+        self.node_file(node, "cpulist")
+    }
+
+    fn read_node_distance(&self, node: usize) -> Option<String> {
+        self.node_file(node, "distance")
+    }
+
+    fn read_node_numastat(&self, node: usize) -> Option<String> {
+        self.node_file(node, "numastat")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lists_pids_on_linux() {
+        let host = HostProcfs::new();
+        let pids = host.list_pids();
+        // We are a live process on Linux; our own pid must be present.
+        let me = std::process::id() as i32;
+        assert!(pids.contains(&me), "own pid missing from {}", pids.len());
+    }
+
+    #[test]
+    fn reads_own_stat() {
+        let host = HostProcfs::new();
+        let me = std::process::id() as i32;
+        let text = host.read_stat(me).expect("own stat");
+        let parsed = crate::procfs::stat::parse(text.trim()).expect("parse");
+        assert_eq!(parsed.pid, me);
+    }
+
+    #[test]
+    fn missing_pid_is_none() {
+        let host = HostProcfs::new();
+        assert!(host.read_stat(-1).is_none());
+    }
+
+    #[test]
+    fn fixture_roots() {
+        let dir = std::env::temp_dir().join(format!("numasched-host-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(dir.join("proc/42")).unwrap();
+        let fake = crate::procfs::stat::PidStat {
+            pid: 42,
+            comm: "fake".into(),
+            state: 'R',
+            utime: 1,
+            stime: 2,
+            num_threads: 1,
+            vsize: 0,
+            rss: 3,
+            processor: 5,
+        };
+        std::fs::write(dir.join("proc/42/stat"), crate::procfs::stat::render(&fake))
+            .unwrap();
+        std::fs::create_dir_all(dir.join("sys/devices/system/node/node0")).unwrap();
+        std::fs::write(dir.join("sys/devices/system/node/online"), "0").unwrap();
+        std::fs::write(dir.join("sys/devices/system/node/node0/cpulist"), "0-3").unwrap();
+
+        let host = HostProcfs::with_roots(dir.join("proc"), dir.join("sys"));
+        assert_eq!(host.list_pids(), vec![42]);
+        let s = crate::procfs::stat::parse(&host.read_stat(42).unwrap()).unwrap();
+        assert_eq!(s.processor, 5);
+        assert_eq!(host.read_nodes_online().unwrap(), "0");
+        assert_eq!(host.read_node_cpulist(0).unwrap(), "0-3");
+        assert!(host.read_node_cpulist(1).is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,40 @@
+//! The procfs/sysfs boundary — the paper's entire observation surface.
+//!
+//! Algorithm 1 collects scheduling data exclusively from
+//! `/proc/<pid>/{stat, numa_maps}` and `/sys/devices/system/node/*`. We
+//! model that boundary as the `ProcSource` trait: the Monitor only ever
+//! sees *text in kernel formats*, whether it comes from the live host
+//! (`host::HostProcfs`) or from the simulator, which renders its state
+//! into the same formats (`sim::machine` implements `ProcSource`).
+//!
+//! This keeps the reproduction honest: the paper's pipeline parses real
+//! kernel text; ours does too, even against the simulated machine.
+
+pub mod host;
+pub mod numa_maps;
+pub mod stat;
+pub mod sysnode;
+
+/// Abstract source of procfs/sysfs text.
+pub trait ProcSource {
+    /// Live pids (directory listing of /proc).
+    fn list_pids(&self) -> Vec<i32>;
+
+    /// Raw `/proc/<pid>/stat` text; None if the pid vanished.
+    fn read_stat(&self, pid: i32) -> Option<String>;
+
+    /// Raw `/proc/<pid>/numa_maps` text; None if absent.
+    fn read_numa_maps(&self, pid: i32) -> Option<String>;
+
+    /// Raw `/sys/devices/system/node/online` text.
+    fn read_nodes_online(&self) -> Option<String>;
+
+    /// Raw `/sys/devices/system/node/node<n>/cpulist`.
+    fn read_node_cpulist(&self, node: usize) -> Option<String>;
+
+    /// Raw `/sys/devices/system/node/node<n>/distance`.
+    fn read_node_distance(&self, node: usize) -> Option<String>;
+
+    /// Raw `/sys/devices/system/node/node<n>/numastat`.
+    fn read_node_numastat(&self, node: usize) -> Option<String>;
+}

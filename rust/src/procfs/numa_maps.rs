@@ -1,0 +1,206 @@
+//! Parser for `/proc/<pid>/numa_maps` — the paper's source of per-node
+//! page placement (Algorithm 1 collects `/proc/<pid>/{stat | numa maps}`).
+//!
+//! Real lines look like:
+//! `7f2a4c000000 default anon=8192 dirty=8192 active=4096 N0=4096 N1=4096 kernelpagesize_kB=4`
+//! `00400000 default file=/usr/sbin/mysqld mapped=1605 mapmax=2 N2=1605`
+
+use std::collections::BTreeMap;
+
+/// One VMA line of numa_maps.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Vma {
+    pub address: u64,
+    /// Memory policy ("default", "bind:0", "interleave:0-3", ...).
+    pub policy: String,
+    /// Pages per NUMA node (the `N<i>=<count>` fields).
+    pub pages_per_node: BTreeMap<usize, u64>,
+    /// Anonymous pages, if reported.
+    pub anon: Option<u64>,
+    /// Dirty pages, if reported.
+    pub dirty: Option<u64>,
+    /// Backing file, if mapped.
+    pub file: Option<String>,
+}
+
+impl Vma {
+    pub fn total_pages(&self) -> u64 {
+        self.pages_per_node.values().sum()
+    }
+}
+
+/// Aggregate view of a whole numa_maps file.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NumaMaps {
+    pub vmas: Vec<Vma>,
+}
+
+impl NumaMaps {
+    /// Total resident pages per node across all VMAs, sized to `nodes`.
+    pub fn pages_per_node(&self, nodes: usize) -> Vec<u64> {
+        let mut out = vec![0u64; nodes];
+        for vma in &self.vmas {
+            for (&n, &count) in &vma.pages_per_node {
+                if n < nodes {
+                    out[n] += count;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn total_pages(&self) -> u64 {
+        self.vmas.iter().map(Vma::total_pages).sum()
+    }
+}
+
+/// Parse one VMA line; None for malformed lines (skipped by callers).
+pub fn parse_line(line: &str) -> Option<Vma> {
+    let mut parts = line.split_whitespace();
+    let address = u64::from_str_radix(parts.next()?, 16).ok()?;
+    let policy = parts.next()?.to_string();
+    let mut vma = Vma {
+        address,
+        policy,
+        pages_per_node: BTreeMap::new(),
+        anon: None,
+        dirty: None,
+        file: None,
+    };
+    for tok in parts {
+        if let Some(rest) = tok.strip_prefix('N') {
+            // N<node>=<pages>
+            if let Some((node, pages)) = rest.split_once('=') {
+                if let (Ok(n), Ok(p)) = (node.parse::<usize>(), pages.parse::<u64>()) {
+                    vma.pages_per_node.insert(n, p);
+                    continue;
+                }
+            }
+        }
+        if let Some(v) = tok.strip_prefix("anon=") {
+            vma.anon = v.parse().ok();
+        } else if let Some(v) = tok.strip_prefix("dirty=") {
+            vma.dirty = v.parse().ok();
+        } else if let Some(v) = tok.strip_prefix("file=") {
+            vma.file = Some(v.to_string());
+        }
+        // Other attributes (mapped=, active=, kernelpagesize_kB=) ignored.
+    }
+    Some(vma)
+}
+
+/// Parse a whole numa_maps file.
+pub fn parse(text: &str) -> NumaMaps {
+    NumaMaps {
+        vmas: text.lines().filter_map(parse_line).collect(),
+    }
+}
+
+/// Render a numa_maps file from per-VMA node counts (synth path).
+pub fn render(vmas: &[Vma]) -> String {
+    let mut out = String::new();
+    for vma in vmas {
+        out.push_str(&format!("{:012x} {}", vma.address, vma.policy));
+        if let Some(f) = &vma.file {
+            out.push_str(&format!(" file={f}"));
+        }
+        if let Some(a) = vma.anon {
+            out.push_str(&format!(" anon={a}"));
+        }
+        if let Some(d) = vma.dirty {
+            out.push_str(&format!(" dirty={d}"));
+        }
+        for (n, pages) in &vma.pages_per_node {
+            out.push_str(&format!(" N{n}={pages}"));
+        }
+        out.push_str(" kernelpagesize_kB=4\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_anon_vma() {
+        let vma = parse_line(
+            "7f2a4c000000 default anon=8192 dirty=8192 active=4096 N0=4096 N1=4096 kernelpagesize_kB=4",
+        )
+        .unwrap();
+        assert_eq!(vma.address, 0x7f2a4c000000);
+        assert_eq!(vma.policy, "default");
+        assert_eq!(vma.anon, Some(8192));
+        assert_eq!(vma.pages_per_node[&0], 4096);
+        assert_eq!(vma.pages_per_node[&1], 4096);
+        assert_eq!(vma.total_pages(), 8192);
+    }
+
+    #[test]
+    fn parses_file_vma() {
+        let vma = parse_line(
+            "00400000 default file=/usr/sbin/mysqld mapped=1605 mapmax=2 N2=1605",
+        )
+        .unwrap();
+        assert_eq!(vma.file.as_deref(), Some("/usr/sbin/mysqld"));
+        assert_eq!(vma.pages_per_node[&2], 1605);
+    }
+
+    #[test]
+    fn parses_bind_policy() {
+        let vma = parse_line("7fff0000 bind:3 anon=10 N3=10").unwrap();
+        assert_eq!(vma.policy, "bind:3");
+    }
+
+    #[test]
+    fn aggregates_per_node() {
+        let maps = parse(
+            "7f0000000000 default anon=100 N0=60 N1=40\n\
+             7f0001000000 default anon=50 N1=25 N3=25\n\
+             bogus line that is skipped\n",
+        );
+        assert_eq!(maps.vmas.len(), 2);
+        assert_eq!(maps.pages_per_node(4), vec![60, 65, 0, 25]);
+        assert_eq!(maps.total_pages(), 150);
+    }
+
+    #[test]
+    fn out_of_range_nodes_dropped_in_aggregate() {
+        let maps = parse("7f0000000000 default N7=99\n");
+        assert_eq!(maps.pages_per_node(2), vec![0, 0]);
+        assert_eq!(maps.total_pages(), 99); // still counted raw
+    }
+
+    #[test]
+    fn roundtrip_render_parse() {
+        let vmas = vec![
+            Vma {
+                address: 0x7f2a4c000000,
+                policy: "default".into(),
+                pages_per_node: [(0, 128), (2, 64)].into_iter().collect(),
+                anon: Some(192),
+                dirty: Some(10),
+                file: None,
+            },
+            Vma {
+                address: 0x400000,
+                policy: "default".into(),
+                pages_per_node: [(1, 7)].into_iter().collect(),
+                anon: None,
+                dirty: None,
+                file: Some("/bin/daemon".into()),
+            },
+        ];
+        let parsed = parse(&render(&vmas));
+        assert_eq!(parsed.vmas, vmas);
+    }
+
+    #[test]
+    fn parses_live_self_numa_maps_if_present() {
+        // numa_maps exists only with CONFIG_NUMA; tolerate absence.
+        if let Ok(text) = std::fs::read_to_string("/proc/self/numa_maps") {
+            let maps = parse(&text);
+            assert!(!maps.vmas.is_empty());
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Parser for `/proc/<pid>/stat` (and `/proc/<pid>/task/<tid>/stat`).
+//!
+//! Algorithm 1 of the paper collects scheduling data from exactly this
+//! file. The format is `pid (comm) state ppid ...` where `comm` may
+//! contain spaces and parentheses, so fields are located relative to the
+//! *last* `)` — the same trick procps uses.
+
+/// The fields the Monitor consumes (1-based indices per proc(5)).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PidStat {
+    pub pid: i32,
+    pub comm: String,
+    pub state: char,
+    /// Field 14: user-mode jiffies.
+    pub utime: u64,
+    /// Field 15: kernel-mode jiffies.
+    pub stime: u64,
+    /// Field 20: number of threads.
+    pub num_threads: i64,
+    /// Field 23: virtual memory size, bytes.
+    pub vsize: u64,
+    /// Field 24: resident set size, pages.
+    pub rss: i64,
+    /// Field 39: CPU the task last ran on.
+    pub processor: i32,
+}
+
+/// Parse one stat line. Returns None on malformed input (the kernel can
+/// race a dying pid into an empty file; callers skip those).
+pub fn parse(line: &str) -> Option<PidStat> {
+    let open = line.find('(')?;
+    let close = line.rfind(')')?;
+    if close < open {
+        return None;
+    }
+    let pid: i32 = line[..open].trim().parse().ok()?;
+    let comm = line[open + 1..close].to_string();
+    let rest: Vec<&str> = line[close + 1..].split_whitespace().collect();
+    // rest[0] is field 3 (state); field k (1-based, k >= 3) is rest[k-3].
+    let field = |k: usize| -> Option<&str> { rest.get(k - 3).copied() };
+    Some(PidStat {
+        pid,
+        comm,
+        state: field(3)?.chars().next()?,
+        utime: field(14)?.parse().ok()?,
+        stime: field(15)?.parse().ok()?,
+        num_threads: field(20)?.parse().ok()?,
+        vsize: field(23)?.parse().ok()?,
+        rss: field(24)?.parse().ok()?,
+        processor: field(39)?.parse().ok()?,
+    })
+}
+
+/// Render a stat line (the simulator's synth path). Fields not modeled by
+/// the simulator are zero — consistent with what the parser ignores.
+pub fn render(s: &PidStat) -> String {
+    // Fields 3..=52 per proc(5); we fill the ones we model.
+    let mut f = vec!["0".to_string(); 50];
+    f[0] = s.state.to_string(); // 3
+    f[11] = s.utime.to_string(); // 14
+    f[12] = s.stime.to_string(); // 15
+    f[17] = s.num_threads.to_string(); // 20
+    f[20] = s.vsize.to_string(); // 23
+    f[21] = s.rss.to_string(); // 24
+    f[36] = s.processor.to_string(); // 39
+    format!("{} ({}) {}", s.pid, s.comm, f.join(" "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const REAL_LINE: &str = "1234 (apache2) S 1 1234 1234 0 -1 4194560 2549 0 0 0 \
+        731 284 0 0 20 0 12 0 8917 228096000 1432 18446744073709551615 1 1 0 0 0 0 \
+        0 4096 81928 0 0 0 17 7 0 0 0 0 0 0 0 0 0 0 0 0 0";
+
+    #[test]
+    fn parses_real_format() {
+        let s = parse(REAL_LINE).unwrap();
+        assert_eq!(s.pid, 1234);
+        assert_eq!(s.comm, "apache2");
+        assert_eq!(s.state, 'S');
+        assert_eq!(s.utime, 731);
+        assert_eq!(s.stime, 284);
+        assert_eq!(s.num_threads, 12);
+        assert_eq!(s.vsize, 228096000);
+        assert_eq!(s.rss, 1432);
+        assert_eq!(s.processor, 7);
+    }
+
+    #[test]
+    fn comm_with_spaces_and_parens() {
+        let line = "77 (weird (name) x) R 1 0 0 0 -1 0 0 0 0 0 \
+            5 6 0 0 20 0 3 0 0 1000 42 0 0 0 0 0 0 0 0 0 0 0 0 0 0 9 0 0 0 0 0 0 0 0 0 0 0 0 0";
+        let s = parse(line).unwrap();
+        assert_eq!(s.comm, "weird (name) x");
+        assert_eq!(s.processor, 9);
+        assert_eq!(s.rss, 42);
+    }
+
+    #[test]
+    fn roundtrip_render_parse() {
+        let orig = PidStat {
+            pid: 4321,
+            comm: "canneal".into(),
+            state: 'R',
+            utime: 100,
+            stime: 20,
+            num_threads: 8,
+            vsize: 1 << 30,
+            rss: 25_000,
+            processor: 13,
+        };
+        let parsed = parse(&render(&orig)).unwrap();
+        assert_eq!(parsed, orig);
+    }
+
+    #[test]
+    fn malformed_lines_are_none() {
+        assert!(parse("").is_none());
+        assert!(parse("123").is_none());
+        assert!(parse("123 (x").is_none());
+        assert!(parse("x (y) R 1").is_none());
+    }
+
+    #[test]
+    fn parses_live_self_stat() {
+        // Real kernel text, if we're on Linux.
+        if let Ok(text) = std::fs::read_to_string("/proc/self/stat") {
+            let s = parse(text.trim()).expect("parse own stat");
+            assert!(s.pid > 0);
+            assert!(s.num_threads >= 1);
+        }
+    }
+}

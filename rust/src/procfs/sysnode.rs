@@ -1,0 +1,154 @@
+//! Parsers for `/sys/devices/system/node/*` files (sysfs side of
+//! Algorithm 1) — `cpulist`, `distance`, `meminfo`, `numastat`.
+
+/// Parse a Linux cpulist ("0-9,20-29,40") into explicit ids.
+pub fn parse_cpulist(s: &str) -> Option<Vec<usize>> {
+    let mut out = Vec::new();
+    if s.trim().is_empty() {
+        return Some(out);
+    }
+    for part in s.trim().split(',') {
+        let part = part.trim();
+        if let Some((lo, hi)) = part.split_once('-') {
+            let lo: usize = lo.trim().parse().ok()?;
+            let hi: usize = hi.trim().parse().ok()?;
+            if hi < lo {
+                return None;
+            }
+            out.extend(lo..=hi);
+        } else {
+            out.push(part.parse().ok()?);
+        }
+    }
+    Some(out)
+}
+
+/// Render ids (assumed sorted) back to a compact cpulist.
+pub fn render_cpulist(ids: &[usize]) -> String {
+    let mut parts = Vec::new();
+    let mut i = 0;
+    while i < ids.len() {
+        let start = ids[i];
+        let mut end = start;
+        while i + 1 < ids.len() && ids[i + 1] == end + 1 {
+            i += 1;
+            end = ids[i];
+        }
+        if start == end {
+            parts.push(start.to_string());
+        } else {
+            parts.push(format!("{start}-{end}"));
+        }
+        i += 1;
+    }
+    parts.join(",")
+}
+
+/// Parse one `distance` row ("10 21 21 30").
+pub fn parse_distance_row(s: &str) -> Option<Vec<f64>> {
+    let row: Result<Vec<f64>, _> = s.split_whitespace().map(str::parse).collect();
+    row.ok().filter(|r| !r.is_empty())
+}
+
+/// Extract `MemTotal` in kB from a node `meminfo` file.
+pub fn parse_memtotal_kb(text: &str) -> Option<u64> {
+    for line in text.lines() {
+        if line.contains("MemTotal:") {
+            return line
+                .split_whitespace()
+                .rev()
+                .nth(1) // "... 8388608 kB"
+                .and_then(|v| v.parse().ok());
+        }
+    }
+    None
+}
+
+/// Per-node `numastat` counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NumaStat {
+    pub numa_hit: u64,
+    pub numa_miss: u64,
+    pub numa_foreign: u64,
+    pub local_node: u64,
+    pub other_node: u64,
+}
+
+pub fn parse_numastat(text: &str) -> NumaStat {
+    let mut s = NumaStat::default();
+    for line in text.lines() {
+        let mut it = line.split_whitespace();
+        let (Some(key), Some(val)) = (it.next(), it.next()) else { continue };
+        let Ok(v) = val.parse::<u64>() else { continue };
+        match key {
+            "numa_hit" => s.numa_hit = v,
+            "numa_miss" => s.numa_miss = v,
+            "numa_foreign" => s.numa_foreign = v,
+            "local_node" => s.local_node = v,
+            "other_node" => s.other_node = v,
+            _ => {}
+        }
+    }
+    s
+}
+
+pub fn render_numastat(s: &NumaStat) -> String {
+    format!(
+        "numa_hit {}\nnuma_miss {}\nnuma_foreign {}\ninterleave_hit 0\nlocal_node {}\nother_node {}\n",
+        s.numa_hit, s.numa_miss, s.numa_foreign, s.local_node, s.other_node
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpulist_ranges_and_singles() {
+        assert_eq!(parse_cpulist("0-3").unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpulist("0-1,4,6-7").unwrap(), vec![0, 1, 4, 6, 7]);
+        assert_eq!(parse_cpulist("5").unwrap(), vec![5]);
+        assert_eq!(parse_cpulist("").unwrap(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn cpulist_rejects_garbage() {
+        assert!(parse_cpulist("a-b").is_none());
+        assert!(parse_cpulist("3-1").is_none());
+    }
+
+    #[test]
+    fn cpulist_roundtrip() {
+        for s in ["0-9", "0,2,4", "0-3,8-11,40", "7"] {
+            let ids = parse_cpulist(s).unwrap();
+            assert_eq!(render_cpulist(&ids), s);
+        }
+    }
+
+    #[test]
+    fn distance_row() {
+        assert_eq!(parse_distance_row("10 21 21 30").unwrap(),
+                   vec![10.0, 21.0, 21.0, 30.0]);
+        assert!(parse_distance_row("").is_none());
+        assert!(parse_distance_row("10 x").is_none());
+    }
+
+    #[test]
+    fn memtotal() {
+        let text = "Node 0 MemTotal:       8388608 kB\nNode 0 MemFree: 123 kB\n";
+        assert_eq!(parse_memtotal_kb(text), Some(8388608));
+        assert_eq!(parse_memtotal_kb("nothing here"), None);
+    }
+
+    #[test]
+    fn numastat_roundtrip() {
+        let s = NumaStat {
+            numa_hit: 100,
+            numa_miss: 7,
+            numa_foreign: 7,
+            local_node: 90,
+            other_node: 17,
+        };
+        assert_eq!(parse_numastat(&render_numastat(&s)), s);
+    }
+}

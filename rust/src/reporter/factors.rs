@@ -1,0 +1,188 @@
+//! Pure-Rust scoring fallback — the same math as the Pallas kernel.
+//!
+//! Mirrors `python/compile/kernels/ref.py` (and therefore the AOT
+//! artifact) bit-closely: computations run in f32 in the same order. The
+//! Reporter uses this when `use_pjrt = false`, and the integration test
+//! `rust/tests/hlo_equivalence.rs` asserts Rust == HLO on random
+//! problems, pinning the L1/L2/L3 contract.
+
+use crate::runtime::pack::{PackedInputs, NMAX, TMAX};
+use crate::runtime::RawScores;
+
+/// Model constants — the mirror of `python/compile/kernels/params.py`.
+pub mod consts {
+    pub const ALPHA: f32 = 1.0;
+    pub const BETA: f32 = 1.0;
+    pub const GAMMA: f32 = 0.02;
+    pub const D_LOCAL: f32 = 10.0;
+    pub const RHO_MAX: f32 = 0.95;
+}
+
+/// Score a packed problem on the CPU. Output layout matches
+/// `ScoringEngine::score` exactly.
+pub fn score_cpu(inp: &PackedInputs) -> RawScores {
+    use consts::*;
+    let mut s = vec![0.0f32; TMAX * NMAX];
+    let mut dcur = vec![0.0f32; TMAX];
+    let mut r_out = vec![0.0f32; TMAX * NMAX];
+    let mut c_out = vec![0.0f32; TMAX * NMAX];
+
+    for t in 0..TMAX {
+        let a = &inp.a[t * NMAX..(t + 1) * NMAX];
+        let cur = &inp.cur[t * NMAX..(t + 1) * NMAX];
+        let mi = inp.mi[t];
+        let w = inp.w[t];
+        let mask = inp.mask[t];
+
+        let rowsum: f32 = a.iter().sum();
+        let denom = rowsum.max(1.0);
+
+        // r[n] = rownorm(a) @ d[:, n]; loc/c per candidate node.
+        let mut loc = [0.0f32; NMAX];
+        let mut r_row = [0.0f32; NMAX];
+        let mut c_row = [0.0f32; NMAX];
+        for n in 0..NMAX {
+            let mut r = 0.0f32;
+            for m in 0..NMAX {
+                r += (a[m] / denom) * inp.d[m * NMAX + n];
+            }
+            // Subtract the task's own measured traffic on n before adding
+            // its demand at the candidate — mirror of
+            // ref.contention_penalty (prevents self-contention phantoms).
+            let u_bg = (inp.u[n] - mi * (a[n] / denom)).max(0.0);
+            let rho = ((u_bg + mi) / inp.b[n]).clamp(0.0, RHO_MAX);
+            let c = mi * rho / (1.0 - rho);
+            loc[n] = ALPHA * (r - D_LOCAL) / D_LOCAL + BETA * c;
+            r_row[n] = r;
+            c_row[n] = c;
+        }
+        let d_cur: f32 = (0..NMAX).map(|n| loc[n] * cur[n]).sum();
+
+        // Migration cost: gamma * log1p(pages) * (cur @ d / 10 - 1).
+        let log_pages = rowsum.ln_1p();
+        for n in 0..NMAX {
+            let mut hop = 0.0f32;
+            for m in 0..NMAX {
+                hop += cur[m] * inp.d[m * NMAX + n];
+            }
+            let mig = GAMMA * log_pages * (hop / D_LOCAL - 1.0);
+            s[t * NMAX + n] = (w * (d_cur - loc[n]) - mig) * mask;
+            r_out[t * NMAX + n] = r_row[n] * mask;
+            c_out[t * NMAX + n] = c_row[n] * mask;
+        }
+        dcur[t] = d_cur * mask;
+    }
+    RawScores { s, dcur, r: r_out, c: c_out }
+}
+
+/// Per-node demand / utilization / imbalance — mirror of
+/// `ref.node_stats` (used when PJRT is off).
+pub fn node_stats_cpu(inp: &PackedInputs) -> (Vec<f32>, Vec<f32>, f32) {
+    let mut demand = vec![0.0f32; NMAX];
+    for t in 0..TMAX {
+        let a = &inp.a[t * NMAX..(t + 1) * NMAX];
+        let rowsum: f32 = a.iter().sum();
+        let denom = rowsum.max(1.0);
+        for n in 0..NMAX {
+            demand[n] += (a[n] / denom) * inp.mi[t];
+        }
+    }
+    let rho: Vec<f32> = demand.iter().zip(&inp.b).map(|(d, b)| d / b).collect();
+    let mean = (demand.iter().sum::<f32>() / NMAX as f32).max(1e-6);
+    let max = demand.iter().copied().fold(f32::MIN, f32::max);
+    let min = demand.iter().copied().fold(f32::MAX, f32::min);
+    (demand.clone(), rho, (max - min) / mean)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::pack::{pack, ScoreProblem, TaskRow};
+
+    fn packed() -> PackedInputs {
+        pack(&ScoreProblem {
+            tasks: vec![
+                TaskRow {
+                    pid: 1,
+                    pages_per_node: vec![800.0, 100.0],
+                    mem_intensity: 1.2,
+                    importance: 2.0,
+                    node: 1,
+                },
+                TaskRow {
+                    pid: 2,
+                    pages_per_node: vec![0.0, 300.0],
+                    mem_intensity: 0.3,
+                    importance: 1.0,
+                    node: 1,
+                },
+            ],
+            distance: vec![vec![10.0, 21.0], vec![21.0, 10.0]],
+            node_demand: vec![3.0, 1.0],
+            node_bandwidth: vec![12.0, 12.0],
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn staying_put_scores_zero() {
+        let raw = score_cpu(&packed());
+        // Task 0 currently on node 1: s[0][1] == 0.
+        assert!(raw.s[1].abs() < 1e-6);
+        assert!(raw.s[NMAX + 1].abs() < 1e-6);
+    }
+
+    #[test]
+    fn misplaced_task_wants_to_go_home() {
+        let raw = score_cpu(&packed());
+        // Task 0's pages are mostly on node 0; moving there scores > 0.
+        assert!(raw.s[0] > 0.0);
+        // Task 1 is already local; moving away scores < 0.
+        assert!(raw.s[NMAX] < 0.0);
+    }
+
+    #[test]
+    fn degradation_positive_for_remote_task() {
+        let raw = score_cpu(&packed());
+        assert!(raw.dcur[0] > 0.0, "remote task must show degradation");
+        assert!(raw.dcur[0] > raw.dcur[1], "local task degrades less");
+    }
+
+    #[test]
+    fn masked_rows_zero() {
+        let raw = score_cpu(&packed());
+        for t in 2..TMAX {
+            assert_eq!(raw.dcur[t], 0.0);
+            assert!(raw.s[t * NMAX..(t + 1) * NMAX].iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn importance_scales_score() {
+        let mut inp = packed();
+        let raw1 = score_cpu(&inp);
+        inp.w[0] = 4.0; // double task 0's importance (was 2.0)
+        let raw2 = score_cpu(&inp);
+        // Score away from current node scales with w (mig term constant).
+        let gain1 = raw1.s[0];
+        let gain2 = raw2.s[0];
+        assert!(gain2 > gain1 * 1.5, "w doubling: {gain1} -> {gain2}");
+    }
+
+    #[test]
+    fn node_stats_attracts_demand_to_pages() {
+        let (demand, rho, imb) = node_stats_cpu(&packed());
+        assert!(demand[0] > 0.9, "task 0's intensity mostly on node 0");
+        assert!(rho[0] > 0.0);
+        assert!(imb > 0.0);
+    }
+
+    #[test]
+    fn saturated_node_is_finite() {
+        let mut inp = packed();
+        inp.u[0] = 1e9;
+        let raw = score_cpu(&inp);
+        assert!(raw.s.iter().all(|x| x.is_finite()));
+        assert!(raw.c.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,506 @@
+//! The Reporter — Algorithm 2 of the paper.
+//!
+//! > "Repeat until the runtime monitoring mechanism stops: receive data
+//! >  and filter it, collect NUMA-specific data; if loading of the system
+//! >  is unbalanced or behavior of the processes changed or a powerful
+//! >  core [freed], compute the run-time speedup factor, sort the process
+//! >  NUMA list by it, compute the contention degradation factor, sort
+//! >  the process NUMA list by it, send the signal to trigger schedule."
+//!
+//! Concretely: the Reporter differences successive Monitor snapshots to
+//! estimate per-node controller demand (from numastat deltas) and
+//! per-task memory intensity (demand attributed by page share × CPU
+//! rate), smooths them with EWMAs, detects the three trigger conditions,
+//! and — when triggered — builds a `ScoreProblem`, scores it (AOT PJRT
+//! artifact or the pure-Rust fallback), and emits a `Report` with the
+//! sorted process NUMA lists for the Scheduler.
+
+pub mod factors;
+
+use std::collections::BTreeMap;
+
+use crate::monitor::Snapshot;
+use crate::runtime::pack::{pack, unpack, ScoreProblem, TaskRow};
+use crate::runtime::{ScoreOutputs, ScoringEngine};
+use crate::util::ewma::Ewma;
+
+/// Why the Reporter fired (Algorithm 2's condition).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Triggers {
+    /// Node demand imbalance above threshold.
+    pub unbalanced: bool,
+    /// A task's memory intensity or placement changed materially.
+    pub behavior_changed: bool,
+    /// A low-demand node has free capacity ("powerful core").
+    pub powerful_core: bool,
+}
+
+impl Triggers {
+    pub fn any(&self) -> bool {
+        self.unbalanced || self.behavior_changed || self.powerful_core
+    }
+}
+
+/// One entry of the sorted process NUMA list handed to the Scheduler.
+#[derive(Clone, Debug)]
+pub struct RankedTask {
+    pub pid: i32,
+    pub comm: String,
+    pub node: usize,
+    pub threads: i64,
+    pub importance: f64,
+    /// Estimated controller demand, GB/s.
+    pub mem_intensity: f64,
+    /// Contention degradation factor at the current placement.
+    pub degradation: f64,
+    /// Best candidate node and its speedup score.
+    pub best_node: usize,
+    pub best_score: f64,
+    /// Full per-node score row.
+    pub scores: Vec<f64>,
+    /// Resident pages (sticky-page migration sizing).
+    pub rss_pages: u64,
+    pub pages_per_node: Vec<u64>,
+}
+
+/// The Reporter's output — Algorithm 2's "signal to trigger schedule".
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub t_ms: f64,
+    pub triggers: Triggers,
+    /// Tasks sorted by importance-weighted speedup factor (descending) —
+    /// "sorting the process NUMA list by multi-core speedup factor".
+    pub by_speedup: Vec<RankedTask>,
+    /// Pids sorted by contention degradation factor (descending) —
+    /// "sorting the process NUMA list by contention degradation factor".
+    pub by_degradation: Vec<i32>,
+    /// Node demand estimate, GB/s.
+    pub node_demand: Vec<f64>,
+    /// Node demand imbalance (max-min)/mean.
+    pub imbalance: f64,
+}
+
+/// Per-pid tracked state (EWMA-smoothed estimates).
+struct Tracked {
+    cpu_ms_prev: u64,
+    node_prev: usize,
+    cpu_rate: Ewma,
+    intensity: Ewma,
+    /// Samples seen — behavior-change detection waits for the EWMAs to
+    /// prime (the ramp-up itself must not read as a phase change).
+    samples: u32,
+}
+
+/// Samples before behavior-change detection arms.
+const PRIME_SAMPLES: u32 = 6;
+
+/// Scoring backend selection.
+pub enum Backend {
+    /// Pure-Rust mirror of the kernel math.
+    Cpu,
+    /// AOT PJRT artifact (the three-layer hot path).
+    Pjrt(Box<ScoringEngine>),
+}
+
+/// The Reporter.
+pub struct Reporter {
+    pub backend: Backend,
+    /// Importance weights by comm (user-space knowledge the kernel lacks).
+    pub importance: BTreeMap<String, f64>,
+    /// Trigger thresholds (from `SchedulerConfig`).
+    pub imbalance_threshold: f64,
+    /// Relative intensity change that counts as "behavior changed".
+    pub behavior_delta: f64,
+    /// Node utilization below which a node offers "powerful cores".
+    pub powerful_rho: f64,
+    /// SLIT distance matrix and bandwidths (from Monitor discovery/config).
+    pub distance: Vec<Vec<f64>>,
+    pub bandwidth: Vec<f64>,
+
+    tracked: BTreeMap<i32, Tracked>,
+    node_served_prev: Vec<u64>,
+    t_prev_ms: f64,
+    half_life: f64,
+    /// Set true whenever a fresh pid appears or one vanishes.
+    roster_changed: bool,
+}
+
+impl Reporter {
+    pub fn new(backend: Backend, distance: Vec<Vec<f64>>, bandwidth: Vec<f64>) -> Self {
+        assert_eq!(distance.len(), bandwidth.len());
+        Self {
+            backend,
+            importance: BTreeMap::new(),
+            imbalance_threshold: 0.35,
+            behavior_delta: 0.30,
+            powerful_rho: 0.25,
+            distance,
+            bandwidth,
+            tracked: BTreeMap::new(),
+            node_served_prev: Vec::new(),
+            t_prev_ms: f64::NAN,
+            half_life: 4.0,
+            roster_changed: false,
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.bandwidth.len()
+    }
+
+    fn weight_of(&self, comm: &str) -> f64 {
+        *self.importance.get(comm).unwrap_or(&1.0)
+    }
+
+    /// Ingest one snapshot. Returns a `Report` when at least two samples
+    /// have been seen (rates need a delta) — the trigger decision is
+    /// recorded inside, the Scheduler decides whether to act.
+    pub fn ingest(&mut self, snap: &Snapshot) -> Option<Report> {
+        let nodes = self.nodes();
+        // ---- node demand from numastat deltas -------------------------
+        let served: Vec<u64> = snap.nodes.iter().map(|n| n.total()).collect();
+        let first = self.t_prev_ms.is_nan();
+        let dt_ms = if first { 0.0 } else { (snap.t_ms - self.t_prev_ms).max(1e-9) };
+        let node_demand: Vec<f64> = if first || self.node_served_prev.len() != nodes {
+            vec![0.0; nodes]
+        } else {
+            served
+                .iter()
+                .zip(&self.node_served_prev)
+                .map(|(&now, &prev)| {
+                    // counter units: demand_GBs * 1000 per virtual ms.
+                    (now.saturating_sub(prev)) as f64 / (dt_ms * 1000.0)
+                })
+                .collect()
+        };
+        self.node_served_prev = served;
+
+        // ---- per-task attribution: mi[t] ------------------------------
+        // Node n's demand is split across tasks proportionally to
+        // pages_on_n × cpu_rate (a task that is asleep attracts nothing).
+        let mut behavior_changed = false;
+        let mut cpu_rate = BTreeMap::new();
+        for task in &snap.tasks {
+            let tr = self.tracked.entry(task.pid).or_insert_with(|| {
+                self.roster_changed = true;
+                Tracked {
+                    cpu_ms_prev: task.cpu_ms,
+                    node_prev: task.node,
+                    cpu_rate: Ewma::with_half_life(self.half_life),
+                    intensity: Ewma::with_half_life(self.half_life),
+                    samples: 0,
+                }
+            });
+            let rate = if first || dt_ms == 0.0 {
+                0.0
+            } else {
+                (task.cpu_ms.saturating_sub(tr.cpu_ms_prev)) as f64 / dt_ms
+            };
+            tr.cpu_ms_prev = task.cpu_ms;
+            let smoothed = tr.cpu_rate.update(rate);
+            cpu_rate.insert(task.pid, smoothed.max(0.0));
+            if tr.node_prev != task.node {
+                behavior_changed = true; // OS moved the task under us
+                tr.node_prev = task.node;
+            }
+        }
+        // Drop vanished pids.
+        let live: Vec<i32> = snap.tasks.iter().map(|t| t.pid).collect();
+        let before = self.tracked.len();
+        self.tracked.retain(|pid, _| live.contains(pid));
+        if self.tracked.len() != before {
+            self.roster_changed = true;
+        }
+
+        let mut mi_new: BTreeMap<i32, f64> = BTreeMap::new();
+        for n in 0..nodes {
+            let weights: Vec<f64> = snap
+                .tasks
+                .iter()
+                .map(|t| {
+                    t.pages_per_node.get(n).copied().unwrap_or(0) as f64
+                        * cpu_rate.get(&t.pid).copied().unwrap_or(0.0)
+                })
+                .collect();
+            let total: f64 = weights.iter().sum();
+            if total <= 0.0 {
+                continue;
+            }
+            for (task, wgt) in snap.tasks.iter().zip(&weights) {
+                *mi_new.entry(task.pid).or_insert(0.0) +=
+                    node_demand[n] * wgt / total;
+            }
+        }
+        for task in &snap.tasks {
+            let tr = self.tracked.get_mut(&task.pid).unwrap();
+            let raw = mi_new.get(&task.pid).copied().unwrap_or(0.0);
+            let prev = tr.intensity.get();
+            let smoothed = tr.intensity.update(raw);
+            tr.samples += 1;
+            if tr.samples > PRIME_SAMPLES
+                && prev > 1e-3
+                && (smoothed - prev).abs() / prev > self.behavior_delta
+            {
+                behavior_changed = true;
+            }
+        }
+
+        self.t_prev_ms = snap.t_ms;
+        if first {
+            return None;
+        }
+
+        // ---- triggers --------------------------------------------------
+        let mean = (node_demand.iter().sum::<f64>() / nodes as f64).max(1e-9);
+        let max = node_demand.iter().copied().fold(f64::MIN, f64::max);
+        let min = node_demand.iter().copied().fold(f64::MAX, f64::min);
+        let imbalance = (max - min) / mean;
+        let rho: Vec<f64> = node_demand
+            .iter()
+            .zip(&self.bandwidth)
+            .map(|(d, b)| d / b)
+            .collect();
+        let triggers = Triggers {
+            unbalanced: imbalance > self.imbalance_threshold,
+            behavior_changed: behavior_changed || self.roster_changed,
+            powerful_core: rho.iter().any(|&r| r < self.powerful_rho)
+                && rho.iter().any(|&r| r > 2.0 * self.powerful_rho),
+        };
+        self.roster_changed = false;
+
+        // ---- score -----------------------------------------------------
+        let problem = ScoreProblem {
+            tasks: snap
+                .tasks
+                .iter()
+                .map(|t| TaskRow {
+                    pid: t.pid,
+                    pages_per_node: t
+                        .pages_per_node
+                        .iter()
+                        .map(|&p| p as f64)
+                        .collect(),
+                    mem_intensity: self.tracked[&t.pid].intensity.get(),
+                    importance: self.weight_of(&t.comm),
+                    node: t.node,
+                })
+                .collect(),
+            distance: self.distance.clone(),
+            node_demand: node_demand.clone(),
+            node_bandwidth: self.bandwidth.clone(),
+        };
+        let outputs = self.score(&problem)?;
+
+        // ---- rank ("sorting the process NUMA list") ---------------------
+        let mut by_speedup: Vec<RankedTask> = snap
+            .tasks
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let scores = outputs.s[i].clone();
+                let (best_node, best_score) = scores
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(n, &s)| (n, s))
+                    .unwrap_or((t.node, 0.0));
+                RankedTask {
+                    pid: t.pid,
+                    comm: t.comm.clone(),
+                    node: t.node,
+                    threads: t.threads,
+                    importance: problem.tasks[i].importance,
+                    mem_intensity: problem.tasks[i].mem_intensity,
+                    degradation: outputs.degradation[i],
+                    best_node,
+                    best_score,
+                    scores,
+                    rss_pages: t.rss_pages,
+                    pages_per_node: t.pages_per_node.clone(),
+                }
+            })
+            .collect();
+        by_speedup.sort_by(|a, b| b.best_score.partial_cmp(&a.best_score).unwrap());
+        let mut by_degradation: Vec<(i32, f64)> = by_speedup
+            .iter()
+            .map(|r| (r.pid, r.degradation))
+            .collect();
+        by_degradation.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+
+        Some(Report {
+            t_ms: snap.t_ms,
+            triggers,
+            by_speedup,
+            by_degradation: by_degradation.into_iter().map(|(p, _)| p).collect(),
+            node_demand,
+            imbalance,
+        })
+    }
+
+    fn score(&self, problem: &ScoreProblem) -> Option<ScoreOutputs> {
+        let t = problem.tasks.len();
+        let n = problem.nodes();
+        if t == 0 {
+            return None;
+        }
+        let packed = pack(problem).ok()?;
+        let raw = match &self.backend {
+            Backend::Cpu => factors::score_cpu(&packed),
+            Backend::Pjrt(engine) => engine.score(&packed).ok()?,
+        };
+        Some(unpack(&raw.s, &raw.dcur, &raw.r, &raw.c, t, n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::monitor::{NodeSample, TaskSample};
+
+    fn snap(t_ms: f64, tasks: Vec<TaskSample>, served: Vec<u64>) -> Snapshot {
+        Snapshot {
+            t_ms,
+            tasks,
+            nodes: served
+                .into_iter()
+                .map(|s| NodeSample { served_local: s, served_remote: 0 })
+                .collect(),
+        }
+    }
+
+    fn task(pid: i32, node: usize, cpu_ms: u64, pages: Vec<u64>) -> TaskSample {
+        TaskSample {
+            pid,
+            comm: format!("task{pid}"),
+            node,
+            threads: 1,
+            cpu_ms,
+            rss_pages: pages.iter().sum(),
+            pages_per_node: pages,
+        }
+    }
+
+    fn reporter() -> Reporter {
+        Reporter::new(
+            Backend::Cpu,
+            vec![vec![10.0, 21.0], vec![21.0, 10.0]],
+            vec![12.0, 12.0],
+        )
+    }
+
+    #[test]
+    fn first_snapshot_yields_no_report() {
+        let mut r = reporter();
+        assert!(r
+            .ingest(&snap(0.0, vec![task(1, 0, 0, vec![100, 0])], vec![0, 0]))
+            .is_none());
+    }
+
+    #[test]
+    fn estimates_node_demand_from_deltas() {
+        let mut r = reporter();
+        r.ingest(&snap(0.0, vec![task(1, 0, 0, vec![100, 0])], vec![0, 0]));
+        // 10 ms later: node 0 served 40_000 units = 4 GB/s.
+        let rep = r
+            .ingest(&snap(10.0, vec![task(1, 0, 10, vec![100, 0])], vec![40_000, 0]))
+            .expect("report");
+        assert!((rep.node_demand[0] - 4.0).abs() < 1e-9, "{:?}", rep.node_demand);
+        assert_eq!(rep.node_demand[1], 0.0);
+        assert!(rep.imbalance > 1.9, "one-sided load is imbalanced");
+        assert!(rep.triggers.unbalanced);
+    }
+
+    #[test]
+    fn attributes_intensity_to_the_active_task() {
+        let mut r = reporter();
+        let t0 = vec![
+            task(1, 0, 0, vec![100, 0]),   // busy task
+            task(2, 0, 0, vec![100, 0]),   // idle task (no cpu delta)
+        ];
+        r.ingest(&snap(0.0, t0, vec![0, 0]));
+        let t1 = vec![
+            task(1, 0, 10, vec![100, 0]),
+            task(2, 0, 0, vec![100, 0]),
+        ];
+        let rep = r.ingest(&snap(10.0, t1, vec![20_000, 0])).unwrap();
+        let r1 = rep.by_speedup.iter().find(|x| x.pid == 1).unwrap();
+        let r2 = rep.by_speedup.iter().find(|x| x.pid == 2).unwrap();
+        assert!(
+            r1.mem_intensity > 10.0 * r2.mem_intensity.max(1e-12),
+            "busy task should own the demand: {} vs {}",
+            r1.mem_intensity,
+            r2.mem_intensity
+        );
+    }
+
+    #[test]
+    fn misplaced_important_task_ranks_first() {
+        let mut r = reporter();
+        r.importance.insert("task1".into(), 5.0);
+        // Task 1: on node 1, pages on node 0 (misplaced, important).
+        // Task 2: on node 0, pages on node 0 (fine).
+        let mk = |cpu: u64| {
+            vec![
+                task(1, 1, cpu, vec![500, 0]),
+                task(2, 0, cpu, vec![500, 0]),
+            ]
+        };
+        r.ingest(&snap(0.0, mk(0), vec![0, 0]));
+        let rep = r.ingest(&snap(10.0, mk(10), vec![30_000, 0])).unwrap();
+        assert_eq!(rep.by_speedup[0].pid, 1);
+        assert_eq!(rep.by_speedup[0].best_node, 0, "wants to go to its pages");
+        assert!(rep.by_speedup[0].best_score > 0.0);
+        // Degradation ranking also puts the remote task first.
+        assert_eq!(rep.by_degradation[0], 1);
+    }
+
+    #[test]
+    fn behavior_change_triggers() {
+        let mut r = reporter();
+        let mk = |cpu, pages| vec![task(1, 0, cpu, pages)];
+        r.ingest(&snap(0.0, mk(0, vec![100, 0]), vec![0, 0]));
+        let rep = r.ingest(&snap(10.0, mk(10, vec![100, 0]), vec![10_000, 0])).unwrap();
+        // First report: roster just changed (new pid) -> behavior trigger.
+        assert!(rep.triggers.behavior_changed);
+        // Steady state: no triggers.
+        let rep = r
+            .ingest(&snap(20.0, mk(20, vec![100, 0]), vec![20_000, 0]))
+            .unwrap();
+        assert!(!rep.triggers.behavior_changed, "steady state misfires");
+        // Node switch (OS balancer moved it) -> behavior trigger.
+        let moved = vec![task(1, 1, 30, vec![100, 0])];
+        let rep = r.ingest(&snap(30.0, moved, vec![30_000, 0])).unwrap();
+        assert!(rep.triggers.behavior_changed);
+    }
+
+    #[test]
+    fn powerful_core_trigger_needs_asymmetry() {
+        let mut r = reporter();
+        let mk = |cpu| vec![task(1, 0, cpu, vec![100, 100])];
+        r.ingest(&snap(0.0, mk(0), vec![0, 0]));
+        // Node 0 hot (rho=0.8), node 1 idle (rho=0.05): powerful core free.
+        let rep = r
+            .ingest(&snap(10.0, mk(10), vec![96_000, 6_000]))
+            .unwrap();
+        assert!(rep.triggers.powerful_core);
+        // Both busy: no powerful core.
+        let rep = r
+            .ingest(&snap(20.0, mk(20), vec![192_000, 102_000]))
+            .unwrap();
+        assert!(!rep.triggers.powerful_core);
+    }
+
+    #[test]
+    fn dead_pids_are_dropped() {
+        let mut r = reporter();
+        r.ingest(&snap(0.0, vec![task(1, 0, 0, vec![10, 0])], vec![0, 0]));
+        r.ingest(&snap(10.0, vec![task(1, 0, 5, vec![10, 0])], vec![100, 0]));
+        // Task 1 exits; task 2 appears.
+        let rep = r
+            .ingest(&snap(20.0, vec![task(2, 1, 0, vec![0, 10])], vec![200, 0]))
+            .unwrap();
+        assert_eq!(rep.by_speedup.len(), 1);
+        assert_eq!(rep.by_speedup[0].pid, 2);
+        assert!(rep.triggers.behavior_changed, "roster change flagged");
+    }
+}

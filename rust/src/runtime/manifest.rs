@@ -1,0 +1,159 @@
+//! Parser for `artifacts/manifest.txt` — the contract emitted by
+//! `python/compile/aot.py`. The runtime refuses to load artifacts whose
+//! shapes or model constants disagree with this binary's compiled-in
+//! expectations (a silent mismatch would corrupt every scoring epoch).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub tmax: usize,
+    pub nmax: usize,
+    pub block_t: usize,
+    pub alpha: f64,
+    pub beta: f64,
+    pub gamma: f64,
+    pub d_local: f64,
+    pub rho_max: f64,
+    pub vmem_bytes_per_step: u64,
+    /// entry name -> (inputs, outputs)
+    pub entries: BTreeMap<String, (usize, usize)>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut m = Manifest::default();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some((key, val)) = line.split_once('=') else {
+                return Err(format!("bad manifest line: {line:?}"));
+            };
+            let key = key.trim();
+            let val = val.trim();
+            match key {
+                "tmax" => m.tmax = parse_num(val)?,
+                "nmax" => m.nmax = parse_num(val)?,
+                "block_t" => m.block_t = parse_num(val)?,
+                "alpha" => m.alpha = parse_f(val)?,
+                "beta" => m.beta = parse_f(val)?,
+                "gamma" => m.gamma = parse_f(val)?,
+                "d_local" => m.d_local = parse_f(val)?,
+                "rho_max" => m.rho_max = parse_f(val)?,
+                "vmem_bytes_per_step" => m.vmem_bytes_per_step = parse_num(val)? as u64,
+                "entry" => {
+                    // "placement_score inputs=8 outputs=4"
+                    let mut it = val.split_whitespace();
+                    let name = it.next().ok_or("entry missing name")?.to_string();
+                    let mut inputs = 0;
+                    let mut outputs = 0;
+                    for tok in it {
+                        if let Some(v) = tok.strip_prefix("inputs=") {
+                            inputs = parse_num(v)?;
+                        } else if let Some(v) = tok.strip_prefix("outputs=") {
+                            outputs = parse_num(v)?;
+                        }
+                    }
+                    m.entries.insert(name, (inputs, outputs));
+                }
+                _ => {} // forward-compatible: ignore unknown keys
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn load(dir: &Path) -> Result<Self, String> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Assert the artifact contract matches this binary's constants.
+    pub fn check(&self) -> Result<(), String> {
+        use super::pack::{NMAX, TMAX};
+        if self.tmax != TMAX || self.nmax != NMAX {
+            return Err(format!(
+                "artifact shape ({}, {}) != binary ({TMAX}, {NMAX}); re-run `make artifacts`",
+                self.tmax, self.nmax
+            ));
+        }
+        if (self.d_local - 10.0).abs() > 1e-9 {
+            return Err("artifact d_local != 10".into());
+        }
+        if !self.entries.contains_key("placement_score") {
+            return Err("manifest missing placement_score entry".into());
+        }
+        Ok(())
+    }
+}
+
+fn parse_num(s: &str) -> Result<usize, String> {
+    s.parse().map_err(|_| format!("bad number {s:?}"))
+}
+
+fn parse_f(s: &str) -> Result<f64, String> {
+    s.parse().map_err(|_| format!("bad float {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# numasched AOT manifest
+tmax = 64
+nmax = 8
+block_t = 16
+alpha = 1.0
+beta = 1.0
+gamma = 0.02
+d_local = 10.0
+rho_max = 0.95
+vmem_bytes_per_step = 5000
+entry = placement_score inputs=8 outputs=4
+entry = node_stats inputs=3 outputs=3
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.tmax, 64);
+        assert_eq!(m.nmax, 8);
+        assert_eq!(m.gamma, 0.02);
+        assert_eq!(m.entries["placement_score"], (8, 4));
+        assert_eq!(m.entries["node_stats"], (3, 3));
+        assert!(m.check().is_ok());
+    }
+
+    #[test]
+    fn check_rejects_shape_mismatch() {
+        let mut m = Manifest::parse(SAMPLE).unwrap();
+        m.tmax = 32;
+        assert!(m.check().is_err());
+    }
+
+    #[test]
+    fn check_requires_placement_entry() {
+        let mut m = Manifest::parse(SAMPLE).unwrap();
+        m.entries.remove("placement_score");
+        assert!(m.check().is_err());
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(Manifest::parse("tmax 64").is_err());
+        assert!(Manifest::parse("tmax = abc").is_err());
+    }
+
+    #[test]
+    fn unknown_keys_ignored() {
+        let m = Manifest::parse("tmax = 64\nnmax = 8\nfuture_knob = 3\n\
+            d_local = 10.0\nentry = placement_score inputs=8 outputs=4")
+            .unwrap();
+        assert!(m.check().is_ok());
+    }
+}

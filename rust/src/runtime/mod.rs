@@ -1,0 +1,13 @@
+//! Runtime bridge: load AOT-compiled HLO artifacts and execute them from
+//! the Rust hot path via the `xla` crate's PJRT CPU client.
+//!
+//! * [`pack`] — the padding contract mirroring `model.pad_inputs`;
+//! * [`manifest`] — artifact contract checking;
+//! * [`engine`] — compile-once / execute-many scoring engine.
+
+pub mod engine;
+pub mod manifest;
+pub mod pack;
+
+pub use engine::{RawNodeStats, RawScores, ScoringEngine};
+pub use pack::{pack, unpack, PackedInputs, ScoreOutputs, ScoreProblem, TaskRow};

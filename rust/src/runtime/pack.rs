@@ -1,0 +1,253 @@
+//! Packing the Reporter's view into the AOT artifact's padded tensors.
+//!
+//! The artifact (`placement_score.hlo.txt`) is compiled once for a fixed
+//! `(TMAX, NMAX)` problem; this module owns the padding contract (it
+//! mirrors `python/compile/model.py::pad_inputs` exactly — the
+//! cross-layer test in `rust/tests/hlo_equivalence.rs` pins them
+//! together).
+
+/// Maximum live tasks per scoring epoch (must match `params.TMAX`).
+pub const TMAX: usize = 64;
+/// Maximum NUMA nodes (must match `params.NMAX`).
+pub const NMAX: usize = 8;
+
+/// SLIT local distance.
+pub const D_LOCAL: f32 = 10.0;
+/// Utilization clip (mirror of `params.RHO_MAX`).
+pub const RHO_MAX: f32 = 0.95;
+
+/// One task's row in the scoring problem.
+#[derive(Clone, Debug)]
+pub struct TaskRow {
+    pub pid: i32,
+    /// Page heat per node (resident pages, optionally heat-weighted).
+    pub pages_per_node: Vec<f64>,
+    /// Estimated controller demand of this task, GB/s.
+    pub mem_intensity: f64,
+    /// User-space importance weight.
+    pub importance: f64,
+    /// Current home node.
+    pub node: usize,
+}
+
+/// The unpadded scoring problem assembled by the Reporter.
+#[derive(Clone, Debug)]
+pub struct ScoreProblem {
+    pub tasks: Vec<TaskRow>,
+    /// SLIT distance matrix, row-major `nodes x nodes`.
+    pub distance: Vec<Vec<f64>>,
+    /// Controller demand per node, GB/s.
+    pub node_demand: Vec<f64>,
+    /// Controller bandwidth per node, GB/s.
+    pub node_bandwidth: Vec<f64>,
+}
+
+impl ScoreProblem {
+    pub fn nodes(&self) -> usize {
+        self.distance.len()
+    }
+}
+
+/// Flat padded tensors in artifact argument order.
+#[derive(Clone, Debug, Default)]
+pub struct PackedInputs {
+    pub a: Vec<f32>,    // (TMAX, NMAX)
+    pub d: Vec<f32>,    // (NMAX, NMAX)
+    pub mi: Vec<f32>,   // (TMAX, 1)
+    pub w: Vec<f32>,    // (TMAX, 1)
+    pub u: Vec<f32>,    // (1, NMAX)
+    pub b: Vec<f32>,    // (1, NMAX)
+    pub cur: Vec<f32>,  // (TMAX, NMAX)
+    pub mask: Vec<f32>, // (TMAX, 1)
+}
+
+/// Pad a problem to the artifact shape. Padding follows
+/// `model.pad_inputs`: fake nodes get max distance, demand `RHO_MAX`, and
+/// bandwidth 1 so they never attract tasks; padding tasks carry mask 0
+/// and sit one-hot on node 0.
+pub fn pack(p: &ScoreProblem) -> Result<PackedInputs, String> {
+    let t = p.tasks.len();
+    let n = p.nodes();
+    if t > TMAX {
+        return Err(format!("{t} tasks exceed TMAX={TMAX}"));
+    }
+    if n == 0 || n > NMAX {
+        return Err(format!("{n} nodes out of 1..={NMAX}"));
+    }
+    let mut out = PackedInputs {
+        a: vec![0.0; TMAX * NMAX],
+        d: vec![4.0 * D_LOCAL; NMAX * NMAX],
+        mi: vec![0.0; TMAX],
+        w: vec![0.0; TMAX],
+        u: vec![RHO_MAX; NMAX],
+        b: vec![1.0; NMAX],
+        cur: vec![0.0; TMAX * NMAX],
+        mask: vec![0.0; TMAX],
+    };
+    for i in 0..NMAX {
+        out.d[i * NMAX + i] = D_LOCAL;
+    }
+    for i in 0..n {
+        for j in 0..n {
+            out.d[i * NMAX + j] = p.distance[i][j] as f32;
+        }
+        out.u[i] = p.node_demand[i] as f32;
+        out.b[i] = p.node_bandwidth[i] as f32;
+    }
+    // Padding tasks sit on node 0 (mask 0 zeroes their outputs anyway,
+    // but cur must stay one-hot for the kernel's dot products).
+    for ti in 0..TMAX {
+        out.cur[ti * NMAX] = 1.0;
+    }
+    for (ti, task) in p.tasks.iter().enumerate() {
+        if task.pages_per_node.len() != n {
+            return Err(format!("task {ti} pages len != nodes"));
+        }
+        if task.node >= n {
+            return Err(format!("task {ti} node {} out of range", task.node));
+        }
+        for ni in 0..n {
+            out.a[ti * NMAX + ni] = task.pages_per_node[ni] as f32;
+        }
+        out.mi[ti] = task.mem_intensity as f32;
+        out.w[ti] = task.importance as f32;
+        out.cur[ti * NMAX] = 0.0;
+        out.cur[ti * NMAX + task.node] = 1.0;
+        out.mask[ti] = 1.0;
+    }
+    Ok(out)
+}
+
+/// Scoring outputs, unpadded back to the live problem size.
+#[derive(Clone, Debug)]
+pub struct ScoreOutputs {
+    /// (tasks, nodes) placement scores.
+    pub s: Vec<Vec<f64>>,
+    /// Contention degradation factor per task.
+    pub degradation: Vec<f64>,
+    /// Mean access distance per (task, node).
+    pub r: Vec<Vec<f64>>,
+    /// Contention penalty per (task, node).
+    pub c: Vec<Vec<f64>>,
+}
+
+/// Slice padded f32 outputs back down to `(t, n)`.
+pub fn unpack(
+    s: &[f32],
+    dcur: &[f32],
+    r: &[f32],
+    c: &[f32],
+    t: usize,
+    n: usize,
+) -> ScoreOutputs {
+    let grab = |flat: &[f32]| -> Vec<Vec<f64>> {
+        (0..t)
+            .map(|ti| (0..n).map(|ni| flat[ti * NMAX + ni] as f64).collect())
+            .collect()
+    };
+    ScoreOutputs {
+        s: grab(s),
+        degradation: (0..t).map(|ti| dcur[ti] as f64).collect(),
+        r: grab(r),
+        c: grab(c),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn problem() -> ScoreProblem {
+        ScoreProblem {
+            tasks: vec![
+                TaskRow {
+                    pid: 1,
+                    pages_per_node: vec![100.0, 0.0],
+                    mem_intensity: 1.5,
+                    importance: 2.0,
+                    node: 0,
+                },
+                TaskRow {
+                    pid: 2,
+                    pages_per_node: vec![30.0, 70.0],
+                    mem_intensity: 0.5,
+                    importance: 1.0,
+                    node: 1,
+                },
+            ],
+            distance: vec![vec![10.0, 21.0], vec![21.0, 10.0]],
+            node_demand: vec![4.0, 1.0],
+            node_bandwidth: vec![12.0, 12.0],
+        }
+    }
+
+    #[test]
+    fn pack_shapes_and_mask() {
+        let p = pack(&problem()).unwrap();
+        assert_eq!(p.a.len(), TMAX * NMAX);
+        assert_eq!(p.d.len(), NMAX * NMAX);
+        assert_eq!(p.mask[..2], [1.0, 1.0]);
+        assert_eq!(p.mask[2], 0.0);
+        assert_eq!(p.a[0], 100.0);
+        assert_eq!(p.a[NMAX + 1], 70.0);
+    }
+
+    #[test]
+    fn pack_cur_is_one_hot_everywhere() {
+        let p = pack(&problem()).unwrap();
+        for ti in 0..TMAX {
+            let row = &p.cur[ti * NMAX..(ti + 1) * NMAX];
+            assert_eq!(row.iter().sum::<f32>(), 1.0, "row {ti}");
+        }
+        assert_eq!(p.cur[1], 0.0);
+        assert_eq!(p.cur[NMAX + 1], 1.0); // task 1 on node 1
+    }
+
+    #[test]
+    fn pack_padding_nodes_are_repellent() {
+        let p = pack(&problem()).unwrap();
+        // Fake node 5: saturated demand, unit bandwidth, max distance.
+        assert_eq!(p.u[5], RHO_MAX);
+        assert_eq!(p.b[5], 1.0);
+        assert_eq!(p.d[5 * NMAX + 5], D_LOCAL);
+        assert_eq!(p.d[2], 4.0 * D_LOCAL);
+    }
+
+    #[test]
+    fn pack_rejects_oversize() {
+        let mut p = problem();
+        p.tasks = (0..TMAX + 1)
+            .map(|i| TaskRow {
+                pid: i as i32,
+                pages_per_node: vec![1.0, 1.0],
+                mem_intensity: 0.1,
+                importance: 1.0,
+                node: 0,
+            })
+            .collect();
+        assert!(pack(&p).is_err());
+    }
+
+    #[test]
+    fn pack_rejects_bad_rows() {
+        let mut p = problem();
+        p.tasks[0].pages_per_node = vec![1.0];
+        assert!(pack(&p).is_err());
+        let mut p = problem();
+        p.tasks[0].node = 7;
+        assert!(pack(&p).is_err());
+    }
+
+    #[test]
+    fn unpack_slices_correctly() {
+        let mut s = vec![0.0f32; TMAX * NMAX];
+        s[0] = 1.0;
+        s[NMAX + 1] = 2.0;
+        let dcur = vec![0.5f32; TMAX];
+        let out = unpack(&s, &dcur, &s, &s, 2, 2);
+        assert_eq!(out.s.len(), 2);
+        assert_eq!(out.s[0][0], 1.0);
+        assert_eq!(out.s[1][1], 2.0);
+        assert_eq!(out.degradation, vec![0.5, 0.5]);
+    }
+}

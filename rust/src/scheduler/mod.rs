@@ -1,0 +1,441 @@
+//! The user-space memory scheduler — Algorithm 3 of the paper.
+//!
+//! > "Compute the number of powerful-core candidates based on the
+//! >  load-balanced memory policy; retrieve suitable processes to be
+//! >  scheduled on powerful cores from the NUMA list; set static CPU pins
+//! >  from manual input of the administrator; if retrieved processes !=
+//! >  current processes on powerful cores, migrate the processes; if the
+//! >  current resource-contention degradation is too big, calculate the
+//! >  degradation factor to minimize it and migrate the processes and
+//! >  their sticky pages."
+//!
+//! The scheduler consumes the Reporter's ranked NUMA lists and issues
+//! process moves / sticky-page migrations through the `MachineControl`
+//! trait (implemented by the simulator; a live-host implementation would
+//! wrap `sched_setaffinity`/`migrate_pages(2)`).
+
+pub mod powerful;
+
+use std::collections::BTreeMap;
+
+use crate::config::{SchedulerConfig, StaticPin};
+use crate::reporter::Report;
+
+/// Control surface the scheduler drives.
+pub trait MachineControl {
+    fn move_process(&mut self, pid: i32, node: usize);
+    /// Migrate up to `budget` pages of `pid` toward `node`; returns moved.
+    fn migrate_pages(&mut self, pid: i32, node: usize, budget: u64) -> u64;
+}
+
+impl MachineControl for crate::sim::Machine {
+    fn move_process(&mut self, pid: i32, node: usize) {
+        // User-scheduler moves carry affinity (`sched_setaffinity` to the
+        // node's cpulist): the NUMA-blind OS balancer must not scatter
+        // the task again one tick later. The affinity is re-decided every
+        // scheduling epoch, so this stays adaptive — unlike Static
+        // Tuning's one-shot pins.
+        crate::sim::Machine::pin_process(self, pid, node);
+    }
+    fn migrate_pages(&mut self, pid: i32, node: usize, budget: u64) -> u64 {
+        crate::sim::Machine::migrate_pages(self, pid, node, budget)
+    }
+}
+
+/// Why a decision was taken (logged, rendered by the CLI).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Reason {
+    /// Admin static pin enforcement.
+    StaticPin,
+    /// Importance-weighted speedup-factor move onto a powerful node.
+    Speedup,
+    /// Contention degradation over threshold — sticky pages follow.
+    Contention,
+}
+
+/// One executed decision.
+#[derive(Clone, Debug)]
+pub struct Decision {
+    pub t_ms: f64,
+    pub pid: i32,
+    pub comm: String,
+    pub from: usize,
+    pub to: usize,
+    pub sticky_pages: u64,
+    pub reason: Reason,
+}
+
+/// The user-space scheduler.
+pub struct UserScheduler {
+    /// Hysteresis: minimum predicted gain to act.
+    pub min_gain: f64,
+    /// Degradation above which sticky pages migrate with the process.
+    pub degradation_threshold: f64,
+    /// Per-pid cooldown between migrations, virtual ms.
+    pub cooldown_ms: f64,
+    /// Fraction of a process's rss treated as sticky (hot) pages.
+    pub sticky_frac: f64,
+    /// Maximum process moves per scheduling epoch (migration storms cost
+    /// more than they recover).
+    pub max_moves_per_epoch: usize,
+    /// Admin static pins: comm -> node.
+    pub pins: BTreeMap<String, usize>,
+    /// Cores per NUMA node (CPU-capacity guard for powerful-core slots).
+    pub cores_per_node: usize,
+    /// Decision log.
+    pub decisions: Vec<Decision>,
+
+    last_move_ms: BTreeMap<i32, f64>,
+    /// Tasks this scheduler has placed: pid -> (node, threads). Only
+    /// these count against a node's powerful-core slots — unplaced load
+    /// floats and the OS balancer spreads it around our pins.
+    placed: BTreeMap<i32, (usize, i64)>,
+}
+
+impl UserScheduler {
+    pub fn new(cfg: &SchedulerConfig) -> Self {
+        Self {
+            min_gain: cfg.min_gain,
+            degradation_threshold: cfg.degradation_threshold,
+            cooldown_ms: cfg.migration_cooldown_ms as f64,
+            sticky_frac: 0.7,
+            max_moves_per_epoch: 6,
+            pins: cfg
+                .static_pins
+                .iter()
+                .map(|StaticPin { process, node }| (process.clone(), *node))
+                .collect(),
+            cores_per_node: 10,
+            decisions: Vec::new(),
+            last_move_ms: BTreeMap::new(),
+            placed: BTreeMap::new(),
+        }
+    }
+
+    /// Apply one Reporter signal (one scheduling epoch). Returns the
+    /// decisions executed this epoch.
+    pub fn apply(&mut self, report: &Report, ctl: &mut dyn MachineControl) -> Vec<Decision> {
+        let mut executed = Vec::new();
+        let t = report.t_ms;
+
+        // 1. Static pins always hold (Algorithm 3 consults them first).
+        for task in &report.by_speedup {
+            if let Some(&node) = self.pins.get(&task.comm) {
+                if task.node != node {
+                    ctl.move_process(task.pid, node);
+                    // Pinned memory follows the pin entirely.
+                    let moved = ctl.migrate_pages(task.pid, node, task.rss_pages);
+                    let d = Decision {
+                        t_ms: t,
+                        pid: task.pid,
+                        comm: task.comm.clone(),
+                        from: task.node,
+                        to: node,
+                        sticky_pages: moved,
+                        reason: Reason::StaticPin,
+                    };
+                    executed.push(d.clone());
+                    self.decisions.push(d);
+                    self.last_move_ms.insert(task.pid, t);
+                }
+            }
+        }
+
+        if !report.triggers.any() {
+            return executed;
+        }
+
+        // 2. Powerful-core slots under the load-balanced policy: track
+        //    projected controller demand AND the threads *we* have pinned
+        //    per node — a node whose cores are already committed to
+        //    placed tasks is not powerful, but floating (unplaced) load
+        //    doesn't count: the OS balancer spreads it around our pins.
+        let nodes = report.node_demand.len();
+        let mut projected = report.node_demand.clone();
+        let live: Vec<i32> = report.by_speedup.iter().map(|t| t.pid).collect();
+        self.placed.retain(|pid, _| live.contains(pid));
+        let mut pinned_threads = vec![0i64; nodes];
+        for (&_pid, &(node, threads)) in &self.placed {
+            if node < nodes {
+                pinned_threads[node] += threads;
+            }
+        }
+        let total_threads: i64 = report.by_speedup.iter().map(|t| t.threads).sum();
+        // Pins on one node may not exceed the balanced per-node share
+        // (plus a small slack) — that bounds the powerful-core slots.
+        let thread_cap = ((total_threads as f64 / nodes as f64).ceil()
+            + self.cores_per_node as f64 * 0.2)
+            .ceil() as i64;
+
+        // 3. Walk the NUMA list sorted by weighted speedup factor.
+        let mut moves = 0usize;
+        for task in &report.by_speedup {
+            if moves >= self.max_moves_per_epoch {
+                break;
+            }
+            if self.pins.contains_key(&task.comm) {
+                continue; // pinned tasks never auto-move
+            }
+            // Hysteresis scales with the freight: migrating a process
+            // that drags a 300k-page buffer pool must promise much more
+            // than moving a 3k-page worker (Algorithm 3's contention
+            // test is about *net* gain).
+            let needed = self.min_gain * (1.0 + task.rss_pages as f64 / 100_000.0);
+            if task.best_node == task.node || task.best_score < needed {
+                continue;
+            }
+            if let Some(&last) = self.last_move_ms.get(&task.pid) {
+                if t - last < self.cooldown_ms {
+                    continue;
+                }
+            }
+            // Don't stampede one node: each accepted move adds its demand
+            // to the target's projection; skip if the target would become
+            // the new hottest node.
+            let target = task.best_node;
+            let new_target_demand = projected[target] + task.mem_intensity;
+            let hottest = projected
+                .iter()
+                .copied()
+                .fold(f64::NEG_INFINITY, f64::max);
+            if new_target_demand > hottest.max(1e-9) * 1.10 && moves > 0 {
+                continue;
+            }
+            // CPU-capacity guard: the target must have powerful-core
+            // slots left for this task's threads.
+            if pinned_threads[target] + task.threads > thread_cap {
+                continue;
+            }
+
+            ctl.move_process(task.pid, target);
+            // Sticky pages move along when contention degradation is high
+            // (Algorithm 3's second branch).
+            let sticky = if task.degradation > self.degradation_threshold {
+                let budget = (task.rss_pages as f64 * self.sticky_frac) as u64;
+                ctl.migrate_pages(task.pid, target, budget)
+            } else {
+                0
+            };
+            projected[target] = new_target_demand;
+            projected[task.node] =
+                (projected[task.node] - task.mem_intensity).max(0.0);
+            if let Some(&(old_node, threads)) = self.placed.get(&task.pid) {
+                if old_node < nodes {
+                    pinned_threads[old_node] -= threads;
+                }
+            }
+            pinned_threads[target] += task.threads;
+            self.placed.insert(task.pid, (target, task.threads));
+            let d = Decision {
+                t_ms: t,
+                pid: task.pid,
+                comm: task.comm.clone(),
+                from: task.node,
+                to: target,
+                sticky_pages: sticky,
+                reason: if sticky > 0 { Reason::Contention } else { Reason::Speedup },
+            };
+            executed.push(d.clone());
+            self.decisions.push(d);
+            self.last_move_ms.insert(task.pid, t);
+            moves += 1;
+        }
+
+        // 4. Consolidation: a task already on its best node may still be
+        //    dragging remote pages (earlier sticky migration moves only a
+        //    fraction). While its degradation stays high, keep pulling
+        //    pages home — Algorithm 3's "minimize resource contention
+        //    degradation" loop.
+        let consolidate_above = 0.3 * self.degradation_threshold;
+        for task in &report.by_speedup {
+            if task.best_node != task.node || task.degradation <= consolidate_above {
+                continue;
+            }
+            // Scale the bar with the freight, like the move gate: pulling
+            // a giant buffer pool across QPI costs real bandwidth.
+            if task.degradation
+                <= consolidate_above * (1.0 + task.rss_pages as f64 / 100_000.0)
+            {
+                continue;
+            }
+            if let Some(&last) = self.last_move_ms.get(&task.pid) {
+                if t - last < self.cooldown_ms {
+                    continue;
+                }
+            }
+            let remote: u64 = task
+                .pages_per_node
+                .iter()
+                .enumerate()
+                .filter(|&(n, _)| n != task.node)
+                .map(|(_, &p)| p)
+                .sum();
+            if remote * 10 < task.rss_pages.max(1) {
+                continue; // >90% local already
+            }
+            let budget = (remote as f64 * self.sticky_frac).ceil() as u64;
+            let moved = ctl.migrate_pages(task.pid, task.node, budget);
+            if moved > 0 {
+                let d = Decision {
+                    t_ms: t,
+                    pid: task.pid,
+                    comm: task.comm.clone(),
+                    from: task.node,
+                    to: task.node,
+                    sticky_pages: moved,
+                    reason: Reason::Contention,
+                };
+                executed.push(d.clone());
+                self.decisions.push(d);
+                self.last_move_ms.insert(task.pid, t);
+            }
+        }
+        executed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reporter::{RankedTask, Report, Triggers};
+
+    /// Mock control surface recording calls.
+    #[derive(Default)]
+    struct MockCtl {
+        moves: Vec<(i32, usize)>,
+        page_moves: Vec<(i32, usize, u64)>,
+    }
+
+    impl MachineControl for MockCtl {
+        fn move_process(&mut self, pid: i32, node: usize) {
+            self.moves.push((pid, node));
+        }
+        fn migrate_pages(&mut self, pid: i32, node: usize, budget: u64) -> u64 {
+            self.page_moves.push((pid, node, budget));
+            budget
+        }
+    }
+
+    fn ranked(pid: i32, comm: &str, node: usize, best: usize, score: f64, deg: f64) -> RankedTask {
+        RankedTask {
+            pid,
+            comm: comm.into(),
+            node,
+            threads: 1,
+            importance: 1.0,
+            mem_intensity: 1.0,
+            degradation: deg,
+            best_node: best,
+            best_score: score,
+            scores: vec![0.0; 4],
+            rss_pages: 1000,
+            pages_per_node: vec![1000, 0, 0, 0],
+        }
+    }
+
+    fn report(tasks: Vec<RankedTask>, triggered: bool) -> Report {
+        let by_degradation = tasks.iter().map(|t| t.pid).collect();
+        Report {
+            t_ms: 1000.0,
+            triggers: Triggers {
+                unbalanced: triggered,
+                ..Default::default()
+            },
+            by_speedup: tasks,
+            by_degradation,
+            node_demand: vec![4.0, 1.0, 1.0, 1.0],
+            imbalance: 1.0,
+        }
+    }
+
+    fn sched() -> UserScheduler {
+        UserScheduler::new(&crate::config::SchedulerConfig::default())
+    }
+
+    #[test]
+    fn no_trigger_means_no_moves() {
+        let mut s = sched();
+        let mut ctl = MockCtl::default();
+        let rep = report(vec![ranked(1, "a", 0, 1, 5.0, 0.0)], false);
+        let dec = s.apply(&rep, &mut ctl);
+        assert!(dec.is_empty());
+        assert!(ctl.moves.is_empty());
+    }
+
+    #[test]
+    fn moves_high_scoring_task() {
+        let mut s = sched();
+        let mut ctl = MockCtl::default();
+        let rep = report(vec![ranked(1, "a", 0, 2, 5.0, 0.1)], true);
+        let dec = s.apply(&rep, &mut ctl);
+        assert_eq!(dec.len(), 1);
+        assert_eq!(ctl.moves, vec![(1, 2)]);
+        assert!(ctl.page_moves.is_empty(), "low degradation: no sticky pages");
+        assert_eq!(dec[0].reason, Reason::Speedup);
+    }
+
+    #[test]
+    fn sticky_pages_follow_on_high_degradation() {
+        let mut s = sched();
+        let mut ctl = MockCtl::default();
+        let rep = report(vec![ranked(1, "a", 0, 2, 5.0, 0.9)], true);
+        let dec = s.apply(&rep, &mut ctl);
+        assert_eq!(dec[0].reason, Reason::Contention);
+        assert_eq!(ctl.page_moves, vec![(1, 2, 700)]); // sticky_frac of 1000
+    }
+
+    #[test]
+    fn hysteresis_blocks_tiny_gains() {
+        let mut s = sched();
+        let mut ctl = MockCtl::default();
+        let rep = report(vec![ranked(1, "a", 0, 2, 0.01, 0.0)], true);
+        assert!(s.apply(&rep, &mut ctl).is_empty());
+    }
+
+    #[test]
+    fn cooldown_blocks_repeat_moves() {
+        let mut s = sched();
+        let mut ctl = MockCtl::default();
+        let rep = report(vec![ranked(1, "a", 0, 2, 5.0, 0.0)], true);
+        assert_eq!(s.apply(&rep, &mut ctl).len(), 1);
+        // Same report again at the same virtual time: cooldown blocks.
+        let rep2 = report(vec![ranked(1, "a", 2, 0, 5.0, 0.0)], true);
+        assert!(s.apply(&rep2, &mut ctl).is_empty());
+    }
+
+    #[test]
+    fn respects_max_moves_per_epoch() {
+        let mut s = sched();
+        s.max_moves_per_epoch = 2;
+        let mut ctl = MockCtl::default();
+        let tasks: Vec<RankedTask> = (0..6)
+            .map(|i| ranked(i, &format!("t{i}"), 0, 1 + (i as usize % 3), 5.0, 0.0))
+            .collect();
+        let rep = report(tasks, true);
+        assert_eq!(s.apply(&rep, &mut ctl).len(), 2);
+    }
+
+    #[test]
+    fn static_pins_enforced_even_without_trigger() {
+        let mut s = sched();
+        s.pins.insert("mysql".into(), 3);
+        let mut ctl = MockCtl::default();
+        let rep = report(vec![ranked(7, "mysql", 0, 1, 9.0, 0.9)], false);
+        let dec = s.apply(&rep, &mut ctl);
+        assert_eq!(dec.len(), 1);
+        assert_eq!(dec[0].reason, Reason::StaticPin);
+        assert_eq!(ctl.moves, vec![(7, 3)]);
+        // Pinned process never auto-moves afterwards even when triggered.
+        let rep2 = report(vec![ranked(7, "mysql", 3, 1, 9.0, 0.9)], true);
+        let dec2 = s.apply(&rep2, &mut ctl);
+        assert!(dec2.is_empty());
+    }
+
+    #[test]
+    fn stays_put_when_already_best() {
+        let mut s = sched();
+        let mut ctl = MockCtl::default();
+        let rep = report(vec![ranked(1, "a", 2, 2, 9.0, 0.0)], true);
+        assert!(s.apply(&rep, &mut ctl).is_empty());
+    }
+}

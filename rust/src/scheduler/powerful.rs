@@ -1,0 +1,85 @@
+//! Powerful-core candidate computation (Algorithm 3, step 1).
+//!
+//! "Powerful cores" in the paper are cores whose memory node has
+//! headroom: low controller utilization and spare CPU capacity. Under
+//! the load-balanced memory policy the scheduler aims every node at the
+//! mean demand; nodes below it by a margin offer powerful cores, nodes
+//! above it shed work.
+
+/// Per-node capacity assessment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodePower {
+    pub node: usize,
+    /// Demand headroom vs the balanced target, GB/s (positive = spare).
+    pub headroom: f64,
+    /// Powerful-core candidates this node can absorb (scaled estimate).
+    pub slots: usize,
+}
+
+/// Rank nodes by demand headroom under the load-balanced memory policy.
+///
+/// `demand` and `bandwidth` are per node (GB/s); `cores_per_node` caps
+/// how many tasks a node can reasonably absorb.
+pub fn powerful_nodes(
+    demand: &[f64],
+    bandwidth: &[f64],
+    cores_per_node: usize,
+) -> Vec<NodePower> {
+    assert_eq!(demand.len(), bandwidth.len());
+    let n = demand.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let target: f64 = demand.iter().sum::<f64>() / n as f64;
+    let mut out: Vec<NodePower> = (0..n)
+        .map(|i| {
+            // Headroom against both the balanced target and the raw
+            // bandwidth cap (min of the two constraints).
+            let balance_head = target.max(bandwidth[i] * 0.75) - demand[i];
+            let cap_head = bandwidth[i] * 0.90 - demand[i];
+            let headroom = balance_head.min(cap_head);
+            let frac = (headroom / bandwidth[i]).clamp(0.0, 1.0);
+            NodePower {
+                node: i,
+                headroom,
+                slots: (frac * cores_per_node as f64).round() as usize,
+            }
+        })
+        .collect();
+    out.sort_by(|a, b| b.headroom.partial_cmp(&a.headroom).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_node_ranks_first() {
+        let p = powerful_nodes(&[8.0, 1.0, 4.0, 4.0], &[12.0; 4], 10);
+        assert_eq!(p[0].node, 1);
+        assert!(p[0].headroom > p.last().unwrap().headroom);
+        assert_eq!(p.last().unwrap().node, 0);
+    }
+
+    #[test]
+    fn saturated_node_has_no_slots() {
+        let p = powerful_nodes(&[11.9, 0.0], &[12.0, 12.0], 8);
+        let hot = p.iter().find(|x| x.node == 0).unwrap();
+        assert_eq!(hot.slots, 0);
+        let idle = p.iter().find(|x| x.node == 1).unwrap();
+        assert!(idle.slots >= 6, "idle node offers most cores: {idle:?}");
+    }
+
+    #[test]
+    fn balanced_system_has_uniform_headroom() {
+        let p = powerful_nodes(&[4.0; 4], &[12.0; 4], 10);
+        let h0 = p[0].headroom;
+        assert!(p.iter().all(|x| (x.headroom - h0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn empty_input_is_empty() {
+        assert!(powerful_nodes(&[], &[], 4).is_empty());
+    }
+}

@@ -1,0 +1,758 @@
+//! The NUMA machine simulator.
+//!
+//! Epoch-driven (fixed `dt`): each tick prices memory accesses with the
+//! previous tick's controller utilization (lagged fixed point), advances
+//! every thread by `cpu_share * speed`, accumulates new controller
+//! demand, and lets the (NUMA-blind) OS load balancer shuffle threads —
+//! producing exactly the pathologies the paper's user-level scheduler
+//! repairs: threads drifting away from their pages, controllers
+//! saturating while neighbours idle.
+//!
+//! The machine implements `ProcSource` by rendering its state into real
+//! kernel text formats, so the Monitor observes it exactly as it would a
+//! live host.
+
+use std::collections::BTreeMap;
+
+use crate::procfs::{numa_maps, stat, sysnode, ProcSource};
+use crate::topology::NumaTopology;
+use crate::util::rng::Rng;
+
+use super::memctl::MemCtl;
+use super::page::PageMap;
+use super::process::SimProcess;
+use super::task::TaskBehavior;
+
+/// Memory-stall weight: how strongly (normalized) access cost slows a
+/// fully memory-bound thread. Calibrated with `memctl::QUEUE_WEIGHT` so
+/// saturated-remote hits the paper's >90 % degradation (Fig 6).
+pub const MEM_WEIGHT: f64 = 2.5;
+
+/// Peak controller demand of one fully memory-bound thread, GB/s.
+pub const THREAD_PEAK_GBS: f64 = 1.6;
+
+/// Page-migration throughput budget, pages per virtual ms.
+pub const MIG_PAGES_PER_MS: u64 = 4000;
+
+/// Controller traffic charged per migrated page (read + write), GB per page.
+pub const MIG_GB_PER_PAGE: f64 = 2.0 * 4096.0 / 1e9;
+
+/// Where to place a spawning process's threads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// NUMA-blind: globally least-loaded cores (the OS default).
+    LeastLoaded,
+    /// All threads on one node's cores.
+    Node(usize),
+}
+
+/// The simulated machine.
+pub struct Machine {
+    pub topo: NumaTopology,
+    pub now_ms: f64,
+    pub dt_ms: f64,
+    procs: BTreeMap<i32, SimProcess>,
+    ctls: Vec<MemCtl>,
+    /// Run queue per core: (pid, thread index).
+    cores: Vec<Vec<(i32, usize)>>,
+    next_pid: i32,
+    rng: Rng,
+    /// NUMA-blind OS thread balancing (on under every policy; the paper's
+    /// scheduler corrects it rather than replacing the OS).
+    pub os_balance: bool,
+    /// Cumulative per-node access counters (rendered as numastat).
+    numastat: Vec<sysnode::NumaStat>,
+    /// Migration traffic to charge to controllers next tick, GB/s-equiv.
+    mig_charge: Vec<f64>,
+    /// Total process migrations executed (metrics).
+    pub total_migrations: u64,
+    /// Total pages migrated (metrics).
+    pub total_pages_migrated: u64,
+}
+
+impl Machine {
+    pub fn new(topo: NumaTopology, seed: u64) -> Self {
+        topo.validate().expect("invalid topology");
+        let nodes = topo.nodes;
+        let cores = topo.total_cores();
+        Self {
+            ctls: topo.bandwidth_gbs.iter().map(|&b| MemCtl::new(b)).collect(),
+            cores: vec![Vec::new(); cores],
+            topo,
+            now_ms: 0.0,
+            dt_ms: 1.0,
+            procs: BTreeMap::new(),
+            next_pid: 1000,
+            rng: Rng::new(seed),
+            os_balance: true,
+            numastat: vec![sysnode::NumaStat::default(); nodes],
+            mig_charge: vec![0.0; nodes],
+            total_migrations: 0,
+            total_pages_migrated: 0,
+        }
+    }
+
+    // ---------------------------------------------------------------- spawn
+
+    /// Launch a process; returns its pid. Pages are first-touch allocated
+    /// according to the initial thread placement.
+    pub fn spawn(
+        &mut self,
+        comm: &str,
+        behavior: TaskBehavior,
+        importance: f64,
+        nthreads: usize,
+        placement: Placement,
+    ) -> i32 {
+        behavior.validate().expect("invalid behavior");
+        assert!(nthreads > 0, "process needs threads");
+        let pid = self.next_pid;
+        self.next_pid += 1;
+        let mut p = SimProcess::new(pid, comm, behavior, importance, self.now_ms);
+        for t in 0..nthreads {
+            let core = match placement {
+                Placement::LeastLoaded => self.least_loaded_core_global(),
+                Placement::Node(n) => self.least_loaded_core_on(n),
+            };
+            self.cores[core].push((pid, t));
+            p.threads_core.push(core);
+        }
+        let weights = p.threads_per_node(self.topo.nodes, self.topo.cores_per_node);
+        p.pages = PageMap::first_touch(self.topo.nodes, p.behavior.ws_pages, &weights);
+        if let Placement::Node(n) = placement {
+            p.pinned_node = None; // pinning is a separate, explicit call
+            let _ = n;
+        }
+        self.procs.insert(pid, p);
+        pid
+    }
+
+    fn least_loaded_core_global(&mut self) -> usize {
+        let min = self.cores.iter().map(Vec::len).min().unwrap();
+        let candidates: Vec<usize> = (0..self.cores.len())
+            .filter(|&c| self.cores[c].len() == min)
+            .collect();
+        *self.rng.choice(&candidates)
+    }
+
+    fn least_loaded_core_on(&mut self, node: usize) -> usize {
+        let range = self.topo.cores_of_node(node);
+        let min = range.clone().map(|c| self.cores[c].len()).min().unwrap();
+        let candidates: Vec<usize> =
+            range.filter(|&c| self.cores[c].len() == min).collect();
+        *self.rng.choice(&candidates)
+    }
+
+    // ------------------------------------------------------------ accessors
+
+    pub fn process(&self, pid: i32) -> Option<&SimProcess> {
+        self.procs.get(&pid)
+    }
+
+    pub fn processes(&self) -> impl Iterator<Item = &SimProcess> {
+        self.procs.values()
+    }
+
+    pub fn running_pids(&self) -> Vec<i32> {
+        self.procs
+            .values()
+            .filter(|p| p.is_running())
+            .map(|p| p.pid)
+            .collect()
+    }
+
+    pub fn all_finished(&self) -> bool {
+        self.procs.values().all(|p| !p.is_running())
+    }
+
+    /// Committed utilization per node (what pricing uses this tick).
+    pub fn node_rho(&self) -> Vec<f64> {
+        self.ctls.iter().map(MemCtl::rho_raw).collect()
+    }
+
+    pub fn core_load(&self, core: usize) -> usize {
+        self.cores[core].len()
+    }
+
+    // ----------------------------------------------------------- scheduling
+
+    /// Pin a process to a node (admin static pin). Moves it there too.
+    pub fn pin_process(&mut self, pid: i32, node: usize) {
+        self.move_process(pid, node);
+        if let Some(p) = self.procs.get_mut(&pid) {
+            p.pinned_node = Some(node);
+        }
+    }
+
+    /// Move all of a process's threads to cores of `node`.
+    pub fn move_process(&mut self, pid: i32, node: usize) {
+        assert!(node < self.topo.nodes);
+        let Some(p) = self.procs.get(&pid) else { return };
+        if !p.is_running() {
+            return;
+        }
+        let nthreads = p.nthreads();
+        // Detach from current cores.
+        for q in self.cores.iter_mut() {
+            q.retain(|&(qpid, _)| qpid != pid);
+        }
+        // Reattach on target node, least-loaded first.
+        let mut new_cores = Vec::with_capacity(nthreads);
+        for t in 0..nthreads {
+            let core = self.least_loaded_core_on(node);
+            self.cores[core].push((pid, t));
+            new_cores.push(core);
+        }
+        let now = self.now_ms;
+        let p = self.procs.get_mut(&pid).unwrap();
+        p.threads_core = new_cores;
+        p.migrations += 1;
+        p.last_migration_ms = now;
+        self.total_migrations += 1;
+    }
+
+    /// Migrate up to `budget` of a process's pages toward `node`,
+    /// charging the migration traffic to the controllers involved.
+    pub fn migrate_pages(&mut self, pid: i32, node: usize, budget: u64) -> u64 {
+        assert!(node < self.topo.nodes);
+        let Some(p) = self.procs.get_mut(&pid) else { return 0 };
+        let moved = p.pages.migrate_toward(node, budget);
+        if moved > 0 {
+            let gb = moved as f64 * MIG_GB_PER_PAGE;
+            // Traffic hits the destination controller (writes) and is
+            // spread over the tick.
+            self.mig_charge[node] += gb / (self.dt_ms / 1000.0);
+            self.total_pages_migrated += moved;
+        }
+        moved
+    }
+
+    /// Auto-NUMA-style: migrate pages from `src` node to `dst` node.
+    pub fn migrate_pages_from(&mut self, pid: i32, src: usize, dst: usize, budget: u64) -> u64 {
+        let Some(p) = self.procs.get_mut(&pid) else { return 0 };
+        let moved = p.pages.migrate_from(src, dst, budget);
+        if moved > 0 {
+            let gb = moved as f64 * MIG_GB_PER_PAGE;
+            self.mig_charge[dst] += gb / (self.dt_ms / 1000.0);
+            self.total_pages_migrated += moved;
+        }
+        moved
+    }
+
+    // ----------------------------------------------------------------- tick
+
+    /// Advance virtual time by one `dt` tick.
+    pub fn step(&mut self) {
+        let nodes = self.topo.nodes;
+        let cpn = self.topo.cores_per_node;
+        let dt = self.dt_ms;
+
+        // Pass 1: per-thread speeds priced at the previous tick's rho.
+        let lat_mult: Vec<f64> = self.ctls.iter().map(MemCtl::latency_multiplier).collect();
+        let mut new_demand = vec![0.0f64; nodes];
+        let mut hits = vec![0u64; nodes];
+        let mut misses = vec![0u64; nodes];
+
+        for p in self.procs.values_mut() {
+            if !p.is_running() || p.nthreads() == 0 {
+                continue;
+            }
+            let mi = p.behavior.intensity_at(self.now_ms);
+            let fracs = p.pages.fractions();
+            // Per-thread raw speed.
+            let mut speeds = Vec::with_capacity(p.nthreads());
+            let mut shares = Vec::with_capacity(p.nthreads());
+            for &core in &p.threads_core {
+                let my_node = core / cpn;
+                // Mean normalized access cost over the page distribution:
+                // distance term + queueing term of the holding controller.
+                let mut penalty = 0.0;
+                for n in 0..nodes {
+                    if fracs[n] == 0.0 {
+                        continue;
+                    }
+                    let dist_pen = self.topo.distance[my_node][n] / 10.0 - 1.0;
+                    let queue_pen = lat_mult[n] - 1.0;
+                    penalty += fracs[n] * (dist_pen + queue_pen);
+                }
+                let speed = 1.0 / (1.0 + MEM_WEIGHT * mi * penalty);
+                // Timeshare: the core splits dt across its run queue.
+                let share = 1.0 / self.cores[core].len().max(1) as f64;
+                speeds.push(speed);
+                shares.push(share);
+            }
+            // Granularity coupling: fine-grained apps advance at the pace
+            // of their slowest thread (barrier every few instructions).
+            let min_speed = speeds.iter().copied().fold(f64::INFINITY, f64::min);
+            let g = p.behavior.granularity;
+            let mut work = 0.0;
+            let mut cpu = 0.0;
+            for (s, sh) in speeds.iter().zip(&shares) {
+                let coupled = g * s + (1.0 - g) * min_speed;
+                work += coupled * sh * dt;
+                cpu += sh * dt;
+                p.speed_sum += coupled;
+                p.speed_samples += 1;
+            }
+            p.work_done += work;
+            p.window_work += work;
+            p.cpu_ms += cpu;
+
+            // Demand lands where the pages are; exchange traffic rides on
+            // top (producer/consumer copies between threads). Offered
+            // load scales with CPU share but NOT with achieved speed:
+            // memory-bound threads keep their miss queues full while
+            // stalled (MLP), so a contended controller stays saturated —
+            // this is what produces the paper's >90 % degradation under
+            // stacking (Fig 6) instead of a self-throttling equilibrium.
+            let offered: f64 = shares.iter().sum();
+            let demand = mi * THREAD_PEAK_GBS * offered * (1.0 + p.behavior.exchange);
+            let tpn = p.threads_per_node(nodes, cpn);
+            let total_threads = p.nthreads() as f64;
+            for n in 0..nodes {
+                new_demand[n] += demand * fracs[n];
+                // numastat semantics (ours): accesses *served by* node n,
+                // split into local (issued by threads on n) and remote.
+                // The Monitor recovers controller demand per node from
+                // Δ(hit+miss) and locality from the hit/miss ratio.
+                let thread_frac = tpn[n] as f64 / total_threads;
+                let served = demand * fracs[n] * 1000.0;
+                let local = served * thread_frac;
+                hits[n] += local as u64;
+                misses[n] += (served - local) as u64;
+            }
+
+            // Completion.
+            if p.work_done >= p.behavior.work_units {
+                p.finished_ms = Some(self.now_ms + dt);
+            }
+        }
+
+        // Free cores of processes that just finished.
+        let finished: Vec<i32> = self
+            .procs
+            .values()
+            .filter(|p| p.finished_ms.is_some())
+            .map(|p| p.pid)
+            .collect();
+        for core in self.cores.iter_mut() {
+            core.retain(|(pid, _)| !finished.contains(pid));
+        }
+
+        // Commit controller demand (+ migration traffic) for next tick.
+        for n in 0..nodes {
+            self.ctls[n].add_demand(new_demand[n] + self.mig_charge[n]);
+            self.ctls[n].commit_tick();
+            self.mig_charge[n] = 0.0;
+            self.numastat[n].numa_hit += hits[n];
+            self.numastat[n].numa_miss += misses[n];
+            self.numastat[n].local_node += hits[n];
+            self.numastat[n].other_node += misses[n];
+        }
+
+        // NUMA-blind OS load balancing: equalize core run-queue lengths,
+        // ignoring memory entirely (this is what strands tasks away from
+        // their pages).
+        if self.os_balance {
+            self.os_rebalance();
+        }
+
+        self.now_ms += dt;
+    }
+
+    /// One CFS-flavoured balancing pass (NUMA-blind by design).
+    fn os_rebalance(&mut self) {
+        loop {
+            let (max_c, max_len) = (0..self.cores.len())
+                .map(|c| (c, self.cores[c].len()))
+                .max_by_key(|&(_, l)| l)
+                .unwrap();
+            let (min_c, min_len) = (0..self.cores.len())
+                .map(|c| (c, self.cores[c].len()))
+                .min_by_key(|&(_, l)| l)
+                .unwrap();
+            if max_len <= min_len + 1 {
+                break;
+            }
+            // Move one unpinned thread from the busiest to the idlest core.
+            let Some(idx) = self.cores[max_c].iter().position(|&(pid, _)| {
+                self.procs
+                    .get(&pid)
+                    .map(|p| p.pinned_node.is_none())
+                    .unwrap_or(false)
+            }) else {
+                break;
+            };
+            let (pid, t) = self.cores[max_c].remove(idx);
+            self.cores[min_c].push((pid, t));
+            if let Some(p) = self.procs.get_mut(&pid) {
+                p.threads_core[t] = min_c;
+            }
+        }
+    }
+
+    /// Run until `deadline_ms` or all processes finish.
+    pub fn run_until(&mut self, deadline_ms: f64) {
+        while self.now_ms < deadline_ms && !self.all_finished() {
+            self.step();
+        }
+    }
+
+    /// Reset daemon throughput windows; returns work done per pid since
+    /// the last reset.
+    pub fn drain_window_work(&mut self) -> BTreeMap<i32, f64> {
+        let mut out = BTreeMap::new();
+        for p in self.procs.values_mut() {
+            out.insert(p.pid, p.window_work);
+            p.window_work = 0.0;
+        }
+        out
+    }
+}
+
+// `BTreeMap<i32, _>` helper: the `process()` accessor above needs a plain
+// lookup; written as a method to keep the field private.
+impl Machine {
+    pub fn process_mut(&mut self, pid: i32) -> Option<&mut SimProcess> {
+        self.procs.get_mut(&pid)
+    }
+}
+
+impl ProcSource for Machine {
+    fn list_pids(&self) -> Vec<i32> {
+        self.procs
+            .values()
+            .filter(|p| p.is_running())
+            .map(|p| p.pid)
+            .collect()
+    }
+
+    fn read_stat(&self, pid: i32) -> Option<String> {
+        let p = self.procs.get(&pid)?;
+        if !p.is_running() {
+            return None;
+        }
+        let s = stat::PidStat {
+            pid: p.pid,
+            comm: p.comm.clone(),
+            state: 'R',
+            utime: p.cpu_ms as u64, // 1 jiffy == 1 virtual ms
+            stime: 0,
+            num_threads: p.nthreads() as i64,
+            vsize: p.pages.total() * 4096,
+            rss: p.pages.total() as i64,
+            processor: *p.threads_core.first().unwrap_or(&0) as i32,
+        };
+        Some(stat::render(&s))
+    }
+
+    fn read_numa_maps(&self, pid: i32) -> Option<String> {
+        let p = self.procs.get(&pid)?;
+        if !p.is_running() {
+            return None;
+        }
+        let per_node: std::collections::BTreeMap<usize, u64> = p
+            .pages
+            .per_node
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(n, &c)| (n, c))
+            .collect();
+        let vma = numa_maps::Vma {
+            address: 0x7f00_0000_0000 + ((p.pid as u64) << 24),
+            policy: "default".into(),
+            pages_per_node: per_node,
+            anon: Some(p.pages.total()),
+            dirty: Some(p.pages.total() / 2),
+            file: None,
+        };
+        Some(numa_maps::render(&[vma]))
+    }
+
+    fn read_nodes_online(&self) -> Option<String> {
+        Some(sysnode::render_cpulist(
+            &(0..self.topo.nodes).collect::<Vec<_>>(),
+        ))
+    }
+
+    fn read_node_cpulist(&self, node: usize) -> Option<String> {
+        if node >= self.topo.nodes {
+            return None;
+        }
+        Some(self.topo.cpulist(node))
+    }
+
+    fn read_node_distance(&self, node: usize) -> Option<String> {
+        if node >= self.topo.nodes {
+            return None;
+        }
+        Some(
+            self.topo.distance[node]
+                .iter()
+                .map(|d| format!("{}", *d as i64))
+                .collect::<Vec<_>>()
+                .join(" "),
+        )
+    }
+
+    fn read_node_numastat(&self, node: usize) -> Option<String> {
+        if node >= self.topo.nodes {
+            return None;
+        }
+        Some(sysnode::render_numastat(&self.numastat[node]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+
+    fn machine() -> Machine {
+        Machine::new(NumaTopology::r910_40core(), 42)
+    }
+
+    fn small_machine() -> Machine {
+        Machine::new(
+            NumaTopology::from_config(&MachineConfig::preset("2node-8core").unwrap()),
+            7,
+        )
+    }
+
+    #[test]
+    fn spawn_places_threads_and_pages() {
+        let mut m = machine();
+        let pid = m.spawn("w", TaskBehavior::cpu_bound(1e9), 1.0, 4, Placement::Node(2));
+        let p = m.process_mut(pid).unwrap();
+        assert_eq!(p.nthreads(), 4);
+        assert_eq!(p.home_node(4, 10), 2);
+        // First touch: all pages on node 2.
+        assert_eq!(p.pages.per_node[2], p.pages.total());
+    }
+
+    #[test]
+    fn solo_cpu_bound_runs_at_full_speed() {
+        let mut m = machine();
+        let behavior = TaskBehavior {
+            mem_intensity: 0.0,
+            ..TaskBehavior::cpu_bound(100.0)
+        };
+        let pid = m.spawn("solo", behavior, 1.0, 1, Placement::Node(0));
+        m.run_until(1_000.0);
+        let p = m.process_mut(pid).unwrap();
+        // 100 work units at speed 1.0 on a private core = 100 ms.
+        assert_eq!(p.runtime_ms(), Some(100.0));
+    }
+
+    #[test]
+    fn remote_pages_slow_a_memory_bound_task() {
+        // Task on node 0 with all pages on node 1 vs all pages local.
+        let run = |local: bool| -> f64 {
+            let mut m = small_machine();
+            m.os_balance = false;
+            let pid = m.spawn("t", TaskBehavior::mem_bound(200.0), 1.0, 1, Placement::Node(0));
+            if !local {
+                let p = m.process_mut(pid).unwrap();
+                let total = p.pages.total();
+                p.pages.per_node = vec![0, total];
+            }
+            m.run_until(50_000.0);
+            m.process_mut(pid).unwrap().runtime_ms().unwrap()
+        };
+        let t_local = run(true);
+        let t_remote = run(false);
+        assert!(
+            t_remote > t_local * 1.5,
+            "remote {t_remote} vs local {t_local}"
+        );
+    }
+
+    #[test]
+    fn contention_degrades_throughput_severely_when_stacked() {
+        // Fig 6 upper: many memory-bound co-runners hammering one node
+        // degrade per-task speed severely vs solo (>90% on the paper's
+        // box once remote access compounds; locally-pinned pure
+        // contention must exceed 75% here).
+        let mut solo = small_machine();
+        solo.os_balance = false;
+        let pid = solo.spawn("m", TaskBehavior::mem_bound(1e12), 1.0, 1, Placement::Node(0));
+        solo.run_until(2_000.0);
+        let solo_speed = solo.process_mut(pid).unwrap().mean_speed();
+
+        let mut packed = small_machine();
+        packed.os_balance = false;
+        let victim = packed.spawn("m", TaskBehavior::mem_bound(1e12), 1.0, 1, Placement::Node(0));
+        for _ in 0..7 {
+            packed.spawn("hog", TaskBehavior::mem_bound(1e12), 1.0, 1, Placement::Node(0));
+        }
+        packed.run_until(2_000.0);
+        let packed_speed = packed.process_mut(victim).unwrap().mean_speed();
+
+        let degradation = 1.0 - packed_speed / solo_speed;
+        assert!(
+            degradation > 0.75,
+            "stacked degradation too small: {degradation} (solo {solo_speed} packed {packed_speed})"
+        );
+    }
+
+    #[test]
+    fn move_process_relocates_all_threads() {
+        let mut m = machine();
+        m.os_balance = false;
+        let pid = m.spawn("w", TaskBehavior::cpu_bound(1e9), 1.0, 6, Placement::Node(0));
+        m.move_process(pid, 3);
+        let p = m.process_mut(pid).unwrap();
+        assert_eq!(p.threads_per_node(4, 10), vec![0, 0, 0, 6]);
+        assert_eq!(p.migrations, 1);
+    }
+
+    #[test]
+    fn migrate_pages_moves_and_charges_traffic() {
+        let mut m = machine();
+        let pid = m.spawn("w", TaskBehavior::mem_bound(1e9), 1.0, 2, Placement::Node(0));
+        let moved = m.migrate_pages(pid, 1, 10_000);
+        assert_eq!(moved, 10_000);
+        assert!(m.mig_charge[1] > 0.0);
+        m.step();
+        // Charged traffic shows up in node 1's committed utilization.
+        assert!(m.node_rho()[1] > 0.0);
+    }
+
+    #[test]
+    fn os_balancer_spreads_threads_numa_blind() {
+        let mut m = small_machine();
+        // 8 threads spawned on node 0's 4 cores -> 2 per core.
+        let pid = m.spawn("w", TaskBehavior::cpu_bound(1e9), 1.0, 8, Placement::Node(0));
+        m.step();
+        // Balancer should have pulled threads onto node 1's idle cores.
+        let p = m.process_mut(pid).unwrap();
+        let tpn = p.threads_per_node(2, 4);
+        assert!(tpn[1] > 0, "balancer did not spread: {tpn:?}");
+    }
+
+    #[test]
+    fn pinned_processes_resist_balancing() {
+        let mut m = small_machine();
+        let pid = m.spawn("w", TaskBehavior::cpu_bound(1e9), 1.0, 8, Placement::Node(0));
+        m.pin_process(pid, 0);
+        for _ in 0..10 {
+            m.step();
+        }
+        let p = m.process_mut(pid).unwrap();
+        assert_eq!(p.threads_per_node(2, 4), vec![8, 0]);
+    }
+
+    #[test]
+    fn timesharing_halves_throughput() {
+        let behavior = TaskBehavior {
+            mem_intensity: 0.0,
+            ..TaskBehavior::cpu_bound(100.0)
+        };
+        // Solo: 4 threads on 4 private cores -> 4 work/ms -> 25 ms.
+        let mut solo = small_machine();
+        solo.os_balance = false;
+        let a = solo.spawn("a", behavior.clone(), 1.0, 4, Placement::Node(0));
+        solo.run_until(10_000.0);
+        let t_solo = solo.process_mut(a).unwrap().runtime_ms().unwrap();
+        assert!((t_solo - 25.0).abs() < 2.0, "t_solo={t_solo}");
+
+        // Shared: two such processes on the same 4 cores -> 50% shares,
+        // both finish in ~2x the solo time.
+        let mut m = small_machine();
+        m.os_balance = false;
+        let a = m.spawn("a", behavior.clone(), 1.0, 4, Placement::Node(0));
+        let b = m.spawn("b", behavior.clone(), 1.0, 4, Placement::Node(0));
+        m.run_until(10_000.0);
+        let ta = m.process_mut(a).unwrap().runtime_ms().unwrap();
+        let tb = m.process_mut(b).unwrap().runtime_ms().unwrap();
+        assert!((ta - 2.0 * t_solo).abs() < 5.0, "ta={ta}");
+        assert!((tb - 2.0 * t_solo).abs() < 5.0, "tb={tb}");
+    }
+
+    #[test]
+    fn procsource_stat_roundtrips() {
+        let mut m = machine();
+        let pid = m.spawn("canneal", TaskBehavior::mem_bound(1e9), 1.0, 3, Placement::Node(1));
+        m.step();
+        let text = m.read_stat(pid).unwrap();
+        let parsed = stat::parse(&text).unwrap();
+        assert_eq!(parsed.pid, pid);
+        assert_eq!(parsed.comm, "canneal");
+        assert_eq!(parsed.num_threads, 3);
+        assert!(parsed.rss > 0);
+        let node = parsed.processor as usize / 10;
+        assert_eq!(node, 1);
+    }
+
+    #[test]
+    fn procsource_numa_maps_roundtrips() {
+        let mut m = machine();
+        let pid = m.spawn("dedup", TaskBehavior::mem_bound(1e9), 1.0, 2, Placement::Node(2));
+        let text = m.read_numa_maps(pid).unwrap();
+        let maps = numa_maps::parse(&text);
+        let per_node = maps.pages_per_node(4);
+        assert_eq!(per_node[2], m.process_mut(pid).unwrap().pages.total());
+    }
+
+    #[test]
+    fn procsource_sysfs_views() {
+        let m = machine();
+        assert_eq!(m.read_nodes_online().unwrap(), "0-3");
+        assert_eq!(m.read_node_cpulist(1).unwrap(), "10-19");
+        let d = sysnode::parse_distance_row(&m.read_node_distance(0).unwrap()).unwrap();
+        assert_eq!(d.len(), 4);
+        assert_eq!(d[0], 10.0);
+        assert!(m.read_node_cpulist(9).is_none());
+    }
+
+    #[test]
+    fn numastat_accumulates_hits_and_misses() {
+        let mut m = small_machine();
+        m.os_balance = false;
+        let pid = m.spawn("t", TaskBehavior::mem_bound(1e12), 1.0, 1, Placement::Node(0));
+        // Split pages across both nodes -> both hits and misses.
+        {
+            let p = m.process_mut(pid).unwrap();
+            let total = p.pages.total();
+            p.pages.per_node = vec![total / 2, total - total / 2];
+        }
+        for _ in 0..20 {
+            m.step();
+        }
+        // Node 0 serves local accesses (threads there), node 1 serves
+        // remote ones (pages there, threads elsewhere).
+        let s0 = sysnode::parse_numastat(&m.read_node_numastat(0).unwrap());
+        let s1 = sysnode::parse_numastat(&m.read_node_numastat(1).unwrap());
+        assert!(s0.numa_hit > 0);
+        assert!(s1.numa_miss > 0);
+        assert_eq!(s1.numa_hit, 0);
+    }
+
+    #[test]
+    fn finished_pids_disappear_from_procfs() {
+        let mut m = machine();
+        let behavior = TaskBehavior {
+            mem_intensity: 0.0,
+            ..TaskBehavior::cpu_bound(5.0)
+        };
+        let pid = m.spawn("quick", behavior, 1.0, 1, Placement::Node(0));
+        m.run_until(1_000.0);
+        assert!(m.read_stat(pid).is_none());
+        assert!(!m.list_pids().contains(&pid));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || -> f64 {
+            let mut m = machine();
+            let pid = m.spawn("w", TaskBehavior::mem_bound(500.0), 1.0, 4, Placement::LeastLoaded);
+            for _ in 0..4 {
+                m.spawn("bg", TaskBehavior::mem_bound(1e9), 1.0, 4, Placement::LeastLoaded);
+            }
+            m.run_until(20_000.0);
+            m.process_mut(pid).unwrap().runtime_ms().unwrap()
+        };
+        assert_eq!(run(), run());
+    }
+}

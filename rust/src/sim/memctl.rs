@@ -1,0 +1,147 @@
+//! Per-node memory-controller contention model.
+//!
+//! The first-order NUMA effect the paper exploits is queueing at the
+//! memory controller: when aggregate demand approaches a node's
+//! bandwidth, access latency blows up for *everyone* whose pages live
+//! there. We model the controller as an M/M/1-style server: the latency
+//! multiplier grows as `rho / (1 - rho)`, clipped at saturation.
+
+/// Utilization clip — beyond this the controller is "saturated" and the
+/// penalty stops growing (real controllers throttle rather than diverge).
+/// q(0.90) = 9, so with QUEUE_WEIGHT the saturated latency multiplier is
+/// ~4x — the DRAM-loaded-latency regime measured on real Xeons.
+pub const RHO_MAX: f64 = 0.90;
+
+/// Scale of the queueing term in the latency multiplier. Calibrated so a
+/// saturated remote controller produces the >90 % degradation the paper
+/// observes for memory-bound PARSEC apps (Fig 6 upper).
+pub const QUEUE_WEIGHT: f64 = 0.35;
+
+/// One node's memory controller.
+#[derive(Clone, Debug)]
+pub struct MemCtl {
+    /// Capacity, GB/s.
+    pub bandwidth_gbs: f64,
+    /// Demand accumulated for the current tick, GB/s.
+    demand: f64,
+    /// Utilization from the *previous* tick — used to price this tick's
+    /// accesses (one-tick lag breaks the demand/speed fixed point).
+    rho_prev: f64,
+}
+
+impl MemCtl {
+    pub fn new(bandwidth_gbs: f64) -> Self {
+        assert!(bandwidth_gbs > 0.0);
+        Self { bandwidth_gbs, demand: 0.0, rho_prev: 0.0 }
+    }
+
+    /// Add demand (GB/s) for the tick being computed.
+    pub fn add_demand(&mut self, gbs: f64) {
+        debug_assert!(gbs >= 0.0);
+        self.demand += gbs;
+    }
+
+    /// Close the tick: demand becomes the next tick's priced utilization.
+    pub fn commit_tick(&mut self) {
+        self.rho_prev = (self.demand / self.bandwidth_gbs).min(4.0);
+        self.demand = 0.0;
+    }
+
+    /// Utilization in effect for pricing (clipped).
+    pub fn rho(&self) -> f64 {
+        self.rho_prev.min(RHO_MAX)
+    }
+
+    /// Raw (unclipped) utilization of the last committed tick — what the
+    /// monitor would estimate from counters.
+    pub fn rho_raw(&self) -> f64 {
+        self.rho_prev
+    }
+
+    /// Demand accumulated so far in the open tick.
+    pub fn pending_demand(&self) -> f64 {
+        self.demand
+    }
+
+    /// Queueing delay factor q(rho) = rho/(1-rho), clipped at RHO_MAX.
+    pub fn queue_factor(&self) -> f64 {
+        let rho = self.rho();
+        rho / (1.0 - rho)
+    }
+
+    /// Latency multiplier applied to accesses hitting this controller.
+    pub fn latency_multiplier(&self) -> f64 {
+        1.0 + QUEUE_WEIGHT * self.queue_factor()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_controller_is_unit_latency() {
+        let mut c = MemCtl::new(10.0);
+        c.commit_tick();
+        assert_eq!(c.latency_multiplier(), 1.0);
+        assert_eq!(c.queue_factor(), 0.0);
+    }
+
+    #[test]
+    fn demand_prices_next_tick_not_current() {
+        let mut c = MemCtl::new(10.0);
+        c.add_demand(5.0);
+        // Not yet committed: still priced at previous (idle) rho.
+        assert_eq!(c.rho(), 0.0);
+        c.commit_tick();
+        assert!((c.rho() - 0.5).abs() < 1e-12);
+        assert!((c.queue_factor() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn queue_factor_grows_superlinearly() {
+        let mut c = MemCtl::new(10.0);
+        c.add_demand(5.0);
+        c.commit_tick();
+        let q_half = c.queue_factor();
+        c.add_demand(9.0);
+        c.commit_tick();
+        let q_ninety = c.queue_factor();
+        assert!(q_ninety > 5.0 * q_half, "q(.9)={q_ninety} q(.5)={q_half}");
+    }
+
+    #[test]
+    fn saturation_is_clipped() {
+        let mut c = MemCtl::new(10.0);
+        c.add_demand(1e9);
+        c.commit_tick();
+        assert_eq!(c.rho(), RHO_MAX);
+        assert!(c.queue_factor().is_finite());
+        assert!(c.rho_raw() > RHO_MAX, "raw keeps the overload signal");
+    }
+
+    #[test]
+    fn commit_resets_demand() {
+        let mut c = MemCtl::new(10.0);
+        c.add_demand(3.0);
+        c.commit_tick();
+        assert_eq!(c.pending_demand(), 0.0);
+        c.commit_tick();
+        assert_eq!(c.rho(), 0.0);
+    }
+
+    #[test]
+    fn saturated_remote_access_is_90pct_degradation_scale() {
+        // A fully memory-bound thread on a saturated 2-hop remote node:
+        // speed = 1/(1 + k*mi*(dist_penalty + queue)) should fall below
+        // 0.15 with the calibrated constants (Fig 6's >90% headroom comes
+        // from multiple co-runners; see sim::machine tests).
+        let mut c = MemCtl::new(10.0);
+        c.add_demand(100.0);
+        c.commit_tick();
+        let dist_penalty = 30.0 / 10.0 - 1.0; // 2-hop remote
+        let penalty = dist_penalty + QUEUE_WEIGHT * c.queue_factor();
+        let speed = 1.0 / (1.0 + crate::sim::machine::MEM_WEIGHT * 1.0 * penalty);
+        assert!(speed < 0.15, "speed={speed}");
+    }
+}

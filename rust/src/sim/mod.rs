@@ -1,0 +1,20 @@
+//! The NUMA multicore system simulator — the substrate standing in for
+//! the paper's DELL R910 testbed (see DESIGN.md §2 for the substitution
+//! argument).
+//!
+//! Components:
+//! * [`task`] — workload behaviour models (intensity, sharing, phases);
+//! * [`page`] — per-process page placement and migration;
+//! * [`memctl`] — per-node memory-controller queueing contention;
+//! * [`process`] — thread placement and progress accounting;
+//! * [`machine`] — the tick loop, the NUMA-blind OS balancer, and the
+//!   `ProcSource` rendering that feeds the Monitor real kernel text.
+
+pub mod machine;
+pub mod memctl;
+pub mod page;
+pub mod process;
+pub mod task;
+
+pub use machine::{Machine, Placement};
+pub use task::TaskBehavior;

@@ -1,0 +1,183 @@
+//! Per-process page placement: where a process's working set lives.
+//!
+//! The real system tracks this in the page tables and surfaces it via
+//! `/proc/<pid>/numa_maps`; the simulator keeps per-node page counts and
+//! a migration ledger (migrations consume controller bandwidth, which is
+//! exactly why Algorithm 3 only moves "sticky" pages when degradation is
+//! already high).
+
+/// Page placement of one process across NUMA nodes.
+#[derive(Clone, Debug)]
+pub struct PageMap {
+    /// Resident pages per node.
+    pub per_node: Vec<u64>,
+    /// Cumulative pages migrated (for metrics / cost accounting).
+    pub migrated_total: u64,
+}
+
+impl PageMap {
+    pub fn empty(nodes: usize) -> Self {
+        Self { per_node: vec![0; nodes], migrated_total: 0 }
+    }
+
+    /// First-touch allocation: distribute `pages` proportionally to the
+    /// thread placement `weights` (threads-per-node), like Linux does when
+    /// faulting in pages from the allocating CPU.
+    pub fn first_touch(nodes: usize, pages: u64, weights: &[u64]) -> Self {
+        assert_eq!(weights.len(), nodes);
+        let mut map = Self::empty(nodes);
+        let total_w: u64 = weights.iter().sum();
+        if total_w == 0 {
+            // No threads placed yet — everything lands on node 0.
+            map.per_node[0] = pages;
+            return map;
+        }
+        let mut allocated = 0u64;
+        for n in 0..nodes {
+            let share = pages * weights[n] / total_w;
+            map.per_node[n] = share;
+            allocated += share;
+        }
+        // Rounding remainder goes to the heaviest node.
+        let heaviest = (0..nodes).max_by_key(|&n| weights[n]).unwrap();
+        map.per_node[heaviest] += pages - allocated;
+        map
+    }
+
+    pub fn total(&self) -> u64 {
+        self.per_node.iter().sum()
+    }
+
+    /// Fraction of pages on each node (all zeros if empty).
+    pub fn fractions(&self) -> Vec<f64> {
+        let total = self.total();
+        if total == 0 {
+            return vec![0.0; self.per_node.len()];
+        }
+        self.per_node
+            .iter()
+            .map(|&p| p as f64 / total as f64)
+            .collect()
+    }
+
+    /// Move up to `budget` pages toward `target`, taking from the node
+    /// with the most pages first (hottest remote chunk). Returns pages
+    /// actually moved — the caller charges that traffic to the
+    /// controllers involved.
+    pub fn migrate_toward(&mut self, target: usize, budget: u64) -> u64 {
+        assert!(target < self.per_node.len());
+        let mut moved = 0;
+        let mut remaining = budget;
+        while remaining > 0 {
+            let Some(src) = self
+                .per_node
+                .iter()
+                .enumerate()
+                .filter(|&(n, &p)| n != target && p > 0)
+                .max_by_key(|&(_, &p)| p)
+                .map(|(n, _)| n)
+            else {
+                break;
+            };
+            let chunk = self.per_node[src].min(remaining);
+            self.per_node[src] -= chunk;
+            self.per_node[target] += chunk;
+            moved += chunk;
+            remaining -= chunk;
+        }
+        self.migrated_total += moved;
+        moved
+    }
+
+    /// Move up to `budget` pages from `src` to `dst` (auto-NUMA style
+    /// single-origin migration). Returns pages moved.
+    pub fn migrate_from(&mut self, src: usize, dst: usize, budget: u64) -> u64 {
+        if src == dst {
+            return 0;
+        }
+        let chunk = self.per_node[src].min(budget);
+        self.per_node[src] -= chunk;
+        self.per_node[dst] += chunk;
+        self.migrated_total += chunk;
+        chunk
+    }
+
+    /// Locality of a thread distribution: Σ_n thread_frac[n]*page_frac[n].
+    pub fn locality(&self, thread_frac: &[f64]) -> f64 {
+        self.fractions()
+            .iter()
+            .zip(thread_frac)
+            .map(|(p, t)| p * t)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_touch_follows_threads() {
+        let m = PageMap::first_touch(4, 1000, &[3, 1, 0, 0]);
+        assert_eq!(m.total(), 1000);
+        assert_eq!(m.per_node[0], 750);
+        assert_eq!(m.per_node[1], 250);
+        assert_eq!(m.per_node[2], 0);
+    }
+
+    #[test]
+    fn first_touch_remainder_conserved() {
+        let m = PageMap::first_touch(3, 100, &[1, 1, 1]);
+        assert_eq!(m.total(), 100);
+    }
+
+    #[test]
+    fn first_touch_no_threads_lands_on_node0() {
+        let m = PageMap::first_touch(2, 10, &[0, 0]);
+        assert_eq!(m.per_node, vec![10, 0]);
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let m = PageMap::first_touch(4, 999, &[1, 2, 3, 4]);
+        let sum: f64 = m.fractions().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn migrate_toward_respects_budget_and_conserves() {
+        let mut m = PageMap::first_touch(4, 1000, &[1, 1, 1, 1]);
+        let before = m.total();
+        let moved = m.migrate_toward(0, 300);
+        assert_eq!(moved, 300);
+        assert_eq!(m.total(), before);
+        assert_eq!(m.per_node[0], 550);
+        assert_eq!(m.migrated_total, 300);
+    }
+
+    #[test]
+    fn migrate_toward_stops_when_fully_local() {
+        let mut m = PageMap::empty(2);
+        m.per_node[0] = 100;
+        let moved = m.migrate_toward(0, 1000);
+        assert_eq!(moved, 0);
+        assert_eq!(m.per_node[0], 100);
+    }
+
+    #[test]
+    fn migrate_from_single_origin() {
+        let mut m = PageMap::empty(3);
+        m.per_node = vec![50, 30, 20];
+        assert_eq!(m.migrate_from(1, 2, 100), 30);
+        assert_eq!(m.per_node, vec![50, 0, 50]);
+        assert_eq!(m.migrate_from(0, 0, 10), 0);
+    }
+
+    #[test]
+    fn locality_extremes() {
+        let mut m = PageMap::empty(2);
+        m.per_node = vec![100, 0];
+        assert!((m.locality(&[1.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert!((m.locality(&[0.0, 1.0]) - 0.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,151 @@
+//! Simulated processes: thread placement, page map, progress accounting.
+
+use super::page::PageMap;
+use super::task::TaskBehavior;
+
+/// One simulated process (the scheduling unit of Algorithm 3 — the paper
+//  migrates whole processes plus their sticky pages).
+#[derive(Clone, Debug)]
+pub struct SimProcess {
+    pub pid: i32,
+    pub comm: String,
+    /// User-space importance weight — what kernel-level schedulers cannot
+    /// see and the paper's user-level scheduler exploits.
+    pub importance: f64,
+    pub behavior: TaskBehavior,
+    /// Global core id of each thread.
+    pub threads_core: Vec<usize>,
+    pub pages: PageMap,
+    /// Static admin pin (StaticTuning baseline / Algorithm 3 input).
+    pub pinned_node: Option<usize>,
+    /// Abstract work completed.
+    pub work_done: f64,
+    /// Work completed in the current measurement window (daemons).
+    pub window_work: f64,
+    /// Total CPU time consumed, virtual ms.
+    pub cpu_ms: f64,
+    pub started_ms: f64,
+    pub finished_ms: Option<f64>,
+    /// Process migrations performed on it.
+    pub migrations: u64,
+    /// Virtual time of the last migration (cooldown bookkeeping).
+    pub last_migration_ms: f64,
+    /// Running average of instantaneous speed (for metrics).
+    pub speed_sum: f64,
+    pub speed_samples: u64,
+}
+
+impl SimProcess {
+    pub fn new(
+        pid: i32,
+        comm: &str,
+        behavior: TaskBehavior,
+        importance: f64,
+        started_ms: f64,
+    ) -> Self {
+        Self {
+            pid,
+            comm: comm.to_string(),
+            importance,
+            behavior,
+            threads_core: Vec::new(),
+            pages: PageMap::empty(0),
+            pinned_node: None,
+            work_done: 0.0,
+            window_work: 0.0,
+            cpu_ms: 0.0,
+            started_ms,
+            finished_ms: None,
+            migrations: 0,
+            last_migration_ms: f64::NEG_INFINITY,
+            speed_sum: 0.0,
+            speed_samples: 0,
+        }
+    }
+
+    pub fn is_running(&self) -> bool {
+        self.finished_ms.is_none()
+    }
+
+    pub fn nthreads(&self) -> usize {
+        self.threads_core.len()
+    }
+
+    /// Threads per node, given the core->node mapping width.
+    pub fn threads_per_node(&self, nodes: usize, cores_per_node: usize) -> Vec<u64> {
+        let mut out = vec![0u64; nodes];
+        for &c in &self.threads_core {
+            out[c / cores_per_node] += 1;
+        }
+        out
+    }
+
+    /// Node hosting the majority of threads (ties -> lowest id).
+    pub fn home_node(&self, nodes: usize, cores_per_node: usize) -> usize {
+        let counts = self.threads_per_node(nodes, cores_per_node);
+        counts
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+            .map(|(n, _)| n)
+            .unwrap_or(0)
+    }
+
+    /// Completion time if finished.
+    pub fn runtime_ms(&self) -> Option<f64> {
+        self.finished_ms.map(|f| f - self.started_ms)
+    }
+
+    /// Mean observed speed (1.0 = unimpeded).
+    pub fn mean_speed(&self) -> f64 {
+        if self.speed_samples == 0 {
+            0.0
+        } else {
+            self.speed_sum / self.speed_samples as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn proc_with_cores(cores: Vec<usize>) -> SimProcess {
+        let mut p = SimProcess::new(1, "t", TaskBehavior::cpu_bound(10.0), 1.0, 0.0);
+        p.threads_core = cores;
+        p
+    }
+
+    #[test]
+    fn threads_per_node_counts() {
+        let p = proc_with_cores(vec![0, 1, 10, 11, 12]);
+        assert_eq!(p.threads_per_node(4, 10), vec![2, 3, 0, 0]);
+    }
+
+    #[test]
+    fn home_node_is_majority() {
+        let p = proc_with_cores(vec![0, 10, 11]);
+        assert_eq!(p.home_node(4, 10), 1);
+    }
+
+    #[test]
+    fn home_node_tie_prefers_lowest() {
+        let p = proc_with_cores(vec![0, 10]);
+        assert_eq!(p.home_node(4, 10), 0);
+    }
+
+    #[test]
+    fn runtime_only_when_finished() {
+        let mut p = proc_with_cores(vec![0]);
+        assert_eq!(p.runtime_ms(), None);
+        p.started_ms = 100.0;
+        p.finished_ms = Some(350.0);
+        assert_eq!(p.runtime_ms(), Some(250.0));
+    }
+
+    #[test]
+    fn mean_speed_empty_is_zero() {
+        let p = proc_with_cores(vec![]);
+        assert_eq!(p.mean_speed(), 0.0);
+    }
+}

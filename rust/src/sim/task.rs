@@ -1,0 +1,155 @@
+//! Task behaviour models — how a workload exercises CPU and memory.
+//!
+//! Each PARSEC-like application (Table 1) maps to one `TaskBehavior`:
+//! memory intensity drives controller demand, sharing/exchange control
+//! cross-node traffic, phases produce the "behavior of the processes
+//! changed" events the Reporter reacts to (Algorithm 2).
+
+/// Behavioural parameters of one process (all its threads share them).
+#[derive(Clone, Debug)]
+pub struct TaskBehavior {
+    /// Total abstract work units; `f64::INFINITY` for daemons, which are
+    /// measured by throughput instead of completion time.
+    pub work_units: f64,
+    /// Memory intensity in [0, 1]: fraction of execution that stalls on
+    /// memory at baseline (0 = pure compute, 1 = fully memory-bound).
+    pub mem_intensity: f64,
+    /// Working-set size in 4 KiB pages.
+    pub ws_pages: u64,
+    /// Fraction of the working set shared between threads (Table 1
+    /// "data sharing": low ~0.1, high ~0.7).
+    pub shared_frac: f64,
+    /// Cross-thread data exchange factor (Table 1 "data exchange"):
+    /// extra controller demand from producer/consumer traffic.
+    pub exchange: f64,
+    /// Parallelism granularity in [0,1]: 1 = coarse (threads independent),
+    /// 0 = fine (threads lockstep — slowest thread gates all).
+    pub granularity: f64,
+    /// Period of intensity phases in virtual ms (0 = steady state).
+    pub phase_period_ms: f64,
+    /// Phase modulation amplitude in [0, 1).
+    pub phase_amplitude: f64,
+}
+
+impl TaskBehavior {
+    /// A CPU-bound default (used by tests).
+    pub fn cpu_bound(work_units: f64) -> Self {
+        Self {
+            work_units,
+            mem_intensity: 0.1,
+            ws_pages: 20_000,
+            shared_frac: 0.1,
+            exchange: 0.1,
+            granularity: 1.0,
+            phase_period_ms: 0.0,
+            phase_amplitude: 0.0,
+        }
+    }
+
+    /// A memory-bound default (used by tests).
+    pub fn mem_bound(work_units: f64) -> Self {
+        Self {
+            work_units,
+            mem_intensity: 0.9,
+            ws_pages: 200_000,
+            shared_frac: 0.5,
+            exchange: 0.6,
+            granularity: 0.5,
+            phase_period_ms: 0.0,
+            phase_amplitude: 0.0,
+        }
+    }
+
+    /// Effective memory intensity at virtual time `now_ms` (phase model).
+    pub fn intensity_at(&self, now_ms: f64) -> f64 {
+        if self.phase_period_ms <= 0.0 || self.phase_amplitude <= 0.0 {
+            return self.mem_intensity;
+        }
+        let phase = (now_ms / self.phase_period_ms) * std::f64::consts::TAU;
+        (self.mem_intensity * (1.0 + self.phase_amplitude * phase.sin()))
+            .clamp(0.0, 1.0)
+    }
+
+    pub fn is_daemon(&self) -> bool {
+        self.work_units.is_infinite()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..=1.0).contains(&self.mem_intensity) {
+            return Err(format!("mem_intensity {} out of [0,1]", self.mem_intensity));
+        }
+        if !(0.0..=1.0).contains(&self.shared_frac) {
+            return Err("shared_frac out of [0,1]".into());
+        }
+        if !(0.0..=1.0).contains(&self.granularity) {
+            return Err("granularity out of [0,1]".into());
+        }
+        if self.phase_amplitude < 0.0 || self.phase_amplitude >= 1.0 {
+            return Err("phase_amplitude out of [0,1)".into());
+        }
+        if self.work_units <= 0.0 {
+            return Err("work_units must be positive".into());
+        }
+        if self.ws_pages == 0 {
+            return Err("ws_pages must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        assert!(TaskBehavior::cpu_bound(1000.0).validate().is_ok());
+        assert!(TaskBehavior::mem_bound(1000.0).validate().is_ok());
+    }
+
+    #[test]
+    fn steady_intensity_without_phases() {
+        let b = TaskBehavior::cpu_bound(1.0);
+        assert_eq!(b.intensity_at(0.0), 0.1);
+        assert_eq!(b.intensity_at(12345.0), 0.1);
+    }
+
+    #[test]
+    fn phases_modulate_within_bounds() {
+        let mut b = TaskBehavior::mem_bound(1.0);
+        b.mem_intensity = 0.5; // headroom below the 1.0 clamp
+        b.phase_period_ms = 100.0;
+        b.phase_amplitude = 0.5;
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for i in 0..200 {
+            let v = b.intensity_at(i as f64);
+            lo = lo.min(v);
+            hi = hi.max(v);
+            assert!((0.0..=1.0).contains(&v));
+        }
+        assert!(hi > b.mem_intensity * 1.2, "phases should lift intensity");
+        assert!(lo < b.mem_intensity * 0.8, "phases should drop intensity");
+    }
+
+    #[test]
+    fn daemons_are_infinite() {
+        let mut b = TaskBehavior::cpu_bound(1.0);
+        assert!(!b.is_daemon());
+        b.work_units = f64::INFINITY;
+        assert!(b.is_daemon());
+    }
+
+    #[test]
+    fn validation_catches_bad_fields() {
+        let mut b = TaskBehavior::cpu_bound(10.0);
+        b.mem_intensity = 1.5;
+        assert!(b.validate().is_err());
+        let mut b = TaskBehavior::cpu_bound(10.0);
+        b.work_units = 0.0;
+        assert!(b.validate().is_err());
+        let mut b = TaskBehavior::cpu_bound(10.0);
+        b.phase_amplitude = 1.0;
+        assert!(b.validate().is_err());
+    }
+}

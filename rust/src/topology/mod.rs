@@ -1,0 +1,210 @@
+//! NUMA topology: nodes, cores, SLIT distances, bandwidth capacities.
+//!
+//! The topology is the shared vocabulary between the simulator (which
+//! enforces it), the procfs facade (which renders it as sysfs text), the
+//! Reporter (which scores against its distance matrix), and the AOT
+//! artifacts (which receive it as the `D` tensor).
+
+pub mod detect;
+
+use crate::config::MachineConfig;
+
+/// Immutable description of a NUMA machine.
+#[derive(Clone, Debug)]
+pub struct NumaTopology {
+    /// Number of NUMA nodes.
+    pub nodes: usize,
+    /// Cores per node (homogeneous, like the paper's 4x10 E7-4850 box).
+    pub cores_per_node: usize,
+    /// SLIT distance matrix, row-major; `dist[i][j]`, local = 10.
+    pub distance: Vec<Vec<f64>>,
+    /// Memory-controller bandwidth per node, GB/s.
+    pub bandwidth_gbs: Vec<f64>,
+    /// DRAM capacity per node, in 4 KiB pages.
+    pub pages_per_node: u64,
+}
+
+/// Global core id -> (node, local core index).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CoreId(pub usize);
+
+impl NumaTopology {
+    /// Build from a machine config (preset or explicit fields).
+    pub fn from_config(cfg: &MachineConfig) -> Self {
+        let distance = match &cfg.distance {
+            Some(d) => d.clone(),
+            None => Self::ring_distance(cfg.nodes, cfg.remote_distance),
+        };
+        let pages = (cfg.mem_gib_per_node * 1024.0 * 1024.0 / 4.0) as u64;
+        Self {
+            nodes: cfg.nodes,
+            cores_per_node: cfg.cores_per_node,
+            distance,
+            bandwidth_gbs: vec![cfg.bandwidth_gbs; cfg.nodes],
+            pages_per_node: pages,
+        }
+    }
+
+    /// The paper's testbed (DELL R910: 4 nodes x 10 cores).
+    pub fn r910_40core() -> Self {
+        Self::from_config(&MachineConfig::default())
+    }
+
+    /// SLIT matrix for a ring/fully-connected hybrid: adjacent sockets at
+    /// `remote`, opposite sockets one hop further (QPI 2-hop), local 10.
+    /// Matches how real 4-socket SLITs look (10/21/21/30-ish).
+    pub fn ring_distance(nodes: usize, remote: f64) -> Vec<Vec<f64>> {
+        let mut d = vec![vec![10.0; nodes]; nodes];
+        for i in 0..nodes {
+            for j in 0..nodes {
+                if i == j {
+                    continue;
+                }
+                // Hop distance on a ring.
+                let fwd = (j + nodes - i) % nodes;
+                let hops = fwd.min(nodes - fwd).max(1);
+                d[i][j] = remote + (hops - 1) as f64 * (remote - 10.0) * 0.45;
+            }
+        }
+        d
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.nodes * self.cores_per_node
+    }
+
+    /// Node that owns a global core id.
+    pub fn node_of_core(&self, core: CoreId) -> usize {
+        assert!(core.0 < self.total_cores(), "core {} out of range", core.0);
+        core.0 / self.cores_per_node
+    }
+
+    /// Global core ids belonging to a node.
+    pub fn cores_of_node(&self, node: usize) -> std::ops::Range<usize> {
+        assert!(node < self.nodes);
+        let start = node * self.cores_per_node;
+        start..start + self.cores_per_node
+    }
+
+    pub fn dist(&self, from: usize, to: usize) -> f64 {
+        self.distance[from][to]
+    }
+
+    /// Flattened row-major distance matrix as f32 (AOT `D` input).
+    pub fn distance_f32(&self) -> Vec<f32> {
+        self.distance
+            .iter()
+            .flat_map(|row| row.iter().map(|&x| x as f32))
+            .collect()
+    }
+
+    /// Linux `cpulist` string for a node ("0-9" style).
+    pub fn cpulist(&self, node: usize) -> String {
+        let r = self.cores_of_node(node);
+        format!("{}-{}", r.start, r.end - 1)
+    }
+
+    /// Validate structural invariants (used by config loading and tests).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.distance.len() != self.nodes {
+            return Err("distance rows != nodes".into());
+        }
+        for (i, row) in self.distance.iter().enumerate() {
+            if row.len() != self.nodes {
+                return Err(format!("distance row {i} wrong length"));
+            }
+            if (row[i] - 10.0).abs() > 1e-9 {
+                return Err(format!("local distance of node {i} must be 10"));
+            }
+            for (j, &x) in row.iter().enumerate() {
+                if i != j && x <= 10.0 {
+                    return Err(format!("remote distance [{i}][{j}] must exceed 10"));
+                }
+            }
+        }
+        if self.bandwidth_gbs.iter().any(|&b| b <= 0.0) {
+            return Err("bandwidth must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn r910_shape() {
+        let t = NumaTopology::r910_40core();
+        assert_eq!(t.nodes, 4);
+        assert_eq!(t.total_cores(), 40);
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn core_node_mapping_roundtrip() {
+        let t = NumaTopology::r910_40core();
+        for c in 0..t.total_cores() {
+            let n = t.node_of_core(CoreId(c));
+            assert!(t.cores_of_node(n).contains(&c));
+        }
+    }
+
+    #[test]
+    fn ring_distance_symmetric_and_local() {
+        let d = NumaTopology::ring_distance(4, 21.0);
+        for i in 0..4 {
+            assert_eq!(d[i][i], 10.0);
+            for j in 0..4 {
+                assert_eq!(d[i][j], d[j][i]);
+            }
+        }
+        // Opposite socket (2 hops) further than adjacent (1 hop).
+        assert!(d[0][2] > d[0][1]);
+    }
+
+    #[test]
+    fn two_node_distance_is_flat() {
+        let d = NumaTopology::ring_distance(2, 20.0);
+        assert_eq!(d[0][1], 20.0);
+        assert_eq!(d[1][0], 20.0);
+    }
+
+    #[test]
+    fn cpulist_format() {
+        let t = NumaTopology::r910_40core();
+        assert_eq!(t.cpulist(0), "0-9");
+        assert_eq!(t.cpulist(3), "30-39");
+    }
+
+    #[test]
+    fn validate_catches_bad_local_distance() {
+        let mut t = NumaTopology::r910_40core();
+        t.distance[1][1] = 12.0;
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_nonpositive_bandwidth() {
+        let mut t = NumaTopology::r910_40core();
+        t.bandwidth_gbs[2] = 0.0;
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn distance_f32_is_row_major() {
+        let t = NumaTopology::r910_40core();
+        let f = t.distance_f32();
+        assert_eq!(f.len(), 16);
+        assert_eq!(f[0], 10.0);
+        assert_eq!(f[1], t.distance[0][1] as f32);
+        assert_eq!(f[5], 10.0);
+    }
+
+    #[test]
+    fn pages_per_node_from_gib() {
+        let t = NumaTopology::r910_40core();
+        // 8 GiB / 4 KiB = 2M pages.
+        assert_eq!(t.pages_per_node, 2 * 1024 * 1024);
+    }
+}

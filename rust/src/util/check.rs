@@ -1,0 +1,109 @@
+//! Mini property-testing helper (the vendor set has no `proptest`).
+//!
+//! `forall` runs a property over many PRNG-generated cases and, on failure,
+//! reports the exact `(seed, case)` pair so the failing input is one
+//! `reproduce(seed, case)` away. Coordinator invariants (routing, batching,
+//! placement, state) are checked with this throughout `rust/tests/`.
+
+use super::rng::Rng;
+
+/// Result type for properties: `Err(msg)` fails the case with context.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` derived deterministic streams of `seed`.
+///
+/// Each case gets an independent `Rng` fork, so shrinking a failure is as
+/// simple as re-running one case id.
+pub fn forall<F>(name: &str, seed: u64, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let mut rng = root.fork(case);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at seed={seed} case={case}: {msg}\n\
+                 reproduce with: forall_case(\"{name}\", {seed}, {case}, prop)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case (the reproduction hook `forall` points at).
+pub fn forall_case<F>(name: &str, seed: u64, case: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    let mut root = Rng::new(seed);
+    let mut rng = root.fork(case);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property '{name}' case {case} (seed {seed}): {msg}");
+    }
+}
+
+/// Assert helper producing `PropResult` with formatted context.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+/// Approximate float equality for properties.
+pub fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        forall("count", 1, 50, |_| {
+            ran += 1;
+            Ok(())
+        });
+        assert_eq!(ran, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_context() {
+        forall("fails", 2, 10, |rng| {
+            let x = rng.f64();
+            if x < 0.9 {
+                Ok(())
+            } else {
+                Err(format!("x={x} too big"))
+            }
+        });
+    }
+
+    #[test]
+    fn forall_case_reproduces_same_stream() {
+        let mut first = None;
+        forall("capture", 3, 5, |rng| {
+            if first.is_none() {
+                first = Some(rng.next_u64());
+            }
+            Ok(())
+        });
+        // Case 0 of seed 3 must regenerate the identical first draw.
+        forall_case("capture", 3, 0, |rng| {
+            assert_eq!(rng.next_u64(), first.unwrap());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6));
+        assert!(!close(1.0, 2.0, 1e-6));
+        assert!(close(1e9, 1e9 + 100.0, 1e-6));
+    }
+}

@@ -1,0 +1,104 @@
+//! Exponentially-weighted moving averages.
+//!
+//! The Monitor smooths noisy per-sample readings (CPU share, page heat,
+//! memory intensity) before the Reporter acts on them, exactly like the
+//! kernel's load-tracking does — a raw single-sample spike must not
+//! trigger a migration storm.
+
+/// Classic EWMA with a fixed smoothing factor.
+#[derive(Clone, Copy, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    /// `alpha` in (0, 1]: weight of the newest sample.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha out of range: {alpha}");
+        Self { alpha, value: None }
+    }
+
+    /// From a half-life measured in samples: after `half_life` updates a
+    /// value's weight has decayed to 1/2.
+    pub fn with_half_life(half_life: f64) -> Self {
+        assert!(half_life > 0.0);
+        Self::new(1.0 - 0.5f64.powf(1.0 / half_life))
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => prev + self.alpha * (x - prev),
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> f64 {
+        self.value.unwrap_or(0.0)
+    }
+
+    pub fn is_primed(&self) -> bool {
+        self.value.is_some()
+    }
+
+    pub fn reset(&mut self) {
+        self.value = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_sample_is_identity() {
+        let mut e = Ewma::new(0.3);
+        assert_eq!(e.update(10.0), 10.0);
+    }
+
+    #[test]
+    fn converges_to_constant_input() {
+        let mut e = Ewma::new(0.2);
+        for _ in 0..200 {
+            e.update(5.0);
+        }
+        assert!((e.get() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn alpha_one_tracks_exactly() {
+        let mut e = Ewma::new(1.0);
+        e.update(1.0);
+        e.update(42.0);
+        assert_eq!(e.get(), 42.0);
+    }
+
+    #[test]
+    fn smooths_spikes() {
+        let mut e = Ewma::new(0.1);
+        for _ in 0..50 {
+            e.update(1.0);
+        }
+        e.update(100.0); // single spike
+        assert!(e.get() < 12.0, "spike leaked: {}", e.get());
+    }
+
+    #[test]
+    fn half_life_semantics() {
+        let mut e = Ewma::with_half_life(10.0);
+        e.update(0.0);
+        for _ in 0..10 {
+            e.update(1.0);
+        }
+        // After one half-life of 1.0-samples from 0, we should be ~0.5.
+        assert!((e.get() - 0.5).abs() < 0.05, "{}", e.get());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_alpha() {
+        Ewma::new(0.0);
+    }
+}

@@ -1,0 +1,144 @@
+//! Minimal leveled logger (the vendor set has no `env_logger`).
+//!
+//! Level comes from `NUMASCHED_LOG` (error|warn|info|debug|trace) or is set
+//! programmatically; output goes to stderr so experiment stdout stays
+//! machine-parseable.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
+
+fn init_from_env() -> u8 {
+    let lvl = std::env::var("NUMASCHED_LOG")
+        .ok()
+        .and_then(|s| Level::parse(&s))
+        .unwrap_or(Level::Warn) as u8;
+    MAX_LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// Current maximum level, lazily initialized from the environment.
+pub fn max_level() -> Level {
+    let raw = MAX_LEVEL.load(Ordering::Relaxed);
+    let raw = if raw == 255 { init_from_env() } else { raw };
+    // Safety: raw is always stored from a Level.
+    match raw {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Override the level (used by `--verbose` flags and tests).
+pub fn set_max_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    level <= max_level()
+}
+
+/// Implementation detail of the macros.
+pub fn log(level: Level, module: &str, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{} {}] {}", level.tag(), module, args);
+    }
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Error, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Trace, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("info"), Some(Level::Info));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("bogus"), None);
+    }
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Trace);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn set_and_check() {
+        set_max_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        assert!(!enabled(Level::Trace));
+        set_max_level(Level::Warn);
+        assert!(!enabled(Level::Info));
+    }
+}

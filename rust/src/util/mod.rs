@@ -1,0 +1,12 @@
+//! Zero-dependency substrate utilities: deterministic PRNG, statistics,
+//! EWMA smoothing, leveled logging, and a mini property-test runner.
+//!
+//! The offline build environment vendors only the `xla` crate's dependency
+//! closure, so `rand`, `proptest`, `env_logger`, etc. are reimplemented
+//! here at the size this project needs.
+
+pub mod check;
+pub mod ewma;
+pub mod log;
+pub mod rng;
+pub mod stats;

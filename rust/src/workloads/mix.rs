@@ -1,0 +1,146 @@
+//! Workload mixes: the paper's evaluation setup builders.
+//!
+//! Fig 7: "half of the workload focuses on CPU-intensive task scheduling
+//! with the PARSEC benchmark suite; the other half focuses on
+//! memory-intensive task scheduling" — `fig7_mix` launches one instance
+//! of each of the 12 apps (6 memory-intensive, 6 CPU-leaning by the
+//! catalog split) plus enough co-runners to oversubscribe the box.
+//!
+//! Fig 8: `fig8_mix` builds the "real server environment": apache
+//! workers + mysqld + background daemons + memory-intensive noise.
+
+use super::{parsec, server, LaunchSpec};
+
+/// One instance of every PARSEC app (the Fig-7 measured set), with the
+/// given importance assigned to the measured apps.
+pub fn fig7_measured(importance: f64) -> Vec<LaunchSpec> {
+    parsec::NAMES
+        .iter()
+        .map(|n| {
+            let mut s = parsec::spec(n).unwrap();
+            s.importance = importance;
+            s
+        })
+        .collect()
+}
+
+/// Background co-runners for Fig 7: an extra CPU-half and memory-half,
+/// low importance (they are load, not subjects). The memory hogs get
+/// slow, strong phases with staggered periods: server background load
+/// breathes, which is exactly what a static t=0 pin cannot follow and
+/// the paper's scheduler can.
+pub fn fig7_background() -> Vec<LaunchSpec> {
+    let mut out = Vec::new();
+    for (i, n) in ["canneal", "streamcluster", "dedup", "ferret"].iter().enumerate() {
+        let mut s = parsec::spec(n).unwrap();
+        s.comm = format!("bg-{n}");
+        s.importance = 0.5;
+        s.behavior.work_units = f64::INFINITY; // keep pressure constant
+        s.behavior.phase_period_ms = 2_000.0 + 700.0 * i as f64;
+        s.behavior.phase_amplitude = 0.5;
+        out.push(s);
+    }
+    for n in ["blackscholes", "swaptions", "vips", "bodytrack"] {
+        let mut s = parsec::spec(n).unwrap();
+        s.comm = format!("bg-{n}");
+        s.importance = 0.5;
+        s.behavior.work_units = f64::INFINITY;
+        out.push(s);
+    }
+    out
+}
+
+/// The full Fig-7 launch set: measured apps (importance 2.0 — the user
+/// cares about them) + steady background halves.
+pub fn fig7_mix() -> Vec<LaunchSpec> {
+    let mut v = fig7_measured(2.0);
+    v.extend(fig7_background());
+    v
+}
+
+/// Fig-8 server consolidation: `n_apache` web workers, one mysqld, and
+/// background noise (daemons + two memory hogs).
+pub fn fig8_mix(n_apache: usize, n_daemons: usize) -> Vec<LaunchSpec> {
+    let mut out = Vec::new();
+    for _ in 0..n_apache {
+        let mut s = server::apache();
+        s.importance = 3.0; // the services the operator cares about
+        out.push(s);
+    }
+    let mut db = server::mysqld();
+    db.importance = 3.0;
+    out.push(db);
+    for _ in 0..n_daemons {
+        out.push(server::daemon());
+    }
+    // Memory-intensive background load (batch jobs on the same box).
+    for n in ["canneal", "streamcluster"] {
+        let mut s = parsec::spec(n).unwrap();
+        s.comm = format!("batch-{n}");
+        s.importance = 0.3;
+        s.behavior.work_units = f64::INFINITY;
+        out.push(s);
+    }
+    out
+}
+
+/// Fig-6 contention probe: one measured instance of `name` plus `hogs`
+/// infinite memory-bound co-runners.
+pub fn fig6_mix(name: &str, hogs: usize) -> Option<Vec<LaunchSpec>> {
+    let mut out = vec![parsec::spec(name)?];
+    out[0].importance = 2.0;
+    for i in 0..hogs {
+        let mut s = parsec::spec("canneal")?;
+        s.comm = format!("hog{i}");
+        s.importance = 0.5;
+        s.behavior.work_units = f64::INFINITY;
+        out.push(s);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_mix_composition() {
+        let mix = fig7_mix();
+        assert_eq!(mix.len(), 12 + 8);
+        // Measured apps are finite and important; background is infinite.
+        let measured: Vec<_> = mix.iter().filter(|s| !s.comm.starts_with("bg-")).collect();
+        assert_eq!(measured.len(), 12);
+        assert!(measured.iter().all(|s| !s.behavior.is_daemon()));
+        assert!(measured.iter().all(|s| s.importance > 1.0));
+        let bg: Vec<_> = mix.iter().filter(|s| s.comm.starts_with("bg-")).collect();
+        assert!(bg.iter().all(|s| s.behavior.is_daemon()));
+    }
+
+    #[test]
+    fn fig7_mix_halves() {
+        // Half the background is memory-intensive, half CPU-leaning.
+        let bg = fig7_background();
+        let mem = bg
+            .iter()
+            .filter(|s| s.behavior.mem_intensity >= 0.5)
+            .count();
+        assert_eq!(mem, 4);
+        assert_eq!(bg.len() - mem, 4);
+    }
+
+    #[test]
+    fn fig8_mix_composition() {
+        let mix = fig8_mix(6, 10);
+        assert_eq!(mix.iter().filter(|s| s.comm == "apache").count(), 6);
+        assert_eq!(mix.iter().filter(|s| s.comm == "mysqld").count(), 1);
+        assert_eq!(mix.iter().filter(|s| s.comm == "daemon").count(), 10);
+        assert_eq!(mix.iter().filter(|s| s.comm.starts_with("batch-")).count(), 2);
+    }
+
+    #[test]
+    fn fig6_mix_scales_hogs() {
+        assert_eq!(fig6_mix("vips", 0).unwrap().len(), 1);
+        assert_eq!(fig6_mix("vips", 3).unwrap().len(), 4);
+        assert!(fig6_mix("nope", 1).is_none());
+    }
+}

@@ -1,0 +1,62 @@
+//! Workload models: the PARSEC-like suite (Table 1) and the Fig-8 server
+//! daemons. Each workload maps the paper's qualitative characterization
+//! (parallel model, granularity, sharing, exchange) plus published
+//! intensity characterization onto `sim::TaskBehavior` parameters.
+
+pub mod mix;
+pub mod parsec;
+pub mod server;
+
+use crate::sim::TaskBehavior;
+
+/// A launchable workload instance.
+#[derive(Clone, Debug)]
+pub struct LaunchSpec {
+    pub comm: String,
+    pub behavior: TaskBehavior,
+    pub threads: usize,
+    pub importance: f64,
+}
+
+/// Look up any catalog entry (PARSEC app or server daemon) by name.
+pub fn by_name(name: &str) -> Option<LaunchSpec> {
+    parsec::spec(name).or_else(|| server::spec(name))
+}
+
+/// Every catalog name (for CLI help and property tests).
+pub fn all_names() -> Vec<&'static str> {
+    let mut v: Vec<&'static str> = parsec::NAMES.to_vec();
+    v.extend(server::NAMES);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_catalog_entry_is_launchable_and_valid() {
+        for name in all_names() {
+            let spec = by_name(name).unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(spec.comm, name);
+            assert!(spec.threads > 0, "{name}");
+            spec.behavior
+                .validate()
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(by_name("doom").is_none());
+    }
+
+    #[test]
+    fn catalog_has_no_duplicate_names() {
+        let names = all_names();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len());
+    }
+}

@@ -1,0 +1,183 @@
+//! The 12 PARSEC-like synthetic applications, parameterized by the
+//! paper's Table 1 (parallel model / granularity / sharing / exchange)
+//! plus the standard PARSEC characterization literature for memory
+//! intensity and working-set size (Bienia et al., PACT'08).
+//!
+//! These are *models*, not the binaries: what Figs 6–7 need from PARSEC
+//! is its spread of memory behaviour classes, which Table 1 defines.
+
+use crate::sim::TaskBehavior;
+
+use super::LaunchSpec;
+
+/// Qualitative levels from Table 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    Low,
+    Medium,
+    High,
+}
+
+/// One catalog row (Table 1 + characterization).
+#[derive(Clone, Debug)]
+pub struct ParsecApp {
+    pub name: &'static str,
+    pub domain: &'static str,
+    pub model: &'static str, // data-parallel | pipeline | unstructured
+    pub granularity: &'static str, // coarse | medium | fine
+    pub sharing: Level,
+    pub exchange: Level,
+    /// Memory-boundedness in [0,1] (characterization literature).
+    pub mem_intensity: f64,
+    /// Working set, 4 KiB pages.
+    pub ws_pages: u64,
+    /// Solo work units (calibrated: solo runtime 2–4 virtual seconds at
+    /// 4 threads).
+    pub work_units: f64,
+}
+
+/// Table 1, verbatim ordering.
+pub const APPS: [ParsecApp; 12] = [
+    ParsecApp { name: "blackscholes", domain: "Financial analysis", model: "data-parallel", granularity: "coarse", sharing: Level::Low, exchange: Level::Low, mem_intensity: 0.08, ws_pages: 15_000, work_units: 10_000.0 },
+    ParsecApp { name: "bodytrack", domain: "Computer vision", model: "data-parallel", granularity: "medium", sharing: Level::High, exchange: Level::Medium, mem_intensity: 0.30, ws_pages: 30_000, work_units: 9_000.0 },
+    ParsecApp { name: "canneal", domain: "Engineering", model: "unstructured", granularity: "fine", sharing: Level::High, exchange: Level::High, mem_intensity: 0.90, ws_pages: 220_000, work_units: 6_000.0 },
+    ParsecApp { name: "dedup", domain: "Enterprise storage", model: "pipeline", granularity: "medium", sharing: Level::High, exchange: Level::High, mem_intensity: 0.65, ws_pages: 180_000, work_units: 7_000.0 },
+    ParsecApp { name: "facesim", domain: "Animation", model: "data-parallel", granularity: "coarse", sharing: Level::Low, exchange: Level::Medium, mem_intensity: 0.45, ws_pages: 75_000, work_units: 8_000.0 },
+    ParsecApp { name: "ferret", domain: "Similarity search", model: "pipeline", granularity: "medium", sharing: Level::High, exchange: Level::High, mem_intensity: 0.60, ws_pages: 60_000, work_units: 7_500.0 },
+    ParsecApp { name: "fluidanimate", domain: "Animation", model: "data-parallel", granularity: "fine", sharing: Level::Low, exchange: Level::Medium, mem_intensity: 0.50, ws_pages: 50_000, work_units: 8_000.0 },
+    ParsecApp { name: "freqmine", domain: "Data mining", model: "data-parallel", granularity: "medium", sharing: Level::High, exchange: Level::Medium, mem_intensity: 0.55, ws_pages: 120_000, work_units: 7_500.0 },
+    ParsecApp { name: "streamcluster", domain: "Data mining", model: "data-parallel", granularity: "medium", sharing: Level::Low, exchange: Level::Medium, mem_intensity: 0.85, ws_pages: 25_000, work_units: 6_500.0 },
+    ParsecApp { name: "swaptions", domain: "Financial analysis", model: "data-parallel", granularity: "coarse", sharing: Level::Low, exchange: Level::Low, mem_intensity: 0.06, ws_pages: 3_000, work_units: 10_000.0 },
+    ParsecApp { name: "vips", domain: "Media processing", model: "data-parallel", granularity: "coarse", sharing: Level::Low, exchange: Level::Medium, mem_intensity: 0.40, ws_pages: 40_000, work_units: 8_500.0 },
+    ParsecApp { name: "x264", domain: "Media processing", model: "pipeline", granularity: "coarse", sharing: Level::High, exchange: Level::High, mem_intensity: 0.55, ws_pages: 45_000, work_units: 8_000.0 },
+];
+
+pub const NAMES: [&str; 12] = [
+    "blackscholes", "bodytrack", "canneal", "dedup", "facesim", "ferret",
+    "fluidanimate", "freqmine", "streamcluster", "swaptions", "vips", "x264",
+];
+
+/// Default thread count per instance (the paper runs PARSEC multithreaded
+/// on the 40-core box; 4 keeps the Fig-7 mix oversubscribed but sane).
+pub const DEFAULT_THREADS: usize = 4;
+
+fn sharing_frac(l: Level) -> f64 {
+    match l {
+        Level::Low => 0.15,
+        Level::Medium => 0.40,
+        Level::High => 0.70,
+    }
+}
+
+fn exchange_frac(l: Level) -> f64 {
+    match l {
+        Level::Low => 0.10,
+        Level::Medium => 0.40,
+        Level::High => 0.80,
+    }
+}
+
+fn granularity_frac(g: &str) -> f64 {
+    match g {
+        "coarse" => 1.0,
+        "medium" => 0.6,
+        "fine" => 0.25,
+        _ => 0.6,
+    }
+}
+
+impl ParsecApp {
+    pub fn behavior(&self) -> TaskBehavior {
+        TaskBehavior {
+            work_units: self.work_units,
+            mem_intensity: self.mem_intensity,
+            ws_pages: self.ws_pages,
+            shared_frac: sharing_frac(self.sharing),
+            exchange: exchange_frac(self.exchange),
+            granularity: granularity_frac(self.granularity),
+            // Pipeline apps breathe (stage drain/fill); data-parallel are
+            // steady.
+            phase_period_ms: if self.model == "pipeline" { 400.0 } else { 0.0 },
+            phase_amplitude: if self.model == "pipeline" { 0.25 } else { 0.0 },
+        }
+    }
+
+    pub fn is_memory_intensive(&self) -> bool {
+        self.mem_intensity >= 0.5
+    }
+}
+
+pub fn app(name: &str) -> Option<&'static ParsecApp> {
+    APPS.iter().find(|a| a.name == name)
+}
+
+pub fn spec(name: &str) -> Option<LaunchSpec> {
+    app(name).map(|a| LaunchSpec {
+        comm: a.name.to_string(),
+        behavior: a.behavior(),
+        threads: DEFAULT_THREADS,
+        importance: 1.0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twelve_apps_match_table1_names() {
+        assert_eq!(APPS.len(), 12);
+        for (a, n) in APPS.iter().zip(NAMES) {
+            assert_eq!(a.name, n);
+        }
+    }
+
+    #[test]
+    fn behaviors_validate() {
+        for a in &APPS {
+            a.behavior().validate().unwrap_or_else(|e| panic!("{}: {e}", a.name));
+        }
+    }
+
+    #[test]
+    fn table1_qualitative_mapping() {
+        let canneal = app("canneal").unwrap();
+        assert_eq!(canneal.model, "unstructured");
+        assert_eq!(canneal.sharing, Level::High);
+        let b = canneal.behavior();
+        assert!(b.shared_frac > 0.6);
+        assert!(b.exchange > 0.6);
+        assert!(b.granularity < 0.3, "fine-grained");
+
+        let swaptions = app("swaptions").unwrap();
+        let b = swaptions.behavior();
+        assert!(b.shared_frac < 0.2);
+        assert!(b.mem_intensity < 0.1, "compute-bound");
+        assert_eq!(b.granularity, 1.0, "coarse");
+    }
+
+    #[test]
+    fn pipeline_apps_have_phases() {
+        for name in ["dedup", "ferret", "x264"] {
+            let b = app(name).unwrap().behavior();
+            assert!(b.phase_period_ms > 0.0, "{name}");
+        }
+        assert_eq!(app("blackscholes").unwrap().behavior().phase_period_ms, 0.0);
+    }
+
+    #[test]
+    fn memory_split_covers_both_halves() {
+        // The paper's eval mixes half CPU-intensive, half memory-intensive:
+        // the catalog must supply both classes.
+        let mem: Vec<_> = APPS.iter().filter(|a| a.is_memory_intensive()).collect();
+        assert!(mem.len() >= 5, "memory-intensive apps: {}", mem.len());
+        assert!(mem.len() <= 7, "cpu-intensive apps must exist too");
+    }
+
+    #[test]
+    fn canneal_and_streamcluster_are_the_memory_hogs() {
+        assert!(app("canneal").unwrap().mem_intensity >= 0.85);
+        assert!(app("streamcluster").unwrap().mem_intensity >= 0.80);
+        assert!(app("blackscholes").unwrap().mem_intensity <= 0.10);
+    }
+}

@@ -1,0 +1,117 @@
+//! Fig-8 server daemons: the Apache-like webserver and MySQL-like
+//! database models, plus the background service noise the paper's "real
+//! server environment that executes many service daemons" implies.
+//!
+//! Shapes that matter for Fig 8:
+//! * apache — prefork-style: several worker *processes*, small per-worker
+//!   working sets, low sharing, bursty request phases;
+//! * mysqld — one big multi-threaded process around a shared buffer
+//!   pool: high sharing, steady, memory-heavy;
+//! * background daemons — low-intensity noise that keeps every node busy.
+
+use crate::sim::TaskBehavior;
+
+use super::LaunchSpec;
+
+pub const NAMES: [&str; 3] = ["apache", "mysqld", "daemon"];
+
+/// Apache-like worker process (spawn several instances).
+pub fn apache() -> LaunchSpec {
+    LaunchSpec {
+        comm: "apache".into(),
+        behavior: TaskBehavior {
+            work_units: f64::INFINITY, // daemon: throughput-measured
+            mem_intensity: 0.35,
+            ws_pages: 24_000,
+            shared_frac: 0.10,
+            exchange: 0.15,
+            granularity: 0.9,
+            phase_period_ms: 500.0, // request bursts
+            phase_amplitude: 0.40,
+        },
+        threads: 2,
+        importance: 1.0,
+    }
+}
+
+/// MySQL-like database process (one instance, many threads).
+pub fn mysqld() -> LaunchSpec {
+    LaunchSpec {
+        comm: "mysqld".into(),
+        behavior: TaskBehavior {
+            work_units: f64::INFINITY,
+            mem_intensity: 0.60,
+            ws_pages: 300_000, // the buffer pool
+            shared_frac: 0.75,
+            exchange: 0.50,
+            granularity: 0.5,
+            phase_period_ms: 900.0,
+            phase_amplitude: 0.25,
+        },
+        threads: 8,
+        importance: 1.0,
+    }
+}
+
+/// Generic background service daemon (cron/syslog/agents...).
+pub fn daemon() -> LaunchSpec {
+    LaunchSpec {
+        comm: "daemon".into(),
+        behavior: TaskBehavior {
+            work_units: f64::INFINITY,
+            mem_intensity: 0.20,
+            ws_pages: 4_000,
+            shared_frac: 0.10,
+            exchange: 0.10,
+            granularity: 1.0,
+            phase_period_ms: 0.0,
+            phase_amplitude: 0.0,
+        },
+        threads: 1,
+        importance: 0.2, // nobody cares about cron's latency
+    }
+}
+
+pub fn spec(name: &str) -> Option<LaunchSpec> {
+    match name {
+        "apache" => Some(apache()),
+        "mysqld" => Some(mysqld()),
+        "daemon" => Some(daemon()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn daemons_are_infinite_work() {
+        for name in NAMES {
+            assert!(spec(name).unwrap().behavior.is_daemon(), "{name}");
+        }
+    }
+
+    #[test]
+    fn shapes_match_the_fig8_story() {
+        let a = apache();
+        let m = mysqld();
+        // Apache: many small low-share workers; MySQL: one big shared pool.
+        assert!(a.behavior.ws_pages < m.behavior.ws_pages / 5);
+        assert!(a.behavior.shared_frac < 0.2);
+        assert!(m.behavior.shared_frac > 0.6);
+        assert!(m.threads > a.threads);
+    }
+
+    #[test]
+    fn background_noise_is_unimportant() {
+        assert!(daemon().importance < 0.5);
+    }
+
+    #[test]
+    fn behaviors_validate() {
+        for name in NAMES {
+            spec(name).unwrap().behavior.validate().unwrap();
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! Cross-layer contract test: the AOT PJRT artifact (L1 Pallas kernel
+//! lowered through the L2 JAX graph) must agree numerically with the
+//! pure-Rust scorer (L3 fallback) on random problems.
+//!
+//! This is the test that pins all three layers together: if the Python
+//! model, the Pallas kernel, or the Rust mirror drift apart, it fails.
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use std::path::PathBuf;
+
+use numasched::reporter::factors;
+use numasched::runtime::pack::{pack, ScoreProblem, TaskRow, NMAX, TMAX};
+use numasched::runtime::ScoringEngine;
+use numasched::util::rng::Rng;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn random_problem(rng: &mut Rng) -> ScoreProblem {
+    let n = 1 + rng.below(NMAX.min(8));
+    let t = 1 + rng.below(TMAX);
+    let mut distance = vec![vec![10.0; n]; n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                // Symmetric SLIT-ish distances in [11, 40].
+                let d = 11.0 + ((i * 7 + j * 13) % 30) as f64;
+                distance[i][j] = d;
+                distance[j][i] = d;
+            }
+        }
+    }
+    ScoreProblem {
+        tasks: (0..t)
+            .map(|i| TaskRow {
+                pid: i as i32,
+                pages_per_node: (0..n).map(|_| rng.range(0.0, 5e5)).collect(),
+                mem_intensity: rng.range(0.0, 8.0),
+                importance: rng.range(0.1, 10.0),
+                node: rng.below(n),
+            })
+            .collect(),
+        distance,
+        node_demand: (0..n).map(|_| rng.range(0.0, 30.0)).collect(),
+        node_bandwidth: (0..n).map(|_| rng.range(8.0, 24.0)).collect(),
+    }
+}
+
+fn assert_close(a: &[f32], b: &[f32], what: &str, case: u64) {
+    assert_eq!(a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = 1e-3 * (1.0 + x.abs().max(y.abs()));
+        assert!(
+            (x - y).abs() <= tol,
+            "case {case}: {what}[{i}] diverges: rust={x} hlo={y}"
+        );
+    }
+}
+
+#[test]
+fn rust_scorer_matches_hlo_artifact_on_random_problems() {
+    let engine = ScoringEngine::load(&artifacts_dir())
+        .expect("load artifacts — run `make artifacts` first");
+    let mut root = Rng::new(0xC0FFEE);
+    for case in 0..40 {
+        let mut rng = root.fork(case);
+        let problem = random_problem(&mut rng);
+        let packed = pack(&problem).unwrap();
+        let rust = factors::score_cpu(&packed);
+        let hlo = engine.score(&packed).expect("hlo score");
+        assert_close(&rust.s, &hlo.s, "s", case);
+        assert_close(&rust.dcur, &hlo.dcur, "dcur", case);
+        assert_close(&rust.r, &hlo.r, "r", case);
+        assert_close(&rust.c, &hlo.c, "c", case);
+    }
+}
+
+#[test]
+fn rust_node_stats_matches_hlo_artifact() {
+    let engine = ScoringEngine::load(&artifacts_dir()).expect("load artifacts");
+    let mut root = Rng::new(0xBEEF);
+    for case in 0..20 {
+        let mut rng = root.fork(case);
+        let problem = random_problem(&mut rng);
+        let packed = pack(&problem).unwrap();
+        let (demand, rho, _imb) = factors::node_stats_cpu(&packed);
+        let hlo = engine.node_stats(&packed).expect("hlo node_stats");
+        assert_close(&demand, &hlo.demand, "demand", case);
+        assert_close(&rho, &hlo.rho, "rho", case);
+    }
+}
+
+#[test]
+fn manifest_constants_match_rust_consts() {
+    let engine = ScoringEngine::load(&artifacts_dir()).expect("load artifacts");
+    let m = &engine.manifest;
+    assert_eq!(m.tmax, TMAX);
+    assert_eq!(m.nmax, NMAX);
+    assert!((m.alpha - factors::consts::ALPHA as f64).abs() < 1e-6);
+    assert!((m.beta - factors::consts::BETA as f64).abs() < 1e-6);
+    assert!((m.gamma - factors::consts::GAMMA as f64).abs() < 1e-6);
+    assert!((m.rho_max - factors::consts::RHO_MAX as f64).abs() < 1e-6);
+}

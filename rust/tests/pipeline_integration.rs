@@ -1,0 +1,181 @@
+//! End-to-end and property-based integration tests over the whole L3
+//! pipeline: simulator -> procfs text -> Monitor -> Reporter ->
+//! Scheduler -> simulator control.
+
+use numasched::config::SchedulerConfig;
+use numasched::monitor::Monitor;
+use numasched::reporter::{Backend, Reporter};
+use numasched::scheduler::UserScheduler;
+use numasched::sim::{Machine, Placement, TaskBehavior};
+use numasched::topology::NumaTopology;
+use numasched::util::check::{forall, PropResult};
+use numasched::util::rng::Rng;
+
+fn pipeline(machine: &Machine) -> (Monitor, Reporter, UserScheduler) {
+    let monitor = Monitor::discover(machine).expect("discover");
+    let mut reporter = Reporter::new(
+        Backend::Cpu,
+        monitor.topo.distance.clone(),
+        machine.topo.bandwidth_gbs.clone(),
+    );
+    reporter.importance.insert("victim".into(), 5.0);
+    let mut cfg = SchedulerConfig::default();
+    cfg.migration_cooldown_ms = 100;
+    let mut sched = UserScheduler::new(&cfg);
+    sched.cores_per_node = machine.topo.cores_per_node;
+    (monitor, reporter, sched)
+}
+
+/// The paper's core scenario: an important memory-bound task stranded away
+/// from its pages, with a hot co-runner on the page node. The full
+/// pipeline must detect it (through procfs text!) and repatriate it.
+#[test]
+fn pipeline_repatriates_misplaced_important_task() {
+    let mut m = Machine::new(NumaTopology::r910_40core(), 5);
+    m.os_balance = false;
+    let victim = m.spawn("victim", TaskBehavior::mem_bound(1e12), 5.0, 2, Placement::Node(1));
+    {
+        // Strand the victim's memory on node 0.
+        let p = m.process_mut(victim).unwrap();
+        let total = p.pages.total();
+        p.pages.per_node = vec![total, 0, 0, 0];
+    }
+    let (monitor, mut reporter, mut sched) = pipeline(&m);
+    let mut moved = false;
+    while m.now_ms < 2_000.0 {
+        m.step();
+        if (m.now_ms as u64) % 10 == 0 {
+            let snap = monitor.sample(&m, m.now_ms);
+            if let Some(report) = reporter.ingest(&snap) {
+                let decisions = sched.apply(&report, &mut m);
+                moved |= decisions.iter().any(|d| d.pid == victim);
+            }
+        }
+    }
+    assert!(moved, "scheduler never acted on the victim");
+    // Task and pages must end up co-located (which node is immaterial —
+    // moving the task to node 0 or dragging the sticky pages to the task
+    // are both correct repairs).
+    let p = m.process(victim).unwrap();
+    let home = p.home_node(4, 10);
+    let fr = p.pages.fractions();
+    assert!(
+        fr[home] > 0.9,
+        "task on node {home} but pages at {fr:?} — locality not restored"
+    );
+}
+
+/// Pages are conserved by the whole pipeline no matter what it does.
+#[test]
+fn prop_pipeline_conserves_pages() {
+    forall("conserve-pages", 0xA11CE, 12, |rng: &mut Rng| -> PropResult {
+        let mut m = Machine::new(NumaTopology::r910_40core(), rng.next_u64());
+        let n_procs = 1 + rng.below(6);
+        let mut totals = Vec::new();
+        for i in 0..n_procs {
+            let b = if rng.chance(0.5) {
+                TaskBehavior::mem_bound(1e12)
+            } else {
+                TaskBehavior::cpu_bound(1e12)
+            };
+            let pid = m.spawn(&format!("p{i}"), b, rng.range(0.1, 5.0),
+                              1 + rng.below(6), Placement::LeastLoaded);
+            totals.push((pid, m.process(pid).unwrap().pages.total()));
+        }
+        let (monitor, mut reporter, mut sched) = pipeline(&m);
+        while m.now_ms < 300.0 {
+            m.step();
+            if (m.now_ms as u64) % 10 == 0 {
+                let snap = monitor.sample(&m, m.now_ms);
+                if let Some(report) = reporter.ingest(&snap) {
+                    sched.apply(&report, &mut m);
+                }
+            }
+        }
+        for (pid, before) in totals {
+            let after = m.process(pid).unwrap().pages.total();
+            if before != after {
+                return Err(format!("pid {pid}: pages {before} -> {after}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Every decision targets a valid node, never a pinned (admin) task, and
+/// respects the per-epoch move bound.
+#[test]
+fn prop_scheduler_decisions_are_well_formed() {
+    forall("well-formed-decisions", 0xD00D, 12, |rng: &mut Rng| -> PropResult {
+        let mut m = Machine::new(NumaTopology::r910_40core(), rng.next_u64());
+        for i in 0..4 + rng.below(8) {
+            m.spawn(&format!("w{i}"), TaskBehavior::mem_bound(1e12),
+                    rng.range(0.1, 4.0), 1 + rng.below(4), Placement::LeastLoaded);
+        }
+        let (monitor, mut reporter, mut sched) = pipeline(&m);
+        sched.pins.insert("w0".into(), 3);
+        while m.now_ms < 400.0 {
+            m.step();
+            if (m.now_ms as u64) % 10 == 0 {
+                let snap = monitor.sample(&m, m.now_ms);
+                if let Some(report) = reporter.ingest(&snap) {
+                    let epoch = sched.apply(&report, &mut m);
+                    let moves = epoch
+                        .iter()
+                        .filter(|d| d.from != d.to)
+                        .count();
+                    if moves > sched.max_moves_per_epoch + sched.pins.len() {
+                        return Err(format!("{moves} moves in one epoch"));
+                    }
+                }
+            }
+        }
+        for d in &sched.decisions {
+            if d.to >= 4 {
+                return Err(format!("decision to node {}", d.to));
+            }
+            if d.comm == "w0" && d.to != 3 {
+                return Err(format!("pinned task moved to {}", d.to));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Monitor snapshots parsed from rendered procfs text must agree with
+/// the simulator's ground truth exactly.
+#[test]
+fn prop_monitor_reflects_ground_truth() {
+    forall("monitor-truth", 0xFACE, 15, |rng: &mut Rng| -> PropResult {
+        let mut m = Machine::new(NumaTopology::r910_40core(), rng.next_u64());
+        let n = 1 + rng.below(8);
+        for i in 0..n {
+            m.spawn(&format!("t{i}"), TaskBehavior::mem_bound(1e12), 1.0,
+                    1 + rng.below(4), Placement::Node(rng.below(4)));
+        }
+        for _ in 0..rng.below(50) {
+            m.step();
+        }
+        let monitor = Monitor::discover(&m).expect("discover");
+        let snap = monitor.sample(&m, m.now_ms);
+        if snap.tasks.len() != m.running_pids().len() {
+            return Err("task count mismatch".into());
+        }
+        for t in &snap.tasks {
+            let p = m.process(t.pid).expect("proc");
+            if t.threads as usize != p.nthreads() {
+                return Err(format!("pid {}: threads {} != {}", t.pid, t.threads, p.nthreads()));
+            }
+            if t.rss_pages != p.pages.total() {
+                return Err(format!("pid {}: rss {} != {}", t.pid, t.rss_pages, p.pages.total()));
+            }
+            if t.pages_per_node != p.pages.per_node {
+                return Err(format!("pid {}: pages {:?} != {:?}", t.pid, t.pages_per_node, p.pages.per_node));
+            }
+            if t.node != p.home_node(4, 10) && t.threads == 1 {
+                return Err(format!("pid {}: node {} != {}", t.pid, t.node, p.home_node(4, 10)));
+            }
+        }
+        Ok(())
+    });
+}
