@@ -1,0 +1,14 @@
+//! Bench: the huge-page ablation — speedup and migration-charge savings
+//! vs the THP backing fraction, on the r910-thp preset (2 MiB pools +
+//! TLB-stall term). The Monitor reads huge-page placement exclusively
+//! from rendered sysfs/numa_maps text.
+//! `cargo bench --bench hugepage_ablation`
+
+use numasched::experiments::hugepage_ablation;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let points = hugepage_ablation::run(42);
+    print!("{}", hugepage_ablation::render(&points));
+    eprintln!("[hugepage ablation regenerated in {:.2?}]", t0.elapsed());
+}

@@ -29,13 +29,14 @@ USAGE:
     numasched <COMMAND> [FLAGS]
 
 COMMANDS:
-    run            run a workload under one policy (see --policy)
-    table1         regenerate Table 1 (PARSEC characteristics)
-    fig6           regenerate Figure 6 (degradation-factor accuracy)
-    fig7           regenerate Figure 7 (speedup vs baselines, 40 cores)
-    fig8           regenerate Figure 8 (Apache/MySQL throughput)
-    host-monitor   run the Monitor against this host's real /proc
-    inspect        print machine presets and the workload catalog
+    run              run a workload under one policy (see --policy)
+    table1           regenerate Table 1 (PARSEC characteristics)
+    fig6             regenerate Figure 6 (degradation-factor accuracy)
+    fig7             regenerate Figure 7 (speedup vs baselines, 40 cores)
+    fig8             regenerate Figure 8 (Apache/MySQL throughput)
+    ablate-hugepages sweep THP backing fraction (speedup + op savings)
+    host-monitor     run the Monitor against this host's real /proc
+    inspect          print machine presets and the workload catalog
 
 FLAGS:
     --config <file>      TOML config (machine/scheduler/workloads)

@@ -54,22 +54,96 @@ impl fmt::Display for PolicyKind {
     }
 }
 
+/// Memory-hardware knobs handed to `mem::MemTopology` — the `[machine.mem]`
+/// table. Everything defaults to the seed model (flat 4 KiB pages, TLB
+/// term off) so existing configs and calibrated figures are unchanged.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemConfig {
+    /// Second-level TLB entries per core.
+    pub tlb_entries: u64,
+    /// TLB-stall weight in the simulator tick (0 disables the term).
+    pub tlb_weight: f64,
+    /// Reserved 2 MiB huge-page pool per node: empty = none, one entry =
+    /// replicated, else one entry per node.
+    pub hugepages_2m: Vec<u64>,
+    /// Reserved 1 GiB giant-page pool per node (same conventions).
+    pub hugepages_1g: Vec<u64>,
+    /// Per-node DRAM capacity override, GiB (heterogeneous boxes).
+    pub capacity_gib: Option<Vec<f64>>,
+    /// Socket cache attributes (applied to every node).
+    pub cache: crate::mem::CacheAttr,
+}
+
+impl Default for MemConfig {
+    fn default() -> Self {
+        Self {
+            tlb_entries: 1536,
+            tlb_weight: 0.0,
+            hugepages_2m: Vec::new(),
+            hugepages_1g: Vec::new(),
+            capacity_gib: None,
+            cache: crate::mem::CacheAttr::default(),
+        }
+    }
+}
+
+impl MemConfig {
+    /// Expand a per-node pool spec (empty / scalar / full vector).
+    fn expand(v: &[u64], nodes: usize) -> Vec<u64> {
+        match v.len() {
+            0 => vec![0; nodes],
+            1 => vec![v[0]; nodes],
+            _ => v.to_vec(),
+        }
+    }
+
+    /// Materialize the `mem::MemTopology` for an `nodes`-node machine
+    /// whose homogeneous capacity default is `default_pages_4k`.
+    pub fn to_topology(&self, nodes: usize, default_pages_4k: u64) -> crate::mem::MemTopology {
+        let mut mem =
+            crate::mem::MemTopology::homogeneous(nodes, default_pages_4k.max(1));
+        mem.tlb = crate::mem::TlbModel {
+            entries: self.tlb_entries,
+            weight: self.tlb_weight,
+        };
+        let h2 = Self::expand(&self.hugepages_2m, nodes);
+        let g1 = Self::expand(&self.hugepages_1g, nodes);
+        for (i, node) in mem.nodes.iter_mut().enumerate() {
+            if let Some(cap) = &self.capacity_gib {
+                if let Some(&gib) = cap.get(i) {
+                    node.capacity_pages_4k = (gib * 262_144.0) as u64;
+                }
+            }
+            node.huge_2m = h2.get(i).copied().unwrap_or(0);
+            node.giant_1g = g1.get(i).copied().unwrap_or(0);
+            node.cache = self.cache;
+        }
+        mem
+    }
+}
+
 /// Machine shape handed to `topology::NumaTopology`.
 #[derive(Clone, Debug)]
 pub struct MachineConfig {
-    /// Preset name: "r910-40core" (the paper's testbed), "2node-8core",
-    /// "8node-64core". Explicit fields below override preset values.
+    /// Preset name: "r910-40core" (the paper's testbed), "r910-thp"
+    /// (same box with 2 MiB pools + TLB modeling), "2node-8core",
+    /// "8node-64core", "8node-hetero" (asymmetric bandwidth/capacity).
+    /// Explicit fields below override preset values.
     pub preset: String,
     pub nodes: usize,
     pub cores_per_node: usize,
     /// DRAM per node, GiB.
     pub mem_gib_per_node: f64,
-    /// Memory-controller bandwidth per node, GB/s.
+    /// Memory-controller bandwidth per node, GB/s (homogeneous scalar).
     pub bandwidth_gbs: f64,
+    /// Per-node bandwidth vector; overrides the scalar when present.
+    pub bandwidth_gbs_per_node: Option<Vec<f64>>,
     /// Remote-access SLIT distance for 1-hop neighbours (local is 10).
     pub remote_distance: f64,
     /// Optional full SLIT matrix (row-major), overrides `remote_distance`.
     pub distance: Option<Vec<Vec<f64>>>,
+    /// Memory hardware (page tiers, pools, caches, TLB).
+    pub mem: MemConfig,
 }
 
 impl Default for MachineConfig {
@@ -83,8 +157,10 @@ impl Default for MachineConfig {
             cores_per_node: 10,
             mem_gib_per_node: 8.0,
             bandwidth_gbs: 20.0,
+            bandwidth_gbs_per_node: None,
             remote_distance: 21.0,
             distance: None,
+            mem: MemConfig::default(),
         }
     }
 }
@@ -93,14 +169,28 @@ impl MachineConfig {
     pub fn preset(name: &str) -> Option<Self> {
         match name {
             "r910-40core" => Some(Self::default()),
+            // The R910 with half of each node's DRAM reserved as 2 MiB
+            // pools and the TLB-stall term enabled — the hugepage
+            // ablation's box.
+            "r910-thp" => Some(Self {
+                preset: name.into(),
+                mem: MemConfig {
+                    tlb_weight: 0.3,
+                    hugepages_2m: vec![2048], // 4 GiB of each 8 GiB node
+                    ..MemConfig::default()
+                },
+                ..Self::default()
+            }),
             "2node-8core" => Some(Self {
                 preset: name.into(),
                 nodes: 2,
                 cores_per_node: 4,
                 mem_gib_per_node: 4.0,
                 bandwidth_gbs: 10.0,
+                bandwidth_gbs_per_node: None,
                 remote_distance: 20.0,
                 distance: None,
+                mem: MemConfig::default(),
             }),
             "8node-64core" => Some(Self {
                 preset: name.into(),
@@ -108,8 +198,33 @@ impl MachineConfig {
                 cores_per_node: 8,
                 mem_gib_per_node: 16.0,
                 bandwidth_gbs: 16.0,
+                bandwidth_gbs_per_node: None,
                 remote_distance: 21.0,
                 distance: None,
+                mem: MemConfig::default(),
+            }),
+            // An asymmetric 8-node box: two fat sockets, a mid tier, and
+            // slim expansion nodes — bandwidth, capacity, and huge-page
+            // pools all differ per node.
+            "8node-hetero" => Some(Self {
+                preset: name.into(),
+                nodes: 8,
+                cores_per_node: 8,
+                mem_gib_per_node: 16.0,
+                bandwidth_gbs: 16.0,
+                bandwidth_gbs_per_node: Some(vec![
+                    24.0, 24.0, 20.0, 20.0, 16.0, 16.0, 12.0, 12.0,
+                ]),
+                remote_distance: 21.0,
+                distance: None,
+                mem: MemConfig {
+                    tlb_weight: 0.3,
+                    hugepages_2m: vec![4096, 4096, 2048, 2048, 0, 0, 0, 0],
+                    capacity_gib: Some(vec![
+                        32.0, 32.0, 16.0, 16.0, 16.0, 16.0, 8.0, 8.0,
+                    ]),
+                    ..MemConfig::default()
+                },
             }),
             _ => None,
         }
@@ -271,6 +386,47 @@ impl Config {
                 return cfg_err("distance matrix shape must be nodes x nodes");
             }
         }
+        if let Some(b) = &self.machine.bandwidth_gbs_per_node {
+            if b.len() != self.machine.nodes {
+                return cfg_err(format!(
+                    "bandwidth_gbs has {} entries for {} nodes",
+                    b.len(),
+                    self.machine.nodes
+                ));
+            }
+            if b.iter().any(|&x| x <= 0.0) {
+                return cfg_err("bandwidth_gbs entries must be positive");
+            }
+        }
+        for (name, v) in [
+            ("hugepages_2m", &self.machine.mem.hugepages_2m),
+            ("hugepages_1g", &self.machine.mem.hugepages_1g),
+        ] {
+            if !matches!(v.len(), 0 | 1) && v.len() != self.machine.nodes {
+                return cfg_err(format!(
+                    "machine.mem.{name} has {} entries for {} nodes",
+                    v.len(),
+                    self.machine.nodes
+                ));
+            }
+        }
+        if let Some(c) = &self.machine.mem.capacity_gib {
+            if c.len() != self.machine.nodes {
+                return cfg_err(format!(
+                    "machine.mem.capacity_gib has {} entries for {} nodes",
+                    c.len(),
+                    self.machine.nodes
+                ));
+            }
+        }
+        // Full memory-hardware invariants (pool-vs-capacity fit, cache
+        // nesting, TLB weight) via the subsystem's own validator.
+        let pages = (self.machine.mem_gib_per_node * 262_144.0) as u64;
+        self.machine
+            .mem
+            .to_topology(self.machine.nodes, pages)
+            .validate(self.machine.nodes)
+            .map_err(ConfigError)?;
         if self.scheduler.report_period_ms < self.scheduler.monitor_period_ms {
             return cfg_err("report_period_ms must be >= monitor_period_ms");
         }
@@ -304,8 +460,29 @@ fn parse_machine(v: &Value) -> Result<MachineConfig, ConfigError> {
     if let Some(x) = v.get("mem_gib_per_node").and_then(Value::as_float) {
         m.mem_gib_per_node = x;
     }
-    if let Some(x) = v.get("bandwidth_gbs").and_then(Value::as_float) {
-        m.bandwidth_gbs = x;
+    // bandwidth_gbs accepts a scalar (homogeneous) or a per-node array
+    // (heterogeneous) — the old parser silently replicated the scalar
+    // and had no way to express asymmetric boxes.
+    match v.get("bandwidth_gbs") {
+        Some(Value::Array(rows)) => {
+            let vec = rows
+                .iter()
+                .map(|x| {
+                    x.as_float()
+                        .ok_or(ConfigError("bandwidth_gbs entries must be numeric".into()))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            m.bandwidth_gbs_per_node = Some(vec);
+        }
+        Some(x) => {
+            m.bandwidth_gbs = x
+                .as_float()
+                .ok_or(ConfigError("bandwidth_gbs must be numeric".into()))?;
+        }
+        None => {}
+    }
+    if let Some(mem) = v.get("mem") {
+        parse_mem(mem, &mut m.mem)?;
     }
     if let Some(x) = v.get("remote_distance").and_then(Value::as_float) {
         m.remote_distance = x;
@@ -325,6 +502,63 @@ fn parse_machine(v: &Value) -> Result<MachineConfig, ConfigError> {
         m.distance = Some(matrix);
     }
     Ok(m)
+}
+
+/// A `u64` field that accepts a scalar (replicated per node) or an array.
+fn parse_count_spec(v: &Value, what: &str) -> Result<Vec<u64>, ConfigError> {
+    match v {
+        Value::Array(items) => items
+            .iter()
+            .map(|x| {
+                x.as_int()
+                    .filter(|&i| i >= 0)
+                    .map(|i| i as u64)
+                    .ok_or(ConfigError(format!("{what} entries must be non-negative ints")))
+            })
+            .collect(),
+        x => x
+            .as_int()
+            .filter(|&i| i >= 0)
+            .map(|i| vec![i as u64])
+            .ok_or(ConfigError(format!("{what} must be a non-negative int or array"))),
+    }
+}
+
+/// The `[machine.mem]` table.
+fn parse_mem(v: &Value, m: &mut MemConfig) -> Result<(), ConfigError> {
+    if let Some(x) = v.get("tlb_entries").and_then(Value::as_int) {
+        m.tlb_entries = x.max(0) as u64;
+    }
+    if let Some(x) = v.get("tlb_weight").and_then(Value::as_float) {
+        m.tlb_weight = x;
+    }
+    if let Some(x) = v.get("hugepages_2m") {
+        m.hugepages_2m = parse_count_spec(x, "machine.mem.hugepages_2m")?;
+    }
+    if let Some(x) = v.get("hugepages_1g") {
+        m.hugepages_1g = parse_count_spec(x, "machine.mem.hugepages_1g")?;
+    }
+    if let Some(rows) = v.get("capacity_gib").and_then(Value::as_array) {
+        let cap = rows
+            .iter()
+            .map(|x| {
+                x.as_float()
+                    .ok_or(ConfigError("capacity_gib entries must be numeric".into()))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        m.capacity_gib = Some(cap);
+    }
+    for (key, slot) in [
+        ("l1d_kb", &mut m.cache.l1d_kb),
+        ("l2_kb", &mut m.cache.l2_kb),
+        ("l3_kb", &mut m.cache.l3_kb),
+        ("line_bytes", &mut m.cache.line_bytes),
+    ] {
+        if let Some(x) = v.get(key).and_then(Value::as_int) {
+            *slot = x.max(0) as u64;
+        }
+    }
+    Ok(())
 }
 
 fn parse_scheduler(v: &Value) -> Result<SchedulerConfig, ConfigError> {
@@ -487,6 +721,86 @@ mod tests {
     #[test]
     fn validation_rejects_too_many_nodes() {
         assert!(Config::from_str("[machine]\nnodes = 9").is_err());
+    }
+
+    #[test]
+    fn parses_per_node_bandwidth_array() {
+        let c = Config::from_str(
+            "[machine]\nnodes = 2\ncores_per_node = 2\nbandwidth_gbs = [24, 12.5]",
+        )
+        .unwrap();
+        assert_eq!(c.machine.bandwidth_gbs_per_node, Some(vec![24.0, 12.5]));
+        // Wrong length is a config error, not a silent replicate.
+        assert!(Config::from_str(
+            "[machine]\nnodes = 4\nbandwidth_gbs = [24, 12.5]"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn parses_machine_mem_table() {
+        let c = Config::from_str(
+            r#"
+            [machine]
+            preset = "2node-8core"
+
+            [machine.mem]
+            tlb_entries = 2048
+            tlb_weight = 0.25
+            hugepages_2m = [512, 0]
+            hugepages_1g = 1
+            l3_kb = 32768
+            "#,
+        )
+        .unwrap();
+        let mem = &c.machine.mem;
+        assert_eq!(mem.tlb_entries, 2048);
+        assert_eq!(mem.tlb_weight, 0.25);
+        assert_eq!(mem.hugepages_2m, vec![512, 0]);
+        assert_eq!(mem.hugepages_1g, vec![1], "scalar replicates per node");
+        assert_eq!(mem.cache.l3_kb, 32768);
+        let topo = mem.to_topology(2, 4 * 262_144);
+        assert_eq!(topo.nodes[0].huge_2m, 512);
+        assert_eq!(topo.nodes[1].huge_2m, 0);
+        assert_eq!(topo.nodes[0].giant_1g, 1);
+        assert_eq!(topo.nodes[1].giant_1g, 1);
+    }
+
+    #[test]
+    fn mem_pool_length_mismatch_rejected() {
+        assert!(Config::from_str(
+            "[machine]\nnodes = 4\n[machine.mem]\nhugepages_2m = [1, 2]"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn mem_pool_overflow_rejected() {
+        // 2 GiB of huge pages on a 1 GiB node.
+        assert!(Config::from_str(
+            "[machine]\nnodes = 2\ncores_per_node = 2\nmem_gib_per_node = 1.0\n\
+             [machine.mem]\nhugepages_2m = 1024"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn new_presets_build_valid_topologies() {
+        for name in ["r910-thp", "8node-hetero"] {
+            let mc = MachineConfig::preset(name).unwrap_or_else(|| panic!("{name}"));
+            let topo = crate::topology::NumaTopology::from_config(&mc);
+            topo.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        let hetero = MachineConfig::preset("8node-hetero").unwrap();
+        let topo = crate::topology::NumaTopology::from_config(&hetero);
+        assert_ne!(topo.bandwidth_gbs[0], topo.bandwidth_gbs[7]);
+        assert_ne!(
+            topo.mem.node(0).capacity_pages_4k,
+            topo.mem.node(7).capacity_pages_4k
+        );
+        assert!(topo.mem.node(0).huge_2m > 0);
+        assert_eq!(topo.mem.node(7).huge_2m, 0);
+        assert!(topo.mem.tlb.enabled());
     }
 
     #[test]

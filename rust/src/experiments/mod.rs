@@ -5,12 +5,15 @@
 //! * [`fig6`] — accuracy of the contention degradation factor;
 //! * [`fig7`] — speedup vs Automatic NUMA Balancing / Static Tuning;
 //! * [`fig8`] — Apache/MySQL throughput in the server environment;
+//! * [`hugepage_ablation`] — speedup / migration-charge savings vs THP
+//!   fraction (the `mem` subsystem's headline experiment);
 //! * [`runner`] — the shared policy driver;
 //! * [`report`] — table rendering.
 
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
+pub mod hugepage_ablation;
 pub mod report;
 pub mod runner;
 pub mod table1;

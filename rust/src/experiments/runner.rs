@@ -168,11 +168,22 @@ pub fn run(params: &RunParams) -> RunResult {
     let mut proposed = if policy == PolicyKind::Proposed {
         let monitor = Monitor::discover(&machine).expect("discover sim topology");
         let backend = if params.scheduler.use_pjrt {
-            let engine = crate::runtime::ScoringEngine::load(Path::new(
+            // The PJRT path needs vendored xla + AOT artifacts; when
+            // either is missing, fall back to the numerically-identical
+            // pure-Rust scorer rather than dying (the run is still
+            // valid — only the backend differs).
+            match crate::runtime::ScoringEngine::load(Path::new(
                 &params.scheduler.artifacts_dir,
-            ))
-            .expect("load AOT artifacts (run `make artifacts`)");
-            Backend::Pjrt(Box::new(engine))
+            )) {
+                Ok(engine) => Backend::Pjrt(Box::new(engine)),
+                Err(e) => {
+                    eprintln!(
+                        "warning: PJRT backend unavailable ({e}); \
+                         falling back to the pure-Rust scorer"
+                    );
+                    Backend::Cpu
+                }
+            }
         } else {
             Backend::Cpu
         };

@@ -8,9 +8,10 @@
 //!   pipeline ([`monitor`], [`reporter`], [`scheduler`]), the baselines
 //!   it is compared against ([`baselines`]), and every substrate it
 //!   needs: a NUMA machine simulator ([`sim`]), procfs/sysfs parsers and
-//!   facades ([`procfs`]), topology ([`topology`]), workload models
-//!   ([`workloads`]), a config system ([`config`]), and the experiment
-//!   harness ([`experiments`]).
+//!   facades ([`procfs`]), topology ([`topology`]) with its memory
+//!   hardware model ([`mem`]: page tiers, huge-page pools, caches, TLB),
+//!   workload models ([`workloads`]), a config system ([`config`]), and
+//!   the experiment harness ([`experiments`]).
 //! * **L2/L1 (build time)** — the Reporter's scoring analytics as a JAX
 //!   graph wrapping a fused Pallas kernel, AOT-lowered to HLO text and
 //!   executed from [`runtime`] via the PJRT CPU client. Python never
@@ -23,6 +24,7 @@ pub mod baselines;
 pub mod cli;
 pub mod config;
 pub mod experiments;
+pub mod mem;
 pub mod monitor;
 pub mod procfs;
 pub mod reporter;

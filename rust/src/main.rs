@@ -4,7 +4,9 @@ use std::time::Duration;
 
 use numasched::cli::{self, Cli, USAGE};
 use numasched::config::{Config, PolicyKind};
-use numasched::experiments::{fig6, fig7, fig8, report::Table, runner, table1};
+use numasched::experiments::{
+    fig6, fig7, fig8, hugepage_ablation, report::Table, runner, table1,
+};
 use numasched::monitor::{thread::MonitorThread, Monitor};
 use numasched::procfs::host::HostProcfs;
 use numasched::util::log::{set_max_level, Level};
@@ -28,6 +30,7 @@ fn main() {
         "fig6" => cmd_fig6(&cli),
         "fig7" => cmd_fig7(&cli),
         "fig8" => cmd_fig8(&cli),
+        "ablate-hugepages" => cmd_ablate_hugepages(&cli),
         "host-monitor" => cmd_host_monitor(&cli),
         "inspect" => cmd_inspect(&cli),
         other => {
@@ -169,6 +172,12 @@ fn cmd_fig8(cli: &Cli) -> i32 {
     0
 }
 
+fn cmd_ablate_hugepages(cli: &Cli) -> i32 {
+    let points = hugepage_ablation::run(cli.seed);
+    print!("{}", hugepage_ablation::render(&points));
+    0
+}
+
 fn cmd_host_monitor(cli: &Cli) -> i32 {
     let source = HostProcfs::new();
     let monitor = match Monitor::discover(&source) {
@@ -207,7 +216,10 @@ fn cmd_host_monitor(cli: &Cli) -> i32 {
 }
 
 fn cmd_inspect(_cli: &Cli) -> i32 {
-    println!("machine presets: r910-40core (paper testbed), 2node-8core, 8node-64core");
+    println!(
+        "machine presets: r910-40core (paper testbed), r910-thp (2 MiB pools + TLB), \
+         2node-8core, 8node-64core, 8node-hetero (asymmetric bandwidth/capacity)"
+    );
     let mut t = Table::new("workload catalog", &["name", "threads", "mem-intensity", "daemon"]);
     for name in workloads::all_names() {
         let s = workloads::by_name(name).unwrap();

@@ -1,0 +1,84 @@
+//! Per-node cache attributes.
+//!
+//! The cache hierarchy is per-socket on every machine this project
+//! models: each NUMA node owns its L3, so cache capacity — like memory
+//! bandwidth — is a node-local resource heterogeneous boxes differ on.
+//! The Reporter does not (yet) score against it, but the topology
+//! carries it so workload models and future contention terms share one
+//! source of truth with the sysfs renderer.
+
+/// Cache sizes and line size of one NUMA node's socket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheAttr {
+    /// L1 data cache per core, KiB.
+    pub l1d_kb: u64,
+    /// L2 per core, KiB.
+    pub l2_kb: u64,
+    /// Shared L3 per socket, KiB.
+    pub l3_kb: u64,
+    /// Cache line, bytes.
+    pub line_bytes: u64,
+}
+
+impl Default for CacheAttr {
+    /// Intel Xeon E7-4850 (the paper's R910 sockets): 32 KiB L1d,
+    /// 256 KiB L2 per core, 24 MiB shared L3, 64 B lines.
+    fn default() -> Self {
+        Self { l1d_kb: 32, l2_kb: 256, l3_kb: 24 * 1024, line_bytes: 64 }
+    }
+}
+
+impl CacheAttr {
+    /// Shared L3 capacity in bytes.
+    pub fn l3_bytes(&self) -> u64 {
+        self.l3_kb << 10
+    }
+
+    /// Does a working set fit in this socket's L3? (Workload models use
+    /// this to decide whether an app is DRAM-bound at all.)
+    pub fn ws_fits_llc(&self, ws_bytes: u64) -> bool {
+        ws_bytes <= self.l3_bytes()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.line_bytes == 0 || !self.line_bytes.is_power_of_two() {
+            return Err(format!("cache line {} not a power of two", self.line_bytes));
+        }
+        if self.l1d_kb == 0 || self.l2_kb < self.l1d_kb || self.l3_kb < self.l2_kb {
+            return Err(format!(
+                "cache sizes must be nested: l1d={} l2={} l3={} (KiB)",
+                self.l1d_kb, self.l2_kb, self.l3_kb
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_the_e7_4850() {
+        let c = CacheAttr::default();
+        assert_eq!(c.l3_bytes(), 24 * 1024 * 1024);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn llc_fit() {
+        let c = CacheAttr::default();
+        assert!(c.ws_fits_llc(16 * 1024 * 1024));
+        assert!(!c.ws_fits_llc(100 * 1024 * 1024));
+    }
+
+    #[test]
+    fn validation_catches_inversions() {
+        let mut c = CacheAttr::default();
+        c.l2_kb = 16; // smaller than L1d
+        assert!(c.validate().is_err());
+        let mut c = CacheAttr::default();
+        c.line_bytes = 48;
+        assert!(c.validate().is_err());
+    }
+}

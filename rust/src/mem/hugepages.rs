@@ -1,0 +1,88 @@
+//! Per-node huge-page pools and their sysfs rendering.
+//!
+//! Linux exposes pools at
+//! `/sys/devices/system/node/nodeN/hugepages/hugepages-<size>kB/{nr,free}_hugepages`,
+//! each file holding one bare decimal. The simulator renders exactly
+//! that text and the Monitor parses it back — the same honesty contract
+//! the rest of the procfs facade keeps (no simulator back-channel).
+
+use super::page_tier::PageTier;
+
+/// One node's pool of one huge tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HugePagePool {
+    pub tier: PageTier,
+    /// Configured pool size, pages of `tier`.
+    pub total: u64,
+    /// Currently unallocated pages of `tier`.
+    pub free: u64,
+}
+
+impl HugePagePool {
+    pub fn new(tier: PageTier, total: u64) -> Self {
+        Self { tier, total, free: total }
+    }
+
+    /// Take up to `want` pages from the pool; returns pages granted.
+    pub fn take(&mut self, want: u64) -> u64 {
+        let got = want.min(self.free);
+        self.free -= got;
+        got
+    }
+
+    /// Return pages to the pool (process exit), clamped at `total`.
+    pub fn put(&mut self, pages: u64) {
+        self.free = (self.free + pages).min(self.total);
+    }
+
+    /// 4 KiB-equivalent capacity of the whole pool.
+    pub fn capacity_4k(&self) -> u64 {
+        self.total * self.tier.pages_4k()
+    }
+}
+
+/// Render one sysfs hugepage count file (bare decimal + newline, exactly
+/// like the kernel).
+pub fn render_count(n: u64) -> String {
+    format!("{n}\n")
+}
+
+/// Parse one sysfs hugepage count file.
+pub fn parse_count(text: &str) -> Option<u64> {
+    text.trim().parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_take_and_put() {
+        let mut p = HugePagePool::new(PageTier::Huge2M, 100);
+        assert_eq!(p.free, 100);
+        assert_eq!(p.take(30), 30);
+        assert_eq!(p.free, 70);
+        assert_eq!(p.take(1000), 70, "grant is clamped at free");
+        assert_eq!(p.free, 0);
+        p.put(40);
+        assert_eq!(p.free, 40);
+        p.put(1000);
+        assert_eq!(p.free, 100, "put clamps at total");
+    }
+
+    #[test]
+    fn capacity_in_4k_equivalents() {
+        let p = HugePagePool::new(PageTier::Huge2M, 10);
+        assert_eq!(p.capacity_4k(), 5120);
+        let g = HugePagePool::new(PageTier::Giant1G, 2);
+        assert_eq!(g.capacity_4k(), 2 * 262_144);
+    }
+
+    #[test]
+    fn sysfs_count_roundtrip() {
+        assert_eq!(render_count(4096), "4096\n");
+        assert_eq!(parse_count(&render_count(4096)), Some(4096));
+        assert_eq!(parse_count(" 12 \n"), Some(12));
+        assert_eq!(parse_count("x"), None);
+    }
+}

@@ -1,0 +1,178 @@
+//! The memory-hardware subsystem — single source of truth for what the
+//! flat 4 KiB-page model hid.
+//!
+//! Three axes, all per NUMA node and all heterogeneous:
+//! * **page tiers** ([`PageTier`]) — 4 KiB / 2 MiB / 1 GiB, with TLB
+//!   reach, migration pricing, and reserved pools ([`HugePagePool`]);
+//! * **cache attributes** ([`CacheAttr`]) — per-socket L1/L2/L3 + line;
+//! * **TLB pressure** ([`TlbModel`]) — the stall term huge pages buy off.
+//!
+//! [`MemTopology`] is carried by `topology::NumaTopology` and threaded
+//! through every layer: the simulator backs working sets from the pools
+//! and prices migration per tier, the procfs facade renders the pools as
+//! `nodeN/hugepages/*` sysfs text and tier-tagged `numa_maps` VMAs, the
+//! Monitor parses those formats back, the config system populates it
+//! from `[machine.mem]`, and `experiments::hugepage_ablation` sweeps it.
+
+pub mod cache;
+pub mod hugepages;
+pub mod page_tier;
+pub mod tlb;
+
+pub use cache::CacheAttr;
+pub use hugepages::HugePagePool;
+pub use page_tier::PageTier;
+pub use tlb::TlbModel;
+
+/// Memory hardware of one NUMA node.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NodeMem {
+    /// DRAM capacity, 4 KiB pages.
+    pub capacity_pages_4k: u64,
+    /// Reserved 2 MiB huge-page pool, pages.
+    pub huge_2m: u64,
+    /// Reserved 1 GiB giant-page pool, pages.
+    pub giant_1g: u64,
+    /// Socket cache hierarchy.
+    pub cache: CacheAttr,
+}
+
+impl NodeMem {
+    pub fn flat(capacity_pages_4k: u64) -> Self {
+        Self { capacity_pages_4k, huge_2m: 0, giant_1g: 0, cache: CacheAttr::default() }
+    }
+
+    /// 4 KiB-equivalents reserved by the huge tiers.
+    pub fn reserved_4k(&self) -> u64 {
+        self.huge_2m * PageTier::Huge2M.pages_4k()
+            + self.giant_1g * PageTier::Giant1G.pages_4k()
+    }
+
+    /// Pool size for a tier (base tier has no pool: whatever DRAM holds).
+    pub fn pool(&self, tier: PageTier) -> u64 {
+        match tier {
+            PageTier::Base4K => self.capacity_pages_4k,
+            PageTier::Huge2M => self.huge_2m,
+            PageTier::Giant1G => self.giant_1g,
+        }
+    }
+}
+
+/// The machine's memory hardware: one [`NodeMem`] per NUMA node plus the
+/// (per-core, hence machine-wide) TLB model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemTopology {
+    pub nodes: Vec<NodeMem>,
+    pub tlb: TlbModel,
+}
+
+impl MemTopology {
+    /// A homogeneous, huge-page-free topology — the seed model's shape,
+    /// used wherever nothing richer is configured.
+    pub fn homogeneous(nodes: usize, capacity_pages_4k: u64) -> Self {
+        Self {
+            nodes: vec![NodeMem::flat(capacity_pages_4k); nodes],
+            tlb: TlbModel::default(),
+        }
+    }
+
+    pub fn node(&self, n: usize) -> &NodeMem {
+        &self.nodes[n]
+    }
+
+    /// Per-node 2 MiB pool sizes (simulator allocation bookkeeping).
+    pub fn huge_2m_pools(&self) -> Vec<u64> {
+        self.nodes.iter().map(|n| n.huge_2m).collect()
+    }
+
+    /// Per-node 1 GiB pool sizes.
+    pub fn giant_1g_pools(&self) -> Vec<u64> {
+        self.nodes.iter().map(|n| n.giant_1g).collect()
+    }
+
+    /// Structural invariants, checked by `NumaTopology::validate`.
+    pub fn validate(&self, expected_nodes: usize) -> Result<(), String> {
+        if self.nodes.len() != expected_nodes {
+            return Err(format!(
+                "mem topology has {} nodes, machine has {expected_nodes}",
+                self.nodes.len()
+            ));
+        }
+        self.tlb.validate()?;
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.capacity_pages_4k == 0 {
+                return Err(format!("node {i} has zero memory capacity"));
+            }
+            if n.reserved_4k() > n.capacity_pages_4k {
+                return Err(format!(
+                    "node {i}: huge pools reserve {} 4K-pages but capacity is {}",
+                    n.reserved_4k(),
+                    n.capacity_pages_4k
+                ));
+            }
+            n.cache.validate().map_err(|e| format!("node {i}: {e}"))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_matches_seed_shape() {
+        let m = MemTopology::homogeneous(4, 2 * 1024 * 1024);
+        assert_eq!(m.nodes.len(), 4);
+        assert!(m.validate(4).is_ok());
+        assert_eq!(m.node(2).huge_2m, 0);
+        assert!(!m.tlb.enabled());
+        assert_eq!(m.huge_2m_pools(), vec![0; 4]);
+    }
+
+    #[test]
+    fn validate_checks_node_count() {
+        let m = MemTopology::homogeneous(4, 1000);
+        assert!(m.validate(2).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_oversubscribed_pools() {
+        let mut m = MemTopology::homogeneous(2, 1024);
+        m.nodes[1].huge_2m = 3; // 1536 > 1024 4K-equivalents
+        assert!(m.validate(2).is_err());
+        m.nodes[1].huge_2m = 2; // exactly 1024: allowed
+        assert!(m.validate(2).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_zero_capacity() {
+        let mut m = MemTopology::homogeneous(2, 1024);
+        m.nodes[0].capacity_pages_4k = 0;
+        assert!(m.validate(2).is_err());
+    }
+
+    #[test]
+    fn tier_accounting_reserved() {
+        let n = NodeMem {
+            capacity_pages_4k: 4_000_000,
+            huge_2m: 1000,
+            giant_1g: 2,
+            cache: CacheAttr::default(),
+        };
+        assert_eq!(n.reserved_4k(), 1000 * 512 + 2 * 262_144);
+        assert_eq!(n.pool(PageTier::Huge2M), 1000);
+        assert_eq!(n.pool(PageTier::Giant1G), 2);
+        assert_eq!(n.pool(PageTier::Base4K), 4_000_000);
+    }
+
+    #[test]
+    fn heterogeneous_nodes_are_representable() {
+        let mut m = MemTopology::homogeneous(2, 2_000_000);
+        m.nodes[0].huge_2m = 2048;
+        m.nodes[0].cache.l3_kb = 32 * 1024;
+        m.nodes[1].capacity_pages_4k = 1_000_000;
+        assert!(m.validate(2).is_ok());
+        assert_ne!(m.node(0), m.node(1));
+    }
+}

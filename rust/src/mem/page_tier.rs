@@ -1,0 +1,109 @@
+//! Page tiers: the three translation granularities of x86-64.
+//!
+//! A tier is the unit the MMU maps and the kernel migrates: 4 KiB base
+//! pages, 2 MiB huge pages (THP / hugetlbfs), 1 GiB giant pages. The
+//! tier determines three first-order costs the flat-page model hid:
+//! TLB reach (one entry covers `bytes()`), migration pricing (one 2 MiB
+//! move costs 512x the controller traffic of a base page but is a
+//! single ledger operation), and pool capacity (huge pages come from
+//! per-node reserved pools, rendered in sysfs).
+
+/// One translation granularity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PageTier {
+    /// 4 KiB base page.
+    Base4K,
+    /// 2 MiB huge page (PMD-level mapping).
+    Huge2M,
+    /// 1 GiB giant page (PUD-level mapping).
+    Giant1G,
+}
+
+impl PageTier {
+    /// All tiers, smallest first.
+    pub const ALL: [PageTier; 3] = [PageTier::Base4K, PageTier::Huge2M, PageTier::Giant1G];
+
+    /// Bytes covered by one page of this tier.
+    pub fn bytes(self) -> u64 {
+        match self {
+            PageTier::Base4K => 4 << 10,
+            PageTier::Huge2M => 2 << 20,
+            PageTier::Giant1G => 1 << 30,
+        }
+    }
+
+    /// 4 KiB-equivalent pages per page of this tier.
+    pub fn pages_4k(self) -> u64 {
+        self.bytes() >> 12
+    }
+
+    /// The `kernelpagesize_kB` value numa_maps reports for VMAs of this
+    /// tier, and the `<size>kB` component of the sysfs hugepages dir.
+    pub fn sysfs_kb(self) -> u64 {
+        self.bytes() >> 10
+    }
+
+    /// Inverse of [`Self::sysfs_kb`]: recognize a kernel-reported page
+    /// size. Unknown sizes (some arches have 16K/64K base pages) map to
+    /// None and callers fall back to treating them as opaque.
+    pub fn from_kernelpagesize_kb(kb: u64) -> Option<PageTier> {
+        match kb {
+            4 => Some(PageTier::Base4K),
+            2048 => Some(PageTier::Huge2M),
+            1_048_576 => Some(PageTier::Giant1G),
+            _ => None,
+        }
+    }
+
+    /// sysfs directory name under `nodeN/hugepages/` (huge tiers only).
+    pub fn sysfs_dir(self) -> Option<String> {
+        match self {
+            PageTier::Base4K => None,
+            t => Some(format!("hugepages-{}kB", t.sysfs_kb())),
+        }
+    }
+
+    /// Controller traffic charged for migrating one page of this tier
+    /// (read + write), GB. Scales with bytes: a 2 MiB move costs 512x a
+    /// base-page move in bandwidth — but only one ledger operation.
+    pub fn migration_gb(self) -> f64 {
+        2.0 * self.bytes() as f64 / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_sizes() {
+        assert_eq!(PageTier::Base4K.bytes(), 4096);
+        assert_eq!(PageTier::Huge2M.bytes(), 2 * 1024 * 1024);
+        assert_eq!(PageTier::Giant1G.bytes(), 1024 * 1024 * 1024);
+        assert_eq!(PageTier::Base4K.pages_4k(), 1);
+        assert_eq!(PageTier::Huge2M.pages_4k(), 512);
+        assert_eq!(PageTier::Giant1G.pages_4k(), 262_144);
+    }
+
+    #[test]
+    fn kernelpagesize_roundtrip() {
+        for t in PageTier::ALL {
+            assert_eq!(PageTier::from_kernelpagesize_kb(t.sysfs_kb()), Some(t));
+        }
+        assert_eq!(PageTier::from_kernelpagesize_kb(64), None);
+    }
+
+    #[test]
+    fn sysfs_dirs_match_kernel_naming() {
+        assert_eq!(PageTier::Base4K.sysfs_dir(), None);
+        assert_eq!(PageTier::Huge2M.sysfs_dir().unwrap(), "hugepages-2048kB");
+        assert_eq!(PageTier::Giant1G.sysfs_dir().unwrap(), "hugepages-1048576kB");
+    }
+
+    #[test]
+    fn migration_pricing_scales_with_bytes_not_ops() {
+        let base = PageTier::Base4K.migration_gb();
+        assert!((PageTier::Huge2M.migration_gb() - 512.0 * base).abs() < 1e-12);
+        assert!((PageTier::Giant1G.migration_gb() - 262_144.0 * base).abs() < 1e-9);
+    }
+}

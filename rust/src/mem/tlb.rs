@@ -1,0 +1,99 @@
+//! TLB-pressure model.
+//!
+//! The TLB caches translations, one entry per *mapping* regardless of
+//! tier — which is exactly why huge pages matter: backing a 1 GiB
+//! working set takes 262 144 base-page entries but 512 huge-page
+//! entries. When the number of live mappings exceeds the TLB, every
+//! excess access risks a page walk; we fold that into the simulator as
+//! a stall term next to `machine::MEM_WEIGHT`.
+//!
+//! `weight` defaults to 0 so the paper-reproduction figures keep their
+//! original calibration bit-for-bit; the huge-page ablation (and any
+//! `[machine.mem] tlb_weight = ...` config) turns it on.
+
+/// Per-core TLB model (shared second-level TLB, Phoenix-style).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TlbModel {
+    /// Second-level TLB entries (tier-agnostic, like modern STLBs).
+    pub entries: u64,
+    /// Stall weight of a full TLB miss next to `MEM_WEIGHT` (0 = model
+    /// disabled; the seed calibration assumed infinite TLB reach).
+    pub weight: f64,
+}
+
+impl Default for TlbModel {
+    /// 1536 STLB entries (Westmere-EX era second-level TLB scale),
+    /// modeling disabled by default.
+    fn default() -> Self {
+        Self { entries: 1536, weight: 0.0 }
+    }
+}
+
+impl TlbModel {
+    /// TLB miss pressure in [0, 1] for a process holding `mappings` live
+    /// page-table entries (pages of any tier each count once). 0 when
+    /// the working set's mappings fit; approaches 1 as mappings dwarf
+    /// the TLB.
+    pub fn pressure(&self, mappings: u64) -> f64 {
+        if self.entries == 0 || mappings == 0 {
+            return 0.0;
+        }
+        (1.0 - self.entries as f64 / mappings as f64).max(0.0)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.weight > 0.0
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.weight.is_finite() || self.weight < 0.0 {
+            return Err(format!("tlb weight {} must be finite and >= 0", self.weight));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_disabled() {
+        let t = TlbModel::default();
+        assert!(!t.enabled());
+        assert_eq!(t.weight, 0.0);
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn pressure_zero_when_reach_covers_ws() {
+        let t = TlbModel { entries: 1536, weight: 0.3 };
+        assert_eq!(t.pressure(0), 0.0);
+        assert_eq!(t.pressure(1000), 0.0);
+        assert_eq!(t.pressure(1536), 0.0);
+    }
+
+    #[test]
+    fn pressure_grows_with_mappings() {
+        let t = TlbModel { entries: 1536, weight: 0.3 };
+        let small = t.pressure(3_000);
+        let big = t.pressure(200_000);
+        assert!(small > 0.0 && small < big);
+        assert!(big > 0.99, "200k base mappings vs 1536 entries: {big}");
+        assert!(big <= 1.0);
+    }
+
+    #[test]
+    fn huge_backing_collapses_pressure() {
+        // 200k base pages vs the same bytes as ~390 huge mappings.
+        let t = TlbModel { entries: 1536, weight: 0.3 };
+        assert!(t.pressure(200_000) > 0.99);
+        assert_eq!(t.pressure(391), 0.0);
+    }
+
+    #[test]
+    fn validation_rejects_negative_weight() {
+        let t = TlbModel { entries: 10, weight: -0.1 };
+        assert!(t.validate().is_err());
+    }
+}

@@ -36,7 +36,13 @@ impl Monitor {
     fn discover_topo(source: &dyn ProcSource) -> Result<TopoView, String> {
         let Some(online) = source.read_nodes_online() else {
             // No NUMA sysfs at all: single-node fallback.
-            return Ok(TopoView { nodes: 1, cores_per_node: 1, distance: vec![vec![10.0]] });
+            return Ok(TopoView {
+                nodes: 1,
+                cores_per_node: 1,
+                distance: vec![vec![10.0]],
+                huge_2m_pool: vec![0],
+                giant_1g_pool: vec![0],
+            });
         };
         let ids = sysnode::parse_cpulist(online.trim())
             .ok_or_else(|| format!("bad nodes online {online:?}"))?;
@@ -63,7 +69,18 @@ impl Monitor {
             }
             distance.push(row);
         }
-        Ok(TopoView { nodes, cores_per_node, distance })
+        // Huge-page pools, from the same sysfs text a live host exposes.
+        // Absent files (no hugetlb) read as empty pools.
+        let read_pool = |n: usize, tier_kb: u64| -> u64 {
+            source
+                .read_node_hugepage_file(n, tier_kb, "nr_hugepages")
+                .and_then(|s| crate::mem::hugepages::parse_count(&s))
+                .unwrap_or(0)
+        };
+        let huge_2m_pool: Vec<u64> = ids.iter().map(|&n| read_pool(n, 2048)).collect();
+        let giant_1g_pool: Vec<u64> =
+            ids.iter().map(|&n| read_pool(n, 1_048_576)).collect();
+        Ok(TopoView { nodes, cores_per_node, distance, huge_2m_pool, giant_1g_pool })
     }
 
     /// One sampling pass (the body of Algorithm 1's loop).
@@ -77,17 +94,26 @@ impl Monitor {
             {
                 continue;
             }
-            let pages_per_node = match source.read_numa_maps(pid) {
-                Some(text) => numa_maps::parse(&text).pages_per_node(self.topo.nodes),
-                // numa_maps can be absent (no CONFIG_NUMA): attribute the
-                // whole rss to the node the task runs on.
-                None => {
-                    let mut v = vec![0u64; self.topo.nodes];
-                    let node = self.topo.node_of_core(ps.processor.max(0) as usize);
-                    v[node] = ps.rss.max(0) as u64;
-                    v
-                }
-            };
+            let (pages_per_node, huge_2m_per_node, giant_1g_per_node) =
+                match source.read_numa_maps(pid) {
+                    Some(text) => {
+                        let maps = numa_maps::parse(&text);
+                        (
+                            maps.pages_per_node(self.topo.nodes),
+                            maps.huge_pages_per_node(self.topo.nodes, 2048),
+                            maps.huge_pages_per_node(self.topo.nodes, 1_048_576),
+                        )
+                    }
+                    // numa_maps can be absent (no CONFIG_NUMA): attribute
+                    // the whole rss to the node the task runs on.
+                    None => {
+                        let mut v = vec![0u64; self.topo.nodes];
+                        let node =
+                            self.topo.node_of_core(ps.processor.max(0) as usize);
+                        v[node] = ps.rss.max(0) as u64;
+                        (v, vec![0u64; self.topo.nodes], vec![0u64; self.topo.nodes])
+                    }
+                };
             snap.tasks.push(TaskSample {
                 pid: ps.pid,
                 comm: ps.comm,
@@ -96,6 +122,8 @@ impl Monitor {
                 cpu_ms: ps.utime + ps.stime,
                 rss_pages: ps.rss.max(0) as u64,
                 pages_per_node,
+                huge_2m_per_node,
+                giant_1g_per_node,
             });
         }
         for n in 0..self.topo.nodes {
@@ -160,6 +188,46 @@ mod tests {
         let snap = mon.sample(&m, 0.0);
         assert_eq!(snap.tasks.len(), 1);
         assert_eq!(snap.tasks[0].comm, "apache");
+    }
+
+    #[test]
+    fn discovers_hugepage_pools_through_sysfs_text() {
+        let plain = sim();
+        let mon = Monitor::discover(&plain).unwrap();
+        assert_eq!(mon.topo.huge_2m_pool, vec![0; 4], "no pools on the seed box");
+
+        let thp = Machine::new(
+            NumaTopology::from_config(
+                &crate::config::MachineConfig::preset("r910-thp").unwrap(),
+            ),
+            1,
+        );
+        let mon = Monitor::discover(&thp).unwrap();
+        assert_eq!(mon.topo.huge_2m_pool, vec![2048; 4]);
+        assert_eq!(mon.topo.giant_1g_pool, vec![0; 4]);
+    }
+
+    #[test]
+    fn samples_huge_tier_from_numa_maps_text_only() {
+        let mut m = Machine::new(
+            NumaTopology::from_config(
+                &crate::config::MachineConfig::preset("r910-thp").unwrap(),
+            ),
+            1,
+        );
+        let mut b = TaskBehavior::mem_bound(1e9);
+        b.thp_fraction = 1.0;
+        let pid = m.spawn("thp", b, 1.0, 4, Placement::Node(3));
+        m.step();
+        let mon = Monitor::discover(&m).unwrap();
+        let snap = mon.sample(&m, m.now_ms);
+        let task = snap.task(pid).expect("sampled");
+        let sim_p = m.process(pid).unwrap();
+        assert_eq!(task.huge_2m_per_node, sim_p.pages.huge_2m);
+        assert!(task.huge_2m_per_node[3] > 0);
+        // 4K-equivalent totals still line up across tiers.
+        assert_eq!(task.pages_per_node[3], sim_p.pages.node_total(3));
+        assert_eq!(task.rss_pages, sim_p.pages.total());
     }
 
     #[test]

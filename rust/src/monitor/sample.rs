@@ -10,10 +10,18 @@ pub struct TaskSample {
     pub threads: i64,
     /// utime + stime, jiffies (== virtual ms in the simulator).
     pub cpu_ms: u64,
-    /// Resident pages.
+    /// Resident pages, 4 KiB equivalents.
     pub rss_pages: u64,
-    /// Resident pages per NUMA node (numa_maps aggregation).
+    /// Resident pages per NUMA node, 4 KiB equivalents (numa_maps
+    /// aggregation across all tiers).
     pub pages_per_node: Vec<u64>,
+    /// 2 MiB huge pages per node (numa_maps VMAs tagged
+    /// `kernelpagesize_kB=2048`), in 2 MiB units — the tier-aware
+    /// scheduler's freight estimate reads this.
+    pub huge_2m_per_node: Vec<u64>,
+    /// 1 GiB giant pages per node (`kernelpagesize_kB=1048576` VMAs),
+    /// in 1 GiB units.
+    pub giant_1g_per_node: Vec<u64>,
 }
 
 /// One node's cumulative served-access counters (numastat).
@@ -53,6 +61,11 @@ pub struct TopoView {
     pub cores_per_node: usize,
     /// SLIT distance matrix.
     pub distance: Vec<Vec<f64>>,
+    /// Configured 2 MiB huge-page pool per node (`nodeN/hugepages/
+    /// hugepages-2048kB/nr_hugepages`); zeros when sysfs lacks pools.
+    pub huge_2m_pool: Vec<u64>,
+    /// Configured 1 GiB pool per node.
+    pub giant_1g_pool: Vec<u64>,
 }
 
 impl TopoView {
@@ -83,6 +96,8 @@ mod tests {
                 cpu_ms: 0,
                 rss_pages: 0,
                 pages_per_node: vec![],
+                huge_2m_per_node: vec![],
+                giant_1g_per_node: vec![],
             }],
             nodes: vec![],
         };
@@ -92,7 +107,13 @@ mod tests {
 
     #[test]
     fn topo_view_core_mapping_clamps() {
-        let t = TopoView { nodes: 2, cores_per_node: 4, distance: vec![] };
+        let t = TopoView {
+            nodes: 2,
+            cores_per_node: 4,
+            distance: vec![],
+            huge_2m_pool: vec![0, 0],
+            giant_1g_pool: vec![0, 0],
+        };
         assert_eq!(t.node_of_core(0), 0);
         assert_eq!(t.node_of_core(7), 1);
         assert_eq!(t.node_of_core(99), 1); // hotplugged core: clamp

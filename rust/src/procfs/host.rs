@@ -79,6 +79,15 @@ impl ProcSource for HostProcfs {
     fn read_node_numastat(&self, node: usize) -> Option<String> {
         self.node_file(node, "numastat")
     }
+
+    fn read_node_hugepage_file(
+        &self,
+        node: usize,
+        tier_kb: u64,
+        file: &str,
+    ) -> Option<String> {
+        self.node_file(node, &format!("hugepages/hugepages-{tier_kb}kB/{file}"))
+    }
 }
 
 #[cfg(test)]
@@ -138,6 +147,25 @@ mod tests {
         assert_eq!(host.read_nodes_online().unwrap(), "0");
         assert_eq!(host.read_node_cpulist(0).unwrap(), "0-3");
         assert!(host.read_node_cpulist(1).is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn hugepage_fixture_roots() {
+        let dir = std::env::temp_dir()
+            .join(format!("numasched-host-hp-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let hp = dir.join("sys/devices/system/node/node0/hugepages/hugepages-2048kB");
+        std::fs::create_dir_all(&hp).unwrap();
+        std::fs::write(hp.join("nr_hugepages"), "4096\n").unwrap();
+        std::fs::write(hp.join("free_hugepages"), "4000\n").unwrap();
+
+        let host = HostProcfs::with_roots(dir.join("proc"), dir.join("sys"));
+        let nr = host.read_node_hugepage_file(0, 2048, "nr_hugepages").unwrap();
+        assert_eq!(crate::mem::hugepages::parse_count(&nr), Some(4096));
+        let free = host.read_node_hugepage_file(0, 2048, "free_hugepages").unwrap();
+        assert_eq!(crate::mem::hugepages::parse_count(&free), Some(4000));
+        assert!(host.read_node_hugepage_file(0, 1_048_576, "nr_hugepages").is_none());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -37,4 +37,17 @@ pub trait ProcSource {
 
     /// Raw `/sys/devices/system/node/node<n>/numastat`.
     fn read_node_numastat(&self, node: usize) -> Option<String>;
+
+    /// Raw `/sys/devices/system/node/node<n>/hugepages/hugepages-<tier_kb>kB/<file>`
+    /// where `file` is `nr_hugepages` or `free_hugepages`. Default: no
+    /// huge-page sysfs (pre-hugetlb kernels, or sources that don't
+    /// model pools) — the Monitor then sees zero-sized pools.
+    fn read_node_hugepage_file(
+        &self,
+        _node: usize,
+        _tier_kb: u64,
+        _file: &str,
+    ) -> Option<String> {
+        None
+    }
 }

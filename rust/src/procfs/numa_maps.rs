@@ -4,6 +4,12 @@
 //! Real lines look like:
 //! `7f2a4c000000 default anon=8192 dirty=8192 active=4096 N0=4096 N1=4096 kernelpagesize_kB=4`
 //! `00400000 default file=/usr/sbin/mysqld mapped=1605 mapmax=2 N2=1605`
+//! `7f8000000000 default huge anon=4 N0=4 kernelpagesize_kB=2048`
+//!
+//! The `N<i>=` counts are in the VMA's **own page-size units** — a THP
+//! or hugetlb VMA reports 2 MiB pages, tagged by `kernelpagesize_kB`.
+//! Aggregation therefore normalizes to 4 KiB equivalents, and the huge
+//! tiers stay separable per node for the tier-aware scheduler.
 
 use std::collections::BTreeMap;
 
@@ -13,19 +19,34 @@ pub struct Vma {
     pub address: u64,
     /// Memory policy ("default", "bind:0", "interleave:0-3", ...).
     pub policy: String,
-    /// Pages per NUMA node (the `N<i>=<count>` fields).
+    /// Pages per NUMA node (the `N<i>=<count>` fields), in this VMA's
+    /// `kernelpagesize_kB` units.
     pub pages_per_node: BTreeMap<usize, u64>,
-    /// Anonymous pages, if reported.
+    /// Anonymous pages, if reported (kernelpagesize units).
     pub anon: Option<u64>,
     /// Dirty pages, if reported.
     pub dirty: Option<u64>,
     /// Backing file, if mapped.
     pub file: Option<String>,
+    /// Page size of this mapping, kB (`kernelpagesize_kB` field); None
+    /// means unreported, treated as the 4 KiB base size.
+    pub kernelpagesize_kb: Option<u64>,
 }
 
 impl Vma {
+    /// Pages in this VMA's own units.
     pub fn total_pages(&self) -> u64 {
         self.pages_per_node.values().sum()
+    }
+
+    /// This VMA's page size in kB (default 4).
+    pub fn pagesize_kb(&self) -> u64 {
+        self.kernelpagesize_kb.unwrap_or(4)
+    }
+
+    /// 4 KiB-equivalents per page of this VMA.
+    pub fn scale_4k(&self) -> u64 {
+        (self.pagesize_kb() / 4).max(1)
     }
 }
 
@@ -36,10 +57,30 @@ pub struct NumaMaps {
 }
 
 impl NumaMaps {
-    /// Total resident pages per node across all VMAs, sized to `nodes`.
+    /// Total resident pages per node across all VMAs, sized to `nodes`,
+    /// in 4 KiB equivalents (huge VMAs scaled by their page size).
     pub fn pages_per_node(&self, nodes: usize) -> Vec<u64> {
         let mut out = vec![0u64; nodes];
         for vma in &self.vmas {
+            let scale = vma.scale_4k();
+            for (&n, &count) in &vma.pages_per_node {
+                if n < nodes {
+                    out[n] += count * scale;
+                }
+            }
+        }
+        out
+    }
+
+    /// Pages per node of one huge tier only (e.g. `tier_kb = 2048`), in
+    /// that tier's own units — how the Monitor separates THP placement
+    /// from base pages using nothing but the rendered text.
+    pub fn huge_pages_per_node(&self, nodes: usize, tier_kb: u64) -> Vec<u64> {
+        let mut out = vec![0u64; nodes];
+        for vma in &self.vmas {
+            if vma.kernelpagesize_kb != Some(tier_kb) {
+                continue;
+            }
             for (&n, &count) in &vma.pages_per_node {
                 if n < nodes {
                     out[n] += count;
@@ -49,8 +90,12 @@ impl NumaMaps {
         out
     }
 
+    /// Total resident pages, 4 KiB equivalents.
     pub fn total_pages(&self) -> u64 {
-        self.vmas.iter().map(Vma::total_pages).sum()
+        self.vmas
+            .iter()
+            .map(|v| v.total_pages() * v.scale_4k())
+            .sum()
     }
 }
 
@@ -66,6 +111,7 @@ pub fn parse_line(line: &str) -> Option<Vma> {
         anon: None,
         dirty: None,
         file: None,
+        kernelpagesize_kb: None,
     };
     for tok in parts {
         if let Some(rest) = tok.strip_prefix('N') {
@@ -83,8 +129,10 @@ pub fn parse_line(line: &str) -> Option<Vma> {
             vma.dirty = v.parse().ok();
         } else if let Some(v) = tok.strip_prefix("file=") {
             vma.file = Some(v.to_string());
+        } else if let Some(v) = tok.strip_prefix("kernelpagesize_kB=") {
+            vma.kernelpagesize_kb = v.parse().ok();
         }
-        // Other attributes (mapped=, active=, kernelpagesize_kB=) ignored.
+        // Other attributes (mapped=, active=, huge, heap, stack) ignored.
     }
     Some(vma)
 }
@@ -113,7 +161,7 @@ pub fn render(vmas: &[Vma]) -> String {
         for (n, pages) in &vma.pages_per_node {
             out.push_str(&format!(" N{n}={pages}"));
         }
-        out.push_str(" kernelpagesize_kB=4\n");
+        out.push_str(&format!(" kernelpagesize_kB={}\n", vma.pagesize_kb()));
     }
     out
 }
@@ -181,6 +229,7 @@ mod tests {
                 anon: Some(192),
                 dirty: Some(10),
                 file: None,
+                kernelpagesize_kb: Some(4),
             },
             Vma {
                 address: 0x400000,
@@ -189,10 +238,41 @@ mod tests {
                 anon: None,
                 dirty: None,
                 file: Some("/bin/daemon".into()),
+                kernelpagesize_kb: Some(4),
+            },
+            Vma {
+                address: 0x7f8000000000,
+                policy: "default".into(),
+                pages_per_node: [(0, 4)].into_iter().collect(),
+                anon: Some(4),
+                dirty: None,
+                file: None,
+                kernelpagesize_kb: Some(2048),
             },
         ];
         let parsed = parse(&render(&vmas));
         assert_eq!(parsed.vmas, vmas);
+    }
+
+    #[test]
+    fn huge_vmas_aggregate_in_4k_equivalents() {
+        let maps = parse(
+            "7f0000000000 default anon=1000 N0=600 N1=400 kernelpagesize_kB=4\n\
+             7f8000000000 default anon=4 N0=3 N1=1 kernelpagesize_kB=2048\n",
+        );
+        // 3 and 1 huge pages scale by 512.
+        assert_eq!(maps.pages_per_node(2), vec![600 + 3 * 512, 400 + 512]);
+        assert_eq!(maps.total_pages(), 1000 + 4 * 512);
+        // The huge tier stays separable, in its own units.
+        assert_eq!(maps.huge_pages_per_node(2, 2048), vec![3, 1]);
+        assert_eq!(maps.huge_pages_per_node(2, 1_048_576), vec![0, 0]);
+    }
+
+    #[test]
+    fn unreported_pagesize_defaults_to_base() {
+        let vma = parse_line("7f0000000000 default N0=10").unwrap();
+        assert_eq!(vma.kernelpagesize_kb, None);
+        assert_eq!(vma.scale_4k(), 1);
     }
 
     #[test]

@@ -58,9 +58,15 @@ pub struct RankedTask {
     pub best_score: f64,
     /// Full per-node score row.
     pub scores: Vec<f64>,
-    /// Resident pages (sticky-page migration sizing).
+    /// Resident pages, 4 KiB equivalents (sticky-page migration sizing).
     pub rss_pages: u64,
+    /// Per-node pages, 4 KiB equivalents.
     pub pages_per_node: Vec<u64>,
+    /// Per-node 2 MiB huge pages (tier-aware freight estimation: a
+    /// huge-backed working set migrates in far fewer operations).
+    pub huge_2m_per_node: Vec<u64>,
+    /// Per-node 1 GiB giant pages.
+    pub giant_1g_per_node: Vec<u64>,
 }
 
 /// The Reporter's output — Algorithm 2's "signal to trigger schedule".
@@ -317,6 +323,8 @@ impl Reporter {
                     scores,
                     rss_pages: t.rss_pages,
                     pages_per_node: t.pages_per_node.clone(),
+                    huge_2m_per_node: t.huge_2m_per_node.clone(),
+                    giant_1g_per_node: t.giant_1g_per_node.clone(),
                 }
             })
             .collect();
@@ -376,6 +384,8 @@ mod tests {
             threads: 1,
             cpu_ms,
             rss_pages: pages.iter().sum(),
+            huge_2m_per_node: vec![0; pages.len()],
+            giant_1g_per_node: vec![0; pages.len()],
             pages_per_node: pages,
         }
     }

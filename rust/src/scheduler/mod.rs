@@ -19,7 +19,7 @@ pub mod powerful;
 use std::collections::BTreeMap;
 
 use crate::config::{SchedulerConfig, StaticPin};
-use crate::reporter::Report;
+use crate::reporter::{RankedTask, Report};
 
 /// Control surface the scheduler drives.
 pub trait MachineControl {
@@ -90,6 +90,19 @@ pub struct UserScheduler {
     /// these count against a node's powerful-core slots — unplaced load
     /// floats and the OS balancer spreads it around our pins.
     placed: BTreeMap<i32, (usize, i64)>,
+}
+
+/// Migration freight of a task in *ledger operations*: base pages cost
+/// one op each, 2 MiB pages cover 512 equivalents per op. This is what
+/// hysteresis should scale with — a huge-backed buffer pool is cheap to
+/// drag along even when its byte count is large (tier-aware sticky
+/// migration; the byte-side bandwidth charge is unchanged either way).
+fn freight_ops(task: &RankedTask) -> f64 {
+    let huge: u64 = task.huge_2m_per_node.iter().sum();
+    let giant: u64 = task.giant_1g_per_node.iter().sum();
+    let covered = huge * 512 + giant * 262_144;
+    let base = task.rss_pages.saturating_sub(covered);
+    (base + huge + giant) as f64
 }
 
 impl UserScheduler {
@@ -179,8 +192,9 @@ impl UserScheduler {
             // Hysteresis scales with the freight: migrating a process
             // that drags a 300k-page buffer pool must promise much more
             // than moving a 3k-page worker (Algorithm 3's contention
-            // test is about *net* gain).
-            let needed = self.min_gain * (1.0 + task.rss_pages as f64 / 100_000.0);
+            // test is about *net* gain). Freight is measured in ledger
+            // ops, so THP-backed sets clear a far lower bar.
+            let needed = self.min_gain * (1.0 + freight_ops(task) / 100_000.0);
             if task.best_node == task.node || task.best_score < needed {
                 continue;
             }
@@ -252,9 +266,10 @@ impl UserScheduler {
                 continue;
             }
             // Scale the bar with the freight, like the move gate: pulling
-            // a giant buffer pool across QPI costs real bandwidth.
+            // a giant buffer pool across QPI costs real call volume —
+            // unless huge pages shrink it to a few hundred ops.
             if task.degradation
-                <= consolidate_above * (1.0 + task.rss_pages as f64 / 100_000.0)
+                <= consolidate_above * (1.0 + freight_ops(task) / 100_000.0)
             {
                 continue;
             }
@@ -330,6 +345,8 @@ mod tests {
             scores: vec![0.0; 4],
             rss_pages: 1000,
             pages_per_node: vec![1000, 0, 0, 0],
+            huge_2m_per_node: vec![0, 0, 0, 0],
+            giant_1g_per_node: vec![0, 0, 0, 0],
         }
     }
 
@@ -437,5 +454,29 @@ mod tests {
         let mut ctl = MockCtl::default();
         let rep = report(vec![ranked(1, "a", 2, 2, 9.0, 0.0)], true);
         assert!(s.apply(&rep, &mut ctl).is_empty());
+    }
+
+    #[test]
+    fn huge_backed_freight_clears_a_lower_hysteresis_bar() {
+        // A 400k-page buffer pool: flat backing needs a score above
+        // min_gain * 5; fully 2 MiB-backed it is ~781 ops and clears the
+        // bar at essentially min_gain.
+        let mut flat = ranked(1, "flat", 0, 2, 0.45, 0.0);
+        flat.rss_pages = 400_000;
+        flat.pages_per_node = vec![400_000, 0, 0, 0];
+        let mut s = sched();
+        let mut ctl = MockCtl::default();
+        assert!(
+            s.apply(&report(vec![flat.clone()], true), &mut ctl).is_empty(),
+            "flat 400k-page freight must block a 0.45 score"
+        );
+
+        let mut huge = flat;
+        huge.huge_2m_per_node = vec![781, 0, 0, 0]; // 399_872 equivalents
+        let mut s = sched();
+        let mut ctl = MockCtl::default();
+        let dec = s.apply(&report(vec![huge], true), &mut ctl);
+        assert_eq!(dec.len(), 1, "same score passes once freight is huge-backed");
+        assert_eq!(ctl.moves, vec![(1, 2)]);
     }
 }

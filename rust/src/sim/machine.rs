@@ -14,6 +14,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::mem::{HugePagePool, PageTier};
 use crate::procfs::{numa_maps, stat, sysnode, ProcSource};
 use crate::topology::NumaTopology;
 use crate::util::rng::Rng;
@@ -34,7 +35,10 @@ pub const THREAD_PEAK_GBS: f64 = 1.6;
 /// Page-migration throughput budget, pages per virtual ms.
 pub const MIG_PAGES_PER_MS: u64 = 4000;
 
-/// Controller traffic charged per migrated page (read + write), GB per page.
+/// Controller traffic charged per migrated 4 KiB-equivalent page
+/// (read + write), GB. Tiered moves price identically per byte — one
+/// 2 MiB page charges exactly 512x this (`PageTier::migration_gb`) —
+/// but cost only one ledger operation.
 pub const MIG_GB_PER_PAGE: f64 = 2.0 * 4096.0 / 1e9;
 
 /// Where to place a spawning process's threads.
@@ -66,8 +70,18 @@ pub struct Machine {
     mig_charge: Vec<f64>,
     /// Total process migrations executed (metrics).
     pub total_migrations: u64,
-    /// Total pages migrated (metrics).
+    /// Total 4 KiB-equivalent pages migrated (bandwidth metric).
     pub total_pages_migrated: u64,
+    /// Total migration ledger operations — one per page of any tier
+    /// (the call-volume metric huge pages shrink by up to 512x).
+    pub total_migration_ops: u64,
+    /// Per-node 2 MiB pools. Spawn-time THP collapse debits them;
+    /// migration rebalances them with hugetlb semantics (see
+    /// `rebalance_huge_pools`); process exit does not recycle — horizons
+    /// are short and sysfs `free_hugepages` reports the high-water mark.
+    huge_pools: Vec<HugePagePool>,
+    /// Per-node 1 GiB pools.
+    giant_pools: Vec<HugePagePool>,
 }
 
 impl Machine {
@@ -78,6 +92,18 @@ impl Machine {
         Self {
             ctls: topo.bandwidth_gbs.iter().map(|&b| MemCtl::new(b)).collect(),
             cores: vec![Vec::new(); cores],
+            huge_pools: topo
+                .mem
+                .huge_2m_pools()
+                .into_iter()
+                .map(|t| HugePagePool::new(PageTier::Huge2M, t))
+                .collect(),
+            giant_pools: topo
+                .mem
+                .giant_1g_pools()
+                .into_iter()
+                .map(|t| HugePagePool::new(PageTier::Giant1G, t))
+                .collect(),
             topo,
             now_ms: 0.0,
             dt_ms: 1.0,
@@ -89,6 +115,7 @@ impl Machine {
             mig_charge: vec![0.0; nodes],
             total_migrations: 0,
             total_pages_migrated: 0,
+            total_migration_ops: 0,
         }
     }
 
@@ -119,6 +146,22 @@ impl Machine {
         }
         let weights = p.threads_per_node(self.topo.nodes, self.topo.cores_per_node);
         p.pages = PageMap::first_touch(self.topo.nodes, p.behavior.ws_pages, &weights);
+        // Tier collapse at first touch: back the eligible fraction with
+        // the largest pages the node's pools allow — whole 1 GiB pages
+        // first (only working sets beyond a GiB qualify), then 2 MiB.
+        if p.behavior.thp_fraction > 0.0 {
+            let free: Vec<u64> = self.giant_pools.iter().map(|pl| pl.free).collect();
+            let taken =
+                p.pages.promote_to_tier(PageTier::Giant1G, p.behavior.thp_fraction, &free);
+            for (n, &t) in taken.iter().enumerate() {
+                self.giant_pools[n].take(t);
+            }
+            let free: Vec<u64> = self.huge_pools.iter().map(|pl| pl.free).collect();
+            let taken = p.pages.promote_to_huge(p.behavior.thp_fraction, &free);
+            for (n, &t) in taken.iter().enumerate() {
+                self.huge_pools[n].take(t);
+            }
+        }
         if let Placement::Node(n) = placement {
             p.pinned_node = None; // pinning is a separate, explicit call
             let _ = n;
@@ -211,18 +254,26 @@ impl Machine {
         self.total_migrations += 1;
     }
 
-    /// Migrate up to `budget` of a process's pages toward `node`,
-    /// charging the migration traffic to the controllers involved.
+    /// Migrate up to `budget` 4 KiB-equivalents of a process's pages
+    /// toward `node`, charging the migration traffic to the controllers
+    /// involved. Tier-aware: whole huge pages move first (same bytes,
+    /// far fewer ledger operations).
     pub fn migrate_pages(&mut self, pid: i32, node: usize, budget: u64) -> u64 {
         assert!(node < self.topo.nodes);
         let Some(p) = self.procs.get_mut(&pid) else { return 0 };
+        let before_2m = p.pages.huge_2m.clone();
+        let before_1g = p.pages.giant_1g.clone();
+        let ops_before = p.pages.migrate_ops;
         let moved = p.pages.migrate_toward(node, budget);
+        let ops = p.pages.migrate_ops - ops_before;
         if moved > 0 {
             let gb = moved as f64 * MIG_GB_PER_PAGE;
             // Traffic hits the destination controller (writes) and is
             // spread over the tick.
             self.mig_charge[node] += gb / (self.dt_ms / 1000.0);
             self.total_pages_migrated += moved;
+            self.total_migration_ops += ops;
+            self.rebalance_huge_pools(pid, &before_2m, &before_1g);
         }
         moved
     }
@@ -230,13 +281,54 @@ impl Machine {
     /// Auto-NUMA-style: migrate pages from `src` node to `dst` node.
     pub fn migrate_pages_from(&mut self, pid: i32, src: usize, dst: usize, budget: u64) -> u64 {
         let Some(p) = self.procs.get_mut(&pid) else { return 0 };
+        let before_2m = p.pages.huge_2m.clone();
+        let before_1g = p.pages.giant_1g.clone();
+        let ops_before = p.pages.migrate_ops;
         let moved = p.pages.migrate_from(src, dst, budget);
+        let ops = p.pages.migrate_ops - ops_before;
         if moved > 0 {
             let gb = moved as f64 * MIG_GB_PER_PAGE;
             self.mig_charge[dst] += gb / (self.dt_ms / 1000.0);
             self.total_pages_migrated += moved;
+            self.total_migration_ops += ops;
+            self.rebalance_huge_pools(pid, &before_2m, &before_1g);
         }
         moved
+    }
+
+    /// hugetlb migration semantics: a huge page that moved to a node is
+    /// backed by that node's pool, and the page it vacated returns to
+    /// the source node's pool. When the destination pool is exhausted
+    /// the surplus splits into base pages (what THP does under memory
+    /// pressure) — so resident-vs-pool invariants hold on every node
+    /// and the sysfs facade never contradicts numa_maps.
+    fn rebalance_huge_pools(&mut self, pid: i32, before_2m: &[u64], before_1g: &[u64]) {
+        let nodes = self.topo.nodes;
+        let Some(p) = self.procs.get_mut(&pid) else { return };
+        for n in 0..nodes {
+            let (now, was) = (p.pages.huge_2m[n], before_2m[n]);
+            if now > was {
+                let granted = self.huge_pools[n].take(now - was);
+                let split = (now - was) - granted;
+                if split > 0 {
+                    p.pages.huge_2m[n] -= split;
+                    p.pages.per_node[n] += split * PageTier::Huge2M.pages_4k();
+                }
+            } else if was > now {
+                self.huge_pools[n].put(was - now);
+            }
+            let (now, was) = (p.pages.giant_1g[n], before_1g[n]);
+            if now > was {
+                let granted = self.giant_pools[n].take(now - was);
+                let split = (now - was) - granted;
+                if split > 0 {
+                    p.pages.giant_1g[n] -= split;
+                    p.pages.per_node[n] += split * PageTier::Giant1G.pages_4k();
+                }
+            } else if was > now {
+                self.giant_pools[n].put(was - now);
+            }
+        }
     }
 
     // ----------------------------------------------------------------- tick
@@ -259,6 +351,17 @@ impl Machine {
             }
             let mi = p.behavior.intensity_at(self.now_ms);
             let fracs = p.pages.fractions();
+            // TLB-pressure stall: the page-table mappings the working set
+            // needs vs the TLB's reach. Huge pages shrink mappings 512x,
+            // which is the whole point of the tier model. Zero-cost when
+            // the model is disabled (`mem.tlb.weight == 0`, the seed
+            // calibration).
+            let tlb = &self.topo.mem.tlb;
+            let tlb_pen = if tlb.enabled() {
+                tlb.weight * mi * tlb.pressure(p.pages.mappings())
+            } else {
+                0.0
+            };
             // Per-thread raw speed.
             let mut speeds = Vec::with_capacity(p.nthreads());
             let mut shares = Vec::with_capacity(p.nthreads());
@@ -275,7 +378,7 @@ impl Machine {
                     let queue_pen = lat_mult[n] - 1.0;
                     penalty += fracs[n] * (dist_pen + queue_pen);
                 }
-                let speed = 1.0 / (1.0 + MEM_WEIGHT * mi * penalty);
+                let speed = 1.0 / (1.0 + MEM_WEIGHT * mi * penalty + tlb_pen);
                 // Timeshare: the core splits dt across its run queue.
                 let share = 1.0 / self.cores[core].len().max(1) as f64;
                 speeds.push(speed);
@@ -451,23 +554,54 @@ impl ProcSource for Machine {
         if !p.is_running() {
             return None;
         }
-        let per_node: std::collections::BTreeMap<usize, u64> = p
-            .pages
-            .per_node
-            .iter()
-            .enumerate()
-            .filter(|&(_, &c)| c > 0)
-            .map(|(n, &c)| (n, c))
-            .collect();
-        let vma = numa_maps::Vma {
-            address: 0x7f00_0000_0000 + ((p.pid as u64) << 24),
-            policy: "default".into(),
-            pages_per_node: per_node,
-            anon: Some(p.pages.total()),
-            dirty: Some(p.pages.total() / 2),
-            file: None,
+        let collect = |counts: &[u64]| -> std::collections::BTreeMap<usize, u64> {
+            counts
+                .iter()
+                .enumerate()
+                .filter(|&(_, &c)| c > 0)
+                .map(|(n, &c)| (n, c))
+                .collect()
         };
-        Some(numa_maps::render(&[vma]))
+        // One VMA per tier, like a real numa_maps: N<i> counts are in the
+        // VMA's own kernelpagesize units, which is how the kernel reports
+        // THP/hugetlb mappings. The Monitor recovers tiers from the
+        // kernelpagesize_kB field — no simulator back-channel.
+        let base_addr = 0x7f00_0000_0000 + ((p.pid as u64) << 24);
+        let base_total: u64 = p.pages.per_node.iter().sum();
+        let mut vmas = vec![numa_maps::Vma {
+            address: base_addr,
+            policy: "default".into(),
+            pages_per_node: collect(&p.pages.per_node),
+            anon: Some(base_total),
+            dirty: Some(base_total / 2),
+            file: None,
+            kernelpagesize_kb: None, // renders as the 4 KiB default
+        }];
+        let huge_total: u64 = p.pages.huge_2m.iter().sum();
+        if huge_total > 0 {
+            vmas.push(numa_maps::Vma {
+                address: base_addr + 0x10_0000_0000,
+                policy: "default".into(),
+                pages_per_node: collect(&p.pages.huge_2m),
+                anon: Some(huge_total),
+                dirty: None,
+                file: None,
+                kernelpagesize_kb: Some(2048),
+            });
+        }
+        let giant_total: u64 = p.pages.giant_1g.iter().sum();
+        if giant_total > 0 {
+            vmas.push(numa_maps::Vma {
+                address: base_addr + 0x20_0000_0000,
+                policy: "default".into(),
+                pages_per_node: collect(&p.pages.giant_1g),
+                anon: Some(giant_total),
+                dirty: None,
+                file: None,
+                kernelpagesize_kb: Some(1_048_576),
+            });
+        }
+        Some(numa_maps::render(&vmas))
     }
 
     fn read_nodes_online(&self) -> Option<String> {
@@ -501,6 +635,28 @@ impl ProcSource for Machine {
             return None;
         }
         Some(sysnode::render_numastat(&self.numastat[node]))
+    }
+
+    fn read_node_hugepage_file(
+        &self,
+        node: usize,
+        tier_kb: u64,
+        file: &str,
+    ) -> Option<String> {
+        if node >= self.topo.nodes {
+            return None;
+        }
+        let pool = match tier_kb {
+            2048 => &self.huge_pools[node],
+            1_048_576 => &self.giant_pools[node],
+            _ => return None,
+        };
+        let (total, free) = (pool.total, pool.free);
+        match file {
+            "nr_hugepages" => Some(crate::mem::hugepages::render_count(total)),
+            "free_hugepages" => Some(crate::mem::hugepages::render_count(free)),
+            _ => None,
+        }
     }
 }
 
@@ -740,6 +896,188 @@ mod tests {
         m.run_until(1_000.0);
         assert!(m.read_stat(pid).is_none());
         assert!(!m.list_pids().contains(&pid));
+    }
+
+    fn thp_machine() -> Machine {
+        Machine::new(
+            NumaTopology::from_config(&MachineConfig::preset("r910-thp").unwrap()),
+            42,
+        )
+    }
+
+    #[test]
+    fn spawn_with_thp_backs_working_set_from_the_pool() {
+        let mut m = thp_machine();
+        let mut b = TaskBehavior::mem_bound(1e9); // 200_000-page working set
+        b.thp_fraction = 0.5;
+        let pid = m.spawn("thp", b, 1.0, 2, Placement::Node(1));
+        let p = m.process(pid).unwrap();
+        // floor(200_000 * 0.5) / 512 = 195 huge pages on node 1.
+        assert_eq!(p.pages.huge_2m[1], 195);
+        assert_eq!(p.pages.total(), 200_000, "promotion conserves bytes");
+        // Pool debited, visible through the sysfs facade only.
+        let free = crate::mem::hugepages::parse_count(
+            &m.read_node_hugepage_file(1, 2048, "free_hugepages").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(free, 2048 - 195);
+        let nr = crate::mem::hugepages::parse_count(
+            &m.read_node_hugepage_file(1, 2048, "nr_hugepages").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(nr, 2048);
+    }
+
+    #[test]
+    fn thp_spawn_is_bounded_by_pool_capacity() {
+        let mut m = thp_machine();
+        // Two 200k-page processes at full THP want 390 pages each; pool
+        // holds 2048 per node, so both fit — drain it with bigger asks.
+        for _ in 0..6 {
+            let mut b = TaskBehavior::mem_bound(1e9);
+            b.thp_fraction = 1.0;
+            m.spawn("eater", b, 1.0, 2, Placement::Node(0));
+        }
+        let free = crate::mem::hugepages::parse_count(
+            &m.read_node_hugepage_file(0, 2048, "free_hugepages").unwrap(),
+        )
+        .unwrap();
+        // 6 * 390 = 2340 wanted > 2048: pool exhausted, never negative.
+        assert_eq!(free, 0);
+        let total_huge: u64 = m
+            .processes()
+            .map(|p| p.pages.huge_2m.iter().sum::<u64>())
+            .sum();
+        assert_eq!(total_huge, 2048);
+    }
+
+    #[test]
+    fn hugepage_sysfs_absent_for_unknown_tier_or_node() {
+        let m = thp_machine();
+        assert!(m.read_node_hugepage_file(0, 64, "nr_hugepages").is_none());
+        assert!(m.read_node_hugepage_file(9, 2048, "nr_hugepages").is_none());
+        assert!(m.read_node_hugepage_file(0, 2048, "surplus_hugepages").is_none());
+    }
+
+    #[test]
+    fn numa_maps_renders_tiers_with_kernelpagesize() {
+        let mut m = thp_machine();
+        let mut b = TaskBehavior::mem_bound(1e9);
+        b.thp_fraction = 0.5;
+        let pid = m.spawn("thp", b, 1.0, 2, Placement::Node(2));
+        let text = m.read_numa_maps(pid).unwrap();
+        assert!(text.contains("kernelpagesize_kB=4"));
+        assert!(text.contains("kernelpagesize_kB=2048"));
+        let maps = numa_maps::parse(&text);
+        let p = m.process(pid).unwrap();
+        // 4 KiB-equivalent aggregation matches the simulator exactly...
+        assert_eq!(maps.pages_per_node(4)[2], p.pages.total());
+        // ...and the huge tier is separable from the text alone.
+        assert_eq!(maps.huge_pages_per_node(4, 2048)[2], p.pages.huge_2m[2]);
+    }
+
+    #[test]
+    fn tlb_pressure_slows_flat_pages_and_huge_pages_buy_it_back() {
+        let run = |thp: f64| -> f64 {
+            let mut m = thp_machine(); // tlb_weight 0.3 on this preset
+            m.os_balance = false;
+            let mut b = TaskBehavior::mem_bound(1e12);
+            b.thp_fraction = thp;
+            let pid = m.spawn("t", b, 1.0, 1, Placement::Node(0));
+            m.run_until(2_000.0);
+            m.process_mut(pid).unwrap().mean_speed()
+        };
+        let flat = run(0.0);
+        let huge = run(1.0);
+        assert!(
+            huge > flat * 1.05,
+            "2 MiB backing must relieve TLB pressure: flat {flat} huge {huge}"
+        );
+    }
+
+    #[test]
+    fn tlb_disabled_preset_matches_seed_speed() {
+        // The default r910 preset keeps tlb_weight = 0: runtimes are
+        // bit-identical to the pre-mem-subsystem calibration.
+        let mut a = machine();
+        a.os_balance = false;
+        let pid = a.spawn("t", TaskBehavior::mem_bound(300.0), 1.0, 1, Placement::Node(0));
+        a.run_until(20_000.0);
+        let t = a.process_mut(pid).unwrap().runtime_ms().unwrap();
+        assert!(t.is_finite() && t > 0.0);
+    }
+
+    #[test]
+    fn migrating_huge_pages_rebalances_node_pools() {
+        // r910-thp has a 2048-page pool on every node: huge pages that
+        // move stay huge, the destination pool backs them, the source
+        // pool gets its pages back.
+        let mut m = thp_machine();
+        let mut b = TaskBehavior::mem_bound(1e9);
+        b.thp_fraction = 1.0;
+        let pid = m.spawn("w", b, 1.0, 2, Placement::Node(0)); // 390 huge
+        let moved = m.migrate_pages(pid, 1, 250_000);
+        assert_eq!(moved, 200_000);
+        let p = m.process(pid).unwrap();
+        assert_eq!(p.pages.huge_2m, vec![0, 390, 0, 0]);
+        let free = |node| {
+            crate::mem::hugepages::parse_count(
+                &m.read_node_hugepage_file(node, 2048, "free_hugepages").unwrap(),
+            )
+            .unwrap()
+        };
+        assert_eq!(free(0), 2048, "source pool refunded");
+        assert_eq!(free(1), 2048 - 390, "destination pool backs the pages");
+    }
+
+    #[test]
+    fn huge_pages_split_when_destination_pool_is_empty() {
+        // 8node-hetero: nodes 4..7 have no 2 MiB pools. A huge-backed
+        // working set migrated there splits to base pages, keeping the
+        // sysfs pool view and numa_maps consistent.
+        let mut m = Machine::new(
+            NumaTopology::from_config(&MachineConfig::preset("8node-hetero").unwrap()),
+            3,
+        );
+        let mut b = TaskBehavior::mem_bound(1e9);
+        b.thp_fraction = 1.0;
+        let pid = m.spawn("w", b, 1.0, 2, Placement::Node(0)); // 390 huge
+        let moved = m.migrate_pages(pid, 6, 250_000);
+        assert_eq!(moved, 200_000);
+        let p = m.process(pid).unwrap();
+        assert_eq!(p.pages.huge_2m.iter().sum::<u64>(), 0, "all split");
+        assert_eq!(p.pages.per_node[6], 200_000);
+        assert_eq!(p.pages.total(), 200_000);
+        // Source pool refunded; destination reports an empty pool that
+        // numa_maps (all kernelpagesize_kB=4 now) agrees with.
+        let free0 = crate::mem::hugepages::parse_count(
+            &m.read_node_hugepage_file(0, 2048, "free_hugepages").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(free0, 4096);
+        let nr6 = crate::mem::hugepages::parse_count(
+            &m.read_node_hugepage_file(6, 2048, "nr_hugepages").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(nr6, 0);
+        let text = m.read_numa_maps(pid).unwrap();
+        assert!(!text.contains("kernelpagesize_kB=2048"));
+    }
+
+    #[test]
+    fn migration_ops_ledger_counts_tiered_moves() {
+        let mut m = thp_machine();
+        let mut b = TaskBehavior::mem_bound(1e9);
+        b.thp_fraction = 1.0;
+        let pid = m.spawn("w", b, 1.0, 2, Placement::Node(0));
+        let moved = m.migrate_pages(pid, 1, 100_000);
+        assert!(moved > 0);
+        assert!(
+            m.total_migration_ops < m.total_pages_migrated / 100,
+            "huge-backed move must take far fewer ops than equivalents: {} ops for {} pages",
+            m.total_migration_ops,
+            m.total_pages_migrated
+        );
     }
 
     #[test]

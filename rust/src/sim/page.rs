@@ -5,24 +5,54 @@
 //! a migration ledger (migrations consume controller bandwidth, which is
 //! exactly why Algorithm 3 only moves "sticky" pages when degradation is
 //! already high).
+//!
+//! Since the `mem` subsystem landed, placement is **tiered**: a working
+//! set is some mix of 4 KiB base pages, 2 MiB huge pages, and 1 GiB
+//! giant pages per node. Counts are kept in each tier's own units;
+//! totals, fractions, and migration budgets are in 4 KiB *equivalents*
+//! so every consumer of the old flat model keeps its semantics. The
+//! ledger distinguishes bandwidth (scales with bytes — one 2 MiB move
+//! costs 512 base moves) from operations (one per page of any tier —
+//! where huge pages win).
 
-/// Page placement of one process across NUMA nodes.
+use crate::mem::PageTier;
+
+/// Page placement of one process across NUMA nodes, per tier.
 #[derive(Clone, Debug)]
 pub struct PageMap {
-    /// Resident pages per node.
+    /// Resident 4 KiB base pages per node.
     pub per_node: Vec<u64>,
-    /// Cumulative pages migrated (for metrics / cost accounting).
+    /// Resident 2 MiB huge pages per node (2 MiB units).
+    pub huge_2m: Vec<u64>,
+    /// Resident 1 GiB giant pages per node (1 GiB units).
+    pub giant_1g: Vec<u64>,
+    /// Cumulative 4 KiB-equivalent pages migrated (bandwidth ledger).
     pub migrated_total: u64,
+    /// Cumulative migration operations — one per page of any tier (the
+    /// `migrate_pages(2)` call-volume ledger huge pages shrink).
+    pub migrate_ops: u64,
 }
 
 impl PageMap {
     pub fn empty(nodes: usize) -> Self {
-        Self { per_node: vec![0; nodes], migrated_total: 0 }
+        Self {
+            per_node: vec![0; nodes],
+            huge_2m: vec![0; nodes],
+            giant_1g: vec![0; nodes],
+            migrated_total: 0,
+            migrate_ops: 0,
+        }
     }
 
-    /// First-touch allocation: distribute `pages` proportionally to the
-    /// thread placement `weights` (threads-per-node), like Linux does when
-    /// faulting in pages from the allocating CPU.
+    pub fn nodes(&self) -> usize {
+        self.per_node.len()
+    }
+
+    /// First-touch allocation: distribute `pages` (4 KiB units)
+    /// proportionally to the thread placement `weights`
+    /// (threads-per-node), like Linux does when faulting in pages from
+    /// the allocating CPU. Everything lands in the base tier;
+    /// [`Self::promote_to_huge`] upgrades afterwards (THP collapse).
     pub fn first_touch(nodes: usize, pages: u64, weights: &[u64]) -> Self {
         assert_eq!(weights.len(), nodes);
         let mut map = Self::empty(nodes);
@@ -44,62 +74,166 @@ impl PageMap {
         map
     }
 
-    pub fn total(&self) -> u64 {
-        self.per_node.iter().sum()
+    /// Tier collapse: on each node, convert base pages into pages of
+    /// `tier` — up to `want_frac` of the node's base pages and bounded
+    /// by `pool_free[n]` (the node's free pool of that tier). Returns
+    /// pages taken per node so the machine can debit its pools.
+    pub fn promote_to_tier(
+        &mut self,
+        tier: PageTier,
+        want_frac: f64,
+        pool_free: &[u64],
+    ) -> Vec<u64> {
+        assert!(
+            !matches!(tier, PageTier::Base4K),
+            "base pages need no promotion"
+        );
+        assert_eq!(pool_free.len(), self.nodes());
+        let per = tier.pages_4k();
+        let mut taken = vec![0u64; self.nodes()];
+        if want_frac <= 0.0 {
+            return taken;
+        }
+        for n in 0..self.nodes() {
+            let want = ((self.per_node[n] as f64 * want_frac.min(1.0)) as u64) / per;
+            let got = want.min(pool_free[n]);
+            if got == 0 {
+                continue;
+            }
+            self.per_node[n] -= got * per;
+            match tier {
+                PageTier::Huge2M => self.huge_2m[n] += got,
+                PageTier::Giant1G => self.giant_1g[n] += got,
+                PageTier::Base4K => unreachable!(),
+            }
+            taken[n] = got;
+        }
+        taken
     }
 
-    /// Fraction of pages on each node (all zeros if empty).
+    /// THP collapse into 2 MiB pages (the common case).
+    pub fn promote_to_huge(&mut self, want_frac: f64, pool_free: &[u64]) -> Vec<u64> {
+        self.promote_to_tier(PageTier::Huge2M, want_frac, pool_free)
+    }
+
+    /// 4 KiB-equivalent pages on one node, across tiers.
+    pub fn node_total(&self, n: usize) -> u64 {
+        self.per_node[n]
+            + self.huge_2m[n] * PageTier::Huge2M.pages_4k()
+            + self.giant_1g[n] * PageTier::Giant1G.pages_4k()
+    }
+
+    /// Total resident 4 KiB-equivalent pages.
+    pub fn total(&self) -> u64 {
+        (0..self.nodes()).map(|n| self.node_total(n)).sum()
+    }
+
+    /// Live page-table mappings (pages of any tier each count once) —
+    /// what the TLB must cover.
+    pub fn mappings(&self) -> u64 {
+        self.per_node.iter().sum::<u64>()
+            + self.huge_2m.iter().sum::<u64>()
+            + self.giant_1g.iter().sum::<u64>()
+    }
+
+    /// Fraction of (4 KiB-equivalent) pages on each node.
     pub fn fractions(&self) -> Vec<f64> {
         let total = self.total();
         if total == 0 {
-            return vec![0.0; self.per_node.len()];
+            return vec![0.0; self.nodes()];
         }
-        self.per_node
-            .iter()
-            .map(|&p| p as f64 / total as f64)
+        (0..self.nodes())
+            .map(|n| self.node_total(n) as f64 / total as f64)
             .collect()
     }
 
-    /// Move up to `budget` pages toward `target`, taking from the node
-    /// with the most pages first (hottest remote chunk). Returns pages
-    /// actually moved — the caller charges that traffic to the
-    /// controllers involved.
+    /// Move up to `budget` 4 KiB-equivalent pages from `src` to `dst`,
+    /// largest tier first: a whole huge page is one ledger op for 512
+    /// equivalents, so under the same budget the mover prefers few big
+    /// pages over many small ones (tier-aware sticky migration).
+    /// Returns equivalents moved.
+    fn move_tiered(&mut self, src: usize, dst: usize, budget: u64) -> u64 {
+        let mut moved = 0u64;
+        let mut remaining = budget;
+        for tier in [PageTier::Giant1G, PageTier::Huge2M, PageTier::Base4K] {
+            let per_page = tier.pages_4k();
+            let avail = match tier {
+                PageTier::Base4K => self.per_node[src],
+                PageTier::Huge2M => self.huge_2m[src],
+                PageTier::Giant1G => self.giant_1g[src],
+            };
+            // Whole pages only: a 1 GiB page does not move piecewise.
+            let chunk = avail.min(remaining / per_page);
+            if chunk == 0 {
+                continue;
+            }
+            match tier {
+                PageTier::Base4K => {
+                    self.per_node[src] -= chunk;
+                    self.per_node[dst] += chunk;
+                }
+                PageTier::Huge2M => {
+                    self.huge_2m[src] -= chunk;
+                    self.huge_2m[dst] += chunk;
+                }
+                PageTier::Giant1G => {
+                    self.giant_1g[src] -= chunk;
+                    self.giant_1g[dst] += chunk;
+                }
+            }
+            moved += chunk * per_page;
+            remaining -= chunk * per_page;
+            self.migrate_ops += chunk;
+        }
+        moved
+    }
+
+    /// Move up to `budget` (4 KiB-equivalent) pages toward `target`,
+    /// taking from the node with the most pages first (hottest remote
+    /// chunk). Returns equivalents actually moved — the caller charges
+    /// that traffic to the controllers involved.
     pub fn migrate_toward(&mut self, target: usize, budget: u64) -> u64 {
-        assert!(target < self.per_node.len());
+        assert!(target < self.nodes());
         let mut moved = 0;
         let mut remaining = budget;
         while remaining > 0 {
-            let Some(src) = self
-                .per_node
-                .iter()
-                .enumerate()
-                .filter(|&(n, &p)| n != target && p > 0)
-                .max_by_key(|&(_, &p)| p)
-                .map(|(n, _)| n)
-            else {
+            // Hottest remote chunk first; fall through to cooler nodes
+            // when the hottest holds only whole pages bigger than the
+            // remaining budget.
+            let mut srcs: Vec<usize> = (0..self.nodes())
+                .filter(|&n| n != target && self.node_total(n) > 0)
+                .collect();
+            // Ties break toward the highest node id, matching the old
+            // flat mover's `max_by_key` (which kept the last maximum) —
+            // seed experiment trajectories stay bit-identical.
+            srcs.sort_by_key(|&n| (std::cmp::Reverse(self.node_total(n)), std::cmp::Reverse(n)));
+            let mut progressed = false;
+            for src in srcs {
+                let chunk = self.move_tiered(src, target, remaining);
+                if chunk > 0 {
+                    moved += chunk;
+                    remaining -= chunk;
+                    progressed = true;
+                    break;
+                }
+            }
+            if !progressed {
                 break;
-            };
-            let chunk = self.per_node[src].min(remaining);
-            self.per_node[src] -= chunk;
-            self.per_node[target] += chunk;
-            moved += chunk;
-            remaining -= chunk;
+            }
         }
         self.migrated_total += moved;
         moved
     }
 
-    /// Move up to `budget` pages from `src` to `dst` (auto-NUMA style
-    /// single-origin migration). Returns pages moved.
+    /// Move up to `budget` equivalents from `src` to `dst` (auto-NUMA
+    /// style single-origin migration). Returns equivalents moved.
     pub fn migrate_from(&mut self, src: usize, dst: usize, budget: u64) -> u64 {
         if src == dst {
             return 0;
         }
-        let chunk = self.per_node[src].min(budget);
-        self.per_node[src] -= chunk;
-        self.per_node[dst] += chunk;
-        self.migrated_total += chunk;
-        chunk
+        let moved = self.move_tiered(src, dst, budget);
+        self.migrated_total += moved;
+        moved
     }
 
     /// Locality of a thread distribution: Σ_n thread_frac[n]*page_frac[n].
@@ -132,9 +266,35 @@ mod tests {
     }
 
     #[test]
+    fn first_touch_remainder_lands_on_heaviest() {
+        // 100 pages over weights [2, 3, 3]: floor shares are 25/37/37,
+        // remainder 1 goes to the heaviest node (ties -> lowest id).
+        let m = PageMap::first_touch(3, 100, &[2, 3, 3]);
+        assert_eq!(m.total(), 100);
+        assert_eq!(m.per_node, vec![25, 38, 37]);
+    }
+
+    #[test]
     fn first_touch_no_threads_lands_on_node0() {
         let m = PageMap::first_touch(2, 10, &[0, 0]);
         assert_eq!(m.per_node, vec![10, 0]);
+    }
+
+    #[test]
+    fn first_touch_single_node_takes_everything() {
+        let m = PageMap::first_touch(1, 777, &[4]);
+        assert_eq!(m.per_node, vec![777]);
+        assert_eq!(m.fractions(), vec![1.0]);
+        // Degenerate single-node machine with no threads yet.
+        let m = PageMap::first_touch(1, 9, &[0]);
+        assert_eq!(m.per_node, vec![9]);
+    }
+
+    #[test]
+    fn first_touch_zero_pages_is_empty() {
+        let m = PageMap::first_touch(2, 0, &[1, 1]);
+        assert_eq!(m.total(), 0);
+        assert_eq!(m.fractions(), vec![0.0, 0.0]);
     }
 
     #[test]
@@ -153,6 +313,7 @@ mod tests {
         assert_eq!(m.total(), before);
         assert_eq!(m.per_node[0], 550);
         assert_eq!(m.migrated_total, 300);
+        assert_eq!(m.migrate_ops, 300, "base pages: one op per page");
     }
 
     #[test]
@@ -179,5 +340,97 @@ mod tests {
         m.per_node = vec![100, 0];
         assert!((m.locality(&[1.0, 0.0]) - 1.0).abs() < 1e-12);
         assert!((m.locality(&[0.0, 1.0]) - 0.0).abs() < 1e-12);
+    }
+
+    // ------------------------------------------------------ tier tests
+
+    #[test]
+    fn promote_to_huge_respects_pool_and_conserves_bytes() {
+        let mut m = PageMap::first_touch(2, 10_000, &[1, 0]);
+        // Wants floor(10000*0.5)/512 = 9 huge pages; pool only has 4.
+        let taken = m.promote_to_huge(0.5, &[4, 4]);
+        assert_eq!(taken, vec![4, 0]);
+        assert_eq!(m.huge_2m[0], 4);
+        assert_eq!(m.per_node[0], 10_000 - 4 * 512);
+        assert_eq!(m.total(), 10_000, "promotion conserves bytes");
+        assert_eq!(m.mappings(), 10_000 - 4 * 512 + 4);
+    }
+
+    #[test]
+    fn promote_to_huge_zero_frac_is_noop() {
+        let mut m = PageMap::first_touch(2, 1000, &[1, 1]);
+        assert_eq!(m.promote_to_huge(0.0, &[100, 100]), vec![0, 0]);
+        assert_eq!(m.huge_2m, vec![0, 0]);
+    }
+
+    #[test]
+    fn promote_to_giant_tier() {
+        // 600k base pages: full eligibility is 2 whole 1 GiB pages.
+        let mut m = PageMap::first_touch(2, 600_000, &[1, 0]);
+        let taken = m.promote_to_tier(PageTier::Giant1G, 1.0, &[8, 8]);
+        assert_eq!(taken, vec![2, 0]);
+        assert_eq!(m.giant_1g[0], 2);
+        assert_eq!(m.per_node[0], 600_000 - 2 * 262_144);
+        assert_eq!(m.total(), 600_000);
+        assert_eq!(m.mappings(), 600_000 - 2 * 262_144 + 2);
+    }
+
+    #[test]
+    fn tiered_migration_prefers_big_pages_under_one_budget() {
+        let mut m = PageMap::empty(2);
+        m.per_node[1] = 2048; // 2048 base equivalents
+        m.huge_2m[1] = 3; // 1536 equivalents in 3 ops
+        let moved = m.migrate_toward(0, 2000);
+        assert_eq!(moved, 2000);
+        // All 3 huge pages moved first (1536 equiv, 3 ops), then 464
+        // base pages (464 ops).
+        assert_eq!(m.huge_2m[0], 3);
+        assert_eq!(m.per_node[0], 464);
+        assert_eq!(m.migrate_ops, 3 + 464);
+        assert_eq!(m.migrated_total, 2000);
+    }
+
+    #[test]
+    fn whole_pages_only_budget_below_tier_size() {
+        let mut m = PageMap::empty(2);
+        m.huge_2m[1] = 2;
+        // Budget smaller than one huge page: nothing can move.
+        assert_eq!(m.migrate_toward(0, 100), 0);
+        assert_eq!(m.huge_2m, vec![0, 2]);
+        assert_eq!(m.migrate_ops, 0);
+    }
+
+    #[test]
+    fn tiered_migration_conserves_totals_across_tiers() {
+        let mut m = PageMap::empty(3);
+        m.per_node = vec![100, 700, 0];
+        m.huge_2m = vec![0, 2, 1];
+        m.giant_1g = vec![0, 0, 0];
+        let before = m.total();
+        m.migrate_toward(0, 5_000);
+        assert_eq!(m.total(), before);
+        assert_eq!(m.node_total(1) + m.node_total(2), 0, "fully drained");
+    }
+
+    #[test]
+    fn giant_pages_move_first_and_cost_one_op() {
+        let mut m = PageMap::empty(2);
+        m.giant_1g[1] = 1; // 262144 equivalents
+        m.per_node[1] = 10;
+        let moved = m.migrate_from(1, 0, 262_144);
+        assert_eq!(moved, 262_144);
+        assert_eq!(m.giant_1g[0], 1);
+        assert_eq!(m.per_node[1], 10, "budget exhausted by the giant page");
+        assert_eq!(m.migrate_ops, 1);
+    }
+
+    #[test]
+    fn node_total_mixes_tiers() {
+        let mut m = PageMap::empty(2);
+        m.per_node[0] = 7;
+        m.huge_2m[0] = 2;
+        m.giant_1g[0] = 1;
+        assert_eq!(m.node_total(0), 7 + 1024 + 262_144);
+        assert_eq!(m.total(), m.node_total(0));
     }
 }

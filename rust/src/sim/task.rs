@@ -29,6 +29,10 @@ pub struct TaskBehavior {
     pub phase_period_ms: f64,
     /// Phase modulation amplitude in [0, 1).
     pub phase_amplitude: f64,
+    /// Fraction of the working set eligible for 2 MiB (THP) backing, in
+    /// [0, 1]. Actual backing is additionally bounded by the node's
+    /// huge-page pool at first touch (see `mem::MemTopology`).
+    pub thp_fraction: f64,
 }
 
 impl TaskBehavior {
@@ -43,6 +47,7 @@ impl TaskBehavior {
             granularity: 1.0,
             phase_period_ms: 0.0,
             phase_amplitude: 0.0,
+            thp_fraction: 0.0,
         }
     }
 
@@ -57,6 +62,7 @@ impl TaskBehavior {
             granularity: 0.5,
             phase_period_ms: 0.0,
             phase_amplitude: 0.0,
+            thp_fraction: 0.0,
         }
     }
 
@@ -92,6 +98,9 @@ impl TaskBehavior {
         }
         if self.ws_pages == 0 {
             return Err("ws_pages must be positive".into());
+        }
+        if !(0.0..=1.0).contains(&self.thp_fraction) {
+            return Err(format!("thp_fraction {} out of [0,1]", self.thp_fraction));
         }
         Ok(())
     }
@@ -150,6 +159,9 @@ mod tests {
         assert!(b.validate().is_err());
         let mut b = TaskBehavior::cpu_bound(10.0);
         b.phase_amplitude = 1.0;
+        assert!(b.validate().is_err());
+        let mut b = TaskBehavior::cpu_bound(10.0);
+        b.thp_fraction = 1.5;
         assert!(b.validate().is_err());
     }
 }

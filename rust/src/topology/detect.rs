@@ -34,6 +34,13 @@ pub fn detect_from(sys_root: &Path) -> Option<NumaTopology> {
     }
 
     let nodes = node_ids.len();
+    let base_pages = pages.iter().copied().min().unwrap_or(0);
+    let mut mem = crate::mem::MemTopology::homogeneous(nodes, base_pages.max(1));
+    for (slot, &p) in mem.nodes.iter_mut().zip(&pages) {
+        // Real hosts are heterogeneous in capacity more often than in
+        // core count; carry the true per-node sizes.
+        slot.capacity_pages_4k = p.max(1);
+    }
     Some(NumaTopology {
         nodes,
         // Heterogeneous cores-per-node collapse to the min (the sim model
@@ -41,7 +48,8 @@ pub fn detect_from(sys_root: &Path) -> Option<NumaTopology> {
         cores_per_node: cores_per_node.iter().copied().min().unwrap_or(1).max(1),
         distance: distance_rows,
         bandwidth_gbs: vec![12.0; nodes], // sysfs does not expose bandwidth
-        pages_per_node: pages.iter().copied().min().unwrap_or(0),
+        pages_per_node: base_pages,
+        mem,
     })
 }
 

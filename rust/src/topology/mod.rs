@@ -8,6 +8,7 @@
 pub mod detect;
 
 use crate::config::MachineConfig;
+use crate::mem::MemTopology;
 
 /// Immutable description of a NUMA machine.
 #[derive(Clone, Debug)]
@@ -18,10 +19,15 @@ pub struct NumaTopology {
     pub cores_per_node: usize,
     /// SLIT distance matrix, row-major; `dist[i][j]`, local = 10.
     pub distance: Vec<Vec<f64>>,
-    /// Memory-controller bandwidth per node, GB/s.
+    /// Memory-controller bandwidth per node, GB/s. Genuinely per node:
+    /// heterogeneous boxes configure a vector, homogeneous presets
+    /// replicate one value.
     pub bandwidth_gbs: Vec<f64>,
-    /// DRAM capacity per node, in 4 KiB pages.
+    /// Default DRAM capacity per node, in 4 KiB pages (the homogeneous
+    /// baseline; per-node capacity overrides live in `mem.nodes`).
     pub pages_per_node: u64,
+    /// Memory hardware: per-node capacity/huge-page pools/caches + TLB.
+    pub mem: MemTopology,
 }
 
 /// Global core id -> (node, local core index).
@@ -36,12 +42,19 @@ impl NumaTopology {
             None => Self::ring_distance(cfg.nodes, cfg.remote_distance),
         };
         let pages = (cfg.mem_gib_per_node * 1024.0 * 1024.0 / 4.0) as u64;
+        // Per-node bandwidth: an explicit vector wins; otherwise the
+        // scalar replicates (the old behavior, now opt-out).
+        let bandwidth_gbs = match &cfg.bandwidth_gbs_per_node {
+            Some(v) => v.clone(),
+            None => vec![cfg.bandwidth_gbs; cfg.nodes],
+        };
         Self {
             nodes: cfg.nodes,
             cores_per_node: cfg.cores_per_node,
             distance,
-            bandwidth_gbs: vec![cfg.bandwidth_gbs; cfg.nodes],
+            bandwidth_gbs,
             pages_per_node: pages,
+            mem: cfg.mem.to_topology(cfg.nodes, pages),
         }
     }
 
@@ -122,9 +135,17 @@ impl NumaTopology {
                 }
             }
         }
+        if self.bandwidth_gbs.len() != self.nodes {
+            return Err(format!(
+                "bandwidth vector has {} entries for {} nodes",
+                self.bandwidth_gbs.len(),
+                self.nodes
+            ));
+        }
         if self.bandwidth_gbs.iter().any(|&b| b <= 0.0) {
             return Err("bandwidth must be positive".into());
         }
+        self.mem.validate(self.nodes)?;
         Ok(())
     }
 }
@@ -206,5 +227,58 @@ mod tests {
         let t = NumaTopology::r910_40core();
         // 8 GiB / 4 KiB = 2M pages.
         assert_eq!(t.pages_per_node, 2 * 1024 * 1024);
+        // The mem subsystem mirrors the capacity per node.
+        assert_eq!(t.mem.node(0).capacity_pages_4k, 2 * 1024 * 1024);
+        assert_eq!(t.mem.nodes.len(), 4);
+    }
+
+    #[test]
+    fn ring_distance_single_node_is_local_only() {
+        let d = NumaTopology::ring_distance(1, 21.0);
+        assert_eq!(d, vec![vec![10.0]]);
+    }
+
+    #[test]
+    fn ring_distance_symmetric_for_many_sizes() {
+        for nodes in [2usize, 3, 4, 5, 8] {
+            let d = NumaTopology::ring_distance(nodes, 21.0);
+            for i in 0..nodes {
+                assert_eq!(d[i][i], 10.0, "nodes={nodes}");
+                for j in 0..nodes {
+                    assert_eq!(d[i][j], d[j][i], "nodes={nodes} [{i}][{j}]");
+                    if i != j {
+                        assert!(d[i][j] > 10.0, "nodes={nodes} [{i}][{j}]");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_node_bandwidth_vector_respected() {
+        // The old bug: a single scalar silently replicated even when the
+        // box was heterogeneous. Vectors now flow through.
+        let mut cfg = MachineConfig::default();
+        cfg.bandwidth_gbs_per_node = Some(vec![24.0, 20.0, 16.0, 12.0]);
+        let t = NumaTopology::from_config(&cfg);
+        assert_eq!(t.bandwidth_gbs, vec![24.0, 20.0, 16.0, 12.0]);
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_catches_bandwidth_length_mismatch() {
+        let mut t = NumaTopology::r910_40core();
+        t.bandwidth_gbs.pop();
+        assert!(t.validate().is_err());
+        let mut t = NumaTopology::r910_40core();
+        t.bandwidth_gbs.push(10.0);
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn validate_covers_mem_subsystem() {
+        let mut t = NumaTopology::r910_40core();
+        t.mem.nodes[1].capacity_pages_4k = 0;
+        assert!(t.validate().is_err());
     }
 }

@@ -99,6 +99,9 @@ impl ParsecApp {
             // steady.
             phase_period_ms: if self.model == "pipeline" { 400.0 } else { 0.0 },
             phase_amplitude: if self.model == "pipeline" { 0.25 } else { 0.0 },
+            // The paper's testbed ran without THP; the hugepage ablation
+            // overrides this per run.
+            thp_fraction: 0.0,
         }
     }
 

@@ -28,6 +28,7 @@ pub fn apache() -> LaunchSpec {
             granularity: 0.9,
             phase_period_ms: 500.0, // request bursts
             phase_amplitude: 0.40,
+            thp_fraction: 0.0,
         },
         threads: 2,
         importance: 1.0,
@@ -47,6 +48,7 @@ pub fn mysqld() -> LaunchSpec {
             granularity: 0.5,
             phase_period_ms: 900.0,
             phase_amplitude: 0.25,
+            thp_fraction: 0.0,
         },
         threads: 8,
         importance: 1.0,
@@ -66,6 +68,7 @@ pub fn daemon() -> LaunchSpec {
             granularity: 1.0,
             phase_period_ms: 0.0,
             phase_amplitude: 0.0,
+            thp_fraction: 0.0,
         },
         threads: 1,
         importance: 0.2, // nobody cares about cron's latency
