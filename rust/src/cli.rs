@@ -18,6 +18,10 @@ pub struct Cli {
     pub artifacts_dir: Option<String>,
     pub csv: bool,
     pub verbose: bool,
+    /// Reduced-iteration mode for `bench-suite` (CI smoke).
+    pub smoke: bool,
+    /// Output file override (`bench-suite` writes BENCH_PERF.json here).
+    pub out: Option<PathBuf>,
     /// Positional arguments after the subcommand.
     pub positional: Vec<String>,
 }
@@ -35,6 +39,7 @@ COMMANDS:
     fig7             regenerate Figure 7 (speedup vs baselines, 40 cores)
     fig8             regenerate Figure 8 (Apache/MySQL throughput)
     ablate-hugepages sweep THP backing fraction (speedup + op savings)
+    bench-suite      measure hot paths and write BENCH_PERF.json
     host-monitor     run the Monitor against this host's real /proc
     inspect          print machine presets and the workload catalog
 
@@ -47,6 +52,8 @@ FLAGS:
     --use-pjrt           score via AOT PJRT artifacts (default: pure Rust)
     --artifacts <dir>    artifact directory (default: artifacts)
     --csv                emit CSV instead of an ASCII table
+    --smoke              bench-suite: reduced iterations (CI smoke mode)
+    --out <file>         bench-suite: output path (default BENCH_PERF.json)
     --verbose            debug logging
 ";
 
@@ -89,6 +96,8 @@ pub fn parse(args: &[String]) -> Result<Cli, String> {
             "--use-pjrt" => cli.use_pjrt = true,
             "--artifacts" => cli.artifacts_dir = Some(value("--artifacts")?),
             "--csv" => cli.csv = true,
+            "--smoke" => cli.smoke = true,
+            "--out" => cli.out = Some(PathBuf::from(value("--out")?)),
             "--verbose" => cli.verbose = true,
             "--help" | "-h" => return Err(USAGE.to_string()),
             other if other.starts_with("--") => {
@@ -150,5 +159,14 @@ mod tests {
     fn positional_collected() {
         let c = parse(&argv("inspect canneal")).unwrap();
         assert_eq!(c.positional, vec!["canneal"]);
+    }
+
+    #[test]
+    fn parses_bench_suite_flags() {
+        let c = parse(&argv("bench-suite --smoke --out perf/B.json")).unwrap();
+        assert_eq!(c.command, "bench-suite");
+        assert!(c.smoke);
+        assert_eq!(c.out, Some(PathBuf::from("perf/B.json")));
+        assert!(parse(&argv("bench-suite --out")).is_err());
     }
 }

@@ -1,0 +1,221 @@
+//! `bench-suite` — a machine-readable perf snapshot (`BENCH_PERF.json`).
+//!
+//! The interactive benches (`cargo bench --bench perf_hotpath`, ...)
+//! print tables for humans; this module measures the same hot paths and
+//! emits a small JSON document so CI and future PRs have a perf
+//! trajectory to diff against:
+//!
+//! * **roundtrip** — the full monitor round trip (simulator renders
+//!   procfs text, Monitor parses it into a reused `Snapshot`) over a
+//!   40-process machine, with the steady-state heap-allocation count
+//!   (0 when the render cache and buffer reuse are doing their jobs —
+//!   `allocs_counted` is false if the binary lacks the counting
+//!   allocator and the number is meaningless);
+//! * **sim** — raw simulator throughput in task-ticks/s;
+//! * **sweep** — serial vs parallel wall time of a small policy x seed
+//!   grid through `experiments::sweep`, plus an `identical` flag
+//!   re-verifying determinism on every CI run.
+//!
+//! Smoke mode shrinks every iteration count so the whole suite runs in
+//! seconds (CI); full mode is for real measurements.
+
+use std::time::Instant;
+
+use crate::config::{MachineConfig, PolicyKind, SchedulerConfig};
+use crate::monitor::{Monitor, SampleBufs, Snapshot};
+use crate::sim::{Machine, Placement, TaskBehavior};
+use crate::topology::NumaTopology;
+use crate::util::alloc as alloc_counter;
+use crate::util::stats::Percentiles;
+use crate::workloads::parsec;
+
+use super::runner::{self, RunParams};
+use super::sweep;
+
+/// Everything `BENCH_PERF.json` carries.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub smoke: bool,
+    pub allocs_counted: bool,
+    pub roundtrip_iters: usize,
+    pub roundtrip_ns_p50: f64,
+    pub roundtrip_ns_p99: f64,
+    pub roundtrip_allocs_per_sample: f64,
+    pub sim_ticks: usize,
+    pub sim_task_ticks_per_s: f64,
+    pub sweep_cells: usize,
+    pub sweep_threads: usize,
+    pub sweep_serial_ms: f64,
+    pub sweep_parallel_ms: f64,
+    pub sweep_speedup: f64,
+    pub sweep_identical: bool,
+}
+
+fn sweep_grid(horizon_ms: f64) -> Vec<RunParams> {
+    let mut cells = Vec::new();
+    for &policy in &[PolicyKind::Default, PolicyKind::Proposed] {
+        for seed in [1u64, 2] {
+            cells.push(RunParams {
+                machine: MachineConfig::preset("2node-8core").expect("preset"),
+                scheduler: SchedulerConfig { policy, ..Default::default() },
+                specs: vec![parsec::spec("canneal").expect("catalog")],
+                seed,
+                horizon_ms,
+                window_ms: 500.0,
+            });
+        }
+    }
+    cells
+}
+
+/// Run the suite. `smoke` shrinks iteration counts for CI.
+pub fn run(smoke: bool) -> BenchReport {
+    // --- monitor round trip: render -> parse -> reused Snapshot --------
+    let iters = if smoke { 60 } else { 2_000 };
+    let mut m = Machine::new(NumaTopology::r910_40core(), 11);
+    for i in 0..40 {
+        m.spawn(
+            &format!("w{i}"),
+            TaskBehavior::mem_bound(1e12),
+            1.0,
+            2,
+            Placement::LeastLoaded,
+        );
+    }
+    for _ in 0..50 {
+        m.step();
+    }
+    let monitor = Monitor::discover(&m).expect("discover sim topology");
+    let mut snap = Snapshot::default();
+    let mut bufs = SampleBufs::new();
+    // Warmup until buffers and the render cache reach steady state.
+    for _ in 0..iters / 4 + 2 {
+        monitor.sample_into(&m, m.now_ms, &mut snap, &mut bufs);
+    }
+    let mut ns = Vec::with_capacity(iters);
+    let allocs_before = alloc_counter::allocations();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        monitor.sample_into(&m, m.now_ms, &mut snap, &mut bufs);
+        ns.push(t0.elapsed().as_nanos() as f64);
+    }
+    let allocs_delta = alloc_counter::allocations() - allocs_before;
+    let pct = Percentiles::from_vec(ns);
+
+    // --- simulator throughput ------------------------------------------
+    let ticks = if smoke { 2_000 } else { 20_000 };
+    let t0 = Instant::now();
+    for _ in 0..ticks {
+        m.step();
+    }
+    let sim_el = t0.elapsed().as_secs_f64().max(1e-9);
+    let sim_task_ticks_per_s = ticks as f64 * 40.0 / sim_el;
+
+    // --- sweep: serial vs parallel, bit-identical ----------------------
+    let cells = sweep_grid(if smoke { 1_500.0 } else { 8_000.0 });
+    let t0 = Instant::now();
+    let serial: Vec<_> = cells.iter().map(runner::run).collect();
+    let sweep_serial_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t0 = Instant::now();
+    let parallel = sweep::run_many(&cells);
+    let sweep_parallel_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let sweep_identical = serial.len() == parallel.len()
+        && serial.iter().zip(&parallel).all(|(a, b)| {
+            a.end_ms == b.end_ms
+                && a.total_migrations == b.total_migrations
+                && a.total_pages_migrated == b.total_pages_migrated
+                && a.procs.len() == b.procs.len()
+                && a.procs.iter().zip(&b.procs).all(|(x, y)| {
+                    x.runtime_ms == y.runtime_ms && x.mean_speed == y.mean_speed
+                })
+        });
+
+    BenchReport {
+        smoke,
+        allocs_counted: alloc_counter::counting_enabled(),
+        roundtrip_iters: iters,
+        roundtrip_ns_p50: pct.p(50.0),
+        roundtrip_ns_p99: pct.p(99.0),
+        roundtrip_allocs_per_sample: allocs_delta as f64 / iters as f64,
+        sim_ticks: ticks,
+        sim_task_ticks_per_s,
+        sweep_cells: cells.len(),
+        sweep_threads: sweep::max_threads().min(cells.len()),
+        sweep_serial_ms,
+        sweep_parallel_ms,
+        sweep_speedup: if sweep_parallel_ms > 0.0 {
+            sweep_serial_ms / sweep_parallel_ms
+        } else {
+            0.0
+        },
+        sweep_identical,
+    }
+}
+
+impl BenchReport {
+    /// Serialize as `BENCH_PERF.json` (schema `numasched-bench-perf/v1`,
+    /// documented in EXPERIMENTS.md). Hand-rolled — the crate is
+    /// dependency-free by design.
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(s, "{{");
+        let _ = writeln!(s, "  \"schema\": \"numasched-bench-perf/v1\",");
+        let _ = writeln!(s, "  \"smoke\": {},", self.smoke);
+        let _ = writeln!(s, "  \"allocs_counted\": {},", self.allocs_counted);
+        let _ = writeln!(s, "  \"roundtrip\": {{");
+        let _ = writeln!(s, "    \"iters\": {},", self.roundtrip_iters);
+        let _ = writeln!(s, "    \"ns_p50\": {:.1},", self.roundtrip_ns_p50);
+        let _ = writeln!(s, "    \"ns_p99\": {:.1},", self.roundtrip_ns_p99);
+        let _ = writeln!(
+            s,
+            "    \"allocs_per_sample\": {:.4}",
+            self.roundtrip_allocs_per_sample
+        );
+        let _ = writeln!(s, "  }},");
+        let _ = writeln!(s, "  \"sim\": {{");
+        let _ = writeln!(s, "    \"ticks\": {},", self.sim_ticks);
+        let _ = writeln!(
+            s,
+            "    \"task_ticks_per_s\": {:.1}",
+            self.sim_task_ticks_per_s
+        );
+        let _ = writeln!(s, "  }},");
+        let _ = writeln!(s, "  \"sweep\": {{");
+        let _ = writeln!(s, "    \"cells\": {},", self.sweep_cells);
+        let _ = writeln!(s, "    \"threads\": {},", self.sweep_threads);
+        let _ = writeln!(s, "    \"serial_ms\": {:.2},", self.sweep_serial_ms);
+        let _ = writeln!(s, "    \"parallel_ms\": {:.2},", self.sweep_parallel_ms);
+        let _ = writeln!(s, "    \"speedup\": {:.3},", self.sweep_speedup);
+        let _ = writeln!(s, "    \"identical\": {}", self.sweep_identical);
+        let _ = writeln!(s, "  }}");
+        let _ = writeln!(s, "}}");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_run_produces_sane_report_and_json() {
+        let r = run(true);
+        assert!(r.smoke);
+        assert!(r.roundtrip_ns_p50 > 0.0);
+        assert!(r.roundtrip_ns_p99 >= r.roundtrip_ns_p50);
+        assert!(r.sim_task_ticks_per_s > 0.0);
+        assert!(r.sweep_identical, "parallel sweep must match serial");
+        let json = r.to_json();
+        assert!(json.contains("\"schema\": \"numasched-bench-perf/v1\""));
+        assert!(json.contains("\"allocs_per_sample\""));
+        assert!(json.contains("\"identical\": true"));
+        // Balanced braces (cheap well-formedness proxy without a JSON
+        // parser in the dependency-free crate).
+        assert_eq!(
+            json.matches('{').count(),
+            json.matches('}').count(),
+            "{json}"
+        );
+    }
+}

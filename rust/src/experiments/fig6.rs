@@ -12,7 +12,7 @@
 //! factor for the measured pid mid-run. Report the per-app correlation.
 
 use crate::config::MachineConfig;
-use crate::monitor::Monitor;
+use crate::monitor::{Monitor, SampleBufs, Snapshot};
 use crate::reporter::{Backend, Reporter};
 use crate::sim::{Machine, Placement};
 use crate::topology::NumaTopology;
@@ -63,10 +63,12 @@ fn run_cell(app: &parsec::ParsecApp, hogs: usize, seed: u64) -> (f64, f64) {
 
     let mut degradation = Vec::new();
     let warmup = 500.0;
+    let mut snap = Snapshot::default();
+    let mut bufs = SampleBufs::new();
     while m.now_ms < 3_000.0 {
         m.step();
         if (m.now_ms as u64) % 50 == 0 {
-            let snap = monitor.sample(&m, m.now_ms);
+            monitor.sample_into(&m, m.now_ms, &mut snap, &mut bufs);
             if let Some(rep) = reporter.ingest(&snap) {
                 if m.now_ms > warmup {
                     if let Some(r) = rep.by_speedup.iter().find(|r| r.pid == pid) {
@@ -80,14 +82,15 @@ fn run_cell(app: &parsec::ParsecApp, hogs: usize, seed: u64) -> (f64, f64) {
     (speed, stats::mean(&degradation))
 }
 
-/// Sweep one app over the hog levels.
-pub fn sweep_app(app: &parsec::ParsecApp, seed: u64) -> AppAccuracy {
-    let mut measured = Vec::new();
-    let mut predicted = Vec::new();
-    let mut solo_speed = None;
-    for &hogs in &HOG_LEVELS {
-        let (speed, factor) = run_cell(app, hogs, seed);
-        let solo = *solo_speed.get_or_insert(speed);
+/// Fold one app's per-hog-level (speed, factor) pairs — in
+/// `HOG_LEVELS` order, so the first entry is the solo run — into its
+/// accuracy row. Single source of the degradation formula for both the
+/// serial and the fanned-out path.
+fn fold_app(app: &parsec::ParsecApp, cells: &[(f64, f64)]) -> AppAccuracy {
+    let solo = cells[0].0; // HOG_LEVELS[0] == 0 co-runners
+    let mut measured = Vec::with_capacity(cells.len());
+    let mut predicted = Vec::with_capacity(cells.len());
+    for &(speed, factor) in cells {
         measured.push((1.0 - speed / solo).max(0.0));
         predicted.push(factor);
     }
@@ -100,9 +103,31 @@ pub fn sweep_app(app: &parsec::ParsecApp, seed: u64) -> AppAccuracy {
     }
 }
 
-/// The full Figure-6 regeneration.
+/// Sweep one app over the hog levels.
+pub fn sweep_app(app: &parsec::ParsecApp, seed: u64) -> AppAccuracy {
+    let cells: Vec<(f64, f64)> = HOG_LEVELS
+        .iter()
+        .map(|&hogs| run_cell(app, hogs, seed))
+        .collect();
+    fold_app(app, &cells)
+}
+
+/// The full Figure-6 regeneration. One sweep cell per (app, hog level),
+/// fanned out over the worker pool and reassembled in input order — the
+/// output is identical to running [`sweep_app`] serially per app.
 pub fn run(seed: u64) -> Vec<AppAccuracy> {
-    parsec::APPS.iter().map(|a| sweep_app(a, seed)).collect()
+    let mut cells: Vec<(usize, usize)> = Vec::new();
+    for ai in 0..parsec::APPS.len() {
+        for &hogs in &HOG_LEVELS {
+            cells.push((ai, hogs));
+        }
+    }
+    let raw = super::sweep::map(&cells, |&(ai, hogs)| run_cell(&parsec::APPS[ai], hogs, seed));
+    parsec::APPS
+        .iter()
+        .enumerate()
+        .map(|(ai, app)| fold_app(app, &raw[ai * HOG_LEVELS.len()..(ai + 1) * HOG_LEVELS.len()]))
+        .collect()
 }
 
 /// Render the figure as the paper's two panels (per-app rows).

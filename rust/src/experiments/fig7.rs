@@ -11,7 +11,7 @@ use crate::util::stats;
 use crate::workloads::{mix, parsec};
 
 use super::report::{f2, pct, Table};
-use super::runner::{run, RunParams, RunResult};
+use super::runner::{RunParams, RunResult};
 
 /// Per-policy, per-app completion times.
 #[derive(Clone, Debug)]
@@ -31,13 +31,14 @@ pub fn params(policy: PolicyKind, seed: u64, use_pjrt: bool) -> RunParams {
     }
 }
 
+/// All four policies fanned out over the worker pool — results land in
+/// `PolicyKind::ALL` order, identical to the old serial loop.
 pub fn run_all(seed: u64, use_pjrt: bool) -> Fig7Results {
-    Fig7Results {
-        runs: PolicyKind::ALL
-            .iter()
-            .map(|&p| run(&params(p, seed, use_pjrt)))
-            .collect(),
-    }
+    let cells: Vec<RunParams> = PolicyKind::ALL
+        .iter()
+        .map(|&p| params(p, seed, use_pjrt))
+        .collect();
+    Fig7Results { runs: super::sweep::run_many(&cells) }
 }
 
 impl Fig7Results {
@@ -124,6 +125,7 @@ pub fn render(r: &Fig7Results) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::experiments::runner::run;
 
     /// Smaller horizon / subset smoke (full Fig-7 runs in the bench).
     #[test]

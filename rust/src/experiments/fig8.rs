@@ -15,7 +15,7 @@ use crate::util::stats;
 use crate::workloads::mix;
 
 use super::report::{pct, Table};
-use super::runner::{run, RunParams};
+use super::runner::RunParams;
 
 /// Improvement summary for one service.
 #[derive(Clone, Debug)]
@@ -39,13 +39,32 @@ fn params(policy: PolicyKind, seed: u64) -> RunParams {
     }
 }
 
-/// Run the comparison over `seeds` trials.
+/// Run the comparison over `seeds` trials. Every (seed, policy) cell is
+/// independent, so the whole grid fans out through the sweep pool as
+/// keyed cells; the ordered (key, result) pairs fold back into per-seed
+/// improvement pairs exactly as the old serial loop did.
 pub fn run_all(seeds: &[u64]) -> Vec<ServiceImprovement> {
+    let mut cells = Vec::with_capacity(seeds.len() * 2);
+    for &seed in seeds {
+        for policy in [PolicyKind::Default, PolicyKind::Proposed] {
+            cells.push(super::sweep::SweepCell {
+                key: (seed, policy),
+                params: params(policy, seed),
+            });
+        }
+    }
+    let runs = super::sweep::run_cells(&cells);
     let mut apache = Vec::new();
     let mut mysql = Vec::new();
-    for &seed in seeds {
-        let base = run(&params(PolicyKind::Default, seed));
-        let prop = run(&params(PolicyKind::Proposed, seed));
+    for pair in runs.chunks(2) {
+        let ((seed_b, pol_b), base) = &pair[0];
+        let ((seed_p, pol_p), prop) = &pair[1];
+        assert_eq!(seed_b, seed_p, "cell pairing broke");
+        assert_eq!(
+            (*pol_b, *pol_p),
+            (PolicyKind::Default, PolicyKind::Proposed),
+            "cell pairing broke"
+        );
         let imp = |svc: &str| -> f64 {
             let b = base.throughput_of(svc);
             let p = prop.throughput_of(svc);

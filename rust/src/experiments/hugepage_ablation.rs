@@ -19,7 +19,7 @@
 //! there is no simulator back-channel anywhere in the measurement path.
 
 use crate::config::{MachineConfig, SchedulerConfig};
-use crate::monitor::Monitor;
+use crate::monitor::{Monitor, SampleBufs, Snapshot};
 use crate::reporter::{Backend, Reporter};
 use crate::scheduler::UserScheduler;
 use crate::sim::{Machine, Placement, TaskBehavior};
@@ -88,10 +88,12 @@ pub fn run_point(thp_fraction: f64, seed: u64) -> AblationPoint {
     sched.cores_per_node = machine_cfg.cores_per_node;
 
     let mut measured_thp = 0.0;
+    let mut snap = Snapshot::default();
+    let mut bufs = SampleBufs::new();
     while m.now_ms < 2_000.0 {
         m.step();
         if (m.now_ms as u64) % 10 == 0 {
-            let snap = monitor.sample(&m, m.now_ms);
+            monitor.sample_into(&m, m.now_ms, &mut snap, &mut bufs);
             if let Some(task) = snap.task(victim) {
                 let huge_equiv: u64 =
                     task.huge_2m_per_node.iter().sum::<u64>() * 512;
@@ -119,9 +121,9 @@ pub fn run_point(thp_fraction: f64, seed: u64) -> AblationPoint {
     }
 }
 
-/// The full sweep.
+/// The full sweep — one parallel cell per THP fraction.
 pub fn run(seed: u64) -> Vec<AblationPoint> {
-    THP_FRACTIONS.iter().map(|&f| run_point(f, seed)).collect()
+    super::sweep::map(&THP_FRACTIONS, |&f| run_point(f, seed))
 }
 
 pub fn render(points: &[AblationPoint]) -> String {

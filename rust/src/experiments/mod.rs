@@ -8,12 +8,17 @@
 //! * [`hugepage_ablation`] — speedup / migration-charge savings vs THP
 //!   fraction (the `mem` subsystem's headline experiment);
 //! * [`runner`] — the shared policy driver;
+//! * [`sweep`] — the deterministic parallel cell runner every grid
+//!   experiment fans out through;
+//! * [`bench_suite`] — the `bench-suite` CLI backend (BENCH_PERF.json);
 //! * [`report`] — table rendering.
 
+pub mod bench_suite;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod hugepage_ablation;
 pub mod report;
 pub mod runner;
+pub mod sweep;
 pub mod table1;

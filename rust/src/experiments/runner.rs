@@ -12,7 +12,7 @@ use std::time::Instant;
 
 use crate::baselines::{autonuma::AutoNuma, static_tuning};
 use crate::config::{MachineConfig, PolicyKind, SchedulerConfig};
-use crate::monitor::Monitor;
+use crate::monitor::{Monitor, SampleBufs, Snapshot};
 use crate::reporter::{Backend, Reporter};
 use crate::scheduler::UserScheduler;
 use crate::sim::{Machine, Placement};
@@ -212,6 +212,10 @@ pub fn run(params: &RunParams) -> RunResult {
     let mut windows: std::collections::BTreeMap<i32, Vec<f64>> = Default::default();
     let mut epoch_ns = Running::new();
     let mut pending_report = None;
+    // Reused across every monitor tick: the zero-allocation fast path
+    // (cached numa_maps render + borrowed parse + recycled Snapshot).
+    let mut snap = Snapshot::default();
+    let mut bufs = SampleBufs::new();
 
     let finite_pids: Vec<i32> = pids
         .iter()
@@ -230,7 +234,7 @@ pub fn run(params: &RunParams) -> RunResult {
         if let Some((monitor, reporter, scheduler)) = proposed.as_mut() {
             if machine.now_ms >= next_monitor {
                 next_monitor += monitor_period;
-                let snap = monitor.sample(&machine, machine.now_ms);
+                monitor.sample_into(&machine, machine.now_ms, &mut snap, &mut bufs);
                 let t0 = Instant::now();
                 pending_report = reporter.ingest(&snap);
                 epoch_ns.push(t0.elapsed().as_nanos() as f64);

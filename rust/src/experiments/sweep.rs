@@ -1,0 +1,178 @@
+//! Deterministic parallel sweep runner.
+//!
+//! Every experiment is a grid of independent cells — (policy, seed,
+//! param) tuples that each boot their own simulated machine — yet the
+//! seed harness ran them strictly serially. This module fans cells out
+//! over a `std::thread` worker pool (zero new dependencies) while
+//! keeping results **bit-identical to serial execution**:
+//!
+//! * each cell is self-contained (own `Machine`, own `Rng` seeded from
+//!   the cell's seed), so thread interleaving cannot leak into results;
+//! * workers pull cells from an atomic cursor but write results into
+//!   per-cell slots, so the output order is the input order no matter
+//!   which worker finishes first;
+//! * a worker panic propagates out of [`map`] (via `std::thread::scope`)
+//!   instead of silently dropping cells.
+//!
+//! Determinism rule for new cells: a cell function must derive all
+//! randomness from its input (seed), never from wall clock, thread id,
+//! or shared mutable state.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::runner::{self, RunParams, RunResult};
+
+/// Worker-pool width: `NUMASCHED_SWEEP_THREADS` overrides (0/garbage
+/// ignored), else the machine's available parallelism.
+pub fn max_threads() -> usize {
+    std::env::var("NUMASCHED_SWEEP_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
+/// Run `f` over every item on the worker pool; results come back in
+/// input order. Falls back to a plain serial loop for one item or one
+/// worker (no threads spawned).
+pub fn map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    map_with(items, max_threads(), f)
+}
+
+/// [`map`] with an explicit worker count (tests pin it without touching
+/// process-global environment variables).
+pub fn map_with<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.min(n);
+    if workers <= 1 || n == 1 {
+        return items.iter().map(f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+/// Run a list of [`RunParams`] cells concurrently; results are in input
+/// order and identical to `params.iter().map(runner::run)`.
+pub fn run_many(params: &[RunParams]) -> Vec<RunResult> {
+    map(params, runner::run)
+}
+
+/// A keyed sweep cell, for grids where the caller wants the
+/// (policy, seed, param) identity travelling with the result.
+#[derive(Clone, Debug)]
+pub struct SweepCell<K> {
+    pub key: K,
+    pub params: RunParams,
+}
+
+/// Run keyed cells concurrently; `(key, result)` pairs in input order.
+pub fn run_cells<K>(cells: &[SweepCell<K>]) -> Vec<(K, RunResult)>
+where
+    K: Clone + Send + Sync,
+{
+    map(cells, |c| (c.key.clone(), runner::run(&c.params)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MachineConfig, PolicyKind, SchedulerConfig};
+    use crate::workloads::parsec;
+
+    #[test]
+    fn map_preserves_input_order() {
+        let items: Vec<usize> = (0..37).collect();
+        let out = map(&items, |&x| x * x);
+        assert_eq!(out, items.iter().map(|&x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_handles_empty_and_single() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(map(&empty, |&x| x).is_empty());
+        assert_eq!(map(&[7u32], |&x| x + 1), vec![8]);
+    }
+
+    fn quick_cell(policy: PolicyKind, seed: u64) -> RunParams {
+        RunParams {
+            machine: MachineConfig::preset("2node-8core").unwrap(),
+            scheduler: SchedulerConfig { policy, ..Default::default() },
+            specs: vec![parsec::spec("canneal").unwrap()],
+            seed,
+            horizon_ms: 2_000.0,
+            window_ms: 500.0,
+        }
+    }
+
+    #[test]
+    fn run_many_matches_serial_execution() {
+        let cells = vec![
+            quick_cell(PolicyKind::Default, 3),
+            quick_cell(PolicyKind::Proposed, 3),
+            quick_cell(PolicyKind::Default, 4),
+        ];
+        let serial: Vec<_> = cells.iter().map(runner::run).collect();
+        let parallel = run_many(&cells);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.policy, b.policy);
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.end_ms, b.end_ms);
+            assert_eq!(a.total_migrations, b.total_migrations);
+            assert_eq!(a.total_pages_migrated, b.total_pages_migrated);
+            for (x, y) in a.procs.iter().zip(&b.procs) {
+                assert_eq!(x.comm, y.comm);
+                assert_eq!(x.runtime_ms, y.runtime_ms);
+                assert_eq!(x.mean_speed, y.mean_speed);
+                assert_eq!(x.window_throughput, y.window_throughput);
+            }
+        }
+    }
+
+    #[test]
+    fn run_cells_carries_keys_in_order() {
+        let cells = vec![
+            SweepCell { key: ("default", 1u64), params: quick_cell(PolicyKind::Default, 1) },
+            SweepCell { key: ("proposed", 1u64), params: quick_cell(PolicyKind::Proposed, 1) },
+        ];
+        let out = run_cells(&cells);
+        assert_eq!(out[0].0, ("default", 1));
+        assert_eq!(out[1].0, ("proposed", 1));
+        assert_eq!(out[0].1.policy, PolicyKind::Default);
+        assert_eq!(out[1].1.policy, PolicyKind::Proposed);
+    }
+}

@@ -41,8 +41,10 @@ pub fn measure(app: &parsec::ParsecApp, seed: u64) -> Measured {
     }
 }
 
+/// One cell per app, fanned out over the sweep pool (results in
+/// catalog order, identical to the serial loop).
 pub fn run(seed: u64) -> Vec<Measured> {
-    parsec::APPS.iter().map(|a| measure(a, seed)).collect()
+    super::sweep::map(&parsec::APPS, |a| measure(a, seed))
 }
 
 pub fn render(measured: &[Measured]) -> String {

@@ -5,12 +5,17 @@ use std::time::Duration;
 use numasched::cli::{self, Cli, USAGE};
 use numasched::config::{Config, PolicyKind};
 use numasched::experiments::{
-    fig6, fig7, fig8, hugepage_ablation, report::Table, runner, table1,
+    bench_suite, fig6, fig7, fig8, hugepage_ablation, report::Table, runner, table1,
 };
 use numasched::monitor::{thread::MonitorThread, Monitor};
 use numasched::procfs::host::HostProcfs;
 use numasched::util::log::{set_max_level, Level};
 use numasched::workloads;
+
+/// Count heap allocations so `bench-suite` can prove the monitor round
+/// trip is allocation-free at steady state (util::alloc).
+#[global_allocator]
+static ALLOC: numasched::util::alloc::CountingAlloc = numasched::util::alloc::CountingAlloc;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -31,6 +36,7 @@ fn main() {
         "fig7" => cmd_fig7(&cli),
         "fig8" => cmd_fig8(&cli),
         "ablate-hugepages" => cmd_ablate_hugepages(&cli),
+        "bench-suite" => cmd_bench_suite(&cli),
         "host-monitor" => cmd_host_monitor(&cli),
         "inspect" => cmd_inspect(&cli),
         other => {
@@ -175,6 +181,33 @@ fn cmd_fig8(cli: &Cli) -> i32 {
 fn cmd_ablate_hugepages(cli: &Cli) -> i32 {
     let points = hugepage_ablation::run(cli.seed);
     print!("{}", hugepage_ablation::render(&points));
+    0
+}
+
+fn cmd_bench_suite(cli: &Cli) -> i32 {
+    let report = bench_suite::run(cli.smoke);
+    let json = report.to_json();
+    let path = cli
+        .out
+        .clone()
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_PERF.json"));
+    if let Err(e) = std::fs::write(&path, &json) {
+        eprintln!("error: write {}: {e}", path.display());
+        return 1;
+    }
+    print!("{json}");
+    println!("wrote {}", path.display());
+    if !report.sweep_identical {
+        eprintln!("error: parallel sweep diverged from serial execution");
+        return 1;
+    }
+    if report.allocs_counted && report.roundtrip_allocs_per_sample > 0.0 {
+        eprintln!(
+            "error: steady-state monitor round trip allocated ({:.4}/sample; target 0)",
+            report.roundtrip_allocs_per_sample
+        );
+        return 1;
+    }
     0
 }
 

@@ -84,6 +84,12 @@ impl Monitor {
     }
 
     /// One sampling pass (the body of Algorithm 1's loop).
+    ///
+    /// This is the allocating reference path: it builds a fresh
+    /// [`Snapshot`] (and intermediate `NumaMaps`/`PidStat` values) per
+    /// call. The production loop uses [`Self::sample_into`], which is
+    /// field-identical but reuses every buffer; the two are pinned
+    /// against each other by `rust/tests/fastpath_equivalence.rs`.
     pub fn sample(&self, source: &dyn ProcSource, t_ms: f64) -> Snapshot {
         let mut snap = Snapshot { t_ms, ..Default::default() };
         for pid in source.list_pids() {
@@ -137,6 +143,109 @@ impl Monitor {
             snap.nodes.push(ns);
         }
         snap
+    }
+
+    /// The zero-allocation sampling pass: field-identical to
+    /// [`Self::sample`], but procfs text lands in `bufs`, tasks are
+    /// overwritten in place (their `comm` strings and per-node vectors
+    /// keep their capacity), and node counters refill a cleared `Vec`.
+    /// At steady state — same process set, stable text sizes — this
+    /// performs no heap allocation at all.
+    pub fn sample_into(
+        &self,
+        source: &dyn ProcSource,
+        t_ms: f64,
+        snap: &mut Snapshot,
+        bufs: &mut SampleBufs,
+    ) {
+        let nodes = self.topo.nodes;
+        snap.t_ms = t_ms;
+        let mut count = 0usize;
+        let mut visit = |pid: i32| {
+            bufs.stat_text.clear();
+            if !source.read_stat_into(pid, &mut bufs.stat_text) {
+                return;
+            }
+            let Some(ps) = stat::parse_view(bufs.stat_text.trim()) else { return };
+            if !self.comm_filter.is_empty()
+                && !self.comm_filter.iter().any(|c| c == ps.comm)
+            {
+                return;
+            }
+            if count == snap.tasks.len() {
+                // Growing past the previous task count: one allocation
+                // per new slot, then reused forever.
+                snap.tasks.push(TaskSample {
+                    pid: 0,
+                    comm: String::new(),
+                    node: 0,
+                    threads: 0,
+                    cpu_ms: 0,
+                    rss_pages: 0,
+                    pages_per_node: Vec::new(),
+                    huge_2m_per_node: Vec::new(),
+                    giant_1g_per_node: Vec::new(),
+                });
+            }
+            let task = &mut snap.tasks[count];
+            task.pid = ps.pid;
+            task.comm.clear();
+            task.comm.push_str(ps.comm);
+            task.node = self.topo.node_of_core(ps.processor.max(0) as usize);
+            task.threads = ps.num_threads;
+            task.cpu_ms = ps.utime + ps.stime;
+            task.rss_pages = ps.rss.max(0) as u64;
+            for v in [
+                &mut task.pages_per_node,
+                &mut task.huge_2m_per_node,
+                &mut task.giant_1g_per_node,
+            ] {
+                v.clear();
+                v.resize(nodes, 0);
+            }
+            bufs.maps_text.clear();
+            if source.read_numa_maps_into(ps.pid, &mut bufs.maps_text) {
+                numa_maps::accumulate(
+                    &bufs.maps_text,
+                    &mut task.pages_per_node,
+                    &mut task.huge_2m_per_node,
+                    &mut task.giant_1g_per_node,
+                );
+            } else {
+                // numa_maps can be absent (no CONFIG_NUMA): attribute
+                // the whole rss to the node the task runs on.
+                task.pages_per_node[task.node] = task.rss_pages;
+            }
+            count += 1;
+        };
+        source.for_each_pid(&mut visit);
+        snap.tasks.truncate(count);
+        snap.nodes.clear();
+        for n in 0..nodes {
+            bufs.numastat_text.clear();
+            let ns = if source.read_node_numastat_into(n, &mut bufs.numastat_text) {
+                let s = sysnode::parse_numastat(&bufs.numastat_text);
+                NodeSample { served_local: s.numa_hit, served_remote: s.numa_miss }
+            } else {
+                NodeSample::default()
+            };
+            snap.nodes.push(ns);
+        }
+    }
+}
+
+/// Reusable text buffers for [`Monitor::sample_into`] — one set per
+/// sampling loop, so procfs text never allocates at steady state.
+#[derive(Clone, Debug, Default)]
+pub struct SampleBufs {
+    stat_text: String,
+    maps_text: String,
+    numastat_text: String,
+}
+
+impl SampleBufs {
+    pub fn new() -> Self {
+        Self::default()
     }
 }
 
@@ -228,6 +337,42 @@ mod tests {
         // 4K-equivalent totals still line up across tiers.
         assert_eq!(task.pages_per_node[3], sim_p.pages.node_total(3));
         assert_eq!(task.rss_pages, sim_p.pages.total());
+    }
+
+    #[test]
+    fn sample_into_matches_sample_and_reuses_buffers() {
+        let mut m = sim();
+        m.spawn("ferret", TaskBehavior::mem_bound(1e9), 1.0, 4, Placement::Node(2));
+        m.spawn("dedup", TaskBehavior::mem_bound(1e9), 1.0, 2, Placement::Node(0));
+        for _ in 0..5 {
+            m.step();
+        }
+        let mon = Monitor::discover(&m).unwrap();
+        let mut snap = Snapshot::default();
+        let mut bufs = SampleBufs::new();
+        for _ in 0..3 {
+            let reference = mon.sample(&m, m.now_ms);
+            mon.sample_into(&m, m.now_ms, &mut snap, &mut bufs);
+            assert_eq!(snap, reference);
+            m.step();
+        }
+    }
+
+    #[test]
+    fn sample_into_honors_comm_filter_and_shrinks() {
+        let mut m = sim();
+        m.spawn("apache", TaskBehavior::cpu_bound(1e9), 1.0, 1, Placement::Node(0));
+        m.spawn("noise", TaskBehavior::cpu_bound(1e9), 1.0, 1, Placement::Node(0));
+        let mut mon = Monitor::discover(&m).unwrap();
+        let mut snap = Snapshot::default();
+        let mut bufs = SampleBufs::new();
+        mon.sample_into(&m, 0.0, &mut snap, &mut bufs);
+        assert_eq!(snap.tasks.len(), 2);
+        mon.comm_filter = vec!["apache".into()];
+        mon.sample_into(&m, 1.0, &mut snap, &mut bufs);
+        assert_eq!(snap.tasks.len(), 1, "stale slots must be truncated");
+        assert_eq!(snap.tasks[0].comm, "apache");
+        assert_eq!(snap, mon.sample(&m, 1.0));
     }
 
     #[test]

@@ -40,7 +40,7 @@ impl NodeSample {
 }
 
 /// A full monitoring snapshot at one sampling instant.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Snapshot {
     /// Monotonic sample time, ms (virtual in sim, wall on host).
     pub t_ms: f64,

@@ -16,15 +16,63 @@ pub mod stat;
 pub mod sysnode;
 
 /// Abstract source of procfs/sysfs text.
+///
+/// The `*_into` / `for_each_pid` methods are the zero-allocation fast
+/// path: default implementations delegate to the owning methods (so
+/// every existing source keeps working), while sources that can render
+/// directly into a caller buffer — the simulator above all — override
+/// them to make the steady-state monitor round trip allocation-free.
 pub trait ProcSource {
     /// Live pids (directory listing of /proc).
     fn list_pids(&self) -> Vec<i32>;
 
+    /// Visit live pids without materializing a list. Same order as
+    /// [`Self::list_pids`].
+    fn for_each_pid(&self, f: &mut dyn FnMut(i32)) {
+        for pid in self.list_pids() {
+            f(pid);
+        }
+    }
+
     /// Raw `/proc/<pid>/stat` text; None if the pid vanished.
     fn read_stat(&self, pid: i32) -> Option<String>;
 
+    /// Append `/proc/<pid>/stat` text to `out`; false if the pid
+    /// vanished (nothing appended).
+    fn read_stat_into(&self, pid: i32, out: &mut String) -> bool {
+        match self.read_stat(pid) {
+            Some(s) => {
+                out.push_str(&s);
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Raw `/proc/<pid>/numa_maps` text; None if absent.
     fn read_numa_maps(&self, pid: i32) -> Option<String>;
+
+    /// Append `/proc/<pid>/numa_maps` text to `out`; false if absent.
+    fn read_numa_maps_into(&self, pid: i32, out: &mut String) -> bool {
+        match self.read_numa_maps(pid) {
+            Some(s) => {
+                out.push_str(&s);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Append `node<n>/numastat` text to `out`; false if absent.
+    fn read_node_numastat_into(&self, node: usize, out: &mut String) -> bool {
+        match self.read_node_numastat(node) {
+            Some(s) => {
+                out.push_str(&s);
+                true
+            }
+            None => false,
+        }
+    }
 
     /// Raw `/sys/devices/system/node/online` text.
     fn read_nodes_online(&self) -> Option<String>;

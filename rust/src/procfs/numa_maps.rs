@@ -144,26 +144,103 @@ pub fn parse(text: &str) -> NumaMaps {
     }
 }
 
+/// Render one VMA line directly into `out` — `write!` into the target
+/// buffer, no per-field `format!` temporaries.
+pub fn render_line_into(vma: &Vma, out: &mut String) {
+    use std::fmt::Write;
+    let _ = write!(out, "{:012x} {}", vma.address, vma.policy);
+    if let Some(f) = &vma.file {
+        let _ = write!(out, " file={f}");
+    }
+    if let Some(a) = vma.anon {
+        let _ = write!(out, " anon={a}");
+    }
+    if let Some(d) = vma.dirty {
+        let _ = write!(out, " dirty={d}");
+    }
+    for (n, pages) in &vma.pages_per_node {
+        let _ = write!(out, " N{n}={pages}");
+    }
+    let _ = writeln!(out, " kernelpagesize_kB={}", vma.pagesize_kb());
+}
+
+/// Render a whole numa_maps file into a reusable buffer.
+pub fn render_into(vmas: &[Vma], out: &mut String) {
+    for vma in vmas {
+        render_line_into(vma, out);
+    }
+}
+
 /// Render a numa_maps file from per-VMA node counts (synth path).
 pub fn render(vmas: &[Vma]) -> String {
     let mut out = String::new();
-    for vma in vmas {
-        out.push_str(&format!("{:012x} {}", vma.address, vma.policy));
-        if let Some(f) = &vma.file {
-            out.push_str(&format!(" file={f}"));
-        }
-        if let Some(a) = vma.anon {
-            out.push_str(&format!(" anon={a}"));
-        }
-        if let Some(d) = vma.dirty {
-            out.push_str(&format!(" dirty={d}"));
-        }
-        for (n, pages) in &vma.pages_per_node {
-            out.push_str(&format!(" N{n}={pages}"));
-        }
-        out.push_str(&format!(" kernelpagesize_kB={}\n", vma.pagesize_kb()));
-    }
+    render_into(vmas, &mut out);
     out
+}
+
+/// Streaming zero-copy aggregation of one VMA line: adds the line's
+/// node counts onto `base_4k` (4 KiB equivalents, all tiers scaled by
+/// `kernelpagesize_kB`), `huge_2m` (2 MiB-tier VMAs, own units), and
+/// `giant_1g` (1 GiB-tier VMAs, own units). Out-of-range nodes are
+/// dropped, exactly like [`NumaMaps::pages_per_node`]. Returns false
+/// for malformed lines (mirrors [`parse_line`] returning None) without
+/// touching the accumulators.
+pub fn accumulate_line(
+    line: &str,
+    base_4k: &mut [u64],
+    huge_2m: &mut [u64],
+    giant_1g: &mut [u64],
+) -> bool {
+    debug_assert_eq!(base_4k.len(), huge_2m.len());
+    debug_assert_eq!(base_4k.len(), giant_1g.len());
+    let mut parts = line.split_whitespace();
+    let Some(addr) = parts.next() else { return false };
+    if u64::from_str_radix(addr, 16).is_err() {
+        return false;
+    }
+    if parts.next().is_none() {
+        // Missing policy column.
+        return false;
+    }
+    // Pass 1: the page size decides both the 4 KiB scale and the tier,
+    // but the kernel prints `kernelpagesize_kB=` *after* the `N<i>=`
+    // fields — find it before applying counts. Lines are short; a
+    // second pass over the same `&str` beats buffering the counts.
+    let mut pagesize_kb = 4u64;
+    for tok in parts.clone() {
+        if let Some(v) = tok.strip_prefix("kernelpagesize_kB=") {
+            pagesize_kb = v.parse().unwrap_or(4);
+        }
+    }
+    let scale = (pagesize_kb / 4).max(1);
+    let nodes = base_4k.len();
+    for tok in parts {
+        let Some(rest) = tok.strip_prefix('N') else { continue };
+        let Some((node, pages)) = rest.split_once('=') else { continue };
+        let (Ok(n), Ok(p)) = (node.parse::<usize>(), pages.parse::<u64>()) else {
+            continue;
+        };
+        if n < nodes {
+            base_4k[n] += p * scale;
+            match pagesize_kb {
+                2048 => huge_2m[n] += p,
+                1_048_576 => giant_1g[n] += p,
+                _ => {}
+            }
+        }
+    }
+    true
+}
+
+/// Streaming aggregation of a whole numa_maps file — equivalent to
+/// `parse(text)` followed by [`NumaMaps::pages_per_node`] and
+/// [`NumaMaps::huge_pages_per_node`] for the 2 MiB / 1 GiB tiers, but
+/// without allocating a single `Vma`. All slices must share one length
+/// (the node count); counts are *added* onto them.
+pub fn accumulate(text: &str, base_4k: &mut [u64], huge_2m: &mut [u64], giant_1g: &mut [u64]) {
+    for line in text.lines() {
+        accumulate_line(line, base_4k, huge_2m, giant_1g);
+    }
 }
 
 #[cfg(test)]
@@ -273,6 +350,55 @@ mod tests {
         let vma = parse_line("7f0000000000 default N0=10").unwrap();
         assert_eq!(vma.kernelpagesize_kb, None);
         assert_eq!(vma.scale_4k(), 1);
+    }
+
+    /// The streaming aggregator must match parse+aggregate bit-for-bit
+    /// on every shape the renderer and real kernels produce.
+    #[test]
+    fn accumulate_matches_parse_aggregation() {
+        let text = "7f0000000000 default anon=1000 N0=600 N1=400 kernelpagesize_kB=4\n\
+             7f8000000000 default anon=4 N0=3 N1=1 kernelpagesize_kB=2048\n\
+             7f9000000000 default anon=1 N1=1 kernelpagesize_kB=1048576\n\
+             00400000 default file=/usr/sbin/mysqld mapped=1605 mapmax=2 N2=1605\n\
+             7fff0000 bind:3 anon=10 N3=10\n\
+             bogus line that is skipped\n\
+             7f0000000001 default N9=77\n";
+        let nodes = 4;
+        let maps = parse(text);
+        let mut base = vec![0u64; nodes];
+        let mut huge = vec![0u64; nodes];
+        let mut giant = vec![0u64; nodes];
+        accumulate(text, &mut base, &mut huge, &mut giant);
+        assert_eq!(base, maps.pages_per_node(nodes));
+        assert_eq!(huge, maps.huge_pages_per_node(nodes, 2048));
+        assert_eq!(giant, maps.huge_pages_per_node(nodes, 1_048_576));
+    }
+
+    #[test]
+    fn accumulate_line_rejects_malformed() {
+        let mut base = vec![0u64; 2];
+        let mut huge = vec![0u64; 2];
+        let mut giant = vec![0u64; 2];
+        assert!(!accumulate_line("", &mut base, &mut huge, &mut giant));
+        assert!(!accumulate_line("zzz default N0=1", &mut base, &mut huge, &mut giant));
+        assert!(!accumulate_line("7f00", &mut base, &mut huge, &mut giant));
+        assert_eq!(base, vec![0, 0]);
+    }
+
+    #[test]
+    fn render_into_appends_and_matches_render() {
+        let vmas = vec![Vma {
+            address: 0xabc,
+            policy: "interleave:0-3".into(),
+            pages_per_node: [(0, 5), (3, 7)].into_iter().collect(),
+            anon: Some(12),
+            dirty: None,
+            file: Some("/lib/x".into()),
+            kernelpagesize_kb: Some(2048),
+        }];
+        let mut buf = String::from("head|");
+        render_into(&vmas, &mut buf);
+        assert_eq!(buf, format!("head|{}", render(&vmas)));
     }
 
     #[test]

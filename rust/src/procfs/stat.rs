@@ -25,45 +25,141 @@ pub struct PidStat {
     pub processor: i32,
 }
 
-/// Parse one stat line. Returns None on malformed input (the kernel can
-/// race a dying pid into an empty file; callers skip those).
-pub fn parse(line: &str) -> Option<PidStat> {
+impl PidStat {
+    /// Borrow this stat as a zero-copy view.
+    pub fn view(&self) -> PidStatView<'_> {
+        PidStatView {
+            pid: self.pid,
+            comm: &self.comm,
+            state: self.state,
+            utime: self.utime,
+            stime: self.stime,
+            num_threads: self.num_threads,
+            vsize: self.vsize,
+            rss: self.rss,
+            processor: self.processor,
+        }
+    }
+}
+
+/// Borrowed counterpart of [`PidStat`]: `comm` points into the source
+/// line (or the simulator's process record), so parsing and rendering
+/// allocate nothing. This is the Monitor's steady-state representation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PidStatView<'a> {
+    pub pid: i32,
+    pub comm: &'a str,
+    pub state: char,
+    pub utime: u64,
+    pub stime: u64,
+    pub num_threads: i64,
+    pub vsize: u64,
+    pub rss: i64,
+    pub processor: i32,
+}
+
+/// Zero-copy parse of one stat line: no `Vec` of fields, no `comm`
+/// copy. Returns None on malformed input (the kernel can race a dying
+/// pid into an empty file; callers skip those).
+pub fn parse_view(line: &str) -> Option<PidStatView<'_>> {
     let open = line.find('(')?;
     let close = line.rfind(')')?;
     if close < open {
         return None;
     }
     let pid: i32 = line[..open].trim().parse().ok()?;
-    let comm = line[open + 1..close].to_string();
-    let rest: Vec<&str> = line[close + 1..].split_whitespace().collect();
-    // rest[0] is field 3 (state); field k (1-based, k >= 3) is rest[k-3].
-    let field = |k: usize| -> Option<&str> { rest.get(k - 3).copied() };
-    Some(PidStat {
+    let comm = &line[open + 1..close];
+    // Walk the post-comm fields once; field k (1-based, k >= 3) is the
+    // (k-3)-th whitespace token. Stop at the last field we consume.
+    let mut state = None;
+    let mut utime = None;
+    let mut stime = None;
+    let mut num_threads = None;
+    let mut vsize = None;
+    let mut rss = None;
+    let mut processor = None;
+    for (i, tok) in line[close + 1..].split_whitespace().enumerate() {
+        match i + 3 {
+            3 => state = tok.chars().next(),
+            14 => utime = tok.parse().ok(),
+            15 => stime = tok.parse().ok(),
+            20 => num_threads = tok.parse().ok(),
+            23 => vsize = tok.parse().ok(),
+            24 => rss = tok.parse().ok(),
+            39 => {
+                processor = tok.parse().ok();
+                break;
+            }
+            _ => {}
+        }
+    }
+    Some(PidStatView {
         pid,
         comm,
-        state: field(3)?.chars().next()?,
-        utime: field(14)?.parse().ok()?,
-        stime: field(15)?.parse().ok()?,
-        num_threads: field(20)?.parse().ok()?,
-        vsize: field(23)?.parse().ok()?,
-        rss: field(24)?.parse().ok()?,
-        processor: field(39)?.parse().ok()?,
+        state: state?,
+        utime: utime?,
+        stime: stime?,
+        num_threads: num_threads?,
+        vsize: vsize?,
+        rss: rss?,
+        processor: processor?,
     })
 }
 
-/// Render a stat line (the simulator's synth path). Fields not modeled by
-/// the simulator are zero — consistent with what the parser ignores.
+/// Parse one stat line into an owned [`PidStat`].
+pub fn parse(line: &str) -> Option<PidStat> {
+    let v = parse_view(line)?;
+    Some(PidStat {
+        pid: v.pid,
+        comm: v.comm.to_string(),
+        state: v.state,
+        utime: v.utime,
+        stime: v.stime,
+        num_threads: v.num_threads,
+        vsize: v.vsize,
+        rss: v.rss,
+        processor: v.processor,
+    })
+}
+
+/// Render a stat line into `out` without intermediate allocations
+/// (fields 3..=52 per proc(5); fields the simulator does not model are
+/// zero — consistent with what the parser ignores).
+pub fn render_view_into(s: &PidStatView<'_>, out: &mut String) {
+    use std::fmt::Write;
+    let _ = write!(out, "{} ({})", s.pid, s.comm);
+    for k in 3..=52 {
+        out.push(' ');
+        match k {
+            3 => out.push(s.state),
+            14 => {
+                let _ = write!(out, "{}", s.utime);
+            }
+            15 => {
+                let _ = write!(out, "{}", s.stime);
+            }
+            20 => {
+                let _ = write!(out, "{}", s.num_threads);
+            }
+            23 => {
+                let _ = write!(out, "{}", s.vsize);
+            }
+            24 => {
+                let _ = write!(out, "{}", s.rss);
+            }
+            39 => {
+                let _ = write!(out, "{}", s.processor);
+            }
+            _ => out.push('0'),
+        }
+    }
+}
+
+/// Render a stat line (the simulator's synth path).
 pub fn render(s: &PidStat) -> String {
-    // Fields 3..=52 per proc(5); we fill the ones we model.
-    let mut f = vec!["0".to_string(); 50];
-    f[0] = s.state.to_string(); // 3
-    f[11] = s.utime.to_string(); // 14
-    f[12] = s.stime.to_string(); // 15
-    f[17] = s.num_threads.to_string(); // 20
-    f[20] = s.vsize.to_string(); // 23
-    f[21] = s.rss.to_string(); // 24
-    f[36] = s.processor.to_string(); // 39
-    format!("{} ({}) {}", s.pid, s.comm, f.join(" "))
+    let mut out = String::new();
+    render_view_into(&s.view(), &mut out);
+    out
 }
 
 #[cfg(test)]
@@ -121,6 +217,35 @@ mod tests {
         assert!(parse("123").is_none());
         assert!(parse("123 (x").is_none());
         assert!(parse("x (y) R 1").is_none());
+        assert!(parse_view("").is_none());
+        assert!(parse_view("123 (x").is_none());
+        assert!(parse_view("123 (y) R 1").is_none());
+    }
+
+    #[test]
+    fn view_parse_matches_owned_parse() {
+        let owned = parse(REAL_LINE).unwrap();
+        let view = parse_view(REAL_LINE).unwrap();
+        assert_eq!(view, owned.view());
+        assert_eq!(view.comm, "apache2");
+    }
+
+    #[test]
+    fn render_view_into_matches_render() {
+        let s = PidStat {
+            pid: 77,
+            comm: "weird (name) x".into(),
+            state: 'R',
+            utime: 9,
+            stime: 8,
+            num_threads: 3,
+            vsize: 4096,
+            rss: 12,
+            processor: 5,
+        };
+        let mut buf = String::from("prefix|");
+        render_view_into(&s.view(), &mut buf);
+        assert_eq!(buf, format!("prefix|{}", render(&s)));
     }
 
     #[test]

@@ -92,11 +92,23 @@ pub fn parse_numastat(text: &str) -> NumaStat {
     s
 }
 
+/// Render `numastat` into a reusable buffer (the counters change every
+/// tick, so the simulator renders them fresh per sample — into the
+/// caller's buffer rather than a new `String`).
+pub fn render_numastat_into(s: &NumaStat, out: &mut String) {
+    use std::fmt::Write;
+    let _ = writeln!(out, "numa_hit {}", s.numa_hit);
+    let _ = writeln!(out, "numa_miss {}", s.numa_miss);
+    let _ = writeln!(out, "numa_foreign {}", s.numa_foreign);
+    let _ = writeln!(out, "interleave_hit 0");
+    let _ = writeln!(out, "local_node {}", s.local_node);
+    let _ = writeln!(out, "other_node {}", s.other_node);
+}
+
 pub fn render_numastat(s: &NumaStat) -> String {
-    format!(
-        "numa_hit {}\nnuma_miss {}\nnuma_foreign {}\ninterleave_hit 0\nlocal_node {}\nother_node {}\n",
-        s.numa_hit, s.numa_miss, s.numa_foreign, s.local_node, s.other_node
-    )
+    let mut out = String::new();
+    render_numastat_into(s, &mut out);
+    out
 }
 
 #[cfg(test)]

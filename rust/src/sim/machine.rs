@@ -12,6 +12,7 @@
 //! kernel text formats, so the Monitor observes it exactly as it would a
 //! live host.
 
+use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
 
 use crate::mem::{HugePagePool, PageTier};
@@ -82,6 +83,27 @@ pub struct Machine {
     huge_pools: Vec<HugePagePool>,
     /// Per-node 1 GiB pools.
     giant_pools: Vec<HugePagePool>,
+    /// Cached numa_maps renders, keyed by pid and validated against the
+    /// page map's (generation, fingerprint) pair — unchanged processes
+    /// serve cached text with zero allocations. Interior mutability:
+    /// `ProcSource` reads are `&self`.
+    maps_cache: RefCell<BTreeMap<i32, MapsCacheEntry>>,
+    /// Cache telemetry (tests and the perf bench assert on these).
+    maps_cache_hits: Cell<u64>,
+    maps_cache_misses: Cell<u64>,
+    /// Scratch for migration bookkeeping — avoids per-call tier-vector
+    /// clones in `migrate_pages`/`migrate_pages_from`.
+    mig_scratch_2m: Vec<u64>,
+    mig_scratch_1g: Vec<u64>,
+}
+
+/// One cached numa_maps render (see `Machine::maps_cache`).
+#[derive(Default)]
+struct MapsCacheEntry {
+    valid: bool,
+    gen: u64,
+    fp: u64,
+    text: String,
 }
 
 impl Machine {
@@ -116,7 +138,18 @@ impl Machine {
             total_migrations: 0,
             total_pages_migrated: 0,
             total_migration_ops: 0,
+            maps_cache: RefCell::new(BTreeMap::new()),
+            maps_cache_hits: Cell::new(0),
+            maps_cache_misses: Cell::new(0),
+            mig_scratch_2m: Vec::new(),
+            mig_scratch_1g: Vec::new(),
         }
+    }
+
+    /// (hits, misses) of the numa_maps render cache — a miss means the
+    /// process's pages actually changed since its last sample.
+    pub fn numa_maps_cache_stats(&self) -> (u64, u64) {
+        (self.maps_cache_hits.get(), self.maps_cache_misses.get())
     }
 
     // ---------------------------------------------------------------- spawn
@@ -260,39 +293,53 @@ impl Machine {
     /// far fewer ledger operations).
     pub fn migrate_pages(&mut self, pid: i32, node: usize, budget: u64) -> u64 {
         assert!(node < self.topo.nodes);
-        let Some(p) = self.procs.get_mut(&pid) else { return 0 };
-        let before_2m = p.pages.huge_2m.clone();
-        let before_1g = p.pages.giant_1g.clone();
-        let ops_before = p.pages.migrate_ops;
-        let moved = p.pages.migrate_toward(node, budget);
-        let ops = p.pages.migrate_ops - ops_before;
-        if moved > 0 {
-            let gb = moved as f64 * MIG_GB_PER_PAGE;
-            // Traffic hits the destination controller (writes) and is
-            // spread over the tick.
-            self.mig_charge[node] += gb / (self.dt_ms / 1000.0);
-            self.total_pages_migrated += moved;
-            self.total_migration_ops += ops;
-            self.rebalance_huge_pools(pid, &before_2m, &before_1g);
-        }
-        moved
+        self.migrate_pages_common(pid, None, node, budget)
     }
 
     /// Auto-NUMA-style: migrate pages from `src` node to `dst` node.
     pub fn migrate_pages_from(&mut self, pid: i32, src: usize, dst: usize, budget: u64) -> u64 {
-        let Some(p) = self.procs.get_mut(&pid) else { return 0 };
-        let before_2m = p.pages.huge_2m.clone();
-        let before_1g = p.pages.giant_1g.clone();
-        let ops_before = p.pages.migrate_ops;
-        let moved = p.pages.migrate_from(src, dst, budget);
-        let ops = p.pages.migrate_ops - ops_before;
-        if moved > 0 {
-            let gb = moved as f64 * MIG_GB_PER_PAGE;
-            self.mig_charge[dst] += gb / (self.dt_ms / 1000.0);
-            self.total_pages_migrated += moved;
-            self.total_migration_ops += ops;
-            self.rebalance_huge_pools(pid, &before_2m, &before_1g);
+        self.migrate_pages_common(pid, Some(src), dst, budget)
+    }
+
+    /// Shared charge/rebalance bookkeeping for both migration entry
+    /// points. Tier snapshots go into reusable scratch buffers (no
+    /// clones), and a zero-move call touches no ledger, charge, or
+    /// pool state at all.
+    fn migrate_pages_common(
+        &mut self,
+        pid: i32,
+        src: Option<usize>,
+        dst: usize,
+        budget: u64,
+    ) -> u64 {
+        // Detach the scratch buffers so the process borrow below cannot
+        // alias them.
+        let mut before_2m = std::mem::take(&mut self.mig_scratch_2m);
+        let mut before_1g = std::mem::take(&mut self.mig_scratch_1g);
+        let mut moved = 0;
+        if let Some(p) = self.procs.get_mut(&pid) {
+            before_2m.clear();
+            before_2m.extend_from_slice(&p.pages.huge_2m);
+            before_1g.clear();
+            before_1g.extend_from_slice(&p.pages.giant_1g);
+            let ops_before = p.pages.migrate_ops;
+            moved = match src {
+                None => p.pages.migrate_toward(dst, budget),
+                Some(s) => p.pages.migrate_from(s, dst, budget),
+            };
+            let ops = p.pages.migrate_ops - ops_before;
+            if moved > 0 {
+                let gb = moved as f64 * MIG_GB_PER_PAGE;
+                // Traffic hits the destination controller (writes) and
+                // is spread over the tick.
+                self.mig_charge[dst] += gb / (self.dt_ms / 1000.0);
+                self.total_pages_migrated += moved;
+                self.total_migration_ops += ops;
+                self.rebalance_huge_pools(pid, &before_2m, &before_1g);
+            }
         }
+        self.mig_scratch_2m = before_2m;
+        self.mig_scratch_1g = before_1g;
         moved
     }
 
@@ -305,6 +352,7 @@ impl Machine {
     fn rebalance_huge_pools(&mut self, pid: i32, before_2m: &[u64], before_1g: &[u64]) {
         let nodes = self.topo.nodes;
         let Some(p) = self.procs.get_mut(&pid) else { return };
+        let mut split_any = false;
         for n in 0..nodes {
             let (now, was) = (p.pages.huge_2m[n], before_2m[n]);
             if now > was {
@@ -313,6 +361,7 @@ impl Machine {
                 if split > 0 {
                     p.pages.huge_2m[n] -= split;
                     p.pages.per_node[n] += split * PageTier::Huge2M.pages_4k();
+                    split_any = true;
                 }
             } else if was > now {
                 self.huge_pools[n].put(was - now);
@@ -324,10 +373,14 @@ impl Machine {
                 if split > 0 {
                     p.pages.giant_1g[n] -= split;
                     p.pages.per_node[n] += split * PageTier::Giant1G.pages_4k();
+                    split_any = true;
                 }
             } else if was > now {
                 self.giant_pools[n].put(was - now);
             }
+        }
+        if split_any {
+            p.pages.bump_generation();
         }
     }
 
@@ -521,39 +574,13 @@ impl Machine {
     }
 }
 
-impl ProcSource for Machine {
-    fn list_pids(&self) -> Vec<i32> {
-        self.procs
-            .values()
-            .filter(|p| p.is_running())
-            .map(|p| p.pid)
-            .collect()
-    }
-
-    fn read_stat(&self, pid: i32) -> Option<String> {
-        let p = self.procs.get(&pid)?;
-        if !p.is_running() {
-            return None;
-        }
-        let s = stat::PidStat {
-            pid: p.pid,
-            comm: p.comm.clone(),
-            state: 'R',
-            utime: p.cpu_ms as u64, // 1 jiffy == 1 virtual ms
-            stime: 0,
-            num_threads: p.nthreads() as i64,
-            vsize: p.pages.total() * 4096,
-            rss: p.pages.total() as i64,
-            processor: *p.threads_core.first().unwrap_or(&0) as i32,
-        };
-        Some(stat::render(&s))
-    }
-
-    fn read_numa_maps(&self, pid: i32) -> Option<String> {
-        let p = self.procs.get(&pid)?;
-        if !p.is_running() {
-            return None;
-        }
+impl Machine {
+    /// The VMA list `read_numa_maps` renders: one VMA per tier, like a
+    /// real numa_maps — N<i> counts are in the VMA's own kernelpagesize
+    /// units, which is how the kernel reports THP/hugetlb mappings. The
+    /// Monitor recovers tiers from the kernelpagesize_kB field — no
+    /// simulator back-channel.
+    fn numa_maps_vmas(p: &SimProcess) -> Vec<numa_maps::Vma> {
         let collect = |counts: &[u64]| -> std::collections::BTreeMap<usize, u64> {
             counts
                 .iter()
@@ -562,10 +589,6 @@ impl ProcSource for Machine {
                 .map(|(n, &c)| (n, c))
                 .collect()
         };
-        // One VMA per tier, like a real numa_maps: N<i> counts are in the
-        // VMA's own kernelpagesize units, which is how the kernel reports
-        // THP/hugetlb mappings. The Monitor recovers tiers from the
-        // kernelpagesize_kB field — no simulator back-channel.
         let base_addr = 0x7f00_0000_0000 + ((p.pid as u64) << 24);
         let base_total: u64 = p.pages.per_node.iter().sum();
         let mut vmas = vec![numa_maps::Vma {
@@ -601,7 +624,96 @@ impl ProcSource for Machine {
                 kernelpagesize_kb: Some(1_048_576),
             });
         }
-        Some(numa_maps::render(&vmas))
+        vmas
+    }
+}
+
+impl ProcSource for Machine {
+    fn list_pids(&self) -> Vec<i32> {
+        self.procs
+            .values()
+            .filter(|p| p.is_running())
+            .map(|p| p.pid)
+            .collect()
+    }
+
+    fn for_each_pid(&self, f: &mut dyn FnMut(i32)) {
+        for p in self.procs.values() {
+            if p.is_running() {
+                f(p.pid);
+            }
+        }
+    }
+
+    fn read_stat(&self, pid: i32) -> Option<String> {
+        let mut out = String::new();
+        if self.read_stat_into(pid, &mut out) {
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    fn read_stat_into(&self, pid: i32, out: &mut String) -> bool {
+        let Some(p) = self.procs.get(&pid) else { return false };
+        if !p.is_running() {
+            return false;
+        }
+        stat::render_view_into(
+            &stat::PidStatView {
+                pid: p.pid,
+                comm: &p.comm,
+                state: 'R',
+                utime: p.cpu_ms as u64, // 1 jiffy == 1 virtual ms
+                stime: 0,
+                num_threads: p.nthreads() as i64,
+                vsize: p.pages.total() * 4096,
+                rss: p.pages.total() as i64,
+                processor: *p.threads_core.first().unwrap_or(&0) as i32,
+            },
+            out,
+        );
+        true
+    }
+
+    fn read_numa_maps(&self, pid: i32) -> Option<String> {
+        let mut out = String::new();
+        if self.read_numa_maps_into(pid, &mut out) {
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    fn read_numa_maps_into(&self, pid: i32, out: &mut String) -> bool {
+        let Some(p) = self.procs.get(&pid) else { return false };
+        if !p.is_running() {
+            return false;
+        }
+        let gen = p.pages.generation();
+        let fp = p.pages.fingerprint();
+        let mut cache = self.maps_cache.borrow_mut();
+        let entry = cache.entry(pid).or_default();
+        if !entry.valid || entry.gen != gen || entry.fp != fp {
+            entry.text.clear();
+            numa_maps::render_into(&Self::numa_maps_vmas(p), &mut entry.text);
+            entry.valid = true;
+            entry.gen = gen;
+            entry.fp = fp;
+            self.maps_cache_misses.set(self.maps_cache_misses.get() + 1);
+        } else {
+            self.maps_cache_hits.set(self.maps_cache_hits.get() + 1);
+        }
+        out.push_str(&entry.text);
+        true
+    }
+
+    fn read_node_numastat_into(&self, node: usize, out: &mut String) -> bool {
+        if node >= self.topo.nodes {
+            return false;
+        }
+        sysnode::render_numastat_into(&self.numastat[node], out);
+        true
     }
 
     fn read_nodes_online(&self) -> Option<String> {
@@ -1078,6 +1190,70 @@ mod tests {
             m.total_migration_ops,
             m.total_pages_migrated
         );
+    }
+
+    #[test]
+    fn zero_move_migration_touches_nothing() {
+        let mut m = thp_machine();
+        let mut b = TaskBehavior::mem_bound(1e9);
+        b.thp_fraction = 1.0;
+        let pid = m.spawn("w", b, 1.0, 2, Placement::Node(0));
+        let gen = m.process(pid).unwrap().pages.generation();
+        let free_before = crate::mem::hugepages::parse_count(
+            &m.read_node_hugepage_file(0, 2048, "free_hugepages").unwrap(),
+        )
+        .unwrap();
+        // Fully local already: migrating toward home moves nothing.
+        assert_eq!(m.migrate_pages(pid, 0, 10_000), 0);
+        // Zero budget moves nothing either.
+        assert_eq!(m.migrate_pages(pid, 1, 0), 0);
+        assert_eq!(m.total_pages_migrated, 0);
+        assert_eq!(m.total_migration_ops, 0);
+        assert_eq!(m.process(pid).unwrap().pages.generation(), gen);
+        let free_after = crate::mem::hugepages::parse_count(
+            &m.read_node_hugepage_file(0, 2048, "free_hugepages").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(free_before, free_after, "pools untouched on zero-move");
+    }
+
+    #[test]
+    fn numa_maps_cache_serves_unchanged_processes() {
+        let mut m = thp_machine();
+        let mut b = TaskBehavior::mem_bound(1e9);
+        b.thp_fraction = 0.5;
+        let pid = m.spawn("w", b, 1.0, 2, Placement::Node(1));
+        let first = m.read_numa_maps(pid).unwrap();
+        let (h0, m0) = m.numa_maps_cache_stats();
+        assert_eq!((h0, m0), (0, 1), "first read renders");
+        m.step(); // ticks do not move pages
+        let second = m.read_numa_maps(pid).unwrap();
+        assert_eq!(first, second);
+        let (h1, m1) = m.numa_maps_cache_stats();
+        assert_eq!((h1, m1), (1, 1), "unchanged pages hit the cache");
+        m.migrate_pages(pid, 2, 5_000);
+        let third = m.read_numa_maps(pid).unwrap();
+        assert_ne!(first, third, "migration invalidates the cache");
+        let (_h2, m2) = m.numa_maps_cache_stats();
+        assert_eq!(m2, 2);
+    }
+
+    #[test]
+    fn numa_maps_cache_catches_direct_page_writes() {
+        let mut m = small_machine();
+        let pid = m.spawn("t", TaskBehavior::mem_bound(200.0), 1.0, 1, Placement::Node(0));
+        let before = m.read_numa_maps(pid).unwrap();
+        {
+            // Scenario-style direct write: bypasses bump_generation but
+            // not the fingerprint.
+            let p = m.process_mut(pid).unwrap();
+            let total = p.pages.total();
+            p.pages.per_node = vec![0, total];
+        }
+        let after = m.read_numa_maps(pid).unwrap();
+        assert_ne!(before, after);
+        assert!(after.contains("N1="), "stranded pages visible: {after}");
+        assert!(!after.contains("N0="));
     }
 
     #[test]

@@ -31,6 +31,10 @@ pub struct PageMap {
     /// Cumulative migration operations — one per page of any tier (the
     /// `migrate_pages(2)` call-volume ledger huge pages shrink).
     pub migrate_ops: u64,
+    /// Placement-change counter: bumped by every mutating method, so
+    /// `ProcSource` facades can cache rendered numa_maps text and skip
+    /// re-rendering processes whose pages did not move.
+    generation: u64,
 }
 
 impl PageMap {
@@ -41,11 +45,47 @@ impl PageMap {
             giant_1g: vec![0; nodes],
             migrated_total: 0,
             migrate_ops: 0,
+            generation: 0,
         }
     }
 
     pub fn nodes(&self) -> usize {
         self.per_node.len()
+    }
+
+    /// Current placement generation (see [`Self::bump_generation`]).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Record that placement changed — invalidates cached renders of
+    /// this map. Called by every mutating method; callers that write
+    /// the public count vectors directly (scenario setup, tests) are
+    /// caught by [`Self::fingerprint`] instead.
+    pub fn bump_generation(&mut self) {
+        self.generation = self.generation.wrapping_add(1);
+    }
+
+    /// Order-sensitive FNV-1a-style fingerprint over every tier count.
+    /// Belt-and-braces companion to the generation counter: it catches
+    /// direct writes to the public `per_node`/`huge_2m`/`giant_1g`
+    /// vectors (which bypass `bump_generation`), including permutations
+    /// that preserve totals. O(nodes) — far cheaper than re-rendering.
+    pub fn fingerprint(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        for tier in [&self.per_node, &self.huge_2m, &self.giant_1g] {
+            for &c in tier.iter() {
+                h ^= c.wrapping_add(0x9e37_79b9_7f4a_7c15);
+                h = h.wrapping_mul(PRIME);
+            }
+            // Tier separator so e.g. moving a count between tiers with
+            // equal values still changes the hash.
+            h ^= 0xff;
+            h = h.wrapping_mul(PRIME);
+        }
+        h
     }
 
     /// First-touch allocation: distribute `pages` (4 KiB units)
@@ -107,6 +147,7 @@ impl PageMap {
                 PageTier::Base4K => unreachable!(),
             }
             taken[n] = got;
+            self.bump_generation();
         }
         taken
     }
@@ -184,6 +225,9 @@ impl PageMap {
             moved += chunk * per_page;
             remaining -= chunk * per_page;
             self.migrate_ops += chunk;
+        }
+        if moved > 0 {
+            self.bump_generation();
         }
         moved
     }
@@ -422,6 +466,27 @@ mod tests {
         assert_eq!(m.giant_1g[0], 1);
         assert_eq!(m.per_node[1], 10, "budget exhausted by the giant page");
         assert_eq!(m.migrate_ops, 1);
+    }
+
+    #[test]
+    fn generation_tracks_mutation_and_fingerprint_tracks_content() {
+        let mut m = PageMap::first_touch(2, 1000, &[1, 1]);
+        let g0 = m.generation();
+        let f0 = m.fingerprint();
+        assert_eq!(m.migrate_toward(0, 0), 0, "zero budget moves nothing");
+        assert_eq!(m.generation(), g0, "no move, no bump");
+        assert_eq!(m.fingerprint(), f0);
+        m.migrate_toward(0, 100);
+        assert_ne!(m.generation(), g0);
+        assert_ne!(m.fingerprint(), f0);
+        // Direct writes bypass the counter but not the fingerprint —
+        // even total-preserving permutations.
+        let g1 = m.generation();
+        let f1 = m.fingerprint();
+        let (a, b) = (m.per_node[0], m.per_node[1]);
+        m.per_node = vec![b, a];
+        assert_eq!(m.generation(), g1);
+        assert_ne!(m.fingerprint(), f1);
     }
 
     #[test]

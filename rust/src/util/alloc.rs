@@ -1,0 +1,67 @@
+//! Heap-allocation counting for the perf harness.
+//!
+//! The fast-path acceptance criterion (DESIGN.md §Perf) is *zero
+//! steady-state heap allocations* for the monitor round trip over
+//! unchanged processes. Timing alone cannot prove that, so the perf
+//! binaries install [`CountingAlloc`] as the global allocator and
+//! measure the [`allocations`] delta across the hot loop.
+//!
+//! The counter is a process-global atomic: it stays 0 (and
+//! [`counting_enabled`] reports `false`) in builds that keep the normal
+//! system allocator, so library users pay nothing.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// A [`System`] wrapper that counts allocation events (`alloc`,
+/// `alloc_zeroed`, `realloc`; frees are not counted — a grow-in-place
+/// `realloc` still touches the allocator, which is what we budget).
+///
+/// Install in a binary or bench with:
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: numasched::util::alloc::CountingAlloc = CountingAlloc;
+/// ```
+///
+/// Overhead: one `Relaxed` `fetch_add` per allocation event, on a
+/// single shared counter. That is noise next to the allocator call it
+/// piggybacks on, and the paths this crate actually times are
+/// allocation-free by design — but if a future profile ever shows this
+/// cache line contended across sweep workers, shard the counter
+/// per-thread before reaching for anything fancier.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+/// Allocation events since process start (0 unless [`CountingAlloc`] is
+/// the global allocator).
+pub fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// Whether allocation counting is live. Heuristic: by the time any
+/// measurement runs, an instrumented process has long since allocated.
+pub fn counting_enabled() -> bool {
+    allocations() > 0
+}

@@ -5,6 +5,7 @@
 //! closure, so `rand`, `proptest`, `env_logger`, etc. are reimplemented
 //! here at the size this project needs.
 
+pub mod alloc;
 pub mod check;
 pub mod ewma;
 pub mod log;

@@ -34,13 +34,11 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
-/// Percentile (0..=100) with linear interpolation; NaN-free input assumed.
-pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+/// Percentile (0..=100) with linear interpolation over pre-sorted data.
+fn percentile_sorted(v: &[f64], p: f64) -> f64 {
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -48,6 +46,63 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         v[lo]
     } else {
         v[lo] + (v[hi] - v[lo]) * (rank - lo as f64)
+    }
+}
+
+/// Percentile (0..=100) with linear interpolation; NaN-free input assumed.
+/// Clones and sorts per call — when several percentiles are taken over
+/// the same data, build a [`Percentiles`] once instead.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Sort-once percentile view: one sort, then O(1) lookups for any
+/// number of percentiles over the same sample set (the bench harness
+/// takes p50/p99/min/max of every timing series).
+#[derive(Clone, Debug, Default)]
+pub struct Percentiles {
+    sorted: Vec<f64>,
+}
+
+impl Percentiles {
+    pub fn new(xs: &[f64]) -> Self {
+        Self::from_vec(xs.to_vec())
+    }
+
+    /// Take ownership of the samples (no copy).
+    pub fn from_vec(mut xs: Vec<f64>) -> Self {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self { sorted: xs }
+    }
+
+    /// Percentile in 0..=100, linearly interpolated; 0.0 when empty.
+    pub fn p(&self, p: f64) -> f64 {
+        percentile_sorted(&self.sorted, p)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.sorted.first().copied().unwrap_or(0.0)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.sorted.last().copied().unwrap_or(0.0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        mean(&self.sorted)
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
     }
 }
 
@@ -188,6 +243,28 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 10.0);
         assert_eq!(percentile(&xs, 100.0), 40.0);
         assert_eq!(percentile(&xs, 50.0), 25.0);
+    }
+
+    #[test]
+    fn percentiles_match_the_one_shot_function() {
+        let xs = [30.0, 10.0, 40.0, 20.0, 90.0, 5.0];
+        let p = Percentiles::new(&xs);
+        for q in [0.0, 12.5, 50.0, 75.0, 99.0, 100.0] {
+            assert_eq!(p.p(q), percentile(&xs, q), "q={q}");
+        }
+        assert_eq!(p.min(), 5.0);
+        assert_eq!(p.max(), 90.0);
+        assert_eq!(p.len(), 6);
+        assert!((p.mean() - mean(&xs)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_empty_is_safe() {
+        let p = Percentiles::new(&[]);
+        assert!(p.is_empty());
+        assert_eq!(p.p(50.0), 0.0);
+        assert_eq!(p.min(), 0.0);
+        assert_eq!(p.max(), 0.0);
     }
 
     #[test]

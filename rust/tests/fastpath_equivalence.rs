@@ -1,0 +1,194 @@
+//! Golden equivalence for the fast-path engine: the zero-allocation
+//! round trip (cached numa_maps render + borrowed procfs parse + reused
+//! `Snapshot` buffers) must be field-identical to the allocating
+//! reference path on every machine preset, and the parallel sweep
+//! runner must produce bit-identical results to serial execution.
+
+use numasched::config::{MachineConfig, PolicyKind, SchedulerConfig};
+use numasched::experiments::{runner, sweep};
+use numasched::monitor::{Monitor, SampleBufs, Snapshot};
+use numasched::procfs::ProcSource;
+use numasched::sim::{Machine, Placement, TaskBehavior};
+use numasched::topology::NumaTopology;
+use numasched::workloads::parsec;
+
+const PRESETS: [&str; 5] = [
+    "r910-40core",
+    "r910-thp",
+    "2node-8core",
+    "8node-64core",
+    "8node-hetero",
+];
+
+/// A machine with a tiered working set (huge pages where the preset has
+/// pools), a floating co-runner, and some history.
+fn build(preset: &str, seed: u64) -> Machine {
+    let cfg = MachineConfig::preset(preset).unwrap_or_else(|| panic!("preset {preset}"));
+    let mut m = Machine::new(NumaTopology::from_config(&cfg), seed);
+    let mut thp = TaskBehavior::mem_bound(1e12);
+    thp.thp_fraction = 0.5;
+    m.spawn("alpha", thp, 2.0, 2, Placement::Node(0));
+    m.spawn("beta", TaskBehavior::mem_bound(1e12), 1.0, 2, Placement::LeastLoaded);
+    m.spawn("gamma", TaskBehavior::cpu_bound(1e9), 1.0, 1, Placement::LeastLoaded);
+    for _ in 0..25 {
+        m.step();
+    }
+    m
+}
+
+#[test]
+fn sample_into_matches_sample_across_presets() {
+    for preset in PRESETS {
+        let mut m = build(preset, 9);
+        let monitor = Monitor::discover(&m).unwrap();
+        let mut snap = Snapshot::default();
+        let mut bufs = SampleBufs::new();
+        for round in 0..4 {
+            let reference = monitor.sample(&m, m.now_ms);
+            monitor.sample_into(&m, m.now_ms, &mut snap, &mut bufs);
+            assert_eq!(snap, reference, "preset {preset}, round {round}");
+            assert!(!snap.tasks.is_empty(), "preset {preset} sampled no tasks");
+            for _ in 0..10 {
+                m.step();
+            }
+            if round == 1 {
+                // Perturb placement mid-stream through the public API so
+                // later rounds exercise cache invalidation.
+                let pid = m.list_pids()[0];
+                m.migrate_pages(pid, m.topo.nodes - 1, 10_000);
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_path_sees_huge_tiers_identically() {
+    for preset in ["r910-thp", "8node-hetero"] {
+        let m = build(preset, 4);
+        let monitor = Monitor::discover(&m).unwrap();
+        let mut snap = Snapshot::default();
+        let mut bufs = SampleBufs::new();
+        monitor.sample_into(&m, m.now_ms, &mut snap, &mut bufs);
+        let alpha = snap
+            .tasks
+            .iter()
+            .find(|t| t.comm == "alpha")
+            .unwrap_or_else(|| panic!("alpha sampled on {preset}"));
+        let sim_p = m
+            .processes()
+            .find(|p| p.comm == "alpha")
+            .expect("alpha exists");
+        assert_eq!(alpha.huge_2m_per_node, sim_p.pages.huge_2m, "{preset}");
+        assert!(
+            alpha.huge_2m_per_node.iter().sum::<u64>() > 0,
+            "{preset}: the THP working set must be visible through text"
+        );
+        assert_eq!(alpha.rss_pages, sim_p.pages.total(), "{preset}");
+    }
+}
+
+#[test]
+fn cached_render_is_reused_then_invalidated() {
+    let mut m = build("r910-thp", 3);
+    let pid = m.list_pids()[0];
+    let first = m.read_numa_maps(pid).unwrap();
+    let (_, misses0) = m.numa_maps_cache_stats();
+    for _ in 0..5 {
+        assert_eq!(m.read_numa_maps(pid).unwrap(), first);
+    }
+    let (hits, misses) = m.numa_maps_cache_stats();
+    assert_eq!(misses, misses0, "unchanged pages must not re-render");
+    assert!(hits >= 5);
+    m.migrate_pages(pid, 1, 5_000);
+    let after = m.read_numa_maps(pid).unwrap();
+    assert_ne!(first, after, "moved pages must re-render");
+}
+
+#[test]
+fn direct_page_writes_are_caught_by_the_fingerprint() {
+    // Scenario setup in experiments writes the page vectors directly
+    // (bypassing bump_generation); the fingerprint check must keep the
+    // rendered text truthful anyway.
+    let mut m = build("2node-8core", 5);
+    let pid = m.list_pids()[0];
+    let monitor = Monitor::discover(&m).unwrap();
+    let mut snap = Snapshot::default();
+    let mut bufs = SampleBufs::new();
+    monitor.sample_into(&m, m.now_ms, &mut snap, &mut bufs); // warm the cache
+    {
+        let p = m.process_mut(pid).unwrap();
+        let base: u64 = p.pages.per_node.iter().sum();
+        let huge: u64 = p.pages.huge_2m.iter().sum();
+        p.pages.per_node = vec![0, base];
+        p.pages.huge_2m = vec![0, huge];
+    }
+    monitor.sample_into(&m, m.now_ms, &mut snap, &mut bufs);
+    let reference = monitor.sample(&m, m.now_ms);
+    assert_eq!(snap, reference);
+    let task = snap.task(pid).expect("task sampled");
+    assert_eq!(task.pages_per_node[0], 0, "stranding must be visible");
+    assert!(task.pages_per_node[1] > 0);
+}
+
+fn grid() -> Vec<runner::RunParams> {
+    let mut cells = Vec::new();
+    for &policy in &[PolicyKind::Default, PolicyKind::AutoNuma, PolicyKind::Proposed] {
+        for seed in [11u64, 12] {
+            cells.push(runner::RunParams {
+                machine: MachineConfig::preset("2node-8core").unwrap(),
+                scheduler: SchedulerConfig { policy, ..Default::default() },
+                specs: vec![parsec::spec("canneal").unwrap()],
+                seed,
+                horizon_ms: 4_000.0,
+                window_ms: 500.0,
+            });
+        }
+    }
+    cells
+}
+
+#[test]
+fn parallel_sweep_is_bit_identical_to_serial() {
+    let cells = grid();
+    let serial: Vec<_> = cells.iter().map(runner::run).collect();
+    let parallel = sweep::run_many(&cells);
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.policy, b.policy);
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.end_ms, b.end_ms);
+        assert_eq!(a.total_migrations, b.total_migrations);
+        assert_eq!(a.total_pages_migrated, b.total_pages_migrated);
+        assert_eq!(a.scheduler_decisions, b.scheduler_decisions);
+        assert_eq!(a.procs.len(), b.procs.len());
+        for (x, y) in a.procs.iter().zip(&b.procs) {
+            assert_eq!(x.comm, y.comm);
+            assert_eq!(x.runtime_ms, y.runtime_ms, "{} seed {}", a.policy, a.seed);
+            assert_eq!(x.mean_speed, y.mean_speed);
+            assert_eq!(x.migrations, y.migrations);
+            assert_eq!(x.window_throughput, y.window_throughput);
+        }
+    }
+}
+
+#[test]
+fn sweep_is_deterministic_across_worker_counts() {
+    // One worker (serial path), a deliberately-contended pool, and the
+    // default pool must all agree (no env-var mutation — map_with pins
+    // the count explicitly, so this cannot race parallel tests).
+    let all = grid();
+    let cells = &all[..3];
+    let one = sweep::map_with(cells, 1, runner::run);
+    let four = sweep::map_with(cells, 4, runner::run);
+    let auto = sweep::run_many(cells);
+    for other in [&four, &auto] {
+        for (a, b) in one.iter().zip(other.iter()) {
+            assert_eq!(a.end_ms, b.end_ms);
+            assert_eq!(a.total_migrations, b.total_migrations);
+            for (x, y) in a.procs.iter().zip(&b.procs) {
+                assert_eq!(x.runtime_ms, y.runtime_ms);
+                assert_eq!(x.mean_speed, y.mean_speed);
+            }
+        }
+    }
+}
