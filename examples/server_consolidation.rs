@@ -19,6 +19,7 @@ fn main() {
         seed,
         horizon_ms: 40_000.0,
         window_ms: 1_000.0,
+        ..Default::default()
     };
     println!("consolidated server: 6 apache workers, 1 mysqld, 8 daemons, 2 batch hogs");
     let base = run(&params(PolicyKind::Default));

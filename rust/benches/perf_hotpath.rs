@@ -192,6 +192,7 @@ fn main() {
                 seed,
                 horizon_ms: 4_000.0,
                 window_ms: 500.0,
+                ..Default::default()
             });
         }
     }

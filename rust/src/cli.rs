@@ -20,8 +20,12 @@ pub struct Cli {
     pub verbose: bool,
     /// Reduced-iteration mode for `bench-suite` (CI smoke).
     pub smoke: bool,
-    /// Output file override (`bench-suite` writes BENCH_PERF.json here).
+    /// Output file override (`bench-suite` writes BENCH_PERF.json here;
+    /// `scenario record <name>` honors it for a single trace).
     pub out: Option<PathBuf>,
+    /// Golden-trace directory for `scenario record|replay` (default
+    /// `rust/tests/golden`).
+    pub golden_dir: Option<PathBuf>,
     /// Positional arguments after the subcommand.
     pub positional: Vec<String>,
 }
@@ -40,6 +44,11 @@ COMMANDS:
     fig8             regenerate Figure 8 (Apache/MySQL throughput)
     ablate-hugepages sweep THP backing fraction (speedup + op savings)
     bench-suite      measure hot paths and write BENCH_PERF.json
+    scenario         dynamic workload timelines:
+                       scenario list              catalog of timelines
+                       scenario run <name>        run one, print results
+                       scenario record [name...]  write golden trace(s)
+                       scenario replay [name...]  re-run + byte-diff traces
     host-monitor     run the Monitor against this host's real /proc
     inspect          print machine presets and the workload catalog
 
@@ -54,6 +63,7 @@ FLAGS:
     --csv                emit CSV instead of an ASCII table
     --smoke              bench-suite: reduced iterations (CI smoke mode)
     --out <file>         bench-suite: output path (default BENCH_PERF.json)
+    --golden-dir <dir>   scenario: golden-trace dir (default rust/tests/golden)
     --verbose            debug logging
 ";
 
@@ -98,6 +108,9 @@ pub fn parse(args: &[String]) -> Result<Cli, String> {
             "--csv" => cli.csv = true,
             "--smoke" => cli.smoke = true,
             "--out" => cli.out = Some(PathBuf::from(value("--out")?)),
+            "--golden-dir" => {
+                cli.golden_dir = Some(PathBuf::from(value("--golden-dir")?))
+            }
             "--verbose" => cli.verbose = true,
             "--help" | "-h" => return Err(USAGE.to_string()),
             other if other.starts_with("--") => {
@@ -159,6 +172,15 @@ mod tests {
     fn positional_collected() {
         let c = parse(&argv("inspect canneal")).unwrap();
         assert_eq!(c.positional, vec!["canneal"]);
+    }
+
+    #[test]
+    fn parses_scenario_subcommands() {
+        let c = parse(&argv("scenario replay phase-flip --golden-dir traces")).unwrap();
+        assert_eq!(c.command, "scenario");
+        assert_eq!(c.positional, vec!["replay", "phase-flip"]);
+        assert_eq!(c.golden_dir, Some(PathBuf::from("traces")));
+        assert!(parse(&argv("scenario record --golden-dir")).is_err());
     }
 
     #[test]

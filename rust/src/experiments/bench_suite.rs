@@ -62,6 +62,7 @@ fn sweep_grid(horizon_ms: f64) -> Vec<RunParams> {
                 seed,
                 horizon_ms,
                 window_ms: 500.0,
+                ..Default::default()
             });
         }
     }

@@ -28,6 +28,7 @@ pub fn params(policy: PolicyKind, seed: u64, use_pjrt: bool) -> RunParams {
         seed,
         horizon_ms: 120_000.0,
         window_ms: 1_000.0,
+        ..Default::default()
     }
 }
 

@@ -36,6 +36,7 @@ fn params(policy: PolicyKind, seed: u64) -> RunParams {
         seed,
         horizon_ms: 40_000.0,
         window_ms: 1_000.0,
+        ..Default::default()
     }
 }
 

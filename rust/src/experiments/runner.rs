@@ -14,6 +14,7 @@ use crate::baselines::{autonuma::AutoNuma, static_tuning};
 use crate::config::{MachineConfig, PolicyKind, SchedulerConfig};
 use crate::monitor::{Monitor, SampleBufs, Snapshot};
 use crate::reporter::{Backend, Reporter};
+use crate::scenario::{EventEngine, ScenarioTrace, TimedEvent};
 use crate::scheduler::UserScheduler;
 use crate::sim::{Machine, Placement};
 use crate::topology::NumaTopology;
@@ -31,6 +32,11 @@ pub struct RunParams {
     pub horizon_ms: f64,
     /// Daemon throughput window, ms.
     pub window_ms: f64,
+    /// Timed scenario events fired into the machine mid-run (empty for
+    /// the classic static-at-t=0 experiments).
+    pub events: Vec<TimedEvent>,
+    /// Node-occupancy cadence when recording a trace, virtual ms.
+    pub trace_every_ms: f64,
 }
 
 impl Default for RunParams {
@@ -42,6 +48,8 @@ impl Default for RunParams {
             seed: 42,
             horizon_ms: 30_000.0,
             window_ms: 500.0,
+            events: Vec::new(),
+            trace_every_ms: 250.0,
         }
     }
 }
@@ -105,6 +113,18 @@ impl RunResult {
 
 /// Run one policy over one workload set.
 pub fn run(params: &RunParams) -> RunResult {
+    run_inner(params, None)
+}
+
+/// [`run`] with trace recording: every fired scenario event, every
+/// scheduler decision, and periodic node occupancy land in `trace` as
+/// deterministic JSONL records (schema `numasched-trace/v1`). The
+/// simulation itself is bit-identical to an untraced [`run`].
+pub fn run_traced(params: &RunParams, trace: &mut ScenarioTrace) -> RunResult {
+    run_inner(params, Some(trace))
+}
+
+fn run_inner(params: &RunParams, mut trace: Option<&mut ScenarioTrace>) -> RunResult {
     let topo = NumaTopology::from_config(&params.machine);
     let mut machine = Machine::new(topo.clone(), params.seed);
 
@@ -196,6 +216,39 @@ pub fn run(params: &RunParams) -> RunResult {
         for s in &params.specs {
             reporter.importance.insert(s.comm.clone(), s.importance);
         }
+        // Scenario-spawned comms are known from the timeline: register
+        // their importance up front — otherwise the Reporter's weighted
+        // ranking would score every mid-run arrival at the default 1.0.
+        // Two passes, so a Fork resolves its parent's weight no matter
+        // where the parent's Launch sits in the declaration order.
+        for ev in &params.events {
+            match &ev.event {
+                crate::scenario::Event::Launch(s) => {
+                    reporter.importance.insert(s.comm.clone(), s.importance);
+                }
+                crate::scenario::Event::MemPressure { comm, .. } => {
+                    reporter
+                        .importance
+                        .insert(comm.clone(), crate::scenario::PRESSURE_IMPORTANCE);
+                }
+                crate::scenario::Event::DaemonBurst { count, .. } => {
+                    for k in 0..*count {
+                        reporter
+                            .importance
+                            .insert(format!("burst-{k}"), crate::scenario::BURST_IMPORTANCE);
+                    }
+                }
+                _ => {}
+            }
+        }
+        for ev in &params.events {
+            if let crate::scenario::Event::Fork { comm, .. } = &ev.event {
+                // Machine::fork inherits the parent's importance; mirror
+                // that in the ranking weights.
+                let w = reporter.importance.get(comm).copied().unwrap_or(1.0);
+                reporter.importance.insert(format!("{comm}-kid"), w);
+            }
+        }
         let mut scheduler = UserScheduler::new(&params.scheduler);
         scheduler.cores_per_node = params.machine.cores_per_node;
         Some((monitor, reporter, scheduler))
@@ -209,6 +262,11 @@ pub fn run(params: &RunParams) -> RunResult {
     let mut next_monitor = monitor_period;
     let mut next_report = report_period;
     let mut next_window = params.window_ms;
+    // Scenario timeline: events fire just before the tick that crosses
+    // their instant, so a t=0 launch joins the very first step. A
+    // no-event run pays one index comparison per tick.
+    let mut engine = EventEngine::new(params.events.clone());
+    let mut next_trace = 0.0;
     let mut windows: std::collections::BTreeMap<i32, Vec<f64>> = Default::default();
     let mut epoch_ns = Running::new();
     let mut pending_report = None;
@@ -225,6 +283,16 @@ pub fn run(params: &RunParams) -> RunResult {
         .collect();
 
     while machine.now_ms < params.horizon_ms {
+        engine.tick(&mut machine);
+        if engine.has_fired() {
+            let fired = engine.drain_fired();
+            if let Some(tr) = trace.as_deref_mut() {
+                for f in &fired {
+                    tr.push_event(f);
+                }
+            }
+        }
+
         machine.step();
 
         if let Some(an) = autonuma.as_mut() {
@@ -242,7 +310,12 @@ pub fn run(params: &RunParams) -> RunResult {
             if machine.now_ms >= next_report {
                 next_report += report_period;
                 if let Some(report) = pending_report.take() {
-                    scheduler.apply(&report, &mut machine);
+                    let executed = scheduler.apply(&report, &mut machine);
+                    if let Some(tr) = trace.as_deref_mut() {
+                        for d in &executed {
+                            tr.push_decision(d);
+                        }
+                    }
                 }
             }
         }
@@ -258,11 +331,26 @@ pub fn run(params: &RunParams) -> RunResult {
             }
         }
 
-        // Stop early when every finite workload has completed.
+        if let Some(tr) = trace.as_deref_mut() {
+            if machine.now_ms >= next_trace {
+                next_trace += params.trace_every_ms.max(machine.dt_ms);
+                tr.push_occupancy(machine.now_ms, &machine);
+            }
+        }
+
+        // Stop early when every finite workload has completed — the
+        // initially-launched set AND anything a scenario event added —
+        // and no timeline event that can still fire is pending (an
+        // event at or past the horizon never fires and must not pin
+        // the run to the full horizon).
         if !finite_pids.is_empty()
             && finite_pids
                 .iter()
                 .all(|&p| machine.process(p).map(|x| !x.is_running()).unwrap_or(true))
+            && engine.pending_before(params.horizon_ms) == 0
+            && machine
+                .processes()
+                .all(|p| p.behavior.is_daemon() || !p.is_running())
         {
             break;
         }
@@ -273,19 +361,18 @@ pub fn run(params: &RunParams) -> RunResult {
         .map(|(_, _, s)| s.decisions.len())
         .unwrap_or(0);
 
-    let procs = pids
-        .iter()
-        .map(|&pid| {
-            let p = machine.process(pid).expect("proc exists");
-            ProcResult {
-                pid,
-                comm: p.comm.clone(),
-                importance: p.importance,
-                runtime_ms: p.runtime_ms(),
-                mean_speed: p.mean_speed(),
-                migrations: p.migrations,
-                window_throughput: windows.remove(&pid).unwrap_or_default(),
-            }
+    // Every process the run ever hosted, in pid (= spawn) order — the
+    // initial launch set plus anything the scenario timeline added.
+    let procs = machine
+        .processes()
+        .map(|p| ProcResult {
+            pid: p.pid,
+            comm: p.comm.clone(),
+            importance: p.importance,
+            runtime_ms: p.runtime_ms(),
+            mean_speed: p.mean_speed(),
+            migrations: p.migrations,
+            window_throughput: windows.remove(&p.pid).unwrap_or_default(),
         })
         .collect();
 
@@ -378,5 +465,63 @@ mod tests {
         let b = run(&quick_params(PolicyKind::Proposed));
         assert_eq!(a.runtime_of("canneal"), b.runtime_of("canneal"));
         assert_eq!(a.total_migrations, b.total_migrations);
+    }
+
+    #[test]
+    fn scenario_events_fire_and_results_include_spawned_procs() {
+        use crate::scenario::{Event, TimedEvent};
+        let mut p = quick_params(PolicyKind::Default);
+        p.horizon_ms = 3_000.0;
+        p.events = vec![
+            TimedEvent::at(
+                500.0,
+                Event::Launch(crate::workloads::mix::churn_job("late", 200.0)),
+            ),
+            TimedEvent::at(1_000.0, Event::Exit { comm: "bg-streamcluster".into() }),
+        ];
+        let r = run(&p);
+        let late = r.proc_by_comm("late").expect("scenario launch in results");
+        assert!(late.runtime_ms.is_some(), "late arrival finishes");
+        let bg = r.proc_by_comm("bg-streamcluster").unwrap();
+        assert!(bg.runtime_ms.is_some(), "killed daemon has an end time");
+        assert!(bg.runtime_ms.unwrap() <= 1_000.0);
+    }
+
+    #[test]
+    fn traced_run_matches_untraced_run() {
+        let p = quick_params(PolicyKind::Proposed);
+        let a = run(&p);
+        let mut trace = ScenarioTrace::new();
+        let b = run_traced(&p, &mut trace);
+        assert_eq!(a.runtime_of("canneal"), b.runtime_of("canneal"));
+        assert_eq!(a.total_migrations, b.total_migrations);
+        assert_eq!(a.end_ms, b.end_ms, "tracing must not perturb the run");
+        assert!(!trace.is_empty(), "occupancy records accumulate");
+    }
+
+    #[test]
+    fn early_stop_waits_for_pending_events() {
+        use crate::scenario::{Event, TimedEvent};
+        // One quick finite job plus a launch long after it finishes: the
+        // run must not stop before the pending arrival lands and runs.
+        let mut specs = vec![parsec::spec("blackscholes").unwrap()];
+        specs[0].behavior.work_units = 50.0;
+        let mut p = RunParams {
+            scheduler: SchedulerConfig {
+                policy: PolicyKind::Default,
+                ..Default::default()
+            },
+            specs,
+            horizon_ms: 6_000.0,
+            ..Default::default()
+        };
+        p.events = vec![TimedEvent::at(
+            2_000.0,
+            Event::Launch(crate::workloads::mix::churn_job("straggler", 100.0)),
+        )];
+        let r = run(&p);
+        let s = r.proc_by_comm("straggler").expect("straggler launched");
+        assert!(s.runtime_ms.is_some(), "straggler ran to completion");
+        assert!(r.end_ms > 2_000.0);
     }
 }

@@ -135,6 +135,7 @@ mod tests {
             seed,
             horizon_ms: 2_000.0,
             window_ms: 500.0,
+            ..Default::default()
         }
     }
 

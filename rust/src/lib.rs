@@ -29,6 +29,7 @@ pub mod monitor;
 pub mod procfs;
 pub mod reporter;
 pub mod runtime;
+pub mod scenario;
 pub mod scheduler;
 pub mod sim;
 pub mod topology;

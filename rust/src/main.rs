@@ -37,6 +37,7 @@ fn main() {
         "fig8" => cmd_fig8(&cli),
         "ablate-hugepages" => cmd_ablate_hugepages(&cli),
         "bench-suite" => cmd_bench_suite(&cli),
+        "scenario" => cmd_scenario(&cli),
         "host-monitor" => cmd_host_monitor(&cli),
         "inspect" => cmd_inspect(&cli),
         other => {
@@ -112,6 +113,12 @@ fn cmd_run(cli: &Cli) -> i32 {
         if params.scheduler.use_pjrt { "pjrt" } else { "rust" },
     );
     let result = runner::run(&params);
+    print_run_result(&result, cli.csv);
+    0
+}
+
+/// Shared result rendering for `run` and `scenario run`.
+fn print_run_result(result: &runner::RunResult, csv: bool) {
     let mut t = Table::new(
         &format!("run result — policy {}", result.policy),
         &["comm", "pid", "runtime_ms", "mean speed", "migrations", "throughput"],
@@ -130,7 +137,7 @@ fn cmd_run(cli: &Cli) -> i32 {
             },
         ]);
     }
-    print!("{}", if cli.csv { t.to_csv() } else { t.render() });
+    print!("{}", if csv { t.to_csv() } else { t.render() });
     println!(
         "total: {} process migrations, {} pages migrated, {} scheduler decisions, end t={:.0} ms",
         result.total_migrations,
@@ -146,7 +153,6 @@ fn cmd_run(cli: &Cli) -> i32 {
             result.epoch_ns.count()
         );
     }
-    0
 }
 
 fn cmd_table1(cli: &Cli) -> i32 {
@@ -209,6 +215,177 @@ fn cmd_bench_suite(cli: &Cli) -> i32 {
         return 1;
     }
     0
+}
+
+/// `scenario list|run|record|replay` — the dynamic-timeline front end.
+fn cmd_scenario(cli: &Cli) -> i32 {
+    use numasched::scenario::{self, catalog};
+    let golden_dir = cli
+        .golden_dir
+        .clone()
+        .unwrap_or_else(|| std::path::PathBuf::from("rust/tests/golden"));
+    let trace_path = |name: &str| golden_dir.join(format!("{name}.trace.jsonl"));
+    let sub = cli.positional.first().map(String::as_str).unwrap_or("list");
+
+    // Resolve the named scenarios (everything after the subcommand);
+    // none named means the whole catalog.
+    let resolve = || -> Result<Vec<numasched::scenario::Scenario>, String> {
+        let names: Vec<&str> = if cli.positional.len() > 1 {
+            cli.positional[1..].iter().map(String::as_str).collect()
+        } else {
+            catalog::NAMES.to_vec()
+        };
+        names
+            .iter()
+            .map(|n| {
+                catalog::by_name(n)
+                    .ok_or_else(|| format!("unknown scenario {n:?} (try `scenario list`)"))
+            })
+            .collect()
+    };
+
+    match sub {
+        "list" => {
+            let mut t = Table::new(
+                "scenario catalog",
+                &["name", "preset", "horizon_ms", "events", "description"],
+            );
+            for sc in catalog::all() {
+                t.row(vec![
+                    sc.name.to_string(),
+                    sc.params.machine.preset.clone(),
+                    format!("{:.0}", sc.params.horizon_ms),
+                    sc.params.events.len().to_string(),
+                    sc.description.to_string(),
+                ]);
+            }
+            print!("{}", if cli.csv { t.to_csv() } else { t.render() });
+            0
+        }
+        "run" => {
+            let Some(name) = cli.positional.get(1) else {
+                eprintln!("error: scenario run needs a name (try `scenario list`)");
+                return 2;
+            };
+            let Some(mut sc) = catalog::by_name(name) else {
+                eprintln!("error: unknown scenario {name:?} (try `scenario list`)");
+                return 2;
+            };
+            if let Some(p) = &cli.policy {
+                match PolicyKind::parse(p) {
+                    Some(k) => sc.params.scheduler.policy = k,
+                    None => {
+                        eprintln!("error: unknown policy {p:?}");
+                        return 2;
+                    }
+                }
+            }
+            if cli.seed != 42 {
+                sc.params.seed = cli.seed;
+            }
+            if let Some(h) = cli.horizon_ms {
+                sc.params.horizon_ms = h;
+            }
+            println!(
+                "scenario {} on {} — {} (seed {}, {} timeline events)",
+                sc.name,
+                sc.params.machine.preset,
+                sc.description,
+                sc.params.seed,
+                sc.params.events.len()
+            );
+            let (result, trace) = scenario::record_with_result(&sc);
+            print_run_result(&result, cli.csv);
+            println!("trace: {} records (numasched-trace/v1)", trace.lines().count());
+            0
+        }
+        "record" => {
+            let scs = match resolve() {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            };
+            let traces = scenario::record_all(&scs);
+            if let Err(e) = std::fs::create_dir_all(&golden_dir) {
+                eprintln!("error: create {}: {e}", golden_dir.display());
+                return 1;
+            }
+            for (sc, text) in scs.iter().zip(&traces) {
+                let path = match (&cli.out, scs.len()) {
+                    (Some(out), 1) => out.clone(),
+                    _ => trace_path(sc.name),
+                };
+                if let Err(e) = std::fs::write(&path, text) {
+                    eprintln!("error: write {}: {e}", path.display());
+                    return 1;
+                }
+                println!(
+                    "recorded {} -> {} ({} records)",
+                    sc.name,
+                    path.display(),
+                    text.lines().count()
+                );
+            }
+            0
+        }
+        "replay" => {
+            let scs = match resolve() {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            };
+            // Fail fast on missing goldens before paying for any
+            // simulation.
+            let mut missing = false;
+            for sc in &scs {
+                let path = trace_path(sc.name);
+                if !path.is_file() {
+                    eprintln!(
+                        "{}: missing golden {}; run `numasched scenario record`",
+                        sc.name,
+                        path.display()
+                    );
+                    missing = true;
+                }
+            }
+            if missing {
+                return 1;
+            }
+            // Replays fan out over the deterministic sweep pool, exactly
+            // like the grid experiments.
+            let traces = scenario::record_all(&scs);
+            let mut failed = false;
+            for (sc, ours) in scs.iter().zip(&traces) {
+                let path = trace_path(sc.name);
+                let golden = match std::fs::read_to_string(&path) {
+                    Ok(g) => g,
+                    Err(e) => {
+                        eprintln!("{}: unreadable golden {} ({e})", sc.name, path.display());
+                        failed = true;
+                        continue;
+                    }
+                };
+                match numasched::scenario::ScenarioTrace::diff(ours, &golden) {
+                    None => println!("{}: OK ({} records)", sc.name, ours.lines().count()),
+                    Some(d) => {
+                        eprintln!("{}: MISMATCH — {d}", sc.name);
+                        failed = true;
+                    }
+                }
+            }
+            i32::from(failed)
+        }
+        other => {
+            eprintln!(
+                "unknown scenario subcommand {other:?} (list | run | record | replay)"
+            );
+            2
+        }
+    }
 }
 
 fn cmd_host_monitor(cli: &Cli) -> i32 {

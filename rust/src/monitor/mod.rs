@@ -110,9 +110,22 @@ impl Monitor {
                             maps.huge_pages_per_node(self.topo.nodes, 1_048_576),
                         )
                     }
-                    // numa_maps can be absent (no CONFIG_NUMA): attribute
-                    // the whole rss to the node the task runs on.
+                    // numa_maps can be absent for two very different
+                    // reasons: the kernel has no CONFIG_NUMA, or the pid
+                    // exited between the stat read and this read (procfs
+                    // races on live hosts; the scenario engine's `Exit`
+                    // event models the same churn). Re-probe stat to tell
+                    // them apart — a vanished pid is dropped rather than
+                    // served as a fabricated single-node sample built
+                    // from its dying stat line. The extra stat read only
+                    // happens on this (rare, numa_maps-less) path, and
+                    // this is the allocating reference pass; the
+                    // production loop's `sample_into` re-probes into its
+                    // reused buffer.
                     None => {
+                        if source.read_stat(pid).is_none() {
+                            continue;
+                        }
                         let mut v = vec![0u64; self.topo.nodes];
                         let node =
                             self.topo.node_of_core(ps.processor.max(0) as usize);
@@ -204,7 +217,7 @@ impl Monitor {
                 v.resize(nodes, 0);
             }
             bufs.maps_text.clear();
-            if source.read_numa_maps_into(ps.pid, &mut bufs.maps_text) {
+            if source.read_numa_maps_into(task.pid, &mut bufs.maps_text) {
                 numa_maps::accumulate(
                     &bufs.maps_text,
                     &mut task.pages_per_node,
@@ -212,8 +225,18 @@ impl Monitor {
                     &mut task.giant_1g_per_node,
                 );
             } else {
-                // numa_maps can be absent (no CONFIG_NUMA): attribute
-                // the whole rss to the node the task runs on.
+                // numa_maps can be absent because the kernel has no
+                // CONFIG_NUMA — or because the pid exited between the
+                // stat read and this read. Re-probe stat to tell them
+                // apart: a vanished pid leaves its slot unclaimed
+                // (`count` untouched; the truncate below reclaims it)
+                // instead of publishing a sample built from the dead
+                // task's final stat line. Only a live pid with genuinely
+                // absent numa_maps takes the rss fallback.
+                bufs.stat_text.clear();
+                if !source.read_stat_into(task.pid, &mut bufs.stat_text) {
+                    return;
+                }
                 task.pages_per_node[task.node] = task.rss_pages;
             }
             count += 1;
@@ -373,6 +396,101 @@ mod tests {
         assert_eq!(snap.tasks.len(), 1, "stale slots must be truncated");
         assert_eq!(snap.tasks[0].comm, "apache");
         assert_eq!(snap, mon.sample(&m, 1.0));
+    }
+
+    #[test]
+    fn exit_mid_run_drops_task_and_truncates_stale_slot() {
+        // The scenario engine's `Exit` event between two samples: the
+        // reused Snapshot must not keep serving the dead task's last
+        // slot.
+        let mut m = sim();
+        let _a = m.spawn("a", TaskBehavior::mem_bound(1e9), 1.0, 2, Placement::Node(0));
+        let b = m.spawn("b", TaskBehavior::mem_bound(1e9), 1.0, 2, Placement::Node(1));
+        m.step();
+        let mon = Monitor::discover(&m).unwrap();
+        let mut snap = Snapshot::default();
+        let mut bufs = SampleBufs::new();
+        mon.sample_into(&m, m.now_ms, &mut snap, &mut bufs);
+        assert_eq!(snap.tasks.len(), 2);
+        assert!(m.kill(b));
+        m.step();
+        mon.sample_into(&m, m.now_ms, &mut snap, &mut bufs);
+        assert_eq!(snap.tasks.len(), 1, "stale slot truncated");
+        assert!(snap.task(b).is_none(), "dead task must not be served");
+        assert_eq!(snap, mon.sample(&m, m.now_ms), "fast path stays pinned");
+    }
+
+    /// A `ProcSource` whose `victim` pid exits right after its first
+    /// stat read — numa_maps is already gone, and any further stat read
+    /// fails. Models the procfs race a live host exhibits under churn.
+    struct VanishingAfterStat<'a> {
+        inner: &'a Machine,
+        victim: i32,
+        stat_reads: std::cell::Cell<u32>,
+    }
+
+    impl crate::procfs::ProcSource for VanishingAfterStat<'_> {
+        fn list_pids(&self) -> Vec<i32> {
+            self.inner.list_pids()
+        }
+        fn read_stat(&self, pid: i32) -> Option<String> {
+            if pid == self.victim {
+                let n = self.stat_reads.get();
+                self.stat_reads.set(n + 1);
+                if n > 0 {
+                    return None;
+                }
+            }
+            self.inner.read_stat(pid)
+        }
+        fn read_numa_maps(&self, pid: i32) -> Option<String> {
+            if pid == self.victim {
+                return None;
+            }
+            self.inner.read_numa_maps(pid)
+        }
+        fn read_nodes_online(&self) -> Option<String> {
+            self.inner.read_nodes_online()
+        }
+        fn read_node_cpulist(&self, node: usize) -> Option<String> {
+            self.inner.read_node_cpulist(node)
+        }
+        fn read_node_distance(&self, node: usize) -> Option<String> {
+            self.inner.read_node_distance(node)
+        }
+        fn read_node_numastat(&self, node: usize) -> Option<String> {
+            self.inner.read_node_numastat(node)
+        }
+    }
+
+    #[test]
+    fn pid_vanishing_between_stat_and_maps_is_dropped() {
+        let mut m = sim();
+        let keep = m.spawn("keep", TaskBehavior::mem_bound(1e9), 1.0, 2, Placement::Node(0));
+        let victim =
+            m.spawn("victim", TaskBehavior::mem_bound(1e9), 1.0, 2, Placement::Node(1));
+        m.step();
+        let mon = Monitor::discover(&m).unwrap();
+
+        // Allocating path: the vanished pid is dropped, not fabricated
+        // into a single-node sample from its dying stat line.
+        let src = VanishingAfterStat { inner: &m, victim, stat_reads: Default::default() };
+        let snap = mon.sample(&src, 1.0);
+        assert!(snap.task(victim).is_none());
+        assert!(snap.task(keep).is_some());
+
+        // Fast path: prime the reused snapshot with both tasks, then
+        // resample against the racing source — the dead task's stale
+        // slot must be reclaimed, and both paths must agree.
+        let src = VanishingAfterStat { inner: &m, victim, stat_reads: Default::default() };
+        let mut snap2 = Snapshot::default();
+        let mut bufs = SampleBufs::new();
+        mon.sample_into(&m, 0.5, &mut snap2, &mut bufs);
+        assert_eq!(snap2.tasks.len(), 2);
+        mon.sample_into(&src, 1.0, &mut snap2, &mut bufs);
+        assert_eq!(snap2.tasks.len(), 1);
+        assert!(snap2.task(victim).is_none());
+        assert_eq!(snap2, snap);
     }
 
     #[test]

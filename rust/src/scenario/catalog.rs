@@ -1,0 +1,285 @@
+//! The scenario catalog — the shipped dynamic-workload timelines.
+//!
+//! Six entries, spanning all five machine presets and every event kind,
+//! chosen to hit the failure modes a t=0-static harness can never see:
+//!
+//! | name            | preset       | stresses                              |
+//! |-----------------|--------------|---------------------------------------|
+//! | `phase-flip`    | r910-40core  | mid-run intensity swaps (Algorithm 2's behavior trigger) |
+//! | `server-churn`  | 2node-8core  | arrivals/exits + a cron storm under live services |
+//! | `pressure-spike`| r910-thp     | a hot node suddenly hosting a huge pinned working set |
+//! | `fork-storm`    | 8node-64core | one service forking a brood, then reaping it |
+//! | `arrival-wave`  | 8node-hetero | staggered arrivals onto asymmetric nodes |
+//! | `flapper`       | 2node-8core  | adversarial intensity flapping timed near the cooldown |
+//!
+//! Every entry is fully parameterized (preset, seed, horizon, events),
+//! so `record`/`replay` are reproducible from the name alone. Golden
+//! traces for a subset live under `rust/tests/golden/`.
+
+use crate::config::{MachineConfig, SchedulerConfig};
+use crate::experiments::runner::RunParams;
+use crate::sim::TaskBehavior;
+use crate::workloads::{mix, parsec, server};
+
+use super::{Event, Scenario, TimedEvent};
+
+/// Every catalog scenario name, in listing order.
+pub const NAMES: [&str; 6] = [
+    "phase-flip",
+    "server-churn",
+    "pressure-spike",
+    "fork-storm",
+    "arrival-wave",
+    "flapper",
+];
+
+fn base(preset: &str, horizon_ms: f64) -> RunParams {
+    RunParams {
+        machine: MachineConfig::preset(preset).expect("catalog preset"),
+        scheduler: SchedulerConfig::default(),
+        specs: Vec::new(),
+        seed: 42,
+        horizon_ms,
+        window_ms: 500.0,
+        events: Vec::new(),
+        trace_every_ms: 250.0,
+    }
+}
+
+/// A daemonized PARSEC instance (infinite work, background importance).
+fn bg(name: &str, comm: &str) -> crate::workloads::LaunchSpec {
+    let mut s = parsec::spec(name).expect("catalog app");
+    s.comm = comm.to_string();
+    s.importance = 0.5;
+    s.behavior.work_units = f64::INFINITY;
+    s
+}
+
+/// A measured (finite, important) PARSEC instance.
+fn measured(name: &str) -> crate::workloads::LaunchSpec {
+    let mut s = parsec::spec(name).expect("catalog app");
+    s.importance = 2.0;
+    s
+}
+
+/// `bg`'s behavior with a different steady intensity — the payload of a
+/// `PhaseShift` (ws/thp are preserved by the engine regardless).
+fn shifted(name: &str, mem_intensity: f64) -> TaskBehavior {
+    let mut b = parsec::app(name).expect("catalog app").behavior();
+    b.work_units = f64::INFINITY;
+    b.mem_intensity = mem_intensity;
+    b.phase_period_ms = 0.0;
+    b.phase_amplitude = 0.0;
+    b
+}
+
+fn phase_flip() -> Scenario {
+    let mut params = base("r910-40core", 12_000.0);
+    params.specs = vec![
+        measured("canneal"),
+        measured("ferret"),
+        bg("streamcluster", "bg-streamcluster"),
+        bg("blackscholes", "bg-blackscholes"),
+    ];
+    let shift = |t_ms: f64, comm: &str, app: &str, mi: f64| TimedEvent {
+        t_ms,
+        event: Event::PhaseShift { comm: comm.into(), behavior: shifted(app, mi) },
+    };
+    params.events = vec![
+        // The memory-heavy background goes quiet while the CPU-ish one
+        // turns into a memory hog — placements chosen at t=0 are now
+        // exactly wrong.
+        shift(3_000.0, "bg-streamcluster", "streamcluster", 0.05),
+        shift(3_000.0, "bg-blackscholes", "blackscholes", 0.95),
+        // ...and back, so the scheduler must adapt twice.
+        shift(7_000.0, "bg-streamcluster", "streamcluster", 0.85),
+        shift(7_000.0, "bg-blackscholes", "blackscholes", 0.08),
+    ];
+    Scenario {
+        name: "phase-flip",
+        description: "PARSEC pair whose background halves swap memory \
+                      intensity mid-run, twice",
+        params,
+    }
+}
+
+fn server_churn() -> Scenario {
+    let mut params = base("2node-8core", 8_000.0);
+    params.specs = mix::scenario_server_small();
+    params.events = vec![
+        TimedEvent::at(1_000.0, Event::Launch(mix::churn_job("churn-0", 900.0))),
+        TimedEvent::at(1_500.0, Event::Exit { comm: "daemon".into() }),
+        TimedEvent::at(2_500.0, Event::Launch(mix::churn_job("churn-1", 900.0))),
+        TimedEvent::at(3_000.0, Event::Launch(server::daemon())),
+        TimedEvent::at(3_500.0, Event::DaemonBurst { count: 6, work_units: 250.0 }),
+        TimedEvent::at(5_000.0, Event::Launch(mix::churn_job("churn-2", 700.0))),
+    ];
+    Scenario {
+        name: "server-churn",
+        description: "live apache/mysqld services under batch arrivals, \
+                      daemon exits, and a cron storm",
+        params,
+    }
+}
+
+fn pressure_spike() -> Scenario {
+    let mut params = base("r910-thp", 8_000.0);
+    let mut app = measured("canneal");
+    app.behavior.thp_fraction = 0.5;
+    params.specs = vec![app, bg("ferret", "bg-ferret")];
+    // A 300k-page fully memory-bound hog lands pinned on node 0 —
+    // whoever lives there must be evacuated — and later vanishes.
+    let spike = Event::MemPressure { comm: "pressure-n0".into(), node: 0, pages: 300_000 };
+    params.events = vec![
+        TimedEvent::at(2_000.0, spike),
+        TimedEvent::at(5_000.0, Event::Exit { comm: "pressure-n0".into() }),
+    ];
+    Scenario {
+        name: "pressure-spike",
+        description: "a pinned 300k-page hog slams node 0 mid-run, then \
+                      exits (THP-backed measured app)",
+        params,
+    }
+}
+
+fn fork_storm() -> Scenario {
+    let mut params = base("8node-64core", 7_000.0);
+    let mut web = server::apache();
+    web.importance = 3.0;
+    params.specs = vec![web, measured("dedup")];
+    params.events = vec![
+        TimedEvent::at(1_500.0, Event::Fork { comm: "apache".into(), children: 8 }),
+        TimedEvent::at(4_500.0, Event::Exit { comm: "apache-kid".into() }),
+    ];
+    Scenario {
+        name: "fork-storm",
+        description: "apache forks 8 workers mid-run and reaps them 3 s \
+                      later on the big box",
+        params,
+    }
+}
+
+fn arrival_wave() -> Scenario {
+    let mut params = base("8node-hetero", 10_000.0);
+    params.specs = vec![measured("canneal")];
+    // Staggered arrivals with distinct names so exits are observable
+    // per wave.
+    params.events = (1..=6)
+        .map(|k: u32| {
+            let job = mix::churn_job(&format!("wave-{k}"), 1_200.0);
+            TimedEvent::at(500.0 * f64::from(k), Event::Launch(job))
+        })
+        .collect();
+    Scenario {
+        name: "arrival-wave",
+        description: "six memory-bound arrivals, one every 500 ms, onto \
+                      the asymmetric 8-node box",
+        params,
+    }
+}
+
+fn flapper() -> Scenario {
+    let mut params = base("2node-8core", 6_000.0);
+    let mut flap = bg("streamcluster", "flapper");
+    flap.behavior.phase_period_ms = 0.0;
+    flap.behavior.phase_amplitude = 0.0;
+    params.specs = vec![measured("canneal"), flap];
+    // Flip the flapper's intensity every 600 ms — just past the
+    // scheduler's 500 ms cooldown, the worst cadence for hysteresis:
+    // every migration it earns is stale by the time it lands.
+    params.events = (1..=8)
+        .map(|k: u32| {
+            let quiet = k % 2 == 1; // starts hot (0.85), flips quiet first
+            let mi = if quiet { 0.02 } else { 0.95 };
+            let behavior = shifted("streamcluster", mi);
+            let event = Event::PhaseShift { comm: "flapper".into(), behavior };
+            TimedEvent::at(600.0 * f64::from(k), event)
+        })
+        .collect();
+    Scenario {
+        name: "flapper",
+        description: "adversarial co-runner flipping memory intensity \
+                      every 600 ms to bait migration flapping",
+        params,
+    }
+}
+
+/// Build every catalog scenario, in [`NAMES`] order.
+pub fn all() -> Vec<Scenario> {
+    vec![
+        phase_flip(),
+        server_churn(),
+        pressure_spike(),
+        fork_storm(),
+        arrival_wave(),
+        flapper(),
+    ]
+}
+
+/// Look up one scenario by name.
+pub fn by_name(name: &str) -> Option<Scenario> {
+    all().into_iter().find(|s| s.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_match_catalog_order() {
+        let got: Vec<&str> = all().iter().map(|s| s.name).collect();
+        assert_eq!(got, NAMES.to_vec());
+        assert!(by_name("phase-flip").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn every_scenario_is_well_formed() {
+        for sc in all() {
+            assert!(!sc.description.is_empty());
+            assert!(!sc.params.specs.is_empty(), "{}: needs a t=0 set", sc.name);
+            assert!(!sc.params.events.is_empty(), "{}: needs events", sc.name);
+            assert!(sc.params.horizon_ms > 0.0);
+            assert!(sc.params.trace_every_ms > 0.0);
+            for s in &sc.params.specs {
+                s.behavior.validate().unwrap_or_else(|e| panic!("{}: {e}", sc.name));
+            }
+            for ev in &sc.params.events {
+                assert!(ev.t_ms >= 0.0 && ev.t_ms < sc.params.horizon_ms,
+                        "{}: event outside horizon", sc.name);
+                if let Event::PhaseShift { behavior, .. } = &ev.event {
+                    behavior.validate().unwrap_or_else(|e| panic!("{}: {e}", sc.name));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn catalog_spans_all_five_presets() {
+        let mut presets: Vec<String> =
+            all().iter().map(|s| s.params.machine.preset.clone()).collect();
+        presets.sort();
+        presets.dedup();
+        assert_eq!(
+            presets,
+            vec![
+                "2node-8core".to_string(),
+                "8node-64core".into(),
+                "8node-hetero".into(),
+                "r910-40core".into(),
+                "r910-thp".into(),
+            ]
+        );
+    }
+
+    #[test]
+    fn catalog_exercises_every_event_kind() {
+        let mut kinds = std::collections::BTreeSet::new();
+        for sc in all() {
+            for ev in &sc.params.events {
+                kinds.insert(ev.event.kind());
+            }
+        }
+        assert_eq!(kinds.len(), 6, "all event kinds covered: {kinds:?}");
+    }
+}

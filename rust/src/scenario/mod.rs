@@ -1,0 +1,510 @@
+//! Dynamic workload timelines — the scenario engine.
+//!
+//! Every experiment the seed harness shipped launches a fixed workload
+//! set at t=0 and holds it static, so the *reactive* path — the whole
+//! reason a user-level scheduler beats the kernel (it sees behavior
+//! *change*) — was never exercised. A [`Scenario`] fixes that: a named,
+//! declarative list of timed [`Event`]s (launch, exit, phase shift,
+//! memory pressure, daemon burst, fork) that the experiment runner fires
+//! into the simulated machine as its virtual clock passes them, while
+//! the Monitor → Reporter → Scheduler loop runs unmodified on top.
+//!
+//! Determinism is first-class: a scenario run can be recorded into a
+//! [`trace::ScenarioTrace`] (JSONL, schema `numasched-trace/v1`) holding
+//! every fired event, every scheduler decision, and periodic node
+//! occupancy. [`replay`] re-runs the scenario and byte-diffs against a
+//! golden trace; `rust/tests/scenario_golden.rs` and the CI
+//! `scenario-smoke` job pin the catalog this way, serial and under the
+//! parallel sweep pool.
+//!
+//! See DESIGN.md §"Scenario engine" for the event model and the trace
+//! schema, and [`catalog`] for the shipped timelines.
+
+pub mod catalog;
+pub mod trace;
+
+pub use trace::{ScenarioTrace, TraceDiff, TRACE_SCHEMA};
+
+use crate::experiments::runner::{self, RunParams, RunResult};
+use crate::experiments::sweep;
+use crate::sim::{Machine, Placement, TaskBehavior};
+use crate::workloads::LaunchSpec;
+
+/// Importance of a `MemPressure` hog — deliberately near-zero: pressure
+/// is load to be scheduled *around*, not a task the user cares about.
+pub const PRESSURE_IMPORTANCE: f64 = 0.1;
+
+/// Importance of one `DaemonBurst` job (nobody cares about cron's
+/// latency).
+pub const BURST_IMPORTANCE: f64 = 0.2;
+
+/// One timeline event. Events address processes by `comm` (pids are
+/// assigned at spawn time, so a declarative timeline cannot know them);
+/// an event that matches several running processes applies to all of
+/// them, and one that matches none fires as a no-op (recorded with an
+/// empty pid list — visible in the trace, harmless to the run).
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// Launch a new process mid-run (NUMA-blind placement, like any
+    /// fresh exec under the OS default).
+    Launch(LaunchSpec),
+    /// Kill every running process with this comm.
+    Exit { comm: String },
+    /// Replace the behavior of every running process with this comm —
+    /// the "behavior of the processes changed" signal of Algorithm 2.
+    /// The resident-set shape (`ws_pages`, `thp_fraction`) is pinned at
+    /// spawn and survives the shift; everything else (intensity,
+    /// sharing, phases, remaining work) is overwritten.
+    PhaseShift { comm: String, behavior: TaskBehavior },
+    /// Memory-pressure spike: a fully memory-bound, single-threaded hog
+    /// with a `pages`-sized working set appears pinned on `node`. End
+    /// it with a later `Exit` on the same comm.
+    MemPressure { comm: String, node: usize, pages: u64 },
+    /// A burst of short-lived single-threaded background daemons (a
+    /// cron storm): `count` processes named `burst-<k>`, each carrying
+    /// `work_units` of light work and exiting on completion.
+    DaemonBurst { count: usize, work_units: f64 },
+    /// Every running process with this comm forks `children` twins
+    /// named `<comm>-kid` (kill the brood with one `Exit`).
+    Fork { comm: String, children: usize },
+}
+
+impl Event {
+    /// Stable kind tag — the single source for the trace's `ev` field
+    /// and the coverage assertions in the catalog tests.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::Launch(_) => "launch",
+            Event::Exit { .. } => "exit",
+            Event::PhaseShift { .. } => "phase_shift",
+            Event::MemPressure { .. } => "mem_pressure",
+            Event::DaemonBurst { .. } => "daemon_burst",
+            Event::Fork { .. } => "fork",
+        }
+    }
+}
+
+/// An event pinned to a virtual-time instant.
+#[derive(Clone, Debug)]
+pub struct TimedEvent {
+    pub t_ms: f64,
+    pub event: Event,
+}
+
+impl TimedEvent {
+    pub fn at(t_ms: f64, event: Event) -> Self {
+        Self { t_ms, event }
+    }
+}
+
+/// What actually happened when an event fired (trace material).
+#[derive(Clone, Debug)]
+pub struct FiredEvent {
+    pub t_ms: f64,
+    /// Stable kind tag (`launch`, `exit`, `phase_shift`, `mem_pressure`,
+    /// `daemon_burst`, `fork`).
+    pub kind: &'static str,
+    pub comm: String,
+    /// Pids spawned, killed, or mutated by the event.
+    pub pids: Vec<i32>,
+    pub node: Option<usize>,
+    pub pages: Option<u64>,
+}
+
+/// Fires a sorted event timeline into a [`Machine`] as its clock passes
+/// each instant. Owned by the runner loop; `tick` is called once per
+/// simulation step *before* the machine advances, so an event at t is
+/// visible to the tick that moves time from t to t+dt (and to the
+/// monitor sample taken after it).
+pub struct EventEngine {
+    events: Vec<TimedEvent>,
+    next: usize,
+    fired: Vec<FiredEvent>,
+}
+
+impl EventEngine {
+    /// Build an engine; events are stably sorted by time, so same-time
+    /// events fire in declaration order.
+    pub fn new(mut events: Vec<TimedEvent>) -> Self {
+        events.sort_by(|a, b| {
+            a.t_ms
+                .partial_cmp(&b.t_ms)
+                .expect("event times must not be NaN")
+        });
+        Self { events, next: 0, fired: Vec::new() }
+    }
+
+    /// Events not yet fired.
+    pub fn pending(&self) -> usize {
+        self.events.len() - self.next
+    }
+
+    /// Unfired events that can still fire before `deadline_ms` — an
+    /// event at or past the horizon never fires (the run loop exits
+    /// first) and must not hold up early stop. Events inside the final
+    /// partial tick are counted conservatively: the run waits out the
+    /// horizon rather than risk stopping before a fireable event.
+    pub fn pending_before(&self, deadline_ms: f64) -> usize {
+        self.events[self.next..]
+            .iter()
+            .filter(|e| e.t_ms < deadline_ms)
+            .count()
+    }
+
+    /// Whether any fired events await draining.
+    pub fn has_fired(&self) -> bool {
+        !self.fired.is_empty()
+    }
+
+    /// Take the fired-event log accumulated since the last drain.
+    pub fn drain_fired(&mut self) -> Vec<FiredEvent> {
+        std::mem::take(&mut self.fired)
+    }
+
+    /// Fire every event due at or before the machine's current time.
+    pub fn tick(&mut self, machine: &mut Machine) {
+        while self.next < self.events.len()
+            && self.events[self.next].t_ms <= machine.now_ms
+        {
+            let ev = self.events[self.next].clone();
+            self.next += 1;
+            self.fire(&ev, machine);
+        }
+    }
+
+    fn running_with_comm(machine: &Machine, comm: &str) -> Vec<i32> {
+        machine
+            .processes()
+            .filter(|p| p.is_running() && p.comm == comm)
+            .map(|p| p.pid)
+            .collect()
+    }
+
+    fn fire(&mut self, ev: &TimedEvent, m: &mut Machine) {
+        let t_ms = m.now_ms;
+        let kind = ev.event.kind();
+        let fired = match &ev.event {
+            Event::Launch(spec) => {
+                let pid = m.spawn(
+                    &spec.comm,
+                    spec.behavior.clone(),
+                    spec.importance,
+                    spec.threads,
+                    Placement::LeastLoaded,
+                );
+                FiredEvent {
+                    t_ms,
+                    kind,
+                    comm: spec.comm.clone(),
+                    pids: vec![pid],
+                    node: None,
+                    pages: None,
+                }
+            }
+            Event::Exit { comm } => {
+                let pids = Self::running_with_comm(m, comm);
+                for &pid in &pids {
+                    m.kill(pid);
+                }
+                FiredEvent {
+                    t_ms,
+                    kind,
+                    comm: comm.clone(),
+                    pids,
+                    node: None,
+                    pages: None,
+                }
+            }
+            Event::PhaseShift { comm, behavior } => {
+                behavior.validate().expect("invalid phase-shift behavior");
+                let pids = Self::running_with_comm(m, comm);
+                for &pid in &pids {
+                    let p = m.process_mut(pid).expect("running pid");
+                    let mut b = behavior.clone();
+                    // The resident set was allocated at spawn; a phase
+                    // change alters how memory is *used*, not how much
+                    // is mapped.
+                    b.ws_pages = p.behavior.ws_pages;
+                    b.thp_fraction = p.behavior.thp_fraction;
+                    p.behavior = b;
+                }
+                FiredEvent {
+                    t_ms,
+                    kind,
+                    comm: comm.clone(),
+                    pids,
+                    node: None,
+                    pages: None,
+                }
+            }
+            Event::MemPressure { comm, node, pages } => {
+                let behavior = TaskBehavior {
+                    work_units: f64::INFINITY,
+                    mem_intensity: 1.0,
+                    ws_pages: (*pages).max(1),
+                    shared_frac: 0.0,
+                    exchange: 0.0,
+                    granularity: 1.0,
+                    phase_period_ms: 0.0,
+                    phase_amplitude: 0.0,
+                    thp_fraction: 0.0,
+                };
+                let pid =
+                    m.spawn(comm, behavior, PRESSURE_IMPORTANCE, 1, Placement::Node(*node));
+                m.pin_process(pid, *node);
+                FiredEvent {
+                    t_ms,
+                    kind,
+                    comm: comm.clone(),
+                    pids: vec![pid],
+                    node: Some(*node),
+                    pages: Some((*pages).max(1)),
+                }
+            }
+            Event::DaemonBurst { count, work_units } => {
+                let behavior = TaskBehavior {
+                    work_units: work_units.max(1.0),
+                    mem_intensity: 0.15,
+                    ws_pages: 2_000,
+                    shared_frac: 0.1,
+                    exchange: 0.1,
+                    granularity: 1.0,
+                    phase_period_ms: 0.0,
+                    phase_amplitude: 0.0,
+                    thp_fraction: 0.0,
+                };
+                let pids: Vec<i32> = (0..*count)
+                    .map(|k| {
+                        m.spawn(
+                            &format!("burst-{k}"),
+                            behavior.clone(),
+                            BURST_IMPORTANCE,
+                            1,
+                            Placement::LeastLoaded,
+                        )
+                    })
+                    .collect();
+                FiredEvent {
+                    t_ms,
+                    kind,
+                    comm: "burst".into(),
+                    pids,
+                    node: None,
+                    pages: None,
+                }
+            }
+            Event::Fork { comm, children } => {
+                let parents = Self::running_with_comm(m, comm);
+                let kid_comm = format!("{comm}-kid");
+                let mut pids = Vec::new();
+                for &parent in &parents {
+                    for _ in 0..*children {
+                        if let Some(kid) = m.fork(parent, &kid_comm) {
+                            pids.push(kid);
+                        }
+                    }
+                }
+                FiredEvent {
+                    t_ms,
+                    kind,
+                    comm: comm.clone(),
+                    pids,
+                    node: None,
+                    pages: None,
+                }
+            }
+        };
+        self.fired.push(fired);
+    }
+}
+
+/// A named, fully-parameterized timeline: everything `scenario
+/// run|record|replay` needs to reproduce one dynamic experiment.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub params: RunParams,
+}
+
+/// Record one scenario: run it with tracing on, return the result and
+/// the serialized trace.
+pub fn record_with_result(sc: &Scenario) -> (RunResult, String) {
+    let mut trace = ScenarioTrace::new();
+    trace.push_header(sc);
+    let result = runner::run_traced(&sc.params, &mut trace);
+    trace.push_summary(&result);
+    (result, trace.to_jsonl())
+}
+
+/// Record one scenario to its serialized trace.
+pub fn record(sc: &Scenario) -> String {
+    record_with_result(sc).1
+}
+
+/// Record many scenarios concurrently on the deterministic sweep pool —
+/// each cell boots its own machine, so traces are bit-identical to
+/// serial [`record`] calls (pinned by `rust/tests/scenario_golden.rs`).
+pub fn record_all(scenarios: &[Scenario]) -> Vec<String> {
+    sweep::map(scenarios, record)
+}
+
+/// Re-run a scenario and byte-diff its trace against a golden one.
+/// Ok(line count) when identical.
+pub fn replay(sc: &Scenario, golden: &str) -> Result<usize, TraceDiff> {
+    let ours = record(sc);
+    match ScenarioTrace::diff(&ours, golden) {
+        None => Ok(ours.lines().count()),
+        Some(d) => Err(d),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+    use crate::topology::NumaTopology;
+    use crate::workloads::parsec;
+
+    fn small_machine() -> Machine {
+        Machine::new(
+            NumaTopology::from_config(&MachineConfig::preset("2node-8core").unwrap()),
+            5,
+        )
+    }
+
+    fn launch_spec(comm: &str) -> LaunchSpec {
+        let mut s = parsec::spec("canneal").unwrap();
+        s.comm = comm.into();
+        s
+    }
+
+    #[test]
+    fn events_fire_in_time_order_and_only_once() {
+        let mut m = small_machine();
+        let mut e = EventEngine::new(vec![
+            TimedEvent::at(5.0, Event::Launch(launch_spec("late"))),
+            TimedEvent::at(0.0, Event::Launch(launch_spec("early"))),
+        ]);
+        assert_eq!(e.pending(), 2);
+        e.tick(&mut m); // t = 0
+        assert_eq!(e.pending(), 1);
+        assert_eq!(e.drain_fired().len(), 1);
+        assert!(m.list_pids().len() == 1);
+        for _ in 0..10 {
+            e.tick(&mut m);
+            m.step();
+        }
+        assert_eq!(e.pending(), 0);
+        let fired = e.drain_fired();
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].comm, "late");
+        assert_eq!(fired[0].t_ms, 5.0);
+        assert_eq!(m.processes().count(), 2);
+    }
+
+    #[test]
+    fn exit_event_kills_all_matching_comms() {
+        let mut m = small_machine();
+        m.spawn("web", TaskBehavior::mem_bound(1e9), 1.0, 1, Placement::Node(0));
+        m.spawn("web", TaskBehavior::mem_bound(1e9), 1.0, 1, Placement::Node(1));
+        let keep =
+            m.spawn("db", TaskBehavior::mem_bound(1e9), 1.0, 1, Placement::Node(0));
+        let mut e = EventEngine::new(vec![TimedEvent::at(
+            0.0,
+            Event::Exit { comm: "web".into() },
+        )]);
+        e.tick(&mut m);
+        assert_eq!(m.list_pids(), vec![keep]);
+        let fired = e.drain_fired();
+        assert_eq!(fired[0].kind, "exit");
+        assert_eq!(fired[0].pids.len(), 2);
+    }
+
+    #[test]
+    fn phase_shift_preserves_resident_set_shape() {
+        let mut m = small_machine();
+        let mut b = TaskBehavior::mem_bound(1e9);
+        b.ws_pages = 77_000;
+        let pid = m.spawn("app", b, 1.0, 2, Placement::Node(0));
+        let mut new_b = TaskBehavior::cpu_bound(500.0);
+        new_b.ws_pages = 5; // must be ignored
+        new_b.thp_fraction = 1.0; // must be ignored
+        let mut e = EventEngine::new(vec![TimedEvent::at(
+            0.0,
+            Event::PhaseShift { comm: "app".into(), behavior: new_b },
+        )]);
+        e.tick(&mut m);
+        let p = m.process(pid).unwrap();
+        assert_eq!(p.behavior.ws_pages, 77_000, "resident set pinned at spawn");
+        assert_eq!(p.behavior.thp_fraction, 0.0);
+        assert_eq!(p.behavior.mem_intensity, 0.1, "intensity did shift");
+        assert_eq!(p.behavior.work_units, 500.0);
+        assert_eq!(p.pages.total(), 77_000, "pages untouched");
+    }
+
+    #[test]
+    fn mem_pressure_spawns_a_pinned_hog_and_exit_removes_it() {
+        let mut m = small_machine();
+        let mut e = EventEngine::new(vec![
+            TimedEvent::at(
+                0.0,
+                Event::MemPressure { comm: "pressure".into(), node: 1, pages: 9_000 },
+            ),
+            TimedEvent::at(3.0, Event::Exit { comm: "pressure".into() }),
+        ]);
+        e.tick(&mut m);
+        let fired = e.drain_fired();
+        assert_eq!(fired[0].node, Some(1));
+        let pid = fired[0].pids[0];
+        let p = m.process(pid).unwrap();
+        assert_eq!(p.pinned_node, Some(1));
+        assert_eq!(p.pages.per_node[1], 9_000);
+        assert!(p.behavior.is_daemon());
+        for _ in 0..5 {
+            e.tick(&mut m);
+            m.step();
+        }
+        assert!(!m.process(pid).unwrap().is_running());
+    }
+
+    #[test]
+    fn fork_event_spawns_kids_and_burst_spawns_finite_daemons() {
+        let mut m = small_machine();
+        m.spawn("srv", TaskBehavior::cpu_bound(1e9), 1.0, 1, Placement::Node(0));
+        let mut e = EventEngine::new(vec![
+            TimedEvent::at(0.0, Event::Fork { comm: "srv".into(), children: 3 }),
+            TimedEvent::at(0.0, Event::DaemonBurst { count: 2, work_units: 10.0 }),
+        ]);
+        e.tick(&mut m);
+        let kids = m
+            .processes()
+            .filter(|p| p.comm == "srv-kid")
+            .count();
+        assert_eq!(kids, 3);
+        let bursts: Vec<_> = m
+            .processes()
+            .filter(|p| p.comm.starts_with("burst-"))
+            .collect();
+        assert_eq!(bursts.len(), 2);
+        assert!(bursts.iter().all(|p| !p.behavior.is_daemon()));
+        let fired = e.drain_fired();
+        assert_eq!(fired.len(), 2);
+        assert_eq!(fired[0].kind, "fork");
+        assert_eq!(fired[1].kind, "daemon_burst");
+    }
+
+    #[test]
+    fn unmatched_events_fire_as_noops() {
+        let mut m = small_machine();
+        let mut e = EventEngine::new(vec![
+            TimedEvent::at(0.0, Event::Exit { comm: "ghost".into() }),
+            TimedEvent::at(0.0, Event::Fork { comm: "ghost".into(), children: 2 }),
+        ]);
+        e.tick(&mut m);
+        let fired = e.drain_fired();
+        assert_eq!(fired.len(), 2);
+        assert!(fired.iter().all(|f| f.pids.is_empty()));
+        assert_eq!(m.processes().count(), 0);
+    }
+}

@@ -1,0 +1,278 @@
+//! Deterministic scenario traces — schema `numasched-trace/v1`.
+//!
+//! A trace is a sequence of JSONL records capturing everything a
+//! scenario run *decided* and *observed*: a header (scenario identity +
+//! seed), every fired timeline event with the pids it touched, every
+//! scheduler decision, periodic per-node occupancy/utilization samples,
+//! and a closing summary. Two runs of the same scenario on the same
+//! build must serialize **byte-identically** — that is the determinism
+//! contract the golden tests and `scenario replay` enforce.
+//!
+//! Serialization rules that make byte-identity hold:
+//! * records are appended in virtual-time order by a single producer
+//!   (the runner loop), never post-sorted;
+//! * numbers are written with Rust's shortest-roundtrip `Display` for
+//!   `f64` — identical bits in, identical text out;
+//! * no wall-clock, hostname, thread id, or map-iteration-order data
+//!   ever enters a record.
+//!
+//! The contract is per-build: floating-point libm differences (e.g.
+//! `sin` in the phase model) can legitimately shift trajectories across
+//! platforms, which is why CI records and replays its own goldens.
+
+use crate::experiments::runner::RunResult;
+use crate::scheduler::{Decision, Reason};
+use crate::sim::Machine;
+
+use super::{FiredEvent, Scenario};
+
+/// Trace schema identifier, first field of the header record.
+pub const TRACE_SCHEMA: &str = "numasched-trace/v1";
+
+/// An in-memory trace: one serialized JSONL record per line.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ScenarioTrace {
+    lines: Vec<String>,
+}
+
+/// First point where a replayed trace diverges from a golden one.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceDiff {
+    /// 1-based line number of the first divergence.
+    pub line: usize,
+    /// The replayed line (`"<absent>"` when the replay is shorter).
+    pub ours: String,
+    /// The golden line (`"<absent>"` when the golden is shorter).
+    pub golden: String,
+}
+
+impl std::fmt::Display for TraceDiff {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "trace diverges at line {}:\n  replay: {}\n  golden: {}",
+            self.line, self.ours, self.golden
+        )
+    }
+}
+
+/// Minimal JSON string escape (comm names are tame, but the schema must
+/// stay valid JSON whatever a config throws at it).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn join_u64(xs: &[u64]) -> String {
+    xs.iter()
+        .map(|x| x.to_string())
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn join_i32(xs: &[i32]) -> String {
+    xs.iter()
+        .map(|x| x.to_string())
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn join_f64(xs: &[f64]) -> String {
+    xs.iter()
+        .map(|x| format!("{x}"))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn reason_name(r: Reason) -> &'static str {
+    match r {
+        Reason::StaticPin => "static_pin",
+        Reason::Speedup => "speedup",
+        Reason::Contention => "contention",
+    }
+}
+
+impl ScenarioTrace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.lines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lines.is_empty()
+    }
+
+    pub fn lines(&self) -> &[String] {
+        &self.lines
+    }
+
+    /// Header record: scenario identity, run parameters, event count.
+    pub fn push_header(&mut self, sc: &Scenario) {
+        self.lines.push(format!(
+            "{{\"schema\":\"{}\",\"scenario\":\"{}\",\"preset\":\"{}\",\
+             \"policy\":\"{}\",\"seed\":{},\"horizon_ms\":{},\"events\":{}}}",
+            TRACE_SCHEMA,
+            esc(sc.name),
+            esc(&sc.params.machine.preset),
+            sc.params.scheduler.policy.name(),
+            sc.params.seed,
+            sc.params.horizon_ms,
+            sc.params.events.len(),
+        ));
+    }
+
+    /// One fired timeline event and the pids it touched.
+    pub fn push_event(&mut self, f: &FiredEvent) {
+        let mut line = format!(
+            "{{\"t\":{},\"ev\":\"{}\",\"comm\":\"{}\",\"pids\":[{}]",
+            f.t_ms,
+            f.kind,
+            esc(&f.comm),
+            join_i32(&f.pids),
+        );
+        if let Some(node) = f.node {
+            line.push_str(&format!(",\"node\":{node}"));
+        }
+        if let Some(pages) = f.pages {
+            line.push_str(&format!(",\"pages\":{pages}"));
+        }
+        line.push('}');
+        self.lines.push(line);
+    }
+
+    /// One executed scheduler decision.
+    pub fn push_decision(&mut self, d: &Decision) {
+        self.lines.push(format!(
+            "{{\"t\":{},\"decision\":\"{}\",\"pid\":{},\"comm\":\"{}\",\
+             \"from\":{},\"to\":{},\"sticky_pages\":{}}}",
+            d.t_ms,
+            reason_name(d.reason),
+            d.pid,
+            esc(&d.comm),
+            d.from,
+            d.to,
+            d.sticky_pages,
+        ));
+    }
+
+    /// Periodic node-occupancy sample: resident 4 KiB-equivalents per
+    /// node (running processes only), committed controller utilization,
+    /// and the live process count.
+    pub fn push_occupancy(&mut self, t_ms: f64, machine: &Machine) {
+        let nodes = machine.topo.nodes;
+        let mut occ = vec![0u64; nodes];
+        let mut running = 0usize;
+        for p in machine.processes() {
+            if !p.is_running() {
+                continue;
+            }
+            running += 1;
+            for (n, slot) in occ.iter_mut().enumerate() {
+                *slot += p.pages.node_total(n);
+            }
+        }
+        self.lines.push(format!(
+            "{{\"t\":{},\"occ\":[{}],\"rho\":[{}],\"running\":{}}}",
+            t_ms,
+            join_u64(&occ),
+            join_f64(&machine.node_rho()),
+            running,
+        ));
+    }
+
+    /// Closing summary of the whole run.
+    pub fn push_summary(&mut self, r: &RunResult) {
+        let finished = r.procs.iter().filter(|p| p.runtime_ms.is_some()).count();
+        self.lines.push(format!(
+            "{{\"end_ms\":{},\"procs\":{},\"finished\":{},\"migrations\":{},\
+             \"pages_migrated\":{},\"decisions\":{}}}",
+            r.end_ms,
+            r.procs.len(),
+            finished,
+            r.total_migrations,
+            r.total_pages_migrated,
+            r.scheduler_decisions,
+        ));
+    }
+
+    /// Serialize: one record per line, trailing newline.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for line in &self.lines {
+            out.push_str(line);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// First divergence between two serialized traces, if any.
+    pub fn diff(ours: &str, golden: &str) -> Option<TraceDiff> {
+        let a: Vec<&str> = ours.lines().collect();
+        let b: Vec<&str> = golden.lines().collect();
+        for i in 0..a.len().max(b.len()) {
+            let ours = a.get(i).copied().unwrap_or("<absent>");
+            let golden = b.get(i).copied().unwrap_or("<absent>");
+            if ours != golden {
+                return Some(TraceDiff {
+                    line: i + 1,
+                    ours: ours.to_string(),
+                    golden: golden.to_string(),
+                });
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes_json_strings() {
+        assert_eq!(esc("plain"), "plain");
+        assert_eq!(esc("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(esc("tab\there"), "tab\\u0009here");
+    }
+
+    #[test]
+    fn jsonl_has_one_record_per_line() {
+        let mut t = ScenarioTrace::new();
+        t.lines.push("{\"a\":1}".into());
+        t.lines.push("{\"b\":2}".into());
+        assert_eq!(t.to_jsonl(), "{\"a\":1}\n{\"b\":2}\n");
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn diff_finds_first_divergence_and_length_mismatch() {
+        assert_eq!(ScenarioTrace::diff("a\nb\n", "a\nb\n"), None);
+        let d = ScenarioTrace::diff("a\nX\n", "a\nb\n").unwrap();
+        assert_eq!(d.line, 2);
+        assert_eq!(d.ours, "X");
+        assert_eq!(d.golden, "b");
+        let d = ScenarioTrace::diff("a\n", "a\nb\n").unwrap();
+        assert_eq!(d.line, 2);
+        assert_eq!(d.ours, "<absent>");
+        assert_eq!(d.golden, "b");
+    }
+
+    #[test]
+    fn float_display_is_shortest_roundtrip() {
+        // The determinism contract leans on Display being stable.
+        assert_eq!(join_f64(&[2000.0, 0.5, 0.0]), "2000,0.5,0");
+    }
+}

@@ -547,6 +547,42 @@ impl Machine {
         }
     }
 
+    /// Kill a running process (the scenario engine's `Exit` event; a
+    /// SIGKILL on a live host): marks it finished at the current virtual
+    /// time and frees its cores immediately, so the next `ProcSource`
+    /// read and the next balancing pass both see it gone. Returns false
+    /// if the pid is unknown or already finished.
+    pub fn kill(&mut self, pid: i32) -> bool {
+        let now = self.now_ms;
+        let Some(p) = self.procs.get_mut(&pid) else { return false };
+        if !p.is_running() {
+            return false;
+        }
+        p.finished_ms = Some(now);
+        for q in self.cores.iter_mut() {
+            q.retain(|&(qpid, _)| qpid != pid);
+        }
+        self.maps_cache.borrow_mut().remove(&pid);
+        true
+    }
+
+    /// Fork: clone a running process's behavior and importance into a
+    /// new process named `comm` (the scenario engine's `Fork` event).
+    /// The child starts with zero progress, threads placed NUMA-blind
+    /// like any fresh exec, and its own first-touch page map — fork in
+    /// this model is spawn-of-a-twin, not COW sharing. Returns the
+    /// child pid, or None when the parent is unknown or finished.
+    pub fn fork(&mut self, pid: i32, comm: &str) -> Option<i32> {
+        let (behavior, importance, nthreads) = {
+            let p = self.procs.get(&pid)?;
+            if !p.is_running() {
+                return None;
+            }
+            (p.behavior.clone(), p.importance, p.nthreads())
+        };
+        Some(self.spawn(comm, behavior, importance, nthreads, Placement::LeastLoaded))
+    }
+
     /// Run until `deadline_ms` or all processes finish.
     pub fn run_until(&mut self, deadline_ms: f64) {
         while self.now_ms < deadline_ms && !self.all_finished() {
@@ -1254,6 +1290,57 @@ mod tests {
         assert_ne!(before, after);
         assert!(after.contains("N1="), "stranded pages visible: {after}");
         assert!(!after.contains("N0="));
+    }
+
+    #[test]
+    fn kill_frees_cores_and_procfs_presence() {
+        let mut m = small_machine();
+        m.os_balance = false;
+        let a = m.spawn("stay", TaskBehavior::mem_bound(1e9), 1.0, 2, Placement::Node(0));
+        let b = m.spawn("die", TaskBehavior::mem_bound(1e9), 1.0, 3, Placement::Node(1));
+        m.step();
+        assert!(m.kill(b));
+        // Cores freed at once: only the survivor's threads remain queued.
+        let queued: usize = (0..m.topo.total_cores()).map(|c| m.core_load(c)).sum();
+        assert_eq!(queued, 2);
+        assert!(m.read_stat(b).is_none());
+        assert!(m.read_numa_maps(b).is_none());
+        assert!(!m.list_pids().contains(&b));
+        assert!(m.list_pids().contains(&a));
+        // Killed at the current virtual time; double kill is a no-op.
+        assert_eq!(m.process(b).unwrap().finished_ms, Some(m.now_ms));
+        assert!(!m.kill(b));
+        assert!(!m.kill(999_999));
+        // The machine keeps ticking without the dead process.
+        m.step();
+        assert!(m.process(a).unwrap().is_running());
+    }
+
+    #[test]
+    fn fork_spawns_a_twin_with_fresh_progress() {
+        let mut m = small_machine();
+        m.os_balance = false;
+        let parent = m.spawn("srv", TaskBehavior::mem_bound(1e9), 2.5, 2, Placement::Node(0));
+        for _ in 0..5 {
+            m.step();
+        }
+        let kid = m.fork(parent, "srv-kid").expect("fork");
+        assert_ne!(kid, parent);
+        let k = m.process(kid).unwrap();
+        assert_eq!(k.comm, "srv-kid");
+        assert_eq!(k.importance, 2.5);
+        assert_eq!(k.nthreads(), 2);
+        assert_eq!(k.work_done, 0.0, "child starts fresh");
+        assert_eq!(k.started_ms, m.now_ms);
+        assert_eq!(
+            k.pages.total(),
+            m.process(parent).unwrap().pages.total(),
+            "same working-set size"
+        );
+        // Forking a dead or unknown pid fails.
+        m.kill(parent);
+        assert!(m.fork(parent, "x").is_none());
+        assert!(m.fork(424_242, "x").is_none());
     }
 
     #[test]

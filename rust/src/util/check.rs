@@ -30,6 +30,148 @@ where
     }
 }
 
+/// Maximum greedy shrink steps before [`forall_shrunk`] gives up and
+/// reports the best minimization found so far.
+pub const MAX_SHRINK_STEPS: usize = 500;
+
+/// Types that can propose strictly-simpler candidates of themselves
+/// (quickcheck-style value shrinking). Candidates are ordered simplest
+/// first; the greedy minimizer takes the first one that still fails.
+pub trait Shrink: Sized {
+    fn shrink(&self) -> Vec<Self>;
+}
+
+macro_rules! shrink_uint {
+    ($($t:ty),*) => {$(
+        impl Shrink for $t {
+            fn shrink(&self) -> Vec<Self> {
+                let mut out = Vec::new();
+                if *self == 0 {
+                    return out;
+                }
+                out.push(0);
+                if *self > 1 {
+                    out.push(*self / 2);
+                }
+                out.push(*self - 1);
+                out.dedup();
+                out
+            }
+        }
+    )*};
+}
+
+shrink_uint!(u8, u16, u32, u64, usize);
+
+macro_rules! shrink_int {
+    ($($t:ty),*) => {$(
+        impl Shrink for $t {
+            fn shrink(&self) -> Vec<Self> {
+                let mut out = Vec::new();
+                if *self == 0 {
+                    return out;
+                }
+                out.push(0);
+                if self.abs() > 1 {
+                    out.push(*self / 2);
+                }
+                out.push(*self - self.signum());
+                out.dedup();
+                out
+            }
+        }
+    )*};
+}
+
+shrink_int!(i8, i16, i32, i64, isize);
+
+/// Vectors shrink structurally: empty, halves, one-element removals,
+/// then per-element shrinks (the element type bounds its own fan-out).
+impl<T: Clone + Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let n = self.len();
+        let mut out = Vec::new();
+        if n == 0 {
+            return out;
+        }
+        out.push(Vec::new());
+        if n > 1 {
+            out.push(self[..n / 2].to_vec());
+            out.push(self[n / 2..].to_vec());
+            for i in 0..n {
+                let mut v = self.clone();
+                v.remove(i);
+                out.push(v);
+            }
+        }
+        for i in 0..n {
+            for cand in self[i].shrink() {
+                let mut v = self.clone();
+                v[i] = cand;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+/// Greedily minimize a failing value: repeatedly take the first shrink
+/// candidate on which `prop` still fails, until no candidate fails or
+/// [`MAX_SHRINK_STEPS`] is hit. Returns the minimized value, its failure
+/// message, and the steps taken. `prop` must be deterministic — the
+/// scenario/simulator properties are, by construction.
+pub fn shrink_to_minimal<T, P>(
+    start: &T,
+    start_msg: String,
+    prop: &mut P,
+) -> (T, String, usize)
+where
+    T: Clone + Shrink,
+    P: FnMut(&T) -> PropResult,
+{
+    let mut cur = start.clone();
+    let mut cur_msg = start_msg;
+    let mut steps = 0;
+    'outer: while steps < MAX_SHRINK_STEPS {
+        for cand in cur.shrink() {
+            if let Err(msg) = prop(&cand) {
+                cur = cand;
+                cur_msg = msg;
+                steps += 1;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (cur, cur_msg, steps)
+}
+
+/// [`forall`] with value-based generation and shrinking: `gen` draws a
+/// case from the PRNG, `prop` judges it, and a failure is greedily
+/// minimized via [`Shrink`] before panicking — the report carries both
+/// the original failing case id and the minimized value, so the
+/// smallest reproducer is in the test log, not an overnight bisect.
+pub fn forall_shrunk<T, G, P>(name: &str, seed: u64, cases: u64, mut gen: G, mut prop: P)
+where
+    T: Clone + Shrink + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> PropResult,
+{
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let mut rng = root.fork(case);
+        let value = gen(&mut rng);
+        if let Err(msg) = prop(&value) {
+            let (min, min_msg, steps) = shrink_to_minimal(&value, msg.clone(), &mut prop);
+            panic!(
+                "property '{name}' failed at seed={seed} case={case}: {msg}\n\
+                 minimized after {steps} shrink step(s) to: {min:?}\n\
+                 minimized failure: {min_msg}"
+            );
+        }
+    }
+}
+
 /// Re-run a single failing case (the reproduction hook `forall` points at).
 pub fn forall_case<F>(name: &str, seed: u64, case: u64, mut prop: F)
 where
@@ -98,6 +240,81 @@ mod tests {
             assert_eq!(rng.next_u64(), first.unwrap());
             Ok(())
         });
+    }
+
+    #[test]
+    fn uint_shrink_proposes_simpler_values_only() {
+        assert!(0u64.shrink().is_empty());
+        assert_eq!(1u64.shrink(), vec![0]);
+        assert_eq!(100u64.shrink(), vec![0, 50, 99]);
+        assert_eq!((-7i64).shrink(), vec![0, -3, -6]);
+    }
+
+    #[test]
+    fn shrink_minimizes_a_failing_vec_to_the_boundary() {
+        // Fails iff any element >= 10: the minimal reproducer is the
+        // single element sitting exactly on the boundary.
+        let mut prop = |v: &Vec<u64>| -> PropResult {
+            if v.iter().any(|&x| x >= 10) {
+                Err("has a big element".into())
+            } else {
+                Ok(())
+            }
+        };
+        let start = vec![57u64, 3, 99];
+        let (min, msg, steps) = shrink_to_minimal(&start, "seed msg".into(), &mut prop);
+        assert_eq!(min, vec![10]);
+        assert_eq!(msg, "has a big element");
+        assert!(steps > 0 && steps < MAX_SHRINK_STEPS);
+    }
+
+    #[test]
+    fn shrink_is_a_noop_when_nothing_simpler_fails() {
+        let mut prop = |v: &Vec<u64>| -> PropResult {
+            if v == &vec![42u64, 7] {
+                Err("exactly this value".into())
+            } else {
+                Ok(())
+            }
+        };
+        let start = vec![42u64, 7];
+        let (min, _, steps) = shrink_to_minimal(&start, "m".into(), &mut prop);
+        assert_eq!(min, start);
+        assert_eq!(steps, 0);
+    }
+
+    #[test]
+    fn forall_shrunk_runs_all_cases_when_passing() {
+        let mut ran = 0;
+        forall_shrunk(
+            "passing",
+            9,
+            30,
+            |rng| vec![rng.below(50) as u64, rng.below(50) as u64],
+            |_v| {
+                ran += 1;
+                Ok(())
+            },
+        );
+        assert!(ran >= 30, "every generated case judged");
+    }
+
+    #[test]
+    #[should_panic(expected = "minimized after")]
+    fn forall_shrunk_reports_the_minimized_case() {
+        forall_shrunk(
+            "fails-big",
+            2,
+            50,
+            |rng| vec![rng.below(1000) as u64],
+            |v| {
+                if v.iter().any(|&x| x > 500) {
+                    Err("too big".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
     }
 
     #[test]

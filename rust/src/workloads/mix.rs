@@ -99,6 +99,35 @@ pub fn fig6_mix(name: &str, hogs: usize) -> Option<Vec<LaunchSpec>> {
     Some(out)
 }
 
+/// Small server mix for the scenario catalog's churn timelines (sized
+/// for the 2node-8core preset): two apache workers and a mysqld — the
+/// measured services — plus one background daemon.
+pub fn scenario_server_small() -> Vec<LaunchSpec> {
+    let mut out = Vec::new();
+    for _ in 0..2 {
+        let mut s = server::apache();
+        s.importance = 3.0;
+        out.push(s);
+    }
+    let mut db = server::mysqld();
+    db.importance = 3.0;
+    db.threads = 4; // the small box has 8 cores total
+    out.push(db);
+    out.push(server::daemon());
+    out
+}
+
+/// A finite churn job for scenario `Launch` events: canneal-shaped
+/// memory pressure with an explicit name and work budget, so arrivals
+/// mid-run both disturb placement and eventually leave.
+pub fn churn_job(name: &str, work_units: f64) -> LaunchSpec {
+    let mut s = parsec::spec("canneal").expect("canneal in catalog");
+    s.comm = name.to_string();
+    s.importance = 1.0;
+    s.behavior.work_units = work_units;
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -135,6 +164,25 @@ mod tests {
         assert_eq!(mix.iter().filter(|s| s.comm == "mysqld").count(), 1);
         assert_eq!(mix.iter().filter(|s| s.comm == "daemon").count(), 10);
         assert_eq!(mix.iter().filter(|s| s.comm.starts_with("batch-")).count(), 2);
+    }
+
+    #[test]
+    fn scenario_server_small_fits_the_small_box() {
+        let mix = scenario_server_small();
+        assert_eq!(mix.len(), 4);
+        let threads: usize = mix.iter().map(|s| s.threads).sum();
+        assert!(threads <= 2 * 8, "must not drown 8 cores: {threads}");
+        assert!(mix.iter().all(|s| s.behavior.is_daemon()));
+        assert_eq!(mix.iter().filter(|s| s.importance > 1.0).count(), 3);
+    }
+
+    #[test]
+    fn churn_jobs_are_finite_and_named() {
+        let j = churn_job("churn-7", 800.0);
+        assert_eq!(j.comm, "churn-7");
+        assert!(!j.behavior.is_daemon());
+        assert_eq!(j.behavior.work_units, 800.0);
+        j.behavior.validate().unwrap();
     }
 
     #[test]

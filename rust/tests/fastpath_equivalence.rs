@@ -141,6 +141,7 @@ fn grid() -> Vec<runner::RunParams> {
                 seed,
                 horizon_ms: 4_000.0,
                 window_ms: 500.0,
+                ..Default::default()
             });
         }
     }

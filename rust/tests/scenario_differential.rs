@@ -1,0 +1,108 @@
+//! Differential test: every catalog scenario, run under the user-level
+//! scheduler and both baselines, must flow through the report machinery
+//! without NaNs or ordering panics — churn (mid-run exits, forks,
+//! phase flips) is exactly where naive factor math divides by zero or
+//! feeds `partial_cmp().unwrap()` a NaN.
+
+use numasched::config::PolicyKind;
+use numasched::experiments::report::Table;
+use numasched::experiments::sweep::{run_cells, SweepCell};
+use numasched::scenario::catalog;
+
+const POLICIES: [PolicyKind; 3] = [
+    PolicyKind::Proposed,
+    PolicyKind::AutoNuma,
+    PolicyKind::StaticTuning,
+];
+
+#[test]
+fn every_scenario_yields_finite_ordered_factors_under_all_policies() {
+    // (scenario x policy) grid, fanned out over the sweep pool like the
+    // figure experiments.
+    let mut cells = Vec::new();
+    for sc in catalog::all() {
+        for policy in POLICIES {
+            let mut params = sc.params.clone();
+            params.scheduler.policy = policy;
+            cells.push(SweepCell { key: (sc.name, policy), params });
+        }
+    }
+    let results = run_cells(&cells);
+    assert_eq!(results.len(), catalog::NAMES.len() * POLICIES.len());
+
+    let mut table = Table::new(
+        "scenario degradation factors",
+        &["scenario", "policy", "worst", "median"],
+    );
+    for ((name, policy), r) in &results {
+        assert!(r.end_ms.is_finite() && r.end_ms > 0.0, "{name}/{policy}: bad end");
+        assert!(!r.procs.is_empty(), "{name}/{policy}: empty result set");
+
+        // Degradation factor per process (1 - mean speed). Under churn
+        // some processes are killed before ever running a full window —
+        // the factors must still be finite and within [0, 1].
+        let mut degradation: Vec<f64> =
+            r.procs.iter().map(|p| 1.0 - p.mean_speed).collect();
+        for (p, d) in r.procs.iter().zip(&degradation) {
+            assert!(
+                d.is_finite(),
+                "{name}/{policy}: non-finite degradation for {}",
+                p.comm
+            );
+            assert!(
+                (-1e-9..=1.0 + 1e-9).contains(d),
+                "{name}/{policy}: degradation {d} out of range for {}",
+                p.comm
+            );
+        }
+        // The ordering machinery (the same partial_cmp pattern the
+        // Reporter's NUMA-list sort uses) must not panic and must yield
+        // a monotone ranking.
+        degradation.sort_by(|a, b| {
+            b.partial_cmp(a)
+                .unwrap_or_else(|| panic!("{name}/{policy}: NaN in ordering"))
+        });
+        for w in degradation.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        let worst = degradation.first().copied().unwrap();
+        let median = degradation[degradation.len() / 2];
+        table.row(vec![
+            name.to_string(),
+            policy.to_string(),
+            format!("{worst:.3}"),
+            format!("{median:.3}"),
+        ]);
+
+        // Runtime/throughput outputs are finite too (report inputs).
+        for p in &r.procs {
+            if let Some(rt) = p.runtime_ms {
+                assert!(rt.is_finite() && rt >= 0.0, "{name}/{policy}: {}", p.comm);
+            }
+            for &w in &p.window_throughput {
+                assert!(w.is_finite() && w >= 0.0, "{name}/{policy}: {}", p.comm);
+            }
+        }
+    }
+    // Rendering the cross-policy report must not panic either.
+    let rendered = table.render();
+    assert!(rendered.contains("scenario degradation factors"));
+    assert!(rendered.lines().count() > POLICIES.len() * catalog::NAMES.len());
+}
+
+#[test]
+fn proposed_acts_under_churn_while_default_cannot() {
+    // Sanity anchor for the differential: on the churn scenario the
+    // user-level scheduler actually issues decisions (the reactive path
+    // this PR exists to exercise).
+    let sc = catalog::by_name("server-churn").unwrap();
+    let r = numasched::experiments::runner::run(&sc.params);
+    assert!(
+        r.scheduler_decisions > 0,
+        "proposed policy must react to churn"
+    );
+    let mut base = sc.params.clone();
+    base.scheduler.policy = PolicyKind::Default;
+    let rb = numasched::experiments::runner::run(&base);
+    assert_eq!(rb.scheduler_decisions, 0, "default never decides");
+}

@@ -1,0 +1,130 @@
+//! Golden-trace regression tests for the scenario engine.
+//!
+//! The determinism contract (DESIGN.md §"Scenario engine"): recording a
+//! catalog scenario twice — serially or under the parallel sweep pool —
+//! produces byte-identical `numasched-trace/v1` JSONL, and a recording
+//! matches the golden trace checked in under `rust/tests/golden/`.
+//!
+//! Goldens are *bootstrapped*: the first run on a toolchain writes any
+//! missing `<name>.trace.jsonl` and passes with a loud NOTE asking for
+//! the file to be committed (a fresh clone must stay green — the
+//! recording determinism itself is asserted by the other tests here
+//! regardless). Regression pinning engages once the files are
+//! committed. The contract is per-build: goldens pin regressions on
+//! one platform/toolchain, not bit-identity across libm
+//! implementations.
+
+use std::fs;
+use std::path::PathBuf;
+
+use numasched::scenario::{catalog, record, record_all, ScenarioTrace, TRACE_SCHEMA};
+
+/// The catalog subset pinned by checked-in goldens (fast, and spanning
+/// three presets / most event kinds).
+const GOLDEN: [&str; 3] = ["server-churn", "pressure-spike", "flapper"];
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/golden")
+        .join(format!("{name}.trace.jsonl"))
+}
+
+#[test]
+fn recording_is_deterministic_serial_and_parallel() {
+    let scenarios: Vec<_> = GOLDEN
+        .iter()
+        .map(|n| catalog::by_name(n).expect("golden scenario in catalog"))
+        .collect();
+    let serial: Vec<String> = scenarios.iter().map(record).collect();
+    let again: Vec<String> = scenarios.iter().map(record).collect();
+    let parallel = record_all(&scenarios);
+    for ((name, a), (b, c)) in GOLDEN.iter().zip(&serial).zip(again.iter().zip(&parallel)) {
+        assert!(
+            ScenarioTrace::diff(a, b).is_none(),
+            "{name}: serial re-record diverged: {}",
+            ScenarioTrace::diff(a, b).unwrap()
+        );
+        assert!(
+            ScenarioTrace::diff(a, c).is_none(),
+            "{name}: parallel sweep diverged from serial: {}",
+            ScenarioTrace::diff(a, c).unwrap()
+        );
+        assert!(a.starts_with(&format!("{{\"schema\":\"{TRACE_SCHEMA}\"")));
+        assert!(a.lines().count() > 10, "{name}: trace suspiciously short");
+    }
+}
+
+#[test]
+fn golden_traces_match_byte_for_byte() {
+    for name in GOLDEN {
+        let sc = catalog::by_name(name).expect("catalog");
+        let ours = record(&sc);
+        let path = golden_path(name);
+        match fs::read_to_string(&path) {
+            Ok(golden) => {
+                if let Some(d) = ScenarioTrace::diff(&ours, &golden) {
+                    panic!(
+                        "{name}: replay diverged from checked-in golden {}\n{d}\n\
+                         (if the simulation intentionally changed, re-record with \
+                         `cargo run --release -- scenario record` and commit)",
+                        path.display()
+                    );
+                }
+            }
+            Err(_) => {
+                // First run on this checkout: bootstrap the golden from
+                // the recording (goldens are machine-produced, never
+                // hand-written) and verify the write round-trips. The
+                // file should be committed so later runs pin against it.
+                fs::create_dir_all(path.parent().unwrap()).expect("mkdir golden");
+                fs::write(&path, &ours).expect("write golden");
+                let reread = fs::read_to_string(&path).expect("reread golden");
+                assert!(
+                    ScenarioTrace::diff(&ours, &reread).is_none(),
+                    "{name}: golden write did not round-trip"
+                );
+                eprintln!(
+                    "NOTE: bootstrapped golden trace {} — commit it to pin \
+                     this scenario against regressions",
+                    path.display()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn full_catalog_replays_identically_under_the_sweep_pool() {
+    // Every catalog entry — all five presets — must satisfy the replay
+    // contract, even the ones without a checked-in golden.
+    let scenarios = catalog::all();
+    let serial: Vec<String> = scenarios.iter().map(record).collect();
+    let parallel = record_all(&scenarios);
+    for (sc, (a, b)) in scenarios.iter().zip(serial.iter().zip(&parallel)) {
+        assert!(
+            ScenarioTrace::diff(a, b).is_none(),
+            "{}: parallel != serial: {}",
+            sc.name,
+            ScenarioTrace::diff(a, b).unwrap()
+        );
+    }
+    // The five presets are genuinely represented.
+    let mut presets: Vec<&str> =
+        scenarios.iter().map(|s| s.params.machine.preset.as_str()).collect();
+    presets.sort();
+    presets.dedup();
+    assert_eq!(presets.len(), 5, "catalog must span all five presets");
+}
+
+#[test]
+fn traces_carry_events_decisions_and_occupancy() {
+    let sc = catalog::by_name("server-churn").unwrap();
+    let text = record(&sc);
+    assert!(text.contains("\"ev\":\"launch\""));
+    assert!(text.contains("\"ev\":\"exit\""));
+    assert!(text.contains("\"ev\":\"daemon_burst\""));
+    assert!(text.contains("\"occ\":["), "occupancy records present");
+    assert!(text.contains("\"decision\":\""), "proposed policy must act under churn");
+    let last = text.lines().last().unwrap();
+    assert!(last.contains("\"end_ms\":"), "summary closes the trace: {last}");
+}

@@ -1,0 +1,278 @@
+//! Property tests: random scenario event streams never violate the
+//! simulator's accounting invariants.
+//!
+//! Uses the shrinking mini-proptest (`util::check::forall_shrunk`): a
+//! failing event stream is greedily minimized before the panic, so the
+//! log carries the smallest reproducing timeline, not a 12-event blob.
+//!
+//! Invariants under arbitrary churn (launch / exit / phase-shift /
+//! pressure / burst / fork, plus random migrations):
+//! * page conservation — every process keeps its spawn-time 4 KiB-
+//!   equivalent total, and per-node fractions sum to 1;
+//! * ledger balance — the machine's migrated-pages counter equals the
+//!   sum of every process's own migration ledger;
+//! * fingerprint/generation — any migration that moves pages changes
+//!   both;
+//! * no pid is ever pinned to an offline (out-of-range) node;
+//! * core-queue balance — queued thread slots equal the running
+//!   processes' thread counts (a stale queue entry after `Exit` would
+//!   break this);
+//! * the full runner survives any timeline with finite outputs.
+
+use numasched::config::{MachineConfig, PolicyKind, SchedulerConfig};
+use numasched::experiments::runner::{self, RunParams};
+use numasched::scenario::{Event, EventEngine, TimedEvent};
+use numasched::sim::{Machine, Placement, TaskBehavior};
+use numasched::topology::NumaTopology;
+use numasched::util::check::{forall_shrunk, PropResult, Shrink};
+use numasched::util::rng::Rng;
+use numasched::workloads::mix;
+
+/// A compressed, shrinkable event choice; decoded against a fixed comm
+/// pool so shrinking stays meaningful.
+#[derive(Clone, Debug)]
+struct Ev {
+    t: u16,
+    kind: u8,
+    a: u8,
+    b: u8,
+}
+
+impl Shrink for Ev {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        for t in self.t.shrink() {
+            out.push(Ev { t, ..self.clone() });
+        }
+        for kind in self.kind.shrink() {
+            out.push(Ev { kind, ..self.clone() });
+        }
+        for a in self.a.shrink() {
+            out.push(Ev { a, ..self.clone() });
+        }
+        for b in self.b.shrink() {
+            out.push(Ev { b, ..self.clone() });
+        }
+        out
+    }
+}
+
+const COMMS: [&str; 4] = ["w0", "w1", "w2", "daemon"];
+const HORIZON_TICKS: u32 = 1_200;
+
+fn gen_plan(rng: &mut Rng) -> Vec<Ev> {
+    let n = rng.below(8);
+    (0..n)
+        .map(|_| Ev {
+            t: rng.below(HORIZON_TICKS as usize) as u16,
+            kind: rng.below(6) as u8,
+            a: rng.below(16) as u8,
+            b: rng.below(100) as u8,
+        })
+        .collect()
+}
+
+fn decode(plan: &[Ev], nodes: usize) -> Vec<TimedEvent> {
+    plan.iter()
+        .map(|e| {
+            let comm = COMMS[e.a as usize % COMMS.len()].to_string();
+            let event = match e.kind % 6 {
+                0 => {
+                    let mut s = mix::churn_job("w0", 50.0 + e.b as f64 * 10.0);
+                    s.comm = comm;
+                    s.behavior.ws_pages = 1_000 + e.b as u64 * 100;
+                    s.threads = 1 + e.a as usize % 3;
+                    Event::Launch(s)
+                }
+                1 => Event::Exit { comm },
+                2 => {
+                    let mut b = TaskBehavior::mem_bound(f64::INFINITY);
+                    b.mem_intensity = e.b as f64 / 100.0;
+                    Event::PhaseShift { comm, behavior: b }
+                }
+                3 => Event::MemPressure {
+                    comm: format!("pressure-{}", e.a as usize % nodes),
+                    node: e.a as usize % nodes,
+                    pages: 500 + e.b as u64 * 50,
+                },
+                4 => Event::DaemonBurst {
+                    count: e.a as usize % 4,
+                    work_units: 20.0 + e.b as f64,
+                },
+                _ => Event::Fork { comm, children: e.a as usize % 3 },
+            };
+            TimedEvent::at(e.t as f64, event)
+        })
+        .collect()
+}
+
+fn small_machine(seed: u64) -> Machine {
+    Machine::new(
+        NumaTopology::from_config(&MachineConfig::preset("2node-8core").unwrap()),
+        seed,
+    )
+}
+
+/// Drive a machine + engine directly and check accounting invariants
+/// every few ticks.
+fn invariants_hold(plan: &[Ev]) -> PropResult {
+    let mut m = small_machine(7);
+    let nodes = m.topo.nodes;
+    let total_cores = m.topo.total_cores();
+    let mut engine = EventEngine::new(decode(plan, nodes));
+    // Seed population: two finite workers and a daemon.
+    let mut w = mix::churn_job("w0", 2_000.0);
+    w.behavior.ws_pages = 8_000;
+    m.spawn("w0", w.behavior.clone(), 1.0, 2, Placement::Node(0));
+    m.spawn("w1", w.behavior.clone(), 1.0, 2, Placement::Node(1));
+    m.spawn("daemon", TaskBehavior::mem_bound(f64::INFINITY), 0.3, 1, Placement::Node(0));
+
+    let mut expected_total: std::collections::BTreeMap<i32, u64> =
+        m.processes().map(|p| (p.pid, p.pages.total())).collect();
+    let mut mig_rng = Rng::new(99);
+
+    for tick in 0..HORIZON_TICKS {
+        engine.tick(&mut m);
+        // New arrivals (launch / pressure / burst / fork) join the
+        // conservation ledger at their spawn-time size.
+        for p in m.processes() {
+            expected_total.entry(p.pid).or_insert_with(|| p.pages.total());
+        }
+        m.step();
+
+        // Random migrations exercise the ledgers and the fingerprint.
+        if tick % 97 == 0 {
+            let pids: Vec<i32> = m.processes().map(|p| p.pid).collect();
+            if !pids.is_empty() {
+                let pid = *mig_rng.choice(&pids);
+                let target = mig_rng.below(nodes);
+                let (gen0, fp0) = {
+                    let p = m.process(pid).unwrap();
+                    (p.pages.generation(), p.pages.fingerprint())
+                };
+                let moved = m.migrate_pages(pid, target, mig_rng.below(5_000) as u64);
+                let p = m.process(pid).unwrap();
+                if moved > 0 {
+                    numasched::prop_assert!(
+                        p.pages.generation() != gen0,
+                        "tick {tick}: {moved} pages moved without a generation bump"
+                    );
+                    numasched::prop_assert!(
+                        p.pages.fingerprint() != fp0,
+                        "tick {tick}: {moved} pages moved without a fingerprint change"
+                    );
+                } else {
+                    numasched::prop_assert!(
+                        p.pages.generation() == gen0,
+                        "tick {tick}: zero-move bumped the generation"
+                    );
+                }
+            }
+        }
+
+        if tick % 50 != 0 {
+            continue;
+        }
+        // --- page conservation + fraction sanity ----------------------
+        for p in m.processes() {
+            let want = expected_total[&p.pid];
+            numasched::prop_assert!(
+                p.pages.total() == want,
+                "tick {tick}: pid {} ({}) holds {} pages, spawned with {want}",
+                p.pid,
+                p.comm,
+                p.pages.total()
+            );
+            let frac_sum: f64 = p.pages.fractions().iter().sum();
+            numasched::prop_assert!(
+                (frac_sum - 1.0).abs() < 1e-9 || p.pages.total() == 0,
+                "tick {tick}: pid {} fractions sum to {frac_sum}",
+                p.pid
+            );
+            // --- pin validity -----------------------------------------
+            if let Some(pin) = p.pinned_node {
+                numasched::prop_assert!(
+                    pin < nodes,
+                    "tick {tick}: pid {} pinned to offline node {pin}",
+                    p.pid
+                );
+            }
+        }
+        // --- ledger balance -------------------------------------------
+        let per_proc: u64 = m.processes().map(|p| p.pages.migrated_total).sum();
+        numasched::prop_assert!(
+            per_proc == m.total_pages_migrated,
+            "tick {tick}: machine ledger {} != per-process sum {per_proc}",
+            m.total_pages_migrated
+        );
+        // --- core-queue balance ---------------------------------------
+        let queued: usize = (0..total_cores).map(|c| m.core_load(c)).sum();
+        let running: usize = m
+            .processes()
+            .filter(|p| p.is_running())
+            .map(|p| p.nthreads())
+            .sum();
+        numasched::prop_assert!(
+            queued == running,
+            "tick {tick}: {queued} queued thread slots vs {running} running threads"
+        );
+    }
+    Ok(())
+}
+
+#[test]
+fn random_event_streams_preserve_simulator_invariants() {
+    forall_shrunk(
+        "scenario-invariants",
+        0xC0FFEE,
+        25,
+        gen_plan,
+        |plan: &Vec<Ev>| invariants_hold(plan),
+    );
+}
+
+#[test]
+fn random_event_streams_survive_the_full_pipeline() {
+    forall_shrunk(
+        "scenario-pipeline",
+        0xBEEF,
+        8,
+        gen_plan,
+        |plan: &Vec<Ev>| -> PropResult {
+            let params = RunParams {
+                machine: MachineConfig::preset("2node-8core").unwrap(),
+                scheduler: SchedulerConfig {
+                    policy: PolicyKind::Proposed,
+                    ..Default::default()
+                },
+                specs: vec![mix::churn_job("w0", 1_500.0)],
+                seed: 5,
+                horizon_ms: HORIZON_TICKS as f64,
+                window_ms: 250.0,
+                events: decode(plan, 2),
+                ..Default::default()
+            };
+            let r = runner::run(&params);
+            numasched::prop_assert!(
+                r.end_ms.is_finite() && r.end_ms > 0.0,
+                "non-finite end time"
+            );
+            for p in &r.procs {
+                numasched::prop_assert!(
+                    p.mean_speed.is_finite() && p.mean_speed >= 0.0,
+                    "{}: bad mean speed {}",
+                    p.comm,
+                    p.mean_speed
+                );
+                if let Some(rt) = p.runtime_ms {
+                    numasched::prop_assert!(
+                        rt.is_finite() && rt >= 0.0,
+                        "{}: bad runtime {rt}",
+                        p.comm
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
