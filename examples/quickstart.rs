@@ -36,8 +36,8 @@ fn main() {
         topo.bandwidth_gbs.clone(),
     );
     reporter.importance.insert("myapp".into(), 3.0);
-    let mut scheduler = UserScheduler::new(&SchedulerConfig::default());
-    scheduler.cores_per_node = topo.cores_per_node;
+    // The topology sizes the capacity guard — nothing to patch by hand.
+    let mut scheduler = UserScheduler::new(&SchedulerConfig::default(), &topo);
 
     // Drive everything on virtual time: sample every 10 ms, act on the
     // Reporter's signal.

@@ -8,8 +8,19 @@
 //! also tries to move the *task* to its memory. Crucially it is blind to
 //! user-space importance and to cross-application contention — exactly
 //! the gap the paper's user-level scheduler fills.
+//!
+//! Capacity, however, is no longer invisible: the balancer shares the
+//! scheduler's [`PlacementLedger`], so a task-follow that would
+//! overcommit a node's powerful-core slots with already-placed tasks
+//! falls back to pulling pages instead (Durbhakula, arXiv 1809.08628:
+//! capacity-blind migration erases NUMA gains). All three policies in
+//! the differential suite therefore account occupancy the same way.
 
+use std::collections::BTreeSet;
+
+use crate::scheduler::PlacementLedger;
 use crate::sim::Machine;
+use crate::topology::NumaTopology;
 
 /// The balancer's knobs (Linux defaults scaled to our virtual clock).
 pub struct AutoNuma {
@@ -20,10 +31,12 @@ pub struct AutoNuma {
     /// Page fraction on one node above which the task follows its memory.
     pub task_follow_threshold: f64,
     last_scan_ms: f64,
+    /// Shared occupancy accounting (tasks this balancer has placed).
+    ledger: PlacementLedger,
 }
 
 impl AutoNuma {
-    pub fn new(scan_ms: f64) -> Self {
+    pub fn new(scan_ms: f64, topo: &NumaTopology) -> Self {
         Self {
             scan_ms,
             pages_per_scan: 2560, // ~10 MB per scan: Linux's ratelimit scale
@@ -31,7 +44,28 @@ impl AutoNuma {
             // hinting faults — a plurality, not a supermajority.
             task_follow_threshold: 0.35,
             last_scan_ms: f64::NEG_INFINITY,
+            ledger: PlacementLedger::from_topology(topo),
         }
+    }
+
+    /// The shared occupancy view (read-only).
+    pub fn ledger(&self) -> &PlacementLedger {
+        &self.ledger
+    }
+
+    /// Crate-internal mutable access for the runner's churn routing.
+    pub(crate) fn ledger_mut(&mut self) -> &mut PlacementLedger {
+        &mut self.ledger
+    }
+
+    /// A pid exited (`Machine::kill` via the runner's event drain).
+    pub fn observe_exit(&mut self, pid: i32) {
+        self.ledger.on_exit(pid);
+    }
+
+    /// A pid appeared (fork/launch): clear recycled-pid leftovers.
+    pub fn observe_spawn(&mut self, pid: i32) {
+        self.ledger.on_spawn(pid);
     }
 
     /// Run one balancing opportunity; call every sim tick.
@@ -43,11 +77,19 @@ impl AutoNuma {
 
         let nodes = machine.topo.nodes;
         let cpn = machine.topo.cores_per_node;
-        let pids = machine.running_pids();
-        for pid in pids {
+        let live: BTreeSet<i32> = machine.running_pid_set();
+        self.ledger.sync_live(&live);
+        let total_threads: i64 = live
+            .iter()
+            .filter_map(|&pid| machine.process(pid))
+            .map(|p| p.nthreads() as i64)
+            .sum();
+        let thread_cap = self.ledger.thread_cap(total_threads);
+        for &pid in &live {
             let Some(p) = machine.process(pid) else { continue };
             // Where does the task run, where is its memory?
             let home = p.home_node(nodes, cpn);
+            let threads = p.nthreads() as i64;
             let fracs = p.pages.fractions();
             let (mem_node, mem_frac) = fracs
                 .iter()
@@ -56,14 +98,22 @@ impl AutoNuma {
                 .map(|(n, &f)| (n, f))
                 .unwrap_or((home, 0.0));
 
-            if mem_node != home && mem_frac >= self.task_follow_threshold {
+            // A task re-affirming its own placement always fits; anyone
+            // else must find free powerful-core slots on the target.
+            let follow_fits = match self.ledger.placement(pid) {
+                Some(pl) if pl.node == mem_node => true,
+                _ => self.ledger.fits(mem_node, threads, thread_cap),
+            };
+            if mem_node != home && mem_frac >= self.task_follow_threshold && follow_fits {
                 // task_numa_migrate: move the task to its memory, and set
                 // the numa-preferred node so the load balancer respects
                 // it (the kernel's numa_preferred_nid bias).
                 machine.pin_process(pid, mem_node);
+                self.ledger.record_placement(pid, mem_node, threads, false);
             } else {
                 // NUMA hinting faults: pull pages toward the CPU node,
-                // rate-limited.
+                // rate-limited. (Also the fallback when the follow would
+                // overcommit the memory node's slots.)
                 let remote: u64 = p
                     .pages
                     .per_node
@@ -102,7 +152,7 @@ mod tests {
             let total = p.pages.total();
             p.pages.per_node = vec![total * 2 / 5, total - total * 2 / 5, 0, 0];
         }
-        let mut an = AutoNuma::new(10.0);
+        let mut an = AutoNuma::new(10.0, &m.topo);
         for _ in 0..2000 {
             an.step(&mut m);
             m.step();
@@ -123,7 +173,7 @@ mod tests {
             let total = p.pages.total();
             p.pages.per_node = vec![total / 10, 0, total - total / 10, 0];
         }
-        let mut an = AutoNuma::new(10.0);
+        let mut an = AutoNuma::new(10.0, &m.topo);
         an.step(&mut m); // immediate scan
         let p = m.process(pid).unwrap();
         assert_eq!(p.home_node(4, 10), 2, "task should follow its memory");
@@ -138,9 +188,68 @@ mod tests {
             let total = p.pages.total();
             p.pages.per_node = vec![total / 2, total - total / 2, 0, 0];
         }
-        let mut an = AutoNuma::new(10.0);
+        let mut an = AutoNuma::new(10.0, &m.topo);
         an.step(&mut m);
         assert!(m.total_pages_migrated <= an.pages_per_scan);
+    }
+
+    #[test]
+    fn task_follow_is_capacity_gated_by_the_shared_ledger() {
+        // Three 4-thread tasks on node 0, all with memory stranded on
+        // node 2. thread_cap = ceil(12/4) + 10*0.2 = 5: the first follow
+        // fits (4 <= 5), the rest would overcommit node 2 and must fall
+        // back to pulling pages home instead of stacking tasks.
+        let mut m = machine();
+        let mut pids = Vec::new();
+        for i in 0..3 {
+            let pid = m.spawn(
+                &format!("w{i}"),
+                TaskBehavior::mem_bound(1e9),
+                1.0,
+                4,
+                Placement::Node(0),
+            );
+            let p = m.process_mut(pid).unwrap();
+            let total = p.pages.total();
+            p.pages.per_node = vec![0, 0, total, 0];
+            pids.push(pid);
+        }
+        let mut an = AutoNuma::new(10.0, &m.topo);
+        an.step(&mut m);
+        let homes: Vec<usize> = pids
+            .iter()
+            .map(|&p| m.process(p).unwrap().home_node(4, 10))
+            .collect();
+        assert_eq!(homes[0], 2, "first follow fits the slots");
+        assert_eq!(homes[1], 0, "second follow would overcommit — blocked");
+        assert_eq!(homes[2], 0, "third follow blocked too");
+        assert_eq!(an.ledger().occupied(2), 4, "one placed task on node 2");
+        assert!(
+            m.total_pages_migrated > 0,
+            "blocked tasks still pull pages toward home"
+        );
+        an.ledger()
+            .check_invariants(&pids.iter().copied().collect())
+            .unwrap();
+    }
+
+    #[test]
+    fn ledger_prunes_dead_pids_between_scans() {
+        let mut m = machine();
+        let pid = m.spawn("w", TaskBehavior::mem_bound(1e9), 1.0, 2, Placement::Node(0));
+        {
+            let p = m.process_mut(pid).unwrap();
+            let total = p.pages.total();
+            p.pages.per_node = vec![0, 0, total, 0];
+        }
+        let mut an = AutoNuma::new(10.0, &m.topo);
+        an.step(&mut m);
+        assert!(an.ledger().placement(pid).is_some());
+        m.kill(pid);
+        an.observe_exit(pid); // the runner's wiring
+        assert!(an.ledger().placement(pid).is_none());
+        assert_eq!(an.ledger().occupied(2), 0);
+        an.ledger().check_invariants(&Default::default()).unwrap();
     }
 
     #[test]
@@ -151,7 +260,7 @@ mod tests {
             let p = m.process_mut(pid).unwrap();
             p.pages.per_node = vec![500, 500, 0, 0];
         }
-        let mut an = AutoNuma::new(100.0);
+        let mut an = AutoNuma::new(100.0, &m.topo);
         an.step(&mut m); // scan at t=0
         let after_first = m.total_pages_migrated;
         m.step(); // t=1ms

@@ -11,9 +11,13 @@
 //! and phases move.
 
 use crate::config::StaticPin;
+use crate::scheduler::PlacementLedger;
 use crate::sim::Machine;
 
-/// Apply explicit admin pins (comm -> node) to all matching processes.
+/// Apply explicit admin pins (comm -> node) to all matching processes,
+/// recording each one in the shared placement ledger — an admin pin
+/// occupies powerful-core slots exactly like a scheduler placement, so
+/// every policy reasons from the same occupancy view.
 ///
 /// `bind_memory = false` models the paper's Static Tuning baseline: the
 /// CPU-affinity technique (taskset) that "statically fixes tasks into a
@@ -21,7 +25,12 @@ use crate::sim::Machine;
 /// utilization" — pages stay where first-touch left them. `true` models
 /// the diligent `numactl --membind` admin (used for explicit config pins
 /// and the round-robin helper).
-pub fn apply_pins(machine: &mut Machine, pins: &[StaticPin], bind_memory: bool) {
+pub fn apply_pins(
+    machine: &mut Machine,
+    pins: &[StaticPin],
+    bind_memory: bool,
+    ledger: &mut PlacementLedger,
+) {
     let pids = machine.running_pids();
     for pid in pids {
         let Some(p) = machine.process(pid) else { continue };
@@ -30,7 +39,9 @@ pub fn apply_pins(machine: &mut Machine, pins: &[StaticPin], bind_memory: bool) 
         };
         let node = pin.node;
         let rss = p.pages.total();
+        let threads = p.nthreads() as i64;
         machine.pin_process(pid, node);
+        ledger.record_placement(pid, node, threads, true);
         if bind_memory {
             machine.migrate_pages(pid, node, rss);
         }
@@ -38,19 +49,25 @@ pub fn apply_pins(machine: &mut Machine, pins: &[StaticPin], bind_memory: bool) 
 }
 
 /// The "competent admin" assignment: walk processes in pid order and
-/// round-robin them across nodes, pinning threads and memory together.
-/// Returns the generated pin list (for logging).
-pub fn round_robin_pins(machine: &mut Machine) -> Vec<StaticPin> {
+/// fill each one onto the node the shared ledger shows least occupied
+/// (capacity-aware round-robin; ties break toward the lowest node id,
+/// so equal-thread workloads spread exactly like the old index modulo).
+/// Threads and memory pin together. Returns the generated pin list.
+pub fn round_robin_pins(machine: &mut Machine, ledger: &mut PlacementLedger) -> Vec<StaticPin> {
     let nodes = machine.topo.nodes;
     let mut out = Vec::new();
     let pids = machine.running_pids();
-    for (i, pid) in pids.into_iter().enumerate() {
-        let node = i % nodes;
+    for pid in pids {
+        let node = (0..nodes)
+            .min_by_key(|&n| (ledger.occupied(n), n))
+            .expect("topology has nodes");
         let Some(p) = machine.process(pid) else { continue };
         let comm = p.comm.clone();
         let rss = p.pages.total();
+        let threads = p.nthreads() as i64;
         machine.pin_process(pid, node);
         machine.migrate_pages(pid, node, rss);
+        ledger.record_placement(pid, node, threads, true);
         out.push(StaticPin { process: comm, node });
     }
     out
@@ -66,30 +83,42 @@ mod tests {
         Machine::new(NumaTopology::r910_40core(), 9)
     }
 
+    fn ledger(m: &Machine) -> PlacementLedger {
+        PlacementLedger::from_topology(&m.topo)
+    }
+
     #[test]
     fn apply_pins_moves_threads_and_memory() {
         let mut m = machine();
         let pid = m.spawn("mysqld", TaskBehavior::mem_bound(1e9), 1.0, 4, Placement::Node(0));
+        let mut l = ledger(&m);
         apply_pins(
             &mut m,
             &[StaticPin { process: "mysqld".into(), node: 2 }],
             true,
+            &mut l,
         );
         let p = m.process(pid).unwrap();
         assert_eq!(p.home_node(4, 10), 2);
         assert_eq!(p.pinned_node, Some(2));
         let fr = p.pages.fractions();
         assert!(fr[2] > 0.99, "memory should be bound: {fr:?}");
+        // The pin occupies powerful-core slots in the shared view.
+        assert_eq!(l.occupied(2), 4);
+        assert_eq!(l.placement(pid).map(|pl| pl.pinned), Some(true));
+        l.check_invariants(&[pid].into_iter().collect()).unwrap();
     }
 
     #[test]
     fn cpu_only_pins_leave_memory_behind() {
         let mut m = machine();
         let pid = m.spawn("mysqld", TaskBehavior::mem_bound(1e9), 1.0, 4, Placement::Node(0));
+        let mut l = ledger(&m);
         apply_pins(
             &mut m,
             &[StaticPin { process: "mysqld".into(), node: 2 }],
             false,
+            &mut l,
         );
         let p = m.process(pid).unwrap();
         assert_eq!(p.home_node(4, 10), 2);
@@ -103,10 +132,12 @@ mod tests {
     fn apply_pins_ignores_unmatched_comms() {
         let mut m = machine();
         let pid = m.spawn("other", TaskBehavior::cpu_bound(1e9), 1.0, 2, Placement::Node(1));
-        apply_pins(&mut m, &[StaticPin { process: "mysqld".into(), node: 2 }], true);
+        let mut l = ledger(&m);
+        apply_pins(&mut m, &[StaticPin { process: "mysqld".into(), node: 2 }], true, &mut l);
         let p = m.process(pid).unwrap();
         assert_eq!(p.pinned_node, None);
         assert_eq!(p.home_node(4, 10), 1);
+        assert_eq!(l.placed_count(), 0);
     }
 
     #[test]
@@ -115,15 +146,37 @@ mod tests {
         for i in 0..8 {
             m.spawn(&format!("w{i}"), TaskBehavior::cpu_bound(1e9), 1.0, 2, Placement::LeastLoaded);
         }
-        let pins = round_robin_pins(&mut m);
+        let mut l = ledger(&m);
+        let pins = round_robin_pins(&mut m, &mut l);
         assert_eq!(pins.len(), 8);
         // Two processes per node on the 4-node box.
         for node in 0..4 {
             assert_eq!(pins.iter().filter(|p| p.node == node).count(), 2);
+            assert_eq!(l.occupied(node), 4, "ledger mirrors the spread");
         }
         // Every process actually pinned.
         for p in m.processes() {
             assert!(p.pinned_node.is_some());
         }
+    }
+
+    #[test]
+    fn round_robin_balances_uneven_thread_counts() {
+        // A fat 8-thread service plus three 2-thread workers: the
+        // ledger-driven admin packs the workers onto the emptier nodes
+        // instead of blindly cycling by index past the fat pin.
+        let mut m = machine();
+        m.spawn("fat", TaskBehavior::cpu_bound(1e9), 1.0, 8, Placement::LeastLoaded);
+        for i in 0..3 {
+            m.spawn(&format!("w{i}"), TaskBehavior::cpu_bound(1e9), 1.0, 2, Placement::LeastLoaded);
+        }
+        let mut l = ledger(&m);
+        let pins = round_robin_pins(&mut m, &mut l);
+        assert_eq!(pins[0].node, 0, "fat lands first on node 0");
+        assert_eq!(l.occupied(0), 8);
+        for node in 1..4 {
+            assert_eq!(l.occupied(node), 2, "workers avoid the fat node");
+        }
+        l.check_invariants(&m.processes().map(|p| p.pid).collect()).unwrap();
     }
 }

@@ -84,8 +84,7 @@ pub fn run_point(thp_fraction: f64, seed: u64) -> AblationPoint {
     reporter.importance.insert("victim".into(), 5.0);
     let mut cfg = SchedulerConfig::default();
     cfg.migration_cooldown_ms = 100;
-    let mut sched = UserScheduler::new(&cfg);
-    sched.cores_per_node = machine_cfg.cores_per_node;
+    let mut sched = UserScheduler::new(&cfg, &topo);
 
     let mut measured_thp = 0.0;
     let mut snap = Snapshot::default();

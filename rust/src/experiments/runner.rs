@@ -14,8 +14,8 @@ use crate::baselines::{autonuma::AutoNuma, static_tuning};
 use crate::config::{MachineConfig, PolicyKind, SchedulerConfig};
 use crate::monitor::{Monitor, SampleBufs, Snapshot};
 use crate::reporter::{Backend, Reporter};
-use crate::scenario::{EventEngine, ScenarioTrace, TimedEvent};
-use crate::scheduler::UserScheduler;
+use crate::scenario::{EventEngine, FiredEvent, PidFate, ScenarioTrace, TimedEvent};
+use crate::scheduler::{PlacementLedger, UserScheduler};
 use crate::sim::{Machine, Placement};
 use crate::topology::NumaTopology;
 use crate::util::stats::Running;
@@ -161,6 +161,13 @@ fn run_inner(params: &RunParams, mut trace: Option<&mut ScenarioTrace>) -> RunRe
         Default::default()
     };
 
+    // Static Tuning mirrors its admin pins into the scheduler's ledger
+    // machinery so the churn invariants below cover all three policies.
+    // Debug builds only: nothing reads the mirror mid-run (pins make no
+    // further capacity decisions), so release runs skip it entirely.
+    let mut static_ledger = (cfg!(debug_assertions) && policy == PolicyKind::StaticTuning)
+        .then(|| PlacementLedger::from_topology(&topo));
+
     // Launch: pinned apps start on their node (local first touch);
     // everything else is placed NUMA-blind by the OS default.
     let pids: Vec<i32> = params
@@ -175,13 +182,19 @@ fn run_inner(params: &RunParams, mut trace: Option<&mut ScenarioTrace>) -> RunRe
                                     s.threads, placement);
             if let Some(&node) = pin_plan.get(&s.comm) {
                 machine.pin_process(pid, node);
+                if let Some(ledger) = static_ledger.as_mut() {
+                    ledger.record_placement(pid, node, s.threads as i64, true);
+                }
             }
             pid
         })
         .collect();
 
     let mut autonuma = match policy {
-        PolicyKind::AutoNuma => Some(AutoNuma::new(params.scheduler.autonuma_scan_ms as f64)),
+        PolicyKind::AutoNuma => Some(AutoNuma::new(
+            params.scheduler.autonuma_scan_ms as f64,
+            &topo,
+        )),
         _ => None,
     };
     let _ = static_tuning::apply_pins; // explicit-pin path is covered above
@@ -249,8 +262,7 @@ fn run_inner(params: &RunParams, mut trace: Option<&mut ScenarioTrace>) -> RunRe
                 reporter.importance.insert(format!("{comm}-kid"), w);
             }
         }
-        let mut scheduler = UserScheduler::new(&params.scheduler);
-        scheduler.cores_per_node = params.machine.cores_per_node;
+        let scheduler = UserScheduler::new(&params.scheduler, &topo);
         Some((monitor, reporter, scheduler))
     } else {
         None
@@ -286,6 +298,19 @@ fn run_inner(params: &RunParams, mut trace: Option<&mut ScenarioTrace>) -> RunRe
         engine.tick(&mut machine);
         if engine.has_fired() {
             let fired = engine.drain_fired();
+            // Mirror churn into the policies' placement ledgers: an Exit
+            // (Machine::kill) prunes the dead pids' cooldown/placement
+            // state, and every spawning event (launch, fork, pressure,
+            // burst) clears anything a recycled pid number would
+            // otherwise inherit.
+            for f in &fired {
+                observe_churn(
+                    f,
+                    proposed.as_mut().map(|(_, _, s)| s),
+                    autonuma.as_mut(),
+                    static_ledger.as_mut(),
+                );
+            }
             if let Some(tr) = trace.as_deref_mut() {
                 for f in &fired {
                     tr.push_event(f);
@@ -309,8 +334,22 @@ fn run_inner(params: &RunParams, mut trace: Option<&mut ScenarioTrace>) -> RunRe
             }
             if machine.now_ms >= next_report {
                 next_report += report_period;
-                if let Some(report) = pending_report.take() {
+                if let Some(mut report) = pending_report.take() {
+                    // The report was sampled up to one report period
+                    // ago; scenario events may have killed pids since.
+                    // Drop them, so a stale roster can neither resurrect
+                    // ledger state the churn wiring just pruned nor
+                    // issue control calls on finished processes.
+                    report
+                        .by_speedup
+                        .retain(|r| machine.process(r.pid).is_some_and(|p| p.is_running()));
                     let executed = scheduler.apply(&report, &mut machine);
+                    // Epoch oracle: the capacity view must be internally
+                    // consistent and hold state only for the report's
+                    // roster (debug builds; the scenario-smoke CI job
+                    // runs the property suite with this armed).
+                    #[cfg(debug_assertions)]
+                    scheduler.assert_ledger_invariants(report.by_speedup.iter().map(|t| t.pid));
                     if let Some(tr) = trace.as_deref_mut() {
                         for d in &executed {
                             tr.push_decision(d);
@@ -322,6 +361,15 @@ fn run_inner(params: &RunParams, mut trace: Option<&mut ScenarioTrace>) -> RunRe
 
         if machine.now_ms >= next_window {
             next_window += params.window_ms;
+            // Keep the static admin's occupancy view in sync with churn
+            // (natural completions have no Exit event) and hold it to
+            // the same invariants as the proposed policy's ledger.
+            // `static_ledger` is None in release builds.
+            if let Some(ledger) = static_ledger.as_mut() {
+                let live = machine.running_pid_set();
+                ledger.sync_live(&live);
+                ledger.assert_invariants(&live);
+            }
             // Skip the first window (warmup).
             let work = machine.drain_window_work();
             if machine.now_ms > params.window_ms * 1.5 {
@@ -385,6 +433,33 @@ fn run_inner(params: &RunParams, mut trace: Option<&mut ScenarioTrace>) -> RunRe
         scheduler_decisions,
         epoch_ns,
         end_ms: machine.now_ms,
+    }
+}
+
+/// Route one fired scenario event's pids into whatever placement
+/// ledgers the active policy keeps. The exited-vs-spawned call comes
+/// from [`FiredEvent::pid_fate`] — one classifier shared with the
+/// property suites, so a new event kind cannot be wired differently in
+/// the runner and the tests that watch for leaks.
+fn observe_churn(
+    fired: &FiredEvent,
+    scheduler: Option<&mut UserScheduler>,
+    autonuma: Option<&mut AutoNuma>,
+    static_ledger: Option<&mut PlacementLedger>,
+) {
+    let Some(fate) = fired.pid_fate() else { return };
+    let ledgers = [
+        scheduler.map(UserScheduler::ledger_mut),
+        autonuma.map(AutoNuma::ledger_mut),
+        static_ledger,
+    ];
+    for ledger in ledgers.into_iter().flatten() {
+        for &pid in &fired.pids {
+            match fate {
+                PidFate::Exited => ledger.on_exit(pid),
+                PidFate::Spawned => ledger.on_spawn(pid),
+            }
+        }
     }
 }
 

@@ -210,8 +210,11 @@ impl Reporter {
                 tr.node_prev = task.node;
             }
         }
-        // Drop vanished pids.
-        let live: Vec<i32> = snap.tasks.iter().map(|t| t.pid).collect();
+        // Drop vanished pids (set lookups — the same churn-pruning
+        // idiom as the scheduler's placement ledger, not an O(n·m)
+        // `Vec::contains` scan per sample).
+        let live: std::collections::BTreeSet<i32> =
+            snap.tasks.iter().map(|t| t.pid).collect();
         let before = self.tracked.len();
         self.tracked.retain(|pid, _| live.contains(pid));
         if self.tracked.len() != before {

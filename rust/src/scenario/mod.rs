@@ -82,6 +82,23 @@ impl Event {
             Event::Fork { .. } => "fork",
         }
     }
+
+    /// Effect on the pids this event will list when it fires; `None`
+    /// for kinds that mutate running processes in place. Exhaustive
+    /// over the enum, so a new event kind is a compile error here until
+    /// its ledger semantics are decided — a silent default would let an
+    /// in-place kind wipe live placement state as if its pids were
+    /// fresh.
+    pub fn pid_fate(&self) -> Option<PidFate> {
+        match self {
+            Event::Exit { .. } => Some(PidFate::Exited),
+            Event::PhaseShift { .. } => None,
+            Event::Launch(_)
+            | Event::MemPressure { .. }
+            | Event::DaemonBurst { .. }
+            | Event::Fork { .. } => Some(PidFate::Spawned),
+        }
+    }
 }
 
 /// An event pinned to a virtual-time instant.
@@ -109,6 +126,31 @@ pub struct FiredEvent {
     pub pids: Vec<i32>,
     pub node: Option<usize>,
     pub pages: Option<u64>,
+    /// Effect on `pids`, classified once at fire time by the
+    /// compile-time-exhaustive [`Event::pid_fate`]. Not serialized into
+    /// traces (derivable from `kind`).
+    pub fate: Option<PidFate>,
+}
+
+/// What a fired event did to its pid list — the classification every
+/// placement-ledger consumer (runner churn wiring, property suites)
+/// must agree on, decided per [`Event`] variant so a new event kind
+/// cannot be classified one way in the runner and another in the tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PidFate {
+    /// The pids were just killed (`Machine::kill`).
+    Exited,
+    /// The pids are fresh processes (`Machine::fork`, launches, bursts,
+    /// pressure hogs) whose numbers must start with a clean slate.
+    Spawned,
+}
+
+impl FiredEvent {
+    /// Classify this event's effect on its pids; `None` for kinds that
+    /// mutate running processes in place (`phase_shift`).
+    pub fn pid_fate(&self) -> Option<PidFate> {
+        self.fate
+    }
 }
 
 /// Fires a sorted event timeline into a [`Machine`] as its clock passes
@@ -183,6 +225,7 @@ impl EventEngine {
     fn fire(&mut self, ev: &TimedEvent, m: &mut Machine) {
         let t_ms = m.now_ms;
         let kind = ev.event.kind();
+        let fate = ev.event.pid_fate();
         let fired = match &ev.event {
             Event::Launch(spec) => {
                 let pid = m.spawn(
@@ -195,6 +238,7 @@ impl EventEngine {
                 FiredEvent {
                     t_ms,
                     kind,
+                    fate,
                     comm: spec.comm.clone(),
                     pids: vec![pid],
                     node: None,
@@ -209,6 +253,7 @@ impl EventEngine {
                 FiredEvent {
                     t_ms,
                     kind,
+                    fate,
                     comm: comm.clone(),
                     pids,
                     node: None,
@@ -231,6 +276,7 @@ impl EventEngine {
                 FiredEvent {
                     t_ms,
                     kind,
+                    fate,
                     comm: comm.clone(),
                     pids,
                     node: None,
@@ -255,6 +301,7 @@ impl EventEngine {
                 FiredEvent {
                     t_ms,
                     kind,
+                    fate,
                     comm: comm.clone(),
                     pids: vec![pid],
                     node: Some(*node),
@@ -287,6 +334,7 @@ impl EventEngine {
                 FiredEvent {
                     t_ms,
                     kind,
+                    fate,
                     comm: "burst".into(),
                     pids,
                     node: None,
@@ -307,6 +355,7 @@ impl EventEngine {
                 FiredEvent {
                     t_ms,
                     kind,
+                    fate,
                     comm: comm.clone(),
                     pids,
                     node: None,
@@ -492,6 +541,32 @@ mod tests {
         assert_eq!(fired.len(), 2);
         assert_eq!(fired[0].kind, "fork");
         assert_eq!(fired[1].kind, "daemon_burst");
+    }
+
+    #[test]
+    fn pid_fate_classifies_every_event_kind() {
+        assert_eq!(Event::Exit { comm: "x".into() }.pid_fate(), Some(PidFate::Exited));
+        let shift = Event::PhaseShift {
+            comm: "x".into(),
+            behavior: TaskBehavior::mem_bound(1.0),
+        };
+        assert_eq!(shift.pid_fate(), None);
+        let spawned = [
+            Event::Launch(launch_spec("a")),
+            Event::MemPressure { comm: "p".into(), node: 0, pages: 1 },
+            Event::DaemonBurst { count: 1, work_units: 1.0 },
+            Event::Fork { comm: "x".into(), children: 1 },
+        ];
+        for ev in spawned {
+            assert_eq!(ev.pid_fate(), Some(PidFate::Spawned), "{}", ev.kind());
+        }
+        // fire() stamps the classification onto the FiredEvent record.
+        let mut m = small_machine();
+        m.spawn("web", TaskBehavior::mem_bound(1e9), 1.0, 1, Placement::Node(0));
+        let mut e =
+            EventEngine::new(vec![TimedEvent::at(0.0, Event::Exit { comm: "web".into() })]);
+        e.tick(&mut m);
+        assert_eq!(e.drain_fired()[0].pid_fate(), Some(PidFate::Exited));
     }
 
     #[test]

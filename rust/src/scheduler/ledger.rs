@@ -1,0 +1,386 @@
+//! The placement ledger — one consistent occupancy view for every
+//! placement policy.
+//!
+//! Algorithm 3 gates each move on powerful-core slots computed from the
+//! load-balanced memory policy, which only works if the accounting
+//! behind those slots is right. The seed scheduler scattered that state
+//! across ad-hoc fields (`placed`, `pinned_threads`, `last_move_ms`,
+//! `projected`, a hardcoded `cores_per_node`) with three failure modes:
+//! statically pinned tasks never counted against a node's slots, per-pid
+//! cooldown/placement entries leaked across process churn (a recycled
+//! pid inherited a dead process's cooldown window and phantom
+//! placement), and every call site had to remember to patch
+//! `cores_per_node` after construction.
+//!
+//! `PlacementLedger` owns all of it. It is constructed from
+//! [`NumaTopology`] (no hardcoded core counts), counts static pins
+//! against slots like any other placement, prunes state on pid exit and
+//! clears it on pid (re)spawn — wired to `Machine::kill` / `Machine::fork`
+//! through the runner's event drain — and exposes
+//! [`check_invariants`](PlacementLedger::check_invariants) /
+//! [`assert_invariants`](PlacementLedger::assert_invariants) as the
+//! oracle the scenario property suite drives under churn. The baselines
+//! (`baselines::autonuma`, `baselines::static_tuning`) share the same
+//! type, so all three policies in the differential suite make capacity
+//! decisions from one view instead of three private approximations.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::topology::NumaTopology;
+
+/// One placement on record: where a policy put a task.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Placed {
+    pub node: usize,
+    pub threads: i64,
+    /// Admin static pin: exempt from auto-moves, but it occupies
+    /// powerful-core slots exactly like a scheduler placement.
+    pub pinned: bool,
+}
+
+/// Occupancy, cooldown, and per-epoch demand-projection accounting.
+///
+/// Only *placed* tasks count against a node's slots — unplaced load
+/// floats and the OS balancer spreads it around the placements.
+#[derive(Clone, Debug)]
+pub struct PlacementLedger {
+    nodes: usize,
+    cores_per_node: usize,
+    /// pid -> placement. The single source of truth `occupied` caches.
+    placed: BTreeMap<i32, Placed>,
+    /// pid -> last migration instant, virtual ms (cooldown state).
+    last_move_ms: BTreeMap<i32, f64>,
+    /// Threads placed per node, kept incrementally in sync with `placed`.
+    occupied: Vec<i64>,
+    /// Epoch-scoped projected controller demand (reset by `begin_epoch`,
+    /// bumped by accepted moves so one epoch cannot stampede a node).
+    projected: Vec<f64>,
+}
+
+impl PlacementLedger {
+    /// Build from the machine's topology — the only constructor policies
+    /// should use; it is what kills per-call-site core-count patching.
+    pub fn from_topology(topo: &NumaTopology) -> Self {
+        Self::with_shape(topo.nodes, topo.cores_per_node)
+    }
+
+    /// Explicit-shape constructor (tests, synthetic policies).
+    pub fn with_shape(nodes: usize, cores_per_node: usize) -> Self {
+        assert!(nodes > 0, "ledger needs at least one node");
+        assert!(cores_per_node > 0, "ledger needs cores per node");
+        Self {
+            nodes,
+            cores_per_node,
+            placed: BTreeMap::new(),
+            last_move_ms: BTreeMap::new(),
+            occupied: vec![0; nodes],
+            projected: Vec::new(),
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    pub fn cores_per_node(&self) -> usize {
+        self.cores_per_node
+    }
+
+    /// Threads placed on `node` (static pins included).
+    pub fn occupied(&self, node: usize) -> i64 {
+        self.occupied.get(node).copied().unwrap_or(0)
+    }
+
+    pub fn placement(&self, pid: i32) -> Option<Placed> {
+        self.placed.get(&pid).copied()
+    }
+
+    pub fn placed_count(&self) -> usize {
+        self.placed.len()
+    }
+
+    /// Record that a policy placed `pid` (`threads` threads) on `node`.
+    /// Re-placing a pid moves its occupancy; it never double-counts.
+    pub fn record_placement(&mut self, pid: i32, node: usize, threads: i64, pinned: bool) {
+        assert!(node < self.nodes, "placement on offline node {node}");
+        assert!(threads >= 0, "negative thread count for pid {pid}");
+        if let Some(old) = self.placed.insert(pid, Placed { node, threads, pinned }) {
+            self.occupied[old.node] -= old.threads;
+        }
+        self.occupied[node] += threads;
+    }
+
+    /// Start `pid`'s migration cooldown window at `t_ms`.
+    pub fn record_move_time(&mut self, pid: i32, t_ms: f64) {
+        self.last_move_ms.insert(pid, t_ms);
+    }
+
+    pub fn in_cooldown(&self, pid: i32, now_ms: f64, cooldown_ms: f64) -> bool {
+        self.last_move_ms.get(&pid).is_some_and(|&last| now_ms - last < cooldown_ms)
+    }
+
+    /// Forget everything about an exited pid (`Machine::kill`, natural
+    /// completion). Without this, cooldown and placement state leak
+    /// unboundedly across long scenario runs — and a recycled pid
+    /// inherits a dead process's cooldown window.
+    pub fn on_exit(&mut self, pid: i32) {
+        if let Some(p) = self.placed.remove(&pid) {
+            self.occupied[p.node] -= p.threads;
+        }
+        self.last_move_ms.remove(&pid);
+    }
+
+    /// A fresh pid appeared (`Machine::fork`/spawn). Identical effect to
+    /// [`on_exit`](Self::on_exit), but the call sites differ: this is
+    /// the defensive clear that guarantees a recycled pid number starts
+    /// with no inherited state even when the exit was never observed.
+    pub fn on_spawn(&mut self, pid: i32) {
+        self.on_exit(pid);
+    }
+
+    /// Drop state for every pid not in `live` — set lookups, not the
+    /// O(n·m) `Vec::contains` retain scan the seed scheduler ran per
+    /// epoch.
+    pub fn sync_live(&mut self, live: &BTreeSet<i32>) {
+        let occupied = &mut self.occupied;
+        self.placed.retain(|pid, p| {
+            let keep = live.contains(pid);
+            if !keep {
+                occupied[p.node] -= p.threads;
+            }
+            keep
+        });
+        self.last_move_ms.retain(|pid, _| live.contains(pid));
+    }
+
+    /// Powerful-core slot bound under the load-balanced memory policy:
+    /// placements on one node may not exceed the balanced per-node share
+    /// plus a small slack of the node's own cores.
+    pub fn thread_cap(&self, total_threads: i64) -> i64 {
+        ((total_threads as f64 / self.nodes as f64).ceil()
+            + self.cores_per_node as f64 * 0.2)
+            .ceil() as i64
+    }
+
+    /// Would `threads` more placed threads still fit on `node`?
+    pub fn fits(&self, node: usize, threads: i64, thread_cap: i64) -> bool {
+        self.occupied(node) + threads <= thread_cap
+    }
+
+    // ------------------------------------------------ epoch projection
+
+    /// Reset the per-epoch demand projection to the Reporter's estimate.
+    pub fn begin_epoch(&mut self, node_demand: &[f64]) {
+        self.projected.clear();
+        self.projected.extend_from_slice(node_demand);
+        self.projected.resize(self.nodes, 0.0);
+    }
+
+    pub fn projected(&self, node: usize) -> f64 {
+        self.projected.get(node).copied().unwrap_or(0.0)
+    }
+
+    pub fn hottest_projection(&self) -> f64 {
+        self.projected.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Account an accepted move: demand follows the task to `to`, and
+    /// `from` sheds it (clamped at zero — projections stay non-negative).
+    pub fn project_move(&mut self, from: usize, to: usize, mem_intensity: f64) {
+        if to < self.projected.len() {
+            self.projected[to] += mem_intensity;
+        }
+        if from < self.projected.len() {
+            self.projected[from] = (self.projected[from] - mem_intensity).max(0.0);
+        }
+    }
+
+    // ------------------------------------------------------ invariants
+
+    /// The oracle: every structural property the accounting must uphold,
+    /// checked against the set of pids that are allowed to hold state.
+    ///
+    /// * `occupied` equals the per-node sum over `placed` (no drift);
+    /// * no placement targets an offline node or carries negative threads;
+    /// * demand projections are finite and non-negative;
+    /// * no placement or cooldown entry survives its pid's death.
+    pub fn check_invariants(&self, live: &BTreeSet<i32>) -> Result<(), String> {
+        let mut want = vec![0i64; self.nodes];
+        for (pid, p) in &self.placed {
+            if p.node >= self.nodes {
+                return Err(format!("pid {pid} placed on offline node {}", p.node));
+            }
+            if p.threads < 0 {
+                return Err(format!("pid {pid} placed with {} threads", p.threads));
+            }
+            if !live.contains(pid) {
+                return Err(format!("dead pid {pid} still holds a placement"));
+            }
+            want[p.node] += p.threads;
+        }
+        if want != self.occupied {
+            return Err(format!(
+                "occupancy drift: cached {:?} != recomputed {want:?}",
+                self.occupied
+            ));
+        }
+        for pid in self.last_move_ms.keys() {
+            if !live.contains(pid) {
+                return Err(format!("dead pid {pid} still holds a cooldown window"));
+            }
+        }
+        for (n, &x) in self.projected.iter().enumerate() {
+            if !x.is_finite() || x < 0.0 {
+                return Err(format!("projection for node {n} is {x}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Panicking wrapper over [`check_invariants`](Self::check_invariants)
+    /// — what the runner's epoch loop calls under `debug_assertions`.
+    pub fn assert_invariants(&self, live: &BTreeSet<i32>) {
+        if let Err(e) = self.check_invariants(live) {
+            panic!("placement-ledger invariant violated: {e}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn live(pids: &[i32]) -> BTreeSet<i32> {
+        pids.iter().copied().collect()
+    }
+
+    fn ledger() -> PlacementLedger {
+        PlacementLedger::from_topology(&NumaTopology::r910_40core())
+    }
+
+    #[test]
+    fn construction_takes_shape_from_topology() {
+        let l = ledger();
+        assert_eq!(l.nodes(), 4);
+        assert_eq!(l.cores_per_node(), 10);
+        // The seed's hardcoded 10 came from this box; a different box
+        // must yield a different cap — no post-construction patching.
+        let small = PlacementLedger::with_shape(2, 4);
+        assert_eq!(small.thread_cap(2), 2); // ceil(2/2) + ceil(0.8)
+        assert_eq!(l.thread_cap(2), 3); // ceil(2/4) + 10 * 0.2
+    }
+
+    #[test]
+    fn static_pins_count_against_slots() {
+        let mut l = ledger();
+        l.record_placement(1, 2, 6, true);
+        assert_eq!(l.occupied(2), 6);
+        let cap = l.thread_cap(8);
+        // ceil(8/4) + 2 = 4: the pinned 6 threads already overflow it.
+        assert!(!l.fits(2, 1, cap), "pin must occupy powerful-core slots");
+        assert!(l.fits(1, 1, cap), "other nodes unaffected");
+    }
+
+    #[test]
+    fn replacement_moves_occupancy_without_double_counting() {
+        let mut l = ledger();
+        l.record_placement(7, 0, 3, false);
+        l.record_placement(7, 1, 3, false);
+        assert_eq!(l.occupied(0), 0);
+        assert_eq!(l.occupied(1), 3);
+        l.record_placement(7, 1, 5, false); // thread count grew in place
+        assert_eq!(l.occupied(1), 5);
+        l.check_invariants(&live(&[7])).unwrap();
+    }
+
+    #[test]
+    fn exit_prunes_placement_and_cooldown() {
+        let mut l = ledger();
+        l.record_placement(9, 3, 2, false);
+        l.record_move_time(9, 100.0);
+        assert!(l.in_cooldown(9, 150.0, 500.0));
+        l.on_exit(9);
+        assert_eq!(l.occupied(3), 0);
+        assert_eq!(l.placement(9), None);
+        assert!(!l.in_cooldown(9, 150.0, 500.0), "cooldown died with the pid");
+        l.check_invariants(&live(&[])).unwrap();
+    }
+
+    #[test]
+    fn spawn_clears_state_a_recycled_pid_would_inherit() {
+        let mut l = ledger();
+        l.record_placement(42, 1, 4, false);
+        l.record_move_time(42, 900.0);
+        // Pid 42 dies unobserved; the number is recycled by a fork.
+        l.on_spawn(42);
+        assert_eq!(l.placement(42), None, "no phantom placement");
+        assert!(!l.in_cooldown(42, 901.0, 500.0), "no inherited cooldown window");
+        assert_eq!(l.occupied(1), 0);
+    }
+
+    #[test]
+    fn sync_live_drops_everything_not_in_the_set() {
+        let mut l = ledger();
+        for pid in 0..100 {
+            l.record_placement(pid, (pid as usize) % 4, 1, false);
+            l.record_move_time(pid, pid as f64);
+        }
+        let survivors = live(&[3, 50, 97]);
+        l.sync_live(&survivors);
+        assert_eq!(l.placed_count(), 3);
+        let total: i64 = (0..4).map(|n| l.occupied(n)).sum();
+        assert_eq!(total, 3);
+        l.check_invariants(&survivors).unwrap();
+    }
+
+    #[test]
+    fn projections_stay_non_negative() {
+        let mut l = ledger();
+        l.begin_epoch(&[4.0, 1.0, 1.0, 1.0]);
+        assert_eq!(l.hottest_projection(), 4.0);
+        l.project_move(1, 0, 5.0); // sheds more than the source holds
+        assert_eq!(l.projected(1), 0.0);
+        assert_eq!(l.projected(0), 9.0);
+        l.check_invariants(&live(&[])).unwrap();
+    }
+
+    #[test]
+    fn begin_epoch_pads_short_demand_vectors() {
+        let mut l = ledger();
+        l.begin_epoch(&[2.0]);
+        assert_eq!(l.projected(3), 0.0);
+        l.check_invariants(&live(&[])).unwrap();
+    }
+
+    #[test]
+    fn invariant_oracle_catches_violations() {
+        // Dead pid holding a placement.
+        let mut l = ledger();
+        l.record_placement(5, 0, 1, false);
+        assert!(l.check_invariants(&live(&[])).is_err());
+
+        // Dead pid holding a cooldown.
+        let mut l = ledger();
+        l.record_move_time(5, 10.0);
+        assert!(l.check_invariants(&live(&[])).is_err());
+
+        // Occupancy drift (corrupt the cache directly).
+        let mut l = ledger();
+        l.record_placement(5, 0, 2, false);
+        l.occupied[0] = 1;
+        assert!(l.check_invariants(&live(&[5])).is_err());
+
+        // Non-finite projection.
+        let mut l = ledger();
+        l.begin_epoch(&[f64::NAN, 0.0, 0.0, 0.0]);
+        assert!(l.check_invariants(&live(&[])).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "placement-ledger invariant violated")]
+    fn assert_invariants_panics_on_violation() {
+        let mut l = ledger();
+        l.record_placement(1, 0, 1, false);
+        l.assert_invariants(&live(&[]));
+    }
+}

@@ -14,12 +14,16 @@
 //! trait (implemented by the simulator; a live-host implementation would
 //! wrap `sched_setaffinity`/`migrate_pages(2)`).
 
+pub mod ledger;
 pub mod powerful;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::config::{SchedulerConfig, StaticPin};
 use crate::reporter::{RankedTask, Report};
+use crate::topology::NumaTopology;
+
+pub use ledger::PlacementLedger;
 
 /// Control surface the scheduler drives.
 pub trait MachineControl {
@@ -80,16 +84,14 @@ pub struct UserScheduler {
     pub max_moves_per_epoch: usize,
     /// Admin static pins: comm -> node.
     pub pins: BTreeMap<String, usize>,
-    /// Cores per NUMA node (CPU-capacity guard for powerful-core slots).
-    pub cores_per_node: usize,
     /// Decision log.
     pub decisions: Vec<Decision>,
 
-    last_move_ms: BTreeMap<i32, f64>,
-    /// Tasks this scheduler has placed: pid -> (node, threads). Only
-    /// these count against a node's powerful-core slots — unplaced load
-    /// floats and the OS balancer spreads it around our pins.
-    placed: BTreeMap<i32, (usize, i64)>,
+    /// Occupancy / cooldown / projection accounting. Constructed from
+    /// the machine topology; static pins and scheduler placements both
+    /// count against powerful-core slots here, and churn (exit, fork,
+    /// pid recycling) prunes it instead of leaking.
+    ledger: PlacementLedger,
 }
 
 /// Migration freight of a task in *ledger operations*: base pages cost
@@ -106,7 +108,10 @@ fn freight_ops(task: &RankedTask) -> f64 {
 }
 
 impl UserScheduler {
-    pub fn new(cfg: &SchedulerConfig) -> Self {
+    /// Build from config + the machine's topology. The topology is what
+    /// sizes the powerful-core capacity guard — there is no hardcoded
+    /// `cores_per_node` and nothing for call sites to patch afterwards.
+    pub fn new(cfg: &SchedulerConfig, topo: &NumaTopology) -> Self {
         Self {
             min_gain: cfg.min_gain,
             degradation_threshold: cfg.degradation_threshold,
@@ -118,11 +123,44 @@ impl UserScheduler {
                 .iter()
                 .map(|StaticPin { process, node }| (process.clone(), *node))
                 .collect(),
-            cores_per_node: 10,
             decisions: Vec::new(),
-            last_move_ms: BTreeMap::new(),
-            placed: BTreeMap::new(),
+            ledger: PlacementLedger::from_topology(topo),
         }
+    }
+
+    /// The occupancy view (read-only; tests and the runner's invariant
+    /// check consume it).
+    pub fn ledger(&self) -> &PlacementLedger {
+        &self.ledger
+    }
+
+    /// Crate-internal mutable access for the runner's churn routing.
+    pub(crate) fn ledger_mut(&mut self) -> &mut PlacementLedger {
+        &mut self.ledger
+    }
+
+    /// A pid exited (`Machine::kill`, natural completion observed by the
+    /// runner): drop its cooldown and placement state.
+    pub fn observe_exit(&mut self, pid: i32) {
+        self.ledger.on_exit(pid);
+    }
+
+    /// A pid appeared (`Machine::fork`, scenario launch): clear anything
+    /// a recycled pid number would otherwise inherit.
+    pub fn observe_spawn(&mut self, pid: i32) {
+        self.ledger.on_spawn(pid);
+    }
+
+    /// Ledger invariants against the pids allowed to hold state (the
+    /// last report's roster). `Err` carries the violation.
+    pub fn check_ledger(&self, live: impl IntoIterator<Item = i32>) -> Result<(), String> {
+        self.ledger.check_invariants(&live.into_iter().collect())
+    }
+
+    /// Panicking form of [`check_ledger`](Self::check_ledger) — the
+    /// runner's epoch loop calls this under `debug_assertions`.
+    pub fn assert_ledger_invariants(&self, live: impl IntoIterator<Item = i32>) {
+        self.ledger.assert_invariants(&live.into_iter().collect());
     }
 
     /// Apply one Reporter signal (one scheduling epoch). Returns the
@@ -130,14 +168,28 @@ impl UserScheduler {
     pub fn apply(&mut self, report: &Report, ctl: &mut dyn MachineControl) -> Vec<Decision> {
         let mut executed = Vec::new();
         let t = report.t_ms;
+        let live: BTreeSet<i32> = report.by_speedup.iter().map(|r| r.pid).collect();
+        self.ledger.sync_live(&live);
 
-        // 1. Static pins always hold (Algorithm 3 consults them first).
+        // 1. Static pins always hold (Algorithm 3 consults them first) —
+        //    and always occupy powerful-core slots, moved or not: a node
+        //    hosting a pinned database is not free capacity for step 3.
         for task in &report.by_speedup {
             if let Some(&node) = self.pins.get(&task.comm) {
+                self.ledger.record_placement(task.pid, node, task.threads, true);
                 if task.node != node {
                     ctl.move_process(task.pid, node);
-                    // Pinned memory follows the pin entirely.
-                    let moved = ctl.migrate_pages(task.pid, node, task.rss_pages);
+                    // Pinned memory follows the pin — budgeted at the
+                    // pages not already resident on the target. The
+                    // simulator moves the same pages either way; the cap
+                    // matters for live `migrate_pages(2)` surfaces where
+                    // the budget is real call volume.
+                    let resident = task.pages_per_node.get(node).copied().unwrap_or(0);
+                    let moved = ctl.migrate_pages(
+                        task.pid,
+                        node,
+                        task.rss_pages.saturating_sub(resident),
+                    );
                     let d = Decision {
                         t_ms: t,
                         pid: task.pid,
@@ -149,7 +201,7 @@ impl UserScheduler {
                     };
                     executed.push(d.clone());
                     self.decisions.push(d);
-                    self.last_move_ms.insert(task.pid, t);
+                    self.ledger.record_move_time(task.pid, t);
                 }
             }
         }
@@ -159,26 +211,17 @@ impl UserScheduler {
         }
 
         // 2. Powerful-core slots under the load-balanced policy: track
-        //    projected controller demand AND the threads *we* have pinned
-        //    per node — a node whose cores are already committed to
-        //    placed tasks is not powerful, but floating (unplaced) load
-        //    doesn't count: the OS balancer spreads it around our pins.
-        let nodes = report.node_demand.len();
-        let mut projected = report.node_demand.clone();
-        let live: Vec<i32> = report.by_speedup.iter().map(|t| t.pid).collect();
-        self.placed.retain(|pid, _| live.contains(pid));
-        let mut pinned_threads = vec![0i64; nodes];
-        for (&_pid, &(node, threads)) in &self.placed {
-            if node < nodes {
-                pinned_threads[node] += threads;
-            }
-        }
+        //    projected controller demand AND the threads the ledger has
+        //    placed per node — a node whose cores are already committed
+        //    to placed tasks is not powerful, but floating (unplaced)
+        //    load doesn't count: the OS balancer spreads it around our
+        //    placements.
+        self.ledger.begin_epoch(&report.node_demand);
         let total_threads: i64 = report.by_speedup.iter().map(|t| t.threads).sum();
-        // Pins on one node may not exceed the balanced per-node share
-        // (plus a small slack) — that bounds the powerful-core slots.
-        let thread_cap = ((total_threads as f64 / nodes as f64).ceil()
-            + self.cores_per_node as f64 * 0.2)
-            .ceil() as i64;
+        // Placements on one node may not exceed the balanced per-node
+        // share (plus a small slack) — that bounds the powerful-core
+        // slots.
+        let thread_cap = self.ledger.thread_cap(total_threads);
 
         // 3. Walk the NUMA list sorted by weighted speedup factor.
         let mut moves = 0usize;
@@ -198,26 +241,21 @@ impl UserScheduler {
             if task.best_node == task.node || task.best_score < needed {
                 continue;
             }
-            if let Some(&last) = self.last_move_ms.get(&task.pid) {
-                if t - last < self.cooldown_ms {
-                    continue;
-                }
+            if self.ledger.in_cooldown(task.pid, t, self.cooldown_ms) {
+                continue;
             }
             // Don't stampede one node: each accepted move adds its demand
             // to the target's projection; skip if the target would become
             // the new hottest node.
             let target = task.best_node;
-            let new_target_demand = projected[target] + task.mem_intensity;
-            let hottest = projected
-                .iter()
-                .copied()
-                .fold(f64::NEG_INFINITY, f64::max);
+            let new_target_demand = self.ledger.projected(target) + task.mem_intensity;
+            let hottest = self.ledger.hottest_projection();
             if new_target_demand > hottest.max(1e-9) * 1.10 && moves > 0 {
                 continue;
             }
             // CPU-capacity guard: the target must have powerful-core
             // slots left for this task's threads.
-            if pinned_threads[target] + task.threads > thread_cap {
+            if !self.ledger.fits(target, task.threads, thread_cap) {
                 continue;
             }
 
@@ -230,16 +268,8 @@ impl UserScheduler {
             } else {
                 0
             };
-            projected[target] = new_target_demand;
-            projected[task.node] =
-                (projected[task.node] - task.mem_intensity).max(0.0);
-            if let Some(&(old_node, threads)) = self.placed.get(&task.pid) {
-                if old_node < nodes {
-                    pinned_threads[old_node] -= threads;
-                }
-            }
-            pinned_threads[target] += task.threads;
-            self.placed.insert(task.pid, (target, task.threads));
+            self.ledger.project_move(task.node, target, task.mem_intensity);
+            self.ledger.record_placement(task.pid, target, task.threads, false);
             let d = Decision {
                 t_ms: t,
                 pid: task.pid,
@@ -251,7 +281,7 @@ impl UserScheduler {
             };
             executed.push(d.clone());
             self.decisions.push(d);
-            self.last_move_ms.insert(task.pid, t);
+            self.ledger.record_move_time(task.pid, t);
             moves += 1;
         }
 
@@ -262,21 +292,21 @@ impl UserScheduler {
         //    degradation" loop.
         let consolidate_above = 0.3 * self.degradation_threshold;
         for task in &report.by_speedup {
-            if task.best_node != task.node || task.degradation <= consolidate_above {
+            if task.best_node != task.node {
                 continue;
             }
             // Scale the bar with the freight, like the move gate: pulling
             // a giant buffer pool across QPI costs real call volume —
-            // unless huge pages shrink it to a few hundred ops.
+            // unless huge pages shrink it to a few hundred ops. (The
+            // freight factor is >= 1, so this single test subsumes the
+            // plain `<= consolidate_above` check.)
             if task.degradation
                 <= consolidate_above * (1.0 + freight_ops(task) / 100_000.0)
             {
                 continue;
             }
-            if let Some(&last) = self.last_move_ms.get(&task.pid) {
-                if t - last < self.cooldown_ms {
-                    continue;
-                }
+            if self.ledger.in_cooldown(task.pid, t, self.cooldown_ms) {
+                continue;
             }
             let remote: u64 = task
                 .pages_per_node
@@ -302,7 +332,7 @@ impl UserScheduler {
                 };
                 executed.push(d.clone());
                 self.decisions.push(d);
-                self.last_move_ms.insert(task.pid, t);
+                self.ledger.record_move_time(task.pid, t);
             }
         }
         executed
@@ -366,7 +396,10 @@ mod tests {
     }
 
     fn sched() -> UserScheduler {
-        UserScheduler::new(&crate::config::SchedulerConfig::default())
+        UserScheduler::new(
+            &crate::config::SchedulerConfig::default(),
+            &crate::topology::NumaTopology::r910_40core(),
+        )
     }
 
     #[test]
@@ -454,6 +487,100 @@ mod tests {
         let mut ctl = MockCtl::default();
         let rep = report(vec![ranked(1, "a", 2, 2, 9.0, 0.0)], true);
         assert!(s.apply(&rep, &mut ctl).is_empty());
+    }
+
+    #[test]
+    fn static_pin_occupies_powerful_core_slots() {
+        // A pinned 6-thread database on node 2 plus one 1-thread worker:
+        // thread_cap = ceil(7/4) + 10*0.2 = 4, so node 2 is full before
+        // the walk starts. The seed scheduler never counted the pin and
+        // happily overcommitted the node.
+        let mut s = sched();
+        s.pins.insert("db".into(), 2);
+        let mut ctl = MockCtl::default();
+        let mut db = ranked(1, "db", 2, 2, 0.0, 0.0); // already on its pin
+        db.threads = 6;
+        let worker = ranked(2, "w", 0, 2, 5.0, 0.0);
+        let rep = report(vec![db, worker], true);
+        let dec = s.apply(&rep, &mut ctl);
+        assert_eq!(s.ledger().occupied(2), 6, "pin counted even without a move");
+        assert!(
+            dec.is_empty() && ctl.moves.is_empty(),
+            "worker must not overcommit the pinned node: {dec:?}"
+        );
+        s.check_ledger([1, 2]).unwrap();
+    }
+
+    #[test]
+    fn pin_migration_budget_excludes_target_resident_pages() {
+        let mut s = sched();
+        s.pins.insert("db".into(), 1);
+        let mut ctl = MockCtl::default();
+        let mut db = ranked(3, "db", 0, 0, 0.0, 0.0);
+        db.pages_per_node = vec![300, 700, 0, 0]; // 700 already home
+        let rep = report(vec![db], false);
+        let dec = s.apply(&rep, &mut ctl);
+        assert_eq!(dec.len(), 1);
+        assert_eq!(
+            ctl.page_moves,
+            vec![(3, 1, 300)],
+            "budget caps at the non-target-resident pages, not full rss"
+        );
+    }
+
+    #[test]
+    fn recycled_pid_inherits_no_cooldown_or_placement() {
+        let mut s = sched();
+        let mut ctl = MockCtl::default();
+        // Pid 1 migrates at t=1000 — cooldown armed, placement recorded.
+        let rep = report(vec![ranked(1, "a", 0, 2, 5.0, 0.0)], true);
+        assert_eq!(s.apply(&rep, &mut ctl).len(), 1);
+        assert!(s.ledger().placement(1).is_some());
+        // It dies (Machine::kill -> runner wiring), and the pid number
+        // comes back as a different process that also wants to move,
+        // still inside the dead process's cooldown window.
+        s.observe_exit(1);
+        assert!(s.ledger().placement(1).is_none(), "no phantom placement");
+        s.observe_spawn(1);
+        let rep2 = report(vec![ranked(1, "b", 0, 3, 5.0, 0.0)], true);
+        let dec = s.apply(&rep2, &mut ctl);
+        assert_eq!(dec.len(), 1, "fresh pid must not inherit the cooldown");
+        s.check_ledger([1]).unwrap();
+    }
+
+    #[test]
+    fn vanished_pids_are_pruned_from_the_ledger() {
+        let mut s = sched();
+        let mut ctl = MockCtl::default();
+        let rep = report(vec![ranked(1, "a", 0, 2, 5.0, 0.0)], true);
+        s.apply(&rep, &mut ctl);
+        assert_eq!(s.ledger().placed_count(), 1);
+        // Next epoch the pid is gone (finished naturally): the roster
+        // sync drops its state, so the oracle passes on the new roster.
+        let rep2 = report(vec![ranked(9, "z", 0, 0, 0.0, 0.0)], true);
+        s.apply(&rep2, &mut ctl);
+        assert_eq!(s.ledger().placed_count(), 0);
+        assert_eq!(s.ledger().occupied(2), 0);
+        s.check_ledger([9]).unwrap();
+    }
+
+    #[test]
+    fn consolidation_bar_is_the_freight_scaled_one() {
+        // Degradation above the plain 0.3*threshold bar but below the
+        // freight-scaled one: no consolidation (the first check the seed
+        // shipped was dead — the scaled bar subsumes it).
+        let mut s = sched();
+        let mut ctl = MockCtl::default();
+        let mut t = ranked(1, "a", 0, 0, 0.0, 0.19);
+        t.rss_pages = 10_000;
+        t.pages_per_node = vec![5_000, 5_000, 0, 0];
+        // bar = 0.18 * (1 + 10_000/100_000) = 0.198 > 0.19.
+        assert!(s.apply(&report(vec![t.clone()], true), &mut ctl).is_empty());
+        // Above the scaled bar, the pull-home fires.
+        t.degradation = 0.25;
+        let dec = s.apply(&report(vec![t], true), &mut ctl);
+        assert_eq!(dec.len(), 1);
+        assert_eq!(dec[0].reason, Reason::Contention);
     }
 
     #[test]

@@ -237,6 +237,14 @@ impl Machine {
             .collect()
     }
 
+    /// The running roster as a set — what ledger `sync_live` /
+    /// `check_invariants` callers need for O(log n) membership tests.
+    /// Delegates to [`running_pids`](Self::running_pids) so "running"
+    /// has exactly one definition.
+    pub fn running_pid_set(&self) -> std::collections::BTreeSet<i32> {
+        self.running_pids().into_iter().collect()
+    }
+
     pub fn all_finished(&self) -> bool {
         self.procs.values().all(|p| !p.is_running())
     }
@@ -1307,6 +1315,9 @@ mod tests {
         assert!(m.read_numa_maps(b).is_none());
         assert!(!m.list_pids().contains(&b));
         assert!(m.list_pids().contains(&a));
+        // The set-typed roster agrees with the Vec one.
+        assert!(!m.running_pid_set().contains(&b));
+        assert!(m.running_pid_set().contains(&a));
         // Killed at the current virtual time; double kill is a no-op.
         assert_eq!(m.process(b).unwrap().finished_ms, Some(m.now_ms));
         assert!(!m.kill(b));

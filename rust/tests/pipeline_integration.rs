@@ -21,8 +21,7 @@ fn pipeline(machine: &Machine) -> (Monitor, Reporter, UserScheduler) {
     reporter.importance.insert("victim".into(), 5.0);
     let mut cfg = SchedulerConfig::default();
     cfg.migration_cooldown_ms = 100;
-    let mut sched = UserScheduler::new(&cfg);
-    sched.cores_per_node = machine.topo.cores_per_node;
+    let sched = UserScheduler::new(&cfg, &machine.topo);
     (monitor, reporter, sched)
 }
 

@@ -21,10 +21,13 @@
 
 use numasched::config::{MachineConfig, PolicyKind, SchedulerConfig};
 use numasched::experiments::runner::{self, RunParams};
-use numasched::scenario::{Event, EventEngine, TimedEvent};
+use numasched::monitor::Monitor;
+use numasched::reporter::{Backend, RankedTask, Report, Reporter, Triggers};
+use numasched::scenario::{Event, EventEngine, PidFate, TimedEvent};
+use numasched::scheduler::{MachineControl, UserScheduler};
 use numasched::sim::{Machine, Placement, TaskBehavior};
 use numasched::topology::NumaTopology;
-use numasched::util::check::{forall_shrunk, PropResult, Shrink};
+use numasched::util::check::{forall, forall_shrunk, PropResult, Shrink};
 use numasched::util::rng::Rng;
 use numasched::workloads::mix;
 
@@ -229,6 +232,169 @@ fn random_event_streams_preserve_simulator_invariants() {
         gen_plan,
         |plan: &Vec<Ev>| invariants_hold(plan),
     );
+}
+
+/// Decode a plan into pure churn: launches, kills, and fork storms —
+/// the events that create and destroy pids, i.e. exactly the traffic
+/// that leaked cooldown/placement state out of the seed scheduler.
+fn decode_churn(plan: &[Ev]) -> Vec<TimedEvent> {
+    plan.iter()
+        .map(|e| {
+            let comm = COMMS[e.a as usize % COMMS.len()].to_string();
+            let event = match e.kind % 3 {
+                0 => {
+                    let mut s = mix::churn_job("w0", 50.0 + e.b as f64 * 5.0);
+                    s.comm = comm;
+                    s.behavior.ws_pages = 1_000 + e.b as u64 * 50;
+                    s.threads = 1 + e.a as usize % 3;
+                    Event::Launch(s)
+                }
+                1 => Event::Exit { comm },
+                _ => Event::Fork { comm, children: 1 + e.a as usize % 3 },
+            };
+            TimedEvent::at(e.t as f64, event)
+        })
+        .collect()
+}
+
+/// Drive the full Monitor -> Reporter -> Scheduler pipeline through a
+/// fork-storm + kill timeline, mirroring the runner's churn wiring
+/// (exit prunes, spawn clears), and hold the placement ledger to its
+/// invariant oracle after EVERY scheduling epoch.
+fn ledger_invariants_hold(plan: &[Ev]) -> PropResult {
+    let mut m = small_machine(11);
+    let mut engine = EventEngine::new(decode_churn(plan));
+    let mut w = mix::churn_job("w0", 2_000.0);
+    w.behavior.ws_pages = 8_000;
+    m.spawn("w0", w.behavior.clone(), 1.0, 2, Placement::Node(0));
+    m.spawn("w1", w.behavior.clone(), 1.0, 2, Placement::Node(1));
+    m.spawn("daemon", TaskBehavior::mem_bound(f64::INFINITY), 0.3, 1, Placement::Node(0));
+
+    let monitor = Monitor::discover(&m).map_err(|e| format!("discover: {e}"))?;
+    let mut reporter = Reporter::new(
+        Backend::Cpu,
+        monitor.topo.distance.clone(),
+        m.topo.bandwidth_gbs.clone(),
+    );
+    let mut sched = UserScheduler::new(&SchedulerConfig::default(), &m.topo);
+    // Tight cooldown so moves actually interleave with the churn.
+    sched.cooldown_ms = 50.0;
+
+    for tick in 0..HORIZON_TICKS {
+        engine.tick(&mut m);
+        if engine.has_fired() {
+            for f in engine.drain_fired() {
+                let Some(fate) = f.pid_fate() else { continue };
+                for &pid in &f.pids {
+                    match fate {
+                        PidFate::Exited => sched.observe_exit(pid),
+                        PidFate::Spawned => sched.observe_spawn(pid),
+                    }
+                }
+            }
+        }
+        m.step();
+        if tick % 10 != 0 {
+            continue;
+        }
+        let snap = monitor.sample(&m, m.now_ms);
+        if let Some(report) = reporter.ingest(&snap) {
+            sched.apply(&report, &mut m);
+            sched
+                .check_ledger(report.by_speedup.iter().map(|t| t.pid))
+                .map_err(|e| format!("tick {tick}: {e}"))?;
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn fork_storm_and_kill_churn_preserve_ledger_invariants() {
+    forall_shrunk(
+        "ledger-churn",
+        0x1ED6E5,
+        12,
+        gen_plan,
+        |plan: &Vec<Ev>| ledger_invariants_hold(plan),
+    );
+}
+
+/// Minimal control surface for the scheduler-level pid-reuse property.
+#[derive(Default)]
+struct NullCtl;
+
+impl MachineControl for NullCtl {
+    fn move_process(&mut self, _pid: i32, _node: usize) {}
+    fn migrate_pages(&mut self, _pid: i32, _node: usize, budget: u64) -> u64 {
+        budget
+    }
+}
+
+fn ranked2(pid: i32, comm: &str, node: usize, best: usize, score: f64) -> RankedTask {
+    RankedTask {
+        pid,
+        comm: comm.into(),
+        node,
+        threads: 1,
+        importance: 1.0,
+        mem_intensity: 1.0,
+        degradation: 0.0,
+        best_node: best,
+        best_score: score,
+        scores: vec![0.0; 2],
+        rss_pages: 1_000,
+        pages_per_node: vec![1_000, 0],
+        huge_2m_per_node: vec![0, 0],
+        giant_1g_per_node: vec![0, 0],
+    }
+}
+
+fn report2(t_ms: f64, tasks: Vec<RankedTask>) -> Report {
+    let by_degradation = tasks.iter().map(|t| t.pid).collect();
+    Report {
+        t_ms,
+        triggers: Triggers { unbalanced: true, ..Default::default() },
+        by_speedup: tasks,
+        by_degradation,
+        node_demand: vec![4.0, 0.5],
+        imbalance: 1.5,
+    }
+}
+
+#[test]
+fn recycled_pids_inherit_no_cooldown_or_placement_state() {
+    let topo = NumaTopology::from_config(&MachineConfig::preset("2node-8core").unwrap());
+    forall("pid-reuse", 0x51D, 40, |rng: &mut Rng| -> PropResult {
+        let mut sched = UserScheduler::new(&SchedulerConfig::default(), &topo);
+        let mut ctl = NullCtl;
+        let pid = 1_000 + rng.below(16) as i32;
+        let t0 = 1_000.0 + rng.below(1_000) as f64;
+
+        // The first incarnation of the pid migrates: cooldown armed,
+        // placement on record.
+        let n = sched.apply(&report2(t0, vec![ranked2(pid, "a", 0, 1, 5.0)]), &mut ctl);
+        numasched::prop_assert!(n.len() == 1, "first incarnation must move");
+        numasched::prop_assert!(
+            sched.ledger().placement(pid).is_some(),
+            "move must be on the ledger"
+        );
+
+        // It dies (Machine::kill -> runner wiring), and a fork recycles
+        // the pid number while the dead cooldown window is still open.
+        sched.observe_exit(pid);
+        numasched::prop_assert!(
+            sched.ledger().placement(pid).is_none(),
+            "phantom placement survived exit"
+        );
+        sched.observe_spawn(pid);
+        let dt = rng.below(499) as f64; // strictly inside the old window
+        let n2 = sched.apply(&report2(t0 + dt, vec![ranked2(pid, "b", 0, 1, 5.0)]), &mut ctl);
+        numasched::prop_assert!(
+            n2.len() == 1,
+            "recycled pid {pid} inherited a stale cooldown (dt={dt})"
+        );
+        sched.check_ledger([pid])
+    });
 }
 
 #[test]
