@@ -43,6 +43,7 @@ COMMANDS:
     fig7             regenerate Figure 7 (speedup vs baselines, 40 cores)
     fig8             regenerate Figure 8 (Apache/MySQL throughput)
     ablate-hugepages sweep THP backing fraction (speedup + op savings)
+    ablate-fabric    sweep hot-link bandwidth (fabric-aware vs blind placement)
     bench-suite      measure hot paths and write BENCH_PERF.json
     scenario         dynamic workload timelines:
                        scenario list              catalog of timelines

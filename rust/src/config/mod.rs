@@ -127,7 +127,8 @@ impl MemConfig {
 pub struct MachineConfig {
     /// Preset name: "r910-40core" (the paper's testbed), "r910-thp"
     /// (same box with 2 MiB pools + TLB modeling), "2node-8core",
-    /// "8node-64core", "8node-hetero" (asymmetric bandwidth/capacity).
+    /// "8node-64core", "8node-hetero" (asymmetric bandwidth/capacity),
+    /// "8node-fabric" (explicit QPI ring with finite link bandwidth).
     /// Explicit fields below override preset values.
     pub preset: String,
     pub nodes: usize,
@@ -144,6 +145,8 @@ pub struct MachineConfig {
     pub distance: Option<Vec<Vec<f64>>>,
     /// Memory hardware (page tiers, pools, caches, TLB).
     pub mem: MemConfig,
+    /// Interconnect fabric (None = infinitely wide, the seed model).
+    pub fabric: Option<FabricConfig>,
 }
 
 impl Default for MachineConfig {
@@ -161,6 +164,7 @@ impl Default for MachineConfig {
             remote_distance: 21.0,
             distance: None,
             mem: MemConfig::default(),
+            fabric: None,
         }
     }
 }
@@ -191,6 +195,7 @@ impl MachineConfig {
                 remote_distance: 20.0,
                 distance: None,
                 mem: MemConfig::default(),
+                fabric: None,
             }),
             "8node-64core" => Some(Self {
                 preset: name.into(),
@@ -202,6 +207,19 @@ impl MachineConfig {
                 remote_distance: 21.0,
                 distance: None,
                 mem: MemConfig::default(),
+                fabric: None,
+            }),
+            // The 8-node box with its QPI ring made explicit: 6 GB/s
+            // links (deliberately narrow next to the 16 GB/s node
+            // controllers, like a 4-lane QPI next to 4-channel DDR), so
+            // link-saturating scenarios have something to saturate.
+            "8node-fabric" => Some(Self {
+                preset: name.into(),
+                fabric: Some(FabricConfig {
+                    link_bandwidth_gbs: 6.0,
+                    ..FabricConfig::default()
+                }),
+                ..Self::preset("8node-64core").unwrap()
             }),
             // An asymmetric 8-node box: two fat sockets, a mid tier, and
             // slim expansion nodes — bandwidth, capacity, and huge-page
@@ -225,6 +243,7 @@ impl MachineConfig {
                     ]),
                     ..MemConfig::default()
                 },
+                fabric: None,
             }),
             _ => None,
         }
@@ -232,6 +251,29 @@ impl MachineConfig {
 
     pub fn total_cores(&self) -> usize {
         self.nodes * self.cores_per_node
+    }
+}
+
+/// Interconnect fabric knobs — the `[machine.fabric]` table. Presence
+/// of the table enables the fabric model; machines without it keep the
+/// seed's infinitely-wide interconnect and run bit-identically.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FabricConfig {
+    /// Explicit point-to-point links as `(a, b, bandwidth_gbs)` rows
+    /// (config `links = [[a, b, gbs], ...]`). None derives a ring
+    /// consistent with `ring_distance`.
+    pub links: Option<Vec<(usize, usize, f64)>>,
+    /// Per-link bandwidth of the derived ring, GB/s.
+    pub link_bandwidth_gbs: f64,
+    /// Weight of the fabric latency term in the simulator tick (the
+    /// link-side `QUEUE_WEIGHT`); 0 models and renders link load
+    /// without adding latency.
+    pub weight: f64,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        Self { links: None, link_bandwidth_gbs: 12.8, weight: 0.35 }
     }
 }
 
@@ -427,6 +469,20 @@ impl Config {
             .to_topology(self.machine.nodes, pages)
             .validate(self.machine.nodes)
             .map_err(ConfigError)?;
+        // Fabric: build (and thereby fully validate) the link graph and
+        // routing table, with the same distance matrix the topology
+        // will use — surfaces disconnected/asymmetric configs as config
+        // errors instead of construction panics.
+        if let Some(fab) = &self.machine.fabric {
+            let distance = self.machine.distance.clone().unwrap_or_else(|| {
+                crate::topology::NumaTopology::ring_distance(
+                    self.machine.nodes,
+                    self.machine.remote_distance,
+                )
+            });
+            crate::fabric::FabricTopology::from_config(fab, self.machine.nodes, &distance)
+                .map_err(ConfigError)?;
+        }
         if self.scheduler.report_period_ms < self.scheduler.monitor_period_ms {
             return cfg_err("report_period_ms must be >= monitor_period_ms");
         }
@@ -483,6 +539,9 @@ fn parse_machine(v: &Value) -> Result<MachineConfig, ConfigError> {
     }
     if let Some(mem) = v.get("mem") {
         parse_mem(mem, &mut m.mem)?;
+    }
+    if let Some(fab) = v.get("fabric") {
+        m.fabric = Some(parse_fabric(fab)?);
     }
     if let Some(x) = v.get("remote_distance").and_then(Value::as_float) {
         m.remote_distance = x;
@@ -559,6 +618,43 @@ fn parse_mem(v: &Value, m: &mut MemConfig) -> Result<(), ConfigError> {
         }
     }
     Ok(())
+}
+
+/// The `[machine.fabric]` table.
+fn parse_fabric(v: &Value) -> Result<FabricConfig, ConfigError> {
+    let mut f = FabricConfig::default();
+    if let Some(x) = v.get("weight").and_then(Value::as_float) {
+        f.weight = x;
+    }
+    if let Some(x) = v.get("link_bandwidth_gbs").and_then(Value::as_float) {
+        f.link_bandwidth_gbs = x;
+    }
+    if let Some(rows) = v.get("links").and_then(Value::as_array) {
+        let mut links = Vec::with_capacity(rows.len());
+        for row in rows {
+            let row = row
+                .as_array()
+                .ok_or(ConfigError("fabric links entries must be [a, b, gbs]".into()))?;
+            if row.len() != 3 {
+                return cfg_err("fabric links entries must be [a, b, gbs]");
+            }
+            let node = |x: &Value, what: &str| {
+                x.as_int()
+                    .filter(|&i| i >= 0)
+                    .map(|i| i as usize)
+                    .ok_or(ConfigError(format!("fabric link {what} must be a node index")))
+            };
+            links.push((
+                node(&row[0], "endpoint a")?,
+                node(&row[1], "endpoint b")?,
+                row[2]
+                    .as_float()
+                    .ok_or(ConfigError("fabric link bandwidth must be numeric".into()))?,
+            ));
+        }
+        f.links = Some(links);
+    }
+    Ok(f)
 }
 
 fn parse_scheduler(v: &Value) -> Result<SchedulerConfig, ConfigError> {
@@ -801,6 +897,75 @@ mod tests {
         assert!(topo.mem.node(0).huge_2m > 0);
         assert_eq!(topo.mem.node(7).huge_2m, 0);
         assert!(topo.mem.tlb.enabled());
+    }
+
+    #[test]
+    fn parses_machine_fabric_table() {
+        let c = Config::from_str(
+            r#"
+            [machine]
+            nodes = 4
+            cores_per_node = 2
+
+            [machine.fabric]
+            weight = 0.5
+            links = [[0, 1, 12.8], [1, 2, 12.8], [2, 3, 6.4], [3, 0, 12.8]]
+            "#,
+        )
+        .unwrap();
+        let f = c.machine.fabric.as_ref().unwrap();
+        assert_eq!(f.weight, 0.5);
+        assert_eq!(
+            f.links.as_ref().unwrap()[2],
+            (2, 3, 6.4),
+            "explicit link rows parse positionally"
+        );
+        // Derived-ring form: just the table header is enough.
+        let c = Config::from_str(
+            "[machine]\nnodes = 4\ncores_per_node = 2\n\
+             [machine.fabric]\nlink_bandwidth_gbs = 9.5",
+        )
+        .unwrap();
+        let f = c.machine.fabric.as_ref().unwrap();
+        assert!(f.links.is_none());
+        assert_eq!(f.link_bandwidth_gbs, 9.5);
+    }
+
+    #[test]
+    fn fabric_validation_rejects_bad_graphs() {
+        // Disconnected: node 3 unreachable.
+        assert!(Config::from_str(
+            "[machine]\nnodes = 4\ncores_per_node = 2\n\
+             [machine.fabric]\nlinks = [[0, 1, 10], [1, 2, 10]]"
+        )
+        .is_err());
+        // Out-of-range endpoint.
+        assert!(Config::from_str(
+            "[machine]\nnodes = 2\ncores_per_node = 2\n\
+             [machine.fabric]\nlinks = [[0, 5, 10]]"
+        )
+        .is_err());
+        // Non-positive capacity.
+        assert!(Config::from_str(
+            "[machine]\nnodes = 2\ncores_per_node = 2\n\
+             [machine.fabric]\nlinks = [[0, 1, 0]]"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn fabric_preset_builds_valid_topology() {
+        let mc = MachineConfig::preset("8node-fabric").unwrap();
+        let topo = crate::topology::NumaTopology::from_config(&mc);
+        topo.validate().unwrap();
+        let fab = topo.fabric.as_ref().expect("preset enables the fabric");
+        assert_eq!(fab.links(), 8, "8-node ring");
+        assert_eq!(fab.graph.links()[0].bandwidth_gbs, 6.0);
+        // The non-fabric presets stay fabric-less (bit-identity guard).
+        for name in ["r910-40core", "r910-thp", "2node-8core", "8node-64core", "8node-hetero"] {
+            let mc = MachineConfig::preset(name).unwrap();
+            assert!(mc.fabric.is_none(), "{name} must not grow a fabric");
+        }
     }
 
     #[test]

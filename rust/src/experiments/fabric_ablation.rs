@@ -1,0 +1,286 @@
+//! Fabric ablation — what link-aware placement is worth, as a function
+//! of how narrow the hot link is.
+//!
+//! Setup (on the `8node-fabric` ring with the 1-2 link throttled to the
+//! swept bandwidth): an important memory-bound victim lives on node 1
+//! with a local working set; a pinned local hog saturates node 1's
+//! controller (the victim must evacuate), and four pinned streamers on
+//! node 2 stream against node 1's memory — so the 1-2 link carries
+//! their traffic permanently. The victim's two escape candidates are
+//! SLIT- and controller-symmetric: node 0 (idle route) and node 2 (the
+//! hot route). A fabric-blind scheduler cannot tell them apart — the
+//! Reporter's tie-break lands it on node 2, where its residual remote
+//! accesses and sticky-page burst cross the saturated link. The
+//! fabric-aware scheduler reads per-link rho from the report and docks
+//! the hot route.
+//!
+//! Both arms run on the *same* fabric-modeling machine — only the
+//! scheduler's awareness differs, so the delta is pure decision
+//! quality. Like the huge-page ablation, the measurement path is
+//! text-only: link utilization is read back from the sysfs-like
+//! link-stats surface via the Monitor, never from simulator state.
+
+use crate::config::{MachineConfig, SchedulerConfig};
+use crate::monitor::{Monitor, SampleBufs, Snapshot};
+use crate::reporter::{Backend, Reporter};
+use crate::scheduler::UserScheduler;
+use crate::sim::{Machine, Placement, TaskBehavior};
+use crate::topology::NumaTopology;
+
+use super::report::{f2, f3, Table};
+
+/// Hot-link (nodes 1-2) bandwidths swept, GB/s. The healthy ring links
+/// stay at the preset's 6 GB/s.
+pub const HOT_LINK_GBS: [f64; 4] = [12.8, 6.0, 3.0, 1.5];
+
+/// One sweep point (one scheduler arm at one hot-link bandwidth).
+#[derive(Clone, Debug)]
+pub struct AblationPoint {
+    pub hot_link_gbs: f64,
+    /// Whether the scheduler consulted the fabric (the machine always
+    /// models it).
+    pub fabric_aware: bool,
+    /// Victim mean speed over the run (1.0 = unimpeded).
+    pub victim_speed: f64,
+    /// Node the victim's threads ended on.
+    pub victim_home: usize,
+    /// Peak utilization the Monitor observed on the 1-2 link — from the
+    /// parsed link-stats text, not simulator state.
+    pub max_hot_rho: f64,
+    pub decisions: usize,
+}
+
+/// The `8node-fabric` ring with the 1-2 link throttled to `hot_gbs`.
+fn machine_config(hot_gbs: f64) -> MachineConfig {
+    let mut mc = MachineConfig::preset("8node-fabric").expect("preset exists");
+    let fab = mc.fabric.as_mut().expect("preset has a fabric");
+    let base = fab.link_bandwidth_gbs;
+    fab.links = Some(
+        (0..8)
+            .map(|i| {
+                let (a, b) = (i, (i + 1) % 8);
+                let gbs = if (a, b) == (1, 2) { hot_gbs } else { base };
+                (a, b, gbs)
+            })
+            .collect(),
+    );
+    mc
+}
+
+/// Run one arm end-to-end through the text-only pipeline.
+pub fn run_point(hot_link_gbs: f64, fabric_aware: bool, seed: u64) -> AblationPoint {
+    let mc = machine_config(hot_link_gbs);
+    let topo = NumaTopology::from_config(&mc);
+    let mut m = Machine::new(topo.clone(), seed);
+    m.os_balance = false; // isolate scheduler decisions from OS noise
+
+    // The victim: important, memory-bound, local on node 1.
+    let victim = m.spawn("victim", TaskBehavior::mem_bound(1e12), 5.0, 2, Placement::Node(1));
+    // Local pressure: node 1's controller saturates, forcing evacuation.
+    let hog = m.spawn(
+        "pressure",
+        TaskBehavior {
+            work_units: f64::INFINITY,
+            ws_pages: 250_000,
+            mem_intensity: 1.0,
+            ..TaskBehavior::mem_bound(1e12)
+        },
+        0.1,
+        1,
+        Placement::Node(1),
+    );
+    m.pin_process(hog, 1);
+    // Four pinned streamers on node 2 against node-1 memory: the 1-2
+    // link carries ~6.4 GB/s forever.
+    for k in 0..4 {
+        let pid = m.spawn(
+            &format!("storm-{k}"),
+            TaskBehavior {
+                work_units: f64::INFINITY,
+                ws_pages: 40_000,
+                mem_intensity: 1.0,
+                shared_frac: 0.0,
+                exchange: 0.0,
+                granularity: 1.0,
+                ..TaskBehavior::mem_bound(1e12)
+            },
+            0.1,
+            1,
+            Placement::Node(2),
+        );
+        m.pin_process(pid, 2);
+        let p = m.process_mut(pid).unwrap();
+        let total = p.pages.total();
+        let mut v = vec![0; 8];
+        v[1] = total;
+        p.pages.per_node = v;
+    }
+
+    // The pipeline, reading text only.
+    let monitor = Monitor::discover(&m).expect("discover sim topology");
+    let mut reporter = Reporter::new(
+        Backend::Cpu,
+        monitor.topo.distance.clone(),
+        topo.bandwidth_gbs.clone(),
+    );
+    reporter.importance.insert("victim".into(), 5.0);
+    let mut cfg = SchedulerConfig::default();
+    cfg.migration_cooldown_ms = 100;
+    // The blind arm schedules from a fabric-stripped view of the same
+    // topology: identical machine, identical reports — it simply cannot
+    // see (or re-rank by) link congestion.
+    let sched_topo = if fabric_aware {
+        topo.clone()
+    } else {
+        let mut t = topo.clone();
+        t.fabric = None;
+        t
+    };
+    let mut sched = UserScheduler::new(&cfg, &sched_topo);
+    // The pressure hog is admin-pinned in the scheduler's map too: the
+    // point is placing the victim AROUND sustained noise, not
+    // dissolving the noise. The streamers need no scheduler pin — their
+    // only attractive candidate (their memory node) is saturated, so
+    // the score math keeps them put; leaving them unpinned keeps node
+    // 2's powerful-core slots open, so the blind arm is free to take
+    // the hot route the tie-break hands it.
+    sched.pins.insert("pressure".into(), 1);
+    reporter.importance.insert("pressure".into(), 0.1);
+    for k in 0..4 {
+        reporter.importance.insert(format!("storm-{k}"), 0.1);
+    }
+
+    let mut max_hot_rho: f64 = 0.0;
+    let mut snap = Snapshot::default();
+    let mut bufs = SampleBufs::new();
+    while m.now_ms < 3_000.0 {
+        m.step();
+        if (m.now_ms as u64) % 10 == 0 {
+            monitor.sample_into(&m, m.now_ms, &mut snap, &mut bufs);
+            for l in &snap.links {
+                if (l.node_a, l.node_b) == (1, 2) {
+                    max_hot_rho = max_hot_rho.max(l.rho);
+                }
+            }
+            if let Some(report) = reporter.ingest(&snap) {
+                sched.apply(&report, &mut m);
+            }
+        }
+    }
+
+    let p = m.process(victim).unwrap();
+    AblationPoint {
+        hot_link_gbs,
+        fabric_aware,
+        victim_speed: p.mean_speed(),
+        victim_home: p.home_node(8, 8),
+        max_hot_rho,
+        decisions: sched.decisions.len(),
+    }
+}
+
+/// The full sweep: (blind, aware) per hot-link bandwidth, one parallel
+/// cell per arm.
+pub fn run(seed: u64) -> Vec<(AblationPoint, AblationPoint)> {
+    let arms: Vec<(f64, bool)> = HOT_LINK_GBS
+        .iter()
+        .flat_map(|&bw| [(bw, false), (bw, true)])
+        .collect();
+    let points = super::sweep::map(&arms, |&(bw, aware)| run_point(bw, aware, seed));
+    points
+        .chunks(2)
+        .map(|pair| (pair[0].clone(), pair[1].clone()))
+        .collect()
+}
+
+pub fn render(pairs: &[(AblationPoint, AblationPoint)]) -> String {
+    let mut t = Table::new(
+        "Fabric ablation — fabric-aware vs blind placement vs hot-link width (8node-fabric)",
+        &[
+            "hot link GB/s",
+            "blind speed",
+            "aware speed",
+            "aware gain",
+            "blind home",
+            "aware home",
+            "peak hot rho",
+        ],
+    );
+    for (blind, aware) in pairs {
+        t.row(vec![
+            f2(blind.hot_link_gbs),
+            f3(blind.victim_speed),
+            f3(aware.victim_speed),
+            format!(
+                "{}x",
+                f2(if blind.victim_speed > 0.0 {
+                    aware.victim_speed / blind.victim_speed
+                } else {
+                    f64::NAN
+                })
+            ),
+            blind.victim_home.to_string(),
+            aware.victim_home.to_string(),
+            f3(blind.max_hot_rho.max(aware.max_hot_rho)),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(
+        "link utilization comes from the Monitor's parse of the link-stats \
+         surface (rho_milli), not from simulator state\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn storm_heats_the_hot_link_and_narrower_links_run_hotter() {
+        let wide = run_point(12.8, true, 7);
+        let narrow = run_point(1.5, true, 7);
+        assert!(
+            wide.max_hot_rho > 0.3,
+            "streamers must load the 1-2 link: {wide:?}"
+        );
+        assert!(
+            narrow.max_hot_rho > wide.max_hot_rho,
+            "same traffic over a narrower link must read hotter: \
+             {:.3} vs {:.3}",
+            narrow.max_hot_rho,
+            wide.max_hot_rho
+        );
+    }
+
+    #[test]
+    fn fabric_aware_scheduler_routes_around_the_hot_link() {
+        let blind = run_point(1.5, false, 7);
+        let aware = run_point(1.5, true, 7);
+        assert!(blind.decisions > 0 && aware.decisions > 0, "both arms must act");
+        assert_ne!(
+            aware.victim_home, 1,
+            "aware arm must evacuate the saturated controller: {aware:?}"
+        );
+        assert_ne!(
+            aware.victim_home, 2,
+            "aware arm must not cross the saturated 1-2 link: {aware:?}"
+        );
+        assert!(
+            aware.victim_speed >= blind.victim_speed - 1e-9,
+            "awareness must never hurt: blind {:.3} aware {:.3}",
+            blind.victim_speed,
+            aware.victim_speed
+        );
+        if blind.victim_home == 2 {
+            // The blind arm took the hot route (the expected tie-break):
+            // the aware arm's win must be measurable.
+            assert!(
+                aware.victim_speed > blind.victim_speed,
+                "routing around the hot link must pay: blind {:.3} aware {:.3}",
+                blind.victim_speed,
+                aware.victim_speed
+            );
+        }
+    }
+}

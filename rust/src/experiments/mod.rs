@@ -7,6 +7,9 @@
 //! * [`fig8`] — Apache/MySQL throughput in the server environment;
 //! * [`hugepage_ablation`] — speedup / migration-charge savings vs THP
 //!   fraction (the `mem` subsystem's headline experiment);
+//! * [`fabric_ablation`] — fabric-aware vs fabric-blind placement as
+//!   the hot interconnect link narrows (the `fabric` subsystem's
+//!   headline experiment);
 //! * [`runner`] — the shared policy driver;
 //! * [`sweep`] — the deterministic parallel cell runner every grid
 //!   experiment fans out through;
@@ -14,6 +17,7 @@
 //! * [`report`] — table rendering.
 
 pub mod bench_suite;
+pub mod fabric_ablation;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;

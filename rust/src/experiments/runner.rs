@@ -239,7 +239,8 @@ fn run_inner(params: &RunParams, mut trace: Option<&mut ScenarioTrace>) -> RunRe
                 crate::scenario::Event::Launch(s) => {
                     reporter.importance.insert(s.comm.clone(), s.importance);
                 }
-                crate::scenario::Event::MemPressure { comm, .. } => {
+                crate::scenario::Event::MemPressure { comm, .. }
+                | crate::scenario::Event::RemoteHog { comm, .. } => {
                     reporter
                         .importance
                         .insert(comm.clone(), crate::scenario::PRESSURE_IMPORTANCE);

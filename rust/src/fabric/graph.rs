@@ -1,0 +1,187 @@
+//! The interconnect link graph — which sockets are wired to which, and
+//! how much each wire carries.
+//!
+//! A [`LinkGraph`] is a set of undirected point-to-point links with
+//! per-link bandwidth (QPI/UPI lanes between sockets). It comes from an
+//! explicit `links = [[a, b, gbs], ...]` list in config, or is derived
+//! as a ring consistent with [`ring_distance`] — adjacent sockets are
+//! wired, everything further is multi-hop, exactly the assumption the
+//! SLIT fallback already makes. (For 3 nodes the ring *is* the full
+//! mesh, so the two fallbacks agree everywhere.)
+//!
+//! [`ring_distance`]: crate::topology::NumaTopology::ring_distance
+
+/// One undirected interconnect link between two NUMA nodes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Link {
+    pub a: usize,
+    pub b: usize,
+    /// Capacity of the link, GB/s (shared by both directions — QPI
+    /// lanes are full-duplex but our demand model aggregates).
+    pub bandwidth_gbs: f64,
+}
+
+impl Link {
+    /// The endpoint that is not `node` (panics if `node` is neither).
+    pub fn other(&self, node: usize) -> usize {
+        if node == self.a {
+            self.b
+        } else {
+            assert_eq!(node, self.b, "node {node} not on link {self:?}");
+            self.a
+        }
+    }
+
+    /// Unordered endpoint pair (for duplicate detection).
+    fn key(&self) -> (usize, usize) {
+        (self.a.min(self.b), self.a.max(self.b))
+    }
+}
+
+/// The machine's interconnect wiring.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkGraph {
+    nodes: usize,
+    links: Vec<Link>,
+}
+
+impl LinkGraph {
+    /// Build from an explicit link list (config `[[a, b, gbs]]` rows).
+    /// Structure is checked by [`validate`](Self::validate), not here —
+    /// config loading surfaces the error instead of panicking.
+    pub fn explicit(nodes: usize, links: Vec<Link>) -> Self {
+        Self { nodes, links }
+    }
+
+    /// The derived fallback: a ring of equal links, matching the shape
+    /// `ring_distance` assumes (adjacent = 1 hop). 2 nodes get one
+    /// link, 1 node none, 3 nodes a full mesh (ring of 3).
+    pub fn ring(nodes: usize, bandwidth_gbs: f64) -> Self {
+        let links = match nodes {
+            0 | 1 => Vec::new(),
+            2 => vec![Link { a: 0, b: 1, bandwidth_gbs }],
+            _ => (0..nodes)
+                .map(|i| Link { a: i, b: (i + 1) % nodes, bandwidth_gbs })
+                .collect(),
+        };
+        Self { nodes, links }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    pub fn links(&self) -> &[Link] {
+        &self.links
+    }
+
+    pub fn len(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.links.is_empty()
+    }
+
+    /// Structural invariants: endpoints online and distinct, positive
+    /// finite capacities, no duplicate wires. Connectivity is checked
+    /// by route-table construction (`FabricTopology::new`), which
+    /// visits every pair anyway.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut seen = std::collections::BTreeSet::new();
+        for (i, l) in self.links.iter().enumerate() {
+            if l.a >= self.nodes || l.b >= self.nodes {
+                return Err(format!(
+                    "link {i} connects {}-{} on a {}-node machine",
+                    l.a, l.b, self.nodes
+                ));
+            }
+            if l.a == l.b {
+                return Err(format!("link {i} is a self-loop on node {}", l.a));
+            }
+            if !l.bandwidth_gbs.is_finite() || l.bandwidth_gbs <= 0.0 {
+                return Err(format!(
+                    "link {i} ({}-{}) has bandwidth {}",
+                    l.a, l.b, l.bandwidth_gbs
+                ));
+            }
+            if !seen.insert(l.key()) {
+                return Err(format!("duplicate link {}-{}", l.key().0, l.key().1));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Shared matrix validation: square `m` must be symmetric with finite
+/// entries. Used by `NumaTopology::validate` on explicit SLIT matrices
+/// (an asymmetric or non-finite SLIT breaks both the Reporter's scoring
+/// and the fabric's SLIT-weighted routing tie-break) and by fabric
+/// route construction.
+pub fn check_symmetric(m: &[Vec<f64>]) -> Result<(), String> {
+    for (i, row) in m.iter().enumerate() {
+        for (j, &x) in row.iter().enumerate() {
+            if !x.is_finite() {
+                return Err(format!("distance [{i}][{j}] is {x}"));
+            }
+            if j < i {
+                let mirrored = m[j][i];
+                if (x - mirrored).abs() > 1e-9 {
+                    return Err(format!(
+                        "distance matrix asymmetric: [{i}][{j}]={x} vs [{j}][{i}]={mirrored}"
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_shapes() {
+        assert!(LinkGraph::ring(1, 10.0).is_empty());
+        assert_eq!(LinkGraph::ring(2, 10.0).len(), 1);
+        let r3 = LinkGraph::ring(3, 10.0);
+        assert_eq!(r3.len(), 3, "ring of 3 is the full mesh");
+        let r8 = LinkGraph::ring(8, 10.0);
+        assert_eq!(r8.len(), 8);
+        for g in [r3, r8] {
+            g.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn validate_catches_structural_errors() {
+        let bad = |links: Vec<Link>| LinkGraph::explicit(4, links).validate();
+        assert!(bad(vec![Link { a: 0, b: 4, bandwidth_gbs: 1.0 }]).is_err());
+        assert!(bad(vec![Link { a: 2, b: 2, bandwidth_gbs: 1.0 }]).is_err());
+        assert!(bad(vec![Link { a: 0, b: 1, bandwidth_gbs: 0.0 }]).is_err());
+        assert!(bad(vec![Link { a: 0, b: 1, bandwidth_gbs: f64::NAN }]).is_err());
+        let dup = vec![
+            Link { a: 0, b: 1, bandwidth_gbs: 1.0 },
+            Link { a: 1, b: 0, bandwidth_gbs: 2.0 },
+        ];
+        assert!(bad(dup).is_err(), "reversed duplicate detected");
+    }
+
+    #[test]
+    fn link_other_endpoint() {
+        let l = Link { a: 2, b: 5, bandwidth_gbs: 1.0 };
+        assert_eq!(l.other(2), 5);
+        assert_eq!(l.other(5), 2);
+    }
+
+    #[test]
+    fn symmetric_check() {
+        let ok = vec![vec![10.0, 21.0], vec![21.0, 10.0]];
+        assert!(check_symmetric(&ok).is_ok());
+        let asym = vec![vec![10.0, 21.0], vec![25.0, 10.0]];
+        assert!(check_symmetric(&asym).is_err());
+        let nan = vec![vec![10.0, f64::NAN], vec![f64::NAN, 10.0]];
+        assert!(check_symmetric(&nan).is_err());
+    }
+}

@@ -1,0 +1,100 @@
+//! Per-link interconnect contention model — the link-side mirror of
+//! [`MemCtl`](crate::sim::memctl::MemCtl).
+//!
+//! A QPI/UPI link queues exactly like a memory controller: as aggregate
+//! routed demand approaches the link's bandwidth, every transfer that
+//! crosses it stalls. Same M/M/1-style `rho / (1 - rho)` shape, same
+//! one-tick lag (this tick's accesses are priced with the *previous*
+//! tick's utilization, breaking the demand/speed fixed point), same
+//! [`RHO_MAX`] saturation clip on the *pricing* side. The raw committed
+//! utilization is unclipped — overload must stay visible to the monitor
+//! surface, exactly as `MemCtl::rho_raw` now guarantees.
+
+use crate::sim::memctl::RHO_MAX;
+
+/// One interconnect link's queue state.
+#[derive(Clone, Debug)]
+pub struct LinkCtl {
+    /// Capacity, GB/s.
+    pub bandwidth_gbs: f64,
+    /// Demand accumulated for the tick being computed, GB/s.
+    demand: f64,
+    /// Utilization committed by the previous tick (prices this tick).
+    rho_prev: f64,
+}
+
+impl LinkCtl {
+    pub fn new(bandwidth_gbs: f64) -> Self {
+        assert!(bandwidth_gbs > 0.0);
+        Self { bandwidth_gbs, demand: 0.0, rho_prev: 0.0 }
+    }
+
+    /// Add routed demand (GB/s) for the open tick.
+    pub fn add_demand(&mut self, gbs: f64) {
+        debug_assert!(gbs >= 0.0);
+        self.demand += gbs;
+    }
+
+    /// Close the tick: demand becomes the next tick's priced
+    /// utilization. Unclipped — see `MemCtl::commit_tick`.
+    pub fn commit_tick(&mut self) {
+        self.rho_prev = self.demand / self.bandwidth_gbs;
+        self.demand = 0.0;
+    }
+
+    /// Utilization in effect for pricing (clipped at saturation).
+    pub fn rho(&self) -> f64 {
+        self.rho_prev.min(RHO_MAX)
+    }
+
+    /// Raw (unclipped) utilization of the last committed tick — what
+    /// the sysfs-like link-stats surface renders.
+    pub fn rho_raw(&self) -> f64 {
+        self.rho_prev
+    }
+
+    pub fn pending_demand(&self) -> f64 {
+        self.demand
+    }
+
+    /// Queueing delay factor q(rho) = rho/(1-rho), clipped at RHO_MAX.
+    /// The fabric latency term is `weight * q` summed over the route.
+    pub fn queue_factor(&self) -> f64 {
+        let rho = self.rho();
+        rho / (1.0 - rho)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_link_adds_no_latency() {
+        let mut c = LinkCtl::new(10.0);
+        c.commit_tick();
+        assert_eq!(c.queue_factor(), 0.0);
+        assert_eq!(c.rho(), 0.0);
+    }
+
+    #[test]
+    fn demand_prices_next_tick_with_lag() {
+        let mut c = LinkCtl::new(10.0);
+        c.add_demand(5.0);
+        assert_eq!(c.rho(), 0.0, "lagged: open tick not yet priced");
+        c.commit_tick();
+        assert!((c.rho() - 0.5).abs() < 1e-12);
+        assert!((c.queue_factor() - 1.0).abs() < 1e-12);
+        assert_eq!(c.pending_demand(), 0.0);
+    }
+
+    #[test]
+    fn saturation_clips_pricing_but_not_raw() {
+        let mut c = LinkCtl::new(2.0);
+        c.add_demand(20.0);
+        c.commit_tick();
+        assert_eq!(c.rho(), RHO_MAX);
+        assert!((c.rho_raw() - 10.0).abs() < 1e-12, "raw stays unclipped");
+        assert!(c.queue_factor().is_finite());
+    }
+}

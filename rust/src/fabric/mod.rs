@@ -1,0 +1,37 @@
+//! The interconnect fabric subsystem: link topology, routed congestion,
+//! and the pieces fabric-aware placement builds on.
+//!
+//! The per-node [`MemCtl`](crate::sim::memctl::MemCtl) queueing model
+//! prices *node-local* contention, but on real 4–8-socket machines the
+//! second-order NUMA effect is the interconnect itself: every remote
+//! access and every `migrate_pages` burst crosses QPI/UPI links of
+//! finite width, and a saturated link degrades everyone routed over it
+//! no matter how idle the endpoints' controllers are. This module adds
+//! that layer:
+//!
+//! * [`graph`] — [`LinkGraph`]: undirected point-to-point links with
+//!   per-link bandwidth (explicit config lists, or a derived ring
+//!   consistent with `ring_distance`), plus the shared distance-matrix
+//!   validation helpers `topology::validate` reuses;
+//! * [`route`] — [`FabricTopology`]: a precomputed min-hop routing
+//!   table (SLIT-weighted tie-break), validated connected and symmetric
+//!   at construction;
+//! * [`linkctl`] — [`LinkCtl`]: the M/M/1-style, one-tick-lagged
+//!   per-link queue the simulator charges routed GB/s demand into.
+//!
+//! Layering mirrors the `mem` subsystem: topology owns the fabric shape
+//! (`NumaTopology::fabric`), the simulator enforces it (`sim::machine`
+//! routes demand and adds the latency term), `procfs::sysnode` renders
+//! and parses a sysfs-like link-stats surface so the Monitor observes
+//! link load through *text only*, and the proposed scheduler scores
+//! candidate nodes with projected per-link load carried by the
+//! placement ledger. Machines without a `[machine.fabric]` table get
+//! `None` everywhere and run bit-identically to the pre-fabric code.
+
+pub mod graph;
+pub mod linkctl;
+pub mod route;
+
+pub use graph::{check_symmetric, Link, LinkGraph};
+pub use linkctl::LinkCtl;
+pub use route::FabricTopology;

@@ -1,0 +1,291 @@
+//! Precomputed min-hop routing over the link graph.
+//!
+//! Every remote access and page-migration transfer in the simulator
+//! traverses a *path* of links, not a teleport: the routing table maps
+//! each (src, dst) node pair to the link ids along the chosen shortest
+//! path. Paths are minimum-hop; among equal-hop paths the SLIT-weighted
+//! sum of per-hop distances breaks the tie (a QPI route through a
+//! "close" socket beats one through a far socket, like real snoop
+//! routing), and node-index order breaks any remaining tie so the table
+//! is fully deterministic. Construction validates the graph and rejects
+//! disconnected fabrics — a pair with no route would silently drop
+//! traffic.
+
+use super::graph::{check_symmetric, Link, LinkGraph};
+
+/// The fabric as the rest of the system consumes it: validated link
+/// graph + complete routing table + the latency-term weight.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FabricTopology {
+    pub graph: LinkGraph,
+    /// Weight of the fabric latency term in the simulator tick (the
+    /// link-side analogue of `memctl::QUEUE_WEIGHT`). 0 keeps the
+    /// fabric observable (link load is still modeled and rendered)
+    /// without adding latency.
+    pub weight: f64,
+    /// `routes[src * nodes + dst]` = link ids along the chosen path.
+    routes: Vec<Vec<u16>>,
+}
+
+impl FabricTopology {
+    /// Build and validate: graph structure, weight, symmetric SLIT, and
+    /// connectivity (every pair must route).
+    pub fn new(graph: LinkGraph, weight: f64, distance: &[Vec<f64>]) -> Result<Self, String> {
+        graph.validate()?;
+        if !weight.is_finite() || weight < 0.0 {
+            return Err(format!("fabric weight {weight} must be finite and >= 0"));
+        }
+        let nodes = graph.nodes();
+        if distance.len() != nodes || distance.iter().any(|r| r.len() != nodes) {
+            return Err("fabric distance matrix shape must be nodes x nodes".into());
+        }
+        check_symmetric(distance)?;
+        let routes = build_routes(&graph, distance)?;
+        Ok(Self { graph, weight, routes })
+    }
+
+    /// Build from the config table (explicit links or the derived ring).
+    pub fn from_config(
+        cfg: &crate::config::FabricConfig,
+        nodes: usize,
+        distance: &[Vec<f64>],
+    ) -> Result<Self, String> {
+        let graph = match &cfg.links {
+            Some(ls) => LinkGraph::explicit(
+                nodes,
+                ls.iter()
+                    .map(|&(a, b, bandwidth_gbs)| Link { a, b, bandwidth_gbs })
+                    .collect(),
+            ),
+            None => LinkGraph::ring(nodes, cfg.link_bandwidth_gbs),
+        };
+        Self::new(graph, cfg.weight, distance)
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.graph.nodes()
+    }
+
+    /// Number of links (the length every per-link vector must have).
+    pub fn links(&self) -> usize {
+        self.graph.len()
+    }
+
+    /// Link ids along the route from `a` to `b` (empty when `a == b`).
+    pub fn route(&self, a: usize, b: usize) -> &[u16] {
+        &self.routes[a * self.nodes() + b]
+    }
+
+    /// Hop count of the chosen route.
+    pub fn hops(&self, a: usize, b: usize) -> usize {
+        self.route(a, b).len()
+    }
+
+    /// Charge a cross-node traffic matrix to the links it traverses.
+    /// Returns GB/s of demand per link — the conservation property the
+    /// fabric test suite pins: the total equals Σ traffic × hops.
+    pub fn route_demand(&self, traffic: &[(usize, usize, f64)]) -> Vec<f64> {
+        let mut out = vec![0.0; self.links()];
+        for &(a, b, gbs) in traffic {
+            for &l in self.route(a, b) {
+                out[l as usize] += gbs;
+            }
+        }
+        out
+    }
+
+    /// Re-check everything `new` established (topology-level validate).
+    pub fn validate(&self) -> Result<(), String> {
+        self.graph.validate()?;
+        if !self.weight.is_finite() || self.weight < 0.0 {
+            return Err(format!("fabric weight {} invalid", self.weight));
+        }
+        let n = self.nodes();
+        if self.routes.len() != n * n {
+            return Err("fabric routing table has wrong shape".into());
+        }
+        for a in 0..n {
+            for b in 0..n {
+                if a != b && self.route(a, b).is_empty() {
+                    return Err(format!("no fabric route from node {a} to node {b}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Dijkstra per source with lexicographic cost (hops, SLIT path sum)
+/// and node-index tie-break. O(n^2 · links), n <= 8 — negligible, and
+/// run once at construction.
+fn build_routes(graph: &LinkGraph, distance: &[Vec<f64>]) -> Result<Vec<Vec<u16>>, String> {
+    let n = graph.nodes();
+    let mut routes = vec![Vec::new(); n * n];
+    // Adjacency: (link id, neighbor) per node.
+    let mut adj: Vec<Vec<(u16, usize)>> = vec![Vec::new(); n];
+    for (i, l) in graph.links().iter().enumerate() {
+        adj[l.a].push((i as u16, l.b));
+        adj[l.b].push((i as u16, l.a));
+    }
+    for src in 0..n {
+        let mut hops = vec![u32::MAX; n];
+        let mut slit = vec![f64::INFINITY; n];
+        let mut pred: Vec<Option<(usize, u16)>> = vec![None; n];
+        let mut done = vec![false; n];
+        hops[src] = 0;
+        slit[src] = 0.0;
+        loop {
+            // Lowest (hops, slit, index) unvisited node.
+            let mut u: Option<usize> = None;
+            for v in 0..n {
+                if done[v] || hops[v] == u32::MAX {
+                    continue;
+                }
+                let better = match u {
+                    None => true,
+                    Some(best) => (hops[v], slit[v]) < (hops[best], slit[best]),
+                };
+                if better {
+                    u = Some(v);
+                }
+            }
+            let Some(u) = u else { break };
+            done[u] = true;
+            for &(link, v) in &adj[u] {
+                let cand = (hops[u] + 1, slit[u] + distance[u][v]);
+                if cand < (hops[v], slit[v]) {
+                    hops[v] = cand.0;
+                    slit[v] = cand.1;
+                    pred[v] = Some((u, link));
+                }
+            }
+        }
+        for dst in 0..n {
+            if dst == src {
+                continue;
+            }
+            if hops[dst] == u32::MAX {
+                return Err(format!(
+                    "fabric link graph is disconnected: no path {src} -> {dst}"
+                ));
+            }
+            let mut path = Vec::with_capacity(hops[dst] as usize);
+            let mut cur = dst;
+            while cur != src {
+                let (prev, link) = pred[cur].expect("reached node has a predecessor");
+                path.push(link);
+                cur = prev;
+            }
+            path.reverse();
+            routes[src * n + dst] = path;
+        }
+    }
+    Ok(routes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::NumaTopology;
+
+    fn ring_fabric(nodes: usize) -> FabricTopology {
+        FabricTopology::new(
+            LinkGraph::ring(nodes, 10.0),
+            0.35,
+            &NumaTopology::ring_distance(nodes, 21.0),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn ring_routes_are_min_hop() {
+        let f = ring_fabric(8);
+        for a in 0..8 {
+            for b in 0..8 {
+                let fwd = (b + 8 - a) % 8;
+                let want = if a == b { 0 } else { fwd.min(8 - fwd) };
+                assert_eq!(f.hops(a, b), want, "route {a}->{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn routes_are_deterministic() {
+        let a = ring_fabric(8);
+        let b = ring_fabric(8);
+        for x in 0..8 {
+            for y in 0..8 {
+                assert_eq!(a.route(x, y), b.route(x, y));
+            }
+        }
+    }
+
+    #[test]
+    fn disconnected_graph_rejected() {
+        // Node 3 has no wire at all.
+        let g = LinkGraph::explicit(
+            4,
+            vec![
+                Link { a: 0, b: 1, bandwidth_gbs: 10.0 },
+                Link { a: 1, b: 2, bandwidth_gbs: 10.0 },
+            ],
+        );
+        let e = FabricTopology::new(g, 0.35, &NumaTopology::ring_distance(4, 21.0));
+        assert!(e.is_err());
+        assert!(e.unwrap_err().contains("disconnected"));
+    }
+
+    #[test]
+    fn slit_breaks_equal_hop_ties() {
+        // A diamond: 0-1-3 and 0-2-3 are both 2 hops, but the SLIT says
+        // going through node 1 is closer. The route must take it.
+        let g = LinkGraph::explicit(
+            4,
+            vec![
+                Link { a: 0, b: 1, bandwidth_gbs: 10.0 },
+                Link { a: 0, b: 2, bandwidth_gbs: 10.0 },
+                Link { a: 1, b: 3, bandwidth_gbs: 10.0 },
+                Link { a: 2, b: 3, bandwidth_gbs: 10.0 },
+            ],
+        );
+        let d = vec![
+            vec![10.0, 15.0, 30.0, 40.0],
+            vec![15.0, 10.0, 30.0, 15.0],
+            vec![30.0, 30.0, 10.0, 30.0],
+            vec![40.0, 15.0, 30.0, 10.0],
+        ];
+        let f = FabricTopology::new(g, 0.35, &d).unwrap();
+        assert_eq!(f.route(0, 3), &[0, 2], "0-1-3 is SLIT-closer than 0-2-3");
+        assert_eq!(f.route(3, 0), &[2, 0], "reverse route mirrors");
+    }
+
+    #[test]
+    fn route_demand_conserves_hop_weighted_traffic() {
+        let f = ring_fabric(6);
+        let traffic = vec![(0usize, 3usize, 4.0), (1, 2, 2.0), (5, 0, 1.0)];
+        let per_link = f.route_demand(&traffic);
+        let total: f64 = per_link.iter().sum();
+        let want: f64 = traffic
+            .iter()
+            .map(|&(a, b, g)| g * f.hops(a, b) as f64)
+            .sum();
+        assert!((total - want).abs() < 1e-12, "{total} vs {want}");
+        assert!(per_link.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn weight_validated() {
+        let g = LinkGraph::ring(2, 10.0);
+        let d = NumaTopology::ring_distance(2, 20.0);
+        assert!(FabricTopology::new(g.clone(), -0.1, &d).is_err());
+        assert!(FabricTopology::new(g.clone(), f64::NAN, &d).is_err());
+        assert!(FabricTopology::new(g, 0.0, &d).is_ok(), "0 = observe-only");
+    }
+
+    #[test]
+    fn asymmetric_distance_rejected() {
+        let g = LinkGraph::ring(2, 10.0);
+        let d = vec![vec![10.0, 21.0], vec![25.0, 10.0]];
+        assert!(FabricTopology::new(g, 0.35, &d).is_err());
+    }
+}

@@ -24,6 +24,7 @@ pub mod baselines;
 pub mod cli;
 pub mod config;
 pub mod experiments;
+pub mod fabric;
 pub mod mem;
 pub mod monitor;
 pub mod procfs;

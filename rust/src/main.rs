@@ -5,7 +5,8 @@ use std::time::Duration;
 use numasched::cli::{self, Cli, USAGE};
 use numasched::config::{Config, PolicyKind};
 use numasched::experiments::{
-    bench_suite, fig6, fig7, fig8, hugepage_ablation, report::Table, runner, table1,
+    bench_suite, fabric_ablation, fig6, fig7, fig8, hugepage_ablation, report::Table,
+    runner, table1,
 };
 use numasched::monitor::{thread::MonitorThread, Monitor};
 use numasched::procfs::host::HostProcfs;
@@ -36,6 +37,7 @@ fn main() {
         "fig7" => cmd_fig7(&cli),
         "fig8" => cmd_fig8(&cli),
         "ablate-hugepages" => cmd_ablate_hugepages(&cli),
+        "ablate-fabric" => cmd_ablate_fabric(&cli),
         "bench-suite" => cmd_bench_suite(&cli),
         "scenario" => cmd_scenario(&cli),
         "host-monitor" => cmd_host_monitor(&cli),
@@ -187,6 +189,12 @@ fn cmd_fig8(cli: &Cli) -> i32 {
 fn cmd_ablate_hugepages(cli: &Cli) -> i32 {
     let points = hugepage_ablation::run(cli.seed);
     print!("{}", hugepage_ablation::render(&points));
+    0
+}
+
+fn cmd_ablate_fabric(cli: &Cli) -> i32 {
+    let pairs = fabric_ablation::run(cli.seed);
+    print!("{}", fabric_ablation::render(&pairs));
     0
 }
 
@@ -428,7 +436,8 @@ fn cmd_host_monitor(cli: &Cli) -> i32 {
 fn cmd_inspect(_cli: &Cli) -> i32 {
     println!(
         "machine presets: r910-40core (paper testbed), r910-thp (2 MiB pools + TLB), \
-         2node-8core, 8node-64core, 8node-hetero (asymmetric bandwidth/capacity)"
+         2node-8core, 8node-64core, 8node-hetero (asymmetric bandwidth/capacity), \
+         8node-fabric (explicit QPI ring, finite link bandwidth)"
     );
     let mut t = Table::new("workload catalog", &["name", "threads", "mem-intensity", "daemon"]);
     for name in workloads::all_names() {

@@ -15,7 +15,7 @@ pub mod thread;
 
 use crate::procfs::{numa_maps, stat, sysnode, ProcSource};
 
-pub use sample::{NodeSample, Snapshot, TaskSample, TopoView};
+pub use sample::{LinkSample, NodeSample, Snapshot, TaskSample, TopoView};
 
 /// The Monitor: discovered topology + sampling over a `ProcSource`.
 pub struct Monitor {
@@ -155,6 +155,12 @@ impl Monitor {
                 .unwrap_or_default();
             snap.nodes.push(ns);
         }
+        if let Some(text) = source.read_fabric_links() {
+            snap.links = sysnode::parse_fabric_links(&text)
+                .iter()
+                .map(link_sample)
+                .collect();
+        }
         snap
     }
 
@@ -254,6 +260,26 @@ impl Monitor {
             };
             snap.nodes.push(ns);
         }
+        // Fabric link stats: text lands in the reused buffer, stats in
+        // the reused `LinkStat` vector, samples in the snapshot's own
+        // (capacity-retaining, `Copy`-element) vector — zero steady-
+        // state allocations, and a fabric-less source costs one bool.
+        snap.links.clear();
+        bufs.links_text.clear();
+        if source.read_fabric_links_into(&mut bufs.links_text) {
+            sysnode::parse_fabric_links_into(&bufs.links_text, &mut bufs.link_stats);
+            snap.links.extend(bufs.link_stats.iter().map(link_sample));
+        }
+    }
+}
+
+/// Decode one parsed link-stats line into the snapshot's sample form.
+fn link_sample(s: &sysnode::LinkStat) -> LinkSample {
+    LinkSample {
+        node_a: s.node_a,
+        node_b: s.node_b,
+        bw_gbs: s.bw_mbs as f64 / 1000.0,
+        rho: s.rho_milli as f64 / 1000.0,
     }
 }
 
@@ -264,6 +290,8 @@ pub struct SampleBufs {
     stat_text: String,
     maps_text: String,
     numastat_text: String,
+    links_text: String,
+    link_stats: Vec<sysnode::LinkStat>,
 }
 
 impl SampleBufs {
@@ -494,6 +522,50 @@ mod tests {
     }
 
     #[test]
+    fn samples_fabric_links_through_text_only() {
+        let mut m = Machine::new(
+            NumaTopology::from_config(
+                &crate::config::MachineConfig::preset("8node-fabric").unwrap(),
+            ),
+            1,
+        );
+        m.os_balance = false;
+        let pid = m.spawn("w", TaskBehavior::mem_bound(1e9), 1.0, 1, Placement::Node(2));
+        {
+            let p = m.process_mut(pid).unwrap();
+            let total = p.pages.total();
+            let mut v = vec![0; 8];
+            v[1] = total;
+            p.pages.per_node = v;
+        }
+        for _ in 0..3 {
+            m.step();
+        }
+        let mon = Monitor::discover(&m).unwrap();
+        let snap = mon.sample(&m, m.now_ms);
+        assert_eq!(snap.links.len(), 8, "one sample per ring link");
+        let rho = m.fabric_link_rho().unwrap();
+        for (l, &r) in snap.links.iter().zip(&rho) {
+            assert!((l.rho - (r * 1000.0).round() / 1000.0).abs() < 1e-12);
+            assert_eq!(l.bw_gbs, 6.0);
+        }
+        assert!(snap.links[1].rho > 0.1, "the 1-2 link carries the traffic");
+        assert_eq!((snap.links[1].node_a, snap.links[1].node_b), (1, 2));
+
+        // The zero-alloc path is field-identical, links included, and a
+        // later sample against a fabric-less source truncates the slots.
+        let mut snap2 = Snapshot::default();
+        let mut bufs = SampleBufs::new();
+        mon.sample_into(&m, m.now_ms, &mut snap2, &mut bufs);
+        assert_eq!(snap2, snap);
+        let plain = sim();
+        let mon_plain = Monitor::discover(&plain).unwrap();
+        mon_plain.sample_into(&plain, 0.0, &mut snap2, &mut bufs);
+        assert!(snap2.links.is_empty(), "stale link slots must be cleared");
+        assert!(mon_plain.sample(&plain, 0.0).links.is_empty());
+    }
+
+    #[test]
     fn numastat_flows_into_snapshot() {
         let mut m = sim();
         m.spawn("hog", TaskBehavior::mem_bound(1e9), 1.0, 8, Placement::Node(0));
@@ -503,6 +575,46 @@ mod tests {
         let mon = Monitor::discover(&m).unwrap();
         let snap = mon.sample(&m, m.now_ms);
         assert!(snap.nodes[0].total() > 0);
+    }
+
+    #[test]
+    fn overload_demand_roundtrips_unclipped_through_monitor_estimates() {
+        // A 0.5 GB/s toy controller under a 4-thread memory hog commits
+        // rho_raw far above the seed's silent min(_, 4.0) cap. The
+        // numastat counters always carried the unclipped demand, so the
+        // Reporter's estimate (counter deltas / bandwidth) must now
+        // agree with the machine's raw view instead of contradicting it
+        // exactly when overload is worst.
+        let mut cfg = crate::config::MachineConfig::preset("2node-8core").unwrap();
+        cfg.bandwidth_gbs = 0.5;
+        let topo = NumaTopology::from_config(&cfg);
+        let mut m = Machine::new(topo.clone(), 2);
+        m.os_balance = false;
+        m.spawn("hog", TaskBehavior::mem_bound(1e12), 1.0, 4, Placement::Node(0));
+        for _ in 0..5 {
+            m.step();
+        }
+        let raw = m.node_rho()[0];
+        assert!(raw > 4.0, "setup must exceed the old cap: {raw}");
+
+        let mon = Monitor::discover(&m).unwrap();
+        let mut reporter = crate::reporter::Reporter::new(
+            crate::reporter::Backend::Cpu,
+            mon.topo.distance.clone(),
+            topo.bandwidth_gbs.clone(),
+        );
+        let _ = reporter.ingest(&mon.sample(&m, m.now_ms));
+        for _ in 0..10 {
+            m.step();
+        }
+        let rep = reporter.ingest(&mon.sample(&m, m.now_ms)).expect("report");
+        let est_rho = rep.node_demand[0] / topo.bandwidth_gbs[0];
+        assert!(est_rho > 4.0, "monitor estimate clipped: {est_rho}");
+        let raw = m.node_rho()[0];
+        assert!(
+            (est_rho - raw).abs() / raw < 0.05,
+            "estimate {est_rho} and raw rho {raw} must agree (no hidden cap)"
+        );
     }
 
     #[test]

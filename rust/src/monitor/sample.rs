@@ -39,6 +39,19 @@ impl NodeSample {
     }
 }
 
+/// One interconnect link's observed state, decoded from the sysfs-like
+/// link-stats surface (`sysnode::parse_fabric_links`). Empty on fabric-
+/// less sources — every consumer then stays fabric-blind.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkSample {
+    pub node_a: usize,
+    pub node_b: usize,
+    /// Link capacity, GB/s.
+    pub bw_gbs: f64,
+    /// Raw utilization estimate (unclipped; overload reads > 1).
+    pub rho: f64,
+}
+
 /// A full monitoring snapshot at one sampling instant.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Snapshot {
@@ -46,6 +59,8 @@ pub struct Snapshot {
     pub t_ms: f64,
     pub tasks: Vec<TaskSample>,
     pub nodes: Vec<NodeSample>,
+    /// Per-link fabric utilization, in the source's link order.
+    pub links: Vec<LinkSample>,
 }
 
 impl Snapshot {
@@ -100,6 +115,7 @@ mod tests {
                 giant_1g_per_node: vec![],
             }],
             nodes: vec![],
+            links: vec![],
         };
         assert!(snap.task(9).is_some());
         assert!(snap.task(10).is_none());

@@ -98,4 +98,27 @@ pub trait ProcSource {
     ) -> Option<String> {
         None
     }
+
+    /// Raw interconnect link-stats text (see
+    /// [`sysnode::parse_fabric_links`]): one line per link with
+    /// capacity and raw utilization in milli-units. Default: no fabric
+    /// surface — the Monitor then reports no links, and every consumer
+    /// stays fabric-blind. A live-host implementation would synthesize
+    /// the same lines from uncore/UPI counters; this trait method is
+    /// its parse path.
+    fn read_fabric_links(&self) -> Option<String> {
+        None
+    }
+
+    /// Append the link-stats text to `out`; false when the source has
+    /// no fabric surface (nothing appended).
+    fn read_fabric_links_into(&self, out: &mut String) -> bool {
+        match self.read_fabric_links() {
+            Some(s) => {
+                out.push_str(&s);
+                true
+            }
+            None => false,
+        }
+    }
 }

@@ -1,5 +1,9 @@
 //! Parsers for `/sys/devices/system/node/*` files (sysfs side of
-//! Algorithm 1) — `cpulist`, `distance`, `meminfo`, `numastat`.
+//! Algorithm 1) — `cpulist`, `distance`, `meminfo`, `numastat` — plus
+//! the fabric's link-stats surface (an interconnect analogue of
+//! `numastat`, one line per link; real hosts would derive the same
+//! numbers from uncore/UPI perf counters, and this parse path is where
+//! a host backend plugs in).
 
 /// Parse a Linux cpulist ("0-9,20-29,40") into explicit ids.
 pub fn parse_cpulist(s: &str) -> Option<Vec<usize>> {
@@ -111,6 +115,82 @@ pub fn render_numastat(s: &NumaStat) -> String {
     out
 }
 
+/// One interconnect link's stats line, in integer milli-units so the
+/// text is byte-deterministic (no float formatting on the surface).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LinkStat {
+    /// Link index (the topology's link order).
+    pub id: usize,
+    pub node_a: usize,
+    pub node_b: usize,
+    /// Link capacity, MB/s (bandwidth_gbs * 1000, rounded).
+    pub bw_mbs: u64,
+    /// Raw committed utilization * 1000, rounded (unclipped — overload
+    /// reads back as > 1000).
+    pub rho_milli: u64,
+}
+
+/// Render ONE link's stats line (the single owner of the surface
+/// format — the parser below and every renderer go through it, so the
+/// text cannot drift between sources).
+pub fn render_fabric_link_into(s: &LinkStat, out: &mut String) {
+    use std::fmt::Write;
+    let _ = writeln!(
+        out,
+        "link{}: nodes {}-{} bw_mbs {} rho_milli {}",
+        s.id, s.node_a, s.node_b, s.bw_mbs, s.rho_milli
+    );
+}
+
+/// Render link stats into a reusable buffer — one line per link:
+/// `link<i>: nodes <a>-<b> bw_mbs <cap> rho_milli <rho>`.
+pub fn render_fabric_links_into(stats: &[LinkStat], out: &mut String) {
+    for s in stats {
+        render_fabric_link_into(s, out);
+    }
+}
+
+pub fn render_fabric_links(stats: &[LinkStat]) -> String {
+    let mut out = String::new();
+    render_fabric_links_into(stats, &mut out);
+    out
+}
+
+/// Parse link-stats text into a reused vector (the Monitor's zero-alloc
+/// sampling path). Malformed lines are skipped, like the other sysfs
+/// parsers tolerate kernel drift.
+pub fn parse_fabric_links_into(text: &str, out: &mut Vec<LinkStat>) {
+    out.clear();
+    for line in text.lines() {
+        let Some(rest) = line.strip_prefix("link") else { continue };
+        let Some((id, rest)) = rest.split_once(':') else { continue };
+        let Ok(id) = id.trim().parse::<usize>() else { continue };
+        let mut it = rest.split_whitespace();
+        if it.next() != Some("nodes") {
+            continue;
+        }
+        let Some(pair) = it.next() else { continue };
+        if it.next() != Some("bw_mbs") {
+            continue;
+        }
+        let Some(bw) = it.next() else { continue };
+        if it.next() != Some("rho_milli") {
+            continue;
+        }
+        let Some(rho) = it.next() else { continue };
+        let Some((a, b)) = pair.split_once('-') else { continue };
+        let (Ok(node_a), Ok(node_b)) = (a.parse(), b.parse()) else { continue };
+        let (Ok(bw_mbs), Ok(rho_milli)) = (bw.parse(), rho.parse()) else { continue };
+        out.push(LinkStat { id, node_a, node_b, bw_mbs, rho_milli });
+    }
+}
+
+pub fn parse_fabric_links(text: &str) -> Vec<LinkStat> {
+    let mut out = Vec::new();
+    parse_fabric_links_into(text, &mut out);
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,6 +230,36 @@ mod tests {
         let text = "Node 0 MemTotal:       8388608 kB\nNode 0 MemFree: 123 kB\n";
         assert_eq!(parse_memtotal_kb(text), Some(8388608));
         assert_eq!(parse_memtotal_kb("nothing here"), None);
+    }
+
+    #[test]
+    fn fabric_links_roundtrip() {
+        let stats = vec![
+            LinkStat { id: 0, node_a: 0, node_b: 1, bw_mbs: 6000, rho_milli: 1070 },
+            LinkStat { id: 1, node_a: 1, node_b: 2, bw_mbs: 12800, rho_milli: 0 },
+        ];
+        let text = render_fabric_links(&stats);
+        assert!(text.starts_with("link0: nodes 0-1 bw_mbs 6000 rho_milli 1070\n"));
+        assert_eq!(parse_fabric_links(&text), stats);
+    }
+
+    #[test]
+    fn fabric_links_parse_skips_garbage() {
+        let text = "link0: nodes 0-1 bw_mbs 6000 rho_milli 10\n\
+                    bogus line\nlinkX: nodes 0-1 bw_mbs 1 rho_milli 1\n\
+                    link1: nodes 2 bw_mbs 1 rho_milli 1\n";
+        let parsed = parse_fabric_links(text);
+        assert_eq!(parsed.len(), 1);
+        assert_eq!(parsed[0].id, 0);
+    }
+
+    #[test]
+    fn fabric_links_parse_reuses_buffer() {
+        let mut out = vec![LinkStat::default(); 7];
+        parse_fabric_links_into("link3: nodes 4-5 bw_mbs 100 rho_milli 250\n", &mut out);
+        assert_eq!(out.len(), 1, "stale entries cleared");
+        assert_eq!(out[0].node_b, 5);
+        assert_eq!(out[0].rho_milli, 250);
     }
 
     #[test]

@@ -84,6 +84,11 @@ pub struct Report {
     pub node_demand: Vec<f64>,
     /// Node demand imbalance (max-min)/mean.
     pub imbalance: f64,
+    /// Raw per-link fabric utilization, in the monitored source's link
+    /// order (empty on fabric-less machines). The fabric-aware
+    /// scheduler seeds its per-link projections from this; baselines
+    /// ignore it.
+    pub link_rho: Vec<f64>,
 }
 
 /// Per-pid tracked state (EWMA-smoothed estimates).
@@ -345,6 +350,7 @@ impl Reporter {
             by_degradation: by_degradation.into_iter().map(|(p, _)| p).collect(),
             node_demand,
             imbalance,
+            link_rho: snap.links.iter().map(|l| l.rho).collect(),
         })
     }
 
@@ -376,6 +382,7 @@ mod tests {
                 .into_iter()
                 .map(|s| NodeSample { served_local: s, served_remote: 0 })
                 .collect(),
+            links: Vec::new(),
         }
     }
 

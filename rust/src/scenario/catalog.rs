@@ -1,7 +1,8 @@
 //! The scenario catalog — the shipped dynamic-workload timelines.
 //!
-//! Six entries, spanning all five machine presets and every event kind,
-//! chosen to hit the failure modes a t=0-static harness can never see:
+//! Seven entries, spanning all six machine presets and every event
+//! kind, chosen to hit the failure modes a t=0-static harness can never
+//! see:
 //!
 //! | name            | preset       | stresses                              |
 //! |-----------------|--------------|---------------------------------------|
@@ -11,6 +12,7 @@
 //! | `fork-storm`    | 8node-64core | one service forking a brood, then reaping it |
 //! | `arrival-wave`  | 8node-hetero | staggered arrivals onto asymmetric nodes |
 //! | `flapper`       | 2node-8core  | adversarial intensity flapping timed near the cooldown |
+//! | `link-storm`    | 8node-fabric | interconnect saturation: streamers pinning one QPI link at its limit |
 //!
 //! Every entry is fully parameterized (preset, seed, horizon, events),
 //! so `record`/`replay` are reproducible from the name alone. Golden
@@ -24,13 +26,14 @@ use crate::workloads::{mix, parsec, server};
 use super::{Event, Scenario, TimedEvent};
 
 /// Every catalog scenario name, in listing order.
-pub const NAMES: [&str; 6] = [
+pub const NAMES: [&str; 7] = [
     "phase-flip",
     "server-churn",
     "pressure-spike",
     "fork-storm",
     "arrival-wave",
     "flapper",
+    "link-storm",
 ];
 
 fn base(preset: &str, horizon_ms: f64) -> RunParams {
@@ -204,6 +207,42 @@ fn flapper() -> Scenario {
     }
 }
 
+fn link_storm() -> Scenario {
+    let mut params = base("8node-fabric", 9_000.0);
+    params.specs = vec![measured("canneal")];
+    // Four pinned streamers (threads on node 2, pages on node 1): each
+    // pushes ~1.6 GB/s across the 6 GB/s 1-2 ring link, saturating it —
+    // and their demand lands on node 1's controller on top. A pressure
+    // hog also slams node 4: that is the node the static admin's
+    // seed-42 draw pins the measured app to, the paper's "depends on
+    // the technical ability of the administrator" failure in one event.
+    let mut events: Vec<TimedEvent> = (0..4)
+        .map(|k| {
+            TimedEvent::at(
+                500.0,
+                Event::RemoteHog {
+                    comm: format!("storm-{k}"),
+                    cpu_node: 2,
+                    mem_node: 1,
+                    pages: 100_000,
+                },
+            )
+        })
+        .collect();
+    events.push(TimedEvent::at(
+        700.0,
+        Event::MemPressure { comm: "pressure-n4".into(), node: 4, pages: 250_000 },
+    ));
+    params.events = events;
+    Scenario {
+        name: "link-storm",
+        description: "pinned streamers saturate one QPI link while a hog \
+                      slams the admin's favorite node — fabric-aware \
+                      placement must route around both",
+        params,
+    }
+}
+
 /// Build every catalog scenario, in [`NAMES`] order.
 pub fn all() -> Vec<Scenario> {
     vec![
@@ -213,6 +252,7 @@ pub fn all() -> Vec<Scenario> {
         fork_storm(),
         arrival_wave(),
         flapper(),
+        link_storm(),
     ]
 }
 
@@ -255,7 +295,7 @@ mod tests {
     }
 
     #[test]
-    fn catalog_spans_all_five_presets() {
+    fn catalog_spans_all_six_presets() {
         let mut presets: Vec<String> =
             all().iter().map(|s| s.params.machine.preset.clone()).collect();
         presets.sort();
@@ -265,6 +305,7 @@ mod tests {
             vec![
                 "2node-8core".to_string(),
                 "8node-64core".into(),
+                "8node-fabric".into(),
                 "8node-hetero".into(),
                 "r910-40core".into(),
                 "r910-thp".into(),
@@ -280,6 +321,6 @@ mod tests {
                 kinds.insert(ev.event.kind());
             }
         }
-        assert_eq!(kinds.len(), 6, "all event kinds covered: {kinds:?}");
+        assert_eq!(kinds.len(), 7, "all event kinds covered: {kinds:?}");
     }
 }

@@ -67,6 +67,13 @@ pub enum Event {
     /// Every running process with this comm forks `children` twins
     /// named `<comm>-kid` (kill the brood with one `Exit`).
     Fork { comm: String, children: usize },
+    /// A link-saturating streamer: a single-threaded, fully memory-
+    /// bound hog pinned to `cpu_node` whose `pages`-sized working set
+    /// is stranded on `mem_node` — every access it issues crosses the
+    /// fabric route between the two nodes forever (it is pinned, so
+    /// neither the OS balancer nor consolidation dissolves it). The
+    /// building block of link-storm scenarios; end it with `Exit`.
+    RemoteHog { comm: String, cpu_node: usize, mem_node: usize, pages: u64 },
 }
 
 impl Event {
@@ -80,6 +87,7 @@ impl Event {
             Event::MemPressure { .. } => "mem_pressure",
             Event::DaemonBurst { .. } => "daemon_burst",
             Event::Fork { .. } => "fork",
+            Event::RemoteHog { .. } => "remote_hog",
         }
     }
 
@@ -96,7 +104,8 @@ impl Event {
             Event::Launch(_)
             | Event::MemPressure { .. }
             | Event::DaemonBurst { .. }
-            | Event::Fork { .. } => Some(PidFate::Spawned),
+            | Event::Fork { .. }
+            | Event::RemoteHog { .. } => Some(PidFate::Spawned),
         }
     }
 }
@@ -341,6 +350,46 @@ impl EventEngine {
                     pages: None,
                 }
             }
+            Event::RemoteHog { comm, cpu_node, mem_node, pages } => {
+                assert!(
+                    *cpu_node < m.topo.nodes && *mem_node < m.topo.nodes,
+                    "remote hog nodes out of range"
+                );
+                let behavior = TaskBehavior {
+                    work_units: f64::INFINITY,
+                    mem_intensity: 1.0,
+                    ws_pages: (*pages).max(1),
+                    shared_frac: 0.0,
+                    exchange: 0.0,
+                    granularity: 1.0,
+                    phase_period_ms: 0.0,
+                    phase_amplitude: 0.0,
+                    thp_fraction: 0.0,
+                };
+                let pid =
+                    m.spawn(comm, behavior, PRESSURE_IMPORTANCE, 1, Placement::Node(*cpu_node));
+                m.pin_process(pid, *cpu_node);
+                {
+                    // Strand the whole working set remotely — as if it
+                    // faulted in before an affinity change, the classic
+                    // way real boxes end up streaming over one QPI link.
+                    let p = m.process_mut(pid).expect("just spawned");
+                    let total = p.pages.total();
+                    let mut v = vec![0; m.topo.nodes];
+                    v[*mem_node] = total;
+                    p.pages.per_node = v;
+                    p.pages.bump_generation();
+                }
+                FiredEvent {
+                    t_ms,
+                    kind,
+                    fate,
+                    comm: comm.clone(),
+                    pids: vec![pid],
+                    node: Some(*mem_node),
+                    pages: Some((*pages).max(1)),
+                }
+            }
             Event::Fork { comm, children } => {
                 let parents = Self::running_with_comm(m, comm);
                 let kid_comm = format!("{comm}-kid");
@@ -556,6 +605,7 @@ mod tests {
             Event::MemPressure { comm: "p".into(), node: 0, pages: 1 },
             Event::DaemonBurst { count: 1, work_units: 1.0 },
             Event::Fork { comm: "x".into(), children: 1 },
+            Event::RemoteHog { comm: "s".into(), cpu_node: 0, mem_node: 1, pages: 1 },
         ];
         for ev in spawned {
             assert_eq!(ev.pid_fate(), Some(PidFate::Spawned), "{}", ev.kind());
@@ -567,6 +617,38 @@ mod tests {
             EventEngine::new(vec![TimedEvent::at(0.0, Event::Exit { comm: "web".into() })]);
         e.tick(&mut m);
         assert_eq!(e.drain_fired()[0].pid_fate(), Some(PidFate::Exited));
+    }
+
+    #[test]
+    fn remote_hog_pins_threads_and_strands_pages_remotely() {
+        let mut m = small_machine();
+        let mut e = EventEngine::new(vec![
+            TimedEvent::at(
+                0.0,
+                Event::RemoteHog {
+                    comm: "stream".into(),
+                    cpu_node: 0,
+                    mem_node: 1,
+                    pages: 5_000,
+                },
+            ),
+            TimedEvent::at(3.0, Event::Exit { comm: "stream".into() }),
+        ]);
+        e.tick(&mut m);
+        let fired = e.drain_fired();
+        assert_eq!(fired[0].kind, "remote_hog");
+        assert_eq!(fired[0].node, Some(1), "mem node recorded in the trace");
+        let pid = fired[0].pids[0];
+        let p = m.process(pid).unwrap();
+        assert_eq!(p.pinned_node, Some(0), "threads pinned to the cpu node");
+        assert_eq!(p.pages.per_node, vec![0, 5_000], "working set stranded");
+        assert!(p.behavior.is_daemon());
+        // It streams until the Exit reaps it.
+        for _ in 0..5 {
+            e.tick(&mut m);
+            m.step();
+        }
+        assert!(!m.process(pid).unwrap().is_running());
     }
 
     #[test]

@@ -55,6 +55,11 @@ pub struct PlacementLedger {
     /// Epoch-scoped projected controller demand (reset by `begin_epoch`,
     /// bumped by accepted moves so one epoch cannot stampede a node).
     projected: Vec<f64>,
+    /// Epoch-scoped projected fabric link utilization (reset by
+    /// `begin_epoch_links` from the Reporter's observed link rho,
+    /// bumped by accepted moves' routed traffic so one epoch cannot
+    /// stampede a link either). Empty on fabric-less machines.
+    projected_links: Vec<f64>,
 }
 
 impl PlacementLedger {
@@ -75,6 +80,7 @@ impl PlacementLedger {
             last_move_ms: BTreeMap::new(),
             occupied: vec![0; nodes],
             projected: Vec::new(),
+            projected_links: Vec::new(),
         }
     }
 
@@ -195,6 +201,31 @@ impl PlacementLedger {
         }
     }
 
+    // ------------------------------------------- link-load projection
+
+    /// Seed the per-link projection from the Reporter's observed link
+    /// utilization (one call per epoch, fabric machines only).
+    pub fn begin_epoch_links(&mut self, link_rho: &[f64]) {
+        self.projected_links.clear();
+        self.projected_links.extend_from_slice(link_rho);
+    }
+
+    /// Projected utilization of link `l` this epoch (0 when the fabric
+    /// is absent or the index is out of range).
+    pub fn link_projected(&self, l: usize) -> f64 {
+        self.projected_links.get(l).copied().unwrap_or(0.0)
+    }
+
+    /// Account traffic an accepted move will route over link `l`
+    /// (`delta_rho` = GB/s over the link's bandwidth). Clamped below at
+    /// zero by construction: projections only grow within an epoch.
+    pub fn project_link_load(&mut self, l: usize, delta_rho: f64) {
+        debug_assert!(delta_rho >= 0.0);
+        if l < self.projected_links.len() {
+            self.projected_links[l] += delta_rho;
+        }
+    }
+
     // ------------------------------------------------------ invariants
 
     /// The oracle: every structural property the accounting must uphold,
@@ -232,6 +263,14 @@ impl PlacementLedger {
         for (n, &x) in self.projected.iter().enumerate() {
             if !x.is_finite() || x < 0.0 {
                 return Err(format!("projection for node {n} is {x}"));
+            }
+        }
+        // Link-load balance: every projected link utilization must stay
+        // finite and non-negative (an epoch only ever *adds* routed
+        // load on top of the observed rho).
+        for (l, &x) in self.projected_links.iter().enumerate() {
+            if !x.is_finite() || x < 0.0 {
+                return Err(format!("link projection for link {l} is {x}"));
             }
         }
         Ok(())
@@ -350,6 +389,32 @@ mod tests {
         l.begin_epoch(&[2.0]);
         assert_eq!(l.projected(3), 0.0);
         l.check_invariants(&live(&[])).unwrap();
+    }
+
+    #[test]
+    fn link_projections_accumulate_and_validate() {
+        let mut l = ledger();
+        l.begin_epoch_links(&[0.2, 0.9, 0.0]);
+        assert_eq!(l.link_projected(1), 0.9);
+        assert_eq!(l.link_projected(7), 0.0, "out of range reads as idle");
+        l.project_link_load(0, 0.5);
+        assert!((l.link_projected(0) - 0.7).abs() < 1e-12);
+        l.project_link_load(99, 1.0); // out of range: ignored
+        l.check_invariants(&live(&[])).unwrap();
+        // A fresh epoch replaces the previous projections wholesale.
+        l.begin_epoch_links(&[0.1]);
+        assert_eq!(l.link_projected(1), 0.0);
+        l.check_invariants(&live(&[])).unwrap();
+    }
+
+    #[test]
+    fn invariant_oracle_catches_bad_link_projection() {
+        let mut l = ledger();
+        l.begin_epoch_links(&[0.1, f64::NAN]);
+        assert!(l.check_invariants(&live(&[])).is_err());
+        let mut l = ledger();
+        l.begin_epoch_links(&[-0.5]);
+        assert!(l.check_invariants(&live(&[])).is_err());
     }
 
     #[test]

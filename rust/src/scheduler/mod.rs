@@ -20,6 +20,7 @@ pub mod powerful;
 use std::collections::{BTreeMap, BTreeSet};
 
 use crate::config::{SchedulerConfig, StaticPin};
+use crate::fabric::FabricTopology;
 use crate::reporter::{RankedTask, Report};
 use crate::topology::NumaTopology;
 
@@ -86,6 +87,15 @@ pub struct UserScheduler {
     pub pins: BTreeMap<String, usize>,
     /// Decision log.
     pub decisions: Vec<Decision>,
+    /// Score penalty per unit of projected route utilization when the
+    /// fabric is congested (fabric-aware candidate re-ranking).
+    pub fabric_score_weight: f64,
+    /// Interconnect topology for congestion-aware scoring. `None` (all
+    /// fabric-less machines) keeps the scheduler byte-for-byte on the
+    /// pre-fabric decision path; the baselines never carry one — that
+    /// blindness is exactly the differential `scenario_differential`
+    /// and the fabric ablation measure.
+    fabric: Option<FabricTopology>,
 
     /// Occupancy / cooldown / projection accounting. Constructed from
     /// the machine topology; static pins and scheduler placements both
@@ -124,8 +134,52 @@ impl UserScheduler {
                 .map(|StaticPin { process, node }| (process.clone(), *node))
                 .collect(),
             decisions: Vec::new(),
+            fabric_score_weight: 1.0,
+            fabric: topo.fabric.clone(),
             ledger: PlacementLedger::from_topology(topo),
         }
+    }
+
+    /// Where a task's pages (and therefore the far end of every route a
+    /// candidate node must pay for) predominantly live. Ties keep the
+    /// last maximum, mirroring the Reporter's `max_by` tie-break.
+    fn page_home(task: &RankedTask) -> usize {
+        task.pages_per_node
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.cmp(b.1))
+            .map(|(n, _)| n)
+            .unwrap_or(task.node)
+    }
+
+    /// Worst projected utilization along the fabric route `a` -> `b`.
+    fn route_congestion(&self, a: usize, b: usize) -> f64 {
+        let Some(f) = self.fabric.as_ref() else { return 0.0 };
+        if a == b || a >= f.nodes() || b >= f.nodes() {
+            return 0.0;
+        }
+        f.route(a, b)
+            .iter()
+            .map(|&l| self.ledger.link_projected(l as usize))
+            .fold(0.0, f64::max)
+    }
+
+    /// Re-rank the candidate row with projected fabric congestion: each
+    /// node's speedup score is docked by the hottest projected link on
+    /// the route its post-move traffic (sticky-page burst + residual
+    /// remote accesses) would take. Tie-break matches the Reporter's
+    /// `max_by` (last maximum), so with an idle fabric this reproduces
+    /// `(task.best_node, task.best_score)` exactly — callers only
+    /// invoke it when some link is actually loaded.
+    fn fabric_adjusted_best(&self, task: &RankedTask, page_home: usize) -> (usize, f64) {
+        let mut best = (task.node, f64::NEG_INFINITY);
+        for (n, &s) in task.scores.iter().enumerate() {
+            let adj = s - self.fabric_score_weight * self.route_congestion(page_home, n);
+            if adj >= best.1 {
+                best = (n, adj);
+            }
+        }
+        best
     }
 
     /// The occupancy view (read-only; tests and the runner's invariant
@@ -217,6 +271,19 @@ impl UserScheduler {
         //    load doesn't count: the OS balancer spreads it around our
         //    placements.
         self.ledger.begin_epoch(&report.node_demand);
+        // Fabric-aware epoch state: engage only when the machine has a
+        // fabric, the Monitor's link stats line up with it, and some
+        // link actually carries load — a fully idle fabric leaves every
+        // decision bit-identical to the blind path (zero-link-demand
+        // runs reproduce pre-fabric results).
+        let fab_on = self
+            .fabric
+            .as_ref()
+            .is_some_and(|f| f.links() == report.link_rho.len() && f.links() > 0)
+            && report.link_rho.iter().any(|&r| r > 1e-9);
+        if fab_on {
+            self.ledger.begin_epoch_links(&report.link_rho);
+        }
         let total_threads: i64 = report.by_speedup.iter().map(|t| t.threads).sum();
         // Placements on one node may not exceed the balanced per-node
         // share (plus a small slack) — that bounds the powerful-core
@@ -238,7 +305,19 @@ impl UserScheduler {
             // test is about *net* gain). Freight is measured in ledger
             // ops, so THP-backed sets clear a far lower bar.
             let needed = self.min_gain * (1.0 + freight_ops(task) / 100_000.0);
-            if task.best_node == task.node || task.best_score < needed {
+            // Candidate choice: the Reporter's best node — unless the
+            // fabric is loaded, in which case every candidate's score
+            // is docked by the congestion of the route its post-move
+            // traffic would take, and the best *adjusted* candidate
+            // wins (routing around hot links; the baselines never do
+            // this).
+            let page_home = Self::page_home(task);
+            let (target, score) = if fab_on {
+                self.fabric_adjusted_best(task, page_home)
+            } else {
+                (task.best_node, task.best_score)
+            };
+            if target == task.node || score < needed {
                 continue;
             }
             if self.ledger.in_cooldown(task.pid, t, self.cooldown_ms) {
@@ -247,7 +326,6 @@ impl UserScheduler {
             // Don't stampede one node: each accepted move adds its demand
             // to the target's projection; skip if the target would become
             // the new hottest node.
-            let target = task.best_node;
             let new_target_demand = self.ledger.projected(target) + task.mem_intensity;
             let hottest = self.ledger.hottest_projection();
             if new_target_demand > hottest.max(1e-9) * 1.10 && moves > 0 {
@@ -269,6 +347,18 @@ impl UserScheduler {
                 0
             };
             self.ledger.project_move(task.node, target, task.mem_intensity);
+            if fab_on {
+                // The sticky-page burst and the residual remote accesses
+                // ride the page_home <-> target route: raise its links'
+                // projected utilization so one epoch cannot stampede a
+                // single link with several accepted moves.
+                if let Some(f) = self.fabric.as_ref() {
+                    for &l in f.route(page_home, target) {
+                        let bw = f.graph.links()[l as usize].bandwidth_gbs;
+                        self.ledger.project_link_load(l as usize, task.mem_intensity / bw);
+                    }
+                }
+            }
             self.ledger.record_placement(task.pid, target, task.threads, false);
             let d = Decision {
                 t_ms: t,
@@ -392,6 +482,7 @@ mod tests {
             by_degradation,
             node_demand: vec![4.0, 1.0, 1.0, 1.0],
             imbalance: 1.0,
+            link_rho: Vec::new(),
         }
     }
 
@@ -581,6 +672,66 @@ mod tests {
         let dec = s.apply(&report(vec![t], true), &mut ctl);
         assert_eq!(dec.len(), 1);
         assert_eq!(dec[0].reason, Reason::Contention);
+    }
+
+    #[test]
+    fn fabric_congestion_reroutes_the_candidate() {
+        let topo = crate::topology::NumaTopology::from_config(
+            &crate::config::MachineConfig::preset("8node-fabric").unwrap(),
+        );
+        // A task on node 1 with pages there, and two equally-scored
+        // escape candidates: node 0 (route over ring link 0, idle) and
+        // node 2 (route over ring link 1, which the report marks hot).
+        let mk_task = || {
+            let mut t = ranked(1, "a", 1, 2, 5.0, 0.0);
+            t.scores = vec![5.0, 0.0, 5.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+            t.pages_per_node = vec![0, 1000, 0, 0, 0, 0, 0, 0];
+            t.huge_2m_per_node = vec![0; 8];
+            t.giant_1g_per_node = vec![0; 8];
+            t
+        };
+        let mk_report = |hot: bool| {
+            let mut rep = report(vec![mk_task()], true);
+            rep.node_demand = vec![0.5, 4.0, 0.5, 0.5, 0.5, 0.5, 0.5, 0.5];
+            rep.link_rho = vec![0.0; 8];
+            if hot {
+                rep.link_rho[1] = 0.9;
+            }
+            rep
+        };
+
+        // Idle fabric: bit-identical to the blind path — the Reporter's
+        // best_node (the last tied maximum, node 2) wins.
+        let mut s = UserScheduler::new(&crate::config::SchedulerConfig::default(), &topo);
+        let mut ctl = MockCtl::default();
+        let dec = s.apply(&mk_report(false), &mut ctl);
+        assert_eq!(dec.len(), 1);
+        assert_eq!(ctl.moves, vec![(1, 2)], "idle fabric keeps the blind choice");
+
+        // Hot 1-2 link: the adjusted ranking docks node 2 and the move
+        // routes around the congestion onto node 0 instead.
+        let mut s = UserScheduler::new(&crate::config::SchedulerConfig::default(), &topo);
+        let mut ctl = MockCtl::default();
+        let dec = s.apply(&mk_report(true), &mut ctl);
+        assert_eq!(dec.len(), 1);
+        assert_eq!(ctl.moves, vec![(1, 0)], "hot link must be routed around");
+        // The accepted move's routed traffic lands in the projection.
+        assert!(s.ledger().link_projected(0) > 0.0, "route 1->0 projected");
+        s.check_ledger([1]).unwrap();
+    }
+
+    #[test]
+    fn fabric_blind_machines_never_consult_link_rho() {
+        // A 4-node fabric-less topology: even a (bogus) hot link_rho in
+        // the report must not perturb decisions — the scheduler carries
+        // no fabric and stays on the pre-fabric path.
+        let mut s = sched();
+        let mut ctl = MockCtl::default();
+        let mut rep = report(vec![ranked(1, "a", 0, 2, 5.0, 0.1)], true);
+        rep.link_rho = vec![0.9; 4];
+        let dec = s.apply(&rep, &mut ctl);
+        assert_eq!(dec.len(), 1);
+        assert_eq!(ctl.moves, vec![(1, 2)]);
     }
 
     #[test]

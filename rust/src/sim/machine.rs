@@ -15,6 +15,7 @@
 use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
 
+use crate::fabric::{FabricTopology, LinkCtl};
 use crate::mem::{HugePagePool, PageTier};
 use crate::procfs::{numa_maps, stat, sysnode, ProcSource};
 use crate::topology::NumaTopology;
@@ -41,6 +42,15 @@ pub const MIG_PAGES_PER_MS: u64 = 4000;
 /// 2 MiB page charges exactly 512x this (`PageTier::migration_gb`) —
 /// but cost only one ledger operation.
 pub const MIG_GB_PER_PAGE: f64 = 2.0 * 4096.0 / 1e9;
+
+/// Hot-link migration surcharge: migration bytes routed over a link at
+/// utilization rho are charged `(1 + SURCHARGE * rho)`x to that link —
+/// retries/backpressure on a congested QPI lane inflate the traffic a
+/// bulk `migrate_pages` burst actually puts on the wire. Only fabric
+/// link charges carry the surcharge; the destination *controller*
+/// charge is unchanged, so fabric-less machines price migrations
+/// exactly as before.
+pub const LINK_MIG_SURCHARGE: f64 = 1.0;
 
 /// Where to place a spawning process's threads.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -95,6 +105,98 @@ pub struct Machine {
     /// clones in `migrate_pages`/`migrate_pages_from`.
     mig_scratch_2m: Vec<u64>,
     mig_scratch_1g: Vec<u64>,
+    /// Per-node 4 KiB-equivalent totals before a migration (fabric
+    /// route charging needs per-source moved counts). Only touched on
+    /// fabric machines.
+    mig_scratch_nodes: Vec<u64>,
+    /// Interconnect state: per-link queues + routed-demand plumbing.
+    /// `None` (every fabric-less topology) leaves the tick loop
+    /// bit-identical to the pre-fabric simulator.
+    fabric: Option<FabricState>,
+}
+
+/// The simulator-side fabric: one [`LinkCtl`] per link of the machine's
+/// [`FabricTopology`], plus the per-tick migration charge and the
+/// per-pair latency penalties derived from the (lagged) link queues.
+struct FabricState {
+    topo: FabricTopology,
+    ctls: Vec<LinkCtl>,
+    /// Migration traffic to charge to links next tick, GB/s-equivalent
+    /// (hot-link surcharge already applied).
+    charge: Vec<f64>,
+    /// `pair_pen[a * nodes + b]`: fabric latency penalty of an access
+    /// issued on node `a` hitting memory on node `b` — `weight * q(rho)`
+    /// summed over the route's links, recomputed once per tick from the
+    /// previous tick's utilization (same lag discipline as `MemCtl`).
+    pair_pen: Vec<f64>,
+}
+
+impl FabricState {
+    fn new(topo: FabricTopology) -> Self {
+        let links = topo.links();
+        Self {
+            ctls: topo
+                .graph
+                .links()
+                .iter()
+                .map(|l| LinkCtl::new(l.bandwidth_gbs))
+                .collect(),
+            charge: vec![0.0; links],
+            pair_pen: vec![0.0; topo.nodes() * topo.nodes()],
+            topo,
+        }
+    }
+
+    /// Rebuild the pair-penalty matrix from the lagged link queues.
+    fn refresh_pair_penalties(&mut self) {
+        let n = self.topo.nodes();
+        let w = self.topo.weight;
+        for a in 0..n {
+            for b in 0..n {
+                let pen = if a == b {
+                    0.0
+                } else {
+                    self.topo
+                        .route(a, b)
+                        .iter()
+                        .map(|&l| w * self.ctls[l as usize].queue_factor())
+                        .sum()
+                };
+                self.pair_pen[a * n + b] = pen;
+            }
+        }
+    }
+
+    fn pen(&self, a: usize, b: usize) -> f64 {
+        self.pair_pen[a * self.topo.nodes() + b]
+    }
+
+    /// Charge access demand crossing from node `a` to node `b` to every
+    /// link on the route (accumulates into the open tick).
+    fn add_route_demand(&mut self, a: usize, b: usize, gbs: f64) {
+        for &l in self.topo.route(a, b) {
+            self.ctls[l as usize].add_demand(gbs);
+        }
+    }
+
+    /// Charge a migration burst from `src` to `dst`, with the hot-link
+    /// surcharge priced at each link's current (lagged) utilization.
+    fn add_route_charge(&mut self, src: usize, dst: usize, gbs: f64) {
+        for &l in self.topo.route(src, dst) {
+            let l = l as usize;
+            self.charge[l] += gbs * (1.0 + LINK_MIG_SURCHARGE * self.ctls[l].rho());
+        }
+    }
+
+    /// Close the tick on every link (migration charge rides on top of
+    /// the routed access demand accumulated during the tick).
+    fn commit_tick(&mut self) {
+        for (ctl, charge) in self.ctls.iter_mut().zip(&mut self.charge) {
+            ctl.add_demand(*charge);
+            *charge = 0.0;
+            ctl.commit_tick();
+        }
+    }
 }
 
 /// One cached numa_maps render (see `Machine::maps_cache`).
@@ -111,6 +213,7 @@ impl Machine {
         topo.validate().expect("invalid topology");
         let nodes = topo.nodes;
         let cores = topo.total_cores();
+        let topo_fabric = topo.fabric.clone().map(FabricState::new);
         Self {
             ctls: topo.bandwidth_gbs.iter().map(|&b| MemCtl::new(b)).collect(),
             cores: vec![Vec::new(); cores],
@@ -143,6 +246,8 @@ impl Machine {
             maps_cache_misses: Cell::new(0),
             mig_scratch_2m: Vec::new(),
             mig_scratch_1g: Vec::new(),
+            mig_scratch_nodes: Vec::new(),
+            fabric: topo_fabric,
         }
     }
 
@@ -254,6 +359,14 @@ impl Machine {
         self.ctls.iter().map(MemCtl::rho_raw).collect()
     }
 
+    /// Committed raw utilization per fabric link, in the topology's
+    /// link order; `None` on fabric-less machines.
+    pub fn fabric_link_rho(&self) -> Option<Vec<f64>> {
+        self.fabric
+            .as_ref()
+            .map(|f| f.ctls.iter().map(LinkCtl::rho_raw).collect())
+    }
+
     pub fn core_load(&self, core: usize) -> usize {
         self.cores[core].len()
     }
@@ -324,12 +437,19 @@ impl Machine {
         // alias them.
         let mut before_2m = std::mem::take(&mut self.mig_scratch_2m);
         let mut before_1g = std::mem::take(&mut self.mig_scratch_1g);
+        let mut before_nodes = std::mem::take(&mut self.mig_scratch_nodes);
+        let fabric_on = self.fabric.is_some();
+        let nodes = self.topo.nodes;
         let mut moved = 0;
         if let Some(p) = self.procs.get_mut(&pid) {
             before_2m.clear();
             before_2m.extend_from_slice(&p.pages.huge_2m);
             before_1g.clear();
             before_1g.extend_from_slice(&p.pages.giant_1g);
+            if fabric_on {
+                before_nodes.clear();
+                before_nodes.extend((0..nodes).map(|n| p.pages.node_total(n)));
+            }
             let ops_before = p.pages.migrate_ops;
             moved = match src {
                 None => p.pages.migrate_toward(dst, budget),
@@ -343,11 +463,33 @@ impl Machine {
                 self.mig_charge[dst] += gb / (self.dt_ms / 1000.0);
                 self.total_pages_migrated += moved;
                 self.total_migration_ops += ops;
+                if fabric_on {
+                    // Per-source moved counts (4 KiB equivalents): what
+                    // each src->dst route must carry.
+                    for n in 0..nodes {
+                        before_nodes[n] =
+                            before_nodes[n].saturating_sub(p.pages.node_total(n));
+                    }
+                }
                 self.rebalance_huge_pools(pid, &before_2m, &before_1g);
+            }
+        }
+        // Charge the per-source transfers to the fabric routes (the
+        // destination's own entry saturated to 0 above — it grew).
+        if moved > 0 {
+            if let Some(f) = self.fabric.as_mut() {
+                let secs = self.dt_ms / 1000.0;
+                for (n, &pages) in before_nodes.iter().enumerate() {
+                    if n == dst || pages == 0 {
+                        continue;
+                    }
+                    f.add_route_charge(n, dst, pages as f64 * MIG_GB_PER_PAGE / secs);
+                }
             }
         }
         self.mig_scratch_2m = before_2m;
         self.mig_scratch_1g = before_1g;
+        self.mig_scratch_nodes = before_nodes;
         moved
     }
 
@@ -405,6 +547,12 @@ impl Machine {
         let mut new_demand = vec![0.0f64; nodes];
         let mut hits = vec![0u64; nodes];
         let mut misses = vec![0u64; nodes];
+        // Fabric: detach for the tick (disjoint from the proc borrow
+        // below) and refresh the lagged per-pair link penalties.
+        let mut fabric = self.fabric.take();
+        if let Some(f) = fabric.as_mut() {
+            f.refresh_pair_penalties();
+        }
 
         for p in self.procs.values_mut() {
             if !p.is_running() || p.nthreads() == 0 {
@@ -438,6 +586,12 @@ impl Machine {
                     let dist_pen = self.topo.distance[my_node][n] / 10.0 - 1.0;
                     let queue_pen = lat_mult[n] - 1.0;
                     penalty += fracs[n] * (dist_pen + queue_pen);
+                    // Remote accesses also queue on every interconnect
+                    // link along the route (lagged, like the controller
+                    // term above). Local accesses pay nothing.
+                    if let Some(f) = fabric.as_ref() {
+                        penalty += fracs[n] * f.pen(my_node, n);
+                    }
                 }
                 let speed = 1.0 / (1.0 + MEM_WEIGHT * mi * penalty + tlb_pen);
                 // Timeshare: the core splits dt across its run queue.
@@ -485,6 +639,24 @@ impl Machine {
                 hits[n] += local as u64;
                 misses[n] += (served - local) as u64;
             }
+            // Route the cross-node share of the demand over the fabric:
+            // traffic issued by threads on node `a` against pages on
+            // node `b` charges every link on the a->b route. Same-node
+            // traffic never touches the interconnect.
+            if let Some(f) = fabric.as_mut() {
+                for a in 0..nodes {
+                    if tpn[a] == 0 {
+                        continue;
+                    }
+                    let thread_frac = tpn[a] as f64 / total_threads;
+                    for b in 0..nodes {
+                        if b == a || fracs[b] == 0.0 {
+                            continue;
+                        }
+                        f.add_route_demand(a, b, demand * thread_frac * fracs[b]);
+                    }
+                }
+            }
 
             // Completion.
             if p.work_done >= p.behavior.work_units {
@@ -513,6 +685,11 @@ impl Machine {
             self.numastat[n].local_node += hits[n];
             self.numastat[n].other_node += misses[n];
         }
+        // Commit link demand (+ surcharged migration traffic) likewise.
+        if let Some(f) = fabric.as_mut() {
+            f.commit_tick();
+        }
+        self.fabric = fabric;
 
         // NUMA-blind OS load balancing: equalize core run-queue lengths,
         // ignoring memory entirely (this is what strands tasks away from
@@ -813,6 +990,35 @@ impl ProcSource for Machine {
             "free_hugepages" => Some(crate::mem::hugepages::render_count(free)),
             _ => None,
         }
+    }
+
+    fn read_fabric_links(&self) -> Option<String> {
+        self.fabric.as_ref()?;
+        let mut out = String::new();
+        if self.read_fabric_links_into(&mut out) {
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    fn read_fabric_links_into(&self, out: &mut String) -> bool {
+        let Some(f) = self.fabric.as_ref() else { return false };
+        for (i, (link, ctl)) in f.topo.graph.links().iter().zip(&f.ctls).enumerate() {
+            // Stack-built stat through the shared renderer: one owner
+            // for the surface format, still zero heap allocations.
+            sysnode::render_fabric_link_into(
+                &sysnode::LinkStat {
+                    id: i,
+                    node_a: link.a,
+                    node_b: link.b,
+                    bw_mbs: (link.bandwidth_gbs * 1000.0).round() as u64,
+                    rho_milli: (ctl.rho_raw() * 1000.0).round() as u64,
+                },
+                out,
+            );
+        }
+        true
     }
 }
 
@@ -1352,6 +1558,165 @@ mod tests {
         m.kill(parent);
         assert!(m.fork(parent, "x").is_none());
         assert!(m.fork(424_242, "x").is_none());
+    }
+
+    #[test]
+    fn migration_burst_overload_reads_back_unclipped() {
+        // A one-tick migration burst charges hundreds of GB/s: the
+        // committed raw utilization must report the true overload, not
+        // the seed's silent min(_, 4.0) — the monitor's numastat-based
+        // demand estimate never had the cap, so the two now agree.
+        let mut m = machine();
+        // Zero intensity: the burst is the only traffic on the node.
+        let quiet = TaskBehavior { mem_intensity: 0.0, ..TaskBehavior::mem_bound(1e9) };
+        let pid = m.spawn("w", quiet, 1.0, 2, Placement::Node(0));
+        let moved = m.migrate_pages(pid, 1, 100_000);
+        assert_eq!(moved, 100_000);
+        m.step();
+        let rho = m.node_rho()[1];
+        // 100k pages * 8192 B / 1 ms = 819.2 GB/s on a 20 GB/s node.
+        assert!(rho > 4.0, "overload capped: {rho}");
+        assert!((rho - 100_000.0 * MIG_GB_PER_PAGE / 0.001 / 20.0).abs() < 1e-6);
+    }
+
+    fn fabric_machine() -> Machine {
+        Machine::new(
+            NumaTopology::from_config(&MachineConfig::preset("8node-fabric").unwrap()),
+            3,
+        )
+    }
+
+    #[test]
+    fn remote_traffic_charges_exactly_the_route_links() {
+        let mut m = fabric_machine();
+        m.os_balance = false;
+        let pid = m.spawn("w", TaskBehavior::mem_bound(1e9), 1.0, 1, Placement::Node(2));
+        {
+            // Strand the working set on node 1: all access traffic now
+            // crosses the single 2-1 ring link.
+            let p = m.process_mut(pid).unwrap();
+            let total = p.pages.total();
+            let mut v = vec![0; 8];
+            v[1] = total;
+            p.pages.per_node = v;
+        }
+        m.step();
+        let rho = m.fabric_link_rho().unwrap();
+        assert_eq!(rho.len(), 8);
+        // mem_bound: mi 0.9, exchange 0.6, 1 thread alone on its core.
+        let expect = 0.9 * THREAD_PEAK_GBS * 1.0 * (1.0 + 0.6) / 6.0;
+        assert!((rho[1] - expect).abs() < 1e-12, "link 1-2: {} vs {expect}", rho[1]);
+        for (i, &r) in rho.iter().enumerate() {
+            if i != 1 {
+                assert_eq!(r, 0.0, "off-route link {i} must stay idle");
+            }
+        }
+    }
+
+    #[test]
+    fn local_only_runs_match_the_fabricless_machine_exactly() {
+        // Zero link demand => the fabric must be a bit-identical no-op.
+        let run = |preset: &str| -> (f64, f64) {
+            let mut m = Machine::new(
+                NumaTopology::from_config(&MachineConfig::preset(preset).unwrap()),
+                9,
+            );
+            m.os_balance = false;
+            let a = m.spawn("a", TaskBehavior::mem_bound(400.0), 1.0, 2, Placement::Node(0));
+            let b = m.spawn("b", TaskBehavior::mem_bound(400.0), 1.0, 2, Placement::Node(5));
+            m.run_until(30_000.0);
+            (
+                m.process(a).unwrap().runtime_ms().unwrap(),
+                m.process(b).unwrap().runtime_ms().unwrap(),
+            )
+        };
+        let plain = run("8node-64core");
+        let fabric = run("8node-fabric");
+        assert_eq!(plain, fabric, "idle fabric must not perturb the simulation");
+    }
+
+    #[test]
+    fn migration_charges_every_link_on_the_route() {
+        let mut m = fabric_machine();
+        m.os_balance = false;
+        // Zero intensity: the only fabric traffic is the migration burst.
+        let quiet = TaskBehavior { mem_intensity: 0.0, ..TaskBehavior::mem_bound(1e9) };
+        let pid = m.spawn("w", quiet, 1.0, 1, Placement::Node(0));
+        let moved = m.migrate_pages(pid, 3, 10_000);
+        assert_eq!(moved, 10_000);
+        m.step();
+        let rho = m.fabric_link_rho().unwrap();
+        // Ring route 0->3 runs 0-1-2-3: links 0, 1, 2; links were idle
+        // when charged, so the hot-link surcharge multiplies by 1.
+        let expect = 10_000.0 * MIG_GB_PER_PAGE / 0.001 / 6.0;
+        for l in [0usize, 1, 2] {
+            assert!((rho[l] - expect).abs() < 1e-9, "link {l}: {} vs {expect}", rho[l]);
+        }
+        for l in [3usize, 4, 5, 6, 7] {
+            assert_eq!(rho[l], 0.0, "off-route link {l}");
+        }
+    }
+
+    #[test]
+    fn hot_link_surcharge_amplifies_migration_charge() {
+        let mut m = fabric_machine();
+        m.os_balance = false;
+        // Heat link 0 (nodes 0-1) with steady remote traffic first.
+        let hog = m.spawn("hog", TaskBehavior::mem_bound(1e9), 1.0, 1, Placement::Node(0));
+        {
+            let p = m.process_mut(hog).unwrap();
+            let total = p.pages.total();
+            let mut v = vec![0; 8];
+            v[1] = total;
+            p.pages.per_node = v;
+        }
+        for _ in 0..3 {
+            m.step();
+        }
+        let hot = m.fabric_link_rho().unwrap()[0];
+        assert!(hot > 0.1, "hog must heat link 0: {hot}");
+        // Migrate over the hot link: the surcharge must push the
+        // committed utilization strictly above steady traffic plus the
+        // flat (idle-link) migration rate.
+        let quiet = TaskBehavior { mem_intensity: 0.0, ..TaskBehavior::mem_bound(1e9) };
+        let w = m.spawn("w", quiet, 1.0, 1, Placement::Node(0));
+        m.migrate_pages(w, 1, 5_000);
+        m.step();
+        let after = m.fabric_link_rho().unwrap()[0];
+        let flat = 5_000.0 * MIG_GB_PER_PAGE / 0.001 / 6.0;
+        assert!(
+            after > hot + flat + 0.5,
+            "surcharge missing: after {after}, steady {hot}, flat {flat}"
+        );
+    }
+
+    #[test]
+    fn fabric_sysfs_surface_roundtrips() {
+        let mut m = fabric_machine();
+        m.os_balance = false;
+        let pid = m.spawn("w", TaskBehavior::mem_bound(1e9), 1.0, 1, Placement::Node(2));
+        {
+            let p = m.process_mut(pid).unwrap();
+            let total = p.pages.total();
+            let mut v = vec![0; 8];
+            v[1] = total;
+            p.pages.per_node = v;
+        }
+        m.step();
+        let text = m.read_fabric_links().unwrap();
+        let stats = sysnode::parse_fabric_links(&text);
+        assert_eq!(stats.len(), 8);
+        let rho = m.fabric_link_rho().unwrap();
+        for (s, (link, &r)) in stats
+            .iter()
+            .zip(m.topo.fabric.as_ref().unwrap().graph.links().iter().zip(&rho))
+        {
+            assert_eq!((s.node_a, s.node_b), (link.a, link.b));
+            assert_eq!(s.bw_mbs, (link.bandwidth_gbs * 1000.0).round() as u64);
+            assert_eq!(s.rho_milli, (r * 1000.0).round() as u64);
+        }
+        // Fabric-less machines expose no surface at all.
+        assert!(machine().read_fabric_links().is_none());
     }
 
     #[test]

@@ -42,18 +42,28 @@ impl MemCtl {
     }
 
     /// Close the tick: demand becomes the next tick's priced utilization.
+    ///
+    /// The committed value is deliberately **unclipped**. Pricing clips
+    /// at [`RHO_MAX`] inside [`rho`](Self::rho); the raw value is what
+    /// [`rho_raw`](Self::rho_raw) serves to traces and tests, and the
+    /// numastat counters the Monitor differences carry the same
+    /// unclipped demand — a silent `min(4.0)` here (the seed behavior)
+    /// made `rho_raw` contradict the monitor's own estimate exactly
+    /// when overload was worst (e.g. a migration burst charging
+    /// hundreds of GB/s into one tick).
     pub fn commit_tick(&mut self) {
-        self.rho_prev = (self.demand / self.bandwidth_gbs).min(4.0);
+        self.rho_prev = self.demand / self.bandwidth_gbs;
         self.demand = 0.0;
     }
 
-    /// Utilization in effect for pricing (clipped).
+    /// Utilization in effect for pricing (clipped at [`RHO_MAX`]).
     pub fn rho(&self) -> f64 {
         self.rho_prev.min(RHO_MAX)
     }
 
     /// Raw (unclipped) utilization of the last committed tick — what the
-    /// monitor would estimate from counters.
+    /// monitor estimates from counters. Consistent with those estimates
+    /// at any overload: no hidden cap.
     pub fn rho_raw(&self) -> f64 {
         self.rho_prev
     }
@@ -118,6 +128,20 @@ mod tests {
         assert_eq!(c.rho(), RHO_MAX);
         assert!(c.queue_factor().is_finite());
         assert!(c.rho_raw() > RHO_MAX, "raw keeps the overload signal");
+    }
+
+    #[test]
+    fn raw_overload_is_exact_not_capped() {
+        // The seed silently committed min(demand/bw, 4.0): any overload
+        // beyond 4x read back as exactly 4.0 through rho_raw()/node_rho()
+        // while the numastat counters (and thus the monitor's demand
+        // estimate) carried the true value. The raw side is unclipped
+        // now — pricing still saturates at RHO_MAX.
+        let mut c = MemCtl::new(10.0);
+        c.add_demand(1_000.0);
+        c.commit_tick();
+        assert_eq!(c.rho_raw(), 100.0, "exact, not min(_, 4.0)");
+        assert_eq!(c.rho(), RHO_MAX, "pricing side still clipped");
     }
 
     #[test]

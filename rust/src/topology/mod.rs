@@ -8,6 +8,7 @@
 pub mod detect;
 
 use crate::config::MachineConfig;
+use crate::fabric::FabricTopology;
 use crate::mem::MemTopology;
 
 /// Immutable description of a NUMA machine.
@@ -28,6 +29,11 @@ pub struct NumaTopology {
     pub pages_per_node: u64,
     /// Memory hardware: per-node capacity/huge-page pools/caches + TLB.
     pub mem: MemTopology,
+    /// Interconnect fabric: link graph + routing table. `None` means
+    /// the seed model's infinitely wide, zero-queue interconnect —
+    /// machines without a `[machine.fabric]` table run bit-identically
+    /// to the pre-fabric simulator.
+    pub fabric: Option<FabricTopology>,
 }
 
 /// Global core id -> (node, local core index).
@@ -48,6 +54,13 @@ impl NumaTopology {
             Some(v) => v.clone(),
             None => vec![cfg.bandwidth_gbs; cfg.nodes],
         };
+        // Configs loaded from files have already surfaced fabric errors
+        // through `Config::validate`; a programmatic misconfiguration
+        // fails loudly here, like `Machine::new`'s topology assert.
+        let fabric = cfg.fabric.as_ref().map(|f| {
+            FabricTopology::from_config(f, cfg.nodes, &distance)
+                .unwrap_or_else(|e| panic!("invalid fabric config: {e}"))
+        });
         Self {
             nodes: cfg.nodes,
             cores_per_node: cfg.cores_per_node,
@@ -55,6 +68,7 @@ impl NumaTopology {
             bandwidth_gbs,
             pages_per_node: pages,
             mem: cfg.mem.to_topology(cfg.nodes, pages),
+            fabric,
         }
     }
 
@@ -135,6 +149,10 @@ impl NumaTopology {
                 }
             }
         }
+        // Symmetry + finiteness, shared with the fabric's route
+        // construction: an asymmetric SLIT breaks both the Reporter's
+        // scoring and the SLIT-weighted routing tie-break.
+        crate::fabric::check_symmetric(&self.distance)?;
         if self.bandwidth_gbs.len() != self.nodes {
             return Err(format!(
                 "bandwidth vector has {} entries for {} nodes",
@@ -146,6 +164,16 @@ impl NumaTopology {
             return Err("bandwidth must be positive".into());
         }
         self.mem.validate(self.nodes)?;
+        if let Some(fab) = &self.fabric {
+            if fab.nodes() != self.nodes {
+                return Err(format!(
+                    "fabric spans {} nodes on a {}-node machine",
+                    fab.nodes(),
+                    self.nodes
+                ));
+            }
+            fab.validate()?;
+        }
         Ok(())
     }
 }
@@ -280,5 +308,61 @@ mod tests {
         let mut t = NumaTopology::r910_40core();
         t.mem.nodes[1].capacity_pages_4k = 0;
         assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_asymmetric_explicit_distance() {
+        // An explicit SLIT with D[0][1] != D[1][0] used to slip through
+        // (only bandwidth shape and ring symmetry were checked); the
+        // shared fabric helper now rejects it.
+        let mut cfg = MachineConfig::default();
+        cfg.distance = Some(vec![
+            vec![10.0, 21.0, 21.0, 30.0],
+            vec![25.0, 10.0, 21.0, 21.0],
+            vec![21.0, 21.0, 10.0, 21.0],
+            vec![30.0, 21.0, 21.0, 10.0],
+        ]);
+        let t = NumaTopology::from_config(&cfg);
+        let e = t.validate().unwrap_err();
+        assert!(e.contains("asymmetric"), "{e}");
+    }
+
+    #[test]
+    fn validate_rejects_nonfinite_distance() {
+        // "Disconnected" in SLIT terms: an unreachable pair encoded as
+        // infinity (or garbage NaN) must be a validation error, not a
+        // silent routing black hole.
+        let mut t = NumaTopology::r910_40core();
+        t.distance[0][2] = f64::INFINITY;
+        t.distance[2][0] = f64::INFINITY;
+        assert!(t.validate().is_err());
+        let mut t = NumaTopology::r910_40core();
+        t.distance[1][3] = f64::NAN;
+        t.distance[3][1] = f64::NAN;
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn validate_covers_fabric_subsystem() {
+        let t = NumaTopology::from_config(&MachineConfig::preset("8node-fabric").unwrap());
+        assert!(t.validate().is_ok());
+        // A fabric spanning the wrong node count is caught.
+        let mut small_cfg = MachineConfig::preset("2node-8core").unwrap();
+        small_cfg.fabric = Some(crate::config::FabricConfig::default());
+        let two_node_fabric = NumaTopology::from_config(&small_cfg).fabric;
+        let mut bad = t.clone();
+        bad.fabric = two_node_fabric;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid fabric config")]
+    fn from_config_panics_on_disconnected_fabric() {
+        let mut cfg = MachineConfig::preset("8node-64core").unwrap();
+        cfg.fabric = Some(crate::config::FabricConfig {
+            links: Some(vec![(0, 1, 10.0)]), // 6 nodes unreachable
+            ..crate::config::FabricConfig::default()
+        });
+        let _ = NumaTopology::from_config(&cfg);
     }
 }

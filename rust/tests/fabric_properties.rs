@@ -1,0 +1,255 @@
+//! Property tests for the fabric subsystem: routed link demand must
+//! conserve cross-node traffic, the simulator's link charging must
+//! match the routing table exactly, the monitor surface must agree
+//! with the machine through text alone, and random link-storm
+//! timelines must flow through the full pipeline with the placement
+//! ledger's (link-extended) invariant oracle holding.
+
+use numasched::config::{MachineConfig, PolicyKind, SchedulerConfig};
+use numasched::experiments::runner::{self, RunParams};
+use numasched::fabric::{FabricTopology, Link, LinkGraph};
+use numasched::monitor::{Monitor, SampleBufs, Snapshot};
+use numasched::scenario::{Event, TimedEvent};
+use numasched::sim::{Machine, Placement, TaskBehavior};
+use numasched::topology::NumaTopology;
+use numasched::util::check::{forall, PropResult};
+use numasched::util::rng::Rng;
+
+fn ring_fabric(nodes: usize, bw: f64) -> FabricTopology {
+    FabricTopology::new(
+        LinkGraph::ring(nodes, bw),
+        0.35,
+        &NumaTopology::ring_distance(nodes, 21.0),
+    )
+    .expect("ring fabric builds")
+}
+
+#[test]
+fn prop_routed_demand_conserves_cross_node_traffic() {
+    forall("fabric-conservation", 0xFAB01, 60, |rng: &mut Rng| -> PropResult {
+        let nodes = 2 + rng.below(7); // 2..=8
+        let fab = ring_fabric(nodes, 1.0 + rng.f64() * 20.0);
+        let pairs = 1 + rng.below(12);
+        let traffic: Vec<(usize, usize, f64)> = (0..pairs)
+            .map(|_| {
+                let a = rng.below(nodes);
+                let mut b = rng.below(nodes);
+                if b == a {
+                    b = (b + 1) % nodes;
+                }
+                (a, b, rng.f64() * 10.0)
+            })
+            .collect();
+        let per_link = fab.route_demand(&traffic);
+        numasched::prop_assert!(per_link.len() == fab.links(), "one slot per link");
+        numasched::prop_assert!(
+            per_link.iter().all(|&x| x.is_finite() && x >= 0.0),
+            "link demand finite and non-negative: {per_link:?}"
+        );
+        // Conservation: total link demand == sum of traffic x hops —
+        // nothing vanishes, nothing is double-charged.
+        let total: f64 = per_link.iter().sum();
+        let want: f64 = traffic
+            .iter()
+            .map(|&(a, b, g)| g * fab.hops(a, b) as f64)
+            .sum();
+        numasched::prop_assert!(
+            (total - want).abs() < 1e-9 * want.max(1.0),
+            "conservation broke: routed {total} vs hop-weighted {want}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_machine_charges_exactly_the_routed_links() {
+    // One pinned remote streamer: after a tick, every link on its route
+    // carries exactly demand/bw, every other link exactly zero — the
+    // sim-level mirror of the conservation property.
+    forall("fabric-machine-routing", 0xFAB02, 25, |rng: &mut Rng| -> PropResult {
+        let mut m = Machine::new(
+            NumaTopology::from_config(&MachineConfig::preset("8node-fabric").unwrap()),
+            rng.next_u64(),
+        );
+        m.os_balance = false;
+        let cpu = rng.below(8);
+        let mut mem = rng.below(8);
+        if mem == cpu {
+            mem = (mem + 1) % 8;
+        }
+        let pid = m.spawn(
+            "stream",
+            TaskBehavior {
+                work_units: f64::INFINITY,
+                mem_intensity: 1.0,
+                ws_pages: 50_000,
+                shared_frac: 0.0,
+                exchange: 0.0,
+                granularity: 1.0,
+                phase_period_ms: 0.0,
+                phase_amplitude: 0.0,
+                thp_fraction: 0.0,
+            },
+            1.0,
+            1,
+            Placement::Node(cpu),
+        );
+        m.pin_process(pid, cpu);
+        {
+            let p = m.process_mut(pid).unwrap();
+            let total = p.pages.total();
+            let mut v = vec![0; 8];
+            v[mem] = total;
+            p.pages.per_node = v;
+        }
+        m.step();
+        let rho = m.fabric_link_rho().expect("fabric machine");
+        let fab = m.topo.fabric.as_ref().unwrap();
+        let route: std::collections::BTreeSet<usize> =
+            fab.route(cpu, mem).iter().map(|&l| l as usize).collect();
+        let expect = 1.0 * numasched::sim::machine::THREAD_PEAK_GBS * 1.0 / 6.0;
+        for (l, &r) in rho.iter().enumerate() {
+            if route.contains(&l) {
+                numasched::prop_assert!(
+                    (r - expect).abs() < 1e-9,
+                    "link {l} on route {cpu}->{mem}: {r} vs {expect}"
+                );
+            } else {
+                numasched::prop_assert!(
+                    r == 0.0,
+                    "off-route link {l} charged: {r} ({cpu}->{mem})"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_monitor_link_view_matches_machine_through_text() {
+    // The Monitor's snapshot links (parsed from the rendered link-stats
+    // surface) must agree with the machine's committed link state to
+    // milli precision, on both sampling paths.
+    forall("fabric-monitor-roundtrip", 0xFAB03, 10, |rng: &mut Rng| -> PropResult {
+        let mut m = Machine::new(
+            NumaTopology::from_config(&MachineConfig::preset("8node-fabric").unwrap()),
+            rng.next_u64(),
+        );
+        let n = 1 + rng.below(4);
+        for i in 0..n {
+            m.spawn(
+                &format!("w{i}"),
+                TaskBehavior::mem_bound(1e12),
+                1.0,
+                1 + rng.below(3),
+                Placement::LeastLoaded,
+            );
+        }
+        for _ in 0..10 {
+            m.step();
+        }
+        let mon = Monitor::discover(&m).map_err(|e| format!("discover: {e}"))?;
+        let snap = mon.sample(&m, m.now_ms);
+        let rho = m.fabric_link_rho().unwrap();
+        numasched::prop_assert!(snap.links.len() == rho.len(), "one sample per link");
+        for (l, (s, &r)) in snap.links.iter().zip(&rho).enumerate() {
+            let milli = (r * 1000.0).round() / 1000.0;
+            numasched::prop_assert!(
+                (s.rho - milli).abs() < 1e-12,
+                "link {l}: text rho {} vs machine {milli}",
+                s.rho
+            );
+        }
+        let mut snap2 = Snapshot::default();
+        let mut bufs = SampleBufs::new();
+        mon.sample_into(&m, m.now_ms, &mut snap2, &mut bufs);
+        numasched::prop_assert!(snap2 == snap, "fast path diverged on links");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_random_link_storms_survive_the_full_pipeline() {
+    // Random RemoteHog/Exit timelines on the fabric preset, under the
+    // proposed policy: the runner's debug-assertion epoch oracle (which
+    // now also checks link projections) is armed in test builds, so a
+    // single run covers both finiteness and ledger-invariant health.
+    forall("fabric-pipeline", 0xFAB04, 6, |rng: &mut Rng| -> PropResult {
+        let n_events = 1 + rng.below(5);
+        let events: Vec<TimedEvent> = (0..n_events)
+            .map(|k| {
+                let t = 100.0 + rng.below(1_000) as f64;
+                if rng.chance(0.75) {
+                    let cpu = rng.below(8);
+                    let mut mem = rng.below(8);
+                    if mem == cpu {
+                        mem = (mem + 1) % 8;
+                    }
+                    TimedEvent::at(
+                        t,
+                        Event::RemoteHog {
+                            comm: format!("storm-{k}"),
+                            cpu_node: cpu,
+                            mem_node: mem,
+                            pages: 10_000 + rng.below(80_000) as u64,
+                        },
+                    )
+                } else {
+                    TimedEvent::at(
+                        t,
+                        Event::Exit { comm: format!("storm-{}", rng.below(6)) },
+                    )
+                }
+            })
+            .collect();
+        let params = RunParams {
+            machine: MachineConfig::preset("8node-fabric").unwrap(),
+            scheduler: SchedulerConfig {
+                policy: PolicyKind::Proposed,
+                ..Default::default()
+            },
+            specs: vec![numasched::workloads::mix::churn_job("w0", 1_200.0)],
+            seed: rng.next_u64(),
+            horizon_ms: 1_500.0,
+            window_ms: 250.0,
+            events,
+            ..Default::default()
+        };
+        let r = runner::run(&params);
+        numasched::prop_assert!(
+            r.end_ms.is_finite() && r.end_ms > 0.0,
+            "non-finite end time"
+        );
+        for p in &r.procs {
+            numasched::prop_assert!(
+                p.mean_speed.is_finite() && p.mean_speed >= 0.0,
+                "{}: bad mean speed {}",
+                p.comm,
+                p.mean_speed
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fabric_validation_rejects_disconnected_and_asymmetric_inputs() {
+    // Disconnected link graph: no route for some pair.
+    let g = LinkGraph::explicit(
+        5,
+        vec![
+            Link { a: 0, b: 1, bandwidth_gbs: 10.0 },
+            Link { a: 2, b: 3, bandwidth_gbs: 10.0 },
+            Link { a: 3, b: 4, bandwidth_gbs: 10.0 },
+        ],
+    );
+    let err = FabricTopology::new(g, 0.35, &NumaTopology::ring_distance(5, 21.0))
+        .unwrap_err();
+    assert!(err.contains("disconnected"), "{err}");
+    // Asymmetric SLIT rejected by the shared helper, in both the fabric
+    // constructor and NumaTopology::validate.
+    let mut d = NumaTopology::ring_distance(4, 21.0);
+    d[0][1] = 29.0;
+    assert!(FabricTopology::new(LinkGraph::ring(4, 10.0), 0.35, &d).is_err());
+    assert!(numasched::fabric::check_symmetric(&d).is_err());
+}

@@ -12,12 +12,13 @@ use numasched::sim::{Machine, Placement, TaskBehavior};
 use numasched::topology::NumaTopology;
 use numasched::workloads::parsec;
 
-const PRESETS: [&str; 5] = [
+const PRESETS: [&str; 6] = [
     "r910-40core",
     "r910-thp",
     "2node-8core",
     "8node-64core",
     "8node-hetero",
+    "8node-fabric",
 ];
 
 /// A machine with a tiered working set (huge pages where the preset has

@@ -91,6 +91,54 @@ fn every_scenario_yields_finite_ordered_factors_under_all_policies() {
 }
 
 #[test]
+fn link_storm_proposed_beats_the_fabric_blind_baselines() {
+    // The fabric acceptance differential: on the 8node-fabric preset,
+    // pinned streamers saturate the 1-2 ring link and a pressure hog
+    // slams node 4 — the node the static admin's seed-42 draw pins the
+    // measured app to. The fabric-aware proposed scheduler sees per-link
+    // rho through the report and routes the victim around both; the
+    // baselines cannot:
+    //  * StaticTuning pinned canneal onto the poisoned node at launch
+    //    ("depends on the technical ability of the administrator");
+    //  * AutoNuma chases page plurality with no link (or importance)
+    //    view, so it happily keeps traffic on saturated routes.
+    let sc = catalog::by_name("link-storm").unwrap();
+    let mut cells = Vec::new();
+    for policy in POLICIES {
+        let mut params = sc.params.clone();
+        params.scheduler.policy = policy;
+        cells.push(SweepCell { key: policy, params });
+    }
+    let results = run_cells(&cells);
+    let deg = |p: PolicyKind| -> f64 {
+        let (_, r) = results.iter().find(|(k, _)| *k == p).unwrap();
+        let canneal = r.proc_by_comm("canneal").expect("measured app present");
+        1.0 - canneal.mean_speed
+    };
+    let (d_prop, d_auto, d_static) = (
+        deg(PolicyKind::Proposed),
+        deg(PolicyKind::AutoNuma),
+        deg(PolicyKind::StaticTuning),
+    );
+    for d in [d_prop, d_auto, d_static] {
+        assert!(d.is_finite() && (0.0..=1.0).contains(&d), "bad degradation {d}");
+    }
+    let (_, prop) = results
+        .iter()
+        .find(|(k, _)| *k == PolicyKind::Proposed)
+        .unwrap();
+    assert!(prop.scheduler_decisions > 0, "proposed must act under the storm");
+    assert!(
+        d_prop < d_static,
+        "proposed {d_prop:.3} must beat the poisoned static pin {d_static:.3}"
+    );
+    assert!(
+        d_prop < d_auto + 0.05,
+        "proposed {d_prop:.3} must not trail fabric-blind autonuma {d_auto:.3}"
+    );
+}
+
+#[test]
 fn proposed_acts_under_churn_while_default_cannot() {
     // Sanity anchor for the differential: on the churn scenario the
     // user-level scheduler actually issues decisions (the reactive path

@@ -95,7 +95,7 @@ fn golden_traces_match_byte_for_byte() {
 
 #[test]
 fn full_catalog_replays_identically_under_the_sweep_pool() {
-    // Every catalog entry — all five presets — must satisfy the replay
+    // Every catalog entry — all six presets — must satisfy the replay
     // contract, even the ones without a checked-in golden.
     let scenarios = catalog::all();
     let serial: Vec<String> = scenarios.iter().map(record).collect();
@@ -113,7 +113,7 @@ fn full_catalog_replays_identically_under_the_sweep_pool() {
         scenarios.iter().map(|s| s.params.machine.preset.as_str()).collect();
     presets.sort();
     presets.dedup();
-    assert_eq!(presets.len(), 5, "catalog must span all five presets");
+    assert_eq!(presets.len(), 6, "catalog must span all six presets");
 }
 
 #[test]

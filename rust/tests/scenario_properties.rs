@@ -6,7 +6,7 @@
 //! log carries the smallest reproducing timeline, not a 12-event blob.
 //!
 //! Invariants under arbitrary churn (launch / exit / phase-shift /
-//! pressure / burst / fork, plus random migrations):
+//! pressure / burst / fork / remote-hog, plus random migrations):
 //! * page conservation — every process keeps its spawn-time 4 KiB-
 //!   equivalent total, and per-node fractions sum to 1;
 //! * ledger balance — the machine's migrated-pages counter equals the
@@ -68,7 +68,7 @@ fn gen_plan(rng: &mut Rng) -> Vec<Ev> {
     (0..n)
         .map(|_| Ev {
             t: rng.below(HORIZON_TICKS as usize) as u16,
-            kind: rng.below(6) as u8,
+            kind: rng.below(7) as u8,
             a: rng.below(16) as u8,
             b: rng.below(100) as u8,
         })
@@ -79,7 +79,7 @@ fn decode(plan: &[Ev], nodes: usize) -> Vec<TimedEvent> {
     plan.iter()
         .map(|e| {
             let comm = COMMS[e.a as usize % COMMS.len()].to_string();
-            let event = match e.kind % 6 {
+            let event = match e.kind % 7 {
                 0 => {
                     let mut s = mix::churn_job("w0", 50.0 + e.b as f64 * 10.0);
                     s.comm = comm;
@@ -102,7 +102,13 @@ fn decode(plan: &[Ev], nodes: usize) -> Vec<TimedEvent> {
                     count: e.a as usize % 4,
                     work_units: 20.0 + e.b as f64,
                 },
-                _ => Event::Fork { comm, children: e.a as usize % 3 },
+                5 => Event::Fork { comm, children: e.a as usize % 3 },
+                _ => Event::RemoteHog {
+                    comm: format!("stream-{}", e.a as usize % nodes),
+                    cpu_node: e.a as usize % nodes,
+                    mem_node: e.b as usize % nodes,
+                    pages: 500 + e.b as u64 * 40,
+                },
             };
             TimedEvent::at(e.t as f64, event)
         })
@@ -358,6 +364,7 @@ fn report2(t_ms: f64, tasks: Vec<RankedTask>) -> Report {
         by_degradation,
         node_demand: vec![4.0, 0.5],
         imbalance: 1.5,
+        link_rho: Vec::new(),
     }
 }
 
