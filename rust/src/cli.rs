@@ -26,6 +26,12 @@ pub struct Cli {
     /// Golden-trace directory for `scenario record|replay` (default
     /// `rust/tests/golden`).
     pub golden_dir: Option<PathBuf>,
+    /// Write the run's metrics stream (`numasched-metrics/v1` JSONL)
+    /// here; attaches telemetry to `run`, `scenario run|record`, and
+    /// `explain`.
+    pub metrics_out: Option<PathBuf>,
+    /// Print the final Prometheus-style text exposition to stdout.
+    pub metrics_text: bool,
     /// Positional arguments after the subcommand.
     pub positional: Vec<String>,
 }
@@ -50,6 +56,11 @@ COMMANDS:
                        scenario run <name>        run one, print results
                        scenario record [name...]  write golden trace(s)
                        scenario replay [name...]  re-run + byte-diff traces
+    explain          scheduler decision provenance:
+                       explain <scenario> [filter]  run a timeline under the
+                       proposed policy and print every placement, skip, and
+                       consolidation with its candidate table (filter matches
+                       outcome or comm, e.g. `skip:cooldown` or `canneal`)
     host-monitor     run the Monitor against this host's real /proc
     inspect          print machine presets and the workload catalog
 
@@ -65,6 +76,8 @@ FLAGS:
     --smoke              bench-suite: reduced iterations (CI smoke mode)
     --out <file>         bench-suite: output path (default BENCH_PERF.json)
     --golden-dir <dir>   scenario: golden-trace dir (default rust/tests/golden)
+    --metrics-out <file> write the metrics stream (numasched-metrics/v1 JSONL)
+    --metrics-text       print the Prometheus-style exposition to stdout
     --verbose            debug logging
 ";
 
@@ -112,6 +125,10 @@ pub fn parse(args: &[String]) -> Result<Cli, String> {
             "--golden-dir" => {
                 cli.golden_dir = Some(PathBuf::from(value("--golden-dir")?))
             }
+            "--metrics-out" => {
+                cli.metrics_out = Some(PathBuf::from(value("--metrics-out")?))
+            }
+            "--metrics-text" => cli.metrics_text = true,
             "--verbose" => cli.verbose = true,
             "--help" | "-h" => return Err(USAGE.to_string()),
             other if other.starts_with("--") => {
@@ -182,6 +199,24 @@ mod tests {
         assert_eq!(c.positional, vec!["replay", "phase-flip"]);
         assert_eq!(c.golden_dir, Some(PathBuf::from("traces")));
         assert!(parse(&argv("scenario record --golden-dir")).is_err());
+    }
+
+    #[test]
+    fn parses_metrics_flags() {
+        let c = parse(&argv(
+            "scenario record link-storm --metrics-out m.jsonl --metrics-text",
+        ))
+        .unwrap();
+        assert_eq!(c.metrics_out, Some(PathBuf::from("m.jsonl")));
+        assert!(c.metrics_text);
+        assert!(parse(&argv("run --metrics-out")).is_err());
+    }
+
+    #[test]
+    fn parses_explain_verb() {
+        let c = parse(&argv("explain link-storm skip:cooldown")).unwrap();
+        assert_eq!(c.command, "explain");
+        assert_eq!(c.positional, vec!["link-storm", "skip:cooldown"]);
     }
 
     #[test]

@@ -14,7 +14,12 @@
 //! * **sim** — raw simulator throughput in task-ticks/s;
 //! * **sweep** — serial vs parallel wall time of a small policy x seed
 //!   grid through `experiments::sweep`, plus an `identical` flag
-//!   re-verifying determinism on every CI run.
+//!   re-verifying determinism on every CI run;
+//! * **metrics** — the telemetry hot path: counter-inc + histogram-
+//!   observe cost per op with its steady-state allocation count (the
+//!   registry's zero-alloc claim, proved the same way as the monitor
+//!   round trip), and the per-epoch JSONL render cost (the telemetry
+//!   edge, where allocation is allowed).
 //!
 //! Smoke mode shrinks every iteration count so the whole suite runs in
 //! seconds (CI); full mode is for real measurements.
@@ -49,6 +54,11 @@ pub struct BenchReport {
     pub sweep_parallel_ms: f64,
     pub sweep_speedup: f64,
     pub sweep_identical: bool,
+    pub metrics_hot_ops: usize,
+    pub metrics_hot_ns_per_op: f64,
+    pub metrics_hot_allocs_per_op: f64,
+    pub metrics_epoch_renders: usize,
+    pub metrics_epoch_render_ns: f64,
 }
 
 fn sweep_grid(horizon_ms: f64) -> Vec<RunParams> {
@@ -131,6 +141,34 @@ pub fn run(smoke: bool) -> BenchReport {
                 })
         });
 
+    // --- telemetry hot path: inc + observe, then the epoch render ------
+    let hot_ops = if smoke { 20_000 } else { 1_000_000 };
+    let mut tel = crate::telemetry::Telemetry::new();
+    // Warmup: first touches may grow nothing (slots are pre-sized at
+    // registration), but keep the protocol identical to the roundtrip
+    // bench so the steady-state claim is measured the same way.
+    for i in 0..1_000u64 {
+        tel.registry.inc(tel.ids.migrations, 1);
+        tel.registry.observe(tel.ids.node_rho_milli, i);
+    }
+    let allocs_before = alloc_counter::allocations();
+    let t0 = Instant::now();
+    for i in 0..hot_ops {
+        tel.registry.inc(tel.ids.migrations, 1);
+        tel.registry
+            .observe(tel.ids.node_rho_milli, std::hint::black_box(i as u64));
+    }
+    let hot_el_ns = t0.elapsed().as_nanos() as f64;
+    let hot_allocs = alloc_counter::allocations() - allocs_before;
+    let metrics_hot_ns_per_op = hot_el_ns / (hot_ops as f64 * 2.0);
+    let metrics_hot_allocs_per_op = hot_allocs as f64 / (hot_ops as f64 * 2.0);
+    let epoch_renders = if smoke { 200 } else { 5_000 };
+    let t0 = Instant::now();
+    for e in 0..epoch_renders {
+        std::hint::black_box(tel.registry.render_epoch_json(e as u64, e as u64));
+    }
+    let metrics_epoch_render_ns = t0.elapsed().as_nanos() as f64 / epoch_renders as f64;
+
     BenchReport {
         smoke,
         allocs_counted: alloc_counter::counting_enabled(),
@@ -150,6 +188,11 @@ pub fn run(smoke: bool) -> BenchReport {
             0.0
         },
         sweep_identical,
+        metrics_hot_ops: hot_ops,
+        metrics_hot_ns_per_op,
+        metrics_hot_allocs_per_op,
+        metrics_epoch_renders: epoch_renders,
+        metrics_epoch_render_ns,
     }
 }
 
@@ -189,6 +232,21 @@ impl BenchReport {
         let _ = writeln!(s, "    \"parallel_ms\": {:.2},", self.sweep_parallel_ms);
         let _ = writeln!(s, "    \"speedup\": {:.3},", self.sweep_speedup);
         let _ = writeln!(s, "    \"identical\": {}", self.sweep_identical);
+        let _ = writeln!(s, "  }},");
+        let _ = writeln!(s, "  \"metrics\": {{");
+        let _ = writeln!(s, "    \"hot_ops\": {},", self.metrics_hot_ops);
+        let _ = writeln!(s, "    \"hot_ns_per_op\": {:.2},", self.metrics_hot_ns_per_op);
+        let _ = writeln!(
+            s,
+            "    \"hot_allocs_per_op\": {:.4},",
+            self.metrics_hot_allocs_per_op
+        );
+        let _ = writeln!(s, "    \"epoch_renders\": {},", self.metrics_epoch_renders);
+        let _ = writeln!(
+            s,
+            "    \"epoch_render_ns\": {:.1}",
+            self.metrics_epoch_render_ns
+        );
         let _ = writeln!(s, "  }}");
         let _ = writeln!(s, "}}");
         s
@@ -207,10 +265,19 @@ mod tests {
         assert!(r.roundtrip_ns_p99 >= r.roundtrip_ns_p50);
         assert!(r.sim_task_ticks_per_s > 0.0);
         assert!(r.sweep_identical, "parallel sweep must match serial");
+        assert!(r.metrics_hot_ns_per_op > 0.0);
+        assert!(r.metrics_epoch_render_ns > 0.0);
+        if r.allocs_counted {
+            assert_eq!(
+                r.metrics_hot_allocs_per_op, 0.0,
+                "registry hot path must not allocate"
+            );
+        }
         let json = r.to_json();
         assert!(json.contains("\"schema\": \"numasched-bench-perf/v1\""));
         assert!(json.contains("\"allocs_per_sample\""));
         assert!(json.contains("\"identical\": true"));
+        assert!(json.contains("\"hot_allocs_per_op\""));
         // Balanced braces (cheap well-formedness proxy without a JSON
         // parser in the dependency-free crate).
         assert_eq!(

@@ -15,8 +15,9 @@ use crate::config::{MachineConfig, PolicyKind, SchedulerConfig};
 use crate::monitor::{Monitor, SampleBufs, Snapshot};
 use crate::reporter::{Backend, Reporter};
 use crate::scenario::{EventEngine, FiredEvent, PidFate, ScenarioTrace, TimedEvent};
-use crate::scheduler::{PlacementLedger, UserScheduler};
+use crate::scheduler::{MachineControl, PlacementLedger, UserScheduler};
 use crate::sim::{Machine, Placement};
+use crate::telemetry::{Phase, Telemetry};
 use crate::topology::NumaTopology;
 use crate::util::stats::Running;
 use crate::workloads::LaunchSpec;
@@ -113,7 +114,7 @@ impl RunResult {
 
 /// Run one policy over one workload set.
 pub fn run(params: &RunParams) -> RunResult {
-    run_inner(params, None)
+    run_inner(params, None, None)
 }
 
 /// [`run`] with trace recording: every fired scenario event, every
@@ -121,10 +122,34 @@ pub fn run(params: &RunParams) -> RunResult {
 /// deterministic JSONL records (schema `numasched-trace/v1`). The
 /// simulation itself is bit-identical to an untraced [`run`].
 pub fn run_traced(params: &RunParams, trace: &mut ScenarioTrace) -> RunResult {
-    run_inner(params, Some(trace))
+    run_inner(params, Some(trace), None)
 }
 
-fn run_inner(params: &RunParams, mut trace: Option<&mut ScenarioTrace>) -> RunResult {
+/// [`run`] with the telemetry edge attached: per-epoch metrics, decision
+/// provenance (the proposed scheduler's explain log is switched on), the
+/// flight recorder, and self-profiling spans all land in `tel`. The
+/// simulation itself stays bit-identical to an uninstrumented [`run`] —
+/// telemetry reads machine state, never feeds back into it, and the
+/// wall clock is confined to the spans section.
+pub fn run_instrumented(params: &RunParams, tel: &mut Telemetry) -> RunResult {
+    run_inner(params, None, Some(tel))
+}
+
+/// Trace recording and telemetry together — what `scenario record`
+/// uses when asked for a metrics sidecar next to the trace.
+pub fn run_traced_instrumented(
+    params: &RunParams,
+    trace: &mut ScenarioTrace,
+    tel: &mut Telemetry,
+) -> RunResult {
+    run_inner(params, Some(trace), Some(tel))
+}
+
+fn run_inner(
+    params: &RunParams,
+    mut trace: Option<&mut ScenarioTrace>,
+    mut tel: Option<&mut Telemetry>,
+) -> RunResult {
     let topo = NumaTopology::from_config(&params.machine);
     let mut machine = Machine::new(topo.clone(), params.seed);
 
@@ -210,8 +235,8 @@ fn run_inner(params: &RunParams, mut trace: Option<&mut ScenarioTrace>) -> RunRe
             )) {
                 Ok(engine) => Backend::Pjrt(Box::new(engine)),
                 Err(e) => {
-                    eprintln!(
-                        "warning: PJRT backend unavailable ({e}); \
+                    crate::log_warn!(
+                        "PJRT backend unavailable ({e}); \
                          falling back to the pure-Rust scorer"
                     );
                     Backend::Cpu
@@ -263,7 +288,12 @@ fn run_inner(params: &RunParams, mut trace: Option<&mut ScenarioTrace>) -> RunRe
                 reporter.importance.insert(format!("{comm}-kid"), w);
             }
         }
-        let scheduler = UserScheduler::new(&params.scheduler, &topo);
+        let mut scheduler = UserScheduler::new(&params.scheduler, &topo);
+        // Provenance rides the telemetry edge: the explain log allocates
+        // per decision, so it stays off unless a Telemetry sink is
+        // attached to drain it. It never steers — decisions are computed
+        // first and described after.
+        scheduler.explain.enabled = tel.is_some();
         Some((monitor, reporter, scheduler))
     } else {
         None
@@ -280,6 +310,12 @@ fn run_inner(params: &RunParams, mut trace: Option<&mut ScenarioTrace>) -> RunRe
     // no-event run pays one index comparison per tick.
     let mut engine = EventEngine::new(params.events.clone());
     let mut next_trace = 0.0;
+    // Metrics epochs tick on the report cadence for every policy, so
+    // baseline runs emit comparable streams even though only the
+    // proposed policy has a scheduler to explain.
+    let mut next_metrics = report_period;
+    let mut events_fired: u64 = 0;
+    let mut monitor_samples: u64 = 0;
     let mut windows: std::collections::BTreeMap<i32, Vec<f64>> = Default::default();
     let mut epoch_ns = Running::new();
     let mut pending_report = None;
@@ -299,6 +335,7 @@ fn run_inner(params: &RunParams, mut trace: Option<&mut ScenarioTrace>) -> RunRe
         engine.tick(&mut machine);
         if engine.has_fired() {
             let fired = engine.drain_fired();
+            events_fired += fired.len() as u64;
             // Mirror churn into the policies' placement ledgers: an Exit
             // (Machine::kill) prunes the dead pids' cooldown/placement
             // state, and every spawning event (launch, fork, pressure,
@@ -319,7 +356,14 @@ fn run_inner(params: &RunParams, mut trace: Option<&mut ScenarioTrace>) -> RunRe
             }
         }
 
-        machine.step();
+        match tel.as_deref_mut() {
+            Some(t) => {
+                let t0 = Instant::now();
+                machine.step();
+                t.spans.record_since(Phase::SimTick, t0);
+            }
+            None => machine.step(),
+        }
 
         if let Some(an) = autonuma.as_mut() {
             an.step(&mut machine);
@@ -328,7 +372,12 @@ fn run_inner(params: &RunParams, mut trace: Option<&mut ScenarioTrace>) -> RunRe
         if let Some((monitor, reporter, scheduler)) = proposed.as_mut() {
             if machine.now_ms >= next_monitor {
                 next_monitor += monitor_period;
+                monitor_samples += 1;
+                let t0 = Instant::now();
                 monitor.sample_into(&machine, machine.now_ms, &mut snap, &mut bufs);
+                if let Some(t) = tel.as_deref_mut() {
+                    t.spans.record_since(Phase::MonitorSample, t0);
+                }
                 let t0 = Instant::now();
                 pending_report = reporter.ingest(&snap);
                 epoch_ns.push(t0.elapsed().as_nanos() as f64);
@@ -344,19 +393,69 @@ fn run_inner(params: &RunParams, mut trace: Option<&mut ScenarioTrace>) -> RunRe
                     report
                         .by_speedup
                         .retain(|r| machine.process(r.pid).is_some_and(|p| p.is_running()));
-                    let executed = scheduler.apply(&report, &mut machine);
+                    // With telemetry on, route control through a timing
+                    // shim so the epoch splits into decide vs apply
+                    // spans. The calls themselves are identical.
+                    let executed = match tel.as_deref_mut() {
+                        Some(t) => {
+                            let t0 = Instant::now();
+                            let mut ctl =
+                                TimedCtl { machine: &mut machine, migrate_ns: 0 };
+                            let executed = scheduler.apply(&report, &mut ctl);
+                            let total = t0.elapsed().as_nanos() as u64;
+                            let migrate_ns = ctl.migrate_ns;
+                            t.spans.record(
+                                Phase::SchedulerDecide,
+                                total.saturating_sub(migrate_ns),
+                            );
+                            t.spans.record(Phase::MigrateApply, migrate_ns);
+                            t.record_explains(scheduler.explain.take_rows());
+                            executed
+                        }
+                        None => scheduler.apply(&report, &mut machine),
+                    };
                     // Epoch oracle: the capacity view must be internally
                     // consistent and hold state only for the report's
                     // roster (debug builds; the scenario-smoke CI job
-                    // runs the property suite with this armed).
+                    // runs the property suite with this armed). When the
+                    // oracle fires with telemetry attached, the flight
+                    // recorder dumps the last epochs before the panic.
                     #[cfg(debug_assertions)]
-                    scheduler.assert_ledger_invariants(report.by_speedup.iter().map(|t| t.pid));
+                    if let Err(e) =
+                        scheduler.check_ledger(report.by_speedup.iter().map(|t| t.pid))
+                    {
+                        if let Some(t) = tel.as_deref_mut() {
+                            match t.dump_flight("ledger-oracle") {
+                                Ok(path) => crate::log_error!(
+                                    "flight recorder dumped to {}",
+                                    path.display()
+                                ),
+                                Err(io) => crate::log_error!(
+                                    "flight recorder dump failed: {io}"
+                                ),
+                            }
+                        }
+                        panic!("placement-ledger invariant violated: {e}");
+                    }
                     if let Some(tr) = trace.as_deref_mut() {
                         for d in &executed {
                             tr.push_decision(d);
                         }
                     }
                 }
+            }
+        }
+
+        if let Some(t) = tel.as_deref_mut() {
+            if machine.now_ms >= next_metrics {
+                next_metrics += report_period;
+                emit_metrics_epoch(
+                    t,
+                    &machine,
+                    proposed.as_ref().map(|(m, _, s)| (m, s)),
+                    events_fired,
+                    monitor_samples,
+                );
             }
         }
 
@@ -410,6 +509,20 @@ fn run_inner(params: &RunParams, mut trace: Option<&mut ScenarioTrace>) -> RunRe
         .map(|(_, _, s)| s.decisions.len())
         .unwrap_or(0);
 
+    if let Some(t) = tel.as_deref_mut() {
+        // Close out with one final epoch at the stop instant (captures
+        // the end state even when the run breaks early mid-period),
+        // then seal the stream: timing section + footer.
+        emit_metrics_epoch(
+            t,
+            &machine,
+            proposed.as_ref().map(|(m, _, s)| (m, s)),
+            events_fired,
+            monitor_samples,
+        );
+        t.finish(machine.now_ms as u64);
+    }
+
     // Every process the run ever hosted, in pid (= spawn) order — the
     // initial launch set plus anything the scenario timeline added.
     let procs = machine
@@ -435,6 +548,94 @@ fn run_inner(params: &RunParams, mut trace: Option<&mut ScenarioTrace>) -> RunRe
         epoch_ns,
         end_ms: machine.now_ms,
     }
+}
+
+/// [`MachineControl`] shim that forwards to the machine unchanged while
+/// accumulating the wall-clock cost of the control calls, so the
+/// scheduler-decide span can exclude migrate-apply time. Pure telemetry:
+/// the forwarded calls are exactly what an unshimmed `apply` would make.
+struct TimedCtl<'a> {
+    machine: &'a mut Machine,
+    migrate_ns: u64,
+}
+
+impl MachineControl for TimedCtl<'_> {
+    fn move_process(&mut self, pid: i32, node: usize) {
+        let t0 = Instant::now();
+        MachineControl::move_process(self.machine, pid, node);
+        self.migrate_ns += t0.elapsed().as_nanos() as u64;
+    }
+
+    fn migrate_pages(&mut self, pid: i32, node: usize, budget: u64) -> u64 {
+        let t0 = Instant::now();
+        let moved = MachineControl::migrate_pages(self.machine, pid, node, budget);
+        self.migrate_ns += t0.elapsed().as_nanos() as u64;
+        moved
+    }
+}
+
+/// Render one metrics epoch from the machine's (and, for the proposed
+/// policy, the monitor's and scheduler's) current state. Totals are
+/// mirrored as absolute counter values — the machine already keeps the
+/// authoritative running sums — and utilizations land in both gauges
+/// (instantaneous max) and milli-scaled log2 histograms (distribution
+/// over the whole run). Reads state only; the simulation never sees it.
+fn emit_metrics_epoch(
+    tel: &mut Telemetry,
+    machine: &Machine,
+    proposed: Option<(&Monitor, &UserScheduler)>,
+    events_fired: u64,
+    monitor_samples: u64,
+) {
+    tel.registry.set_counter(tel.ids.events_fired, events_fired);
+    tel.registry.set_counter(tel.ids.monitor_samples, monitor_samples);
+    tel.registry.set_counter(tel.ids.migrations, machine.total_migrations);
+    tel.registry.set_counter(tel.ids.pages_migrated, machine.total_pages_migrated);
+    tel.registry.set_counter(tel.ids.migration_ops, machine.total_migration_ops);
+    let (hits, misses) = machine.numa_maps_cache_stats();
+    tel.registry.set_counter(tel.ids.maps_cache_hits, hits);
+    tel.registry.set_counter(tel.ids.maps_cache_misses, misses);
+    if let Some(clips) = machine.fabric_clip_count() {
+        tel.registry.set_counter(tel.ids.fabric_rho_clips, clips);
+    }
+
+    if let Some((monitor, scheduler)) = proposed {
+        tel.registry.set_counter(tel.ids.monitor_pid_drops, monitor.mid_read_drops());
+        let st = scheduler.stats;
+        tel.registry.set_counter(tel.ids.moves_pin, st.pin_moves);
+        tel.registry.set_counter(tel.ids.moves_speedup, st.speedup_moves);
+        tel.registry.set_counter(tel.ids.moves_contention, st.contention_moves);
+        tel.registry.set_counter(tel.ids.consolidations, st.consolidations);
+        tel.registry.set_counter(tel.ids.fabric_reroutes, st.fabric_reroutes);
+        tel.registry.set_counter(tel.ids.skip_cooldown, st.skip_cooldown);
+        tel.registry.set_counter(tel.ids.skip_capacity, st.skip_capacity);
+        tel.registry.set_counter(tel.ids.skip_stampede, st.skip_stampede);
+        tel.registry.set_counter(tel.ids.skip_below_gain, st.skip_below_gain);
+        tel.registry.set_counter(tel.ids.skip_already_best, st.skip_already_best);
+        tel.registry.set_counter(tel.ids.skip_max_moves, st.skip_max_moves);
+    }
+
+    let rho = machine.node_rho();
+    let rho_max = rho.iter().copied().fold(0.0, f64::max);
+    let rho_min = rho.iter().copied().fold(f64::INFINITY, f64::min);
+    let rho_mean = rho.iter().sum::<f64>() / rho.len().max(1) as f64;
+    let imbalance = if rho_mean > 1e-12 { (rho_max - rho_min) / rho_mean } else { 0.0 };
+    tel.registry.set_gauge(tel.ids.node_rho_max, rho_max);
+    tel.registry.set_gauge(tel.ids.imbalance, imbalance);
+    tel.registry
+        .set_gauge(tel.ids.procs_running, machine.running_pid_set().len() as f64);
+    for &r in &rho {
+        tel.registry.observe(tel.ids.node_rho_milli, (r * 1000.0).round() as u64);
+    }
+    if let Some(link_rho) = machine.fabric_link_rho() {
+        let link_max = link_rho.iter().copied().fold(0.0, f64::max);
+        tel.registry.set_gauge(tel.ids.link_rho_max, link_max);
+        for &r in &link_rho {
+            tel.registry.observe(tel.ids.link_rho_milli, (r * 1000.0).round() as u64);
+        }
+    }
+
+    tel.end_epoch(machine.now_ms as u64);
 }
 
 /// Route one fired scenario event's pids into whatever placement
@@ -573,6 +774,67 @@ mod tests {
         assert_eq!(a.total_migrations, b.total_migrations);
         assert_eq!(a.end_ms, b.end_ms, "tracing must not perturb the run");
         assert!(!trace.is_empty(), "occupancy records accumulate");
+    }
+
+    #[test]
+    fn instrumented_run_matches_plain_run() {
+        let p = quick_params(PolicyKind::Proposed);
+        let a = run(&p);
+        let mut tel = Telemetry::new();
+        let b = run_instrumented(&p, &mut tel);
+        assert_eq!(a.runtime_of("canneal"), b.runtime_of("canneal"));
+        assert_eq!(a.total_migrations, b.total_migrations);
+        assert_eq!(a.total_pages_migrated, b.total_pages_migrated);
+        assert_eq!(a.scheduler_decisions, b.scheduler_decisions);
+        assert_eq!(a.end_ms, b.end_ms, "telemetry must not perturb the run");
+        assert!(tel.epochs() > 0, "metrics epochs accumulate");
+        assert!(
+            tel.explain_total() > 0,
+            "a proposed run that decides must also explain"
+        );
+    }
+
+    #[test]
+    fn instrumented_metrics_are_deterministic_modulo_timing() {
+        let p = quick_params(PolicyKind::Proposed);
+        let mut t1 = Telemetry::new();
+        let mut t2 = Telemetry::new();
+        run_instrumented(&p, &mut t1);
+        run_instrumented(&p, &mut t2);
+        let (a, b) = (t1.to_jsonl(), t2.to_jsonl());
+        if let Some((line, l, r)) = Telemetry::diff_deterministic(&a, &b) {
+            panic!("metrics streams diverge at line {line}:\n  {l}\n  {r}");
+        }
+    }
+
+    #[test]
+    fn baseline_runs_emit_metrics_without_explains() {
+        let p = quick_params(PolicyKind::AutoNuma);
+        let mut tel = Telemetry::new();
+        let r = run_instrumented(&p, &mut tel);
+        assert!(r.total_pages_migrated > 0);
+        assert!(tel.epochs() > 0, "baselines share the metrics cadence");
+        assert_eq!(tel.explain_total(), 0, "only the proposed scheduler explains");
+        let jsonl = tel.to_jsonl();
+        assert!(
+            jsonl.contains("\"migrations\""),
+            "epoch lines mirror machine totals"
+        );
+    }
+
+    #[test]
+    fn traced_instrumented_trace_is_byte_identical_to_plain_traced() {
+        let p = quick_params(PolicyKind::Proposed);
+        let mut plain = ScenarioTrace::new();
+        run_traced(&p, &mut plain);
+        let mut traced = ScenarioTrace::new();
+        let mut tel = Telemetry::new();
+        run_traced_instrumented(&p, &mut traced, &mut tel);
+        assert_eq!(
+            plain.to_jsonl(),
+            traced.to_jsonl(),
+            "telemetry must leave the recorded trace untouched"
+        );
     }
 
     #[test]

@@ -21,12 +21,16 @@ pub struct LinkCtl {
     demand: f64,
     /// Utilization committed by the previous tick (prices this tick).
     rho_prev: f64,
+    /// Ticks whose committed utilization exceeded [`RHO_MAX`] — i.e.
+    /// ticks where the pricing clip actually engaged. Telemetry surfaces
+    /// this; the pricing math never reads it.
+    clips: u64,
 }
 
 impl LinkCtl {
     pub fn new(bandwidth_gbs: f64) -> Self {
         assert!(bandwidth_gbs > 0.0);
-        Self { bandwidth_gbs, demand: 0.0, rho_prev: 0.0 }
+        Self { bandwidth_gbs, demand: 0.0, rho_prev: 0.0, clips: 0 }
     }
 
     /// Add routed demand (GB/s) for the open tick.
@@ -39,7 +43,15 @@ impl LinkCtl {
     /// utilization. Unclipped — see `MemCtl::commit_tick`.
     pub fn commit_tick(&mut self) {
         self.rho_prev = self.demand / self.bandwidth_gbs;
+        if self.rho_prev > RHO_MAX {
+            self.clips += 1;
+        }
         self.demand = 0.0;
+    }
+
+    /// Number of committed ticks on which the pricing clip engaged.
+    pub fn clip_count(&self) -> u64 {
+        self.clips
     }
 
     /// Utilization in effect for pricing (clipped at saturation).
@@ -96,5 +108,20 @@ mod tests {
         assert_eq!(c.rho(), RHO_MAX);
         assert!((c.rho_raw() - 10.0).abs() < 1e-12, "raw stays unclipped");
         assert!(c.queue_factor().is_finite());
+    }
+
+    #[test]
+    fn clip_counter_tracks_saturated_ticks_only() {
+        let mut c = LinkCtl::new(10.0);
+        c.add_demand(5.0); // rho 0.5: no clip
+        c.commit_tick();
+        assert_eq!(c.clip_count(), 0);
+        c.add_demand(20.0); // rho 2.0: clip
+        c.commit_tick();
+        c.add_demand(9.5); // rho 0.95 > RHO_MAX: clip
+        c.commit_tick();
+        assert_eq!(c.clip_count(), 2);
+        c.commit_tick(); // idle tick: no clip
+        assert_eq!(c.clip_count(), 2);
     }
 }

@@ -33,6 +33,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod scheduler;
 pub mod sim;
+pub mod telemetry;
 pub mod topology;
 pub mod util;
 pub mod workloads;

@@ -10,6 +10,7 @@ use numasched::experiments::{
 };
 use numasched::monitor::{thread::MonitorThread, Monitor};
 use numasched::procfs::host::HostProcfs;
+use numasched::telemetry::{self, Telemetry};
 use numasched::util::log::{set_max_level, Level};
 use numasched::workloads;
 
@@ -40,6 +41,7 @@ fn main() {
         "ablate-fabric" => cmd_ablate_fabric(&cli),
         "bench-suite" => cmd_bench_suite(&cli),
         "scenario" => cmd_scenario(&cli),
+        "explain" => cmd_explain(&cli),
         "host-monitor" => cmd_host_monitor(&cli),
         "inspect" => cmd_inspect(&cli),
         other => {
@@ -114,8 +116,61 @@ fn cmd_run(cli: &Cli) -> i32 {
         params.horizon_ms,
         if params.scheduler.use_pjrt { "pjrt" } else { "rust" },
     );
-    let result = runner::run(&params);
+    if !wants_metrics(cli) {
+        let result = runner::run(&params);
+        print_run_result(&result, cli.csv);
+        return 0;
+    }
+    let mut tel = Telemetry::new();
+    tel.push_header("run", params.scheduler.policy.name(), params.seed);
+    let result = with_flight_dump(&mut tel, |t| runner::run_instrumented(&params, t));
     print_run_result(&result, cli.csv);
+    emit_metrics(cli, &tel)
+}
+
+fn wants_metrics(cli: &Cli) -> bool {
+    cli.metrics_out.is_some() || cli.metrics_text
+}
+
+/// Run an instrumented closure with the flight recorder armed at the
+/// process edge: a panic anywhere inside (ledger oracle, prop_assert,
+/// plain bug) dumps the last epochs' metrics and explain rows before the
+/// unwind resumes. `AssertUnwindSafe` is sound here — on the Ok path
+/// nothing observed the broken invariant, and on the Err path the
+/// telemetry is only *serialized*, never trusted for further decisions.
+fn with_flight_dump<T>(tel: &mut Telemetry, f: impl FnOnce(&mut Telemetry) -> T) -> T {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(tel))) {
+        Ok(v) => v,
+        Err(payload) => {
+            match tel.dump_flight("panic") {
+                Ok(path) => eprintln!("flight recorder dumped to {}", path.display()),
+                Err(e) => eprintln!("flight recorder dump failed: {e}"),
+            }
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Shared metrics output for every instrumented command: JSONL stream to
+/// `--metrics-out`, Prometheus-style exposition to stdout under
+/// `--metrics-text`.
+fn emit_metrics(cli: &Cli, tel: &Telemetry) -> i32 {
+    if let Some(path) = &cli.metrics_out {
+        if let Err(e) = std::fs::write(path, tel.to_jsonl()) {
+            eprintln!("error: write {}: {e}", path.display());
+            return 1;
+        }
+        println!(
+            "metrics: {} epochs, {} explain rows -> {} ({})",
+            tel.epochs(),
+            tel.explain_total(),
+            path.display(),
+            telemetry::METRICS_SCHEMA
+        );
+    }
+    if cli.metrics_text {
+        print!("{}", tel.registry.render_prometheus());
+    }
     0
 }
 
@@ -222,6 +277,13 @@ fn cmd_bench_suite(cli: &Cli) -> i32 {
         );
         return 1;
     }
+    if report.allocs_counted && report.metrics_hot_allocs_per_op > 0.0 {
+        eprintln!(
+            "error: telemetry registry hot path allocated ({:.4}/op; target 0)",
+            report.metrics_hot_allocs_per_op
+        );
+        return 1;
+    }
     0
 }
 
@@ -302,7 +364,19 @@ fn cmd_scenario(cli: &Cli) -> i32 {
                 sc.params.seed,
                 sc.params.events.len()
             );
-            let (result, trace) = scenario::record_with_result(&sc);
+            let (result, trace) = if wants_metrics(cli) {
+                let mut tel = Telemetry::new();
+                let out = with_flight_dump(&mut tel, |t| {
+                    scenario::record_with_metrics(&sc, t)
+                });
+                let code = emit_metrics(cli, &tel);
+                if code != 0 {
+                    return code;
+                }
+                out
+            } else {
+                scenario::record_with_result(&sc)
+            };
             print_run_result(&result, cli.csv);
             println!("trace: {} records (numasched-trace/v1)", trace.lines().count());
             0
@@ -315,7 +389,30 @@ fn cmd_scenario(cli: &Cli) -> i32 {
                     return 2;
                 }
             };
-            let traces = scenario::record_all(&scs);
+            if wants_metrics(cli) && scs.len() != 1 {
+                eprintln!(
+                    "error: --metrics-out/--metrics-text record exactly one \
+                     scenario (got {})",
+                    scs.len()
+                );
+                return 2;
+            }
+            // The metrics sidecar rides a single-scenario record; the
+            // trace itself is byte-identical to the uninstrumented path
+            // (pinned by the runner tests), so goldens stay valid.
+            let traces = if wants_metrics(cli) {
+                let mut tel = Telemetry::new();
+                let (_, trace) = with_flight_dump(&mut tel, |t| {
+                    scenario::record_with_metrics(&scs[0], t)
+                });
+                let code = emit_metrics(cli, &tel);
+                if code != 0 {
+                    return code;
+                }
+                vec![trace]
+            } else {
+                scenario::record_all(&scs)
+            };
             if let Err(e) = std::fs::create_dir_all(&golden_dir) {
                 eprintln!("error: create {}: {e}", golden_dir.display());
                 return 1;
@@ -394,6 +491,84 @@ fn cmd_scenario(cli: &Cli) -> i32 {
             2
         }
     }
+}
+
+/// `explain <scenario> [filter]` — run a timeline with provenance on and
+/// print every scheduler decision's explain row: outcome, chosen node vs
+/// the distance-only best, and the per-candidate term table (score,
+/// controller rho, fabric route rho, capacity fit) the decision weighed.
+fn cmd_explain(cli: &Cli) -> i32 {
+    use numasched::scenario::{self, catalog};
+    let Some(name) = cli.positional.first() else {
+        eprintln!("error: explain needs a scenario name (try `scenario list`)");
+        return 2;
+    };
+    let Some(mut sc) = catalog::by_name(name) else {
+        eprintln!("error: unknown scenario {name:?} (try `scenario list`)");
+        return 2;
+    };
+    if let Some(p) = &cli.policy {
+        match PolicyKind::parse(p) {
+            Some(k) => sc.params.scheduler.policy = k,
+            None => {
+                eprintln!("error: unknown policy {p:?}");
+                return 2;
+            }
+        }
+    }
+    if cli.seed != 42 {
+        sc.params.seed = cli.seed;
+    }
+    if let Some(h) = cli.horizon_ms {
+        sc.params.horizon_ms = h;
+    }
+    if sc.params.scheduler.policy != PolicyKind::Proposed {
+        eprintln!(
+            "note: only the proposed policy records provenance \
+             (running {} — expect zero rows)",
+            sc.params.scheduler.policy
+        );
+    }
+    let filter = cli.positional.get(1).map(String::as_str);
+    let mut tel = Telemetry::new();
+    with_flight_dump(&mut tel, |t| scenario::record_with_metrics(&sc, t));
+    let mut table = Table::new(
+        &format!("decision provenance — scenario {}", sc.name),
+        &["t_ms", "pid", "comm", "outcome", "from", "chosen", "dist_best", "cands"],
+    );
+    let (mut shown, mut total) = (0usize, 0usize);
+    let jsonl = tel.to_jsonl();
+    for line in jsonl.lines() {
+        let Some(row) = telemetry::parse_explain_line(line) else { continue };
+        total += 1;
+        if filter.is_some_and(|f| !row.outcome.contains(f) && !row.comm.contains(f)) {
+            continue;
+        }
+        shown += 1;
+        table.row(vec![
+            row.t_ms.to_string(),
+            row.pid.to_string(),
+            row.comm.clone(),
+            row.outcome.clone(),
+            row.from.to_string(),
+            row.chosen.map(|n| n.to_string()).unwrap_or_else(|| "-".into()),
+            row.distance_best.to_string(),
+            row.n_candidates.to_string(),
+        ]);
+    }
+    print!("{}", if cli.csv { table.to_csv() } else { table.render() });
+    match filter {
+        Some(f) => println!("{shown}/{total} explain rows match {f:?}"),
+        None => println!("{total} explain rows"),
+    }
+    if let Some(path) = &cli.metrics_out {
+        if let Err(e) = std::fs::write(path, &jsonl) {
+            eprintln!("error: write {}: {e}", path.display());
+            return 1;
+        }
+        println!("full stream -> {} ({})", path.display(), telemetry::METRICS_SCHEMA);
+    }
+    0
 }
 
 fn cmd_host_monitor(cli: &Cli) -> i32 {

@@ -14,6 +14,7 @@ pub mod sample;
 pub mod thread;
 
 use crate::procfs::{numa_maps, stat, sysnode, ProcSource};
+use std::cell::Cell;
 
 pub use sample::{LinkSample, NodeSample, Snapshot, TaskSample, TopoView};
 
@@ -23,6 +24,11 @@ pub struct Monitor {
     /// Ignore pids whose comm is not in this allowlist (empty = all).
     /// Used on live hosts to restrict monitoring to managed daemons.
     pub comm_filter: Vec<String>,
+    /// Pids listed but dropped mid-read: their stat was unreadable, or
+    /// they vanished between the stat and numa_maps reads (the procfs
+    /// race). `Cell`: sampling is `&self`. Telemetry mirrors this into
+    /// the `monitor_pid_drops` counter.
+    dropped_mid_read: Cell<u64>,
 }
 
 impl Monitor {
@@ -30,7 +36,17 @@ impl Monitor {
     /// node spanning every observed CPU when NUMA sysfs is absent.
     pub fn discover(source: &dyn ProcSource) -> Result<Self, String> {
         let topo = Self::discover_topo(source)?;
-        Ok(Self { topo, comm_filter: Vec::new() })
+        Ok(Self { topo, comm_filter: Vec::new(), dropped_mid_read: Cell::new(0) })
+    }
+
+    /// Cumulative count of pids dropped mid-read (see `dropped_mid_read`).
+    pub fn mid_read_drops(&self) -> u64 {
+        self.dropped_mid_read.get()
+    }
+
+    #[inline]
+    fn note_mid_read_drop(&self) {
+        self.dropped_mid_read.set(self.dropped_mid_read.get() + 1);
     }
 
     fn discover_topo(source: &dyn ProcSource) -> Result<TopoView, String> {
@@ -93,7 +109,10 @@ impl Monitor {
     pub fn sample(&self, source: &dyn ProcSource, t_ms: f64) -> Snapshot {
         let mut snap = Snapshot { t_ms, ..Default::default() };
         for pid in source.list_pids() {
-            let Some(stat_text) = source.read_stat(pid) else { continue };
+            let Some(stat_text) = source.read_stat(pid) else {
+                self.note_mid_read_drop();
+                continue;
+            };
             let Some(ps) = stat::parse(stat_text.trim()) else { continue };
             if !self.comm_filter.is_empty()
                 && !self.comm_filter.iter().any(|c| c == &ps.comm)
@@ -124,6 +143,7 @@ impl Monitor {
                     // reused buffer.
                     None => {
                         if source.read_stat(pid).is_none() {
+                            self.note_mid_read_drop();
                             continue;
                         }
                         let mut v = vec![0u64; self.topo.nodes];
@@ -183,6 +203,7 @@ impl Monitor {
         let mut visit = |pid: i32| {
             bufs.stat_text.clear();
             if !source.read_stat_into(pid, &mut bufs.stat_text) {
+                self.note_mid_read_drop();
                 return;
             }
             let Some(ps) = stat::parse_view(bufs.stat_text.trim()) else { return };
@@ -241,6 +262,7 @@ impl Monitor {
                 // absent numa_maps takes the rss fallback.
                 bufs.stat_text.clear();
                 if !source.read_stat_into(task.pid, &mut bufs.stat_text) {
+                    self.note_mid_read_drop();
                     return;
                 }
                 task.pages_per_node[task.node] = task.rss_pages;
@@ -502,10 +524,12 @@ mod tests {
 
         // Allocating path: the vanished pid is dropped, not fabricated
         // into a single-node sample from its dying stat line.
+        assert_eq!(mon.mid_read_drops(), 0, "clean sources never drop");
         let src = VanishingAfterStat { inner: &m, victim, stat_reads: Default::default() };
         let snap = mon.sample(&src, 1.0);
         assert!(snap.task(victim).is_none());
         assert!(snap.task(keep).is_some());
+        assert_eq!(mon.mid_read_drops(), 1, "the race is counted, not silent");
 
         // Fast path: prime the reused snapshot with both tasks, then
         // resample against the racing source — the dead task's stale
@@ -515,10 +539,12 @@ mod tests {
         let mut bufs = SampleBufs::new();
         mon.sample_into(&m, 0.5, &mut snap2, &mut bufs);
         assert_eq!(snap2.tasks.len(), 2);
+        assert_eq!(mon.mid_read_drops(), 1, "healthy resample adds no drops");
         mon.sample_into(&src, 1.0, &mut snap2, &mut bufs);
         assert_eq!(snap2.tasks.len(), 1);
         assert!(snap2.task(victim).is_none());
         assert_eq!(snap2, snap);
+        assert_eq!(mon.mid_read_drops(), 2, "fast path counts the race too");
     }
 
     #[test]

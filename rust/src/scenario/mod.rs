@@ -440,6 +440,28 @@ pub fn record(sc: &Scenario) -> String {
     record_with_result(sc).1
 }
 
+/// [`record`] with a telemetry sidecar: the trace comes out byte-
+/// identical to a plain [`record`] (pinned by the runner tests), and the
+/// run's metrics stream (schema `numasched-metrics/v1`) lands in `tel` —
+/// header stamped from the scenario's name, policy, and seed. Returns
+/// the result and the serialized trace; serialize the sidecar with
+/// [`crate::telemetry::Telemetry::to_jsonl`].
+pub fn record_with_metrics(
+    sc: &Scenario,
+    tel: &mut crate::telemetry::Telemetry,
+) -> (RunResult, String) {
+    tel.push_header(
+        sc.name,
+        sc.params.scheduler.policy.name(),
+        sc.params.seed,
+    );
+    let mut trace = ScenarioTrace::new();
+    trace.push_header(sc);
+    let result = runner::run_traced_instrumented(&sc.params, &mut trace, tel);
+    trace.push_summary(&result);
+    (result, trace.to_jsonl())
+}
+
 /// Record many scenarios concurrently on the deterministic sweep pool —
 /// each cell boots its own machine, so traces are bit-identical to
 /// serial [`record`] calls (pinned by `rust/tests/scenario_golden.rs`).

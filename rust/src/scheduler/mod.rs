@@ -22,6 +22,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use crate::config::{SchedulerConfig, StaticPin};
 use crate::fabric::FabricTopology;
 use crate::reporter::{RankedTask, Report};
+use crate::telemetry::{CandidateTerm, ExplainLog, ExplainRow};
 use crate::topology::NumaTopology;
 
 pub use ledger::PlacementLedger;
@@ -70,6 +71,38 @@ pub struct Decision {
     pub reason: Reason,
 }
 
+/// Always-on decision counters: every accepted move and every gate that
+/// suppressed one. These are plain integer bumps on paths that already
+/// branch, so they cost nothing measurable and stay live even without
+/// telemetry attached — the runner mirrors them into the metrics
+/// registry each epoch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DecisionStats {
+    /// Static-pin enforcement moves (step 1).
+    pub pin_moves: u64,
+    /// Speedup-factor moves without sticky pages (step 3).
+    pub speedup_moves: u64,
+    /// Contention moves carrying sticky pages (step 3).
+    pub contention_moves: u64,
+    /// Pull-home page consolidations (step 4).
+    pub consolidations: u64,
+    /// Accepted moves whose fabric-adjusted target differed from the
+    /// distance-only `best_node` — the reroutes the fabric layer buys.
+    pub fabric_reroutes: u64,
+    /// Candidates already on their (possibly fabric-adjusted) best node.
+    pub skip_already_best: u64,
+    /// Candidates whose score cleared no freight-scaled hysteresis bar.
+    pub skip_below_gain: u64,
+    /// Candidates suppressed by the per-pid migration cooldown.
+    pub skip_cooldown: u64,
+    /// Candidates that would have made the target the new hottest node.
+    pub skip_stampede: u64,
+    /// Candidates rejected by the powerful-core capacity gate.
+    pub skip_capacity: u64,
+    /// Epochs that hit `max_moves_per_epoch` with candidates left.
+    pub skip_max_moves: u64,
+}
+
 /// The user-space scheduler.
 pub struct UserScheduler {
     /// Hysteresis: minimum predicted gain to act.
@@ -96,6 +129,16 @@ pub struct UserScheduler {
     /// blindness is exactly the differential `scenario_differential`
     /// and the fabric ablation measure.
     fabric: Option<FabricTopology>,
+    /// SLIT distance matrix, kept for provenance rows (candidate terms
+    /// quote the distance the ranking was blind or not to).
+    distance: Vec<Vec<f64>>,
+
+    /// Always-on move/skip counters (see [`DecisionStats`]).
+    pub stats: DecisionStats,
+    /// Decision provenance. Disabled by default; the runner enables it
+    /// when telemetry is attached. Rows describe decisions — they never
+    /// influence them, so enabling provenance cannot change a run.
+    pub explain: ExplainLog,
 
     /// Occupancy / cooldown / projection accounting. Constructed from
     /// the machine topology; static pins and scheduler placements both
@@ -136,8 +179,42 @@ impl UserScheduler {
             decisions: Vec::new(),
             fabric_score_weight: 1.0,
             fabric: topo.fabric.clone(),
+            distance: topo.distance.clone(),
+            stats: DecisionStats::default(),
+            explain: ExplainLog::default(),
             ledger: PlacementLedger::from_topology(topo),
         }
+    }
+
+    /// Candidate terms for a provenance row: one entry per node with the
+    /// distance, score, projected controller demand, projected route
+    /// congestion, and capacity verdict the walk weighed. Only built when
+    /// the explain log is enabled — the decision path never reads these.
+    fn explain_candidates(
+        &self,
+        task: &RankedTask,
+        page_home: usize,
+        fab_on: bool,
+        thread_cap: i64,
+    ) -> Vec<CandidateTerm> {
+        if !self.explain.enabled {
+            return Vec::new();
+        }
+        (0..task.scores.len())
+            .map(|n| CandidateTerm {
+                node: n,
+                distance: self
+                    .distance
+                    .get(task.node)
+                    .and_then(|row| row.get(n))
+                    .copied()
+                    .unwrap_or(0.0),
+                score: task.scores[n],
+                ctrl_rho: self.ledger.projected(n),
+                route_rho: if fab_on { self.route_congestion(page_home, n) } else { 0.0 },
+                fits: self.ledger.fits(n, task.threads, thread_cap),
+            })
+            .collect()
     }
 
     /// Where a task's pages (and therefore the far end of every route a
@@ -180,6 +257,18 @@ impl UserScheduler {
             }
         }
         best
+    }
+
+    /// Map a skip outcome tag onto its [`DecisionStats`] counter.
+    fn stats_bump(&mut self, outcome: &str) {
+        match outcome {
+            "skip:already_best" => self.stats.skip_already_best += 1,
+            "skip:below_gain" => self.stats.skip_below_gain += 1,
+            "skip:cooldown" => self.stats.skip_cooldown += 1,
+            "skip:stampede" => self.stats.skip_stampede += 1,
+            "skip:capacity" => self.stats.skip_capacity += 1,
+            _ => {}
+        }
     }
 
     /// The occupancy view (read-only; tests and the runner's invariant
@@ -256,6 +345,22 @@ impl UserScheduler {
                     executed.push(d.clone());
                     self.decisions.push(d);
                     self.ledger.record_move_time(task.pid, t);
+                    self.stats.pin_moves += 1;
+                    if self.explain.enabled {
+                        self.explain.push(ExplainRow {
+                            t_ms: t as u64,
+                            pid: task.pid,
+                            comm: task.comm.clone(),
+                            from: task.node,
+                            outcome: "static_pin",
+                            chosen: Some(node),
+                            distance_best: task.best_node,
+                            needed: 0.0,
+                            cooldown: false,
+                            sticky_pages: moved,
+                            candidates: Vec::new(),
+                        });
+                    }
                 }
             }
         }
@@ -294,6 +399,7 @@ impl UserScheduler {
         let mut moves = 0usize;
         for task in &report.by_speedup {
             if moves >= self.max_moves_per_epoch {
+                self.stats.skip_max_moves += 1;
                 break;
             }
             if self.pins.contains_key(&task.comm) {
@@ -317,10 +423,40 @@ impl UserScheduler {
             } else {
                 (task.best_node, task.best_score)
             };
-            if target == task.node || score < needed {
+            // Provenance: capture the full candidate table (ledger
+            // projections as of *this* point in the walk) before the
+            // gates run, so a skip row shows what the gate rejected.
+            // No-op unless the explain log is enabled.
+            let skip = |s: &mut Self, outcome: &'static str, cooldown: bool| {
+                s.stats_bump(outcome);
+                if s.explain.enabled {
+                    let candidates =
+                        s.explain_candidates(task, page_home, fab_on, thread_cap);
+                    s.explain.push(ExplainRow {
+                        t_ms: t as u64,
+                        pid: task.pid,
+                        comm: task.comm.clone(),
+                        from: task.node,
+                        outcome,
+                        chosen: None,
+                        distance_best: task.best_node,
+                        needed,
+                        cooldown,
+                        sticky_pages: 0,
+                        candidates,
+                    });
+                }
+            };
+            if target == task.node {
+                skip(self, "skip:already_best", false);
+                continue;
+            }
+            if score < needed {
+                skip(self, "skip:below_gain", false);
                 continue;
             }
             if self.ledger.in_cooldown(task.pid, t, self.cooldown_ms) {
+                skip(self, "skip:cooldown", true);
                 continue;
             }
             // Don't stampede one node: each accepted move adds its demand
@@ -329,13 +465,22 @@ impl UserScheduler {
             let new_target_demand = self.ledger.projected(target) + task.mem_intensity;
             let hottest = self.ledger.hottest_projection();
             if new_target_demand > hottest.max(1e-9) * 1.10 && moves > 0 {
+                skip(self, "skip:stampede", false);
                 continue;
             }
             // CPU-capacity guard: the target must have powerful-core
             // slots left for this task's threads.
             if !self.ledger.fits(target, task.threads, thread_cap) {
+                skip(self, "skip:capacity", false);
                 continue;
             }
+            // Accepted: snapshot the candidate table before projections
+            // move (same reason as above).
+            let row_candidates = if self.explain.enabled {
+                self.explain_candidates(task, page_home, fab_on, thread_cap)
+            } else {
+                Vec::new()
+            };
 
             ctl.move_process(task.pid, target);
             // Sticky pages move along when contention degradation is high
@@ -372,6 +517,29 @@ impl UserScheduler {
             executed.push(d.clone());
             self.decisions.push(d);
             self.ledger.record_move_time(task.pid, t);
+            if sticky > 0 {
+                self.stats.contention_moves += 1;
+            } else {
+                self.stats.speedup_moves += 1;
+            }
+            if fab_on && target != task.best_node {
+                self.stats.fabric_reroutes += 1;
+            }
+            if self.explain.enabled {
+                self.explain.push(ExplainRow {
+                    t_ms: t as u64,
+                    pid: task.pid,
+                    comm: task.comm.clone(),
+                    from: task.node,
+                    outcome: "moved",
+                    chosen: Some(target),
+                    distance_best: task.best_node,
+                    needed,
+                    cooldown: false,
+                    sticky_pages: sticky,
+                    candidates: row_candidates,
+                });
+            }
             moves += 1;
         }
 
@@ -423,6 +591,22 @@ impl UserScheduler {
                 executed.push(d.clone());
                 self.decisions.push(d);
                 self.ledger.record_move_time(task.pid, t);
+                self.stats.consolidations += 1;
+                if self.explain.enabled {
+                    self.explain.push(ExplainRow {
+                        t_ms: t as u64,
+                        pid: task.pid,
+                        comm: task.comm.clone(),
+                        from: task.node,
+                        outcome: "consolidate",
+                        chosen: Some(task.node),
+                        distance_best: task.best_node,
+                        needed: 0.0,
+                        cooldown: false,
+                        sticky_pages: moved,
+                        candidates: Vec::new(),
+                    });
+                }
             }
         }
         executed
@@ -756,5 +940,107 @@ mod tests {
         let dec = s.apply(&report(vec![huge], true), &mut ctl);
         assert_eq!(dec.len(), 1, "same score passes once freight is huge-backed");
         assert_eq!(ctl.moves, vec![(1, 2)]);
+    }
+
+    #[test]
+    fn stats_count_moves_and_gate_suppressions() {
+        let mut s = sched();
+        let mut ctl = MockCtl::default();
+        // One accepted speedup move...
+        s.apply(&report(vec![ranked(1, "a", 0, 2, 5.0, 0.0)], true), &mut ctl);
+        assert_eq!(s.stats.speedup_moves, 1);
+        // ...then the same pid again inside its cooldown window.
+        s.apply(&report(vec![ranked(1, "a", 2, 0, 5.0, 0.0)], true), &mut ctl);
+        assert_eq!(s.stats.skip_cooldown, 1, "cooldown suppression is counted");
+        // A below-hysteresis candidate and an already-best one.
+        s.apply(&report(vec![ranked(2, "b", 0, 2, 0.01, 0.0)], true), &mut ctl);
+        assert_eq!(s.stats.skip_below_gain, 1);
+        s.apply(&report(vec![ranked(3, "c", 2, 2, 9.0, 0.0)], true), &mut ctl);
+        assert_eq!(s.stats.skip_already_best, 1);
+        // Sticky move counts as contention.
+        s.apply(&report(vec![ranked(4, "d", 0, 3, 5.0, 0.9)], true), &mut ctl);
+        assert_eq!(s.stats.contention_moves, 1);
+        assert_eq!(s.stats.fabric_reroutes, 0, "fabric-less: never a reroute");
+    }
+
+    #[test]
+    fn explain_rows_describe_but_never_steer() {
+        // Two identical schedulers, explain on vs off: byte-identical
+        // control-surface calls (provenance observes, never steers).
+        let rep = || report(vec![ranked(1, "a", 0, 2, 5.0, 0.9)], true);
+        let mut s_off = sched();
+        let mut ctl_off = MockCtl::default();
+        s_off.apply(&rep(), &mut ctl_off);
+        let mut s_on = sched();
+        s_on.explain.enabled = true;
+        let mut ctl_on = MockCtl::default();
+        s_on.apply(&rep(), &mut ctl_on);
+        assert_eq!(ctl_on.moves, ctl_off.moves);
+        assert_eq!(ctl_on.page_moves, ctl_off.page_moves);
+        assert_eq!(s_on.stats, s_off.stats, "stats identical too");
+        assert!(s_off.explain.is_empty(), "disabled log stays empty");
+
+        let rows = s_on.explain.take_rows();
+        assert_eq!(rows.len(), 1);
+        let row = &rows[0];
+        assert_eq!(row.outcome, "moved");
+        assert_eq!(row.chosen, Some(2));
+        assert_eq!(row.distance_best, 2);
+        assert_eq!(row.pid, 1);
+        assert!(row.sticky_pages > 0, "contention move carries sticky pages");
+        assert_eq!(row.candidates.len(), 4, "one term per node");
+        // The local node quotes the SLIT self-distance, remote ones more.
+        assert_eq!(row.candidates[0].distance, 10.0);
+        assert!(row.candidates[2].distance > 10.0);
+        assert!(row.candidates.iter().all(|c| c.route_rho == 0.0), "no fabric");
+    }
+
+    #[test]
+    fn skip_rows_capture_the_rejected_candidate_table() {
+        let mut s = sched();
+        s.explain.enabled = true;
+        let mut ctl = MockCtl::default();
+        s.apply(&report(vec![ranked(1, "a", 0, 2, 5.0, 0.0)], true), &mut ctl);
+        s.explain.take_rows();
+        // Cooldown skip: the row says so, with chosen = null.
+        s.apply(&report(vec![ranked(1, "a", 2, 0, 5.0, 0.0)], true), &mut ctl);
+        let rows = s.explain.take_rows();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].outcome, "skip:cooldown");
+        assert!(rows[0].cooldown);
+        assert_eq!(rows[0].chosen, None);
+        assert_eq!(rows[0].candidates.len(), 4);
+    }
+
+    #[test]
+    fn fabric_reroute_is_counted_and_explained() {
+        let topo = crate::topology::NumaTopology::from_config(
+            &crate::config::MachineConfig::preset("8node-fabric").unwrap(),
+        );
+        let mut t = ranked(1, "a", 1, 2, 5.0, 0.0);
+        t.scores = vec![5.0, 0.0, 5.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        t.pages_per_node = vec![0, 1000, 0, 0, 0, 0, 0, 0];
+        t.huge_2m_per_node = vec![0; 8];
+        t.giant_1g_per_node = vec![0; 8];
+        let mut rep = report(vec![t], true);
+        rep.node_demand = vec![0.5, 4.0, 0.5, 0.5, 0.5, 0.5, 0.5, 0.5];
+        rep.link_rho = vec![0.0; 8];
+        rep.link_rho[1] = 0.9; // the 1-2 link is hot
+
+        let mut s = UserScheduler::new(&crate::config::SchedulerConfig::default(), &topo);
+        s.explain.enabled = true;
+        let mut ctl = MockCtl::default();
+        s.apply(&rep, &mut ctl);
+        assert_eq!(ctl.moves, vec![(1, 0)]);
+        assert_eq!(s.stats.fabric_reroutes, 1);
+        let rows = s.explain.take_rows();
+        let row = rows.iter().find(|r| r.outcome == "moved").expect("move row");
+        assert_eq!(row.chosen, Some(0));
+        assert_eq!(row.distance_best, 2, "distance-only ranking said node 2");
+        assert_ne!(row.chosen, Some(row.distance_best), "reroute visible in provenance");
+        // The hot route's congestion shows up in node 2's candidate term.
+        let c2 = &row.candidates[2];
+        assert!(c2.route_rho > 0.5, "hot link quoted: {}", c2.route_rho);
+        assert_eq!(row.candidates[0].route_rho, 0.0, "idle route quoted as idle");
     }
 }

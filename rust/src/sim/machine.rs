@@ -367,6 +367,16 @@ impl Machine {
             .map(|f| f.ctls.iter().map(LinkCtl::rho_raw).collect())
     }
 
+    /// Total link-ticks on which the fabric pricing clip engaged (the
+    /// committed rho exceeded `RHO_MAX`), summed over all links; `None`
+    /// on fabric-less machines. Telemetry mirrors this into the
+    /// `fabric_rho_clips` counter.
+    pub fn fabric_clip_count(&self) -> Option<u64> {
+        self.fabric
+            .as_ref()
+            .map(|f| f.ctls.iter().map(LinkCtl::clip_count).sum())
+    }
+
     pub fn core_load(&self, core: usize) -> usize {
         self.cores[core].len()
     }

@@ -1,0 +1,182 @@
+//! Epoch flight recorder: a fixed-size ring of the last N epochs' metrics
+//! and explain rows, dumped to a diagnostics file when something goes
+//! wrong (the placement-ledger oracle fires, a property test shrinks a
+//! failure, or an instrumented run panics).
+//!
+//! The frames store the *rendered* JSONL lines rather than live metric
+//! state: a dump must be writable from inside a failure path with no
+//! further computation, and the rendered lines are exactly what the
+//! metrics sidecar would have contained anyway.
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Schema tag of a flight-recorder dump file.
+pub const FLIGHT_SCHEMA: &str = "numasched-flight/v1";
+
+/// Environment variable overriding the dump path (default
+/// `numasched-flight.jsonl` in the current directory).
+pub const FLIGHT_DUMP_ENV: &str = "NUMASCHED_FLIGHT_DUMP";
+
+/// Default number of epochs retained.
+pub const DEFAULT_FLIGHT_EPOCHS: usize = 64;
+
+/// One retained epoch: its metrics record plus the explain rows emitted
+/// during it.
+#[derive(Clone, Debug)]
+pub struct FlightFrame {
+    pub epoch: u64,
+    pub t_ms: u64,
+    pub epoch_line: String,
+    pub explain_lines: Vec<String>,
+}
+
+/// The ring buffer proper.
+pub struct FlightRecorder {
+    cap: usize,
+    frames: VecDeque<FlightFrame>,
+    /// Total frames ever pushed (so a dump shows how much history rolled off).
+    pushed: u64,
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> Self {
+        FlightRecorder {
+            cap: cap.max(1),
+            frames: VecDeque::with_capacity(cap.max(1)),
+            pushed: 0,
+        }
+    }
+
+    pub fn push(&mut self, frame: FlightFrame) {
+        if self.frames.len() == self.cap {
+            self.frames.pop_front();
+        }
+        self.frames.push_back(frame);
+        self.pushed += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.frames.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.frames.is_empty()
+    }
+
+    pub fn frames(&self) -> impl Iterator<Item = &FlightFrame> {
+        self.frames.iter()
+    }
+
+    /// Render the dump: a header line with the trigger reason, then each
+    /// retained epoch's metrics record followed by its explain rows.
+    pub fn dump_jsonl(&self, reason: &str) -> String {
+        let mut out = String::new();
+        let reason = reason.replace(&['"', '\\', '\n'][..], "_");
+        out.push_str(&format!(
+            "{{\"schema\":\"{FLIGHT_SCHEMA}\",\"reason\":\"{reason}\",\"frames\":{},\"total_epochs\":{}}}\n",
+            self.frames.len(),
+            self.pushed
+        ));
+        for f in &self.frames {
+            out.push_str(&f.epoch_line);
+            out.push('\n');
+            for e in &f.explain_lines {
+                out.push_str(e);
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// Write the dump to `path`.
+    pub fn dump_to(&self, path: &Path, reason: &str) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.dump_jsonl(reason).as_bytes())
+    }
+
+    /// Dump to the configured diagnostics path (`NUMASCHED_FLIGHT_DUMP` or
+    /// `numasched-flight.jsonl`), returning the path written. Failure paths
+    /// call this best-effort: an IO error is reported, never panicked on —
+    /// the original failure must stay the headline.
+    pub fn dump_default(&self, reason: &str) -> std::io::Result<PathBuf> {
+        let path = std::env::var(FLIGHT_DUMP_ENV)
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("numasched-flight.jsonl"));
+        self.dump_to(&path, reason)?;
+        Ok(path)
+    }
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        FlightRecorder::new(DEFAULT_FLIGHT_EPOCHS)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(epoch: u64) -> FlightFrame {
+        FlightFrame {
+            epoch,
+            t_ms: epoch * 100,
+            epoch_line: format!("{{\"t\":{},\"epoch\":{epoch},\"c\":{{}},\"g\":{{}},\"h\":{{}}}}", epoch * 100),
+            explain_lines: vec![format!(
+                "{{\"t\":{},\"explain\":\"moved\",\"pid\":1,\"epochref\":{epoch}}}",
+                epoch * 100
+            )],
+        }
+    }
+
+    #[test]
+    fn ring_is_bounded_and_keeps_the_tail() {
+        let mut fr = FlightRecorder::new(3);
+        for e in 0..10 {
+            fr.push(frame(e));
+        }
+        assert_eq!(fr.len(), 3);
+        let kept: Vec<u64> = fr.frames().map(|f| f.epoch).collect();
+        assert_eq!(kept, vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn dump_contains_header_frames_and_explains() {
+        let mut fr = FlightRecorder::new(2);
+        for e in 0..5 {
+            fr.push(frame(e));
+        }
+        let dump = fr.dump_jsonl("ledger-oracle");
+        let lines: Vec<&str> = dump.lines().collect();
+        // Header + 2 frames x (1 epoch line + 1 explain line).
+        assert_eq!(lines.len(), 5);
+        assert!(lines[0].contains(FLIGHT_SCHEMA));
+        assert!(lines[0].contains("\"reason\":\"ledger-oracle\""));
+        assert!(lines[0].contains("\"frames\":2"));
+        assert!(lines[0].contains("\"total_epochs\":5"));
+        assert!(lines[1].contains("\"epoch\":3"));
+        assert!(lines[2].contains("\"explain\""));
+        assert!(lines[3].contains("\"epoch\":4"));
+    }
+
+    #[test]
+    fn reason_is_sanitized() {
+        let fr = FlightRecorder::new(1);
+        let dump = fr.dump_jsonl("bad\"reason\nwith\\stuff");
+        assert!(dump.lines().next().unwrap().contains("bad_reason_with_stuff"));
+    }
+
+    #[test]
+    fn dump_to_writes_a_file() {
+        let mut fr = FlightRecorder::new(4);
+        fr.push(frame(1));
+        let dir = std::env::temp_dir();
+        let path = dir.join("numasched-flight-test.jsonl");
+        fr.dump_to(&path, "unit-test").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with(&format!("{{\"schema\":\"{FLIGHT_SCHEMA}\"")));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,356 @@
+//! Telemetry: deterministic metrics, decision provenance, flight
+//! recording, and hot-loop self-profiling.
+//!
+//! The paper's pitch is that a *user-level* scheduler wins because it can
+//! observe what the kernel cannot; this module is that observability turned
+//! on ourselves. It bundles four pieces:
+//!
+//! * [`registry::Registry`] — counters / gauges / log2 histograms with a
+//!   zero-alloc hot path and two renderings (Prometheus text, JSONL).
+//! * [`provenance::ExplainLog`] — structured explain rows for every
+//!   scheduler placement, migration, and skip.
+//! * [`flight::FlightRecorder`] — ring buffer of the last N epochs,
+//!   dumped on oracle/panic/shrink failures.
+//! * [`spans::Spans`] — wall-clock phase profiling, quarantined in a
+//!   diff-excluded timing record.
+//!
+//! ## The `numasched-metrics/v1` stream
+//!
+//! A metrics file is a JSONL sidecar to the `numasched-trace/v1` trace:
+//!
+//! ```text
+//! {"schema":"numasched-metrics/v1","name":...,"policy":...,"seed":...}   header
+//! {"t":...,"explain":"moved",...}                                        explain rows
+//! {"t":...,"epoch":N,"c":{...},"g":{...},"h":{...}}                      epoch records
+//! {"timing":{...}}                                                       diff-EXCLUDED
+//! {"end_ms":...,"epochs":N,"explains":N}                                 footer
+//! ```
+//!
+//! ## Determinism contract
+//!
+//! Telemetry must never perturb a run: it consumes no RNG, performs no
+//! float arithmetic that feeds back into the sim, and reads the clock only
+//! inside [`spans`]. Consequently (a) traces and experiment outputs are
+//! byte-identical with telemetry on or off, and (b) two identical
+//! instrumented runs produce byte-identical metrics *modulo the timing
+//! record* — which [`Telemetry::diff_deterministic`] skips. Both halves
+//! are enforced by `rust/tests/telemetry_determinism.rs` and CI's
+//! metrics-smoke determinism gate.
+
+pub mod flight;
+pub mod provenance;
+pub mod registry;
+pub mod spans;
+
+pub use flight::{FlightFrame, FlightRecorder, FLIGHT_DUMP_ENV, FLIGHT_SCHEMA};
+pub use provenance::{
+    is_explain_line, parse_explain_line, CandidateTerm, ExplainLog, ExplainRow,
+    ParsedExplain,
+};
+pub use registry::{
+    parse_epoch_line, parse_prometheus, CounterId, GaugeId, Hist, HistId, ParsedEpoch,
+    Registry,
+};
+pub use spans::{Phase, Spans};
+
+use std::path::PathBuf;
+
+/// Schema tag, first line of every metrics file.
+pub const METRICS_SCHEMA: &str = "numasched-metrics/v1";
+
+/// Pre-registered ids for every metric the runner emits. Registration
+/// happens once in [`Telemetry::new`]; the run loop only does indexed
+/// stores. Field order here is the registration (and therefore rendering)
+/// order — append, don't reorder, when adding metrics.
+pub struct MetricIds {
+    // Counters (cumulative).
+    pub epochs: CounterId,
+    pub monitor_samples: CounterId,
+    pub monitor_pid_drops: CounterId,
+    pub maps_cache_hits: CounterId,
+    pub maps_cache_misses: CounterId,
+    pub fabric_rho_clips: CounterId,
+    pub events_fired: CounterId,
+    pub migrations: CounterId,
+    pub pages_migrated: CounterId,
+    pub migration_ops: CounterId,
+    pub moves_pin: CounterId,
+    pub moves_speedup: CounterId,
+    pub moves_contention: CounterId,
+    pub consolidations: CounterId,
+    pub fabric_reroutes: CounterId,
+    pub skip_cooldown: CounterId,
+    pub skip_capacity: CounterId,
+    pub skip_stampede: CounterId,
+    pub skip_below_gain: CounterId,
+    pub skip_already_best: CounterId,
+    pub skip_max_moves: CounterId,
+    pub explain_rows: CounterId,
+    // Gauges (last-value).
+    pub procs_running: GaugeId,
+    pub node_rho_max: GaugeId,
+    pub link_rho_max: GaugeId,
+    pub imbalance: GaugeId,
+    // Histograms. Rho values are milli-scaled (0.73 → 730) so the log2
+    // buckets resolve the interesting 0..=1000 range.
+    pub node_rho_milli: HistId,
+    pub link_rho_milli: HistId,
+    pub sticky_pages: HistId,
+}
+
+/// Everything a run needs to emit metrics, bundled for threading through
+/// the runner as one `&mut`.
+pub struct Telemetry {
+    pub registry: Registry,
+    pub ids: MetricIds,
+    pub spans: Spans,
+    pub flight: FlightRecorder,
+    lines: Vec<String>,
+    pending_explains: Vec<String>,
+    epoch: u64,
+    explain_total: u64,
+    finished: bool,
+}
+
+impl Telemetry {
+    pub fn new() -> Self {
+        let mut r = Registry::new();
+        let ids = MetricIds {
+            epochs: r.counter("epochs"),
+            monitor_samples: r.counter("monitor_samples"),
+            monitor_pid_drops: r.counter("monitor_pid_drops"),
+            maps_cache_hits: r.counter("maps_cache_hits"),
+            maps_cache_misses: r.counter("maps_cache_misses"),
+            fabric_rho_clips: r.counter("fabric_rho_clips"),
+            events_fired: r.counter("events_fired"),
+            migrations: r.counter("migrations"),
+            pages_migrated: r.counter("pages_migrated"),
+            migration_ops: r.counter("migration_ops"),
+            moves_pin: r.counter("moves_pin"),
+            moves_speedup: r.counter("moves_speedup"),
+            moves_contention: r.counter("moves_contention"),
+            consolidations: r.counter("consolidations"),
+            fabric_reroutes: r.counter("fabric_reroutes"),
+            skip_cooldown: r.counter("skip_cooldown"),
+            skip_capacity: r.counter("skip_capacity"),
+            skip_stampede: r.counter("skip_stampede"),
+            skip_below_gain: r.counter("skip_below_gain"),
+            skip_already_best: r.counter("skip_already_best"),
+            skip_max_moves: r.counter("skip_max_moves"),
+            explain_rows: r.counter("explain_rows"),
+            procs_running: r.gauge("procs_running"),
+            node_rho_max: r.gauge("node_rho_max"),
+            link_rho_max: r.gauge("link_rho_max"),
+            imbalance: r.gauge("imbalance"),
+            node_rho_milli: r.histogram("node_rho_milli"),
+            link_rho_milli: r.histogram("link_rho_milli"),
+            sticky_pages: r.histogram("sticky_pages"),
+        };
+        Telemetry {
+            registry: r,
+            ids,
+            spans: Spans::default(),
+            flight: FlightRecorder::default(),
+            lines: Vec::new(),
+            pending_explains: Vec::new(),
+            epoch: 0,
+            explain_total: 0,
+            finished: false,
+        }
+    }
+
+    /// Emit the stream header. Call once, before the run.
+    pub fn push_header(&mut self, name: &str, policy: &str, seed: u64) {
+        self.lines.push(format!(
+            "{{\"schema\":\"{METRICS_SCHEMA}\",\"name\":\"{}\",\"policy\":\"{}\",\"seed\":{seed}}}",
+            provenance::esc(name),
+            provenance::esc(policy),
+        ));
+    }
+
+    /// Render drained scheduler explain rows into the stream (and the
+    /// current epoch's flight frame). Also feeds the sticky-pages
+    /// histogram and the explain-row counter.
+    pub fn record_explains(&mut self, rows: Vec<ExplainRow>) {
+        for row in rows {
+            if row.outcome == "moved" && row.sticky_pages > 0 {
+                self.registry.observe(self.ids.sticky_pages, row.sticky_pages);
+            }
+            let line = row.render_json();
+            self.lines.push(line.clone());
+            self.pending_explains.push(line);
+            self.explain_total += 1;
+        }
+        self.registry
+            .set_counter(self.ids.explain_rows, self.explain_total);
+    }
+
+    /// Close out one metrics epoch: bump the epoch counter, render the
+    /// epoch record, and retire it (plus the epoch's explain rows) into
+    /// the flight recorder.
+    pub fn end_epoch(&mut self, t_ms: u64) {
+        self.registry.inc(self.ids.epochs, 1);
+        let line = self.registry.render_epoch_json(t_ms, self.epoch);
+        self.lines.push(line.clone());
+        self.flight.push(FlightFrame {
+            epoch: self.epoch,
+            t_ms,
+            epoch_line: line,
+            explain_lines: std::mem::take(&mut self.pending_explains),
+        });
+        self.epoch += 1;
+    }
+
+    /// Number of completed metrics epochs.
+    pub fn epochs(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Total explain rows recorded.
+    pub fn explain_total(&self) -> u64 {
+        self.explain_total
+    }
+
+    /// Emit the timing record and the footer. Idempotent.
+    pub fn finish(&mut self, end_ms: u64) {
+        if self.finished {
+            return;
+        }
+        self.finished = true;
+        self.lines.push(self.spans.render_timing_json());
+        self.lines.push(format!(
+            "{{\"end_ms\":{end_ms},\"epochs\":{},\"explains\":{}}}",
+            self.epoch, self.explain_total
+        ));
+    }
+
+    /// The full metrics stream as JSONL.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for l in &self.lines {
+            out.push_str(l);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Dump the flight recorder to the configured diagnostics path.
+    pub fn dump_flight(&self, reason: &str) -> std::io::Result<PathBuf> {
+        self.flight.dump_default(reason)
+    }
+
+    /// Compare two metrics streams, skipping timing records on both
+    /// sides. Returns the first differing (line-number, left, right) —
+    /// `None` means deterministic-equal. Line numbers are 1-based over
+    /// the left stream's retained lines.
+    pub fn diff_deterministic(a: &str, b: &str) -> Option<(usize, String, String)> {
+        let mut la = a.lines().filter(|l| !spans::is_timing_line(l));
+        let mut lb = b.lines().filter(|l| !spans::is_timing_line(l));
+        let mut n = 0usize;
+        loop {
+            n += 1;
+            match (la.next(), lb.next()) {
+                (None, None) => return None,
+                (x, y) if x == y => {}
+                (x, y) => {
+                    return Some((
+                        n,
+                        x.unwrap_or("<eof>").to_string(),
+                        y.unwrap_or("<eof>").to_string(),
+                    ))
+                }
+            }
+        }
+    }
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Telemetry::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_row(outcome: &'static str) -> ExplainRow {
+        ExplainRow {
+            t_ms: 100,
+            pid: 7,
+            comm: "bench".into(),
+            from: 0,
+            outcome,
+            chosen: Some(1),
+            distance_best: 1,
+            needed: 1.05,
+            cooldown: false,
+            sticky_pages: 512,
+            candidates: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn stream_shape_header_epochs_timing_footer() {
+        let mut tel = Telemetry::new();
+        tel.push_header("unit", "proposed", 42);
+        tel.record_explains(vec![sample_row("moved")]);
+        tel.end_epoch(100);
+        tel.end_epoch(200);
+        tel.finish(200);
+        let s = tel.to_jsonl();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 6);
+        assert!(lines[0].contains(METRICS_SCHEMA));
+        assert!(lines[1].contains("\"explain\":\"moved\""));
+        assert!(lines[2].contains("\"epoch\":0"));
+        assert!(lines[3].contains("\"epoch\":1"));
+        assert!(spans::is_timing_line(lines[4]));
+        assert!(lines[5].contains("\"epochs\":2"));
+        assert!(lines[5].contains("\"explains\":1"));
+    }
+
+    #[test]
+    fn explains_feed_counters_and_sticky_histogram() {
+        let mut tel = Telemetry::new();
+        tel.record_explains(vec![sample_row("moved"), sample_row("skip:cooldown")]);
+        assert_eq!(tel.registry.counter_value(tel.ids.explain_rows), 2);
+        // Only the move observes sticky pages.
+        assert_eq!(tel.registry.hist(tel.ids.sticky_pages).count, 1);
+    }
+
+    #[test]
+    fn flight_frames_carry_epoch_explains() {
+        let mut tel = Telemetry::new();
+        tel.record_explains(vec![sample_row("moved")]);
+        tel.end_epoch(100);
+        tel.record_explains(vec![sample_row("skip:capacity")]);
+        tel.end_epoch(200);
+        let frames: Vec<&FlightFrame> = tel.flight.frames().collect();
+        assert_eq!(frames.len(), 2);
+        assert_eq!(frames[0].explain_lines.len(), 1);
+        assert!(frames[0].explain_lines[0].contains("moved"));
+        assert!(frames[1].explain_lines[0].contains("skip:capacity"));
+    }
+
+    #[test]
+    fn diff_skips_timing_but_catches_real_divergence() {
+        let a = "{\"t\":1}\n{\"timing\":{\"x\":1}}\n{\"end_ms\":5}\n";
+        let b = "{\"t\":1}\n{\"timing\":{\"x\":999}}\n{\"end_ms\":5}\n";
+        assert_eq!(Telemetry::diff_deterministic(a, b), None);
+        let c = "{\"t\":2}\n{\"end_ms\":5}\n";
+        let d = Telemetry::diff_deterministic(a, c).expect("divergence");
+        assert_eq!(d.0, 1);
+        // Length mismatch also diverges.
+        let e = "{\"t\":1}\n";
+        assert!(Telemetry::diff_deterministic(a, e).is_some());
+    }
+
+    #[test]
+    fn finish_is_idempotent() {
+        let mut tel = Telemetry::new();
+        tel.finish(10);
+        tel.finish(10);
+        assert_eq!(tel.to_jsonl().lines().count(), 2);
+    }
+}

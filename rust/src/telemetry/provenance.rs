@@ -1,0 +1,286 @@
+//! Decision provenance: structured explain rows for every proposed-scheduler
+//! placement, migration, and skip.
+//!
+//! The scheduler is the one component whose behavior is hardest to audit
+//! from the outside: a pid lands on a node because of a *ranking* (distance,
+//! per-node speedup scores), two *congestion* terms (controller rho from the
+//! placement ledger's demand projection, fabric route rho), and three
+//! *gates* (cooldown, capacity, stampede). An [`ExplainRow`] captures all of
+//! them at the moment of decision, so `numasched explain` can answer "why is
+//! pid 42 on node 3?" from a recorded metrics stream instead of a debugger.
+//!
+//! Rows are only collected when [`ExplainLog::enabled`] is set (the runner
+//! flips it when telemetry is attached); the scheduler's *decisions* are
+//! identical either way — provenance observes, it never steers.
+
+use super::registry::{json_str, json_u64};
+
+/// One candidate node considered for a task, with every term the scheduler
+/// weighed. `score` is the profiled speedup for running on that node;
+/// `ctrl_rho` is the ledger's projected demand share (controller pressure);
+/// `route_rho` is the max link utilization on the fabric route from the
+/// task's page home.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CandidateTerm {
+    pub node: usize,
+    pub distance: f64,
+    pub score: f64,
+    pub ctrl_rho: f64,
+    pub route_rho: f64,
+    pub fits: bool,
+}
+
+/// One scheduler decision (or non-decision), renderable as a JSONL record.
+///
+/// `outcome` is a closed vocabulary: `moved`, `static_pin`, `consolidate`,
+/// `skip:already_best`, `skip:below_gain`, `skip:cooldown`,
+/// `skip:stampede`, `skip:capacity`. `distance_best` is the node the
+/// distance-only ranking would pick (`RankedTask::best_node`); when
+/// `chosen` differs, the fabric/controller terms overrode raw distance —
+/// exactly the rows the link-storm acceptance check looks for.
+#[derive(Clone, Debug)]
+pub struct ExplainRow {
+    pub t_ms: u64,
+    pub pid: i32,
+    pub comm: String,
+    pub from: usize,
+    pub outcome: &'static str,
+    pub chosen: Option<usize>,
+    pub distance_best: usize,
+    pub needed: f64,
+    pub cooldown: bool,
+    pub sticky_pages: u64,
+    pub candidates: Vec<CandidateTerm>,
+}
+
+pub(crate) fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl ExplainRow {
+    /// Render as one `numasched-metrics/v1` explain record.
+    pub fn render_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\"t\":");
+        out.push_str(&self.t_ms.to_string());
+        out.push_str(",\"explain\":\"");
+        out.push_str(self.outcome);
+        out.push_str("\",\"pid\":");
+        out.push_str(&self.pid.to_string());
+        out.push_str(",\"comm\":\"");
+        out.push_str(&esc(&self.comm));
+        out.push_str("\",\"from\":");
+        out.push_str(&self.from.to_string());
+        out.push_str(",\"chosen\":");
+        match self.chosen {
+            Some(n) => out.push_str(&n.to_string()),
+            None => out.push_str("null"),
+        }
+        out.push_str(",\"dist_best\":");
+        out.push_str(&self.distance_best.to_string());
+        out.push_str(",\"needed\":");
+        out.push_str(&self.needed.to_string());
+        out.push_str(",\"cooldown\":");
+        out.push_str(if self.cooldown { "true" } else { "false" });
+        out.push_str(",\"sticky\":");
+        out.push_str(&self.sticky_pages.to_string());
+        out.push_str(",\"cands\":[");
+        for (i, c) in self.candidates.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"n\":{},\"d\":{},\"s\":{},\"rho\":{},\"lrho\":{},\"fits\":{}}}",
+                c.node, c.distance, c.score, c.ctrl_rho, c.route_rho, c.fits
+            ));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// Append-only buffer of explain rows, drained by the runner each epoch.
+/// Disabled (the default) it is a no-op, so the scheduler can push
+/// unconditionally without costing the un-instrumented path anything
+/// beyond a branch.
+#[derive(Default)]
+pub struct ExplainLog {
+    pub enabled: bool,
+    rows: Vec<ExplainRow>,
+}
+
+impl ExplainLog {
+    pub fn push(&mut self, row: ExplainRow) {
+        if self.enabled {
+            self.rows.push(row);
+        }
+    }
+
+    pub fn take_rows(&mut self) -> Vec<ExplainRow> {
+        std::mem::take(&mut self.rows)
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+/// `true` if a metrics line is an explain record.
+pub fn is_explain_line(line: &str) -> bool {
+    line.starts_with('{') && line.contains("\"explain\":\"")
+}
+
+/// Summary view of an explain record, parsed back from JSONL for the
+/// `explain` CLI verb. Candidate terms stay in the raw line; the table
+/// view only needs the headline fields.
+#[derive(Debug, PartialEq)]
+pub struct ParsedExplain {
+    pub t_ms: u64,
+    pub pid: i32,
+    pub comm: String,
+    pub outcome: String,
+    pub from: usize,
+    pub chosen: Option<usize>,
+    pub distance_best: usize,
+    pub n_candidates: usize,
+}
+
+/// Parse one explain record emitted by [`ExplainRow::render_json`].
+pub fn parse_explain_line(line: &str) -> Option<ParsedExplain> {
+    if !is_explain_line(line) {
+        return None;
+    }
+    let chosen = if line.contains("\"chosen\":null") {
+        None
+    } else {
+        Some(json_u64(line, "chosen")? as usize)
+    };
+    let cands = line.find("\"cands\":[").map(|i| &line[i..]).unwrap_or("");
+    let n_candidates = cands.matches("\"n\":").count();
+    Some(ParsedExplain {
+        t_ms: json_u64(line, "t")?,
+        pid: json_u64(line, "pid")? as i32,
+        comm: json_str(line, "comm")?.to_string(),
+        outcome: json_str(line, "explain")?.to_string(),
+        from: json_u64(line, "from")? as usize,
+        chosen,
+        distance_best: json_u64(line, "dist_best")? as usize,
+        n_candidates,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row() -> ExplainRow {
+        ExplainRow {
+            t_ms: 700,
+            pid: 42,
+            comm: "canneal".into(),
+            from: 0,
+            outcome: "moved",
+            chosen: Some(3),
+            distance_best: 1,
+            needed: 1.06,
+            cooldown: false,
+            sticky_pages: 2048,
+            candidates: vec![
+                CandidateTerm {
+                    node: 1,
+                    distance: 10.0,
+                    score: 1.4,
+                    ctrl_rho: 0.9,
+                    route_rho: 0.95,
+                    fits: true,
+                },
+                CandidateTerm {
+                    node: 3,
+                    distance: 21.0,
+                    score: 1.3,
+                    ctrl_rho: 0.2,
+                    route_rho: 0.1,
+                    fits: true,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn render_parse_roundtrip() {
+        let line = row().render_json();
+        let p = parse_explain_line(&line).expect("parse own emission");
+        assert_eq!(
+            p,
+            ParsedExplain {
+                t_ms: 700,
+                pid: 42,
+                comm: "canneal".into(),
+                outcome: "moved".into(),
+                from: 0,
+                chosen: Some(3),
+                distance_best: 1,
+                n_candidates: 2,
+            }
+        );
+    }
+
+    #[test]
+    fn skip_rows_render_null_chosen() {
+        let mut r = row();
+        r.outcome = "skip:cooldown";
+        r.chosen = None;
+        r.cooldown = true;
+        r.candidates.clear();
+        let line = r.render_json();
+        assert!(line.contains("\"chosen\":null"));
+        assert!(line.contains("\"cooldown\":true"));
+        let p = parse_explain_line(&line).unwrap();
+        assert_eq!(p.chosen, None);
+        assert_eq!(p.outcome, "skip:cooldown");
+        assert_eq!(p.n_candidates, 0);
+    }
+
+    #[test]
+    fn disabled_log_drops_rows() {
+        let mut log = ExplainLog::default();
+        log.push(row());
+        assert!(log.is_empty());
+        log.enabled = true;
+        log.push(row());
+        assert_eq!(log.len(), 1);
+        assert_eq!(log.take_rows().len(), 1);
+        assert!(log.is_empty());
+    }
+
+    #[test]
+    fn comm_is_escaped() {
+        let mut r = row();
+        r.comm = "we\"ird\\name".into();
+        let line = r.render_json();
+        assert!(line.contains("we\\\"ird\\\\name"));
+        let p = parse_explain_line(&line).unwrap();
+        // The summary parser stops at the first unescaped quote; exotic
+        // comms degrade gracefully rather than corrupting the record.
+        assert!(p.comm.starts_with("we"));
+    }
+
+    #[test]
+    fn non_explain_lines_are_rejected() {
+        assert!(parse_explain_line("{\"t\":1,\"epoch\":0,\"c\":{}}").is_none());
+        assert!(!is_explain_line("# comment"));
+    }
+}

@@ -1,0 +1,590 @@
+//! Deterministic metrics registry: counters, gauges, and fixed-bucket
+//! log2 histograms.
+//!
+//! The registry follows the same hot-path discipline as
+//! `Monitor::sample_into`: metrics are registered once up front (interned
+//! into dense ids), and every subsequent `inc`/`set`/`observe` is a bare
+//! index into a pre-sized slot — no hashing, no allocation, no locks.
+//!
+//! Two output surfaces:
+//!
+//! * [`Registry::render_prometheus`] — Prometheus-style text exposition
+//!   for eyeballs and scrapers.
+//! * [`Registry::render_epoch_json`] — one JSONL record per epoch for the
+//!   `numasched-metrics/v1` sidecar stream (see `telemetry::mod`).
+//!
+//! Determinism contract: rendering walks metrics in registration order and
+//! uses the same integer/shortest-roundtrip-f64 formatting as the trace
+//! writer, so two identical runs produce byte-identical output. Nothing in
+//! this module reads the clock — wall-clock time only ever enters through
+//! `telemetry::spans`, whose output lives in the diff-excluded timing
+//! section.
+
+use std::collections::BTreeMap;
+
+/// Number of histogram buckets: bucket 0 holds the value 0, bucket `k`
+/// (1..=64) holds values in `[2^(k-1), 2^k)`.
+pub const NUM_BUCKETS: usize = 65;
+
+/// Bucket index for a value under the log2 scheme above.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        64 - v.leading_zeros() as usize
+    }
+}
+
+/// Inclusive upper bound of bucket `k` (used for exposition labels).
+/// Bucket 0 → 0; bucket k → 2^k - 1; bucket 64 → u64::MAX.
+pub fn bucket_upper(k: usize) -> u64 {
+    if k == 0 {
+        0
+    } else if k >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << k) - 1
+    }
+}
+
+/// A fixed-bucket log2 histogram. `sum` saturates rather than wraps so a
+/// `u64::MAX` observation cannot corrupt the record.
+#[derive(Clone, Debug)]
+pub struct Hist {
+    pub buckets: [u64; NUM_BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist { buckets: [0; NUM_BUCKETS], count: 0, sum: 0 }
+    }
+}
+
+impl Hist {
+    #[inline]
+    pub fn observe(&mut self, v: u64) {
+        self.buckets[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Sparse `[bucket, count]` pairs in ascending bucket order.
+    pub fn sparse(&self) -> Vec<(usize, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(k, &c)| (k, c))
+            .collect()
+    }
+
+    /// Render as a JSON fragment: `{"n":count,"sum":sum,"b":[[k,c],...]}`.
+    pub fn render_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\"n\":");
+        out.push_str(&self.count.to_string());
+        out.push_str(",\"sum\":");
+        out.push_str(&self.sum.to_string());
+        out.push_str(",\"b\":[");
+        for (i, (k, c)) in self.sparse().into_iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("[{k},{c}]"));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// Dense id handles. Registration returns these; the hot path uses them as
+/// bare indices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CounterId(pub(crate) usize);
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GaugeId(pub(crate) usize);
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistId(pub(crate) usize);
+
+/// The registry proper. Names are `&'static str` by design: metric names
+/// are part of the schema, not runtime data.
+#[derive(Default)]
+pub struct Registry {
+    counter_names: Vec<&'static str>,
+    counters: Vec<u64>,
+    gauge_names: Vec<&'static str>,
+    gauges: Vec<f64>,
+    hist_names: Vec<&'static str>,
+    hists: Vec<Hist>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Register (or look up) a counter by name.
+    pub fn counter(&mut self, name: &'static str) -> CounterId {
+        if let Some(i) = self.counter_names.iter().position(|&n| n == name) {
+            return CounterId(i);
+        }
+        self.counter_names.push(name);
+        self.counters.push(0);
+        CounterId(self.counter_names.len() - 1)
+    }
+
+    pub fn gauge(&mut self, name: &'static str) -> GaugeId {
+        if let Some(i) = self.gauge_names.iter().position(|&n| n == name) {
+            return GaugeId(i);
+        }
+        self.gauge_names.push(name);
+        self.gauges.push(0.0);
+        GaugeId(self.gauge_names.len() - 1)
+    }
+
+    pub fn histogram(&mut self, name: &'static str) -> HistId {
+        if let Some(i) = self.hist_names.iter().position(|&n| n == name) {
+            return HistId(i);
+        }
+        self.hist_names.push(name);
+        self.hists.push(Hist::default());
+        HistId(self.hist_names.len() - 1)
+    }
+
+    #[inline]
+    pub fn inc(&mut self, id: CounterId, by: u64) {
+        self.counters[id.0] += by;
+    }
+
+    /// Overwrite a counter with an absolute (cumulative) value — used when
+    /// the source of truth keeps its own running total (e.g. the sim's
+    /// migration counters) and telemetry just mirrors it.
+    #[inline]
+    pub fn set_counter(&mut self, id: CounterId, v: u64) {
+        self.counters[id.0] = v;
+    }
+
+    #[inline]
+    pub fn set_gauge(&mut self, id: GaugeId, v: f64) {
+        self.gauges[id.0] = v;
+    }
+
+    #[inline]
+    pub fn observe(&mut self, id: HistId, v: u64) {
+        self.hists[id.0].observe(v);
+    }
+
+    pub fn counter_value(&self, id: CounterId) -> u64 {
+        self.counters[id.0]
+    }
+
+    pub fn gauge_value(&self, id: GaugeId) -> f64 {
+        self.gauges[id.0]
+    }
+
+    pub fn hist(&self, id: HistId) -> &Hist {
+        &self.hists[id.0]
+    }
+
+    /// Prometheus-style text exposition. Metric names get a `numasched_`
+    /// prefix; histograms render cumulative buckets with `le` labels plus
+    /// `_count` / `_sum` series. Walks registration order — deterministic.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in self.counter_names.iter().zip(&self.counters) {
+            out.push_str(&format!(
+                "# TYPE numasched_{name} counter\nnumasched_{name} {v}\n"
+            ));
+        }
+        for (name, v) in self.gauge_names.iter().zip(&self.gauges) {
+            out.push_str(&format!(
+                "# TYPE numasched_{name} gauge\nnumasched_{name} {v}\n"
+            ));
+        }
+        for (name, h) in self.hist_names.iter().zip(&self.hists) {
+            out.push_str(&format!("# TYPE numasched_{name} histogram\n"));
+            let mut cum = 0u64;
+            for (k, c) in h.sparse() {
+                cum += c;
+                out.push_str(&format!(
+                    "numasched_{name}_bucket{{le=\"{}\"}} {cum}\n",
+                    bucket_upper(k)
+                ));
+            }
+            out.push_str(&format!(
+                "numasched_{name}_bucket{{le=\"+Inf\"}} {}\n",
+                h.count
+            ));
+            out.push_str(&format!("numasched_{name}_count {}\n", h.count));
+            out.push_str(&format!("numasched_{name}_sum {}\n", h.sum));
+        }
+        out
+    }
+
+    /// One `numasched-metrics/v1` epoch record:
+    /// `{"t":..,"epoch":..,"c":{..},"g":{..},"h":{..}}`.
+    ///
+    /// Counters are cumulative; every registered counter/gauge appears in
+    /// every record (fixed shape beats sparse cleverness for diffing).
+    /// Histograms render sparsely — bucket arrays dominate the line width.
+    pub fn render_epoch_json(&self, t_ms: u64, epoch: u64) -> String {
+        let mut out = String::new();
+        out.push_str("{\"t\":");
+        out.push_str(&t_ms.to_string());
+        out.push_str(",\"epoch\":");
+        out.push_str(&epoch.to_string());
+        out.push_str(",\"c\":{");
+        for (i, (name, v)) in self.counter_names.iter().zip(&self.counters).enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{name}\":{v}"));
+        }
+        out.push_str("},\"g\":{");
+        for (i, (name, v)) in self.gauge_names.iter().zip(&self.gauges).enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{name}\":{v}"));
+        }
+        out.push_str("},\"h\":{");
+        let mut first = true;
+        for (name, h) in self.hist_names.iter().zip(&self.hists) {
+            if h.is_empty() {
+                continue;
+            }
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!("\"{name}\":{}", h.render_json()));
+        }
+        out.push_str("}}");
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parsing (roundtrip tests + `explain` CLI). These parse exactly the formats
+// emitted above — a scoped hand-rolled reader, not a general JSON parser,
+// in keeping with the crate's no-dependency rule.
+// ---------------------------------------------------------------------------
+
+/// Extract the `{...}` object following `"key":` in `line`. Returns the
+/// inner text without the braces. Assumes our own emission format: no
+/// whitespace, keys quoted, braces inside strings never occur (metric
+/// names are identifiers).
+fn object_body<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":{{");
+    let start = line.find(&pat)? + pat.len();
+    let mut depth = 1usize;
+    for (i, b) in line[start..].bytes().enumerate() {
+        match b {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(&line[start..start + i]);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Split a flat `"k":v,"k2":v2` body into (key, raw-value) pairs, where a
+/// value is either a scalar token or a balanced `{...}` / `[...]` group.
+fn split_pairs(body: &str) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    let bytes = body.as_bytes();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        if bytes[i] != b'"' {
+            break;
+        }
+        let kend = match body[i + 1..].find('"') {
+            Some(j) => i + 1 + j,
+            None => break,
+        };
+        let key = body[i + 1..kend].to_string();
+        if kend + 1 >= bytes.len() || bytes[kend + 1] != b':' {
+            break;
+        }
+        let vstart = kend + 2;
+        let mut j = vstart;
+        let mut depth = 0i32;
+        while j < bytes.len() {
+            match bytes[j] {
+                b'{' | b'[' => depth += 1,
+                b'}' | b']' => depth -= 1,
+                b',' if depth == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        out.push((key, body[vstart..j].to_string()));
+        i = j + 1;
+    }
+    out
+}
+
+/// Parsed form of one epoch record — used by the roundtrip test and the
+/// CI schema validator's local twin.
+#[derive(Debug, Default, PartialEq)]
+pub struct ParsedEpoch {
+    pub t_ms: u64,
+    pub epoch: u64,
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    /// name -> (count, sum, sparse buckets)
+    pub hists: BTreeMap<String, (u64, u64, Vec<(usize, u64)>)>,
+}
+
+/// Scalar u64 field `"key":123` anywhere at top level of the line.
+pub fn json_u64(line: &str, key: &str) -> Option<u64> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest
+        .find(|c: char| !c.is_ascii_digit())
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Scalar string field `"key":"value"` (no escapes expected in our keys).
+pub fn json_str<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":\"");
+    let start = line.find(&pat)? + pat.len();
+    let end = line[start..].find('"')?;
+    Some(&line[start..start + end])
+}
+
+/// Parse one epoch record emitted by [`Registry::render_epoch_json`].
+pub fn parse_epoch_line(line: &str) -> Option<ParsedEpoch> {
+    let mut out = ParsedEpoch {
+        t_ms: json_u64(line, "t")?,
+        epoch: json_u64(line, "epoch")?,
+        ..Default::default()
+    };
+    for (k, v) in split_pairs(object_body(line, "c")?) {
+        out.counters.insert(k, v.parse().ok()?);
+    }
+    for (k, v) in split_pairs(object_body(line, "g")?) {
+        out.gauges.insert(k, v.parse().ok()?);
+    }
+    for (k, v) in split_pairs(object_body(line, "h")?) {
+        let n = json_u64(&v, "n")?;
+        let sum = json_u64(&v, "sum")?;
+        let bstart = v.find("\"b\":[")? + 5;
+        let bend = v.rfind(']')?;
+        let mut buckets = Vec::new();
+        for pair in v[bstart..bend].split("],[") {
+            let pair = pair.trim_matches(|c| c == '[' || c == ']');
+            if pair.is_empty() {
+                continue;
+            }
+            let (bk, bc) = pair.split_once(',')?;
+            buckets.push((bk.parse().ok()?, bc.parse().ok()?));
+        }
+        out.hists.insert(k, (n, sum, buckets));
+    }
+    Some(out)
+}
+
+/// Parse a Prometheus exposition back into name→value maps (counters and
+/// gauges only — the roundtrip test's other half).
+pub fn parse_prometheus(text: &str) -> (BTreeMap<String, u64>, BTreeMap<String, f64>) {
+    let mut counters = BTreeMap::new();
+    let mut gauges = BTreeMap::new();
+    let mut kind: Option<(String, bool)> = None; // (name, is_counter)
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE numasched_") {
+            let mut it = rest.split_whitespace();
+            if let (Some(name), Some(t)) = (it.next(), it.next()) {
+                match t {
+                    "counter" => kind = Some((name.to_string(), true)),
+                    "gauge" => kind = Some((name.to_string(), false)),
+                    _ => kind = None,
+                }
+            }
+            continue;
+        }
+        let Some(rest) = line.strip_prefix("numasched_") else {
+            continue;
+        };
+        let Some((name, val)) = rest.split_once(' ') else {
+            continue;
+        };
+        match &kind {
+            Some((n, true)) if n == name => {
+                if let Ok(v) = val.parse() {
+                    counters.insert(name.to_string(), v);
+                }
+            }
+            Some((n, false)) if n == name => {
+                if let Ok(v) = val.parse() {
+                    gauges.insert(name.to_string(), v);
+                }
+            }
+            _ => {}
+        }
+    }
+    (counters, gauges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges() {
+        // 0 is its own bucket.
+        assert_eq!(bucket_index(0), 0);
+        // 1 = 2^0 opens bucket 1 = [1, 2).
+        assert_eq!(bucket_index(1), 1);
+        // Exact powers of two open a new bucket...
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(1 << 10), 11);
+        assert_eq!(bucket_index(1 << 63), 64);
+        // ...and power-of-two-minus-one stays in the previous one.
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index((1 << 10) - 1), 10);
+        assert_eq!(bucket_index(u64::MAX), 64);
+    }
+
+    #[test]
+    fn bucket_upper_bounds_match_indexing() {
+        for k in 0..NUM_BUCKETS {
+            let hi = bucket_upper(k);
+            assert_eq!(bucket_index(hi), k, "upper bound of bucket {k}");
+            if hi < u64::MAX {
+                assert_eq!(bucket_index(hi + 1), k + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_extremes_do_not_corrupt() {
+        let mut h = Hist::default();
+        h.observe(0);
+        h.observe(u64::MAX);
+        h.observe(u64::MAX);
+        assert_eq!(h.count, 3);
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[64], 2);
+        // Sum saturates instead of wrapping.
+        assert_eq!(h.sum, u64::MAX);
+    }
+
+    #[test]
+    fn registration_interns_and_dedups() {
+        let mut r = Registry::new();
+        let a = r.counter("x");
+        let b = r.counter("x");
+        assert_eq!(a, b);
+        let g = r.gauge("y");
+        let h = r.histogram("z");
+        r.inc(a, 2);
+        r.inc(a, 3);
+        r.set_gauge(g, 1.5);
+        r.observe(h, 7);
+        assert_eq!(r.counter_value(a), 5);
+        assert_eq!(r.gauge_value(g), 1.5);
+        assert_eq!(r.hist(h).count, 1);
+    }
+
+    #[test]
+    fn set_counter_overwrites() {
+        let mut r = Registry::new();
+        let c = r.counter("mirror");
+        r.set_counter(c, 10);
+        r.set_counter(c, 7);
+        assert_eq!(r.counter_value(c), 7);
+    }
+
+    #[test]
+    fn epoch_json_roundtrip() {
+        let mut r = Registry::new();
+        let c1 = r.counter("moves");
+        let c2 = r.counter("skips_cooldown");
+        let g = r.gauge("imbalance");
+        let h = r.histogram("link_rho_milli");
+        r.inc(c1, 42);
+        r.inc(c2, 7);
+        r.set_gauge(g, 0.375);
+        r.observe(h, 0);
+        r.observe(h, 1);
+        r.observe(h, 900);
+        r.observe(h, u64::MAX);
+        let line = r.render_epoch_json(1500, 3);
+        let p = parse_epoch_line(&line).expect("parse our own emission");
+        assert_eq!(p.t_ms, 1500);
+        assert_eq!(p.epoch, 3);
+        assert_eq!(p.counters["moves"], 42);
+        assert_eq!(p.counters["skips_cooldown"], 7);
+        assert_eq!(p.gauges["imbalance"], 0.375);
+        let (n, sum, buckets) = &p.hists["link_rho_milli"];
+        assert_eq!(*n, 4);
+        assert_eq!(*sum, u64::MAX); // saturated
+        assert_eq!(
+            buckets,
+            &vec![(0, 1), (1, 1), (bucket_index(900), 1), (64, 1)]
+        );
+    }
+
+    #[test]
+    fn prometheus_roundtrip_counters_and_gauges() {
+        let mut r = Registry::new();
+        let c = r.counter("epochs");
+        let g = r.gauge("node_rho_max");
+        let h = r.histogram("decide_pages");
+        r.inc(c, 11);
+        r.set_gauge(g, 0.875);
+        r.observe(h, 5);
+        let text = r.render_prometheus();
+        let (cs, gs) = parse_prometheus(&text);
+        assert_eq!(cs["epochs"], 11);
+        assert_eq!(gs["node_rho_max"], 0.875);
+        // Histogram series are present with cumulative buckets.
+        assert!(text.contains("numasched_decide_pages_bucket{le=\"7\"} 1"));
+        assert!(text.contains("numasched_decide_pages_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("numasched_decide_pages_count 1"));
+        assert!(text.contains("numasched_decide_pages_sum 5"));
+    }
+
+    #[test]
+    fn rendering_is_deterministic() {
+        let build = || {
+            let mut r = Registry::new();
+            let c = r.counter("a");
+            let g = r.gauge("b");
+            let h = r.histogram("c");
+            r.inc(c, 9);
+            r.set_gauge(g, 2.25);
+            r.observe(h, 1023);
+            r
+        };
+        let (r1, r2) = (build(), build());
+        assert_eq!(r1.render_epoch_json(5, 1), r2.render_epoch_json(5, 1));
+        assert_eq!(r1.render_prometheus(), r2.render_prometheus());
+    }
+
+    #[test]
+    fn empty_histograms_are_omitted_from_epoch_json() {
+        let mut r = Registry::new();
+        r.histogram("never_touched");
+        let line = r.render_epoch_json(0, 0);
+        assert!(!line.contains("never_touched"));
+        let p = parse_epoch_line(&line).unwrap();
+        assert!(p.hists.is_empty());
+    }
+}

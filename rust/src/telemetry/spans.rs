@@ -1,0 +1,115 @@
+//! Self-profiling spans for the four hot-loop phases.
+//!
+//! This is the only place in the crate where wall-clock time is read
+//! during a run. The timings feed log2 histograms that render into a
+//! *separate* `{"timing":...}` record, which the determinism diff
+//! ([`super::Telemetry::diff_deterministic`]) excludes — so two identical
+//! runs compare byte-identical even though their nanosecond profiles
+//! differ, and traces/sim outputs never see a timestamp at all.
+
+use super::registry::Hist;
+use std::time::Instant;
+
+/// The instrumented phases of one runner iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// `Monitor::sample_into` — procfs text → snapshot.
+    MonitorSample = 0,
+    /// `UserScheduler::apply` minus time spent inside migration calls.
+    SchedulerDecide = 1,
+    /// `MachineControl::move_process` / `migrate_pages` time inside apply.
+    MigrateApply = 2,
+    /// `Machine::step` — one simulated tick.
+    SimTick = 3,
+}
+
+const PHASES: [(Phase, &str); 4] = [
+    (Phase::MonitorSample, "monitor_sample_ns"),
+    (Phase::SchedulerDecide, "scheduler_decide_ns"),
+    (Phase::MigrateApply, "migrate_apply_ns"),
+    (Phase::SimTick, "sim_tick_ns"),
+];
+
+/// Per-phase nanosecond histograms, kept outside the deterministic
+/// registry on purpose.
+#[derive(Default)]
+pub struct Spans {
+    hists: [Hist; 4],
+}
+
+impl Spans {
+    pub fn record(&mut self, phase: Phase, ns: u64) {
+        self.hists[phase as usize].observe(ns);
+    }
+
+    /// Convenience: record the elapsed time since `t0` for `phase`.
+    pub fn record_since(&mut self, phase: Phase, t0: Instant) {
+        self.record(phase, t0.elapsed().as_nanos() as u64);
+    }
+
+    pub fn hist(&self, phase: Phase) -> &Hist {
+        &self.hists[phase as usize]
+    }
+
+    /// Render the diff-excluded timing record:
+    /// `{"timing":{"monitor_sample_ns":{...},...}}`. Phases with no
+    /// observations render as well — a fixed shape makes the record
+    /// self-describing.
+    pub fn render_timing_json(&self) -> String {
+        let mut out = String::from("{\"timing\":{");
+        for (i, (phase, name)) in PHASES.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\"{name}\":{}",
+                self.hists[*phase as usize].render_json()
+            ));
+        }
+        out.push_str("}}");
+        out
+    }
+}
+
+/// `true` for lines the determinism diff must skip: the timing record is
+/// the only place wall-clock-derived bytes appear in a metrics stream.
+pub fn is_timing_line(line: &str) -> bool {
+    line.starts_with("{\"timing\":")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_feed_per_phase_histograms() {
+        let mut s = Spans::default();
+        s.record(Phase::MonitorSample, 1000);
+        s.record(Phase::MonitorSample, 2000);
+        s.record(Phase::SimTick, 1);
+        assert_eq!(s.hist(Phase::MonitorSample).count, 2);
+        assert_eq!(s.hist(Phase::MonitorSample).sum, 3000);
+        assert_eq!(s.hist(Phase::SimTick).count, 1);
+        assert_eq!(s.hist(Phase::SchedulerDecide).count, 0);
+    }
+
+    #[test]
+    fn timing_record_has_fixed_shape_and_is_excluded() {
+        let mut s = Spans::default();
+        s.record(Phase::MigrateApply, 512);
+        let line = s.render_timing_json();
+        assert!(is_timing_line(&line));
+        for (_, name) in PHASES {
+            assert!(line.contains(name), "missing {name}");
+        }
+        assert!(!is_timing_line("{\"t\":0,\"epoch\":0}"));
+    }
+
+    #[test]
+    fn record_since_measures_something_sane() {
+        let mut s = Spans::default();
+        let t0 = Instant::now();
+        s.record_since(Phase::SchedulerDecide, t0);
+        assert_eq!(s.hist(Phase::SchedulerDecide).count, 1);
+    }
+}

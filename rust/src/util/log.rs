@@ -41,13 +41,37 @@ impl Level {
 
 static MAX_LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
 
+/// Resolve one `NUMASCHED_LOG` value to a level. `None` (unset) is the
+/// quiet default; an unparseable value also defaults but reports itself,
+/// so `NUMASCHED_LOG=dbug` doesn't silently swallow the debug stream the
+/// user asked for. Pure so the warn path is testable without touching
+/// the process environment or the global level.
+pub fn level_from_env_value(value: Option<&str>) -> (Level, Option<String>) {
+    match value {
+        None => (Level::Warn, None),
+        Some(s) => match Level::parse(s) {
+            Some(lvl) => (lvl, None),
+            None => (
+                Level::Warn,
+                Some(format!(
+                    "unrecognized NUMASCHED_LOG={s:?} (want error|warn|info|debug|trace); \
+                     defaulting to warn"
+                )),
+            ),
+        },
+    }
+}
+
 fn init_from_env() -> u8 {
-    let lvl = std::env::var("NUMASCHED_LOG")
-        .ok()
-        .and_then(|s| Level::parse(&s))
-        .unwrap_or(Level::Warn) as u8;
-    MAX_LEVEL.store(lvl, Ordering::Relaxed);
-    lvl
+    let env = std::env::var("NUMASCHED_LOG").ok();
+    let (lvl, complaint) = level_from_env_value(env.as_deref());
+    // Store before complaining: the complaint itself goes through the
+    // logger, and a recursive re-init would warn twice.
+    MAX_LEVEL.store(lvl as u8, Ordering::Relaxed);
+    if let Some(msg) = complaint {
+        log(Level::Warn, module_path!(), format_args!("{msg}"));
+    }
+    lvl as u8
 }
 
 /// Current maximum level, lazily initialized from the environment.
@@ -131,6 +155,17 @@ mod tests {
     fn level_ordering() {
         assert!(Level::Error < Level::Trace);
         assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn env_value_resolution_warns_once_on_garbage() {
+        assert_eq!(level_from_env_value(None), (Level::Warn, None));
+        assert_eq!(level_from_env_value(Some("trace")), (Level::Trace, None));
+        let (lvl, complaint) = level_from_env_value(Some("dbug"));
+        assert_eq!(lvl, Level::Warn, "bad value falls back to the default");
+        let msg = complaint.expect("a bad value must complain");
+        assert!(msg.contains("dbug"), "{msg}");
+        assert!(msg.contains("error|warn|info|debug|trace"), "{msg}");
     }
 
     #[test]
