@@ -1,0 +1,922 @@
+//! Chaos engine — deterministic fault injection for the whole pipeline.
+//!
+//! The paper's scheduler lives on `/proc` and `migrate_pages(2)` — surfaces
+//! that fail constantly on a real host: pids vanish mid-read, reads come
+//! back truncated or corrupted, migrations return `EBUSY`/`ENOMEM` or land
+//! partially, and whole nodes go offline. This module injects exactly those
+//! faults, *deterministically*: every fault decision is a pure function of
+//! `(seed, tick, pid, fault-kind)`, so a chaos run replays bit-identically
+//! from its seed, and a failing storm shrinks to a reproducible case.
+//!
+//! Layering:
+//! * [`ChaosConfig`] — rates per fault kind, parsed from a `[chaos]` config
+//!   table or built via [`ChaosConfig::storm`].
+//! * [`FaultPlan`] — the seeded decision engine plus the small amount of
+//!   state faults need (vanish windows, offline windows, stale-text rings)
+//!   and counters for every injected fault.
+//! * [`FaultyProcSource`] / [`FaultyControl`] — wrappers around any
+//!   `ProcSource` / `MachineControl` that consult the plan on every call.
+//!
+//! The wrappers are only constructed when chaos is enabled; a disabled
+//! chaos config never touches the hot path, and the runner's no-chaos
+//! code path is byte-identical to a build without this module.
+
+use std::cell::{Cell, RefCell};
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::procfs::ProcSource;
+use crate::scheduler::{CtlError, MachineControl, MigrateOutcome};
+use crate::util::rng::Rng;
+
+/// Fault rates and windows. All `*_rate` fields are probabilities per
+/// opportunity (per read, per control call, per node-tick) in `[0, 1]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosConfig {
+    /// Master switch. When false the runner must not construct any
+    /// chaos wrapper at all (the disabled run is byte-identical to a
+    /// run without chaos compiled in).
+    pub enabled: bool,
+    /// Chaos stream seed; 0 means "derive from the run seed".
+    pub seed: u64,
+    /// Whole procfs read returns `None` (EIO / vanished file).
+    pub read_drop_rate: f64,
+    /// Read returns a prefix of the real text (short read).
+    pub read_truncate_rate: f64,
+    /// Read returns deterministically mangled text (bit rot / torn read).
+    pub read_corrupt_rate: f64,
+    /// Read serves text captured `stale_depth` reads ago.
+    pub read_stale_rate: f64,
+    /// How many reads back the stale cache serves from.
+    pub stale_depth: usize,
+    /// Pid disappears from `list_pids` for `vanish_ticks` ticks while the
+    /// process keeps running (the classic readdir race).
+    pub pid_vanish_rate: f64,
+    /// Duration of an injected vanish window, in plan ticks.
+    pub vanish_ticks: u64,
+    /// `move_process`/`migrate_pages` fails with `Busy`.
+    pub migrate_busy_rate: f64,
+    /// `move_process`/`migrate_pages` fails with `NoMem`.
+    pub migrate_nomem_rate: f64,
+    /// `migrate_pages` moves only part of the requested budget and
+    /// reports the shortfall via [`MigrateOutcome`].
+    pub migrate_partial_rate: f64,
+    /// Per-tick probability of taking one node offline (at most one
+    /// node is down at a time; node 0 is never taken down so the
+    /// machine always has somewhere to run).
+    pub node_offline_rate: f64,
+    /// Duration of an offline window, in plan ticks.
+    pub node_offline_ticks: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+impl ChaosConfig {
+    /// All-zero, disabled config.
+    pub fn disabled() -> Self {
+        Self {
+            enabled: false,
+            seed: 0,
+            read_drop_rate: 0.0,
+            read_truncate_rate: 0.0,
+            read_corrupt_rate: 0.0,
+            read_stale_rate: 0.0,
+            stale_depth: 2,
+            pid_vanish_rate: 0.0,
+            vanish_ticks: 3,
+            migrate_busy_rate: 0.0,
+            migrate_nomem_rate: 0.0,
+            migrate_partial_rate: 0.0,
+            node_offline_rate: 0.0,
+            node_offline_ticks: 40,
+        }
+    }
+
+    /// The standard storm: every fault kind armed at production-plausible
+    /// rates. This is what the `chaos` CLI verb and the chaos-storm
+    /// scenario run.
+    pub fn storm(seed: u64) -> Self {
+        Self {
+            enabled: true,
+            seed,
+            read_drop_rate: 0.02,
+            read_truncate_rate: 0.02,
+            read_corrupt_rate: 0.02,
+            read_stale_rate: 0.03,
+            stale_depth: 2,
+            pid_vanish_rate: 0.01,
+            vanish_ticks: 3,
+            migrate_busy_rate: 0.10,
+            migrate_nomem_rate: 0.05,
+            migrate_partial_rate: 0.15,
+            node_offline_rate: 0.002,
+            node_offline_ticks: 60,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        let rates = [
+            ("read_drop_rate", self.read_drop_rate),
+            ("read_truncate_rate", self.read_truncate_rate),
+            ("read_corrupt_rate", self.read_corrupt_rate),
+            ("read_stale_rate", self.read_stale_rate),
+            ("pid_vanish_rate", self.pid_vanish_rate),
+            ("migrate_busy_rate", self.migrate_busy_rate),
+            ("migrate_nomem_rate", self.migrate_nomem_rate),
+            ("migrate_partial_rate", self.migrate_partial_rate),
+            ("node_offline_rate", self.node_offline_rate),
+        ];
+        for (name, r) in rates {
+            if !(0.0..=1.0).contains(&r) || !r.is_finite() {
+                return Err(format!("chaos: {name} = {r} outside [0, 1]"));
+            }
+        }
+        if self.stale_depth == 0 || self.stale_depth > 16 {
+            return Err(format!(
+                "chaos: stale_depth = {} outside 1..=16",
+                self.stale_depth
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Counters for every injected fault, readable while the plan is shared
+/// immutably (the `ProcSource` wrapper only ever sees `&self`).
+#[derive(Debug, Default)]
+pub struct ChaosStats {
+    pub reads_dropped: Cell<u64>,
+    pub reads_truncated: Cell<u64>,
+    pub reads_corrupted: Cell<u64>,
+    pub reads_stale: Cell<u64>,
+    pub pids_vanished: Cell<u64>,
+    pub migrate_busy: Cell<u64>,
+    pub migrate_nomem: Cell<u64>,
+    pub migrate_partial: Cell<u64>,
+    pub moves_to_offline: Cell<u64>,
+    pub node_offline_events: Cell<u64>,
+    pub node_online_events: Cell<u64>,
+}
+
+impl ChaosStats {
+    /// Total injected read faults (drop + truncate + corrupt + stale).
+    pub fn reads_faulted(&self) -> u64 {
+        self.reads_dropped.get()
+            + self.reads_truncated.get()
+            + self.reads_corrupted.get()
+            + self.reads_stale.get()
+    }
+
+    /// Total injected migration faults (busy + nomem + partial + offline).
+    pub fn migrations_faulted(&self) -> u64 {
+        self.migrate_busy.get()
+            + self.migrate_nomem.get()
+            + self.migrate_partial.get()
+            + self.moves_to_offline.get()
+    }
+
+    /// Grand total of injected faults of every kind.
+    pub fn injected_total(&self) -> u64 {
+        self.reads_faulted()
+            + self.migrations_faulted()
+            + self.pids_vanished.get()
+            + self.node_offline_events.get()
+            + self.node_online_events.get()
+    }
+
+    fn bump(cell: &Cell<u64>) {
+        cell.set(cell.get() + 1);
+    }
+}
+
+/// Distinct fault channels — mixed into the per-decision seed so each
+/// kind draws from an independent stream.
+#[derive(Clone, Copy)]
+enum Channel {
+    ReadDrop = 1,
+    ReadTruncate = 2,
+    ReadCorrupt = 3,
+    ReadStale = 4,
+    PidVanish = 5,
+    Control = 6,
+    NodeOffline = 7,
+    Mangle = 8,
+}
+
+/// A node that just changed availability (reported by [`FaultPlan::begin_tick`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NodeTransition {
+    pub node: usize,
+    pub online: bool,
+}
+
+/// The seeded fault-decision engine.
+///
+/// Every decision is a pure function of `(seed, tick, entity, channel)` —
+/// never of call order — so the allocating and zero-alloc monitor paths,
+/// retries, and replays all see the same faults. The only mutable state
+/// is what faults *require* (vanish windows, offline windows, stale-text
+/// rings, a per-tick control-call sequence number) and it lives behind
+/// `Cell`/`RefCell` because `ProcSource` methods take `&self`.
+pub struct FaultPlan {
+    cfg: ChaosConfig,
+    seed: u64,
+    nodes: usize,
+    tick: Cell<u64>,
+    /// Per-tick sequence number for control-plane calls (scheduler call
+    /// order is deterministic, so this is too).
+    ctl_seq: Cell<u64>,
+    offline_until: RefCell<Vec<u64>>,
+    vanished_until: RefCell<BTreeMap<i32, u64>>,
+    stale_stat: RefCell<BTreeMap<i32, VecDeque<String>>>,
+    stale_maps: RefCell<BTreeMap<i32, VecDeque<String>>>,
+    pub stats: ChaosStats,
+}
+
+impl FaultPlan {
+    /// Build a plan for a machine with `nodes` NUMA nodes. `run_seed` is
+    /// the experiment seed; the chaos stream is decorrelated from it so
+    /// chaos never perturbs workload generation.
+    pub fn new(cfg: ChaosConfig, run_seed: u64, nodes: usize) -> Self {
+        let seed = if cfg.seed != 0 {
+            cfg.seed
+        } else {
+            run_seed ^ 0xC0A5_F00D_D15E_A5E5
+        };
+        Self {
+            cfg,
+            seed,
+            nodes,
+            tick: Cell::new(0),
+            ctl_seq: Cell::new(0),
+            offline_until: RefCell::new(vec![0; nodes]),
+            vanished_until: RefCell::new(BTreeMap::new()),
+            stale_stat: RefCell::new(BTreeMap::new()),
+            stale_maps: RefCell::new(BTreeMap::new()),
+            stats: ChaosStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &ChaosConfig {
+        &self.cfg
+    }
+
+    /// One uniform draw on a channel, pure in (seed, tick, a, b, channel).
+    fn draw(&self, ch: Channel, a: u64, b: u64) -> f64 {
+        let mut mix = self.seed;
+        mix ^= self.tick.get().wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        mix ^= a.wrapping_mul(0xA24B_AED4_963E_E407).rotate_left(17);
+        mix ^= b.wrapping_mul(0x9E6C_63D0_876A_B6BD).rotate_left(31);
+        mix ^= (ch as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93);
+        Rng::new(mix).f64()
+    }
+
+    /// A forked rng for text mangling (needs several draws).
+    fn mangle_rng(&self, pid: i32, kind: u64) -> Rng {
+        let mut mix = self.seed ^ 0x5EED_0F4A_6713_D00D;
+        mix ^= self.tick.get().wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        mix ^= (pid as u64).wrapping_mul(0xA24B_AED4_963E_E407);
+        mix ^= kind.wrapping_mul(0xD6E8_FEB8_6659_FD93);
+        Rng::new(mix)
+    }
+
+    // ---- tick & node lifecycle ----------------------------------------
+
+    /// Advance the plan clock. Returns node availability transitions that
+    /// fire this tick (offline windows opening or expiring), for the
+    /// runner to relay to the scheduler.
+    pub fn begin_tick(&self, tick: u64) -> Vec<NodeTransition> {
+        self.tick.set(tick);
+        self.ctl_seq.set(0);
+        let mut out = Vec::new();
+        let mut until = self.offline_until.borrow_mut();
+        let mut any_down = false;
+        for (node, u) in until.iter_mut().enumerate() {
+            if *u != 0 && *u <= tick {
+                *u = 0;
+                ChaosStats::bump(&self.stats.node_online_events);
+                out.push(NodeTransition { node, online: true });
+            }
+            any_down |= *u != 0;
+        }
+        // At most one node down at a time, never node 0: the pipeline
+        // must always have somewhere to evacuate to.
+        if !any_down && self.nodes > 1 && self.cfg.node_offline_rate > 0.0 {
+            if self.draw(Channel::NodeOffline, 0, 0) < self.cfg.node_offline_rate {
+                let victim =
+                    1 + (self.draw(Channel::NodeOffline, 1, 0) * (self.nodes - 1) as f64)
+                        as usize;
+                let victim = victim.min(self.nodes - 1);
+                until[victim] = tick + self.cfg.node_offline_ticks.max(1);
+                ChaosStats::bump(&self.stats.node_offline_events);
+                out.push(NodeTransition { node: victim, online: false });
+            }
+        }
+        out
+    }
+
+    pub fn is_offline(&self, node: usize) -> bool {
+        self.offline_until
+            .borrow()
+            .get(node)
+            .is_some_and(|&u| u != 0)
+    }
+
+    /// Nodes currently offline (for summaries/tests).
+    pub fn offline_nodes(&self) -> Vec<usize> {
+        self.offline_until
+            .borrow()
+            .iter()
+            .enumerate()
+            .filter(|(_, &u)| u != 0)
+            .map(|(n, _)| n)
+            .collect()
+    }
+
+    // ---- pid vanish ----------------------------------------------------
+
+    /// Remove pids inside an injected vanish window, and roll new
+    /// windows, in place (preserves order).
+    fn filter_vanished(&self, pids: &mut Vec<i32>) {
+        if self.cfg.pid_vanish_rate <= 0.0 {
+            return;
+        }
+        let tick = self.tick.get();
+        let mut windows = self.vanished_until.borrow_mut();
+        windows.retain(|_, &mut u| u > tick);
+        pids.retain(|&pid| {
+            if windows.contains_key(&pid) {
+                return false;
+            }
+            if self.draw(Channel::PidVanish, pid as u64, 0) < self.cfg.pid_vanish_rate {
+                windows.insert(pid, tick + self.cfg.vanish_ticks.max(1));
+                ChaosStats::bump(&self.stats.pids_vanished);
+                return false;
+            }
+            true
+        });
+    }
+
+    fn is_vanished(&self, pid: i32) -> bool {
+        self.vanished_until
+            .borrow()
+            .get(&pid)
+            .is_some_and(|&u| u > self.tick.get())
+    }
+
+    // ---- read mangling -------------------------------------------------
+
+    /// Apply read faults to per-pid text. `kind` distinguishes the stat
+    /// and numa_maps streams. Also maintains the stale-text ring.
+    fn mangle_pid_read(
+        &self,
+        cache: &RefCell<BTreeMap<i32, VecDeque<String>>>,
+        kind: u64,
+        pid: i32,
+        text: String,
+    ) -> Option<String> {
+        let key = pid as u64;
+        if self.draw(Channel::ReadDrop, key, kind) < self.cfg.read_drop_rate {
+            ChaosStats::bump(&self.stats.reads_dropped);
+            return None;
+        }
+        // Serve stale text before updating the ring, so the served copy
+        // really is from an older read.
+        if self.draw(Channel::ReadStale, key, kind) < self.cfg.read_stale_rate {
+            if let Some(ring) = cache.borrow().get(&pid) {
+                if let Some(old) = ring.front() {
+                    ChaosStats::bump(&self.stats.reads_stale);
+                    return Some(old.clone());
+                }
+            }
+        }
+        {
+            let mut cache = cache.borrow_mut();
+            if cache.len() > 4096 {
+                cache.clear(); // unbounded pid churn guard
+            }
+            let ring = cache.entry(pid).or_default();
+            ring.push_back(text.clone());
+            while ring.len() > self.cfg.stale_depth.max(1) {
+                ring.pop_front();
+            }
+        }
+        if self.draw(Channel::ReadTruncate, key, kind) < self.cfg.read_truncate_rate {
+            ChaosStats::bump(&self.stats.reads_truncated);
+            return Some(truncate_text(&text, self.mangle_rng(pid, kind ^ 1).f64()));
+        }
+        if self.draw(Channel::ReadCorrupt, key, kind) < self.cfg.read_corrupt_rate {
+            ChaosStats::bump(&self.stats.reads_corrupted);
+            return Some(corrupt_text(&text, &mut self.mangle_rng(pid, kind ^ 2)));
+        }
+        Some(text)
+    }
+
+    /// Apply read faults to node-level sysfs text (no stale ring; an
+    /// offline node's files vanish outright).
+    fn mangle_node_read(&self, kind: u64, node: usize, text: String) -> Option<String> {
+        if self.is_offline(node) {
+            return None;
+        }
+        let key = node as u64 ^ 0x4E0D_E000;
+        if self.draw(Channel::ReadDrop, key, kind) < self.cfg.read_drop_rate {
+            ChaosStats::bump(&self.stats.reads_dropped);
+            return None;
+        }
+        if self.draw(Channel::ReadTruncate, key, kind) < self.cfg.read_truncate_rate {
+            ChaosStats::bump(&self.stats.reads_truncated);
+            return Some(truncate_text(&text, self.mangle_rng(node as i32, kind ^ 1).f64()));
+        }
+        if self.draw(Channel::ReadCorrupt, key, kind) < self.cfg.read_corrupt_rate {
+            ChaosStats::bump(&self.stats.reads_corrupted);
+            return Some(corrupt_text(&text, &mut self.mangle_rng(node as i32, kind ^ 2)));
+        }
+        Some(text)
+    }
+
+    // ---- control faults ------------------------------------------------
+
+    /// Roll a control-plane fault for the next move/migrate call.
+    fn control_fault(&self) -> Option<CtlError> {
+        let seq = self.ctl_seq.get();
+        self.ctl_seq.set(seq + 1);
+        let d = self.draw(Channel::Control, seq, 0);
+        if d < self.cfg.migrate_busy_rate {
+            return Some(CtlError::Busy);
+        }
+        if d < self.cfg.migrate_busy_rate + self.cfg.migrate_nomem_rate {
+            return Some(CtlError::NoMem);
+        }
+        None
+    }
+
+    /// Roll a partial-migration fraction for the next migrate call:
+    /// `Some(frac)` means only `budget * frac` pages should move.
+    fn partial_fraction(&self) -> Option<f64> {
+        let seq = self.ctl_seq.get();
+        if self.draw(Channel::Control, seq, 1) < self.cfg.migrate_partial_rate {
+            // 25%..75% of the request lands.
+            Some(0.25 + 0.5 * self.draw(Channel::Control, seq, 2))
+        } else {
+            None
+        }
+    }
+}
+
+/// Truncate at a char boundary near `frac` of the text.
+fn truncate_text(text: &str, frac: f64) -> String {
+    let mut cut = (text.len() as f64 * frac) as usize;
+    while cut < text.len() && !text.is_char_boundary(cut) {
+        cut += 1;
+    }
+    text[..cut.min(text.len())].to_string()
+}
+
+/// Deterministically mangle a window of the text (digits become junk,
+/// separators survive — the shape a torn read or bit rot produces).
+fn corrupt_text(text: &str, rng: &mut Rng) -> String {
+    if text.is_empty() {
+        return String::new();
+    }
+    let bytes = text.as_bytes();
+    let start = rng.below(bytes.len());
+    let len = 1 + rng.below(16.min(bytes.len()));
+    let mut out = Vec::with_capacity(bytes.len());
+    for (i, &b) in bytes.iter().enumerate() {
+        if i >= start && i < start + len && b.is_ascii_alphanumeric() {
+            out.push(b"#@!?%"[rng.below(5)]);
+        } else {
+            out.push(b);
+        }
+    }
+    // ASCII-safe by construction (only ASCII bytes are replaced).
+    String::from_utf8(out).unwrap_or_else(|_| text.to_string())
+}
+
+/// A `ProcSource` that filters every read through a [`FaultPlan`].
+pub struct FaultyProcSource<'a> {
+    inner: &'a dyn ProcSource,
+    plan: &'a FaultPlan,
+}
+
+impl<'a> FaultyProcSource<'a> {
+    pub fn new(inner: &'a dyn ProcSource, plan: &'a FaultPlan) -> Self {
+        Self { inner, plan }
+    }
+}
+
+const KIND_STAT: u64 = 0x57A7;
+const KIND_MAPS: u64 = 0x4DA5;
+const KIND_NUMASTAT: u64 = 0x4E57;
+const KIND_LINKS: u64 = 0x11E6;
+
+impl ProcSource for FaultyProcSource<'_> {
+    fn list_pids(&self) -> Vec<i32> {
+        let mut pids = self.inner.list_pids();
+        self.plan.filter_vanished(&mut pids);
+        pids
+    }
+
+    fn read_stat(&self, pid: i32) -> Option<String> {
+        if self.plan.is_vanished(pid) {
+            return None;
+        }
+        let text = self.inner.read_stat(pid)?;
+        self.plan
+            .mangle_pid_read(&self.plan.stale_stat, KIND_STAT, pid, text)
+    }
+
+    fn read_numa_maps(&self, pid: i32) -> Option<String> {
+        if self.plan.is_vanished(pid) {
+            return None;
+        }
+        let text = self.inner.read_numa_maps(pid)?;
+        self.plan
+            .mangle_pid_read(&self.plan.stale_maps, KIND_MAPS, pid, text)
+    }
+
+    // Topology discovery surfaces pass through un-mangled: discovery
+    // happens once before the first tick, and a machine that cannot
+    // enumerate its own nodes is dead, not degraded.
+    fn read_nodes_online(&self) -> Option<String> {
+        self.inner.read_nodes_online()
+    }
+
+    fn read_node_cpulist(&self, node: usize) -> Option<String> {
+        self.inner.read_node_cpulist(node)
+    }
+
+    fn read_node_distance(&self, node: usize) -> Option<String> {
+        self.inner.read_node_distance(node)
+    }
+
+    fn read_node_numastat(&self, node: usize) -> Option<String> {
+        let text = self.inner.read_node_numastat(node)?;
+        self.plan.mangle_node_read(KIND_NUMASTAT, node, text)
+    }
+
+    fn read_node_hugepage_file(
+        &self,
+        node: usize,
+        tier_kb: u64,
+        file: &str,
+    ) -> Option<String> {
+        self.inner.read_node_hugepage_file(node, tier_kb, file)
+    }
+
+    fn read_fabric_links(&self) -> Option<String> {
+        let text = self.inner.read_fabric_links()?;
+        self.plan.mangle_node_read(KIND_LINKS, 0, text)
+    }
+}
+
+/// A `MachineControl` that filters every call through a [`FaultPlan`].
+pub struct FaultyControl<'a> {
+    inner: &'a mut dyn MachineControl,
+    plan: &'a FaultPlan,
+}
+
+impl<'a> FaultyControl<'a> {
+    pub fn new(inner: &'a mut dyn MachineControl, plan: &'a FaultPlan) -> Self {
+        Self { inner, plan }
+    }
+}
+
+impl MachineControl for FaultyControl<'_> {
+    fn move_process(&mut self, pid: i32, node: usize) -> Result<(), CtlError> {
+        if self.plan.is_offline(node) {
+            ChaosStats::bump(&self.plan.stats.moves_to_offline);
+            return Err(CtlError::NodeOffline);
+        }
+        match self.plan.control_fault() {
+            Some(CtlError::Busy) => {
+                ChaosStats::bump(&self.plan.stats.migrate_busy);
+                Err(CtlError::Busy)
+            }
+            Some(CtlError::NoMem) => {
+                ChaosStats::bump(&self.plan.stats.migrate_nomem);
+                Err(CtlError::NoMem)
+            }
+            _ => self.inner.move_process(pid, node),
+        }
+    }
+
+    fn migrate_pages(&mut self, pid: i32, node: usize, budget: u64) -> MigrateOutcome {
+        if self.plan.is_offline(node) {
+            ChaosStats::bump(&self.plan.stats.moves_to_offline);
+            return MigrateOutcome::failed(CtlError::NodeOffline);
+        }
+        match self.plan.control_fault() {
+            Some(CtlError::Busy) => {
+                ChaosStats::bump(&self.plan.stats.migrate_busy);
+                return MigrateOutcome::failed(CtlError::Busy);
+            }
+            Some(CtlError::NoMem) => {
+                ChaosStats::bump(&self.plan.stats.migrate_nomem);
+                return MigrateOutcome::failed(CtlError::NoMem);
+            }
+            _ => {}
+        }
+        if let Some(frac) = self.plan.partial_fraction() {
+            let part = ((budget as f64) * frac) as u64;
+            if part < budget {
+                ChaosStats::bump(&self.plan.stats.migrate_partial);
+                let inner = self.inner.migrate_pages(pid, node, part);
+                return MigrateOutcome::partial(inner.moved, CtlError::Busy);
+            }
+        }
+        self.inner.migrate_pages(pid, node, budget)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct FixedSource;
+
+    impl ProcSource for FixedSource {
+        fn list_pids(&self) -> Vec<i32> {
+            (1..=64).collect()
+        }
+        fn read_stat(&self, pid: i32) -> Option<String> {
+            Some(format!("{pid} (task{pid}) R 1 0 0 0 0 0 0 0 0 0 7 3"))
+        }
+        fn read_numa_maps(&self, _pid: i32) -> Option<String> {
+            Some("00400000 default anon=100 N0=100 kernelpagesize_kB=4\n".into())
+        }
+        fn read_nodes_online(&self) -> Option<String> {
+            Some("0-3".into())
+        }
+        fn read_node_cpulist(&self, _n: usize) -> Option<String> {
+            Some("0-3".into())
+        }
+        fn read_node_distance(&self, _n: usize) -> Option<String> {
+            Some("10 21 21 21".into())
+        }
+        fn read_node_numastat(&self, _n: usize) -> Option<String> {
+            Some("numa_hit 100\nnuma_miss 5\n".into())
+        }
+    }
+
+    struct NullCtl {
+        moves: Vec<(i32, usize)>,
+        pages: Vec<(i32, usize, u64)>,
+    }
+
+    impl MachineControl for NullCtl {
+        fn move_process(&mut self, pid: i32, node: usize) -> Result<(), CtlError> {
+            self.moves.push((pid, node));
+            Ok(())
+        }
+        fn migrate_pages(&mut self, pid: i32, node: usize, budget: u64) -> MigrateOutcome {
+            self.pages.push((pid, node, budget));
+            MigrateOutcome::complete(budget)
+        }
+    }
+
+    fn storm_plan() -> FaultPlan {
+        FaultPlan::new(ChaosConfig::storm(7), 42, 4)
+    }
+
+    #[test]
+    fn storm_config_validates() {
+        assert!(ChaosConfig::storm(1).validate().is_ok());
+        assert!(ChaosConfig::disabled().validate().is_ok());
+        let mut bad = ChaosConfig::storm(1);
+        bad.read_drop_rate = 1.5;
+        assert!(bad.validate().is_err());
+        let mut bad = ChaosConfig::storm(1);
+        bad.stale_depth = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn faults_are_deterministic_across_plans() {
+        let run = |seed: u64| {
+            let plan = FaultPlan::new(ChaosConfig::storm(seed), 42, 4);
+            let src = FaultyProcSource::new(&FixedSource, &plan);
+            let mut log = String::new();
+            for tick in 0..50 {
+                plan.begin_tick(tick);
+                for pid in src.list_pids() {
+                    match src.read_stat(pid) {
+                        Some(s) => log.push_str(&s),
+                        None => log.push('X'),
+                    }
+                    log.push('\n');
+                }
+            }
+            (log, plan.stats.injected_total())
+        };
+        let (a, na) = run(7);
+        let (b, nb) = run(7);
+        assert_eq!(a, b, "same seed must inject identical faults");
+        assert_eq!(na, nb);
+        let (c, _) = run(8);
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn storm_injects_every_read_fault_kind() {
+        let plan = storm_plan();
+        let src = FaultyProcSource::new(&FixedSource, &plan);
+        for tick in 0..400 {
+            plan.begin_tick(tick);
+            for pid in src.list_pids() {
+                let _ = src.read_stat(pid);
+                let _ = src.read_numa_maps(pid);
+            }
+            for n in 0..4 {
+                let _ = src.read_node_numastat(n);
+            }
+        }
+        let s = &plan.stats;
+        assert!(s.reads_dropped.get() > 0, "no dropped reads");
+        assert!(s.reads_truncated.get() > 0, "no truncated reads");
+        assert!(s.reads_corrupted.get() > 0, "no corrupted reads");
+        assert!(s.reads_stale.get() > 0, "no stale reads");
+        assert!(s.pids_vanished.get() > 0, "no vanishes");
+    }
+
+    #[test]
+    fn storm_injects_control_faults() {
+        let plan = storm_plan();
+        let mut inner = NullCtl { moves: Vec::new(), pages: Vec::new() };
+        let mut ctl = FaultyControl::new(&mut inner, &plan);
+        let mut busy_or_nomem = 0;
+        let mut partial = 0;
+        for tick in 0..200 {
+            plan.begin_tick(tick);
+            for pid in 0..8 {
+                if ctl.move_process(pid, 1).is_err() {
+                    busy_or_nomem += 1;
+                }
+                let out = ctl.migrate_pages(pid, 1, 1000);
+                if out.error.is_some() && out.moved > 0 {
+                    partial += 1;
+                    assert!(out.moved < 1000);
+                }
+            }
+        }
+        assert!(busy_or_nomem > 0, "no move faults injected");
+        assert!(partial > 0, "no partial migrations injected");
+        assert_eq!(
+            plan.stats.migrate_busy.get()
+                + plan.stats.migrate_nomem.get()
+                + plan.stats.migrate_partial.get(),
+            plan.stats.migrations_faulted()
+        );
+    }
+
+    #[test]
+    fn nodes_go_offline_and_come_back() {
+        let plan = storm_plan();
+        let mut saw_offline = false;
+        let mut saw_online = false;
+        for tick in 0..2000 {
+            for tr in plan.begin_tick(tick) {
+                assert_ne!(tr.node, 0, "node 0 must never go offline");
+                if tr.online {
+                    saw_online = true;
+                } else {
+                    saw_offline = true;
+                    assert!(plan.is_offline(tr.node));
+                    assert_eq!(plan.offline_nodes(), vec![tr.node]);
+                }
+            }
+            assert!(
+                plan.offline_nodes().len() <= 1,
+                "at most one node down at a time"
+            );
+        }
+        assert!(saw_offline, "no offline events in 2000 ticks");
+        assert!(saw_online, "offline windows never expired");
+        assert_eq!(
+            plan.stats.node_offline_events.get(),
+            plan.stats.node_online_events.get() + plan.offline_nodes().len() as u64,
+        );
+    }
+
+    #[test]
+    fn vanished_pids_return_after_window() {
+        let cfg = ChaosConfig {
+            pid_vanish_rate: 0.5,
+            vanish_ticks: 2,
+            ..ChaosConfig::storm(3)
+        };
+        let plan = FaultPlan::new(cfg, 42, 4);
+        let src = FaultyProcSource::new(&FixedSource, &plan);
+        plan.begin_tick(0);
+        let gone: Vec<i32> = {
+            let seen = src.list_pids();
+            (1..=64).filter(|p| !seen.contains(p)).collect()
+        };
+        assert!(!gone.is_empty(), "vanish rate 0.5 hid nobody");
+        for &pid in &gone {
+            assert!(src.read_stat(pid).is_none(), "vanished pid still readable");
+        }
+        // Windows are bounded: within 200 ticks every victim has
+        // reappeared at least once (it may vanish again on later rolls).
+        let mut reappeared: std::collections::BTreeSet<i32> =
+            std::collections::BTreeSet::new();
+        for tick in 1..200 {
+            plan.begin_tick(tick);
+            let seen = src.list_pids();
+            for &pid in &gone {
+                if seen.contains(&pid) {
+                    reappeared.insert(pid);
+                }
+            }
+        }
+        assert_eq!(reappeared.len(), gone.len(), "some pid never came back");
+    }
+
+    #[test]
+    fn stale_reads_serve_older_text() {
+        let cfg = ChaosConfig {
+            read_stale_rate: 1.0,
+            read_drop_rate: 0.0,
+            read_truncate_rate: 0.0,
+            read_corrupt_rate: 0.0,
+            pid_vanish_rate: 0.0,
+            ..ChaosConfig::storm(5)
+        };
+        struct Counter(Cell<u64>);
+        impl ProcSource for Counter {
+            fn list_pids(&self) -> Vec<i32> {
+                vec![1]
+            }
+            fn read_stat(&self, _pid: i32) -> Option<String> {
+                self.0.set(self.0.get() + 1);
+                Some(format!("read-{}", self.0.get()))
+            }
+            fn read_numa_maps(&self, _pid: i32) -> Option<String> {
+                None
+            }
+            fn read_nodes_online(&self) -> Option<String> {
+                None
+            }
+            fn read_node_cpulist(&self, _n: usize) -> Option<String> {
+                None
+            }
+            fn read_node_distance(&self, _n: usize) -> Option<String> {
+                None
+            }
+            fn read_node_numastat(&self, _n: usize) -> Option<String> {
+                None
+            }
+        }
+        let plan = FaultPlan::new(cfg, 42, 2);
+        let counter = Counter(Cell::new(0));
+        let src = FaultyProcSource::new(&counter, &plan);
+        plan.begin_tick(0);
+        let first = src.read_stat(1).unwrap();
+        assert_eq!(first, "read-1", "empty ring serves fresh text");
+        plan.begin_tick(1);
+        let second = src.read_stat(1).unwrap();
+        assert_eq!(second, "read-1", "rate-1.0 stale serves the older text");
+        assert!(plan.stats.reads_stale.get() > 0);
+    }
+
+    #[test]
+    fn zero_rates_are_transparent() {
+        let cfg = ChaosConfig { enabled: true, ..ChaosConfig::disabled() };
+        let plan = FaultPlan::new(cfg, 42, 4);
+        let src = FaultyProcSource::new(&FixedSource, &plan);
+        let mut inner = NullCtl { moves: Vec::new(), pages: Vec::new() };
+        for tick in 0..100 {
+            assert!(plan.begin_tick(tick).is_empty());
+            assert_eq!(src.list_pids(), FixedSource.list_pids());
+            for pid in src.list_pids() {
+                assert_eq!(src.read_stat(pid), FixedSource.read_stat(pid));
+                assert_eq!(src.read_numa_maps(pid), FixedSource.read_numa_maps(pid));
+            }
+        }
+        let mut ctl = FaultyControl::new(&mut inner, &plan);
+        for pid in 0..32 {
+            assert!(ctl.move_process(pid, 1).is_ok());
+            assert_eq!(ctl.migrate_pages(pid, 1, 10).moved, 10);
+        }
+        assert_eq!(plan.stats.injected_total(), 0);
+    }
+
+    #[test]
+    fn corrupt_and_truncate_are_utf8_safe() {
+        let mut rng = Rng::new(1);
+        let samples = ["", "a", "1234 (x) R 5 6", "N0=100 N1=200 kernelpagesize_kB=4"];
+        for s in samples {
+            for frac in [0.0, 0.3, 0.99, 1.0] {
+                let t = truncate_text(s, frac);
+                assert!(s.starts_with(&t));
+            }
+            if !s.is_empty() {
+                let c = corrupt_text(s, &mut rng);
+                assert_eq!(c.len(), s.len(), "corruption preserves length");
+            }
+        }
+    }
+}

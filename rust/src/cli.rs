@@ -56,6 +56,14 @@ COMMANDS:
                        scenario run <name>        run one, print results
                        scenario record [name...]  write golden trace(s)
                        scenario replay [name...]  re-run + byte-diff traces
+    chaos            deterministic fault injection:
+                       chaos list               fault taxonomy + storm rates
+                       chaos run [scenario]     run a timeline (default
+                                                chaos-storm) under the storm
+                                                and print recovery counters
+                       chaos diff [scenario]    byte-diff a chaos-disabled run
+                                                against one with no chaos
+                                                layer at all (must be equal)
     explain          scheduler decision provenance:
                        explain <scenario> [filter]  run a timeline under the
                        proposed policy and print every placement, skip, and
@@ -210,6 +218,17 @@ mod tests {
         assert_eq!(c.metrics_out, Some(PathBuf::from("m.jsonl")));
         assert!(c.metrics_text);
         assert!(parse(&argv("run --metrics-out")).is_err());
+    }
+
+    #[test]
+    fn parses_chaos_verb() {
+        let c = parse(&argv("chaos run chaos-storm --seed 7 --metrics-out m.jsonl")).unwrap();
+        assert_eq!(c.command, "chaos");
+        assert_eq!(c.positional, vec!["run", "chaos-storm"]);
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.metrics_out, Some(PathBuf::from("m.jsonl")));
+        let c = parse(&argv("chaos diff")).unwrap();
+        assert_eq!(c.positional, vec!["diff"]);
     }
 
     #[test]

@@ -359,6 +359,9 @@ pub struct Config {
     pub seed: u64,
     /// Virtual-time horizon for a run, ms.
     pub horizon_ms: u64,
+    /// Deterministic fault injection — the `[chaos]` table. None (no
+    /// table) means the runner constructs no chaos machinery at all.
+    pub chaos: Option<crate::chaos::ChaosConfig>,
 }
 
 #[derive(Debug)]
@@ -405,6 +408,9 @@ impl Config {
             for w in ws {
                 cfg.workloads.push(parse_workload(w)?);
             }
+        }
+        if let Some(c) = root.get("chaos") {
+            cfg.chaos = Some(parse_chaos(c)?);
         }
         cfg.validate()?;
         Ok(cfg)
@@ -496,6 +502,9 @@ impl Config {
                     pin.process, pin.node, self.machine.nodes
                 ));
             }
+        }
+        if let Some(chaos) = &self.chaos {
+            chaos.validate().map_err(ConfigError)?;
         }
         Ok(())
     }
@@ -712,6 +721,50 @@ fn parse_scheduler(v: &Value) -> Result<SchedulerConfig, ConfigError> {
         }
     }
     Ok(s)
+}
+
+/// The `[chaos]` table (see `chaos::ChaosConfig`). Presence of the table
+/// arms injection unless `enabled = false`; every rate starts at zero,
+/// and `preset = "storm"` starts from the standard storm instead.
+fn parse_chaos(v: &Value) -> Result<crate::chaos::ChaosConfig, ConfigError> {
+    use crate::chaos::ChaosConfig;
+    let mut c = match v.get("preset").and_then(Value::as_str) {
+        Some("storm") => ChaosConfig::storm(0),
+        Some(p) => return cfg_err(format!("unknown chaos preset {p:?}")),
+        None => ChaosConfig { enabled: true, ..ChaosConfig::disabled() },
+    };
+    if let Some(x) = v.get("enabled").and_then(Value::as_bool) {
+        c.enabled = x;
+    }
+    if let Some(x) = v.get("seed").and_then(Value::as_int) {
+        c.seed = x as u64;
+    }
+    macro_rules! rate_field {
+        ($name:ident) => {
+            if let Some(x) = v.get(stringify!($name)).and_then(Value::as_float) {
+                c.$name = x;
+            }
+        };
+    }
+    rate_field!(read_drop_rate);
+    rate_field!(read_truncate_rate);
+    rate_field!(read_corrupt_rate);
+    rate_field!(read_stale_rate);
+    rate_field!(pid_vanish_rate);
+    rate_field!(migrate_busy_rate);
+    rate_field!(migrate_nomem_rate);
+    rate_field!(migrate_partial_rate);
+    rate_field!(node_offline_rate);
+    if let Some(x) = v.get("stale_depth").and_then(Value::as_int) {
+        c.stale_depth = x.max(0) as usize;
+    }
+    if let Some(x) = v.get("vanish_ticks").and_then(Value::as_int) {
+        c.vanish_ticks = x.max(0) as u64;
+    }
+    if let Some(x) = v.get("node_offline_ticks").and_then(Value::as_int) {
+        c.node_offline_ticks = x.max(0) as u64;
+    }
+    Ok(c)
 }
 
 fn parse_workload(v: &Value) -> Result<WorkloadSpec, ConfigError> {
@@ -966,6 +1019,48 @@ mod tests {
             let mc = MachineConfig::preset(name).unwrap();
             assert!(mc.fabric.is_none(), "{name} must not grow a fabric");
         }
+    }
+
+    #[test]
+    fn parses_chaos_table() {
+        let c = Config::from_str(
+            r#"
+            [chaos]
+            read_drop_rate = 0.05
+            migrate_busy_rate = 0.2
+            stale_depth = 3
+            "#,
+        )
+        .unwrap();
+        let ch = c.chaos.as_ref().expect("table presence arms chaos");
+        assert!(ch.enabled, "presence of the table enables injection");
+        assert_eq!(ch.read_drop_rate, 0.05);
+        assert_eq!(ch.migrate_busy_rate, 0.2);
+        assert_eq!(ch.stale_depth, 3);
+        assert_eq!(ch.read_corrupt_rate, 0.0, "unset rates stay zero");
+
+        // The storm preset arms everything; explicit fields override it.
+        let c = Config::from_str("[chaos]\npreset = \"storm\"\nseed = 9").unwrap();
+        let ch = c.chaos.as_ref().unwrap();
+        assert!(ch.enabled && ch.migrate_partial_rate > 0.0);
+        assert_eq!(ch.seed, 9);
+
+        // `enabled = false` keeps the parsed rates but disarms the table.
+        let c = Config::from_str("[chaos]\nenabled = false\nread_drop_rate = 0.5")
+            .unwrap();
+        let ch = c.chaos.as_ref().unwrap();
+        assert!(!ch.enabled);
+        assert_eq!(ch.read_drop_rate, 0.5);
+
+        // No table at all: no chaos machinery.
+        assert!(Config::from_str("seed = 1").unwrap().chaos.is_none());
+    }
+
+    #[test]
+    fn chaos_validation_rejects_bad_rates() {
+        assert!(Config::from_str("[chaos]\nread_drop_rate = 1.5").is_err());
+        assert!(Config::from_str("[chaos]\nstale_depth = 0").is_err());
+        assert!(Config::from_str("[chaos]\npreset = \"hurricane\"").is_err());
     }
 
     #[test]

@@ -210,7 +210,9 @@ fn push_array_table(
     path: &[String],
     lineno: usize,
 ) -> Result<(), ParseError> {
-    let (last, prefix) = path.split_last().expect("non-empty path");
+    let Some((last, prefix)) = path.split_last() else {
+        return err(lineno, "empty [[header]] path");
+    };
     let parent = open_table(root, prefix, lineno)?;
     let entry = parent
         .entry(last.clone())
@@ -269,7 +271,14 @@ fn parse_array(s: &str, lineno: usize) -> Result<Value, ParseError> {
         match c {
             '"' => in_str = !in_str,
             '[' if !in_str => depth += 1,
-            ']' if !in_str => depth -= 1,
+            ']' if !in_str => {
+                // A bare `]` at depth 0 would underflow: `x = [1]]` used
+                // to panic here instead of reporting a parse error.
+                depth = match depth.checked_sub(1) {
+                    Some(d) => d,
+                    None => return err(lineno, "unbalanced ']' in array"),
+                };
+            }
             ',' if !in_str && depth == 0 => {
                 let part = inner[start..i].trim();
                 if !part.is_empty() {
@@ -279,6 +288,9 @@ fn parse_array(s: &str, lineno: usize) -> Result<Value, ParseError> {
             }
             _ => {}
         }
+    }
+    if depth != 0 || in_str {
+        return err(lineno, "unterminated nested array or string");
     }
     let tail = inner[start..].trim();
     if !tail.is_empty() {
@@ -393,6 +405,19 @@ mod tests {
     fn unterminated_header_rejected() {
         assert!(parse("[machine").is_err());
         assert!(parse("[[w]").is_err());
+    }
+
+    #[test]
+    fn malformed_arrays_error_instead_of_panicking() {
+        // Unbalanced close used to underflow `depth` and panic.
+        assert!(parse("x = [1]]").is_err());
+        assert!(parse("x = []]").is_err());
+        // Unclosed nesting / string inside an otherwise-bracketed line.
+        assert!(parse("x = [[1]").is_err());
+        assert!(parse("x = [\"a]").is_err());
+        // Still-valid shapes keep parsing.
+        assert!(parse("x = []").is_ok());
+        assert!(parse("x = [[1], [2]]").is_ok());
     }
 
     #[test]

@@ -11,11 +11,13 @@ use std::path::Path;
 use std::time::Instant;
 
 use crate::baselines::{autonuma::AutoNuma, static_tuning};
+use crate::chaos::{ChaosConfig, FaultPlan, FaultyControl, FaultyProcSource};
 use crate::config::{MachineConfig, PolicyKind, SchedulerConfig};
 use crate::monitor::{Monitor, SampleBufs, Snapshot};
+use crate::procfs::ProcSource;
 use crate::reporter::{Backend, Reporter};
 use crate::scenario::{EventEngine, FiredEvent, PidFate, ScenarioTrace, TimedEvent};
-use crate::scheduler::{MachineControl, PlacementLedger, UserScheduler};
+use crate::scheduler::{CtlError, MachineControl, MigrateOutcome, PlacementLedger, UserScheduler};
 use crate::sim::{Machine, Placement};
 use crate::telemetry::{Phase, Telemetry};
 use crate::topology::NumaTopology;
@@ -38,6 +40,10 @@ pub struct RunParams {
     pub events: Vec<TimedEvent>,
     /// Node-occupancy cadence when recording a trace, virtual ms.
     pub trace_every_ms: f64,
+    /// Deterministic fault injection. `None` — or a config with
+    /// `enabled: false` — constructs no chaos machinery at all: the run
+    /// is byte-identical to one on a build without the chaos module.
+    pub chaos: Option<ChaosConfig>,
 }
 
 impl Default for RunParams {
@@ -51,6 +57,7 @@ impl Default for RunParams {
             window_ms: 500.0,
             events: Vec::new(),
             trace_every_ms: 250.0,
+            chaos: None,
         }
     }
 }
@@ -152,6 +159,16 @@ fn run_inner(
 ) -> RunResult {
     let topo = NumaTopology::from_config(&params.machine);
     let mut machine = Machine::new(topo.clone(), params.seed);
+
+    // Deterministic fault injection: the plan exists only when chaos is
+    // explicitly enabled. A disabled config constructs nothing — reads
+    // and control calls take exactly the pre-chaos code path, which is
+    // what keeps the disabled run byte-identical.
+    let fault_plan: Option<FaultPlan> = params
+        .chaos
+        .as_ref()
+        .filter(|c| c.enabled)
+        .map(|c| FaultPlan::new(c.clone(), params.seed, topo.nodes));
 
     // --- static pin plan (decided before launch, like a real admin) ------
     let policy = params.scheduler.policy;
@@ -331,7 +348,20 @@ fn run_inner(
         .map(|(&p, _)| p)
         .collect();
 
+    let mut sim_tick: u64 = 0;
     while machine.now_ms < params.horizon_ms {
+        // Chaos node hot-unplug/replug: transitions are decided per
+        // tick from the seeded plan; the proposed scheduler evacuates
+        // or readmits accordingly. Baselines have no node view — for
+        // them an offline node only surfaces as refused control calls.
+        if let Some(plan) = fault_plan.as_ref() {
+            for tr in plan.begin_tick(sim_tick) {
+                if let Some((_, _, scheduler)) = proposed.as_mut() {
+                    scheduler.set_node_online(tr.node, tr.online);
+                }
+            }
+        }
+        sim_tick += 1;
         engine.tick(&mut machine);
         if engine.has_fired() {
             let fired = engine.drain_fired();
@@ -374,7 +404,18 @@ fn run_inner(
                 next_monitor += monitor_period;
                 monitor_samples += 1;
                 let t0 = Instant::now();
-                monitor.sample_into(&machine, machine.now_ms, &mut snap, &mut bufs);
+                match fault_plan.as_ref() {
+                    Some(plan) => {
+                        let faulty = FaultyProcSource::new(
+                            &machine as &dyn ProcSource,
+                            plan,
+                        );
+                        monitor.sample_into(&faulty, machine.now_ms, &mut snap, &mut bufs);
+                    }
+                    None => {
+                        monitor.sample_into(&machine, machine.now_ms, &mut snap, &mut bufs);
+                    }
+                }
                 if let Some(t) = tel.as_deref_mut() {
                     t.spans.record_since(Phase::MonitorSample, t0);
                 }
@@ -401,7 +442,13 @@ fn run_inner(
                             let t0 = Instant::now();
                             let mut ctl =
                                 TimedCtl { machine: &mut machine, migrate_ns: 0 };
-                            let executed = scheduler.apply(&report, &mut ctl);
+                            let executed = match fault_plan.as_ref() {
+                                Some(plan) => {
+                                    let mut faulty = FaultyControl::new(&mut ctl, plan);
+                                    scheduler.apply(&report, &mut faulty)
+                                }
+                                None => scheduler.apply(&report, &mut ctl),
+                            };
                             let total = t0.elapsed().as_nanos() as u64;
                             let migrate_ns = ctl.migrate_ns;
                             t.spans.record(
@@ -412,7 +459,14 @@ fn run_inner(
                             t.record_explains(scheduler.explain.take_rows());
                             executed
                         }
-                        None => scheduler.apply(&report, &mut machine),
+                        None => match fault_plan.as_ref() {
+                            Some(plan) => {
+                                let mut faulty =
+                                    FaultyControl::new(&mut machine, plan);
+                                scheduler.apply(&report, &mut faulty)
+                            }
+                            None => scheduler.apply(&report, &mut machine),
+                        },
                     };
                     // Epoch oracle: the capacity view must be internally
                     // consistent and hold state only for the report's
@@ -453,6 +507,7 @@ fn run_inner(
                     t,
                     &machine,
                     proposed.as_ref().map(|(m, _, s)| (m, s)),
+                    fault_plan.as_ref(),
                     events_fired,
                     monitor_samples,
                 );
@@ -517,6 +572,7 @@ fn run_inner(
             t,
             &machine,
             proposed.as_ref().map(|(m, _, s)| (m, s)),
+            fault_plan.as_ref(),
             events_fired,
             monitor_samples,
         );
@@ -560,17 +616,18 @@ struct TimedCtl<'a> {
 }
 
 impl MachineControl for TimedCtl<'_> {
-    fn move_process(&mut self, pid: i32, node: usize) {
+    fn move_process(&mut self, pid: i32, node: usize) -> Result<(), CtlError> {
         let t0 = Instant::now();
-        MachineControl::move_process(self.machine, pid, node);
+        let result = MachineControl::move_process(self.machine, pid, node);
         self.migrate_ns += t0.elapsed().as_nanos() as u64;
+        result
     }
 
-    fn migrate_pages(&mut self, pid: i32, node: usize, budget: u64) -> u64 {
+    fn migrate_pages(&mut self, pid: i32, node: usize, budget: u64) -> MigrateOutcome {
         let t0 = Instant::now();
-        let moved = MachineControl::migrate_pages(self.machine, pid, node, budget);
+        let outcome = MachineControl::migrate_pages(self.machine, pid, node, budget);
         self.migrate_ns += t0.elapsed().as_nanos() as u64;
-        moved
+        outcome
     }
 }
 
@@ -584,6 +641,7 @@ fn emit_metrics_epoch(
     tel: &mut Telemetry,
     machine: &Machine,
     proposed: Option<(&Monitor, &UserScheduler)>,
+    chaos: Option<&FaultPlan>,
     events_fired: u64,
     monitor_samples: u64,
 ) {
@@ -599,8 +657,28 @@ fn emit_metrics_epoch(
         tel.registry.set_counter(tel.ids.fabric_rho_clips, clips);
     }
 
+    if let Some(plan) = chaos {
+        let cs = &plan.stats;
+        tel.registry
+            .set_counter(tel.ids.chaos_reads_faulted, cs.reads_faulted());
+        tel.registry
+            .set_counter(tel.ids.chaos_pids_vanished, cs.pids_vanished.get());
+        tel.registry
+            .set_counter(tel.ids.chaos_migrations_faulted, cs.migrations_faulted());
+        tel.registry.set_counter(
+            tel.ids.chaos_node_events,
+            cs.node_offline_events.get() + cs.node_online_events.get(),
+        );
+    }
+
     if let Some((monitor, scheduler)) = proposed {
         tel.registry.set_counter(tel.ids.monitor_pid_drops, monitor.mid_read_drops());
+        tel.registry
+            .set_counter(tel.ids.monitor_read_retries, monitor.read_retries());
+        tel.registry
+            .set_counter(tel.ids.monitor_stale_served, monitor.stale_serves());
+        tel.registry
+            .set_counter(tel.ids.monitor_quarantines, monitor.quarantine_entries());
         let st = scheduler.stats;
         tel.registry.set_counter(tel.ids.moves_pin, st.pin_moves);
         tel.registry.set_counter(tel.ids.moves_speedup, st.speedup_moves);
@@ -613,6 +691,11 @@ fn emit_metrics_epoch(
         tel.registry.set_counter(tel.ids.skip_below_gain, st.skip_below_gain);
         tel.registry.set_counter(tel.ids.skip_already_best, st.skip_already_best);
         tel.registry.set_counter(tel.ids.skip_max_moves, st.skip_max_moves);
+        tel.registry.set_counter(tel.ids.skip_stale, st.skip_stale);
+        tel.registry.set_counter(tel.ids.skip_offline, st.skip_offline);
+        tel.registry.set_counter(tel.ids.move_faults, st.move_faults);
+        tel.registry.set_counter(tel.ids.migrate_faults, st.migrate_faults);
+        tel.registry.set_counter(tel.ids.evacuations, st.evacuations);
     }
 
     let rho = machine.node_rho();
@@ -834,6 +917,54 @@ mod tests {
             plain.to_jsonl(),
             traced.to_jsonl(),
             "telemetry must leave the recorded trace untouched"
+        );
+    }
+
+    #[test]
+    fn chaos_disabled_is_byte_identical_to_no_chaos() {
+        // The master switch must construct nothing: a run carrying a
+        // disabled chaos config records the exact same trace as a run
+        // with no chaos config at all.
+        let p = quick_params(PolicyKind::Proposed);
+        let mut with = p.clone();
+        with.chaos = Some(ChaosConfig::disabled());
+        let mut t_plain = ScenarioTrace::new();
+        let mut t_with = ScenarioTrace::new();
+        let a = run_traced(&p, &mut t_plain);
+        let b = run_traced(&with, &mut t_with);
+        assert_eq!(t_plain.to_jsonl(), t_with.to_jsonl(), "traces must match byte-for-byte");
+        assert_eq!(a.end_ms, b.end_ms);
+        assert_eq!(a.total_migrations, b.total_migrations);
+    }
+
+    #[test]
+    fn chaos_storm_is_deterministic() {
+        let mut p = quick_params(PolicyKind::Proposed);
+        p.horizon_ms = 6_000.0;
+        p.chaos = Some(ChaosConfig::storm(11));
+        let a = run(&p);
+        let b = run(&p);
+        assert_eq!(a.runtime_of("canneal"), b.runtime_of("canneal"));
+        assert_eq!(a.total_migrations, b.total_migrations);
+        assert_eq!(a.total_pages_migrated, b.total_pages_migrated);
+        assert_eq!(a.end_ms, b.end_ms);
+    }
+
+    #[test]
+    fn chaos_storm_injects_and_recovers_with_counters() {
+        let mut p = quick_params(PolicyKind::Proposed);
+        p.horizon_ms = 8_000.0;
+        p.chaos = Some(ChaosConfig::storm(7));
+        let mut tel = Telemetry::new();
+        let r = run_instrumented(&p, &mut tel);
+        assert!(r.end_ms > 0.0, "storm run must complete");
+        assert!(
+            tel.registry.counter_value(tel.ids.chaos_reads_faulted) > 0,
+            "storm must actually fault reads"
+        );
+        assert!(
+            tel.registry.counter_value(tel.ids.monitor_stale_served) > 0,
+            "flapping reads must exercise last-good serving"
         );
     }
 

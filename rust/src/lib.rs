@@ -21,6 +21,7 @@
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod baselines;
+pub mod chaos;
 pub mod cli;
 pub mod config;
 pub mod experiments;

@@ -41,6 +41,7 @@ fn main() {
         "ablate-fabric" => cmd_ablate_fabric(&cli),
         "bench-suite" => cmd_bench_suite(&cli),
         "scenario" => cmd_scenario(&cli),
+        "chaos" => cmd_chaos(&cli),
         "explain" => cmd_explain(&cli),
         "host-monitor" => cmd_host_monitor(&cli),
         "inspect" => cmd_inspect(&cli),
@@ -67,6 +68,7 @@ fn build_params(cli: &Cli) -> Result<runner::RunParams, String> {
         } else {
             60_000.0
         },
+        chaos: cfg.chaos.clone(),
         ..Default::default()
     };
     for w in &cfg.workloads {
@@ -488,6 +490,162 @@ fn cmd_scenario(cli: &Cli) -> i32 {
             eprintln!(
                 "unknown scenario subcommand {other:?} (list | run | record | replay)"
             );
+            2
+        }
+    }
+}
+
+/// `chaos list|run|diff` — the fault-injection front end.
+///
+/// * `list` prints the fault taxonomy with the standard storm's rates.
+/// * `run [scenario]` runs a catalog timeline (default `chaos-storm`)
+///   with every fault kind armed and prints the fault/recovery counters.
+/// * `diff [scenario]` proves the disabled chaos layer is inert: the
+///   timeline runs once with no chaos config and once with a present-
+///   but-disabled one, and the traces must be byte-identical.
+fn cmd_chaos(cli: &Cli) -> i32 {
+    use numasched::chaos::ChaosConfig;
+    use numasched::scenario::{self, catalog};
+    let sub = cli.positional.first().map(String::as_str).unwrap_or("list");
+    let resolve = || -> Result<numasched::scenario::Scenario, i32> {
+        let name = cli
+            .positional
+            .get(1)
+            .map(String::as_str)
+            .unwrap_or("chaos-storm");
+        let Some(mut sc) = catalog::by_name(name) else {
+            eprintln!("error: unknown scenario {name:?} (try `scenario list`)");
+            return Err(2);
+        };
+        if let Some(p) = &cli.policy {
+            match PolicyKind::parse(p) {
+                Some(k) => sc.params.scheduler.policy = k,
+                None => {
+                    eprintln!("error: unknown policy {p:?}");
+                    return Err(2);
+                }
+            }
+        }
+        if cli.seed != 42 {
+            sc.params.seed = cli.seed;
+        }
+        if let Some(h) = cli.horizon_ms {
+            sc.params.horizon_ms = h;
+        }
+        Ok(sc)
+    };
+    match sub {
+        "list" => {
+            let storm = ChaosConfig::storm(0);
+            let mut t = Table::new(
+                "chaos fault taxonomy (standard storm rates)",
+                &["fault", "rate", "injected at", "degradation path"],
+            );
+            let rows: [(&str, f64, &str, &str); 9] = [
+                ("read-drop", storm.read_drop_rate, "procfs read",
+                 "monitor retry, then last-good serve"),
+                ("read-truncate", storm.read_truncate_rate, "procfs read",
+                 "parser typed error -> retry/stale"),
+                ("read-corrupt", storm.read_corrupt_rate, "procfs read",
+                 "parser typed error -> retry/stale"),
+                ("read-stale", storm.read_stale_rate, "procfs read",
+                 "stale tag; scheduler skips the pid"),
+                ("pid-vanish", storm.pid_vanish_rate, "pid listing",
+                 "stale serve, quarantine on flapping"),
+                ("migrate-busy", storm.migrate_busy_rate, "control call",
+                 "fault counted; retried next epoch"),
+                ("migrate-nomem", storm.migrate_nomem_rate, "control call",
+                 "fault counted; retried next epoch"),
+                ("migrate-partial", storm.migrate_partial_rate, "migrate_pages",
+                 "ledger reconciles pages actually moved"),
+                ("node-offline", storm.node_offline_rate, "per node-tick",
+                 "evacuation, then readmission on online"),
+            ];
+            for (name, rate, site, path) in rows {
+                t.row(vec![
+                    name.to_string(),
+                    format!("{rate:.3}"),
+                    site.to_string(),
+                    path.to_string(),
+                ]);
+            }
+            print!("{}", if cli.csv { t.to_csv() } else { t.render() });
+            println!(
+                "run one with `numasched chaos run [scenario]`; \
+                 `chaos diff` proves the disabled layer changes nothing"
+            );
+            0
+        }
+        "run" => {
+            let mut sc = match resolve() {
+                Ok(s) => s,
+                Err(code) => return code,
+            };
+            if !sc.params.chaos.as_ref().is_some_and(|c| c.enabled) {
+                sc.params.chaos = Some(ChaosConfig::storm(0));
+            }
+            println!(
+                "chaos storm over scenario {} on {} (seed {}, policy {}, {} events)",
+                sc.name,
+                sc.params.machine.preset,
+                sc.params.seed,
+                sc.params.scheduler.policy,
+                sc.params.events.len()
+            );
+            let mut tel = Telemetry::new();
+            tel.push_header("chaos", sc.params.scheduler.policy.name(), sc.params.seed);
+            let (result, _trace) =
+                with_flight_dump(&mut tel, |t| scenario::record_with_metrics(&sc, t));
+            print_run_result(&result, cli.csv);
+            let counters = [
+                ("chaos_reads_faulted", tel.ids.chaos_reads_faulted),
+                ("chaos_pids_vanished", tel.ids.chaos_pids_vanished),
+                ("chaos_migrations_faulted", tel.ids.chaos_migrations_faulted),
+                ("chaos_node_events", tel.ids.chaos_node_events),
+                ("monitor_read_retries", tel.ids.monitor_read_retries),
+                ("monitor_stale_served", tel.ids.monitor_stale_served),
+                ("monitor_quarantines", tel.ids.monitor_quarantines),
+                ("skip_stale", tel.ids.skip_stale),
+                ("skip_offline", tel.ids.skip_offline),
+                ("move_faults", tel.ids.move_faults),
+                ("migrate_faults", tel.ids.migrate_faults),
+                ("evacuations", tel.ids.evacuations),
+            ];
+            let mut t = Table::new("fault + recovery counters", &["counter", "value"]);
+            for (name, id) in counters {
+                t.row(vec![name.to_string(), tel.registry.counter_value(id).to_string()]);
+            }
+            print!("{}", if cli.csv { t.to_csv() } else { t.render() });
+            emit_metrics(cli, &tel)
+        }
+        "diff" => {
+            let sc = match resolve() {
+                Ok(s) => s,
+                Err(code) => return code,
+            };
+            let mut plain = sc.clone();
+            plain.params.chaos = None;
+            let mut disarmed = sc;
+            disarmed.params.chaos = Some(ChaosConfig::disabled());
+            let (_, trace_plain) = scenario::record_with_result(&plain);
+            let (_, trace_disarmed) = scenario::record_with_result(&disarmed);
+            match numasched::scenario::ScenarioTrace::diff(&trace_disarmed, &trace_plain) {
+                None => {
+                    println!(
+                        "{}: OK — disabled chaos layer is byte-inert ({} records)",
+                        plain.name,
+                        trace_plain.lines().count()
+                    );
+                    0
+                }
+                Some(d) => {
+                    eprintln!("{}: MISMATCH — {d}", plain.name);
+                    1
+                }
+            }
+        }
+        other => {
+            eprintln!("unknown chaos subcommand {other:?} (list | run | diff)");
             2
         }
     }

@@ -9,14 +9,71 @@
 //! trait; it is byte-identical code whether the source is the live host
 //! or the simulator. Discovery (node count, cpulists, SLIT matrix) runs
 //! once at startup from sysfs, sampling runs every period.
+//!
+//! ## Graceful degradation
+//!
+//! Live procfs flaps: pids vanish mid-read, reads return truncated or
+//! corrupted text, whole reads fail transiently. The Monitor absorbs
+//! all of it with a three-step state machine, per pid:
+//!
+//! 1. **Bounded retry** — a failed read (unreadable stat, unparseable
+//!    stat text, or a numa_maps + stat-reprobe double failure) is
+//!    re-attempted up to [`READ_RETRIES`] times within the same pass.
+//! 2. **Last-good serving** — if the retries are exhausted and a prior
+//!    good sample exists, that copy is served with a non-zero
+//!    `stale_ticks` tag (capped at [`STALE_CAP`] consecutive serves,
+//!    then the pid is dropped). Consumers see an explicit staleness
+//!    signal instead of a silently missing task.
+//! 3. **Flap quarantine** — after [`QUARANTINE_AFTER`] consecutive
+//!    failed passes the pid is quarantined for [`QUARANTINE_CALLS`]
+//!    passes: its reads are skipped entirely (no retry storms against
+//!    a dying pid) and the last-good copy is served directly.
+//!
+//! On a healthy source none of this machinery fires: every sample is
+//! fresh (`stale_ticks == 0`) and output is byte-identical to a build
+//! without it.
 
 pub mod sample;
 pub mod thread;
 
 use crate::procfs::{numa_maps, stat, sysnode, ProcSource};
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
 
 pub use sample::{LinkSample, NodeSample, Snapshot, TaskSample, TopoView};
+
+/// Extra read attempts after a first mid-read failure, same pass.
+pub const READ_RETRIES: u32 = 2;
+/// Consecutive failed passes before a pid is quarantined.
+pub const QUARANTINE_AFTER: u32 = 3;
+/// Passes a quarantined pid's reads are skipped.
+pub const QUARANTINE_CALLS: u32 = 3;
+/// Max consecutive last-good serves before the pid is dropped.
+pub const STALE_CAP: u32 = 8;
+
+/// Per-pid read-health state (retry / quarantine / last-good cache).
+#[derive(Default)]
+struct PidHealth {
+    /// Most recent successfully-read sample; `None` once the staleness
+    /// cap evicts it.
+    last_good: Option<TaskSample>,
+    /// Failed passes since the last success.
+    consecutive_fails: u32,
+    /// Remaining passes to skip reads for (flap quarantine).
+    quarantined_for: u32,
+    /// Consecutive last-good serves since the last success.
+    stale_served: u32,
+}
+
+/// Outcome of one attempt to read a pid's stat + numa_maps.
+enum PidRead {
+    /// Fully read and parsed.
+    Ok,
+    /// Healthy, but excluded by the comm filter.
+    Filtered,
+    /// Unreadable or unparseable — retry material.
+    Failed,
+}
 
 /// The Monitor: discovered topology + sampling over a `ProcSource`.
 pub struct Monitor {
@@ -29,6 +86,15 @@ pub struct Monitor {
     /// race). `Cell`: sampling is `&self`. Telemetry mirrors this into
     /// the `monitor_pid_drops` counter.
     dropped_mid_read: Cell<u64>,
+    /// Per-pid retry/quarantine/last-good state. `RefCell`: sampling is
+    /// `&self`; borrows are short and never overlap source reads.
+    health: RefCell<BTreeMap<i32, PidHealth>>,
+    /// Cumulative read re-attempts (telemetry: `monitor_read_retries`).
+    read_retries: Cell<u64>,
+    /// Cumulative last-good serves (telemetry: `monitor_stale_served`).
+    stale_serves: Cell<u64>,
+    /// Cumulative quarantine entries (telemetry: `monitor_quarantines`).
+    quarantines: Cell<u64>,
 }
 
 impl Monitor {
@@ -36,7 +102,15 @@ impl Monitor {
     /// node spanning every observed CPU when NUMA sysfs is absent.
     pub fn discover(source: &dyn ProcSource) -> Result<Self, String> {
         let topo = Self::discover_topo(source)?;
-        Ok(Self { topo, comm_filter: Vec::new(), dropped_mid_read: Cell::new(0) })
+        Ok(Self {
+            topo,
+            comm_filter: Vec::new(),
+            dropped_mid_read: Cell::new(0),
+            health: RefCell::new(BTreeMap::new()),
+            read_retries: Cell::new(0),
+            stale_serves: Cell::new(0),
+            quarantines: Cell::new(0),
+        })
     }
 
     /// Cumulative count of pids dropped mid-read (see `dropped_mid_read`).
@@ -44,9 +118,117 @@ impl Monitor {
         self.dropped_mid_read.get()
     }
 
+    /// Cumulative bounded-retry re-attempts.
+    pub fn read_retries(&self) -> u64 {
+        self.read_retries.get()
+    }
+
+    /// Cumulative last-good stale serves.
+    pub fn stale_serves(&self) -> u64 {
+        self.stale_serves.get()
+    }
+
+    /// Cumulative flap-quarantine entries.
+    pub fn quarantine_entries(&self) -> u64 {
+        self.quarantines.get()
+    }
+
     #[inline]
     fn note_mid_read_drop(&self) {
         self.dropped_mid_read.set(self.dropped_mid_read.get() + 1);
+    }
+
+    #[inline]
+    fn note_retry(&self) {
+        self.read_retries.set(self.read_retries.get() + 1);
+    }
+
+    /// True when `pid` is quarantined this pass (skip its reads and
+    /// serve last-good directly). Decrements the quarantine window.
+    fn gate_quarantined(&self, pid: i32) -> bool {
+        let mut map = self.health.borrow_mut();
+        let Some(h) = map.get_mut(&pid) else { return false };
+        if h.quarantined_for == 0 {
+            return false;
+        }
+        h.quarantined_for -= 1;
+        true
+    }
+
+    /// A pass read `pid` successfully: reset flap state, refresh the
+    /// last-good cache in place (`clone_from` reuses its allocations).
+    fn note_success(&self, pid: i32, task: &TaskSample) {
+        let mut map = self.health.borrow_mut();
+        let h = map.entry(pid).or_default();
+        h.consecutive_fails = 0;
+        h.quarantined_for = 0;
+        h.stale_served = 0;
+        match &mut h.last_good {
+            Some(dst) => clone_task_into(dst, task),
+            None => h.last_good = Some(task.clone()),
+        }
+    }
+
+    /// `pid` is healthy but comm-filtered: forget it entirely (a cached
+    /// copy must never be served for an unmonitored task).
+    fn note_filtered(&self, pid: i32) {
+        self.health.borrow_mut().remove(&pid);
+    }
+
+    /// Retries exhausted for `pid` this pass: count the drop, advance
+    /// the flap counter, and enter quarantine past the threshold.
+    fn note_failure(&self, pid: i32) {
+        self.note_mid_read_drop();
+        let mut map = self.health.borrow_mut();
+        let h = map.entry(pid).or_default();
+        h.consecutive_fails += 1;
+        if h.consecutive_fails >= QUARANTINE_AFTER && h.quarantined_for == 0 {
+            h.quarantined_for = QUARANTINE_CALLS;
+            self.quarantines.set(self.quarantines.get() + 1);
+        }
+    }
+
+    /// Serve `pid`'s last-good sample (allocating path). `None` once
+    /// the staleness cap is hit — the cached copy is evicted and the
+    /// pid disappears from snapshots until it reads cleanly again.
+    fn serve_stale(&self, pid: i32) -> Option<TaskSample> {
+        let mut map = self.health.borrow_mut();
+        let h = map.get_mut(&pid)?;
+        if h.stale_served >= STALE_CAP {
+            h.last_good = None;
+            return None;
+        }
+        let good = h.last_good.as_ref()?;
+        h.stale_served += 1;
+        let mut task = good.clone();
+        task.stale_ticks = h.stale_served;
+        self.stale_serves.set(self.stale_serves.get() + 1);
+        Some(task)
+    }
+
+    /// Zero-allocation twin of [`Self::serve_stale`]: clones the cached
+    /// copy into `dst` (capacity-reusing) and returns whether it served.
+    fn serve_stale_into(&self, pid: i32, dst: &mut TaskSample) -> bool {
+        let mut map = self.health.borrow_mut();
+        let Some(h) = map.get_mut(&pid) else { return false };
+        if h.stale_served >= STALE_CAP {
+            h.last_good = None;
+            return false;
+        }
+        let Some(good) = h.last_good.as_ref() else { return false };
+        h.stale_served += 1;
+        clone_task_into(dst, good);
+        dst.stale_ticks = h.stale_served;
+        self.stale_serves.set(self.stale_serves.get() + 1);
+        true
+    }
+
+    /// Forget health state for pids no longer listed (they exited; a
+    /// later reincarnation of the pid number must start fresh).
+    fn prune_health(&self, listed: &[i32]) {
+        self.health
+            .borrow_mut()
+            .retain(|pid, _| listed.contains(pid));
     }
 
     fn discover_topo(source: &dyn ProcSource) -> Result<TopoView, String> {
@@ -99,6 +281,76 @@ impl Monitor {
         Ok(TopoView { nodes, cores_per_node, distance, huge_2m_pool, giant_1g_pool })
     }
 
+    /// One read attempt for `pid` on the allocating path. On success
+    /// the fresh `TaskSample` is pushed onto `tasks`; failures push
+    /// nothing (the caller retries or serves last-good).
+    fn try_sample_pid(
+        &self,
+        source: &dyn ProcSource,
+        pid: i32,
+        tasks: &mut Vec<TaskSample>,
+    ) -> PidRead {
+        let Some(stat_text) = source.read_stat(pid) else {
+            return PidRead::Failed;
+        };
+        // Unparseable stat text (truncated/corrupted read) is a failure
+        // like an unreadable one: retry, then degrade — never panic,
+        // never silently skip.
+        let Some(ps) = stat::parse(stat_text.trim()) else {
+            return PidRead::Failed;
+        };
+        if !self.comm_filter.is_empty()
+            && !self.comm_filter.iter().any(|c| c == &ps.comm)
+        {
+            return PidRead::Filtered;
+        }
+        let (pages_per_node, huge_2m_per_node, giant_1g_per_node) =
+            match source.read_numa_maps(pid) {
+                Some(text) => {
+                    let maps = numa_maps::parse(&text);
+                    (
+                        maps.pages_per_node(self.topo.nodes),
+                        maps.huge_pages_per_node(self.topo.nodes, 2048),
+                        maps.huge_pages_per_node(self.topo.nodes, 1_048_576),
+                    )
+                }
+                // numa_maps can be absent for two very different
+                // reasons: the kernel has no CONFIG_NUMA, or the pid
+                // exited between the stat read and this read (procfs
+                // races on live hosts; the scenario engine's `Exit`
+                // event models the same churn). Re-probe stat to tell
+                // them apart — a vanished pid is a read failure rather
+                // than a fabricated single-node sample built from its
+                // dying stat line. The extra stat read only happens on
+                // this (rare, numa_maps-less) path, and this is the
+                // allocating reference pass; the production loop's
+                // `sample_into` re-probes into its reused buffer.
+                None => {
+                    if source.read_stat(pid).is_none() {
+                        return PidRead::Failed;
+                    }
+                    let mut v = vec![0u64; self.topo.nodes];
+                    let node =
+                        self.topo.node_of_core(ps.processor.max(0) as usize);
+                    v[node] = ps.rss.max(0) as u64;
+                    (v, vec![0u64; self.topo.nodes], vec![0u64; self.topo.nodes])
+                }
+            };
+        tasks.push(TaskSample {
+            pid: ps.pid,
+            comm: ps.comm,
+            node: self.topo.node_of_core(ps.processor.max(0) as usize),
+            threads: ps.num_threads,
+            cpu_ms: ps.utime + ps.stime,
+            rss_pages: ps.rss.max(0) as u64,
+            pages_per_node,
+            huge_2m_per_node,
+            giant_1g_per_node,
+            stale_ticks: 0,
+        });
+        PidRead::Ok
+    }
+
     /// One sampling pass (the body of Algorithm 1's loop).
     ///
     /// This is the allocating reference path: it builds a fresh
@@ -108,63 +360,39 @@ impl Monitor {
     /// against each other by `rust/tests/fastpath_equivalence.rs`.
     pub fn sample(&self, source: &dyn ProcSource, t_ms: f64) -> Snapshot {
         let mut snap = Snapshot { t_ms, ..Default::default() };
-        for pid in source.list_pids() {
-            let Some(stat_text) = source.read_stat(pid) else {
-                self.note_mid_read_drop();
-                continue;
-            };
-            let Some(ps) = stat::parse(stat_text.trim()) else { continue };
-            if !self.comm_filter.is_empty()
-                && !self.comm_filter.iter().any(|c| c == &ps.comm)
-            {
+        let listed = source.list_pids();
+        for &pid in &listed {
+            if self.gate_quarantined(pid) {
+                if let Some(task) = self.serve_stale(pid) {
+                    snap.tasks.push(task);
+                }
                 continue;
             }
-            let (pages_per_node, huge_2m_per_node, giant_1g_per_node) =
-                match source.read_numa_maps(pid) {
-                    Some(text) => {
-                        let maps = numa_maps::parse(&text);
-                        (
-                            maps.pages_per_node(self.topo.nodes),
-                            maps.huge_pages_per_node(self.topo.nodes, 2048),
-                            maps.huge_pages_per_node(self.topo.nodes, 1_048_576),
-                        )
+            let mut attempt = 0;
+            let outcome = loop {
+                match self.try_sample_pid(source, pid, &mut snap.tasks) {
+                    PidRead::Failed if attempt < READ_RETRIES => {
+                        attempt += 1;
+                        self.note_retry();
                     }
-                    // numa_maps can be absent for two very different
-                    // reasons: the kernel has no CONFIG_NUMA, or the pid
-                    // exited between the stat read and this read (procfs
-                    // races on live hosts; the scenario engine's `Exit`
-                    // event models the same churn). Re-probe stat to tell
-                    // them apart — a vanished pid is dropped rather than
-                    // served as a fabricated single-node sample built
-                    // from its dying stat line. The extra stat read only
-                    // happens on this (rare, numa_maps-less) path, and
-                    // this is the allocating reference pass; the
-                    // production loop's `sample_into` re-probes into its
-                    // reused buffer.
-                    None => {
-                        if source.read_stat(pid).is_none() {
-                            self.note_mid_read_drop();
-                            continue;
-                        }
-                        let mut v = vec![0u64; self.topo.nodes];
-                        let node =
-                            self.topo.node_of_core(ps.processor.max(0) as usize);
-                        v[node] = ps.rss.max(0) as u64;
-                        (v, vec![0u64; self.topo.nodes], vec![0u64; self.topo.nodes])
+                    other => break other,
+                }
+            };
+            match outcome {
+                PidRead::Ok => {
+                    let task = snap.tasks.last().expect("Ok pushed a task");
+                    self.note_success(pid, task);
+                }
+                PidRead::Filtered => self.note_filtered(pid),
+                PidRead::Failed => {
+                    self.note_failure(pid);
+                    if let Some(task) = self.serve_stale(pid) {
+                        snap.tasks.push(task);
                     }
-                };
-            snap.tasks.push(TaskSample {
-                pid: ps.pid,
-                comm: ps.comm,
-                node: self.topo.node_of_core(ps.processor.max(0) as usize),
-                threads: ps.num_threads,
-                cpu_ms: ps.utime + ps.stime,
-                rss_pages: ps.rss.max(0) as u64,
-                pages_per_node,
-                huge_2m_per_node,
-                giant_1g_per_node,
-            });
+                }
+            }
         }
+        self.prune_health(&listed);
         for n in 0..self.topo.nodes {
             let ns = source
                 .read_node_numastat(n)
@@ -200,77 +428,46 @@ impl Monitor {
         let nodes = self.topo.nodes;
         snap.t_ms = t_ms;
         let mut count = 0usize;
+        bufs.listed.clear();
         let mut visit = |pid: i32| {
-            bufs.stat_text.clear();
-            if !source.read_stat_into(pid, &mut bufs.stat_text) {
-                self.note_mid_read_drop();
-                return;
-            }
-            let Some(ps) = stat::parse_view(bufs.stat_text.trim()) else { return };
-            if !self.comm_filter.is_empty()
-                && !self.comm_filter.iter().any(|c| c == ps.comm)
-            {
-                return;
-            }
-            if count == snap.tasks.len() {
-                // Growing past the previous task count: one allocation
-                // per new slot, then reused forever.
-                snap.tasks.push(TaskSample {
-                    pid: 0,
-                    comm: String::new(),
-                    node: 0,
-                    threads: 0,
-                    cpu_ms: 0,
-                    rss_pages: 0,
-                    pages_per_node: Vec::new(),
-                    huge_2m_per_node: Vec::new(),
-                    giant_1g_per_node: Vec::new(),
-                });
-            }
-            let task = &mut snap.tasks[count];
-            task.pid = ps.pid;
-            task.comm.clear();
-            task.comm.push_str(ps.comm);
-            task.node = self.topo.node_of_core(ps.processor.max(0) as usize);
-            task.threads = ps.num_threads;
-            task.cpu_ms = ps.utime + ps.stime;
-            task.rss_pages = ps.rss.max(0) as u64;
-            for v in [
-                &mut task.pages_per_node,
-                &mut task.huge_2m_per_node,
-                &mut task.giant_1g_per_node,
-            ] {
-                v.clear();
-                v.resize(nodes, 0);
-            }
-            bufs.maps_text.clear();
-            if source.read_numa_maps_into(task.pid, &mut bufs.maps_text) {
-                numa_maps::accumulate(
-                    &bufs.maps_text,
-                    &mut task.pages_per_node,
-                    &mut task.huge_2m_per_node,
-                    &mut task.giant_1g_per_node,
-                );
-            } else {
-                // numa_maps can be absent because the kernel has no
-                // CONFIG_NUMA — or because the pid exited between the
-                // stat read and this read. Re-probe stat to tell them
-                // apart: a vanished pid leaves its slot unclaimed
-                // (`count` untouched; the truncate below reclaims it)
-                // instead of publishing a sample built from the dead
-                // task's final stat line. Only a live pid with genuinely
-                // absent numa_maps takes the rss fallback.
-                bufs.stat_text.clear();
-                if !source.read_stat_into(task.pid, &mut bufs.stat_text) {
-                    self.note_mid_read_drop();
-                    return;
+            bufs.listed.push(pid);
+            if self.gate_quarantined(pid) {
+                Self::ensure_slot(&mut snap.tasks, count);
+                if self.serve_stale_into(pid, &mut snap.tasks[count]) {
+                    count += 1;
                 }
-                task.pages_per_node[task.node] = task.rss_pages;
+                return;
             }
-            count += 1;
+            let mut attempt = 0;
+            let outcome = loop {
+                match self
+                    .try_sample_pid_into(source, pid, &mut snap.tasks, count, bufs, nodes)
+                {
+                    PidRead::Failed if attempt < READ_RETRIES => {
+                        attempt += 1;
+                        self.note_retry();
+                    }
+                    other => break other,
+                }
+            };
+            match outcome {
+                PidRead::Ok => {
+                    self.note_success(pid, &snap.tasks[count]);
+                    count += 1;
+                }
+                PidRead::Filtered => self.note_filtered(pid),
+                PidRead::Failed => {
+                    self.note_failure(pid);
+                    Self::ensure_slot(&mut snap.tasks, count);
+                    if self.serve_stale_into(pid, &mut snap.tasks[count]) {
+                        count += 1;
+                    }
+                }
+            }
         };
         source.for_each_pid(&mut visit);
         snap.tasks.truncate(count);
+        self.prune_health(&bufs.listed);
         snap.nodes.clear();
         for n in 0..nodes {
             bufs.numastat_text.clear();
@@ -293,6 +490,109 @@ impl Monitor {
             snap.links.extend(bufs.link_stats.iter().map(link_sample));
         }
     }
+
+    /// Grow the reused snapshot by one blank slot when `count` has
+    /// caught up with it (one allocation per new slot, reused forever).
+    fn ensure_slot(tasks: &mut Vec<TaskSample>, count: usize) {
+        if count == tasks.len() {
+            tasks.push(TaskSample {
+                pid: 0,
+                comm: String::new(),
+                node: 0,
+                threads: 0,
+                cpu_ms: 0,
+                rss_pages: 0,
+                pages_per_node: Vec::new(),
+                huge_2m_per_node: Vec::new(),
+                giant_1g_per_node: Vec::new(),
+                stale_ticks: 0,
+            });
+        }
+    }
+
+    /// One read attempt for `pid` on the zero-allocation path, writing
+    /// into slot `count`. Failures may leave the slot half-written —
+    /// only slots claimed by `count += 1` ever reach consumers.
+    fn try_sample_pid_into(
+        &self,
+        source: &dyn ProcSource,
+        pid: i32,
+        tasks: &mut Vec<TaskSample>,
+        count: usize,
+        bufs: &mut SampleBufs,
+        nodes: usize,
+    ) -> PidRead {
+        bufs.stat_text.clear();
+        if !source.read_stat_into(pid, &mut bufs.stat_text) {
+            return PidRead::Failed;
+        }
+        let Some(ps) = stat::parse_view(bufs.stat_text.trim()) else {
+            return PidRead::Failed;
+        };
+        if !self.comm_filter.is_empty()
+            && !self.comm_filter.iter().any(|c| c == ps.comm)
+        {
+            return PidRead::Filtered;
+        }
+        Self::ensure_slot(tasks, count);
+        let task = &mut tasks[count];
+        task.pid = ps.pid;
+        task.comm.clear();
+        task.comm.push_str(ps.comm);
+        task.node = self.topo.node_of_core(ps.processor.max(0) as usize);
+        task.threads = ps.num_threads;
+        task.cpu_ms = ps.utime + ps.stime;
+        task.rss_pages = ps.rss.max(0) as u64;
+        task.stale_ticks = 0;
+        for v in [
+            &mut task.pages_per_node,
+            &mut task.huge_2m_per_node,
+            &mut task.giant_1g_per_node,
+        ] {
+            v.clear();
+            v.resize(nodes, 0);
+        }
+        bufs.maps_text.clear();
+        if source.read_numa_maps_into(task.pid, &mut bufs.maps_text) {
+            numa_maps::accumulate(
+                &bufs.maps_text,
+                &mut task.pages_per_node,
+                &mut task.huge_2m_per_node,
+                &mut task.giant_1g_per_node,
+            );
+        } else {
+            // numa_maps can be absent because the kernel has no
+            // CONFIG_NUMA — or because the pid exited between the
+            // stat read and this read. Re-probe stat to tell them
+            // apart: a vanished pid is a read failure (retried, then
+            // degraded) instead of a sample fabricated from the dead
+            // task's final stat line. Only a live pid with genuinely
+            // absent numa_maps takes the rss fallback.
+            bufs.stat_text.clear();
+            if !source.read_stat_into(task.pid, &mut bufs.stat_text) {
+                return PidRead::Failed;
+            }
+            task.pages_per_node[task.node] = task.rss_pages;
+        }
+        PidRead::Ok
+    }
+}
+
+/// Field-wise `clone_from` for a `TaskSample`: every `String`/`Vec`
+/// reuses its existing capacity, so refreshing the last-good cache (or
+/// serving from it) allocates nothing at steady state. The derived
+/// `Clone::clone_from` would fall back to `*dst = src.clone()`.
+fn clone_task_into(dst: &mut TaskSample, src: &TaskSample) {
+    dst.pid = src.pid;
+    dst.comm.clone_from(&src.comm);
+    dst.node = src.node;
+    dst.threads = src.threads;
+    dst.cpu_ms = src.cpu_ms;
+    dst.rss_pages = src.rss_pages;
+    dst.pages_per_node.clone_from(&src.pages_per_node);
+    dst.huge_2m_per_node.clone_from(&src.huge_2m_per_node);
+    dst.giant_1g_per_node.clone_from(&src.giant_1g_per_node);
+    dst.stale_ticks = src.stale_ticks;
 }
 
 /// Decode one parsed link-stats line into the snapshot's sample form.
@@ -314,6 +614,8 @@ pub struct SampleBufs {
     numastat_text: String,
     links_text: String,
     link_stats: Vec<sysnode::LinkStat>,
+    /// Pids listed this pass — drives health-state pruning.
+    listed: Vec<i32>,
 }
 
 impl SampleBufs {
@@ -514,7 +816,7 @@ mod tests {
     }
 
     #[test]
-    fn pid_vanishing_between_stat_and_maps_is_dropped() {
+    fn pid_vanishing_between_stat_and_maps_degrades_gracefully() {
         let mut m = sim();
         let keep = m.spawn("keep", TaskBehavior::mem_bound(1e9), 1.0, 2, Placement::Node(0));
         let victim =
@@ -522,18 +824,20 @@ mod tests {
         m.step();
         let mon = Monitor::discover(&m).unwrap();
 
-        // Allocating path: the vanished pid is dropped, not fabricated
-        // into a single-node sample from its dying stat line.
+        // Allocating path, no prior good sample: the vanished pid is
+        // retried, counted, and dropped — never fabricated into a
+        // single-node sample from its dying stat line.
         assert_eq!(mon.mid_read_drops(), 0, "clean sources never drop");
         let src = VanishingAfterStat { inner: &m, victim, stat_reads: Default::default() };
         let snap = mon.sample(&src, 1.0);
         assert!(snap.task(victim).is_none());
         assert!(snap.task(keep).is_some());
         assert_eq!(mon.mid_read_drops(), 1, "the race is counted, not silent");
+        assert_eq!(mon.read_retries(), READ_RETRIES as u64, "bounded retry ran");
+        assert_eq!(mon.stale_serves(), 0, "nothing cached to serve");
 
-        // Fast path: prime the reused snapshot with both tasks, then
-        // resample against the racing source — the dead task's stale
-        // slot must be reclaimed, and both paths must agree.
+        // Fast path with a last-good copy: the victim is served stale
+        // with an explicit tag instead of silently disappearing.
         let src = VanishingAfterStat { inner: &m, victim, stat_reads: Default::default() };
         let mut snap2 = Snapshot::default();
         let mut bufs = SampleBufs::new();
@@ -541,10 +845,152 @@ mod tests {
         assert_eq!(snap2.tasks.len(), 2);
         assert_eq!(mon.mid_read_drops(), 1, "healthy resample adds no drops");
         mon.sample_into(&src, 1.0, &mut snap2, &mut bufs);
-        assert_eq!(snap2.tasks.len(), 1);
-        assert!(snap2.task(victim).is_none());
-        assert_eq!(snap2, snap);
+        assert_eq!(snap2.tasks.len(), 2, "last-good copy fills the gap");
+        let served = snap2.task(victim).expect("victim served stale");
+        assert_eq!(served.stale_ticks, 1, "staleness is tagged, not hidden");
+        assert_eq!(served.comm, "victim");
+        assert_eq!(snap2.task(keep).unwrap().stale_ticks, 0);
         assert_eq!(mon.mid_read_drops(), 2, "fast path counts the race too");
+        assert_eq!(mon.stale_serves(), 1);
+    }
+
+    /// Fails the victim's stat read exactly once — a transient blip the
+    /// bounded retry must absorb without any degradation.
+    struct FailsOnce<'a> {
+        inner: &'a Machine,
+        victim: i32,
+        failed: std::cell::Cell<bool>,
+    }
+
+    impl crate::procfs::ProcSource for FailsOnce<'_> {
+        fn list_pids(&self) -> Vec<i32> {
+            self.inner.list_pids()
+        }
+        fn read_stat(&self, pid: i32) -> Option<String> {
+            if pid == self.victim && !self.failed.get() {
+                self.failed.set(true);
+                return None;
+            }
+            self.inner.read_stat(pid)
+        }
+        fn read_numa_maps(&self, pid: i32) -> Option<String> {
+            self.inner.read_numa_maps(pid)
+        }
+        fn read_nodes_online(&self) -> Option<String> {
+            self.inner.read_nodes_online()
+        }
+        fn read_node_cpulist(&self, node: usize) -> Option<String> {
+            self.inner.read_node_cpulist(node)
+        }
+        fn read_node_distance(&self, node: usize) -> Option<String> {
+            self.inner.read_node_distance(node)
+        }
+        fn read_node_numastat(&self, node: usize) -> Option<String> {
+            self.inner.read_node_numastat(node)
+        }
+    }
+
+    #[test]
+    fn transient_read_failure_is_absorbed_by_retry() {
+        let mut m = sim();
+        let victim =
+            m.spawn("victim", TaskBehavior::mem_bound(1e9), 1.0, 2, Placement::Node(1));
+        m.step();
+        let mon = Monitor::discover(&m).unwrap();
+        let src = FailsOnce { inner: &m, victim, failed: Default::default() };
+        let snap = mon.sample(&src, 1.0);
+        let t = snap.task(victim).expect("retry rescued the read");
+        assert_eq!(t.stale_ticks, 0, "fresh sample, not a cached copy");
+        assert_eq!(t.comm, "victim");
+        assert_eq!(mon.read_retries(), 1);
+        assert_eq!(mon.mid_read_drops(), 0, "no drop when a retry lands");
+        assert_eq!(mon.stale_serves(), 0);
+    }
+
+    /// A hard flapper: every read of the victim fails, forever.
+    struct AlwaysFailing<'a> {
+        inner: &'a Machine,
+        victim: i32,
+        stat_attempts: std::cell::Cell<u32>,
+    }
+
+    impl crate::procfs::ProcSource for AlwaysFailing<'_> {
+        fn list_pids(&self) -> Vec<i32> {
+            self.inner.list_pids()
+        }
+        fn read_stat(&self, pid: i32) -> Option<String> {
+            if pid == self.victim {
+                self.stat_attempts.set(self.stat_attempts.get() + 1);
+                return None;
+            }
+            self.inner.read_stat(pid)
+        }
+        fn read_numa_maps(&self, pid: i32) -> Option<String> {
+            if pid == self.victim {
+                return None;
+            }
+            self.inner.read_numa_maps(pid)
+        }
+        fn read_nodes_online(&self) -> Option<String> {
+            self.inner.read_nodes_online()
+        }
+        fn read_node_cpulist(&self, node: usize) -> Option<String> {
+            self.inner.read_node_cpulist(node)
+        }
+        fn read_node_distance(&self, node: usize) -> Option<String> {
+            self.inner.read_node_distance(node)
+        }
+        fn read_node_numastat(&self, node: usize) -> Option<String> {
+            self.inner.read_node_numastat(node)
+        }
+    }
+
+    #[test]
+    fn flapping_pid_is_quarantined_and_served_stale_until_the_cap() {
+        let mut m = sim();
+        let victim =
+            m.spawn("victim", TaskBehavior::mem_bound(1e9), 1.0, 2, Placement::Node(1));
+        m.step();
+        let mon = Monitor::discover(&m).unwrap();
+        // Prime the last-good cache from the healthy source.
+        assert_eq!(mon.sample(&m, 0.0).tasks.len(), 1);
+
+        let src =
+            AlwaysFailing { inner: &m, victim, stat_attempts: Default::default() };
+        let mut served = Vec::new();
+        for i in 0..12 {
+            let snap = mon.sample(&src, 1.0 + i as f64);
+            served.push(snap.task(victim).map(|t| t.stale_ticks));
+        }
+        // Three failing passes arm the quarantine; the last-good copy
+        // keeps serving with a growing staleness tag until the cap
+        // evicts it; a post-quarantine re-probe re-quarantines.
+        assert_eq!(
+            served,
+            vec![
+                Some(1),
+                Some(2),
+                Some(3),
+                Some(4),
+                Some(5),
+                Some(6),
+                Some(7),
+                Some(8),
+                None,
+                None,
+                None,
+                None
+            ],
+            "stale serves then eviction at the cap"
+        );
+        assert_eq!(mon.quarantine_entries(), 3, "flapper re-quarantines");
+        assert_eq!(
+            src.stat_attempts.get(),
+            5 * (1 + READ_RETRIES),
+            "reads are skipped while quarantined: 5 probing passes only"
+        );
+        assert_eq!(mon.mid_read_drops(), 5, "one drop per probing pass");
+        assert_eq!(mon.stale_serves(), 8, "capped at STALE_CAP");
     }
 
     #[test]

@@ -22,6 +22,11 @@ pub struct TaskSample {
     /// 1 GiB giant pages per node (`kernelpagesize_kB=1048576` VMAs),
     /// in 1 GiB units.
     pub giant_1g_per_node: Vec<u64>,
+    /// How many samples ago this data was actually read. 0 = fresh;
+    /// n > 0 means the pid's reads are flapping and the Monitor served
+    /// its last-good copy (graceful degradation) — consumers must not
+    /// base migration decisions on it.
+    pub stale_ticks: u32,
 }
 
 /// One node's cumulative served-access counters (numastat).
@@ -113,6 +118,7 @@ mod tests {
                 pages_per_node: vec![],
                 huge_2m_per_node: vec![],
                 giant_1g_per_node: vec![],
+                stale_ticks: 0,
             }],
             nodes: vec![],
             links: vec![],

@@ -25,14 +25,29 @@ impl HostProcfs {
         Self { proc_root, sys_root }
     }
 
+    /// Read one kernel file. Absence (`NotFound`) is the normal "pid
+    /// vanished / surface not present" case and stays a silent `None`;
+    /// every *other* I/O error (EACCES, EIO, ...) is a real fault on a
+    /// surface that exists, so it is logged before degrading to `None`
+    /// instead of being swallowed indistinguishably.
+    fn read_file(&self, path: std::path::PathBuf) -> Option<String> {
+        match std::fs::read_to_string(&path) {
+            Ok(text) => Some(text),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
+            Err(e) => {
+                crate::log_warn!("procfs read {} failed: {e}", path.display());
+                None
+            }
+        }
+    }
+
     fn node_file(&self, node: usize, file: &str) -> Option<String> {
-        std::fs::read_to_string(
+        self.read_file(
             self.sys_root
                 .join("devices/system/node")
                 .join(format!("node{node}"))
                 .join(file),
         )
-        .ok()
     }
 }
 
@@ -56,16 +71,15 @@ impl ProcSource for HostProcfs {
     }
 
     fn read_stat(&self, pid: i32) -> Option<String> {
-        std::fs::read_to_string(self.proc_root.join(pid.to_string()).join("stat")).ok()
+        self.read_file(self.proc_root.join(pid.to_string()).join("stat"))
     }
 
     fn read_numa_maps(&self, pid: i32) -> Option<String> {
-        std::fs::read_to_string(self.proc_root.join(pid.to_string()).join("numa_maps"))
-            .ok()
+        self.read_file(self.proc_root.join(pid.to_string()).join("numa_maps"))
     }
 
     fn read_nodes_online(&self) -> Option<String> {
-        std::fs::read_to_string(self.sys_root.join("devices/system/node/online")).ok()
+        self.read_file(self.sys_root.join("devices/system/node/online"))
     }
 
     fn read_node_cpulist(&self, node: usize) -> Option<String> {

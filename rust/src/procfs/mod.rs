@@ -15,6 +15,28 @@ pub mod numa_maps;
 pub mod stat;
 pub mod sysnode;
 
+/// Why a procfs/sysfs parse failed. The Option-returning parsers exist
+/// for hot paths that only care about skip-vs-use; the `try_*` variants
+/// return this so degradation layers (monitor retries, chaos telemetry)
+/// can say *what* was wrong with the text. `Copy` with static strings —
+/// constructing one never allocates, so error paths stay as cheap as
+/// the `None` they replaced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParseError {
+    /// The surface that failed ("stat", "numa_maps", "cpulist", ...).
+    pub surface: &'static str,
+    /// What was missing or malformed, in proc(5)/sysfs terms.
+    pub detail: &'static str,
+}
+
+impl core::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        write!(f, "malformed {}: {}", self.surface, self.detail)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
 /// Abstract source of procfs/sysfs text.
 ///
 /// The `*_into` / `for_each_pid` methods are the zero-allocation fast

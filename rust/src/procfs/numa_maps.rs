@@ -99,11 +99,19 @@ impl NumaMaps {
     }
 }
 
-/// Parse one VMA line; None for malformed lines (skipped by callers).
-pub fn parse_line(line: &str) -> Option<Vma> {
+/// Parse one VMA line with a typed error saying which column broke —
+/// how corrupted/truncated kernel text gets diagnosed rather than
+/// silently skipped.
+pub fn try_parse_line(line: &str) -> Result<Vma, super::ParseError> {
+    let e = |detail| super::ParseError { surface: "numa_maps", detail };
     let mut parts = line.split_whitespace();
-    let address = u64::from_str_radix(parts.next()?, 16).ok()?;
-    let policy = parts.next()?.to_string();
+    let address = parts.next().ok_or_else(|| e("empty line"))?;
+    let address =
+        u64::from_str_radix(address, 16).map_err(|_| e("address is not hex"))?;
+    let policy = parts
+        .next()
+        .ok_or_else(|| e("missing policy column"))?
+        .to_string();
     let mut vma = Vma {
         address,
         policy,
@@ -134,7 +142,13 @@ pub fn parse_line(line: &str) -> Option<Vma> {
         }
         // Other attributes (mapped=, active=, huge, heap, stack) ignored.
     }
-    Some(vma)
+    Ok(vma)
+}
+
+/// Parse one VMA line; None for malformed lines (skipped by callers who
+/// only filter; callers who diagnose use [`try_parse_line`]).
+pub fn parse_line(line: &str) -> Option<Vma> {
+    try_parse_line(line).ok()
 }
 
 /// Parse a whole numa_maps file.
@@ -343,6 +357,18 @@ mod tests {
         // The huge tier stays separable, in its own units.
         assert_eq!(maps.huge_pages_per_node(2, 2048), vec![3, 1]);
         assert_eq!(maps.huge_pages_per_node(2, 1_048_576), vec![0, 0]);
+    }
+
+    #[test]
+    fn typed_errors_name_the_broken_column() {
+        let detail = |line: &str| try_parse_line(line).unwrap_err().detail;
+        assert_eq!(detail(""), "empty line");
+        assert_eq!(detail("zzz default N0=1"), "address is not hex");
+        assert_eq!(detail("7f00"), "missing policy column");
+        let err = try_parse_line("").unwrap_err();
+        assert_eq!(err.surface, "numa_maps");
+        let good = "7fff0000 bind:3 anon=10 N3=10";
+        assert_eq!(try_parse_line(good).unwrap(), parse_line(good).unwrap());
     }
 
     #[test]

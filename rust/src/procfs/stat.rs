@@ -58,16 +58,20 @@ pub struct PidStatView<'a> {
     pub processor: i32,
 }
 
-/// Zero-copy parse of one stat line: no `Vec` of fields, no `comm`
-/// copy. Returns None on malformed input (the kernel can race a dying
-/// pid into an empty file; callers skip those).
-pub fn parse_view(line: &str) -> Option<PidStatView<'_>> {
-    let open = line.find('(')?;
-    let close = line.rfind(')')?;
+/// Zero-copy parse of one stat line with a typed error naming the field
+/// that was missing or malformed — truncated and corrupted kernel text
+/// (a dying pid, a torn read) is diagnosable, not just skippable.
+pub fn try_parse_view(line: &str) -> Result<PidStatView<'_>, super::ParseError> {
+    let e = |detail| super::ParseError { surface: "stat", detail };
+    let open = line.find('(').ok_or_else(|| e("no '(' opening comm"))?;
+    let close = line.rfind(')').ok_or_else(|| e("no ')' closing comm"))?;
     if close < open {
-        return None;
+        return Err(e("')' before '('"));
     }
-    let pid: i32 = line[..open].trim().parse().ok()?;
+    let pid: i32 = line[..open]
+        .trim()
+        .parse()
+        .map_err(|_| e("pid is not an integer"))?;
     let comm = &line[open + 1..close];
     // Walk the post-comm fields once; field k (1-based, k >= 3) is the
     // (k-3)-th whitespace token. Stop at the last field we consume.
@@ -93,17 +97,27 @@ pub fn parse_view(line: &str) -> Option<PidStatView<'_>> {
             _ => {}
         }
     }
-    Some(PidStatView {
+    Ok(PidStatView {
         pid,
         comm,
-        state: state?,
-        utime: utime?,
-        stime: stime?,
-        num_threads: num_threads?,
-        vsize: vsize?,
-        rss: rss?,
-        processor: processor?,
+        state: state.ok_or_else(|| e("field 3 (state) missing"))?,
+        utime: utime.ok_or_else(|| e("field 14 (utime) missing or non-numeric"))?,
+        stime: stime.ok_or_else(|| e("field 15 (stime) missing or non-numeric"))?,
+        num_threads: num_threads
+            .ok_or_else(|| e("field 20 (num_threads) missing or non-numeric"))?,
+        vsize: vsize.ok_or_else(|| e("field 23 (vsize) missing or non-numeric"))?,
+        rss: rss.ok_or_else(|| e("field 24 (rss) missing or non-numeric"))?,
+        processor: processor
+            .ok_or_else(|| e("field 39 (processor) missing or non-numeric"))?,
     })
+}
+
+/// Zero-copy parse of one stat line: no `Vec` of fields, no `comm`
+/// copy. Returns None on malformed input (the kernel can race a dying
+/// pid into an empty file; callers who only skip use this; callers who
+/// diagnose use [`try_parse_view`]).
+pub fn parse_view(line: &str) -> Option<PidStatView<'_>> {
+    try_parse_view(line).ok()
 }
 
 /// Parse one stat line into an owned [`PidStat`].
@@ -220,6 +234,24 @@ mod tests {
         assert!(parse_view("").is_none());
         assert!(parse_view("123 (x").is_none());
         assert!(parse_view("123 (y) R 1").is_none());
+    }
+
+    #[test]
+    fn typed_errors_name_the_broken_field() {
+        let detail = |line: &str| try_parse_view(line).unwrap_err().detail;
+        assert_eq!(detail(""), "no '(' opening comm");
+        assert_eq!(detail("123 (x"), "no ')' closing comm");
+        assert_eq!(detail(") (x("), "')' before '('");
+        assert_eq!(detail("x (y) R 1"), "pid is not an integer");
+        assert_eq!(detail("123 (y)"), "field 3 (state) missing");
+        assert_eq!(detail("123 (y) R 1"), "field 14 (utime) missing or non-numeric");
+        // A truncated real line loses the trailing processor field.
+        let cut = &REAL_LINE[..REAL_LINE.len() - 30];
+        assert_eq!(detail(cut), "field 39 (processor) missing or non-numeric");
+        assert_eq!(try_parse_view(REAL_LINE).unwrap(), parse_view(REAL_LINE).unwrap());
+        let err = try_parse_view("").unwrap_err();
+        assert_eq!(err.surface, "stat");
+        assert_eq!(err.to_string(), "malformed stat: no '(' opening comm");
     }
 
     #[test]

@@ -5,26 +5,35 @@
 //! numbers from uncore/UPI perf counters, and this parse path is where
 //! a host backend plugs in).
 
-/// Parse a Linux cpulist ("0-9,20-29,40") into explicit ids.
-pub fn parse_cpulist(s: &str) -> Option<Vec<usize>> {
+/// Parse a Linux cpulist ("0-9,20-29,40") with a typed error for the
+/// exact malformation (garbled sysfs reads under fault injection).
+pub fn try_parse_cpulist(s: &str) -> Result<Vec<usize>, super::ParseError> {
+    let e = |detail| super::ParseError { surface: "cpulist", detail };
     let mut out = Vec::new();
     if s.trim().is_empty() {
-        return Some(out);
+        return Ok(out);
     }
     for part in s.trim().split(',') {
         let part = part.trim();
         if let Some((lo, hi)) = part.split_once('-') {
-            let lo: usize = lo.trim().parse().ok()?;
-            let hi: usize = hi.trim().parse().ok()?;
+            let lo: usize =
+                lo.trim().parse().map_err(|_| e("range start is not an integer"))?;
+            let hi: usize =
+                hi.trim().parse().map_err(|_| e("range end is not an integer"))?;
             if hi < lo {
-                return None;
+                return Err(e("descending range"));
             }
             out.extend(lo..=hi);
         } else {
-            out.push(part.parse().ok()?);
+            out.push(part.parse().map_err(|_| e("id is not an integer"))?);
         }
     }
-    Some(out)
+    Ok(out)
+}
+
+/// Parse a Linux cpulist ("0-9,20-29,40") into explicit ids.
+pub fn parse_cpulist(s: &str) -> Option<Vec<usize>> {
+    try_parse_cpulist(s).ok()
 }
 
 /// Render ids (assumed sorted) back to a compact cpulist.
@@ -48,24 +57,43 @@ pub fn render_cpulist(ids: &[usize]) -> String {
     parts.join(",")
 }
 
-/// Parse one `distance` row ("10 21 21 30").
-pub fn parse_distance_row(s: &str) -> Option<Vec<f64>> {
+/// Parse one `distance` row ("10 21 21 30") with a typed error.
+pub fn try_parse_distance_row(s: &str) -> Result<Vec<f64>, super::ParseError> {
+    let e = |detail| super::ParseError { surface: "distance", detail };
     let row: Result<Vec<f64>, _> = s.split_whitespace().map(str::parse).collect();
-    row.ok().filter(|r| !r.is_empty())
+    let row = row.map_err(|_| e("non-numeric entry"))?;
+    if row.is_empty() {
+        return Err(e("empty row"));
+    }
+    Ok(row)
 }
 
-/// Extract `MemTotal` in kB from a node `meminfo` file.
-pub fn parse_memtotal_kb(text: &str) -> Option<u64> {
+/// Parse one `distance` row ("10 21 21 30").
+pub fn parse_distance_row(s: &str) -> Option<Vec<f64>> {
+    try_parse_distance_row(s).ok()
+}
+
+/// Extract `MemTotal` in kB from a node `meminfo` file, with a typed
+/// error distinguishing a missing line from a garbled value.
+pub fn try_parse_memtotal_kb(text: &str) -> Result<u64, super::ParseError> {
+    let e = |detail| super::ParseError { surface: "meminfo", detail };
     for line in text.lines() {
         if line.contains("MemTotal:") {
             return line
                 .split_whitespace()
                 .rev()
                 .nth(1) // "... 8388608 kB"
-                .and_then(|v| v.parse().ok());
+                .ok_or_else(|| e("MemTotal line truncated"))?
+                .parse()
+                .map_err(|_| e("MemTotal value is not an integer"));
         }
     }
-    None
+    Err(e("no MemTotal line"))
+}
+
+/// Extract `MemTotal` in kB from a node `meminfo` file.
+pub fn parse_memtotal_kb(text: &str) -> Option<u64> {
+    try_parse_memtotal_kb(text).ok()
 }
 
 /// Per-node `numastat` counters.
@@ -207,6 +235,33 @@ mod tests {
     fn cpulist_rejects_garbage() {
         assert!(parse_cpulist("a-b").is_none());
         assert!(parse_cpulist("3-1").is_none());
+    }
+
+    #[test]
+    fn typed_errors_across_the_sysfs_parsers() {
+        assert_eq!(
+            try_parse_cpulist("a-b").unwrap_err().detail,
+            "range start is not an integer"
+        );
+        assert_eq!(try_parse_cpulist("3-1").unwrap_err().detail, "descending range");
+        assert_eq!(try_parse_cpulist("x").unwrap_err().detail, "id is not an integer");
+        assert_eq!(try_parse_distance_row("").unwrap_err().detail, "empty row");
+        assert_eq!(
+            try_parse_distance_row("10 x").unwrap_err().detail,
+            "non-numeric entry"
+        );
+        assert_eq!(
+            try_parse_memtotal_kb("nothing here").unwrap_err().detail,
+            "no MemTotal line"
+        );
+        assert_eq!(
+            try_parse_memtotal_kb("MemTotal: junk kB").unwrap_err().detail,
+            "MemTotal value is not an integer"
+        );
+        assert_eq!(
+            try_parse_memtotal_kb("Node 0 MemTotal: 8388608 kB"),
+            Ok(8388608)
+        );
     }
 
     #[test]

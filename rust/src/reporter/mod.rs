@@ -67,6 +67,10 @@ pub struct RankedTask {
     pub huge_2m_per_node: Vec<u64>,
     /// Per-node 1 GiB giant pages.
     pub giant_1g_per_node: Vec<u64>,
+    /// True when the Monitor served this task from its last-good cache
+    /// because the live reads are flapping — the coordinates may be
+    /// arbitrarily old, so the Scheduler must not migrate on them.
+    pub stale: bool,
 }
 
 /// The Reporter's output — Algorithm 2's "signal to trigger schedule".
@@ -333,6 +337,7 @@ impl Reporter {
                     pages_per_node: t.pages_per_node.clone(),
                     huge_2m_per_node: t.huge_2m_per_node.clone(),
                     giant_1g_per_node: t.giant_1g_per_node.clone(),
+                    stale: t.stale_ticks > 0,
                 }
             })
             .collect();
@@ -397,6 +402,7 @@ mod tests {
             huge_2m_per_node: vec![0; pages.len()],
             giant_1g_per_node: vec![0; pages.len()],
             pages_per_node: pages,
+            stale_ticks: 0,
         }
     }
 
@@ -508,6 +514,19 @@ mod tests {
             .ingest(&snap(20.0, mk(20), vec![192_000, 102_000]))
             .unwrap();
         assert!(!rep.triggers.powerful_core);
+    }
+
+    #[test]
+    fn stale_tag_propagates_to_ranked_tasks() {
+        let mut r = reporter();
+        r.ingest(&snap(0.0, vec![task(1, 0, 0, vec![100, 0])], vec![0, 0]));
+        let mut t = task(1, 0, 10, vec![100, 0]);
+        t.stale_ticks = 3; // monitor served its last-good copy
+        let rep = r.ingest(&snap(10.0, vec![t], vec![10_000, 0])).unwrap();
+        assert!(rep.by_speedup[0].stale, "staleness must reach the scheduler");
+        let fresh = task(1, 0, 20, vec![100, 0]);
+        let rep = r.ingest(&snap(20.0, vec![fresh], vec![20_000, 0])).unwrap();
+        assert!(!rep.by_speedup[0].stale, "fresh samples clear the tag");
     }
 
     #[test]

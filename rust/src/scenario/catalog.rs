@@ -1,6 +1,6 @@
 //! The scenario catalog — the shipped dynamic-workload timelines.
 //!
-//! Seven entries, spanning all six machine presets and every event
+//! Eight entries, spanning all six machine presets and every event
 //! kind, chosen to hit the failure modes a t=0-static harness can never
 //! see:
 //!
@@ -13,11 +13,13 @@
 //! | `arrival-wave`  | 8node-hetero | staggered arrivals onto asymmetric nodes |
 //! | `flapper`       | 2node-8core  | adversarial intensity flapping timed near the cooldown |
 //! | `link-storm`    | 8node-fabric | interconnect saturation: streamers pinning one QPI link at its limit |
+//! | `chaos-storm`   | r910-40core  | every injected fault kind (procfs rot, migrate errors, node hot-unplug) under churn |
 //!
 //! Every entry is fully parameterized (preset, seed, horizon, events),
 //! so `record`/`replay` are reproducible from the name alone. Golden
 //! traces for a subset live under `rust/tests/golden/`.
 
+use crate::chaos::ChaosConfig;
 use crate::config::{MachineConfig, SchedulerConfig};
 use crate::experiments::runner::RunParams;
 use crate::sim::TaskBehavior;
@@ -26,7 +28,7 @@ use crate::workloads::{mix, parsec, server};
 use super::{Event, Scenario, TimedEvent};
 
 /// Every catalog scenario name, in listing order.
-pub const NAMES: [&str; 7] = [
+pub const NAMES: [&str; 8] = [
     "phase-flip",
     "server-churn",
     "pressure-spike",
@@ -34,6 +36,7 @@ pub const NAMES: [&str; 7] = [
     "arrival-wave",
     "flapper",
     "link-storm",
+    "chaos-storm",
 ];
 
 fn base(preset: &str, horizon_ms: f64) -> RunParams {
@@ -46,6 +49,7 @@ fn base(preset: &str, horizon_ms: f64) -> RunParams {
         window_ms: 500.0,
         events: Vec::new(),
         trace_every_ms: 250.0,
+        chaos: None,
     }
 }
 
@@ -243,6 +247,35 @@ fn link_storm() -> Scenario {
     }
 }
 
+fn chaos_storm() -> Scenario {
+    // The paper testbed under every injected fault kind at once: procfs
+    // reads rot, pids vanish from listings, migrations bounce or land
+    // partially, and nodes hot-unplug — while the workload itself churns,
+    // so stale serving, quarantine, reconciliation, and evacuation all
+    // fire in one run. Chaos seed 0 derives from the run seed, keeping
+    // the whole storm reproducible from `seed` alone.
+    let mut params = base("r910-40core", 8_000.0);
+    params.specs = vec![
+        measured("canneal"),
+        measured("dedup"),
+        bg("streamcluster", "bg-streamcluster"),
+    ];
+    params.events = vec![
+        TimedEvent::at(1_000.0, Event::Launch(mix::churn_job("churn-0", 1_200.0))),
+        TimedEvent::at(2_500.0, Event::Launch(mix::churn_job("churn-1", 1_200.0))),
+        TimedEvent::at(4_000.0, Event::Exit { comm: "churn-0".into() }),
+        TimedEvent::at(5_000.0, Event::Launch(mix::churn_job("churn-2", 1_200.0))),
+    ];
+    params.chaos = Some(ChaosConfig::storm(0));
+    Scenario {
+        name: "chaos-storm",
+        description: "every fault kind armed (procfs rot, pid vanish, \
+                      migrate errors, node hot-unplug) over churning \
+                      workloads on the paper testbed",
+        params,
+    }
+}
+
 /// Build every catalog scenario, in [`NAMES`] order.
 pub fn all() -> Vec<Scenario> {
     vec![
@@ -253,6 +286,7 @@ pub fn all() -> Vec<Scenario> {
         arrival_wave(),
         flapper(),
         link_storm(),
+        chaos_storm(),
     ]
 }
 
@@ -311,6 +345,25 @@ mod tests {
                 "r910-thp".into(),
             ]
         );
+    }
+
+    #[test]
+    fn only_chaos_storm_arms_fault_injection() {
+        for sc in all() {
+            match sc.name {
+                "chaos-storm" => {
+                    let c = sc.params.chaos.as_ref().expect("storm armed");
+                    assert!(c.enabled);
+                    c.validate().unwrap();
+                    assert_eq!(c.seed, 0, "derives the chaos seed from the run seed");
+                }
+                _ => assert!(
+                    sc.params.chaos.is_none(),
+                    "{}: must stay chaos-free (golden traces)",
+                    sc.name
+                ),
+            }
+        }
     }
 
     #[test]

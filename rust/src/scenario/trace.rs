@@ -99,6 +99,7 @@ fn reason_name(r: Reason) -> &'static str {
         Reason::StaticPin => "static_pin",
         Reason::Speedup => "speedup",
         Reason::Contention => "contention",
+        Reason::Evacuate => "evacuate",
     }
 }
 

@@ -86,6 +86,20 @@ pub struct MetricIds {
     pub skip_already_best: CounterId,
     pub skip_max_moves: CounterId,
     pub explain_rows: CounterId,
+    // Chaos engine: injected faults (what the plan did to the run).
+    pub chaos_reads_faulted: CounterId,
+    pub chaos_pids_vanished: CounterId,
+    pub chaos_migrations_faulted: CounterId,
+    pub chaos_node_events: CounterId,
+    // Graceful degradation: recovery paths taken (how the run coped).
+    pub monitor_read_retries: CounterId,
+    pub monitor_stale_served: CounterId,
+    pub monitor_quarantines: CounterId,
+    pub skip_stale: CounterId,
+    pub skip_offline: CounterId,
+    pub move_faults: CounterId,
+    pub migrate_faults: CounterId,
+    pub evacuations: CounterId,
     // Gauges (last-value).
     pub procs_running: GaugeId,
     pub node_rho_max: GaugeId,
@@ -138,6 +152,18 @@ impl Telemetry {
             skip_already_best: r.counter("skip_already_best"),
             skip_max_moves: r.counter("skip_max_moves"),
             explain_rows: r.counter("explain_rows"),
+            chaos_reads_faulted: r.counter("chaos_reads_faulted"),
+            chaos_pids_vanished: r.counter("chaos_pids_vanished"),
+            chaos_migrations_faulted: r.counter("chaos_migrations_faulted"),
+            chaos_node_events: r.counter("chaos_node_events"),
+            monitor_read_retries: r.counter("monitor_read_retries"),
+            monitor_stale_served: r.counter("monitor_stale_served"),
+            monitor_quarantines: r.counter("monitor_quarantines"),
+            skip_stale: r.counter("skip_stale"),
+            skip_offline: r.counter("skip_offline"),
+            move_faults: r.counter("move_faults"),
+            migrate_faults: r.counter("migrate_faults"),
+            evacuations: r.counter("evacuations"),
             procs_running: r.gauge("procs_running"),
             node_rho_max: r.gauge("node_rho_max"),
             link_rho_max: r.gauge("link_rho_max"),

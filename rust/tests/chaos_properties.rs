@@ -1,0 +1,390 @@
+//! Chaos-engine property tests.
+//!
+//! Three claims the chaos PR stands on, each held under randomized
+//! inputs (shrunk to small reproducing cases by the mini-proptest in
+//! `util::check`):
+//!
+//! * **Byte-inertness** — a run with `chaos = None`, with
+//!   `ChaosConfig::disabled()`, and with a fully-armed storm config
+//!   whose master switch is off all record byte-identical traces: the
+//!   chaos plumbing costs nothing and changes nothing unless enabled.
+//! * **Survival under storm** — the full Monitor → Reporter → Scheduler
+//!   pipeline, wrapped in `FaultyProcSource`/`FaultyControl`, holds the
+//!   placement-ledger oracle after every epoch and the simulator's
+//!   page-conservation ledger at the end, across random seeds and all
+//!   four policies. Faults are reconciled, never double-counted.
+//! * **Parser robustness** — every procfs/sysfs/config parser fed
+//!   arbitrarily truncated, corrupted, or garbage text returns a typed
+//!   error (or skips); it never panics and never fabricates values from
+//!   text it could not parse.
+
+use numasched::chaos::{ChaosConfig, FaultPlan, FaultyControl, FaultyProcSource};
+use numasched::config::{Config, MachineConfig, PolicyKind, SchedulerConfig};
+use numasched::monitor::Monitor;
+use numasched::procfs::{numa_maps, stat, sysnode};
+use numasched::reporter::{Backend, Reporter};
+use numasched::scenario::{catalog, record, record_with_metrics, ScenarioTrace};
+use numasched::scheduler::UserScheduler;
+use numasched::sim::{Machine, Placement, TaskBehavior};
+use numasched::telemetry::Telemetry;
+use numasched::topology::NumaTopology;
+use numasched::util::check::{forall, PropResult};
+use numasched::util::rng::Rng;
+use numasched::workloads::mix;
+
+// ---------------------------------------------------------------------
+// Byte-inertness: disabled chaos must not perturb a single byte.
+// ---------------------------------------------------------------------
+
+#[test]
+fn disabled_chaos_is_byte_inert_at_the_trace_level() {
+    let mut plain = catalog::by_name("chaos-storm").expect("chaos-storm in catalog");
+    plain.params.horizon_ms = 2_500.0;
+    plain.params.chaos = None;
+
+    let mut disabled = plain.clone();
+    disabled.params.chaos = Some(ChaosConfig::disabled());
+
+    // Armed rates but master switch off: the runner must not construct
+    // any wrapper, so rates are irrelevant.
+    let mut disarmed_storm = plain.clone();
+    disarmed_storm.params.chaos = Some(ChaosConfig { enabled: false, ..ChaosConfig::storm(9) });
+
+    let golden = record(&plain);
+    for (label, sc) in [("disabled", &disabled), ("disarmed-storm", &disarmed_storm)] {
+        let ours = record(sc);
+        assert!(
+            ScenarioTrace::diff(&ours, &golden).is_none(),
+            "{label}: trace differs from the chaos-free run"
+        );
+        assert_eq!(ours, golden, "{label}: byte-level mismatch");
+    }
+}
+
+#[test]
+fn storm_traces_are_deterministic_and_seed_sensitive() {
+    let mut sc = catalog::by_name("chaos-storm").expect("chaos-storm in catalog");
+    sc.params.horizon_ms = 2_500.0;
+    sc.params.chaos = Some(ChaosConfig::storm(41));
+
+    let a = record(&sc);
+    let b = record(&sc);
+    assert_eq!(a, b, "same chaos seed must replay bit-identically");
+
+    let mut other = sc.clone();
+    other.params.chaos = Some(ChaosConfig::storm(42));
+    let c = record(&other);
+    assert_ne!(a, c, "different chaos seeds should perturb the run");
+}
+
+#[test]
+fn storm_counters_surface_injection_and_recovery() {
+    let mut sc = catalog::by_name("chaos-storm").expect("chaos-storm in catalog");
+    sc.params.horizon_ms = 4_000.0;
+    sc.params.chaos = Some(ChaosConfig::storm(7));
+
+    let mut tel = Telemetry::new();
+    let (result, _trace) = record_with_metrics(&sc, &mut tel);
+    assert!(result.end_ms > 0.0 && result.end_ms.is_finite());
+
+    let injected = tel.registry.counter_value(tel.ids.chaos_reads_faulted)
+        + tel.registry.counter_value(tel.ids.chaos_pids_vanished)
+        + tel.registry.counter_value(tel.ids.chaos_migrations_faulted);
+    assert!(injected > 0, "a 4s storm must inject at least one fault");
+
+    // Recovery paths must engage: injected read faults imply retries or
+    // stale serves on the monitor side.
+    let recovered = tel.registry.counter_value(tel.ids.monitor_read_retries)
+        + tel.registry.counter_value(tel.ids.monitor_stale_served)
+        + tel.registry.counter_value(tel.ids.monitor_quarantines)
+        + tel.registry.counter_value(tel.ids.move_faults)
+        + tel.registry.counter_value(tel.ids.migrate_faults);
+    assert!(recovered > 0, "degradation layer never engaged under storm");
+}
+
+// ---------------------------------------------------------------------
+// FaultPlan node-lifecycle invariants under random configs.
+// ---------------------------------------------------------------------
+
+#[test]
+fn random_plans_respect_node_lifecycle_invariants() {
+    forall("chaos-node-lifecycle", 0xC4A05, 30, |rng: &mut Rng| -> PropResult {
+        let mut cfg = ChaosConfig::storm(rng.next_u64() | 1);
+        cfg.node_offline_rate = rng.f64() * 0.2;
+        cfg.node_offline_ticks = 1 + rng.below(50) as u64;
+        cfg.validate().map_err(|e| format!("storm-derived config invalid: {e}"))?;
+
+        let nodes = 2 + rng.below(3);
+        let plan = FaultPlan::new(cfg, rng.next_u64(), nodes);
+        for tick in 0..400u64 {
+            let transitions = plan.begin_tick(tick);
+            for tr in &transitions {
+                numasched::prop_assert!(
+                    tr.node != 0,
+                    "tick {tick}: node 0 transitioned (must never go offline)"
+                );
+                numasched::prop_assert!(
+                    tr.node < nodes,
+                    "tick {tick}: transition for out-of-range node {}",
+                    tr.node
+                );
+                // A transition's direction must agree with the plan state
+                // immediately after it fires.
+                numasched::prop_assert!(
+                    plan.is_offline(tr.node) == !tr.online,
+                    "tick {tick}: transition/state disagreement on node {}",
+                    tr.node
+                );
+            }
+            let down = plan.offline_nodes();
+            numasched::prop_assert!(
+                down.len() <= 1,
+                "tick {tick}: {} nodes offline at once",
+                down.len()
+            );
+            numasched::prop_assert!(!plan.is_offline(0), "tick {tick}: node 0 reported offline");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn rejected_configs_never_build_plans() {
+    let mut c = ChaosConfig::storm(1);
+    c.read_drop_rate = 1.5;
+    assert!(c.validate().is_err());
+    let mut c = ChaosConfig::storm(1);
+    c.migrate_partial_rate = f64::NAN;
+    assert!(c.validate().is_err());
+    let mut c = ChaosConfig::storm(1);
+    c.stale_depth = 0;
+    assert!(c.validate().is_err());
+    c.stale_depth = 17;
+    assert!(c.validate().is_err());
+}
+
+// ---------------------------------------------------------------------
+// Survival: pipeline under storm holds the ledger oracle every epoch.
+// ---------------------------------------------------------------------
+
+const POLICIES: [PolicyKind; 4] = [
+    PolicyKind::Proposed,
+    PolicyKind::AutoNuma,
+    PolicyKind::StaticTuning,
+    PolicyKind::Default,
+];
+
+/// Drive the real pipeline through `FaultyProcSource`/`FaultyControl`
+/// and hold the placement ledger to its invariant oracle after every
+/// scheduling epoch, then the simulator's own migration ledger at the
+/// end. Any phantom occupancy from an unreconciled Busy/NoMem/partial
+/// outcome trips the oracle.
+fn storm_pipeline_holds_ledgers(case_seed: u64, policy: PolicyKind) -> PropResult {
+    let mut m = Machine::new(
+        NumaTopology::from_config(&MachineConfig::preset("2node-8core").unwrap()),
+        case_seed,
+    );
+    let mut w = mix::churn_job("w0", 3_000.0);
+    w.behavior.ws_pages = 8_000;
+    m.spawn("w0", w.behavior.clone(), 1.0, 2, Placement::Node(0));
+    m.spawn("w1", w.behavior.clone(), 1.0, 2, Placement::Node(1));
+    m.spawn("daemon", TaskBehavior::mem_bound(f64::INFINITY), 0.3, 1, Placement::Node(0));
+
+    let mut cfg = ChaosConfig::storm(case_seed | 1);
+    // Short run: raise the offline rate so hot-unplug windows actually
+    // open, and shorten them so recovery is exercised too.
+    cfg.node_offline_rate = 0.01;
+    cfg.node_offline_ticks = 30;
+    let plan = FaultPlan::new(cfg, case_seed, m.topo.nodes);
+
+    let monitor = Monitor::discover(&m).map_err(|e| format!("discover: {e}"))?;
+    let mut reporter = Reporter::new(
+        Backend::Cpu,
+        monitor.topo.distance.clone(),
+        m.topo.bandwidth_gbs.clone(),
+    );
+    let sched_cfg = SchedulerConfig { policy, ..SchedulerConfig::default() };
+    let mut sched = UserScheduler::new(&sched_cfg, &m.topo);
+    sched.cooldown_ms = 50.0;
+
+    for tick in 0..600u64 {
+        for tr in plan.begin_tick(tick) {
+            sched.set_node_online(tr.node, tr.online);
+        }
+        m.step();
+        if tick % 10 != 0 {
+            continue;
+        }
+        let snap = {
+            let faulty = FaultyProcSource::new(&m, &plan);
+            monitor.sample(&faulty, m.now_ms)
+        };
+        if let Some(report) = reporter.ingest(&snap) {
+            {
+                let mut faulty_ctl = FaultyControl::new(&mut m, &plan);
+                sched.apply(&report, &mut faulty_ctl);
+            }
+            sched
+                .check_ledger(report.by_speedup.iter().map(|t| t.pid))
+                .map_err(|e| format!("policy {policy:?} tick {tick}: {e}"))?;
+        }
+    }
+
+    // The simulator's own conservation ledger must balance even though
+    // chaos denied and truncated migrations along the way: a partial
+    // outcome reports exactly what moved, nothing more.
+    let per_proc: u64 = m.processes().map(|p| p.pages.migrated_total).sum();
+    numasched::prop_assert!(
+        per_proc == m.total_pages_migrated,
+        "machine ledger {} != per-process sum {per_proc}",
+        m.total_pages_migrated
+    );
+    Ok(())
+}
+
+#[test]
+fn random_storms_hold_ledger_oracle_across_all_policies() {
+    forall("chaos-storm-ledger", 0x57021, 8, |rng: &mut Rng| -> PropResult {
+        let seed = rng.next_u64();
+        let policy = POLICIES[rng.below(POLICIES.len())];
+        storm_pipeline_holds_ledgers(seed, policy)
+    });
+}
+
+// ---------------------------------------------------------------------
+// Parser fuzz: mangled kernel/config text errors, never panics.
+// ---------------------------------------------------------------------
+
+const STAT_LINE: &str = "1234 (apache2) S 1 1234 1234 0 -1 4194560 2549 0 0 0 \
+    731 284 0 0 20 0 12 0 8917 228096000 1432 18446744073709551615 1 1 0 0 0 0 \
+    0 4096 81928 0 0 0 17 7 0 0 0 0 0 0 0 0 0 0 0 0 0";
+
+const MAPS_LINE: &str = "7f1200000000 default anon=100 dirty=100 N0=60 N1=40 kernelpagesize_kB=4";
+
+const MEMINFO: &str = "Node 0 MemTotal:       16777216 kB\n";
+
+const CONFIG_TOML: &str = "[machine]\npreset = \"2node-8core\"\n\n\
+    [chaos]\npreset = \"storm\"\nseed = 7\n";
+
+/// Mangle `text` the way a torn or bit-rotted read would: truncate at a
+/// random char boundary, overwrite random chars, or inject garbage.
+fn mangle(rng: &mut Rng, text: &str) -> String {
+    let mut chars: Vec<char> = text.chars().collect();
+    match rng.below(4) {
+        0 => {
+            // Short read: keep a prefix (possibly empty).
+            chars.truncate(rng.below(chars.len() + 1));
+        }
+        1 => {
+            // Bit rot: overwrite up to 8 positions with printable noise.
+            for _ in 0..rng.below(8) + 1 {
+                if chars.is_empty() {
+                    break;
+                }
+                let i = rng.below(chars.len());
+                chars[i] = (b'!' + rng.below(94) as u8) as char;
+            }
+        }
+        2 => {
+            // Injection: splice garbage into the middle.
+            let i = rng.below(chars.len() + 1);
+            let mut garbage = Vec::new();
+            for _ in 0..rng.below(12) {
+                garbage.push((b'!' + rng.below(94) as u8) as char);
+            }
+            chars.splice(i..i, garbage);
+        }
+        _ => {
+            // Pure noise, no structure at all.
+            chars.clear();
+            for _ in 0..rng.below(64) {
+                chars.push((b' ' + rng.below(95) as u8) as char);
+            }
+        }
+    }
+    chars.into_iter().collect()
+}
+
+#[test]
+fn pristine_fixtures_parse_before_fuzzing() {
+    // The fuzz below is only meaningful if the seeds are valid inputs.
+    assert!(stat::try_parse_view(STAT_LINE).is_ok());
+    assert!(numa_maps::try_parse_line(MAPS_LINE).is_ok());
+    assert!(sysnode::try_parse_cpulist("0-3,8,10-12").is_ok());
+    assert!(sysnode::try_parse_distance_row("10 21").is_ok());
+    assert!(sysnode::try_parse_memtotal_kb(MEMINFO).is_ok());
+    assert!(Config::from_str(CONFIG_TOML).is_ok());
+}
+
+#[test]
+fn fuzzed_stat_lines_error_instead_of_panicking() {
+    forall("fuzz-stat", 0xF5747, 400, |rng: &mut Rng| -> PropResult {
+        let line = mangle(rng, STAT_LINE);
+        if let Err(err) = stat::try_parse_view(&line) {
+            numasched::prop_assert!(err.surface == "stat", "wrong surface {}", err.surface);
+            numasched::prop_assert!(!err.detail.is_empty(), "empty detail");
+        }
+        // The Option face must agree with the Result face.
+        numasched::prop_assert!(
+            stat::parse_view(&line).is_some() == stat::try_parse_view(&line).is_ok(),
+            "parse_view and try_parse_view disagree on {line:?}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn fuzzed_numa_maps_lines_error_instead_of_panicking() {
+    forall("fuzz-numa-maps", 0xF0A25, 400, |rng: &mut Rng| -> PropResult {
+        let line = mangle(rng, MAPS_LINE);
+        if let Err(err) = numa_maps::try_parse_line(&line) {
+            numasched::prop_assert!(err.surface == "numa_maps", "wrong surface {}", err.surface);
+        }
+        // Whole-file parse skips bad lines without panicking, and the
+        // zero-alloc accumulator swallows the same text.
+        let text = format!("{line}\n{MAPS_LINE}\n{line}");
+        let parsed = numa_maps::parse(&text);
+        numasched::prop_assert!(!parsed.vmas.is_empty(), "valid line was dropped");
+        let mut base = [0u64; 2];
+        let mut huge = [0u64; 2];
+        let mut giant = [0u64; 2];
+        numa_maps::accumulate(&text, &mut base, &mut huge, &mut giant);
+        Ok(())
+    });
+}
+
+#[test]
+fn fuzzed_sysfs_text_errors_instead_of_panicking() {
+    forall("fuzz-sysfs", 0x5F5F5, 400, |rng: &mut Rng| -> PropResult {
+        let cpulist = mangle(rng, "0-3,8,10-12");
+        if let Err(err) = sysnode::try_parse_cpulist(&cpulist) {
+            numasched::prop_assert!(err.surface == "cpulist", "wrong surface {}", err.surface);
+        }
+        let distance = mangle(rng, "10 21 31");
+        if let Err(err) = sysnode::try_parse_distance_row(&distance) {
+            numasched::prop_assert!(err.surface == "distance", "wrong surface {}", err.surface);
+        }
+        let meminfo = mangle(rng, MEMINFO);
+        if let Err(err) = sysnode::try_parse_memtotal_kb(&meminfo) {
+            numasched::prop_assert!(err.surface == "meminfo", "wrong surface {}", err.surface);
+        }
+        // Parsers with skip semantics must also survive anything.
+        let _ = sysnode::parse_numastat(&mangle(rng, "numa_hit 100\nnuma_miss 5\n"));
+        let _ = sysnode::parse_fabric_links(&mangle(rng, "0 1 25.6 12800\n1 0 25.6 6400\n"));
+        Ok(())
+    });
+}
+
+#[test]
+fn fuzzed_config_toml_errors_instead_of_panicking() {
+    forall("fuzz-toml", 0x70731, 300, |rng: &mut Rng| -> PropResult {
+        let text = mangle(rng, CONFIG_TOML);
+        // Any outcome but a panic is acceptable; a successful parse of
+        // mangled text must still carry a *valid* chaos config, because
+        // from_str validates before returning.
+        if let Some(chaos) = Config::from_str(&text).ok().and_then(|cfg| cfg.chaos) {
+            chaos.validate().map_err(|e| format!("from_str returned invalid chaos: {e}"))?;
+        }
+        Ok(())
+    });
+}

@@ -24,7 +24,7 @@ use numasched::experiments::runner::{self, RunParams};
 use numasched::monitor::Monitor;
 use numasched::reporter::{Backend, RankedTask, Report, Reporter, Triggers};
 use numasched::scenario::{Event, EventEngine, PidFate, TimedEvent};
-use numasched::scheduler::{MachineControl, UserScheduler};
+use numasched::scheduler::{CtlError, MachineControl, MigrateOutcome, UserScheduler};
 use numasched::sim::{Machine, Placement, TaskBehavior};
 use numasched::topology::NumaTopology;
 use numasched::util::check::{forall, forall_shrunk, PropResult, Shrink};
@@ -330,9 +330,11 @@ fn fork_storm_and_kill_churn_preserve_ledger_invariants() {
 struct NullCtl;
 
 impl MachineControl for NullCtl {
-    fn move_process(&mut self, _pid: i32, _node: usize) {}
-    fn migrate_pages(&mut self, _pid: i32, _node: usize, budget: u64) -> u64 {
-        budget
+    fn move_process(&mut self, _pid: i32, _node: usize) -> Result<(), CtlError> {
+        Ok(())
+    }
+    fn migrate_pages(&mut self, _pid: i32, _node: usize, budget: u64) -> MigrateOutcome {
+        MigrateOutcome::complete(budget)
     }
 }
 
@@ -352,6 +354,7 @@ fn ranked2(pid: i32, comm: &str, node: usize, best: usize, score: f64) -> Ranked
         pages_per_node: vec![1_000, 0],
         huge_2m_per_node: vec![0, 0],
         giant_1g_per_node: vec![0, 0],
+        stale: false,
     }
 }
 
