@@ -150,7 +150,7 @@ mod tests {
             // Strand most memory remotely.
             let p = m.process_mut(pid).unwrap();
             let total = p.pages.total();
-            p.pages.per_node = vec![total * 2 / 5, total - total * 2 / 5, 0, 0];
+            p.pages.per_node_mut().copy_from_slice(&[total * 2 / 5, total - total * 2 / 5, 0, 0]);
         }
         let mut an = AutoNuma::new(10.0, &m.topo);
         for _ in 0..2000 {
@@ -171,7 +171,7 @@ mod tests {
         {
             let p = m.process_mut(pid).unwrap();
             let total = p.pages.total();
-            p.pages.per_node = vec![total / 10, 0, total - total / 10, 0];
+            p.pages.per_node_mut().copy_from_slice(&[total / 10, 0, total - total / 10, 0]);
         }
         let mut an = AutoNuma::new(10.0, &m.topo);
         an.step(&mut m); // immediate scan
@@ -186,7 +186,7 @@ mod tests {
         {
             let p = m.process_mut(pid).unwrap();
             let total = p.pages.total();
-            p.pages.per_node = vec![total / 2, total - total / 2, 0, 0];
+            p.pages.per_node_mut().copy_from_slice(&[total / 2, total - total / 2, 0, 0]);
         }
         let mut an = AutoNuma::new(10.0, &m.topo);
         an.step(&mut m);
@@ -211,7 +211,7 @@ mod tests {
             );
             let p = m.process_mut(pid).unwrap();
             let total = p.pages.total();
-            p.pages.per_node = vec![0, 0, total, 0];
+            p.pages.per_node_mut().copy_from_slice(&[0, 0, total, 0]);
             pids.push(pid);
         }
         let mut an = AutoNuma::new(10.0, &m.topo);
@@ -240,7 +240,7 @@ mod tests {
         {
             let p = m.process_mut(pid).unwrap();
             let total = p.pages.total();
-            p.pages.per_node = vec![0, 0, total, 0];
+            p.pages.per_node_mut().copy_from_slice(&[0, 0, total, 0]);
         }
         let mut an = AutoNuma::new(10.0, &m.topo);
         an.step(&mut m);
@@ -258,7 +258,7 @@ mod tests {
         let pid = m.spawn("w", TaskBehavior::mem_bound(1e9), 1.0, 1, Placement::Node(0));
         {
             let p = m.process_mut(pid).unwrap();
-            p.pages.per_node = vec![500, 500, 0, 0];
+            p.pages.per_node_mut().copy_from_slice(&[500, 500, 0, 0]);
         }
         let mut an = AutoNuma::new(100.0, &m.topo);
         an.step(&mut m); // scan at t=0

@@ -20,6 +20,10 @@ pub struct Cli {
     pub verbose: bool,
     /// Reduced-iteration mode for `bench-suite` (CI smoke).
     pub smoke: bool,
+    /// `bench-suite`: smoke iterations plus a hard post-run validation
+    /// of the scale tier (fleet dimensions, epoch-cache hits, sweep
+    /// bit-identity) — the CI arm that guards the fleet-scale paths.
+    pub scale_smoke: bool,
     /// Output file override (`bench-suite` writes BENCH_PERF.json here;
     /// `scenario record <name>` honors it for a single trace).
     pub out: Option<PathBuf>,
@@ -82,6 +86,9 @@ FLAGS:
     --artifacts <dir>    artifact directory (default: artifacts)
     --csv                emit CSV instead of an ASCII table
     --smoke              bench-suite: reduced iterations (CI smoke mode)
+    --scale-smoke        bench-suite: smoke mode + validate the 64node-fleet
+                         scale tier (epoch-cache hits, sweep bit-identity);
+                         exits nonzero when the tier is unhealthy
     --out <file>         bench-suite: output path (default BENCH_PERF.json)
     --golden-dir <dir>   scenario: golden-trace dir (default rust/tests/golden)
     --metrics-out <file> write the metrics stream (numasched-metrics/v1 JSONL)
@@ -129,6 +136,10 @@ pub fn parse(args: &[String]) -> Result<Cli, String> {
             "--artifacts" => cli.artifacts_dir = Some(value("--artifacts")?),
             "--csv" => cli.csv = true,
             "--smoke" => cli.smoke = true,
+            "--scale-smoke" => {
+                cli.smoke = true;
+                cli.scale_smoke = true;
+            }
             "--out" => cli.out = Some(PathBuf::from(value("--out")?)),
             "--golden-dir" => {
                 cli.golden_dir = Some(PathBuf::from(value("--golden-dir")?))
@@ -243,7 +254,15 @@ mod tests {
         let c = parse(&argv("bench-suite --smoke --out perf/B.json")).unwrap();
         assert_eq!(c.command, "bench-suite");
         assert!(c.smoke);
+        assert!(!c.scale_smoke);
         assert_eq!(c.out, Some(PathBuf::from("perf/B.json")));
         assert!(parse(&argv("bench-suite --out")).is_err());
+    }
+
+    #[test]
+    fn scale_smoke_implies_smoke() {
+        let c = parse(&argv("bench-suite --scale-smoke")).unwrap();
+        assert!(c.scale_smoke);
+        assert!(c.smoke, "--scale-smoke must imply reduced iterations");
     }
 }

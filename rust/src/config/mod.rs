@@ -245,6 +245,24 @@ impl MachineConfig {
                 },
                 fabric: None,
             }),
+            // A fleet-scale box for the sharded hot loop: 64 slim nodes
+            // x 4 cores, modest per-node bandwidth. Far beyond the AOT
+            // pack path's NMAX, so runs here use the baseline/static
+            // policies (config validation enforces this); the point is
+            // exercising the simulator, monitor, and sweep scheduler at
+            // 256 cores and ten-thousand-pid populations.
+            "64node-fleet" => Some(Self {
+                preset: name.into(),
+                nodes: 64,
+                cores_per_node: 4,
+                mem_gib_per_node: 4.0,
+                bandwidth_gbs: 16.0,
+                bandwidth_gbs_per_node: None,
+                remote_distance: 21.0,
+                distance: None,
+                mem: MemConfig::default(),
+                fabric: None,
+            }),
             _ => None,
         }
     }
@@ -420,9 +438,17 @@ impl Config {
         if self.machine.nodes == 0 || self.machine.cores_per_node == 0 {
             return cfg_err("machine must have nodes and cores");
         }
-        if self.machine.nodes > crate::runtime::pack::NMAX {
+        // The AOT pack path sizes its buffers for NMAX nodes, but only
+        // the Proposed policy's Reporter runs through it — baseline and
+        // static policies have no packed-report stage, so fleet-scale
+        // machines (e.g. the 64node-fleet preset) are valid under them.
+        if self.scheduler.policy == PolicyKind::Proposed
+            && self.machine.nodes > crate::runtime::pack::NMAX
+        {
             return cfg_err(format!(
-                "machine.nodes {} exceeds AOT NMAX {}",
+                "machine.nodes {} exceeds AOT NMAX {} (required by the \
+                 Proposed policy's packed-report path; pick a baseline \
+                 or static policy for larger machines)",
                 self.machine.nodes,
                 crate::runtime::pack::NMAX
             ));
@@ -869,7 +895,26 @@ mod tests {
 
     #[test]
     fn validation_rejects_too_many_nodes() {
+        // The default (Proposed) policy runs the packed-report path.
         assert!(Config::from_str("[machine]\nnodes = 9").is_err());
+    }
+
+    #[test]
+    fn fleet_preset_is_valid_under_non_proposed_policies() {
+        let mc = MachineConfig::preset("64node-fleet").unwrap();
+        assert_eq!((mc.nodes, mc.cores_per_node), (64, 4));
+        crate::topology::NumaTopology::from_config(&mc).validate().unwrap();
+        // NMAX only binds the Proposed policy's packed-report path.
+        let mut cfg = Config::default();
+        cfg.machine = mc;
+        cfg.scheduler.policy = PolicyKind::Proposed;
+        assert!(cfg.validate().is_err(), "Proposed still NMAX-bound");
+        for p in [PolicyKind::Default, PolicyKind::AutoNuma, PolicyKind::StaticTuning] {
+            cfg.scheduler.policy = p;
+            cfg.validate().unwrap_or_else(|e| {
+                panic!("64node-fleet must validate under {p:?}: {e:?}")
+            });
+        }
     }
 
     #[test]
@@ -1015,7 +1060,14 @@ mod tests {
         assert_eq!(fab.links(), 8, "8-node ring");
         assert_eq!(fab.graph.links()[0].bandwidth_gbs, 6.0);
         // The non-fabric presets stay fabric-less (bit-identity guard).
-        for name in ["r910-40core", "r910-thp", "2node-8core", "8node-64core", "8node-hetero"] {
+        for name in [
+            "r910-40core",
+            "r910-thp",
+            "2node-8core",
+            "8node-64core",
+            "8node-hetero",
+            "64node-fleet",
+        ] {
             let mc = MachineConfig::preset(name).unwrap();
             assert!(mc.fabric.is_none(), "{name} must not grow a fabric");
         }

@@ -19,7 +19,13 @@
 //!   observe cost per op with its steady-state allocation count (the
 //!   registry's zero-alloc claim, proved the same way as the monitor
 //!   round trip), and the per-epoch JSONL render cost (the telemetry
-//!   edge, where allocation is allowed).
+//!   edge, where allocation is allowed);
+//! * **scale** — the fleet tier: the `64node-fleet` preset under a
+//!   ten-thousand-pid synthetic population (smoke shrinks it), with
+//!   per-tick cost, the monitor's cold full pass vs its epoch-served
+//!   incremental pass, and the work-stealing sweep pool vs a serial
+//!   pass over fleet-sized runner cells (with the `identical` flag
+//!   re-proving bit-identity at that scale).
 //!
 //! Smoke mode shrinks every iteration count so the whole suite runs in
 //! seconds (CI); full mode is for real measurements.
@@ -59,6 +65,57 @@ pub struct BenchReport {
     pub metrics_hot_allocs_per_op: f64,
     pub metrics_epoch_renders: usize,
     pub metrics_epoch_render_ns: f64,
+    pub scale_nodes: usize,
+    pub scale_pids: usize,
+    pub scale_ticks: usize,
+    pub scale_ns_per_tick: f64,
+    pub scale_monitor_full_ms: f64,
+    pub scale_monitor_incr_ms: f64,
+    pub scale_monitor_incr_speedup: f64,
+    pub scale_monitor_incr_hits: u64,
+    pub scale_sweep_cells: usize,
+    pub scale_sweep_workers: usize,
+    pub scale_sweep_serial_ms: f64,
+    pub scale_sweep_parallel_ms: f64,
+    pub scale_sweep_speedup: f64,
+    pub scale_sweep_identical: bool,
+}
+
+/// Two results agree bit-for-bit on everything the report carries.
+fn results_identical(a: &[runner::RunResult], b: &[runner::RunResult]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(a, b)| {
+            a.end_ms == b.end_ms
+                && a.total_migrations == b.total_migrations
+                && a.total_pages_migrated == b.total_pages_migrated
+                && a.procs.len() == b.procs.len()
+                && a.procs.iter().zip(&b.procs).all(|(x, y)| {
+                    x.runtime_ms == y.runtime_ms && x.mean_speed == y.mean_speed
+                })
+        })
+}
+
+/// Fleet cells for the scale tier: the `64node-fleet` preset under the
+/// synthetic fleet population, one cell per policy x seed. Policies
+/// stay off the Proposed path (64 nodes exceed the AOT pack NMAX);
+/// AutoNuma keeps page migration — and with it epoch invalidation —
+/// live at fleet scale.
+fn fleet_sweep_grid(horizon_ms: f64, pids: usize) -> Vec<RunParams> {
+    let mut cells = Vec::new();
+    for &policy in &[PolicyKind::Default, PolicyKind::AutoNuma] {
+        for seed in [1u64, 2, 3, 4] {
+            cells.push(RunParams {
+                machine: MachineConfig::preset("64node-fleet").expect("preset"),
+                scheduler: SchedulerConfig { policy, ..Default::default() },
+                specs: crate::workloads::mix::fleet_mix(pids),
+                seed,
+                horizon_ms,
+                window_ms: 100.0,
+                ..Default::default()
+            });
+        }
+    }
+    cells
 }
 
 fn sweep_grid(horizon_ms: f64) -> Vec<RunParams> {
@@ -130,16 +187,7 @@ pub fn run(smoke: bool) -> BenchReport {
     let t0 = Instant::now();
     let parallel = sweep::run_many(&cells);
     let sweep_parallel_ms = t0.elapsed().as_secs_f64() * 1e3;
-    let sweep_identical = serial.len() == parallel.len()
-        && serial.iter().zip(&parallel).all(|(a, b)| {
-            a.end_ms == b.end_ms
-                && a.total_migrations == b.total_migrations
-                && a.total_pages_migrated == b.total_pages_migrated
-                && a.procs.len() == b.procs.len()
-                && a.procs.iter().zip(&b.procs).all(|(x, y)| {
-                    x.runtime_ms == y.runtime_ms && x.mean_speed == y.mean_speed
-                })
-        });
+    let sweep_identical = results_identical(&serial, &parallel);
 
     // --- telemetry hot path: inc + observe, then the epoch render ------
     let hot_ops = if smoke { 20_000 } else { 1_000_000 };
@@ -169,6 +217,55 @@ pub fn run(smoke: bool) -> BenchReport {
     }
     let metrics_epoch_render_ns = t0.elapsed().as_nanos() as f64 / epoch_renders as f64;
 
+    // --- scale tier: 64node-fleet under a fleet-sized population -------
+    let scale_pids = if smoke { 600 } else { 10_000 };
+    let scale_ticks = if smoke { 20 } else { 200 };
+    let fleet_topo = NumaTopology::from_config(
+        &MachineConfig::preset("64node-fleet").expect("preset"),
+    );
+    let mut fleet = Machine::new(fleet_topo, 17);
+    for s in crate::workloads::mix::fleet_mix(scale_pids) {
+        fleet.spawn(&s.comm, s.behavior, s.importance, s.threads, Placement::LeastLoaded);
+    }
+    for _ in 0..3 {
+        fleet.step(); // warm the per-tick scratch and node shards
+    }
+    let t0 = Instant::now();
+    for _ in 0..scale_ticks {
+        fleet.step();
+    }
+    let scale_ns_per_tick = t0.elapsed().as_nanos() as f64 / scale_ticks as f64;
+    // Monitor at fleet population: the cold full pass (render + parse +
+    // aggregate for every pid) vs the epoch-served incremental pass.
+    let fleet_mon = Monitor::discover(&fleet).expect("discover fleet topology");
+    let mut fleet_snap = Snapshot::default();
+    let mut fleet_bufs = SampleBufs::new();
+    let t0 = Instant::now();
+    fleet_mon.sample_into(&fleet, fleet.now_ms, &mut fleet_snap, &mut fleet_bufs);
+    let scale_monitor_full_ms = t0.elapsed().as_secs_f64() * 1e3;
+    // One warm pass settles buffer capacities before timing the hits.
+    fleet_mon.sample_into(&fleet, fleet.now_ms, &mut fleet_snap, &mut fleet_bufs);
+    let incr_passes = if smoke { 3 } else { 10 };
+    let t0 = Instant::now();
+    for _ in 0..incr_passes {
+        fleet_mon.sample_into(&fleet, fleet.now_ms, &mut fleet_snap, &mut fleet_bufs);
+    }
+    let scale_monitor_incr_ms = t0.elapsed().as_secs_f64() * 1e3 / incr_passes as f64;
+    let scale_monitor_incr_hits = fleet_mon.incr_hits();
+    // Work-stealing sweep vs serial over fleet cells, bit-identical.
+    let scale_sweep_workers = 4;
+    let fleet_cells = fleet_sweep_grid(
+        if smoke { 250.0 } else { 2_000.0 },
+        if smoke { 48 } else { 400 },
+    );
+    let t0 = Instant::now();
+    let fleet_serial: Vec<_> = fleet_cells.iter().map(runner::run).collect();
+    let scale_sweep_serial_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t0 = Instant::now();
+    let fleet_parallel = sweep::map_with(&fleet_cells, scale_sweep_workers, runner::run);
+    let scale_sweep_parallel_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let scale_sweep_identical = results_identical(&fleet_serial, &fleet_parallel);
+
     BenchReport {
         smoke,
         allocs_counted: alloc_counter::counting_enabled(),
@@ -193,6 +290,28 @@ pub fn run(smoke: bool) -> BenchReport {
         metrics_hot_allocs_per_op,
         metrics_epoch_renders: epoch_renders,
         metrics_epoch_render_ns,
+        scale_nodes: fleet.topo.nodes,
+        scale_pids,
+        scale_ticks,
+        scale_ns_per_tick,
+        scale_monitor_full_ms,
+        scale_monitor_incr_ms,
+        scale_monitor_incr_speedup: if scale_monitor_incr_ms > 0.0 {
+            scale_monitor_full_ms / scale_monitor_incr_ms
+        } else {
+            0.0
+        },
+        scale_monitor_incr_hits,
+        scale_sweep_cells: fleet_cells.len(),
+        scale_sweep_workers,
+        scale_sweep_serial_ms,
+        scale_sweep_parallel_ms,
+        scale_sweep_speedup: if scale_sweep_parallel_ms > 0.0 {
+            scale_sweep_serial_ms / scale_sweep_parallel_ms
+        } else {
+            0.0
+        },
+        scale_sweep_identical,
     }
 }
 
@@ -247,6 +366,47 @@ impl BenchReport {
             "    \"epoch_render_ns\": {:.1}",
             self.metrics_epoch_render_ns
         );
+        let _ = writeln!(s, "  }},");
+        let _ = writeln!(s, "  \"scale\": {{");
+        let _ = writeln!(s, "    \"preset\": \"64node-fleet\",");
+        let _ = writeln!(s, "    \"nodes\": {},", self.scale_nodes);
+        let _ = writeln!(s, "    \"pids\": {},", self.scale_pids);
+        let _ = writeln!(s, "    \"ticks\": {},", self.scale_ticks);
+        let _ = writeln!(s, "    \"ns_per_tick\": {:.1},", self.scale_ns_per_tick);
+        let _ = writeln!(
+            s,
+            "    \"monitor_full_ms\": {:.3},",
+            self.scale_monitor_full_ms
+        );
+        let _ = writeln!(
+            s,
+            "    \"monitor_incr_ms\": {:.3},",
+            self.scale_monitor_incr_ms
+        );
+        let _ = writeln!(
+            s,
+            "    \"monitor_incr_speedup\": {:.2},",
+            self.scale_monitor_incr_speedup
+        );
+        let _ = writeln!(
+            s,
+            "    \"monitor_incr_hits\": {},",
+            self.scale_monitor_incr_hits
+        );
+        let _ = writeln!(s, "    \"sweep_cells\": {},", self.scale_sweep_cells);
+        let _ = writeln!(s, "    \"sweep_workers\": {},", self.scale_sweep_workers);
+        let _ = writeln!(
+            s,
+            "    \"sweep_serial_ms\": {:.2},",
+            self.scale_sweep_serial_ms
+        );
+        let _ = writeln!(
+            s,
+            "    \"sweep_parallel_ms\": {:.2},",
+            self.scale_sweep_parallel_ms
+        );
+        let _ = writeln!(s, "    \"sweep_speedup\": {:.3},", self.scale_sweep_speedup);
+        let _ = writeln!(s, "    \"sweep_identical\": {}", self.scale_sweep_identical);
         let _ = writeln!(s, "  }}");
         let _ = writeln!(s, "}}");
         s
@@ -273,11 +433,31 @@ mod tests {
                 "registry hot path must not allocate"
             );
         }
+        // The scale tier: fleet preset dimensions, a warm monitor that
+        // actually served from the epoch cache, and bit-identity under
+        // the work-stealing pool.
+        assert_eq!(r.scale_nodes, 64);
+        assert!(r.scale_pids >= 500);
+        assert!(r.scale_ns_per_tick > 0.0);
+        assert!(r.scale_monitor_full_ms > 0.0 && r.scale_monitor_incr_ms > 0.0);
+        assert!(
+            r.scale_monitor_incr_hits >= r.scale_pids as u64,
+            "warm fleet passes must hit the epoch cache: {} hits",
+            r.scale_monitor_incr_hits
+        );
+        assert!(r.scale_sweep_workers >= 4);
+        assert!(
+            r.scale_sweep_identical,
+            "work-stealing fleet sweep must match serial"
+        );
         let json = r.to_json();
         assert!(json.contains("\"schema\": \"numasched-bench-perf/v1\""));
         assert!(json.contains("\"allocs_per_sample\""));
         assert!(json.contains("\"identical\": true"));
         assert!(json.contains("\"hot_allocs_per_op\""));
+        assert!(json.contains("\"preset\": \"64node-fleet\""));
+        assert!(json.contains("\"sweep_identical\": true"));
+        assert!(json.contains("\"monitor_incr_speedup\""));
         // Balanced braces (cheap well-formedness proxy without a JSON
         // parser in the dependency-free crate).
         assert_eq!(

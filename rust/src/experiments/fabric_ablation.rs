@@ -113,7 +113,7 @@ pub fn run_point(hot_link_gbs: f64, fabric_aware: bool, seed: u64) -> AblationPo
         let total = p.pages.total();
         let mut v = vec![0; 8];
         v[1] = total;
-        p.pages.per_node = v;
+        p.pages.per_node_mut().copy_from_slice(&v);
     }
 
     // The pipeline, reading text only.

@@ -66,10 +66,10 @@ pub fn run_point(thp_fraction: f64, seed: u64) -> AblationPoint {
         // victim's memory on node 0, as if it had faulted in there
         // before the OS balancer dragged its threads away.
         let p = m.process_mut(victim).unwrap();
-        let base: u64 = p.pages.per_node.iter().sum();
-        let huge: u64 = p.pages.huge_2m.iter().sum();
-        p.pages.per_node = vec![base, 0, 0, 0];
-        p.pages.huge_2m = vec![huge, 0, 0, 0];
+        let base: u64 = p.pages.per_node().iter().sum();
+        let huge: u64 = p.pages.huge_2m().iter().sum();
+        p.pages.per_node_mut().copy_from_slice(&[base, 0, 0, 0]);
+        p.pages.huge_2m_mut().copy_from_slice(&[huge, 0, 0, 0]);
     }
     // A hot co-runner keeps node 0's controller busy.
     m.spawn("hog", TaskBehavior::mem_bound(1e12), 0.5, 2, Placement::Node(0));

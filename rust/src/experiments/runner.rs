@@ -679,6 +679,10 @@ fn emit_metrics_epoch(
             .set_counter(tel.ids.monitor_stale_served, monitor.stale_serves());
         tel.registry
             .set_counter(tel.ids.monitor_quarantines, monitor.quarantine_entries());
+        tel.registry
+            .set_counter(tel.ids.monitor_incr_hits, monitor.incr_hits());
+        tel.registry
+            .set_counter(tel.ids.monitor_incr_misses, monitor.incr_misses());
         let st = scheduler.stats;
         tel.registry.set_counter(tel.ids.moves_pin, st.pin_moves);
         tel.registry.set_counter(tel.ids.moves_speedup, st.speedup_moves);

@@ -1,40 +1,56 @@
-//! Deterministic parallel sweep runner.
+//! Deterministic parallel sweep runner — work-stealing edition.
 //!
 //! Every experiment is a grid of independent cells — (policy, seed,
 //! param) tuples that each boot their own simulated machine — yet the
 //! seed harness ran them strictly serially. This module fans cells out
-//! over a `std::thread` worker pool (zero new dependencies) while
-//! keeping results **bit-identical to serial execution**:
+//! over a `std::thread` work-stealing pool (zero new dependencies)
+//! while keeping results **bit-identical to serial execution**:
 //!
 //! * each cell is self-contained (own `Machine`, own `Rng` seeded from
 //!   the cell's seed), so thread interleaving cannot leak into results;
-//! * workers pull cells from an atomic cursor but write results into
-//!   per-cell slots, so the output order is the input order no matter
-//!   which worker finishes first;
+//! * cell ids are dealt to per-worker deques in contiguous chunks;
+//!   workers pop their own deque from the back (freshest chunk stays
+//!   cache-hot) and steal half a victim's deque from the front when
+//!   empty, so a worker stuck on one slow cell — a 64-node fleet run
+//!   next to a 2-node smoke — no longer idles the rest of the grid the
+//!   way the old single atomic cursor's tail did;
+//! * workers accumulate `(id, result)` pairs privately and the pool
+//!   stitches them into input order afterwards — no per-cell mutex
+//!   slot, no result lock traffic at all on the hot path;
 //! * a worker panic propagates out of [`map`] (via `std::thread::scope`)
 //!   instead of silently dropping cells.
 //!
-//! Determinism rule for new cells: a cell function must derive all
-//! randomness from its input (seed), never from wall clock, thread id,
-//! or shared mutable state.
+//! Scheduling order is *not* deterministic — which worker runs which
+//! cell depends on timing — but that is invisible by construction: the
+//! output vector is ordered by input id, and cells share no mutable
+//! state. Determinism rule for new cells: a cell function must derive
+//! all randomness from its input (seed), never from wall clock, thread
+//! id, or shared mutable state.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::collections::VecDeque;
+use std::sync::{Mutex, OnceLock};
 
 use super::runner::{self, RunParams, RunResult};
 
 /// Worker-pool width: `NUMASCHED_SWEEP_THREADS` overrides (0/garbage
-/// ignored), else the machine's available parallelism.
+/// ignored), else the machine's available parallelism. Resolved **once
+/// per process** (`OnceLock`): nested and keyed sweeps were paying an
+/// env read + parse + `available_parallelism` syscall on every `map`
+/// call. Tests that need a specific width use [`map_with`] — changing
+/// the env var after the first call has no effect by design.
 pub fn max_threads() -> usize {
-    std::env::var("NUMASCHED_SWEEP_THREADS")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&n| n > 0)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1)
-        })
+    static MAX_THREADS: OnceLock<usize> = OnceLock::new();
+    *MAX_THREADS.get_or_init(|| {
+        std::env::var("NUMASCHED_SWEEP_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            })
+    })
 }
 
 /// Run `f` over every item on the worker pool; results come back in
@@ -47,6 +63,41 @@ where
     F: Fn(&T) -> R + Sync,
 {
     map_with(items, max_threads(), f)
+}
+
+/// Pop one task id for worker `me`: own deque's back first (LIFO keeps
+/// the freshest dealt chunk hot), else steal half of the first
+/// non-empty victim's deque from the *front* (the opposite end, so an
+/// active owner and its thief rarely contend on the same tasks). The
+/// stolen surplus is re-queued on `me`'s own deque after the victim's
+/// lock is released — the two locks are never held together, so there
+/// is no lock-order cycle.
+fn pop_task(deques: &[Mutex<VecDeque<usize>>], me: usize) -> Option<usize> {
+    if let Some(i) = deques[me].lock().unwrap().pop_back() {
+        return Some(i);
+    }
+    let k = deques.len();
+    for off in 1..k {
+        let victim = (me + off) % k;
+        let mut grabbed: Vec<usize> = Vec::new();
+        {
+            let mut q = deques[victim].lock().unwrap();
+            let take = q.len().div_ceil(2);
+            for _ in 0..take {
+                grabbed.push(q.pop_front().unwrap());
+            }
+        }
+        if let Some((&first, rest)) = grabbed.split_first() {
+            let mut own = deques[me].lock().unwrap();
+            // Preserve front-to-back age order so our own back pop
+            // takes the newest stolen task first.
+            own.extend(rest.iter().copied());
+            return Some(first);
+        }
+    }
+    // Every deque is empty: all tasks are claimed (tasks are dealt up
+    // front and never re-queued once popped), so this worker is done.
+    None
 }
 
 /// [`map`] with an explicit worker count (tests pin it without touching
@@ -65,23 +116,54 @@ where
     if workers <= 1 || n == 1 {
         return items.iter().map(f).collect();
     }
-    let cursor = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = f(&items[i]);
-                *slots[i].lock().unwrap() = Some(r);
-            });
+    // Deal contiguous chunks round-robin so initial ownership is
+    // balanced and neighbouring cells (often similar cost) spread out.
+    // ~4 chunks per worker leaves enough granularity to steal.
+    let chunk = n.div_ceil(workers * 4).max(1);
+    let deques: Vec<Mutex<VecDeque<usize>>> =
+        (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+    {
+        let mut start = 0usize;
+        let mut w = 0usize;
+        while start < n {
+            let end = (start + chunk).min(n);
+            deques[w].lock().unwrap().extend(start..end);
+            w = (w + 1) % workers;
+            start = end;
         }
+    }
+    let per_worker: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|me| {
+                let deques = &deques;
+                let f = &f;
+                scope.spawn(move || {
+                    let mut out: Vec<(usize, R)> = Vec::new();
+                    while let Some(i) = pop_task(deques, me) {
+                        out.push((i, f(&items[i])));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(v) => v,
+                Err(e) => std::panic::resume_unwind(e),
+            })
+            .collect()
     });
+    // Stitch private result vecs back into input order.
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    for (i, r) in per_worker.into_iter().flatten() {
+        debug_assert!(slots[i].is_none(), "cell {i} produced twice");
+        slots[i] = Some(r);
+    }
     slots
         .into_iter()
-        .map(|s| s.into_inner().unwrap().expect("worker filled every slot"))
+        .map(|s| s.expect("every cell claimed exactly once"))
         .collect()
 }
 
@@ -125,6 +207,46 @@ mod tests {
         let empty: Vec<u32> = Vec::new();
         assert!(map(&empty, |&x| x).is_empty());
         assert_eq!(map(&[7u32], |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn map_with_preserves_order_under_uneven_load() {
+        // Wildly skewed per-item cost plus more items than chunks can
+        // evenly cover: forces real stealing, output must still be in
+        // input order for every worker count.
+        let items: Vec<u64> = (0..203).collect();
+        let expect: Vec<u64> = items.iter().map(|&x| x * 3 + 1).collect();
+        for workers in [2, 3, 5, 8] {
+            let out = map_with(&items, workers, |&x| {
+                if x % 17 == 0 {
+                    // A handful of slow cells pin whole chunks on one
+                    // worker; the rest must get stolen away.
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                x * 3 + 1
+            });
+            assert_eq!(out, expect, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn map_with_propagates_worker_panic() {
+        let items: Vec<u32> = (0..64).collect();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            map_with(&items, 4, |&x| {
+                assert_ne!(x, 41, "boom");
+                x
+            })
+        }));
+        assert!(caught.is_err(), "panic in a worker must propagate");
+    }
+
+    #[test]
+    fn max_threads_is_cached_and_positive() {
+        let a = max_threads();
+        let b = max_threads();
+        assert!(a >= 1);
+        assert_eq!(a, b, "OnceLock: same answer for the process lifetime");
     }
 
     fn quick_cell(policy: PolicyKind, seed: u64) -> RunParams {

@@ -286,6 +286,33 @@ fn cmd_bench_suite(cli: &Cli) -> i32 {
         );
         return 1;
     }
+    if !report.scale_sweep_identical {
+        eprintln!("error: fleet-scale work-stealing sweep diverged from serial");
+        return 1;
+    }
+    if cli.scale_smoke {
+        // The scale-tier CI arm: fail loudly when the fleet paths are
+        // unhealthy rather than letting the numbers drift quietly.
+        if report.scale_nodes != 64 {
+            eprintln!("error: scale tier ran on {} nodes, want 64", report.scale_nodes);
+            return 1;
+        }
+        if report.scale_monitor_incr_hits < report.scale_pids as u64 {
+            eprintln!(
+                "error: warm fleet monitor passes served only {} epoch-cache hits \
+                 for {} pids — the incremental path is not engaging",
+                report.scale_monitor_incr_hits, report.scale_pids
+            );
+            return 1;
+        }
+        if report.scale_sweep_workers < 4 || report.scale_sweep_speedup <= 0.0 {
+            eprintln!(
+                "error: fleet sweep ran {} workers at speedup {:.3}",
+                report.scale_sweep_workers, report.scale_sweep_speedup
+            );
+            return 1;
+        }
+    }
     0
 }
 
@@ -610,6 +637,8 @@ fn cmd_chaos(cli: &Cli) -> i32 {
                 ("move_faults", tel.ids.move_faults),
                 ("migrate_faults", tel.ids.migrate_faults),
                 ("evacuations", tel.ids.evacuations),
+                ("monitor_incr_hits", tel.ids.monitor_incr_hits),
+                ("monitor_incr_misses", tel.ids.monitor_incr_misses),
             ];
             let mut t = Table::new("fault + recovery counters", &["counter", "value"]);
             for (name, id) in counters {

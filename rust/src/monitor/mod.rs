@@ -63,6 +63,12 @@ struct PidHealth {
     quarantined_for: u32,
     /// Consecutive last-good serves since the last success.
     stale_served: u32,
+    /// Page-map epoch (`(generation, fingerprint)`) the cached
+    /// `last_good` page vectors were aggregated at, when the source
+    /// advertises epochs. An unchanged epoch lets the next pass skip
+    /// the numa_maps render *and* re-aggregation and copy the cached
+    /// vectors — the incremental-snapshot fast path.
+    pages_epoch: Option<(u64, u64)>,
 }
 
 /// Outcome of one attempt to read a pid's stat + numa_maps.
@@ -95,6 +101,13 @@ pub struct Monitor {
     stale_serves: Cell<u64>,
     /// Cumulative quarantine entries (telemetry: `monitor_quarantines`).
     quarantines: Cell<u64>,
+    /// Incremental-snapshot counters: pids whose unchanged page-map
+    /// epoch let a pass skip numa_maps entirely (`incr_hits`) vs pids
+    /// that needed a full read from an epoch-advertising source
+    /// (`incr_misses`). Both stay 0 on sources without epochs.
+    /// Telemetry: `monitor_incr_hits` / `monitor_incr_misses`.
+    incr_hits: Cell<u64>,
+    incr_misses: Cell<u64>,
 }
 
 impl Monitor {
@@ -110,6 +123,8 @@ impl Monitor {
             read_retries: Cell::new(0),
             stale_serves: Cell::new(0),
             quarantines: Cell::new(0),
+            incr_hits: Cell::new(0),
+            incr_misses: Cell::new(0),
         })
     }
 
@@ -131,6 +146,58 @@ impl Monitor {
     /// Cumulative flap-quarantine entries.
     pub fn quarantine_entries(&self) -> u64 {
         self.quarantines.get()
+    }
+
+    /// Cumulative incremental-snapshot hits (unchanged epoch — pid's
+    /// numa_maps read and aggregation skipped).
+    pub fn incr_hits(&self) -> u64 {
+        self.incr_hits.get()
+    }
+
+    /// Cumulative incremental-snapshot misses (epoch-advertising
+    /// source, but the pid needed a full numa_maps read).
+    pub fn incr_misses(&self) -> u64 {
+        self.incr_misses.get()
+    }
+
+    /// The incremental fast path: when the source advertises a
+    /// numa_maps epoch for `pid` and it matches the epoch the cached
+    /// last-good sample was aggregated at, copy the cached page
+    /// vectors into `task` (capacity-reusing) and skip the render +
+    /// re-aggregation entirely. Stat-derived fields stay fresh — the
+    /// caller already wrote them. Returns true when served.
+    ///
+    /// Bit-identical by construction: an unchanged `(generation,
+    /// fingerprint)` pair means the page map's content is what it was
+    /// when the cached vectors were aggregated from the full render,
+    /// so a fresh read would reproduce them byte for byte.
+    fn try_incremental_pages(
+        &self,
+        epoch: Option<(u64, u64)>,
+        pid: i32,
+        task: &mut TaskSample,
+    ) -> bool {
+        let Some(e) = epoch else { return false };
+        let map = self.health.borrow();
+        let Some(h) = map.get(&pid) else { return false };
+        if h.pages_epoch != Some(e) {
+            return false;
+        }
+        let Some(good) = h.last_good.as_ref() else { return false };
+        task.pages_per_node.clone_from(&good.pages_per_node);
+        task.huge_2m_per_node.clone_from(&good.huge_2m_per_node);
+        task.giant_1g_per_node.clone_from(&good.giant_1g_per_node);
+        self.incr_hits.set(self.incr_hits.get() + 1);
+        true
+    }
+
+    /// A full read completed against an epoch-advertising source:
+    /// remember the epoch the page vectors were aggregated at.
+    fn note_full_read(&self, epoch: Option<(u64, u64)>, pid: i32) {
+        if let Some(e) = epoch {
+            self.health.borrow_mut().entry(pid).or_default().pages_epoch = Some(e);
+            self.incr_misses.set(self.incr_misses.get() + 1);
+        }
     }
 
     #[inline]
@@ -304,15 +371,30 @@ impl Monitor {
         {
             return PidRead::Filtered;
         }
-        let (pages_per_node, huge_2m_per_node, giant_1g_per_node) =
+        // Stat-derived fields are always fresh; only the page vectors
+        // are eligible for the incremental fast path below.
+        let mut task = TaskSample {
+            pid: ps.pid,
+            comm: ps.comm,
+            node: self.topo.node_of_core(ps.processor.max(0) as usize),
+            threads: ps.num_threads,
+            cpu_ms: ps.utime + ps.stime,
+            rss_pages: ps.rss.max(0) as u64,
+            pages_per_node: Vec::new(),
+            huge_2m_per_node: Vec::new(),
+            giant_1g_per_node: Vec::new(),
+            stale_ticks: 0,
+        };
+        let epoch = source.numa_maps_epoch(pid);
+        if !self.try_incremental_pages(epoch, pid, &mut task) {
             match source.read_numa_maps(pid) {
                 Some(text) => {
                     let maps = numa_maps::parse(&text);
-                    (
-                        maps.pages_per_node(self.topo.nodes),
-                        maps.huge_pages_per_node(self.topo.nodes, 2048),
-                        maps.huge_pages_per_node(self.topo.nodes, 1_048_576),
-                    )
+                    task.pages_per_node = maps.pages_per_node(self.topo.nodes);
+                    task.huge_2m_per_node =
+                        maps.huge_pages_per_node(self.topo.nodes, 2048);
+                    task.giant_1g_per_node =
+                        maps.huge_pages_per_node(self.topo.nodes, 1_048_576);
                 }
                 // numa_maps can be absent for two very different
                 // reasons: the kernel has no CONFIG_NUMA, or the pid
@@ -329,25 +411,15 @@ impl Monitor {
                     if source.read_stat(pid).is_none() {
                         return PidRead::Failed;
                     }
-                    let mut v = vec![0u64; self.topo.nodes];
-                    let node =
-                        self.topo.node_of_core(ps.processor.max(0) as usize);
-                    v[node] = ps.rss.max(0) as u64;
-                    (v, vec![0u64; self.topo.nodes], vec![0u64; self.topo.nodes])
+                    task.pages_per_node = vec![0u64; self.topo.nodes];
+                    task.huge_2m_per_node = vec![0u64; self.topo.nodes];
+                    task.giant_1g_per_node = vec![0u64; self.topo.nodes];
+                    task.pages_per_node[task.node] = task.rss_pages;
                 }
-            };
-        tasks.push(TaskSample {
-            pid: ps.pid,
-            comm: ps.comm,
-            node: self.topo.node_of_core(ps.processor.max(0) as usize),
-            threads: ps.num_threads,
-            cpu_ms: ps.utime + ps.stime,
-            rss_pages: ps.rss.max(0) as u64,
-            pages_per_node,
-            huge_2m_per_node,
-            giant_1g_per_node,
-            stale_ticks: 0,
-        });
+            }
+            self.note_full_read(epoch, pid);
+        }
+        tasks.push(task);
         PidRead::Ok
     }
 
@@ -544,6 +616,10 @@ impl Monitor {
         task.cpu_ms = ps.utime + ps.stime;
         task.rss_pages = ps.rss.max(0) as u64;
         task.stale_ticks = 0;
+        let epoch = source.numa_maps_epoch(pid);
+        if self.try_incremental_pages(epoch, pid, task) {
+            return PidRead::Ok;
+        }
         for v in [
             &mut task.pages_per_node,
             &mut task.huge_2m_per_node,
@@ -574,6 +650,7 @@ impl Monitor {
             }
             task.pages_per_node[task.node] = task.rss_pages;
         }
+        self.note_full_read(epoch, pid);
         PidRead::Ok
     }
 }
@@ -707,7 +784,7 @@ mod tests {
         let snap = mon.sample(&m, m.now_ms);
         let task = snap.task(pid).expect("sampled");
         let sim_p = m.process(pid).unwrap();
-        assert_eq!(task.huge_2m_per_node, sim_p.pages.huge_2m);
+        assert_eq!(task.huge_2m_per_node, sim_p.pages.huge_2m());
         assert!(task.huge_2m_per_node[3] > 0);
         // 4K-equivalent totals still line up across tiers.
         assert_eq!(task.pages_per_node[3], sim_p.pages.node_total(3));
@@ -731,6 +808,53 @@ mod tests {
             assert_eq!(snap, reference);
             m.step();
         }
+    }
+
+    #[test]
+    fn incremental_snapshots_skip_unchanged_pids_and_stay_field_identical() {
+        let mut m = sim();
+        let a = m.spawn("alpha", TaskBehavior::mem_bound(1e12), 1.0, 2, Placement::Node(0));
+        m.spawn("beta", TaskBehavior::mem_bound(1e12), 1.0, 2, Placement::Node(1));
+        for _ in 0..3 {
+            m.step();
+        }
+        let warm = Monitor::discover(&m).unwrap();
+        let mut snap = Snapshot::default();
+        let mut bufs = SampleBufs::new();
+        warm.sample_into(&m, m.now_ms, &mut snap, &mut bufs);
+        assert_eq!(
+            (warm.incr_hits(), warm.incr_misses()),
+            (0, 2),
+            "cold pass reads everything"
+        );
+        // Unchanged page maps: the next pass serves both pids from the
+        // epoch cache without touching the numa_maps surface at all —
+        // not even the machine's render cache sees a lookup.
+        let renders = m.numa_maps_cache_stats();
+        m.step();
+        warm.sample_into(&m, m.now_ms, &mut snap, &mut bufs);
+        assert_eq!((warm.incr_hits(), warm.incr_misses()), (2, 2));
+        assert_eq!(m.numa_maps_cache_stats(), renders, "numa_maps was consulted");
+        // ...and the warm snapshot is field-identical to a cold
+        // monitor's full read of the same machine state.
+        let cold = Monitor::discover(&m).unwrap();
+        assert_eq!(snap, cold.sample(&m, m.now_ms));
+        assert_eq!((cold.incr_hits(), cold.incr_misses()), (0, 2));
+        // A page migration moves alpha's epoch: exactly the changed pid
+        // takes the full read path again.
+        m.migrate_pages(a, 3, 1_000);
+        warm.sample_into(&m, m.now_ms, &mut snap, &mut bufs);
+        assert_eq!(
+            (warm.incr_hits(), warm.incr_misses()),
+            (3, 3),
+            "only the changed pid re-reads"
+        );
+        let cold = Monitor::discover(&m).unwrap();
+        assert_eq!(snap, cold.sample(&m, m.now_ms));
+        // The allocating path shares the same epoch cache.
+        let reference = warm.sample(&m, m.now_ms);
+        assert_eq!(reference, snap);
+        assert_eq!((warm.incr_hits(), warm.incr_misses()), (5, 3));
     }
 
     #[test]
@@ -1008,7 +1132,7 @@ mod tests {
             let total = p.pages.total();
             let mut v = vec![0; 8];
             v[1] = total;
-            p.pages.per_node = v;
+            p.pages.per_node_mut().copy_from_slice(&v);
         }
         for _ in 0..3 {
             m.step();

@@ -71,6 +71,16 @@ pub trait ProcSource {
         }
     }
 
+    /// Cheap change marker for `pid`'s numa_maps content, if the source
+    /// can produce one without rendering the text: a `(generation,
+    /// fingerprint)` pair that is equal between two calls iff the page
+    /// map is byte-identical. `None` (the default, and the only honest
+    /// answer for real procfs) disables the monitor's incremental
+    /// fast path and forces a full read every pass.
+    fn numa_maps_epoch(&self, _pid: i32) -> Option<(u64, u64)> {
+        None
+    }
+
     /// Raw `/proc/<pid>/numa_maps` text; None if absent.
     fn read_numa_maps(&self, pid: i32) -> Option<String>;
 

@@ -377,7 +377,7 @@ impl EventEngine {
                     let total = p.pages.total();
                     let mut v = vec![0; m.topo.nodes];
                     v[*mem_node] = total;
-                    p.pages.per_node = v;
+                    p.pages.per_node_mut().copy_from_slice(&v);
                     p.pages.bump_generation();
                 }
                 FiredEvent {
@@ -579,7 +579,7 @@ mod tests {
         let pid = fired[0].pids[0];
         let p = m.process(pid).unwrap();
         assert_eq!(p.pinned_node, Some(1));
-        assert_eq!(p.pages.per_node[1], 9_000);
+        assert_eq!(p.pages.per_node()[1], 9_000);
         assert!(p.behavior.is_daemon());
         for _ in 0..5 {
             e.tick(&mut m);
@@ -663,7 +663,7 @@ mod tests {
         let pid = fired[0].pids[0];
         let p = m.process(pid).unwrap();
         assert_eq!(p.pinned_node, Some(0), "threads pinned to the cpu node");
-        assert_eq!(p.pages.per_node, vec![0, 5_000], "working set stranded");
+        assert_eq!(p.pages.per_node(), &[0, 5_000], "working set stranded");
         assert!(p.behavior.is_daemon());
         // It streams until the Exit reaps it.
         for _ in 0..5 {

@@ -113,6 +113,44 @@ pub struct Machine {
     /// `None` (every fabric-less topology) leaves the tick loop
     /// bit-identical to the pre-fabric simulator.
     fabric: Option<FabricState>,
+    /// Per-node tick accumulators, persisted across ticks (see
+    /// [`NodeShards`]) — the fleet-scale replacement for the four
+    /// per-tick `vec![0; nodes]` allocations the seed tick made.
+    shards: NodeShards,
+}
+
+/// Per-node shard of the tick's bookkeeping. One slot per NUMA node,
+/// columnar (one flat vector per quantity rather than one struct per
+/// node), reset in place at tick start: at 64 nodes x thousands of
+/// ticks the seed's fresh-`Vec`-per-tick pattern dominated the
+/// allocator profile. Resetting to the same zeros the fresh vectors
+/// held keeps every accumulated f64 bit-identical to the seed tick.
+#[derive(Default)]
+struct NodeShards {
+    /// Lagged per-node latency multipliers (pricing inputs, refilled
+    /// from the controllers at tick start).
+    lat_mult: Vec<f64>,
+    /// Controller demand accumulated by the open tick, GB/s.
+    demand: Vec<f64>,
+    /// numastat hit/miss accesses accumulated by the open tick.
+    hits: Vec<u64>,
+    misses: Vec<u64>,
+}
+
+impl NodeShards {
+    /// Reset accumulators and re-price the lagged latency multipliers
+    /// for a new tick.
+    fn begin_tick(&mut self, ctls: &[MemCtl]) {
+        let nodes = ctls.len();
+        self.lat_mult.clear();
+        self.lat_mult.extend(ctls.iter().map(MemCtl::latency_multiplier));
+        self.demand.clear();
+        self.demand.resize(nodes, 0.0);
+        self.hits.clear();
+        self.hits.resize(nodes, 0);
+        self.misses.clear();
+        self.misses.resize(nodes, 0);
+    }
 }
 
 /// The simulator-side fabric: one [`LinkCtl`] per link of the machine's
@@ -248,6 +286,7 @@ impl Machine {
             mig_scratch_1g: Vec::new(),
             mig_scratch_nodes: Vec::new(),
             fabric: topo_fabric,
+            shards: NodeShards::default(),
         }
     }
 
@@ -453,9 +492,9 @@ impl Machine {
         let mut moved = 0;
         if let Some(p) = self.procs.get_mut(&pid) {
             before_2m.clear();
-            before_2m.extend_from_slice(&p.pages.huge_2m);
+            before_2m.extend_from_slice(p.pages.huge_2m());
             before_1g.clear();
-            before_1g.extend_from_slice(&p.pages.giant_1g);
+            before_1g.extend_from_slice(p.pages.giant_1g());
             if fabric_on {
                 before_nodes.clear();
                 before_nodes.extend((0..nodes).map(|n| p.pages.node_total(n)));
@@ -514,25 +553,25 @@ impl Machine {
         let Some(p) = self.procs.get_mut(&pid) else { return };
         let mut split_any = false;
         for n in 0..nodes {
-            let (now, was) = (p.pages.huge_2m[n], before_2m[n]);
+            let (now, was) = (p.pages.huge_2m()[n], before_2m[n]);
             if now > was {
                 let granted = self.huge_pools[n].take(now - was);
                 let split = (now - was) - granted;
                 if split > 0 {
-                    p.pages.huge_2m[n] -= split;
-                    p.pages.per_node[n] += split * PageTier::Huge2M.pages_4k();
+                    p.pages.huge_2m_mut()[n] -= split;
+                    p.pages.per_node_mut()[n] += split * PageTier::Huge2M.pages_4k();
                     split_any = true;
                 }
             } else if was > now {
                 self.huge_pools[n].put(was - now);
             }
-            let (now, was) = (p.pages.giant_1g[n], before_1g[n]);
+            let (now, was) = (p.pages.giant_1g()[n], before_1g[n]);
             if now > was {
                 let granted = self.giant_pools[n].take(now - was);
                 let split = (now - was) - granted;
                 if split > 0 {
-                    p.pages.giant_1g[n] -= split;
-                    p.pages.per_node[n] += split * PageTier::Giant1G.pages_4k();
+                    p.pages.giant_1g_mut()[n] -= split;
+                    p.pages.per_node_mut()[n] += split * PageTier::Giant1G.pages_4k();
                     split_any = true;
                 }
             } else if was > now {
@@ -553,10 +592,9 @@ impl Machine {
         let dt = self.dt_ms;
 
         // Pass 1: per-thread speeds priced at the previous tick's rho.
-        let lat_mult: Vec<f64> = self.ctls.iter().map(MemCtl::latency_multiplier).collect();
-        let mut new_demand = vec![0.0f64; nodes];
-        let mut hits = vec![0u64; nodes];
-        let mut misses = vec![0u64; nodes];
+        // Per-node bookkeeping lives in the persistent shards (reset in
+        // place — same zeros the seed's fresh vectors held).
+        self.shards.begin_tick(&self.ctls);
         // Fabric: detach for the tick (disjoint from the proc borrow
         // below) and refresh the lagged per-pair link penalties.
         let mut fabric = self.fabric.take();
@@ -569,7 +607,16 @@ impl Machine {
                 continue;
             }
             let mi = p.behavior.intensity_at(self.now_ms);
-            let fracs = p.pages.fractions();
+            // Page fractions: reuse the cached per-node divisions when
+            // the page map's epoch is unchanged (the common fleet case —
+            // most pids don't migrate on most ticks). Cached values are
+            // the previous computation's exact output, so the tick stays
+            // bit-identical.
+            let epoch = p.pages.epoch();
+            if p.scratch.fracs_epoch != Some(epoch) {
+                p.pages.fractions_into(&mut p.scratch.fracs);
+                p.scratch.fracs_epoch = Some(epoch);
+            }
             // TLB-pressure stall: the page-table mappings the working set
             // needs vs the TLB's reach. Huge pages shrink mappings 512x,
             // which is the whole point of the tier model. Zero-cost when
@@ -581,26 +628,29 @@ impl Machine {
             } else {
                 0.0
             };
-            // Per-thread raw speed.
-            let mut speeds = Vec::with_capacity(p.nthreads());
-            let mut shares = Vec::with_capacity(p.nthreads());
+            // Per-thread raw speed, into detached reusable buffers (the
+            // take/restore dance keeps the `p` field borrows disjoint).
+            let mut speeds = std::mem::take(&mut p.scratch.speeds);
+            let mut shares = std::mem::take(&mut p.scratch.shares);
+            speeds.clear();
+            shares.clear();
             for &core in &p.threads_core {
                 let my_node = core / cpn;
                 // Mean normalized access cost over the page distribution:
                 // distance term + queueing term of the holding controller.
                 let mut penalty = 0.0;
                 for n in 0..nodes {
-                    if fracs[n] == 0.0 {
+                    if p.scratch.fracs[n] == 0.0 {
                         continue;
                     }
                     let dist_pen = self.topo.distance[my_node][n] / 10.0 - 1.0;
-                    let queue_pen = lat_mult[n] - 1.0;
-                    penalty += fracs[n] * (dist_pen + queue_pen);
+                    let queue_pen = self.shards.lat_mult[n] - 1.0;
+                    penalty += p.scratch.fracs[n] * (dist_pen + queue_pen);
                     // Remote accesses also queue on every interconnect
                     // link along the route (lagged, like the controller
                     // term above). Local accesses pay nothing.
                     if let Some(f) = fabric.as_ref() {
-                        penalty += fracs[n] * f.pen(my_node, n);
+                        penalty += p.scratch.fracs[n] * f.pen(my_node, n);
                     }
                 }
                 let speed = 1.0 / (1.0 + MEM_WEIGHT * mi * penalty + tlb_pen);
@@ -635,19 +685,20 @@ impl Machine {
             // stacking (Fig 6) instead of a self-throttling equilibrium.
             let offered: f64 = shares.iter().sum();
             let demand = mi * THREAD_PEAK_GBS * offered * (1.0 + p.behavior.exchange);
-            let tpn = p.threads_per_node(nodes, cpn);
+            let mut tpn = std::mem::take(&mut p.scratch.tpn);
+            p.threads_per_node_into(nodes, cpn, &mut tpn);
             let total_threads = p.nthreads() as f64;
             for n in 0..nodes {
-                new_demand[n] += demand * fracs[n];
+                self.shards.demand[n] += demand * p.scratch.fracs[n];
                 // numastat semantics (ours): accesses *served by* node n,
                 // split into local (issued by threads on n) and remote.
                 // The Monitor recovers controller demand per node from
                 // Δ(hit+miss) and locality from the hit/miss ratio.
                 let thread_frac = tpn[n] as f64 / total_threads;
-                let served = demand * fracs[n] * 1000.0;
+                let served = demand * p.scratch.fracs[n] * 1000.0;
                 let local = served * thread_frac;
-                hits[n] += local as u64;
-                misses[n] += (served - local) as u64;
+                self.shards.hits[n] += local as u64;
+                self.shards.misses[n] += (served - local) as u64;
             }
             // Route the cross-node share of the demand over the fabric:
             // traffic issued by threads on node `a` against pages on
@@ -660,13 +711,16 @@ impl Machine {
                     }
                     let thread_frac = tpn[a] as f64 / total_threads;
                     for b in 0..nodes {
-                        if b == a || fracs[b] == 0.0 {
+                        if b == a || p.scratch.fracs[b] == 0.0 {
                             continue;
                         }
-                        f.add_route_demand(a, b, demand * thread_frac * fracs[b]);
+                        f.add_route_demand(a, b, demand * thread_frac * p.scratch.fracs[b]);
                     }
                 }
             }
+            p.scratch.speeds = speeds;
+            p.scratch.shares = shares;
+            p.scratch.tpn = tpn;
 
             // Completion.
             if p.work_done >= p.behavior.work_units {
@@ -685,15 +739,16 @@ impl Machine {
             core.retain(|(pid, _)| !finished.contains(pid));
         }
 
-        // Commit controller demand (+ migration traffic) for next tick.
+        // Commit each node shard's demand (+ migration traffic) for the
+        // next tick.
         for n in 0..nodes {
-            self.ctls[n].add_demand(new_demand[n] + self.mig_charge[n]);
+            self.ctls[n].add_demand(self.shards.demand[n] + self.mig_charge[n]);
             self.ctls[n].commit_tick();
             self.mig_charge[n] = 0.0;
-            self.numastat[n].numa_hit += hits[n];
-            self.numastat[n].numa_miss += misses[n];
-            self.numastat[n].local_node += hits[n];
-            self.numastat[n].other_node += misses[n];
+            self.numastat[n].numa_hit += self.shards.hits[n];
+            self.numastat[n].numa_miss += self.shards.misses[n];
+            self.numastat[n].local_node += self.shards.hits[n];
+            self.numastat[n].other_node += self.shards.misses[n];
         }
         // Commit link demand (+ surcharged migration traffic) likewise.
         if let Some(f) = fabric.as_mut() {
@@ -821,34 +876,34 @@ impl Machine {
                 .collect()
         };
         let base_addr = 0x7f00_0000_0000 + ((p.pid as u64) << 24);
-        let base_total: u64 = p.pages.per_node.iter().sum();
+        let base_total: u64 = p.pages.per_node().iter().sum();
         let mut vmas = vec![numa_maps::Vma {
             address: base_addr,
             policy: "default".into(),
-            pages_per_node: collect(&p.pages.per_node),
+            pages_per_node: collect(p.pages.per_node()),
             anon: Some(base_total),
             dirty: Some(base_total / 2),
             file: None,
             kernelpagesize_kb: None, // renders as the 4 KiB default
         }];
-        let huge_total: u64 = p.pages.huge_2m.iter().sum();
+        let huge_total: u64 = p.pages.huge_2m().iter().sum();
         if huge_total > 0 {
             vmas.push(numa_maps::Vma {
                 address: base_addr + 0x10_0000_0000,
                 policy: "default".into(),
-                pages_per_node: collect(&p.pages.huge_2m),
+                pages_per_node: collect(p.pages.huge_2m()),
                 anon: Some(huge_total),
                 dirty: None,
                 file: None,
                 kernelpagesize_kb: Some(2048),
             });
         }
-        let giant_total: u64 = p.pages.giant_1g.iter().sum();
+        let giant_total: u64 = p.pages.giant_1g().iter().sum();
         if giant_total > 0 {
             vmas.push(numa_maps::Vma {
                 address: base_addr + 0x20_0000_0000,
                 policy: "default".into(),
-                pages_per_node: collect(&p.pages.giant_1g),
+                pages_per_node: collect(p.pages.giant_1g()),
                 anon: Some(giant_total),
                 dirty: None,
                 file: None,
@@ -914,6 +969,14 @@ impl ProcSource for Machine {
         } else {
             None
         }
+    }
+
+    fn numa_maps_epoch(&self, pid: i32) -> Option<(u64, u64)> {
+        let p = self.procs.get(&pid)?;
+        if !p.is_running() {
+            return None;
+        }
+        Some(p.pages.epoch())
     }
 
     fn read_numa_maps_into(&self, pid: i32, out: &mut String) -> bool {
@@ -1056,7 +1119,7 @@ mod tests {
         assert_eq!(p.nthreads(), 4);
         assert_eq!(p.home_node(4, 10), 2);
         // First touch: all pages on node 2.
-        assert_eq!(p.pages.per_node[2], p.pages.total());
+        assert_eq!(p.pages.per_node()[2], p.pages.total());
     }
 
     #[test]
@@ -1083,7 +1146,7 @@ mod tests {
             if !local {
                 let p = m.process_mut(pid).unwrap();
                 let total = p.pages.total();
-                p.pages.per_node = vec![0, total];
+                p.pages.per_node_mut().copy_from_slice(&[0, total]);
             }
             m.run_until(50_000.0);
             m.process_mut(pid).unwrap().runtime_ms().unwrap()
@@ -1243,7 +1306,7 @@ mod tests {
         {
             let p = m.process_mut(pid).unwrap();
             let total = p.pages.total();
-            p.pages.per_node = vec![total / 2, total - total / 2];
+            p.pages.per_node_mut().copy_from_slice(&[total / 2, total - total / 2]);
         }
         for _ in 0..20 {
             m.step();
@@ -1285,7 +1348,7 @@ mod tests {
         let pid = m.spawn("thp", b, 1.0, 2, Placement::Node(1));
         let p = m.process(pid).unwrap();
         // floor(200_000 * 0.5) / 512 = 195 huge pages on node 1.
-        assert_eq!(p.pages.huge_2m[1], 195);
+        assert_eq!(p.pages.huge_2m()[1], 195);
         assert_eq!(p.pages.total(), 200_000, "promotion conserves bytes");
         // Pool debited, visible through the sysfs facade only.
         let free = crate::mem::hugepages::parse_count(
@@ -1318,7 +1381,7 @@ mod tests {
         assert_eq!(free, 0);
         let total_huge: u64 = m
             .processes()
-            .map(|p| p.pages.huge_2m.iter().sum::<u64>())
+            .map(|p| p.pages.huge_2m().iter().sum::<u64>())
             .sum();
         assert_eq!(total_huge, 2048);
     }
@@ -1345,7 +1408,7 @@ mod tests {
         // 4 KiB-equivalent aggregation matches the simulator exactly...
         assert_eq!(maps.pages_per_node(4)[2], p.pages.total());
         // ...and the huge tier is separable from the text alone.
-        assert_eq!(maps.huge_pages_per_node(4, 2048)[2], p.pages.huge_2m[2]);
+        assert_eq!(maps.huge_pages_per_node(4, 2048)[2], p.pages.huge_2m()[2]);
     }
 
     #[test]
@@ -1391,7 +1454,7 @@ mod tests {
         let moved = m.migrate_pages(pid, 1, 250_000);
         assert_eq!(moved, 200_000);
         let p = m.process(pid).unwrap();
-        assert_eq!(p.pages.huge_2m, vec![0, 390, 0, 0]);
+        assert_eq!(p.pages.huge_2m(), &[0, 390, 0, 0]);
         let free = |node| {
             crate::mem::hugepages::parse_count(
                 &m.read_node_hugepage_file(node, 2048, "free_hugepages").unwrap(),
@@ -1417,8 +1480,8 @@ mod tests {
         let moved = m.migrate_pages(pid, 6, 250_000);
         assert_eq!(moved, 200_000);
         let p = m.process(pid).unwrap();
-        assert_eq!(p.pages.huge_2m.iter().sum::<u64>(), 0, "all split");
-        assert_eq!(p.pages.per_node[6], 200_000);
+        assert_eq!(p.pages.huge_2m().iter().sum::<u64>(), 0, "all split");
+        assert_eq!(p.pages.per_node()[6], 200_000);
         assert_eq!(p.pages.total(), 200_000);
         // Source pool refunded; destination reports an empty pool that
         // numa_maps (all kernelpagesize_kB=4 now) agrees with.
@@ -1508,7 +1571,7 @@ mod tests {
             // not the fingerprint.
             let p = m.process_mut(pid).unwrap();
             let total = p.pages.total();
-            p.pages.per_node = vec![0, total];
+            p.pages.per_node_mut().copy_from_slice(&[0, total]);
         }
         let after = m.read_numa_maps(pid).unwrap();
         assert_ne!(before, after);
@@ -1608,7 +1671,7 @@ mod tests {
             let total = p.pages.total();
             let mut v = vec![0; 8];
             v[1] = total;
-            p.pages.per_node = v;
+            p.pages.per_node_mut().copy_from_slice(&v);
         }
         m.step();
         let rho = m.fabric_link_rho().unwrap();
@@ -1678,7 +1741,7 @@ mod tests {
             let total = p.pages.total();
             let mut v = vec![0; 8];
             v[1] = total;
-            p.pages.per_node = v;
+            p.pages.per_node_mut().copy_from_slice(&v);
         }
         for _ in 0..3 {
             m.step();
@@ -1710,7 +1773,7 @@ mod tests {
             let total = p.pages.total();
             let mut v = vec![0; 8];
             v[1] = total;
-            p.pages.per_node = v;
+            p.pages.per_node_mut().copy_from_slice(&v);
         }
         m.step();
         let text = m.read_fabric_links().unwrap();

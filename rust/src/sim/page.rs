@@ -14,18 +14,40 @@
 //! ledger distinguishes bandwidth (scales with bytes — one 2 MiB move
 //! costs 512 base moves) from operations (one per page of any tier —
 //! where huge pages win).
+//!
+//! Layout is **struct-of-arrays**: all three tiers live in one flat
+//! tier-major `Vec<u64>` (`counts[tier * nodes + n]`), so the sweep
+//! inner loop walks one contiguous allocation per process instead of
+//! chasing three Vec pointers. Callers read tiers through the slice
+//! accessors ([`PageMap::per_node`] etc.); the `_mut` variants
+//! deliberately do **not** bump the generation counter — direct writes
+//! (scenario setup, tests) are caught by [`PageMap::fingerprint`], the
+//! same contract the old public fields had.
 
 use crate::mem::PageTier;
+
+/// Tier rows of the flat count matrix, in fingerprint order.
+const TIER_BASE: usize = 0;
+const TIER_HUGE: usize = 1;
+const TIER_GIANT: usize = 2;
+const TIERS: usize = 3;
+
+fn tier_row(tier: PageTier) -> usize {
+    match tier {
+        PageTier::Base4K => TIER_BASE,
+        PageTier::Huge2M => TIER_HUGE,
+        PageTier::Giant1G => TIER_GIANT,
+    }
+}
 
 /// Page placement of one process across NUMA nodes, per tier.
 #[derive(Clone, Debug)]
 pub struct PageMap {
-    /// Resident 4 KiB base pages per node.
-    pub per_node: Vec<u64>,
-    /// Resident 2 MiB huge pages per node (2 MiB units).
-    pub huge_2m: Vec<u64>,
-    /// Resident 1 GiB giant pages per node (1 GiB units).
-    pub giant_1g: Vec<u64>,
+    /// Tier-major count matrix: `counts[tier * nodes + n]` — row 0 is
+    /// resident 4 KiB base pages, row 1 is 2 MiB huge pages (2 MiB
+    /// units), row 2 is 1 GiB giant pages (1 GiB units).
+    counts: Vec<u64>,
+    nodes: usize,
     /// Cumulative 4 KiB-equivalent pages migrated (bandwidth ledger).
     pub migrated_total: u64,
     /// Cumulative migration operations — one per page of any tier (the
@@ -40,9 +62,8 @@ pub struct PageMap {
 impl PageMap {
     pub fn empty(nodes: usize) -> Self {
         Self {
-            per_node: vec![0; nodes],
-            huge_2m: vec![0; nodes],
-            giant_1g: vec![0; nodes],
+            counts: vec![0; TIERS * nodes],
+            nodes,
             migrated_total: 0,
             migrate_ops: 0,
             generation: 0,
@@ -50,7 +71,47 @@ impl PageMap {
     }
 
     pub fn nodes(&self) -> usize {
-        self.per_node.len()
+        self.nodes
+    }
+
+    /// Resident 4 KiB base pages per node.
+    pub fn per_node(&self) -> &[u64] {
+        &self.counts[..self.nodes]
+    }
+
+    /// Resident 2 MiB huge pages per node (2 MiB units).
+    pub fn huge_2m(&self) -> &[u64] {
+        &self.counts[self.nodes..2 * self.nodes]
+    }
+
+    /// Resident 1 GiB giant pages per node (1 GiB units).
+    pub fn giant_1g(&self) -> &[u64] {
+        &self.counts[2 * self.nodes..3 * self.nodes]
+    }
+
+    /// One tier's counts, by tier.
+    pub fn tier(&self, tier: PageTier) -> &[u64] {
+        let row = tier_row(tier) * self.nodes;
+        &self.counts[row..row + self.nodes]
+    }
+
+    /// Direct write access to the base-tier counts. Does **not** bump
+    /// the generation — the fingerprint catches such writes, exactly as
+    /// it caught writes to the old public field.
+    pub fn per_node_mut(&mut self) -> &mut [u64] {
+        &mut self.counts[..self.nodes]
+    }
+
+    /// Direct write access to the 2 MiB-tier counts (no generation bump).
+    pub fn huge_2m_mut(&mut self) -> &mut [u64] {
+        let n = self.nodes;
+        &mut self.counts[n..2 * n]
+    }
+
+    /// Direct write access to the 1 GiB-tier counts (no generation bump).
+    pub fn giant_1g_mut(&mut self) -> &mut [u64] {
+        let n = self.nodes;
+        &mut self.counts[2 * n..3 * n]
     }
 
     /// Current placement generation (see [`Self::bump_generation`]).
@@ -60,23 +121,25 @@ impl PageMap {
 
     /// Record that placement changed — invalidates cached renders of
     /// this map. Called by every mutating method; callers that write
-    /// the public count vectors directly (scenario setup, tests) are
-    /// caught by [`Self::fingerprint`] instead.
+    /// through the `_mut` slice accessors directly (scenario setup,
+    /// tests) are caught by [`Self::fingerprint`] instead.
     pub fn bump_generation(&mut self) {
         self.generation = self.generation.wrapping_add(1);
     }
 
     /// Order-sensitive FNV-1a-style fingerprint over every tier count.
     /// Belt-and-braces companion to the generation counter: it catches
-    /// direct writes to the public `per_node`/`huge_2m`/`giant_1g`
-    /// vectors (which bypass `bump_generation`), including permutations
-    /// that preserve totals. O(nodes) — far cheaper than re-rendering.
+    /// direct writes through the `_mut` accessors (which bypass
+    /// `bump_generation`), including permutations that preserve totals.
+    /// O(nodes) — far cheaper than re-rendering. The flat tier-major
+    /// layout iterates in exactly the old per-tier-Vec order, so hash
+    /// values are unchanged across the SoA refactor.
     pub fn fingerprint(&self) -> u64 {
         const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
         const PRIME: u64 = 0x0000_0100_0000_01b3;
         let mut h = OFFSET;
-        for tier in [&self.per_node, &self.huge_2m, &self.giant_1g] {
-            for &c in tier.iter() {
+        for tier in 0..TIERS {
+            for &c in &self.counts[tier * self.nodes..(tier + 1) * self.nodes] {
                 h ^= c.wrapping_add(0x9e37_79b9_7f4a_7c15);
                 h = h.wrapping_mul(PRIME);
             }
@@ -86,6 +149,14 @@ impl PageMap {
             h = h.wrapping_mul(PRIME);
         }
         h
+    }
+
+    /// The `(generation, fingerprint)` pair — the cache key every
+    /// placement-derived view (numa_maps render cache, the monitor's
+    /// incremental snapshots, the tick's fraction cache) validates
+    /// against.
+    pub fn epoch(&self) -> (u64, u64) {
+        (self.generation, self.fingerprint())
     }
 
     /// First-touch allocation: distribute `pages` (4 KiB units)
@@ -99,18 +170,23 @@ impl PageMap {
         let total_w: u64 = weights.iter().sum();
         if total_w == 0 {
             // No threads placed yet — everything lands on node 0.
-            map.per_node[0] = pages;
+            map.counts[0] = pages;
             return map;
         }
         let mut allocated = 0u64;
         for n in 0..nodes {
             let share = pages * weights[n] / total_w;
-            map.per_node[n] = share;
+            map.counts[n] = share;
             allocated += share;
         }
-        // Rounding remainder goes to the heaviest node.
-        let heaviest = (0..nodes).max_by_key(|&n| weights[n]).unwrap();
-        map.per_node[heaviest] += pages - allocated;
+        // Rounding remainder goes to the heaviest node; weight ties
+        // break toward the lowest node id (matching round_robin_pins'
+        // least-occupied-first convention), not `max_by_key`'s
+        // last-maximum bias toward the highest-numbered node.
+        let heaviest = (0..nodes)
+            .max_by_key(|&n| (weights[n], std::cmp::Reverse(n)))
+            .unwrap();
+        map.counts[heaviest] += pages - allocated;
         map
     }
 
@@ -128,24 +204,21 @@ impl PageMap {
             !matches!(tier, PageTier::Base4K),
             "base pages need no promotion"
         );
-        assert_eq!(pool_free.len(), self.nodes());
+        assert_eq!(pool_free.len(), self.nodes);
         let per = tier.pages_4k();
-        let mut taken = vec![0u64; self.nodes()];
+        let row = tier_row(tier) * self.nodes;
+        let mut taken = vec![0u64; self.nodes];
         if want_frac <= 0.0 {
             return taken;
         }
-        for n in 0..self.nodes() {
-            let want = ((self.per_node[n] as f64 * want_frac.min(1.0)) as u64) / per;
+        for n in 0..self.nodes {
+            let want = ((self.counts[n] as f64 * want_frac.min(1.0)) as u64) / per;
             let got = want.min(pool_free[n]);
             if got == 0 {
                 continue;
             }
-            self.per_node[n] -= got * per;
-            match tier {
-                PageTier::Huge2M => self.huge_2m[n] += got,
-                PageTier::Giant1G => self.giant_1g[n] += got,
-                PageTier::Base4K => unreachable!(),
-            }
+            self.counts[n] -= got * per;
+            self.counts[row + n] += got;
             taken[n] = got;
             self.bump_generation();
         }
@@ -159,33 +232,41 @@ impl PageMap {
 
     /// 4 KiB-equivalent pages on one node, across tiers.
     pub fn node_total(&self, n: usize) -> u64 {
-        self.per_node[n]
-            + self.huge_2m[n] * PageTier::Huge2M.pages_4k()
-            + self.giant_1g[n] * PageTier::Giant1G.pages_4k()
+        self.counts[n]
+            + self.counts[self.nodes + n] * PageTier::Huge2M.pages_4k()
+            + self.counts[2 * self.nodes + n] * PageTier::Giant1G.pages_4k()
     }
 
     /// Total resident 4 KiB-equivalent pages.
     pub fn total(&self) -> u64 {
-        (0..self.nodes()).map(|n| self.node_total(n)).sum()
+        (0..self.nodes).map(|n| self.node_total(n)).sum()
     }
 
     /// Live page-table mappings (pages of any tier each count once) —
     /// what the TLB must cover.
     pub fn mappings(&self) -> u64 {
-        self.per_node.iter().sum::<u64>()
-            + self.huge_2m.iter().sum::<u64>()
-            + self.giant_1g.iter().sum::<u64>()
+        self.counts.iter().sum()
     }
 
     /// Fraction of (4 KiB-equivalent) pages on each node.
     pub fn fractions(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.fractions_into(&mut out);
+        out
+    }
+
+    /// [`Self::fractions`] into a reused buffer — the tick hot loop's
+    /// zero-allocation variant. Identical values in identical order.
+    pub fn fractions_into(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(self.nodes, 0.0);
         let total = self.total();
         if total == 0 {
-            return vec![0.0; self.nodes()];
+            return;
         }
-        (0..self.nodes())
-            .map(|n| self.node_total(n) as f64 / total as f64)
-            .collect()
+        for (n, slot) in out.iter_mut().enumerate() {
+            *slot = self.node_total(n) as f64 / total as f64;
+        }
     }
 
     /// Move up to `budget` 4 KiB-equivalent pages from `src` to `dst`,
@@ -198,30 +279,15 @@ impl PageMap {
         let mut remaining = budget;
         for tier in [PageTier::Giant1G, PageTier::Huge2M, PageTier::Base4K] {
             let per_page = tier.pages_4k();
-            let avail = match tier {
-                PageTier::Base4K => self.per_node[src],
-                PageTier::Huge2M => self.huge_2m[src],
-                PageTier::Giant1G => self.giant_1g[src],
-            };
+            let row = tier_row(tier) * self.nodes;
+            let avail = self.counts[row + src];
             // Whole pages only: a 1 GiB page does not move piecewise.
             let chunk = avail.min(remaining / per_page);
             if chunk == 0 {
                 continue;
             }
-            match tier {
-                PageTier::Base4K => {
-                    self.per_node[src] -= chunk;
-                    self.per_node[dst] += chunk;
-                }
-                PageTier::Huge2M => {
-                    self.huge_2m[src] -= chunk;
-                    self.huge_2m[dst] += chunk;
-                }
-                PageTier::Giant1G => {
-                    self.giant_1g[src] -= chunk;
-                    self.giant_1g[dst] += chunk;
-                }
-            }
+            self.counts[row + src] -= chunk;
+            self.counts[row + dst] += chunk;
             moved += chunk * per_page;
             remaining -= chunk * per_page;
             self.migrate_ops += chunk;
@@ -237,14 +303,14 @@ impl PageMap {
     /// chunk). Returns equivalents actually moved — the caller charges
     /// that traffic to the controllers involved.
     pub fn migrate_toward(&mut self, target: usize, budget: u64) -> u64 {
-        assert!(target < self.nodes());
+        assert!(target < self.nodes);
         let mut moved = 0;
         let mut remaining = budget;
         while remaining > 0 {
             // Hottest remote chunk first; fall through to cooler nodes
             // when the hottest holds only whole pages bigger than the
             // remaining budget.
-            let mut srcs: Vec<usize> = (0..self.nodes())
+            let mut srcs: Vec<usize> = (0..self.nodes)
                 .filter(|&n| n != target && self.node_total(n) > 0)
                 .collect();
             // Ties break toward the highest node id, matching the old
@@ -298,9 +364,9 @@ mod tests {
     fn first_touch_follows_threads() {
         let m = PageMap::first_touch(4, 1000, &[3, 1, 0, 0]);
         assert_eq!(m.total(), 1000);
-        assert_eq!(m.per_node[0], 750);
-        assert_eq!(m.per_node[1], 250);
-        assert_eq!(m.per_node[2], 0);
+        assert_eq!(m.per_node()[0], 750);
+        assert_eq!(m.per_node()[1], 250);
+        assert_eq!(m.per_node()[2], 0);
     }
 
     #[test]
@@ -315,23 +381,39 @@ mod tests {
         // remainder 1 goes to the heaviest node (ties -> lowest id).
         let m = PageMap::first_touch(3, 100, &[2, 3, 3]);
         assert_eq!(m.total(), 100);
-        assert_eq!(m.per_node, vec![25, 38, 37]);
+        assert_eq!(m.per_node(), &[25, 38, 37]);
+    }
+
+    #[test]
+    fn first_touch_remainder_tie_breaks_to_lowest_node() {
+        // All-equal weights: 10 pages over [1, 1, 1] floor to 3/3/3 with
+        // remainder 1 — the spill must land on node 0, not max_by_key's
+        // last maximum (node 2). Regression test for the highest-node
+        // spill bias.
+        let m = PageMap::first_touch(3, 10, &[1, 1, 1]);
+        assert_eq!(m.per_node(), &[4, 3, 3]);
+        // A later heavier node still wins outright (no tie involved)...
+        let m = PageMap::first_touch(3, 10, &[1, 1, 2]);
+        assert_eq!(m.per_node(), &[2, 2, 6]);
+        // ...and a leading tie among heaviest nodes picks the lowest.
+        let m = PageMap::first_touch(4, 103, &[0, 5, 5, 0]);
+        assert_eq!(m.per_node(), &[0, 52, 51, 0]);
     }
 
     #[test]
     fn first_touch_no_threads_lands_on_node0() {
         let m = PageMap::first_touch(2, 10, &[0, 0]);
-        assert_eq!(m.per_node, vec![10, 0]);
+        assert_eq!(m.per_node(), &[10, 0]);
     }
 
     #[test]
     fn first_touch_single_node_takes_everything() {
         let m = PageMap::first_touch(1, 777, &[4]);
-        assert_eq!(m.per_node, vec![777]);
+        assert_eq!(m.per_node(), &[777]);
         assert_eq!(m.fractions(), vec![1.0]);
         // Degenerate single-node machine with no threads yet.
         let m = PageMap::first_touch(1, 9, &[0]);
-        assert_eq!(m.per_node, vec![9]);
+        assert_eq!(m.per_node(), &[9]);
     }
 
     #[test]
@@ -349,13 +431,24 @@ mod tests {
     }
 
     #[test]
+    fn fractions_into_matches_allocating_variant() {
+        let m = PageMap::first_touch(4, 999, &[1, 2, 3, 4]);
+        let mut buf = vec![0.5; 9]; // stale, over-sized: must be reset
+        m.fractions_into(&mut buf);
+        assert_eq!(buf, m.fractions());
+        let empty = PageMap::empty(3);
+        empty.fractions_into(&mut buf);
+        assert_eq!(buf, vec![0.0; 3]);
+    }
+
+    #[test]
     fn migrate_toward_respects_budget_and_conserves() {
         let mut m = PageMap::first_touch(4, 1000, &[1, 1, 1, 1]);
         let before = m.total();
         let moved = m.migrate_toward(0, 300);
         assert_eq!(moved, 300);
         assert_eq!(m.total(), before);
-        assert_eq!(m.per_node[0], 550);
+        assert_eq!(m.per_node()[0], 550);
         assert_eq!(m.migrated_total, 300);
         assert_eq!(m.migrate_ops, 300, "base pages: one op per page");
     }
@@ -363,25 +456,25 @@ mod tests {
     #[test]
     fn migrate_toward_stops_when_fully_local() {
         let mut m = PageMap::empty(2);
-        m.per_node[0] = 100;
+        m.per_node_mut()[0] = 100;
         let moved = m.migrate_toward(0, 1000);
         assert_eq!(moved, 0);
-        assert_eq!(m.per_node[0], 100);
+        assert_eq!(m.per_node()[0], 100);
     }
 
     #[test]
     fn migrate_from_single_origin() {
         let mut m = PageMap::empty(3);
-        m.per_node = vec![50, 30, 20];
+        m.per_node_mut().copy_from_slice(&[50, 30, 20]);
         assert_eq!(m.migrate_from(1, 2, 100), 30);
-        assert_eq!(m.per_node, vec![50, 0, 50]);
+        assert_eq!(m.per_node(), &[50, 0, 50]);
         assert_eq!(m.migrate_from(0, 0, 10), 0);
     }
 
     #[test]
     fn locality_extremes() {
         let mut m = PageMap::empty(2);
-        m.per_node = vec![100, 0];
+        m.per_node_mut().copy_from_slice(&[100, 0]);
         assert!((m.locality(&[1.0, 0.0]) - 1.0).abs() < 1e-12);
         assert!((m.locality(&[0.0, 1.0]) - 0.0).abs() < 1e-12);
     }
@@ -394,8 +487,8 @@ mod tests {
         // Wants floor(10000*0.5)/512 = 9 huge pages; pool only has 4.
         let taken = m.promote_to_huge(0.5, &[4, 4]);
         assert_eq!(taken, vec![4, 0]);
-        assert_eq!(m.huge_2m[0], 4);
-        assert_eq!(m.per_node[0], 10_000 - 4 * 512);
+        assert_eq!(m.huge_2m()[0], 4);
+        assert_eq!(m.per_node()[0], 10_000 - 4 * 512);
         assert_eq!(m.total(), 10_000, "promotion conserves bytes");
         assert_eq!(m.mappings(), 10_000 - 4 * 512 + 4);
     }
@@ -404,7 +497,7 @@ mod tests {
     fn promote_to_huge_zero_frac_is_noop() {
         let mut m = PageMap::first_touch(2, 1000, &[1, 1]);
         assert_eq!(m.promote_to_huge(0.0, &[100, 100]), vec![0, 0]);
-        assert_eq!(m.huge_2m, vec![0, 0]);
+        assert_eq!(m.huge_2m(), &[0, 0]);
     }
 
     #[test]
@@ -413,8 +506,8 @@ mod tests {
         let mut m = PageMap::first_touch(2, 600_000, &[1, 0]);
         let taken = m.promote_to_tier(PageTier::Giant1G, 1.0, &[8, 8]);
         assert_eq!(taken, vec![2, 0]);
-        assert_eq!(m.giant_1g[0], 2);
-        assert_eq!(m.per_node[0], 600_000 - 2 * 262_144);
+        assert_eq!(m.giant_1g()[0], 2);
+        assert_eq!(m.per_node()[0], 600_000 - 2 * 262_144);
         assert_eq!(m.total(), 600_000);
         assert_eq!(m.mappings(), 600_000 - 2 * 262_144 + 2);
     }
@@ -422,14 +515,14 @@ mod tests {
     #[test]
     fn tiered_migration_prefers_big_pages_under_one_budget() {
         let mut m = PageMap::empty(2);
-        m.per_node[1] = 2048; // 2048 base equivalents
-        m.huge_2m[1] = 3; // 1536 equivalents in 3 ops
+        m.per_node_mut()[1] = 2048; // 2048 base equivalents
+        m.huge_2m_mut()[1] = 3; // 1536 equivalents in 3 ops
         let moved = m.migrate_toward(0, 2000);
         assert_eq!(moved, 2000);
         // All 3 huge pages moved first (1536 equiv, 3 ops), then 464
         // base pages (464 ops).
-        assert_eq!(m.huge_2m[0], 3);
-        assert_eq!(m.per_node[0], 464);
+        assert_eq!(m.huge_2m()[0], 3);
+        assert_eq!(m.per_node()[0], 464);
         assert_eq!(m.migrate_ops, 3 + 464);
         assert_eq!(m.migrated_total, 2000);
     }
@@ -437,19 +530,18 @@ mod tests {
     #[test]
     fn whole_pages_only_budget_below_tier_size() {
         let mut m = PageMap::empty(2);
-        m.huge_2m[1] = 2;
+        m.huge_2m_mut()[1] = 2;
         // Budget smaller than one huge page: nothing can move.
         assert_eq!(m.migrate_toward(0, 100), 0);
-        assert_eq!(m.huge_2m, vec![0, 2]);
+        assert_eq!(m.huge_2m(), &[0, 2]);
         assert_eq!(m.migrate_ops, 0);
     }
 
     #[test]
     fn tiered_migration_conserves_totals_across_tiers() {
         let mut m = PageMap::empty(3);
-        m.per_node = vec![100, 700, 0];
-        m.huge_2m = vec![0, 2, 1];
-        m.giant_1g = vec![0, 0, 0];
+        m.per_node_mut().copy_from_slice(&[100, 700, 0]);
+        m.huge_2m_mut().copy_from_slice(&[0, 2, 1]);
         let before = m.total();
         m.migrate_toward(0, 5_000);
         assert_eq!(m.total(), before);
@@ -459,12 +551,12 @@ mod tests {
     #[test]
     fn giant_pages_move_first_and_cost_one_op() {
         let mut m = PageMap::empty(2);
-        m.giant_1g[1] = 1; // 262144 equivalents
-        m.per_node[1] = 10;
+        m.giant_1g_mut()[1] = 1; // 262144 equivalents
+        m.per_node_mut()[1] = 10;
         let moved = m.migrate_from(1, 0, 262_144);
         assert_eq!(moved, 262_144);
-        assert_eq!(m.giant_1g[0], 1);
-        assert_eq!(m.per_node[1], 10, "budget exhausted by the giant page");
+        assert_eq!(m.giant_1g()[0], 1);
+        assert_eq!(m.per_node()[1], 10, "budget exhausted by the giant page");
         assert_eq!(m.migrate_ops, 1);
     }
 
@@ -483,18 +575,30 @@ mod tests {
         // even total-preserving permutations.
         let g1 = m.generation();
         let f1 = m.fingerprint();
-        let (a, b) = (m.per_node[0], m.per_node[1]);
-        m.per_node = vec![b, a];
+        let (a, b) = (m.per_node()[0], m.per_node()[1]);
+        m.per_node_mut().copy_from_slice(&[b, a]);
         assert_eq!(m.generation(), g1);
         assert_ne!(m.fingerprint(), f1);
+        assert_eq!(m.epoch(), (m.generation(), m.fingerprint()));
+    }
+
+    #[test]
+    fn tier_accessor_matches_named_slices() {
+        let mut m = PageMap::empty(2);
+        m.per_node_mut()[0] = 7;
+        m.huge_2m_mut()[1] = 3;
+        m.giant_1g_mut()[0] = 1;
+        assert_eq!(m.tier(PageTier::Base4K), m.per_node());
+        assert_eq!(m.tier(PageTier::Huge2M), m.huge_2m());
+        assert_eq!(m.tier(PageTier::Giant1G), m.giant_1g());
     }
 
     #[test]
     fn node_total_mixes_tiers() {
         let mut m = PageMap::empty(2);
-        m.per_node[0] = 7;
-        m.huge_2m[0] = 2;
-        m.giant_1g[0] = 1;
+        m.per_node_mut()[0] = 7;
+        m.huge_2m_mut()[0] = 2;
+        m.giant_1g_mut()[0] = 1;
         assert_eq!(m.node_total(0), 7 + 1024 + 262_144);
         assert_eq!(m.total(), m.node_total(0));
     }

@@ -33,6 +33,33 @@ pub struct SimProcess {
     /// Running average of instantaneous speed (for metrics).
     pub speed_sum: f64,
     pub speed_samples: u64,
+    /// Reused tick buffers + the epoch-keyed fraction cache (see
+    /// [`TickScratch`]). Pure derived state: never read outside one
+    /// `Machine::step` call except through its own validity key.
+    pub scratch: TickScratch,
+}
+
+/// Per-process hot-loop scratch, persisted across ticks so `step()`
+/// does zero per-process allocations at fleet scale. `fracs` doubles
+/// as a cache: it is keyed on the page map's `(generation,
+/// fingerprint)` epoch, so a process whose pages did not move skips
+/// the per-node division pass entirely — the same epoch contract the
+/// numa_maps render cache and the monitor's incremental snapshots
+/// validate against. Cached values are bit-identical to recomputation
+/// (they *are* the previous computation's output, and any content
+/// change moves the epoch).
+#[derive(Clone, Debug, Default)]
+pub struct TickScratch {
+    /// Cached `pages.fractions()` output.
+    pub fracs: Vec<f64>,
+    /// Epoch the cached fractions were computed at.
+    pub fracs_epoch: Option<(u64, u64)>,
+    /// Threads-per-node buffer (placement changes every balancer pass,
+    /// so this one is recomputed each tick — but into a reused buffer).
+    pub tpn: Vec<u64>,
+    /// Per-thread speed/share buffers for the coupling pass.
+    pub speeds: Vec<f64>,
+    pub shares: Vec<f64>,
 }
 
 impl SimProcess {
@@ -60,6 +87,7 @@ impl SimProcess {
             last_migration_ms: f64::NEG_INFINITY,
             speed_sum: 0.0,
             speed_samples: 0,
+            scratch: TickScratch::default(),
         }
     }
 
@@ -73,11 +101,24 @@ impl SimProcess {
 
     /// Threads per node, given the core->node mapping width.
     pub fn threads_per_node(&self, nodes: usize, cores_per_node: usize) -> Vec<u64> {
-        let mut out = vec![0u64; nodes];
+        let mut out = Vec::new();
+        self.threads_per_node_into(nodes, cores_per_node, &mut out);
+        out
+    }
+
+    /// [`Self::threads_per_node`] into a reused buffer (the tick hot
+    /// loop's zero-allocation variant). Identical values.
+    pub fn threads_per_node_into(
+        &self,
+        nodes: usize,
+        cores_per_node: usize,
+        out: &mut Vec<u64>,
+    ) {
+        out.clear();
+        out.resize(nodes, 0);
         for &c in &self.threads_core {
             out[c / cores_per_node] += 1;
         }
-        out
     }
 
     /// Node hosting the majority of threads (ties -> lowest id).

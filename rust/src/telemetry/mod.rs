@@ -100,6 +100,10 @@ pub struct MetricIds {
     pub move_faults: CounterId,
     pub migrate_faults: CounterId,
     pub evacuations: CounterId,
+    /// Incremental snapshots: pids served from the monitor's epoch
+    /// cache vs full numa_maps reads against epoch-advertising sources.
+    pub monitor_incr_hits: CounterId,
+    pub monitor_incr_misses: CounterId,
     // Gauges (last-value).
     pub procs_running: GaugeId,
     pub node_rho_max: GaugeId,
@@ -164,6 +168,8 @@ impl Telemetry {
             move_faults: r.counter("move_faults"),
             migrate_faults: r.counter("migrate_faults"),
             evacuations: r.counter("evacuations"),
+            monitor_incr_hits: r.counter("monitor_incr_hits"),
+            monitor_incr_misses: r.counter("monitor_incr_misses"),
             procs_running: r.gauge("procs_running"),
             node_rho_max: r.gauge("node_rho_max"),
             link_rho_max: r.gauge("link_rho_max"),

@@ -49,7 +49,10 @@ fn percentile_sorted(v: &[f64], p: f64) -> f64 {
     }
 }
 
-/// Percentile (0..=100) with linear interpolation; NaN-free input assumed.
+/// Percentile (0..=100) with linear interpolation. NaN-safe: sorts by
+/// IEEE 754 total order (`f64::total_cmp`), which places NaN after
+/// +inf instead of panicking mid-sort, so a single poisoned sample in
+/// a metric series degrades one tail value rather than the whole run.
 /// Clones and sorts per call — when several percentiles are taken over
 /// the same data, build a [`Percentiles`] once instead.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
@@ -57,7 +60,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     percentile_sorted(&v, p)
 }
 
@@ -74,9 +77,10 @@ impl Percentiles {
         Self::from_vec(xs.to_vec())
     }
 
-    /// Take ownership of the samples (no copy).
+    /// Take ownership of the samples (no copy). NaN-safe total-order
+    /// sort: NaNs land above +inf deterministically.
     pub fn from_vec(mut xs: Vec<f64>) -> Self {
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(f64::total_cmp);
         Self { sorted: xs }
     }
 
@@ -139,7 +143,7 @@ pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
 /// Ranks with ties broken by average rank (for Spearman).
 fn ranks(xs: &[f64]) -> Vec<f64> {
     let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    idx.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]));
     let mut r = vec![0.0; xs.len()];
     let mut i = 0;
     while i < idx.len() {
@@ -265,6 +269,31 @@ mod tests {
         assert_eq!(p.p(50.0), 0.0);
         assert_eq!(p.min(), 0.0);
         assert_eq!(p.max(), 0.0);
+    }
+
+    #[test]
+    fn nan_samples_sort_deterministically_instead_of_panicking() {
+        // Regression: `partial_cmp(..).unwrap()` panicked on the first
+        // NaN comparison. Total order must sort NaN above +inf and give
+        // the same answer every time.
+        let xs = [3.0, f64::NAN, 1.0, f64::INFINITY, 2.0];
+        let p = Percentiles::new(&xs);
+        assert_eq!(p.min(), 1.0);
+        assert!(p.max().is_nan(), "NaN sorts after +inf in total order");
+        assert_eq!(p.p(0.0), 1.0);
+        assert_eq!(p.p(25.0), 2.0);
+        assert_eq!(p.p(50.0), 3.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        // Deterministic: repeated builds agree element-for-element.
+        let q = Percentiles::new(&xs);
+        for pct in [0.0, 25.0, 50.0, 75.0] {
+            assert_eq!(p.p(pct), q.p(pct));
+        }
+        // Spearman's rank sort must also survive NaN (ranks are still
+        // well-defined under total order).
+        let ys = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let rho = spearman(&xs, &ys);
+        assert!(rho.is_finite() || rho.is_nan()); // no panic is the contract
     }
 
     #[test]

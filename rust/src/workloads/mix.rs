@@ -128,6 +128,28 @@ pub fn churn_job(name: &str, work_units: f64) -> LaunchSpec {
     s
 }
 
+/// Fleet-scale synthetic population: `n` single-threaded residents
+/// cycling over four catalog shapes (two memory-intensive, two
+/// CPU-leaning), sized for the `64node-fleet` preset's ten-thousand-pid
+/// scale tier. Infinite work keeps the population stable under
+/// measurement; slim working sets keep spawn-time first-touch and
+/// per-tick page math from dominating. Deterministic: index `i` always
+/// produces the same spec.
+pub fn fleet_mix(n: usize) -> Vec<LaunchSpec> {
+    const SHAPES: [&str; 4] = ["canneal", "streamcluster", "blackscholes", "swaptions"];
+    (0..n)
+        .map(|i| {
+            let mut s = parsec::spec(SHAPES[i % SHAPES.len()]).expect("catalog shape");
+            s.comm = format!("fleet-{i}");
+            s.threads = 1;
+            s.importance = 1.0;
+            s.behavior.work_units = f64::INFINITY;
+            s.behavior.ws_pages = 2_000 + (i % 7) as u64 * 500;
+            s
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -183,6 +205,24 @@ mod tests {
         assert!(!j.behavior.is_daemon());
         assert_eq!(j.behavior.work_units, 800.0);
         j.behavior.validate().unwrap();
+    }
+
+    #[test]
+    fn fleet_mix_is_deterministic_and_slim() {
+        let a = fleet_mix(100);
+        let b = fleet_mix(100);
+        assert_eq!(a.len(), 100);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.comm, y.comm);
+            assert_eq!(x.behavior.ws_pages, y.behavior.ws_pages);
+            x.behavior.validate().unwrap();
+        }
+        assert_eq!(a[0].comm, "fleet-0");
+        assert!(a.iter().all(|s| s.threads == 1 && s.behavior.is_daemon()));
+        assert!(
+            a.iter().all(|s| s.behavior.ws_pages <= 5_000),
+            "fleet residents must stay slim"
+        );
     }
 
     #[test]

@@ -100,7 +100,7 @@ fn prop_machine_charges_exactly_the_routed_links() {
             let total = p.pages.total();
             let mut v = vec![0; 8];
             v[mem] = total;
-            p.pages.per_node = v;
+            p.pages.per_node_mut().copy_from_slice(&v);
         }
         m.step();
         let rho = m.fabric_link_rho().expect("fabric machine");

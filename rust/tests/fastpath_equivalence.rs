@@ -79,7 +79,7 @@ fn fast_path_sees_huge_tiers_identically() {
             .processes()
             .find(|p| p.comm == "alpha")
             .expect("alpha exists");
-        assert_eq!(alpha.huge_2m_per_node, sim_p.pages.huge_2m, "{preset}");
+        assert_eq!(alpha.huge_2m_per_node, sim_p.pages.huge_2m(), "{preset}");
         assert!(
             alpha.huge_2m_per_node.iter().sum::<u64>() > 0,
             "{preset}: the THP working set must be visible through text"
@@ -118,10 +118,10 @@ fn direct_page_writes_are_caught_by_the_fingerprint() {
     monitor.sample_into(&m, m.now_ms, &mut snap, &mut bufs); // warm the cache
     {
         let p = m.process_mut(pid).unwrap();
-        let base: u64 = p.pages.per_node.iter().sum();
-        let huge: u64 = p.pages.huge_2m.iter().sum();
-        p.pages.per_node = vec![0, base];
-        p.pages.huge_2m = vec![0, huge];
+        let base: u64 = p.pages.per_node().iter().sum();
+        let huge: u64 = p.pages.huge_2m().iter().sum();
+        p.pages.per_node_mut().copy_from_slice(&[0, base]);
+        p.pages.huge_2m_mut().copy_from_slice(&[0, huge]);
     }
     monitor.sample_into(&m, m.now_ms, &mut snap, &mut bufs);
     let reference = monitor.sample(&m, m.now_ms);
@@ -129,6 +129,32 @@ fn direct_page_writes_are_caught_by_the_fingerprint() {
     let task = snap.task(pid).expect("task sampled");
     assert_eq!(task.pages_per_node[0], 0, "stranding must be visible");
     assert!(task.pages_per_node[1] > 0);
+}
+
+#[test]
+fn incremental_snapshots_match_cold_reads_across_presets() {
+    // A warm monitor serving unchanged pids from its epoch cache must
+    // stay field-identical to a cold monitor's full read on every
+    // preset — the incremental path's bit-identity contract.
+    for preset in PRESETS {
+        let mut m = build(preset, 13);
+        let warm = Monitor::discover(&m).unwrap();
+        let mut snap = Snapshot::default();
+        let mut bufs = SampleBufs::new();
+        for round in 0..3 {
+            warm.sample_into(&m, m.now_ms, &mut snap, &mut bufs);
+            let cold = Monitor::discover(&m).unwrap();
+            assert_eq!(
+                snap,
+                cold.sample(&m, m.now_ms),
+                "preset {preset}, round {round}"
+            );
+            for _ in 0..5 {
+                m.step();
+            }
+        }
+        assert!(warm.incr_hits() > 0, "preset {preset}: epoch cache never hit");
+    }
 }
 
 fn grid() -> Vec<runner::RunParams> {

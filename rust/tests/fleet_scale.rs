@@ -1,0 +1,154 @@
+//! Fleet-scale determinism: on the `64node-fleet` preset under churn
+//! (fork storms, daemon bursts, kills), the work-stealing sweep pool
+//! must reproduce a serial pass bit-for-bit, and the monitor's
+//! incremental (epoch-served) snapshots must stay field-identical to a
+//! cold monitor's full reads. Cells include the StaticTuning policy so
+//! debug builds arm the placement-ledger invariant oracle over the
+//! pinned finite jobs.
+
+use numasched::config::{MachineConfig, PolicyKind, SchedulerConfig};
+use numasched::experiments::runner::{self, RunParams, RunResult};
+use numasched::experiments::sweep;
+use numasched::monitor::{Monitor, SampleBufs, Snapshot};
+use numasched::scenario::{Event, TimedEvent};
+use numasched::sim::{Machine, Placement};
+use numasched::topology::NumaTopology;
+use numasched::workloads::mix;
+
+/// Everything observable about a run except wall-clock timings
+/// (`epoch_ns` is real time and legitimately differs between passes).
+fn fingerprint(r: &RunResult) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "policy={:?} seed={} end={} migrations={} pages={} decisions={}",
+        r.policy, r.seed, r.end_ms, r.total_migrations, r.total_pages_migrated,
+        r.scheduler_decisions
+    );
+    for p in &r.procs {
+        let _ = writeln!(
+            s,
+            "  pid={} comm={} imp={} runtime={:?} speed={} migr={} windows={:?}",
+            p.pid, p.comm, p.importance, p.runtime_ms, p.mean_speed, p.migrations,
+            p.window_throughput
+        );
+    }
+    s
+}
+
+/// One fleet cell: 60 synthetic residents plus two finite named jobs
+/// (the StaticTuning pin set), with a fork storm and kills mid-run.
+fn fleet_params(policy: PolicyKind, seed: u64) -> RunParams {
+    let mut specs = mix::fleet_mix(60);
+    specs.push(mix::churn_job("churn-a", 400.0));
+    specs.push(mix::churn_job("churn-b", 600.0));
+    RunParams {
+        machine: MachineConfig::preset("64node-fleet").expect("preset"),
+        scheduler: SchedulerConfig { policy, ..Default::default() },
+        specs,
+        seed,
+        horizon_ms: 500.0,
+        window_ms: 100.0,
+        events: vec![
+            // Fork storm: one resident spawns a brood, then a cron burst.
+            TimedEvent::at(120.0, Event::Fork { comm: "fleet-3".into(), children: 4 }),
+            TimedEvent::at(150.0, Event::DaemonBurst { count: 25, work_units: 40.0 }),
+            // Kills: a long-lived resident and the whole brood.
+            TimedEvent::at(250.0, Event::Exit { comm: "fleet-7".into() }),
+            TimedEvent::at(320.0, Event::Exit { comm: "fleet-3-kid".into() }),
+        ],
+        ..Default::default()
+    }
+}
+
+fn fleet_cells() -> Vec<RunParams> {
+    let mut cells = Vec::new();
+    for &policy in &[
+        PolicyKind::Default,
+        PolicyKind::AutoNuma,
+        PolicyKind::StaticTuning,
+    ] {
+        for seed in [3u64, 11] {
+            cells.push(fleet_params(policy, seed));
+        }
+    }
+    cells
+}
+
+#[test]
+fn work_stealing_sweep_is_bit_identical_to_serial_at_fleet_scale() {
+    let cells = fleet_cells();
+    let serial: Vec<String> =
+        cells.iter().map(|c| fingerprint(&runner::run(c))).collect();
+    // Worker counts above and away from the cell count: stealing (and
+    // idle workers at 7) must not perturb a single observable bit.
+    for workers in [4usize, 7] {
+        let parallel = sweep::map_with(&cells, workers, runner::run);
+        assert_eq!(parallel.len(), serial.len());
+        for (i, (want, got)) in serial.iter().zip(&parallel).enumerate() {
+            assert_eq!(
+                want,
+                &fingerprint(got),
+                "cell {i} diverged under {workers} workers"
+            );
+        }
+    }
+}
+
+#[test]
+fn incremental_snapshots_survive_fleet_churn_bit_identically() {
+    let topo =
+        NumaTopology::from_config(&MachineConfig::preset("64node-fleet").expect("preset"));
+    let mut m = Machine::new(topo, 23);
+    let mut pids: Vec<i32> = mix::fleet_mix(80)
+        .into_iter()
+        .map(|s| m.spawn(&s.comm, s.behavior, s.importance, s.threads, Placement::LeastLoaded))
+        .collect();
+    let warm = Monitor::discover(&m).expect("discover");
+    let mut snap = Snapshot::default();
+    let mut bufs = SampleBufs::new();
+    for round in 0..12 {
+        m.step();
+        match round {
+            // Fork storm: five residents each spawn a twin.
+            3 => {
+                for k in 0..5 {
+                    let child = m
+                        .fork(pids[k], &format!("fleet-{k}-kid"))
+                        .expect("fork a running resident");
+                    pids.push(child);
+                }
+            }
+            // A migration moves one pid's page-map epoch.
+            6 => {
+                let moved = m.migrate_pages(pids[0], 9, 1_500);
+                assert!(moved > 0, "migration must move pages");
+            }
+            // Kill a batch of residents.
+            8 => {
+                for k in 10..14 {
+                    assert!(m.kill(pids[k]), "resident must be killable");
+                }
+            }
+            _ => {}
+        }
+        warm.sample_into(&m, m.now_ms, &mut snap, &mut bufs);
+        let cold = Monitor::discover(&m).expect("discover");
+        let reference = cold.sample(&m, m.now_ms);
+        assert_eq!(
+            snap, reference,
+            "round {round}: warm incremental snapshot diverged from a cold full read"
+        );
+    }
+    assert!(
+        warm.incr_hits() > 0,
+        "stable residents must be served from the epoch cache"
+    );
+    assert!(
+        warm.incr_misses() > 0,
+        "churned pids must take the full read path"
+    );
+    // The allocating warm path shares the same cache and agrees too.
+    assert_eq!(warm.sample(&m, m.now_ms), snap);
+}

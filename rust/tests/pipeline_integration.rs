@@ -37,7 +37,7 @@ fn pipeline_repatriates_misplaced_important_task() {
         // Strand the victim's memory on node 0.
         let p = m.process_mut(victim).unwrap();
         let total = p.pages.total();
-        p.pages.per_node = vec![total, 0, 0, 0];
+        p.pages.per_node_mut().copy_from_slice(&[total, 0, 0, 0]);
     }
     let (monitor, mut reporter, mut sched) = pipeline(&m);
     let mut moved = false;
@@ -168,8 +168,8 @@ fn prop_monitor_reflects_ground_truth() {
             if t.rss_pages != p.pages.total() {
                 return Err(format!("pid {}: rss {} != {}", t.pid, t.rss_pages, p.pages.total()));
             }
-            if t.pages_per_node != p.pages.per_node {
-                return Err(format!("pid {}: pages {:?} != {:?}", t.pid, t.pages_per_node, p.pages.per_node));
+            if t.pages_per_node != p.pages.per_node() {
+                return Err(format!("pid {}: pages {:?} != {:?}", t.pid, t.pages_per_node, p.pages.per_node()));
             }
             if t.node != p.home_node(4, 10) && t.threads == 1 {
                 return Err(format!("pid {}: node {} != {}", t.pid, t.node, p.home_node(4, 10)));
