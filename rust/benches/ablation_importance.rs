@@ -5,6 +5,10 @@
 //! speedup of the *important* (measured) apps under the proposed
 //! policy. `cargo bench --bench ablation_importance`
 
+// Benches measure wall time by definition; the determinism lint and
+// clippy both quarantine the clock elsewhere in the crate.
+#![allow(clippy::disallowed_methods)]
+
 use numasched::config::PolicyKind;
 use numasched::experiments::report::{f2, Table};
 use numasched::experiments::runner::run;

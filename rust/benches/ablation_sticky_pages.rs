@@ -6,6 +6,10 @@
 //! of the proposed system's win comes from memory following the task.
 //! `cargo bench --bench ablation_sticky_pages`
 
+// Benches measure wall time by definition; the determinism lint and
+// clippy both quarantine the clock elsewhere in the crate.
+#![allow(clippy::disallowed_methods)]
+
 use numasched::config::PolicyKind;
 use numasched::experiments::report::{f2, Table};
 use numasched::experiments::runner::run;

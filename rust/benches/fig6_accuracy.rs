@@ -1,6 +1,10 @@
 //! Bench: regenerate Figure 6 (accuracy of the contention degradation
 //! factor). `cargo bench --bench fig6_accuracy`
 
+// Benches measure wall time by definition; the determinism lint and
+// clippy both quarantine the clock elsewhere in the crate.
+#![allow(clippy::disallowed_methods)]
+
 use numasched::experiments::fig6;
 
 fn main() {

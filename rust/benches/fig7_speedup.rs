@@ -5,6 +5,10 @@
 //!
 //! `cargo bench --bench fig7_speedup`
 
+// Benches measure wall time by definition; the determinism lint and
+// clippy both quarantine the clock elsewhere in the crate.
+#![allow(clippy::disallowed_methods)]
+
 use numasched::config::PolicyKind;
 use numasched::experiments::report::{f2, Table};
 use numasched::experiments::runner::run;

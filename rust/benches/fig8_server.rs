@@ -1,6 +1,10 @@
 //! Bench: regenerate Figure 8 (Apache / MySQL throughput improvement in
 //! the server environment). `cargo bench --bench fig8_server`
 
+// Benches measure wall time by definition; the determinism lint and
+// clippy both quarantine the clock elsewhere in the crate.
+#![allow(clippy::disallowed_methods)]
+
 use numasched::experiments::fig8;
 
 fn main() {

@@ -4,6 +4,10 @@
 //! from rendered sysfs/numa_maps text.
 //! `cargo bench --bench hugepage_ablation`
 
+// Benches measure wall time by definition; the determinism lint and
+// clippy both quarantine the clock elsewhere in the crate.
+#![allow(clippy::disallowed_methods)]
+
 use numasched::experiments::hugepage_ablation;
 
 fn main() {

@@ -1,6 +1,10 @@
 //! Bench: regenerate Table 1 (PARSEC characteristics, configured +
 //! measured). `cargo bench --bench table1_characteristics`
 
+// Benches measure wall time by definition; the determinism lint and
+// clippy both quarantine the clock elsewhere in the crate.
+#![allow(clippy::disallowed_methods)]
+
 use numasched::experiments::table1;
 
 fn main() {

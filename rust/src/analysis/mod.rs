@@ -1,0 +1,266 @@
+//! Determinism lint engine: repo-invariant static analysis.
+//!
+//! Every gate this reproduction stands on — byte-identical trace
+//! replay, serial==work-stealing sweep fingerprints, chaos
+//! byte-inertness, telemetry on/off equality — is a determinism
+//! invariant that used to live only in tests and reviewer memory. This
+//! module makes them machine-checked: a dependency-free, token-level
+//! static-analysis pass (no `syn`; see [`scan`]) plus structural
+//! registration checks (see [`structural`]), exposed as the
+//! `numasched lint [--json] [paths]` CLI verb and a blocking CI job.
+//!
+//! The rule catalog lives in [`rules`]; DESIGN.md "Static analysis"
+//! documents each rule and the historical bug that motivated it. Every
+//! token rule has an in-source escape hatch — a line comment of the
+//! form `lint:allow(rule-name) -- justification` on or just above the
+//! flagged line — and the JSON report surfaces every hatch in use, so
+//! reviewers see the full exemption surface, not just the violations.
+
+pub mod rules;
+pub mod scan;
+pub mod structural;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Schema tag of the JSON report.
+pub const JSON_SCHEMA: &str = "numasched-lint/v1";
+
+/// One rule violation, anchored to a file and (for token rules) a
+/// 1-based line. Structural findings use line 0 (file-level).
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+    /// Trimmed original source line, empty for file-level findings.
+    pub excerpt: String,
+}
+
+/// One `lint:allow` escape hatch in use, surfaced in the report.
+#[derive(Clone, Debug)]
+pub struct ReportedAllow {
+    pub file: String,
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// Result of a lint run: violations, the allow surface, and scan size.
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    pub files_scanned: usize,
+    pub violations: Vec<Violation>,
+    pub allows: Vec<ReportedAllow>,
+}
+
+impl LintReport {
+    /// True when no rule fired.
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Human-readable report: one `file:line: [rule] message` block per
+    /// violation (with the offending line indented under it), then a
+    /// one-line summary.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for v in &self.violations {
+            s.push_str(&format!("{}:{}: [{}] {}\n", v.file, v.line, v.rule, v.message));
+            if !v.excerpt.is_empty() {
+                s.push_str(&format!("    {}\n", v.excerpt));
+            }
+        }
+        let state = if self.is_clean() { "clean" } else { "dirty" };
+        s.push_str(&format!(
+            "lint: {state} — {} violation(s), {} allow(s), {} file(s) scanned\n",
+            self.violations.len(),
+            self.allows.len(),
+            self.files_scanned
+        ));
+        s
+    }
+
+    /// Machine-readable report under the `numasched-lint/v1` schema.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"schema\": \"{JSON_SCHEMA}\",\n"));
+        s.push_str(&format!("  \"files_scanned\": {},\n", self.files_scanned));
+        s.push_str(&format!("  \"clean\": {},\n", self.is_clean()));
+        s.push_str("  \"violations\": [\n");
+        for (i, v) in self.violations.iter().enumerate() {
+            let sep = if i + 1 < self.violations.len() { "," } else { "" };
+            s.push_str(&format!(
+                "    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \
+                 \"message\": \"{}\", \"excerpt\": \"{}\"}}{sep}\n",
+                esc(&v.file),
+                v.line,
+                esc(v.rule),
+                esc(&v.message),
+                esc(&v.excerpt)
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"allows\": [\n");
+        for (i, a) in self.allows.iter().enumerate() {
+            let sep = if i + 1 < self.allows.len() { "," } else { "" };
+            s.push_str(&format!(
+                "    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \
+                 \"reason\": \"{}\"}}{sep}\n",
+                esc(&a.file),
+                a.line,
+                esc(&a.rule),
+                esc(&a.reason)
+            ));
+        }
+        s.push_str("  ]\n");
+        s.push_str("}\n");
+        s
+    }
+}
+
+/// Lint the whole repo: every `.rs` file under `rust/src` plus the
+/// structural registration checks. `root` is the repo root (the
+/// directory holding Cargo.toml).
+pub fn lint_tree(root: &Path) -> io::Result<LintReport> {
+    let mut report = lint_paths(root, &[PathBuf::from("rust/src")])?;
+    report.violations.extend(structural::check(root)?);
+    Ok(report)
+}
+
+/// Lint specific files or directories (token rules only — the
+/// structural checks need the whole tree and run in [`lint_tree`]).
+/// Relative paths resolve against `root`; reported paths are
+/// root-relative where possible.
+pub fn lint_paths(root: &Path, paths: &[PathBuf]) -> io::Result<LintReport> {
+    let mut files = Vec::new();
+    for p in paths {
+        let abs = if p.is_absolute() { p.clone() } else { root.join(p) };
+        collect_rs(&abs, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    let mut report = LintReport::default();
+    for f in &files {
+        let text = fs::read_to_string(f)?;
+        let sf = scan::scan(&text);
+        let shown = display_path(root, f);
+        report.violations.extend(rules::check_file(&shown, &sf));
+        for a in &sf.allows {
+            // Pragmas naming unknown rules (doc examples and the like)
+            // are not part of the exemption surface.
+            if rules::ALL.contains(&a.rule.as_str()) {
+                report.allows.push(ReportedAllow {
+                    file: shown.clone(),
+                    line: a.line,
+                    rule: a.rule.clone(),
+                    reason: a.reason.clone(),
+                });
+            }
+        }
+        report.files_scanned += 1;
+    }
+    Ok(report)
+}
+
+/// Recursively collect `.rs` files; an explicitly named file is taken
+/// as-is regardless of extension.
+fn collect_rs(path: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if path.is_file() {
+        out.push(path.to_path_buf());
+        return Ok(());
+    }
+    for entry in fs::read_dir(path)? {
+        let entry = entry?;
+        let p = entry.path();
+        if entry.file_type()?.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Root-relative forward-slash path for reports.
+fn display_path(root: &Path, f: &Path) -> String {
+    f.strip_prefix(root).unwrap_or(f).to_string_lossy().replace('\\', "/")
+}
+
+/// Minimal JSON string escape (quotes, backslashes, control chars).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> LintReport {
+        LintReport {
+            files_scanned: 2,
+            violations: vec![Violation {
+                file: "rust/src/x.rs".to_string(),
+                line: 3,
+                rule: rules::WALL_CLOCK,
+                message: "msg with \"quotes\"".to_string(),
+                excerpt: "let t = now();".to_string(),
+            }],
+            allows: vec![ReportedAllow {
+                file: "rust/src/y.rs".to_string(),
+                line: 9,
+                rule: rules::WALL_CLOCK.to_string(),
+                reason: "bench timing".to_string(),
+            }],
+        }
+    }
+
+    #[test]
+    fn render_lists_violations_and_summary() {
+        let r = sample_report();
+        let text = r.render();
+        assert!(text.contains("rust/src/x.rs:3: [wall-clock]"));
+        assert!(text.contains("    let t = now();"));
+        assert!(text.contains("1 violation(s), 1 allow(s), 2 file(s) scanned"));
+        assert!(text.contains("dirty"));
+    }
+
+    #[test]
+    fn json_report_is_escaped_and_tagged() {
+        let r = sample_report();
+        let j = r.to_json();
+        assert!(j.contains("\"schema\": \"numasched-lint/v1\""));
+        assert!(j.contains("\"clean\": false"));
+        assert!(j.contains("msg with \\\"quotes\\\""));
+        assert!(j.contains("\"reason\": \"bench timing\""));
+    }
+
+    #[test]
+    fn empty_report_is_clean() {
+        let r = LintReport::default();
+        assert!(r.is_clean());
+        assert!(r.render().contains("clean"));
+        assert!(r.to_json().contains("\"clean\": true"));
+    }
+
+    #[test]
+    fn esc_handles_control_chars() {
+        assert_eq!(esc("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(esc("\u{1}"), "\\u0001");
+    }
+}

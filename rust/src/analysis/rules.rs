@@ -1,0 +1,344 @@
+//! Rule catalog for the determinism lint engine.
+//!
+//! Each rule encodes an invariant this repo has already paid for once
+//! (DESIGN.md "Static analysis" lists the motivating incidents). Rules
+//! run over [`ScannedFile`]s — blanked code with comments and string
+//! literals removed — so needles never fire inside docs or literals,
+//! and every rule honors the `lint:allow(rule)` escape hatch plus the
+//! `#[cfg(test)] mod` exemption (tests may print, unwrap, and read
+//! clocks freely).
+//!
+//! Rule scopes match on path *suffixes*, so the checks behave the same
+//! whether the engine is handed absolute paths or repo-relative ones.
+
+use super::scan::ScannedFile;
+use super::Violation;
+
+/// `Instant::now`/`SystemTime` outside `telemetry/spans.rs` or an
+/// annotated timing site.
+pub const WALL_CLOCK: &str = "wall-clock";
+/// `HashMap`/`HashSet` anywhere — iteration order breaks replay.
+pub const UNORDERED_COLLECTIONS: &str = "no-unordered-collections";
+/// `partial_cmp(..).unwrap()`-style comparators — panic or lie on NaN.
+pub const NAN_ORDERING: &str = "nan-unsafe-ordering";
+/// `unwrap`/`expect`/`panic!` in parser modules — typed errors only.
+pub const PANIC_PARSERS: &str = "panic-free-parsers";
+/// `println!`/`eprintln!` outside the CLI and `util::log`.
+pub const OUTPUT_HYGIENE: &str = "output-hygiene";
+/// Raw PageMap tier writes that bypass the generation bump.
+pub const ACCESSOR_DISCIPLINE: &str = "accessor-discipline";
+/// Cargo targets and catalog/golden registration drift.
+pub const STRUCTURAL_SYNC: &str = "structural-sync";
+
+/// Every rule name, for pragma validation and report grouping.
+pub const ALL: [&str; 7] = [
+    WALL_CLOCK,
+    UNORDERED_COLLECTIONS,
+    NAN_ORDERING,
+    PANIC_PARSERS,
+    OUTPUT_HYGIENE,
+    ACCESSOR_DISCIPLINE,
+    STRUCTURAL_SYNC,
+];
+
+/// Files where the wall clock is sanctioned wholesale: the telemetry
+/// span recorder is the designated quarantine zone.
+const WALL_CLOCK_FILES: [&str; 1] = ["telemetry/spans.rs"];
+
+/// Files allowed to emit terminal output.
+const OUTPUT_FILES: [&str; 3] = ["src/main.rs", "src/cli.rs", "util/log.rs"];
+
+/// Files allowed to use the raw `*_mut` PageMap tier accessors: the
+/// PageMap itself, the machine stepping it, and scenario/ablation setup
+/// code that rebuilds page vectors wholesale before a run.
+const ACCESSOR_FILES: [&str; 5] = [
+    "sim/page.rs",
+    "sim/machine.rs",
+    "scenario/mod.rs",
+    "experiments/hugepage_ablation.rs",
+    "experiments/fabric_ablation.rs",
+];
+
+/// Run every token-level rule against one scanned file. `path` should
+/// use forward slashes; rule scopes match on suffixes of it.
+pub fn check_file(path: &str, sf: &ScannedFile) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let path = path.replace('\\', "/");
+    wall_clock(&path, sf, &mut out);
+    unordered_collections(&path, sf, &mut out);
+    nan_ordering(&path, sf, &mut out);
+    panic_free_parsers(&path, sf, &mut out);
+    output_hygiene(&path, sf, &mut out);
+    accessor_discipline(&path, sf, &mut out);
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+fn wall_clock(path: &str, sf: &ScannedFile, out: &mut Vec<Violation>) {
+    if WALL_CLOCK_FILES.iter().any(|f| path.ends_with(f)) {
+        return;
+    }
+    scan_needles(
+        WALL_CLOCK,
+        &["Instant::now", "SystemTime"],
+        "reads the wall clock outside telemetry::spans; annotate sanctioned timing sites",
+        path,
+        sf,
+        out,
+    );
+}
+
+fn unordered_collections(path: &str, sf: &ScannedFile, out: &mut Vec<Violation>) {
+    scan_needles(
+        UNORDERED_COLLECTIONS,
+        &["HashMap", "HashSet"],
+        "iterates in a per-process seeded order that breaks byte-identical replay; \
+         use BTreeMap/BTreeSet",
+        path,
+        sf,
+        out,
+    );
+}
+
+/// Needles that, appearing shortly after `partial_cmp`, turn a partial
+/// ordering into a panic (or a silent lie) on NaN.
+const NAN_SINKS: [&str; 4] = [".unwrap()", ".unwrap_or(", ".unwrap_or_else(", ".expect("];
+
+/// How far past `partial_cmp` the sink may appear: the rest of the
+/// line plus up to three rustfmt-wrapped continuation lines, capped so
+/// an unrelated `unwrap` further down cannot bleed into the window.
+const NAN_WINDOW_LINES: usize = 3;
+const NAN_WINDOW_CHARS: usize = 240;
+
+fn nan_ordering(path: &str, sf: &ScannedFile, out: &mut Vec<Violation>) {
+    for (idx, code) in sf.code.iter().enumerate() {
+        let line = idx + 1;
+        if sf.in_test(line) || sf.allowed(NAN_ORDERING, line) {
+            continue;
+        }
+        let Some(col) = code.find("partial_cmp") else { continue };
+        let mut window = String::new();
+        window.push_str(&code[col..]);
+        for follow in sf.code.iter().skip(idx + 1).take(NAN_WINDOW_LINES) {
+            window.push(' ');
+            window.push_str(follow);
+        }
+        let cap = window
+            .char_indices()
+            .nth(NAN_WINDOW_CHARS)
+            .map(|(at, _)| at)
+            .unwrap_or(window.len());
+        window.truncate(cap);
+        if NAN_SINKS.iter().any(|n| window.contains(n)) {
+            let msg = "`partial_cmp(..).unwrap()` comparator panics (or lies) on NaN and \
+                       poisons the ranking; use `total_cmp` or a NaN-safe key \
+                       (util::stats::cmp_f64_nan_low)";
+            push(out, path, line, NAN_ORDERING, sf, msg.to_string());
+        }
+    }
+}
+
+fn panic_free_parsers(path: &str, sf: &ScannedFile, out: &mut Vec<Violation>) {
+    if !(path.contains("/procfs/") || path.contains("/config/")) {
+        return;
+    }
+    scan_needles(
+        PANIC_PARSERS,
+        &[".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("],
+        "can panic inside a parser; parsers return typed ParseError on mangled input",
+        path,
+        sf,
+        out,
+    );
+}
+
+fn output_hygiene(path: &str, sf: &ScannedFile, out: &mut Vec<Violation>) {
+    if OUTPUT_FILES.iter().any(|f| path.ends_with(f)) {
+        return;
+    }
+    scan_needles(
+        OUTPUT_HYGIENE,
+        &["println!", "eprintln!", "print!", "eprint!", "dbg!"],
+        "writes to the terminal outside cli.rs/main.rs/util::log; route through util::log",
+        path,
+        sf,
+        out,
+    );
+}
+
+fn accessor_discipline(path: &str, sf: &ScannedFile, out: &mut Vec<Violation>) {
+    if ACCESSOR_FILES.iter().any(|f| path.ends_with(f)) {
+        return;
+    }
+    scan_needles(
+        ACCESSOR_DISCIPLINE,
+        &["per_node_mut", "huge_2m_mut", "giant_1g_mut"],
+        "writes PageMap tiers raw, bypassing the generation bump that keys the \
+         incremental-snapshot cache; use migrate_*/promote_* or annotate setup code",
+        path,
+        sf,
+        out,
+    );
+}
+
+/// Shared scan loop: flag any needle that token-matches on a non-test,
+/// non-allowed line. One violation per line is enough.
+fn scan_needles(
+    rule: &'static str,
+    needles: &[&str],
+    label: &str,
+    path: &str,
+    sf: &ScannedFile,
+    out: &mut Vec<Violation>,
+) {
+    for (idx, code) in sf.code.iter().enumerate() {
+        let line = idx + 1;
+        if sf.in_test(line) || sf.allowed(rule, line) {
+            continue;
+        }
+        if let Some(needle) = needles.iter().find(|n| token_match(code, n)) {
+            push(out, path, line, rule, sf, format!("`{needle}` {label}"));
+        }
+    }
+}
+
+fn push(
+    out: &mut Vec<Violation>,
+    path: &str,
+    line: usize,
+    rule: &'static str,
+    sf: &ScannedFile,
+    message: String,
+) {
+    out.push(Violation {
+        file: path.to_string(),
+        line,
+        rule,
+        message,
+        excerpt: sf.raw.get(line - 1).map(|s| s.trim().to_string()).unwrap_or_default(),
+    });
+}
+
+/// True if `needle` occurs in `line` at a token boundary: the
+/// preceding char must not be part of an identifier, so `print!` does
+/// not match inside `println!` and `HashMap` not inside `MyHashMap`.
+fn token_match(line: &str, needle: &str) -> bool {
+    let mut from = 0;
+    while let Some(rel) = line[from..].find(needle) {
+        let at = from + rel;
+        let bounded = !line[..at]
+            .chars()
+            .next_back()
+            .is_some_and(|c| c.is_ascii_alphanumeric() || c == '_');
+        if bounded {
+            return true;
+        }
+        from = at + needle.len();
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scan::scan;
+
+    fn lint(path: &str, src: &str) -> Vec<Violation> {
+        check_file(path, &scan(src))
+    }
+
+    #[test]
+    fn token_match_requires_a_boundary() {
+        assert!(token_match("let m: HashMap<u32, u32>;", "HashMap"));
+        assert!(!token_match("let m: MyHashMap;", "HashMap"));
+        assert!(!token_match("eprintln!(\"x\")", "print!"));
+        assert!(token_match("x.eprint!", "eprint!"));
+        assert!(token_match(".partial_cmp(b)", "partial_cmp"));
+    }
+
+    #[test]
+    fn wall_clock_fires_outside_spans_only() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        assert_eq!(lint("rust/src/monitor/mod.rs", src).len(), 1);
+        assert!(lint("rust/src/telemetry/spans.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_import_alone_is_fine() {
+        let src = "use std::time::{Duration, Instant};\n";
+        assert!(lint("rust/src/monitor/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn nan_ordering_flags_unwrap_after_partial_cmp() {
+        let bad = "v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n";
+        let v = lint("rust/src/reporter/mod.rs", bad);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, NAN_ORDERING);
+
+        let wrapped = "a.s\n    .partial_cmp(&b.s)\n    .expect(\"no NaN\")\n";
+        assert_eq!(lint("rust/src/reporter/mod.rs", wrapped).len(), 1);
+    }
+
+    #[test]
+    fn nan_ordering_accepts_total_cmp_and_handled_partial_cmp() {
+        let good = "v.sort_by(|a, b| a.total_cmp(b));\n";
+        assert!(lint("rust/src/reporter/mod.rs", good).is_empty());
+        let handled = "match a.partial_cmp(b) {\n    Some(o) => o,\n    None => Less,\n}\n";
+        assert!(lint("rust/src/reporter/mod.rs", handled).is_empty());
+    }
+
+    #[test]
+    fn panic_free_parsers_scopes_to_parser_modules() {
+        let src = "let v = field.parse::<u64>().unwrap();\n";
+        assert_eq!(lint("rust/src/procfs/stat.rs", src).len(), 1);
+        assert_eq!(lint("rust/src/config/toml.rs", src).len(), 1);
+        assert!(lint("rust/src/scheduler/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_or_variants_are_not_panics() {
+        let src = "let v = field.parse::<u64>().unwrap_or(0);\n";
+        assert!(lint("rust/src/procfs/stat.rs", src).is_empty());
+    }
+
+    #[test]
+    fn output_hygiene_allows_cli_and_log() {
+        let src = "eprintln!(\"oops\");\n";
+        assert_eq!(lint("rust/src/scheduler/mod.rs", src).len(), 1);
+        assert!(lint("rust/src/main.rs", src).is_empty());
+        assert!(lint("rust/src/cli.rs", src).is_empty());
+        assert!(lint("rust/src/util/log.rs", src).is_empty());
+    }
+
+    #[test]
+    fn accessor_discipline_guards_mut_tier_slices() {
+        let src = "p.pages.per_node_mut()[0] += 1;\n";
+        assert_eq!(lint("rust/src/baselines/autonuma.rs", src).len(), 1);
+        assert!(lint("rust/src/sim/page.rs", src).is_empty());
+        assert!(lint("rust/src/scenario/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_pragma_suppresses_and_test_mods_are_exempt() {
+        let allowed = "// lint:allow(wall-clock) -- timing\nlet t0 = Instant::now();\n";
+        assert!(lint("rust/src/experiments/runner.rs", allowed).is_empty());
+
+        let tested = "#[cfg(test)]\nmod tests {\n    fn f() { let t = Instant::now(); }\n}\n";
+        assert!(lint("rust/src/experiments/runner.rs", tested).is_empty());
+    }
+
+    #[test]
+    fn needles_inside_strings_and_comments_do_not_fire() {
+        let src = "// HashMap would break replay\nlet s = \"Instant::now\";\n";
+        assert!(lint("rust/src/scheduler/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn violations_carry_the_raw_excerpt() {
+        let src = "let t = Instant::now();\n";
+        let v = lint("rust/src/monitor/mod.rs", src);
+        assert_eq!(v[0].excerpt, "let t = Instant::now();");
+        assert_eq!(v[0].line, 1);
+    }
+}

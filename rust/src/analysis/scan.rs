@@ -1,0 +1,438 @@
+//! Token-level source scanner for the determinism lint engine.
+//!
+//! The crate vendors nothing, so there is no `syn` here: `scan` walks a
+//! source file character by character and produces a *blanked* copy in
+//! which every comment, string literal, byte string, raw string, and
+//! char literal is replaced by spaces. The blanked text has exactly one
+//! output character per input character and every `\n` survives, so
+//! line numbers and column offsets in the blanked text map 1:1 onto the
+//! original file. Rules then run plain substring/token matching on the
+//! blanked lines without ever tripping on a needle that only appears
+//! inside a string or a comment.
+//!
+//! The scanner also extracts two side channels the rules need:
+//!
+//! * allow pragmas — line comments of the shape
+//!   `lint:allow(rule-name) -- justification` register an escape hatch
+//!   for that rule on the pragma's own line and the two lines below it
+//!   (comment line, optional `#[allow(..)]` attribute line, then the
+//!   flagged statement — the idiomatic annotation stack).
+//! * test regions — `#[cfg(test)] mod … { … }` blocks are brace-matched
+//!   and their line ranges recorded, so rules can exempt test code
+//!   (tests may `unwrap`, print, and read clocks freely).
+
+/// One `lint:allow(...)` escape hatch found in a line comment.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AllowPragma {
+    /// Rule name as written inside the parentheses.
+    pub rule: String,
+    /// 1-based line the pragma comment sits on.
+    pub line: usize,
+    /// Justification text after `--` (empty if none was given).
+    pub reason: String,
+}
+
+/// A scanned source file: blanked code, original lines, pragmas, and
+/// test-region markers.
+#[derive(Clone, Debug)]
+pub struct ScannedFile {
+    /// Lines with comments and literals blanked to spaces; same line
+    /// count and per-line char count as the original.
+    pub code: Vec<String>,
+    /// The original lines, used for report excerpts.
+    pub raw: Vec<String>,
+    /// Every allow pragma found, in file order.
+    pub allows: Vec<AllowPragma>,
+    /// Per-line flag: line is inside a `#[cfg(test)] mod` block.
+    test: Vec<bool>,
+}
+
+impl ScannedFile {
+    /// True if `rule` is allowed on 1-based `line`: a pragma covers its
+    /// own line and the two following lines.
+    pub fn allowed(&self, rule: &str, line: usize) -> bool {
+        self.allows
+            .iter()
+            .any(|a| a.rule == rule && line >= a.line && line <= a.line + 2)
+    }
+
+    /// True if 1-based `line` sits inside a `#[cfg(test)] mod` block.
+    pub fn in_test(&self, line: usize) -> bool {
+        line >= 1 && self.test.get(line - 1).copied().unwrap_or(false)
+    }
+}
+
+/// Scan `text` into blanked lines, pragmas, and test regions.
+pub fn scan(text: &str) -> ScannedFile {
+    let cs: Vec<char> = text.chars().collect();
+    let mut out = String::with_capacity(text.len());
+    let mut allows = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < cs.len() {
+        let c = cs[i];
+        let next = cs.get(i + 1).copied();
+        if c == '/' && next == Some('/') {
+            let start = i;
+            while i < cs.len() && cs[i] != '\n' {
+                i += 1;
+            }
+            let comment: String = cs[start..i].iter().collect();
+            if let Some(p) = parse_pragma(&comment, line) {
+                allows.push(p);
+            }
+            for _ in start..i {
+                out.push(' ');
+            }
+        } else if c == '/' && next == Some('*') {
+            out.push_str("  ");
+            i += 2;
+            let mut depth = 1usize;
+            while i < cs.len() && depth > 0 {
+                if cs[i] == '/' && cs.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if cs[i] == '*' && cs.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    blank_one(&cs, &mut i, &mut out, &mut line);
+                }
+            }
+        } else if c == '"' {
+            out.push(' ');
+            i += 1;
+            blank_string_body(&cs, &mut i, &mut out, &mut line);
+        } else if (c == 'r' || c == 'b') && !prev_is_ident(&cs, i) {
+            if !blank_prefixed_literal(&cs, &mut i, &mut out, &mut line) {
+                out.push(c);
+                i += 1;
+            }
+        } else if c == '\'' {
+            let is_char = match (cs.get(i + 1), cs.get(i + 2)) {
+                (Some('\\'), _) => true,
+                (Some(_), Some('\'')) => true,
+                _ => false,
+            };
+            if is_char {
+                out.push(' ');
+                i += 1;
+                blank_char_body(&cs, &mut i, &mut out, &mut line);
+            } else {
+                // Lifetime marker — real code, keep it.
+                out.push('\'');
+                i += 1;
+            }
+        } else if c == '\n' {
+            out.push('\n');
+            line += 1;
+            i += 1;
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+    let code: Vec<String> = out.lines().map(str::to_string).collect();
+    let raw: Vec<String> = text.lines().map(str::to_string).collect();
+    let test = mark_test_regions(&out, code.len());
+    ScannedFile { code, raw, allows, test }
+}
+
+/// Blank one char (preserving newlines) and advance.
+fn blank_one(cs: &[char], i: &mut usize, out: &mut String, line: &mut usize) {
+    if cs[*i] == '\n' {
+        out.push('\n');
+        *line += 1;
+    } else {
+        out.push(' ');
+    }
+    *i += 1;
+}
+
+/// Blank the body of a normal string literal; `i` is just past the
+/// opening quote. Consumes through the closing quote.
+fn blank_string_body(cs: &[char], i: &mut usize, out: &mut String, line: &mut usize) {
+    while *i < cs.len() {
+        match cs[*i] {
+            '\\' => {
+                blank_one(cs, i, out, line);
+                if *i < cs.len() {
+                    blank_one(cs, i, out, line);
+                }
+            }
+            '"' => {
+                out.push(' ');
+                *i += 1;
+                return;
+            }
+            _ => blank_one(cs, i, out, line),
+        }
+    }
+}
+
+/// Blank the body of a char (or byte-char) literal; `i` is just past
+/// the opening quote. Consumes through the closing quote.
+fn blank_char_body(cs: &[char], i: &mut usize, out: &mut String, line: &mut usize) {
+    while *i < cs.len() {
+        match cs[*i] {
+            '\\' => {
+                blank_one(cs, i, out, line);
+                if *i < cs.len() {
+                    blank_one(cs, i, out, line);
+                }
+            }
+            '\'' => {
+                out.push(' ');
+                *i += 1;
+                return;
+            }
+            _ => blank_one(cs, i, out, line),
+        }
+    }
+}
+
+/// Handle literals with an `r`/`b`/`br` prefix: raw strings, byte
+/// strings, and byte chars. Returns false if `cs[*i]` turns out to be a
+/// plain identifier character instead.
+fn blank_prefixed_literal(cs: &[char], i: &mut usize, out: &mut String, line: &mut usize) -> bool {
+    let start = *i;
+    let mut j = start + 1;
+    let mut raw = cs[start] == 'r';
+    if cs[start] == 'b' && cs.get(j) == Some(&'r') {
+        raw = true;
+        j += 1;
+    }
+    if raw {
+        let mut hashes = 0usize;
+        while cs.get(j) == Some(&'#') {
+            hashes += 1;
+            j += 1;
+        }
+        if cs.get(j) != Some(&'"') {
+            return false;
+        }
+        for _ in start..=j {
+            out.push(' ');
+        }
+        *i = j + 1;
+        // Scan for `"` followed by `hashes` hash marks.
+        while *i < cs.len() {
+            if cs[*i] == '"' && (1..=hashes).all(|k| cs.get(*i + k) == Some(&'#')) {
+                for _ in 0..=hashes {
+                    out.push(' ');
+                }
+                *i += 1 + hashes;
+                return true;
+            }
+            blank_one(cs, i, out, line);
+        }
+        return true;
+    }
+    // Plain `b` prefix: byte string or byte char.
+    match cs.get(j) {
+        Some('"') => {
+            out.push_str("  ");
+            *i = j + 1;
+            blank_string_body(cs, i, out, line);
+            true
+        }
+        Some('\'') => {
+            out.push_str("  ");
+            *i = j + 1;
+            blank_char_body(cs, i, out, line);
+            true
+        }
+        _ => false,
+    }
+}
+
+/// True if the char before index `i` can be part of an identifier —
+/// used to tell a raw-string prefix from the tail of a name like `attr`.
+fn prev_is_ident(cs: &[char], i: usize) -> bool {
+    i > 0 && {
+        let p = cs[i - 1];
+        p.is_ascii_alphanumeric() || p == '_'
+    }
+}
+
+/// Parse a `lint:allow(rule) -- reason` pragma out of one line comment.
+fn parse_pragma(comment: &str, line: usize) -> Option<AllowPragma> {
+    let tag = "lint:allow(";
+    let at = comment.find(tag)?;
+    let rest = &comment[at + tag.len()..];
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    let tail = rest[close + 1..].trim_start();
+    let reason = tail.strip_prefix("--").map(|r| r.trim().to_string()).unwrap_or_default();
+    Some(AllowPragma { rule, line, reason })
+}
+
+/// Mark the line ranges of `#[cfg(test)] mod … { … }` blocks in the
+/// blanked text (so the marker itself is never found inside a string).
+fn mark_test_regions(blanked: &str, lines: usize) -> Vec<bool> {
+    let mut test = vec![false; lines];
+    let marker = "#[cfg(test)]";
+    for (pos, _) in blanked.match_indices(marker) {
+        let b = blanked.as_bytes();
+        let mut k = pos + marker.len();
+        // Skip whitespace and further attributes to reach the item.
+        loop {
+            while k < b.len() && b[k].is_ascii_whitespace() {
+                k += 1;
+            }
+            if blanked[k..].starts_with("#[") {
+                let mut depth = 0usize;
+                while k < b.len() {
+                    match b[k] {
+                        b'[' => depth += 1,
+                        b']' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                k += 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+            } else {
+                break;
+            }
+        }
+        if !blanked[k..].starts_with("mod") {
+            continue;
+        }
+        let Some(open_rel) = blanked[k..].find('{') else { continue };
+        // `mod tests;` (out-of-line) has no body here.
+        if let Some(semi_rel) = blanked[k..].find(';') {
+            if semi_rel < open_rel {
+                continue;
+            }
+        }
+        let open = k + open_rel;
+        let mut depth = 0usize;
+        let mut close = blanked.len();
+        for (off, ch) in blanked[open..].char_indices() {
+            match ch {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        close = open + off;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let first = line_of(blanked, pos);
+        let last = line_of(blanked, close.min(blanked.len().saturating_sub(1)));
+        for l in test.iter_mut().take(last + 1).skip(first) {
+            *l = true;
+        }
+    }
+    test
+}
+
+/// 0-based line index of byte offset `off`.
+fn line_of(s: &str, off: usize) -> usize {
+    s.as_bytes()[..off.min(s.len())].iter().filter(|&&b| b == b'\n').count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let src = "let a = \"Instant::now\"; // Instant::now\nlet b = 1;\n";
+        let sf = scan(src);
+        assert_eq!(sf.code.len(), 2);
+        assert!(!sf.code[0].contains("Instant"));
+        assert_eq!(sf.code[0].len(), src.lines().next().unwrap().len());
+        assert_eq!(sf.code[1], "let b = 1;");
+    }
+
+    #[test]
+    fn block_comments_nest_and_keep_line_structure() {
+        let src = "a /* x /* y */ z\nstill comment */ b\nc\n";
+        let sf = scan(src);
+        assert_eq!(sf.code.len(), 3);
+        assert_eq!(sf.code[0].trim(), "a");
+        assert_eq!(sf.code[1].trim(), "b");
+        assert_eq!(sf.code[2].trim(), "c");
+    }
+
+    #[test]
+    fn raw_and_byte_strings_are_blanked() {
+        let src = "let a = r#\"HashMap \" quote\"#; let b = b\"HashSet\"; let c = br#\"x\"#;\n";
+        let sf = scan(src);
+        assert!(!sf.code[0].contains("HashMap"));
+        assert!(!sf.code[0].contains("HashSet"));
+        // Everything after the raw string closes is still code.
+        assert!(sf.code[0].contains("let b ="));
+        assert!(sf.code[0].contains("let c ="));
+    }
+
+    #[test]
+    fn char_literals_blank_but_lifetimes_survive() {
+        let src = "fn f<'a>(x: &'a str) -> char { let q = '\\''; let z = 'z'; q }\n";
+        let sf = scan(src);
+        assert!(sf.code[0].contains("fn f<'a>(x: &'a str)"));
+        assert!(!sf.code[0].contains("'z'"));
+        assert!(sf.code[0].contains("let z ="));
+    }
+
+    #[test]
+    fn pragma_parses_rule_and_reason() {
+        let src = "// lint:allow(wall-clock) -- bench timing\nlet t = 1;\n";
+        let sf = scan(src);
+        assert_eq!(sf.allows.len(), 1);
+        assert_eq!(sf.allows[0].rule, "wall-clock");
+        assert_eq!(sf.allows[0].line, 1);
+        assert_eq!(sf.allows[0].reason, "bench timing");
+        assert!(sf.allowed("wall-clock", 1));
+        assert!(sf.allowed("wall-clock", 2));
+        assert!(sf.allowed("wall-clock", 3));
+        assert!(!sf.allowed("wall-clock", 4));
+        assert!(!sf.allowed("other-rule", 2));
+    }
+
+    #[test]
+    fn suffix_pragma_covers_its_own_line() {
+        let src = "let t = now(); // lint:allow(wall-clock) -- same line\n";
+        let sf = scan(src);
+        assert!(sf.allowed("wall-clock", 1));
+    }
+
+    #[test]
+    fn cfg_test_mod_region_is_marked() {
+        let src = "fn real() {}\n\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let sf = scan(src);
+        assert!(!sf.in_test(1));
+        assert!(sf.in_test(3));
+        assert!(sf.in_test(4));
+        assert!(sf.in_test(5));
+        assert!(sf.in_test(6));
+        assert!(!sf.in_test(7));
+    }
+
+    #[test]
+    fn out_of_line_test_mod_does_not_swallow_the_file() {
+        let src = "#[cfg(test)]\nmod tests;\nfn real() {}\n{ }\n";
+        let sf = scan(src);
+        assert!(!sf.in_test(3));
+    }
+
+    #[test]
+    fn blanked_lines_align_with_raw_lines() {
+        let src = "let s = \"multi\nline\nstring\";\nlet x = 2;\n";
+        let sf = scan(src);
+        assert_eq!(sf.code.len(), sf.raw.len());
+        assert_eq!(sf.code[3], "let x = 2;");
+        assert!(!sf.code[1].contains("line"));
+    }
+}

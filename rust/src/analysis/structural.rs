@@ -1,0 +1,210 @@
+//! Structural sync checks: registration drift between the filesystem
+//! and the things that are supposed to know about it.
+//!
+//! Two invariants, both paid for once already:
+//!
+//! * Every `rust/tests/*.rs`, `rust/benches/*.rs`, and `examples/*.rs`
+//!   file must be registered as a Cargo target — PR 6 found
+//!   `fabric_properties` sitting on disk for a full PR without ever
+//!   being compiled because its `[[test]]` entry was missing.
+//! * Every catalog scenario must have a golden trace (and every golden
+//!   trace a catalog scenario). CI bootstraps goldens on a fresh tree,
+//!   so the missing-golden direction only arms once at least one
+//!   `*.trace.jsonl` exists; orphaned goldens always violate.
+//!
+//! The Cargo.toml and catalog "parsers" here are deliberately dumb
+//! line scanners — the same vendor-nothing bargain as the rest of the
+//! engine — and they only read the narrow shapes this repo uses
+//! (`[[kind]]` headers with `path = "..."` keys; a `const NAMES` array
+//! of string literals).
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use super::rules::STRUCTURAL_SYNC;
+use super::Violation;
+
+/// Directories scanned for target files, with the Cargo target kind
+/// each must be registered under.
+const TARGET_DIRS: [(&str, &str); 3] =
+    [("rust/tests", "test"), ("rust/benches", "bench"), ("examples", "example")];
+
+/// Run the structural checks against a repo root.
+pub fn check(root: &Path) -> io::Result<Vec<Violation>> {
+    let mut out = Vec::new();
+    let cargo = fs::read_to_string(root.join("Cargo.toml"))?;
+    let targets = cargo_targets(&cargo);
+    for (dir, kind) in TARGET_DIRS {
+        let mut on_disk = list_rs(&root.join(dir), dir)?;
+        on_disk.sort();
+        let registered: Vec<&str> =
+            targets.iter().filter(|(k, _)| k == kind).map(|(_, p)| p.as_str()).collect();
+        for f in &on_disk {
+            if !registered.contains(&f.as_str()) {
+                let msg = format!(
+                    "{f} has no [[{kind}]] entry in Cargo.toml; it will never be compiled"
+                );
+                out.push(file_violation("Cargo.toml", msg));
+            }
+        }
+        for r in &registered {
+            if r.starts_with(dir) && !on_disk.iter().any(|f| f == r) {
+                let msg = format!("[[{kind}]] target {r} is registered but missing on disk");
+                out.push(file_violation("Cargo.toml", msg));
+            }
+        }
+    }
+    let catalog = fs::read_to_string(root.join("rust/src/scenario/catalog.rs"))?;
+    let names = catalog_names(&catalog);
+    let mut traces = list_traces(&root.join("rust/tests/golden"))?;
+    traces.sort();
+    for t in &traces {
+        if !names.iter().any(|n| n == t) {
+            let msg = format!("golden trace {t}.trace.jsonl has no catalog scenario (orphan)");
+            out.push(file_violation("rust/tests/golden", msg));
+        }
+    }
+    if !traces.is_empty() {
+        for n in &names {
+            if !traces.iter().any(|t| t == n) {
+                let msg = format!("catalog scenario {n} has no golden trace");
+                out.push(file_violation("rust/tests/golden", msg));
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Parse `(kind, path)` target registrations out of Cargo.toml text:
+/// a `[[kind]]` section header followed by a `path = "..."` key.
+pub fn cargo_targets(cargo_toml: &str) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    let mut kind: Option<String> = None;
+    for line in cargo_toml.lines() {
+        let t = line.trim();
+        if let Some(rest) = t.strip_prefix("[[") {
+            kind = rest.strip_suffix("]]").map(str::to_string);
+        } else if t.starts_with('[') {
+            kind = None;
+        } else if let Some(k) = &kind {
+            let Some(rest) = t.strip_prefix("path") else { continue };
+            let Some(v) = rest.trim_start().strip_prefix('=') else { continue };
+            out.push((k.clone(), v.trim().trim_matches('"').to_string()));
+        }
+    }
+    out
+}
+
+/// Extract the string literals of the `const NAMES` array in
+/// `scenario/catalog.rs`.
+pub fn catalog_names(src: &str) -> Vec<String> {
+    let Some(pos) = src.find("const NAMES") else { return Vec::new() };
+    let Some(eq) = src[pos..].find('=') else { return Vec::new() };
+    let start = pos + eq;
+    let Some(close) = src[start..].find(']') else { return Vec::new() };
+    let body = &src[start..start + close];
+    let mut names = Vec::new();
+    for (i, piece) in body.split('"').enumerate() {
+        if i % 2 == 1 {
+            names.push(piece.to_string());
+        }
+    }
+    names
+}
+
+/// `.rs` files directly inside `abs`, reported as `rel/<name>`.
+fn list_rs(abs: &Path, rel: &str) -> io::Result<Vec<String>> {
+    let mut out = Vec::new();
+    if !abs.is_dir() {
+        return Ok(out);
+    }
+    for entry in fs::read_dir(abs)? {
+        let entry = entry?;
+        if !entry.file_type()?.is_file() {
+            continue;
+        }
+        let name = entry.file_name().to_string_lossy().to_string();
+        if name.ends_with(".rs") {
+            out.push(format!("{rel}/{name}"));
+        }
+    }
+    Ok(out)
+}
+
+/// Scenario names of the `*.trace.jsonl` goldens in `dir`.
+fn list_traces(dir: &Path) -> io::Result<Vec<String>> {
+    let mut out = Vec::new();
+    if !dir.is_dir() {
+        return Ok(out);
+    }
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().to_string();
+        if let Some(stem) = name.strip_suffix(".trace.jsonl") {
+            out.push(stem.to_string());
+        }
+    }
+    Ok(out)
+}
+
+fn file_violation(file: &str, message: String) -> Violation {
+    Violation {
+        file: file.to_string(),
+        line: 0,
+        rule: STRUCTURAL_SYNC,
+        message,
+        excerpt: String::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cargo_targets_parse_kind_and_path() {
+        let toml = concat!(
+            "[package]\nname = \"x\"\n\n",
+            "[[test]]\nname = \"a\"\npath = \"rust/tests/a.rs\"\n\n",
+            "[[bench]]\nname = \"b\"\npath = \"rust/benches/b.rs\"\nharness = false\n",
+        );
+        let t = cargo_targets(toml);
+        assert_eq!(
+            t,
+            vec![
+                ("test".to_string(), "rust/tests/a.rs".to_string()),
+                ("bench".to_string(), "rust/benches/b.rs".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn plain_sections_reset_the_target_kind() {
+        let toml = "[[test]]\npath = \"t.rs\"\n[profile.release]\npath = \"not-a-target\"\n";
+        assert_eq!(cargo_targets(toml), vec![("test".to_string(), "t.rs".to_string())]);
+    }
+
+    #[test]
+    fn catalog_names_reads_the_array_literals() {
+        let src = concat!(
+            "pub const NAMES: [&str; 2] = [\n",
+            "    \"phase-flip\",\n",
+            "    \"flapper\",\n",
+            "];\n",
+        );
+        assert_eq!(catalog_names(src), vec!["phase-flip", "flapper"]);
+    }
+
+    #[test]
+    fn catalog_names_tolerates_missing_array() {
+        assert!(catalog_names("fn no_names() {}").is_empty());
+    }
+
+    #[test]
+    fn repo_tree_is_structurally_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let v = check(root).expect("structural walk");
+        assert!(v.is_empty(), "structural drift: {v:?}");
+    }
+}

@@ -21,6 +21,7 @@ use std::collections::BTreeSet;
 use crate::scheduler::PlacementLedger;
 use crate::sim::Machine;
 use crate::topology::NumaTopology;
+use crate::util::stats::cmp_f64_nan_low;
 
 /// The balancer's knobs (Linux defaults scaled to our virtual clock).
 pub struct AutoNuma {
@@ -94,7 +95,7 @@ impl AutoNuma {
             let (mem_node, mem_frac) = fracs
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| cmp_f64_nan_low(*a.1, *b.1))
                 .map(|(n, &f)| (n, f))
                 .unwrap_or((home, 0.0));
 
@@ -116,7 +117,7 @@ impl AutoNuma {
                 // overcommit the memory node's slots.)
                 let remote: u64 = p
                     .pages
-                    .per_node
+                    .per_node()
                     .iter()
                     .enumerate()
                     .filter(|&(n, _)| n != home)

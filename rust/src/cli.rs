@@ -36,6 +36,8 @@ pub struct Cli {
     pub metrics_out: Option<PathBuf>,
     /// Print the final Prometheus-style text exposition to stdout.
     pub metrics_text: bool,
+    /// `lint`: emit the machine-readable `numasched-lint/v1` report.
+    pub json: bool,
     /// Positional arguments after the subcommand.
     pub positional: Vec<String>,
 }
@@ -75,6 +77,11 @@ COMMANDS:
                        outcome or comm, e.g. `skip:cooldown` or `canneal`)
     host-monitor     run the Monitor against this host's real /proc
     inspect          print machine presets and the workload catalog
+    lint             determinism static analysis over rust/src (wall-clock
+                     quarantine, NaN-safe ordering, panic-free parsers,
+                     output hygiene, accessor discipline, structural sync);
+                     `lint [paths...]` scopes the token rules to files/dirs;
+                     exits 1 on violations (see --json)
 
 FLAGS:
     --config <file>      TOML config (machine/scheduler/workloads)
@@ -93,6 +100,8 @@ FLAGS:
     --golden-dir <dir>   scenario: golden-trace dir (default rust/tests/golden)
     --metrics-out <file> write the metrics stream (numasched-metrics/v1 JSONL)
     --metrics-text       print the Prometheus-style exposition to stdout
+    --json               lint: numasched-lint/v1 JSON report (violations +
+                         every lint:allow escape hatch in use)
     --verbose            debug logging
 ";
 
@@ -148,6 +157,7 @@ pub fn parse(args: &[String]) -> Result<Cli, String> {
                 cli.metrics_out = Some(PathBuf::from(value("--metrics-out")?))
             }
             "--metrics-text" => cli.metrics_text = true,
+            "--json" => cli.json = true,
             "--verbose" => cli.verbose = true,
             "--help" | "-h" => return Err(USAGE.to_string()),
             other if other.starts_with("--") => {
@@ -257,6 +267,17 @@ mod tests {
         assert!(!c.scale_smoke);
         assert_eq!(c.out, Some(PathBuf::from("perf/B.json")));
         assert!(parse(&argv("bench-suite --out")).is_err());
+    }
+
+    #[test]
+    fn parses_lint_verb() {
+        let c = parse(&argv("lint --json rust/src/reporter")).unwrap();
+        assert_eq!(c.command, "lint");
+        assert!(c.json);
+        assert_eq!(c.positional, vec!["rust/src/reporter"]);
+        let c = parse(&argv("lint")).unwrap();
+        assert!(!c.json);
+        assert!(c.positional.is_empty());
     }
 
     #[test]

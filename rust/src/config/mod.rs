@@ -213,13 +213,13 @@ impl MachineConfig {
             // links (deliberately narrow next to the 16 GB/s node
             // controllers, like a 4-lane QPI next to 4-channel DDR), so
             // link-saturating scenarios have something to saturate.
-            "8node-fabric" => Some(Self {
+            "8node-fabric" => Self::preset("8node-64core").map(|base| Self {
                 preset: name.into(),
                 fabric: Some(FabricConfig {
                     link_bandwidth_gbs: 6.0,
                     ..FabricConfig::default()
                 }),
-                ..Self::preset("8node-64core").unwrap()
+                ..base
             }),
             // An asymmetric 8-node box: two fat sockets, a mid tier, and
             // slim expansion nodes — bandwidth, capacity, and huge-page
@@ -517,9 +517,6 @@ impl Config {
         }
         if self.scheduler.report_period_ms < self.scheduler.monitor_period_ms {
             return cfg_err("report_period_ms must be >= monitor_period_ms");
-        }
-        if !(0.0..=1.0).contains(&0.0) {
-            unreachable!()
         }
         for pin in &self.scheduler.static_pins {
             if pin.node >= self.machine.nodes {

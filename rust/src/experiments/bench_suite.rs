@@ -30,6 +30,10 @@
 //! Smoke mode shrinks every iteration count so the whole suite runs in
 //! seconds (CI); full mode is for real measurements.
 
+// Measuring wall time is this module's entire job; every read below
+// also carries the determinism lint's `wall-clock` allow pragma.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use crate::config::{MachineConfig, PolicyKind, SchedulerConfig};
@@ -163,7 +167,7 @@ pub fn run(smoke: bool) -> BenchReport {
     let mut ns = Vec::with_capacity(iters);
     let allocs_before = alloc_counter::allocations();
     for _ in 0..iters {
-        let t0 = Instant::now();
+        let t0 = Instant::now(); // lint:allow(wall-clock) -- bench timing
         monitor.sample_into(&m, m.now_ms, &mut snap, &mut bufs);
         ns.push(t0.elapsed().as_nanos() as f64);
     }
@@ -172,7 +176,7 @@ pub fn run(smoke: bool) -> BenchReport {
 
     // --- simulator throughput ------------------------------------------
     let ticks = if smoke { 2_000 } else { 20_000 };
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // lint:allow(wall-clock) -- bench timing
     for _ in 0..ticks {
         m.step();
     }
@@ -181,10 +185,10 @@ pub fn run(smoke: bool) -> BenchReport {
 
     // --- sweep: serial vs parallel, bit-identical ----------------------
     let cells = sweep_grid(if smoke { 1_500.0 } else { 8_000.0 });
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // lint:allow(wall-clock) -- bench timing
     let serial: Vec<_> = cells.iter().map(runner::run).collect();
     let sweep_serial_ms = t0.elapsed().as_secs_f64() * 1e3;
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // lint:allow(wall-clock) -- bench timing
     let parallel = sweep::run_many(&cells);
     let sweep_parallel_ms = t0.elapsed().as_secs_f64() * 1e3;
     let sweep_identical = results_identical(&serial, &parallel);
@@ -200,7 +204,7 @@ pub fn run(smoke: bool) -> BenchReport {
         tel.registry.observe(tel.ids.node_rho_milli, i);
     }
     let allocs_before = alloc_counter::allocations();
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // lint:allow(wall-clock) -- bench timing
     for i in 0..hot_ops {
         tel.registry.inc(tel.ids.migrations, 1);
         tel.registry
@@ -211,7 +215,7 @@ pub fn run(smoke: bool) -> BenchReport {
     let metrics_hot_ns_per_op = hot_el_ns / (hot_ops as f64 * 2.0);
     let metrics_hot_allocs_per_op = hot_allocs as f64 / (hot_ops as f64 * 2.0);
     let epoch_renders = if smoke { 200 } else { 5_000 };
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // lint:allow(wall-clock) -- bench timing
     for e in 0..epoch_renders {
         std::hint::black_box(tel.registry.render_epoch_json(e as u64, e as u64));
     }
@@ -230,7 +234,7 @@ pub fn run(smoke: bool) -> BenchReport {
     for _ in 0..3 {
         fleet.step(); // warm the per-tick scratch and node shards
     }
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // lint:allow(wall-clock) -- bench timing
     for _ in 0..scale_ticks {
         fleet.step();
     }
@@ -240,13 +244,13 @@ pub fn run(smoke: bool) -> BenchReport {
     let fleet_mon = Monitor::discover(&fleet).expect("discover fleet topology");
     let mut fleet_snap = Snapshot::default();
     let mut fleet_bufs = SampleBufs::new();
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // lint:allow(wall-clock) -- bench timing
     fleet_mon.sample_into(&fleet, fleet.now_ms, &mut fleet_snap, &mut fleet_bufs);
     let scale_monitor_full_ms = t0.elapsed().as_secs_f64() * 1e3;
     // One warm pass settles buffer capacities before timing the hits.
     fleet_mon.sample_into(&fleet, fleet.now_ms, &mut fleet_snap, &mut fleet_bufs);
     let incr_passes = if smoke { 3 } else { 10 };
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // lint:allow(wall-clock) -- bench timing
     for _ in 0..incr_passes {
         fleet_mon.sample_into(&fleet, fleet.now_ms, &mut fleet_snap, &mut fleet_bufs);
     }
@@ -258,10 +262,10 @@ pub fn run(smoke: bool) -> BenchReport {
         if smoke { 250.0 } else { 2_000.0 },
         if smoke { 48 } else { 400 },
     );
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // lint:allow(wall-clock) -- bench timing
     let fleet_serial: Vec<_> = fleet_cells.iter().map(runner::run).collect();
     let scale_sweep_serial_ms = t0.elapsed().as_secs_f64() * 1e3;
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // lint:allow(wall-clock) -- bench timing
     let fleet_parallel = sweep::map_with(&fleet_cells, scale_sweep_workers, runner::run);
     let scale_sweep_parallel_ms = t0.elapsed().as_secs_f64() * 1e3;
     let scale_sweep_identical = results_identical(&fleet_serial, &fleet_parallel);

@@ -86,11 +86,14 @@ pub fn render(r: &Fig7Results) -> String {
         let auto = r.speedup(PolicyKind::AutoNuma, name).unwrap_or(f64::NAN);
         let stat = r.speedup(PolicyKind::StaticTuning, name).unwrap_or(f64::NAN);
         let prop = r.speedup(PolicyKind::Proposed, name).unwrap_or(f64::NAN);
+        // NaN-safe: an app no policy finished yields three NaN speedups;
+        // ties all compare Equal, so `max_by` deterministically keeps
+        // the last column ("proposed") instead of panicking.
         let winner = [("autonuma", auto), ("static", stat), ("proposed", prop)]
             .iter()
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-            .unwrap()
-            .0;
+            .max_by(|a, b| stats::cmp_f64_nan_low(a.1, b.1))
+            .map(|w| w.0)
+            .unwrap_or("proposed");
         t.row(vec![
             name.to_string(),
             f2(auto),
@@ -147,5 +150,31 @@ mod tests {
         assert!(!speedups.is_empty(), "no apps finished");
         let g = stats::geomean(&speedups);
         assert!(g > 1.0, "proposed must help overall: geomean {g:.3} over {speedups:?}");
+    }
+
+    #[test]
+    fn render_survives_all_nan_speedups() {
+        // Regression: the winner column used `partial_cmp(..).unwrap()`
+        // and panicked when no policy finished an app (all three
+        // speedups NaN). Rendering must stay panic-free, pick the tie
+        // deterministically, and give byte-identical output on reruns.
+        let runs: Vec<RunResult> = PolicyKind::ALL
+            .iter()
+            .map(|&policy| RunResult {
+                policy,
+                seed: 0,
+                procs: Vec::new(),
+                total_migrations: 0,
+                total_pages_migrated: 0,
+                scheduler_decisions: 0,
+                epoch_ns: stats::Running::default(),
+                end_ms: 0.0,
+            })
+            .collect();
+        let r = Fig7Results { runs };
+        let once = render(&r);
+        assert!(once.contains("winner"));
+        assert!(once.contains("proposed"), "all-NaN tie resolves to the last column");
+        assert_eq!(once, render(&r), "render is deterministic");
     }
 }

@@ -388,6 +388,8 @@ fn run_inner(
 
         match tel.as_deref_mut() {
             Some(t) => {
+                // lint:allow(wall-clock) -- span timing, diff-excluded record
+                #[allow(clippy::disallowed_methods)]
                 let t0 = Instant::now();
                 machine.step();
                 t.spans.record_since(Phase::SimTick, t0);
@@ -403,6 +405,8 @@ fn run_inner(
             if machine.now_ms >= next_monitor {
                 next_monitor += monitor_period;
                 monitor_samples += 1;
+                // lint:allow(wall-clock) -- span timing, diff-excluded record
+                #[allow(clippy::disallowed_methods)]
                 let t0 = Instant::now();
                 match fault_plan.as_ref() {
                     Some(plan) => {
@@ -419,6 +423,8 @@ fn run_inner(
                 if let Some(t) = tel.as_deref_mut() {
                     t.spans.record_since(Phase::MonitorSample, t0);
                 }
+                // lint:allow(wall-clock) -- epoch-cost summary, never in trace bytes
+                #[allow(clippy::disallowed_methods)]
                 let t0 = Instant::now();
                 pending_report = reporter.ingest(&snap);
                 epoch_ns.push(t0.elapsed().as_nanos() as f64);
@@ -439,6 +445,8 @@ fn run_inner(
                     // spans. The calls themselves are identical.
                     let executed = match tel.as_deref_mut() {
                         Some(t) => {
+                            // lint:allow(wall-clock) -- span timing, diff-excluded
+                            #[allow(clippy::disallowed_methods)]
                             let t0 = Instant::now();
                             let mut ctl =
                                 TimedCtl { machine: &mut machine, migrate_ns: 0 };
@@ -617,6 +625,8 @@ struct TimedCtl<'a> {
 
 impl MachineControl for TimedCtl<'_> {
     fn move_process(&mut self, pid: i32, node: usize) -> Result<(), CtlError> {
+        // lint:allow(wall-clock) -- migrate-apply span cost, telemetry only
+        #[allow(clippy::disallowed_methods)]
         let t0 = Instant::now();
         let result = MachineControl::move_process(self.machine, pid, node);
         self.migrate_ns += t0.elapsed().as_nanos() as u64;
@@ -624,6 +634,8 @@ impl MachineControl for TimedCtl<'_> {
     }
 
     fn migrate_pages(&mut self, pid: i32, node: usize, budget: u64) -> MigrateOutcome {
+        // lint:allow(wall-clock) -- migrate-apply span cost, telemetry only
+        #[allow(clippy::disallowed_methods)]
         let t0 = Instant::now();
         let outcome = MachineControl::migrate_pages(self.machine, pid, node, budget);
         self.migrate_ns += t0.elapsed().as_nanos() as u64;

@@ -20,6 +20,7 @@
 //! See `DESIGN.md` for the architecture and the experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
+pub mod analysis;
 pub mod baselines;
 pub mod chaos;
 pub mod cli;

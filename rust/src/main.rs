@@ -45,6 +45,7 @@ fn main() {
         "explain" => cmd_explain(&cli),
         "host-monitor" => cmd_host_monitor(&cli),
         "inspect" => cmd_inspect(&cli),
+        "lint" => cmd_lint(&cli),
         other => {
             eprintln!("unknown command {other:?}\n\n{USAGE}");
             1
@@ -756,6 +757,43 @@ fn cmd_explain(cli: &Cli) -> i32 {
         println!("full stream -> {} ({})", path.display(), telemetry::METRICS_SCHEMA);
     }
     0
+}
+
+/// `lint [--json] [paths...]` — the determinism static-analysis verb.
+///
+/// With no paths it lints the whole tree (token rules over `rust/src`
+/// plus the structural-sync checks); with paths it runs the token rules
+/// over exactly those files/directories. Exit 0 clean, 1 on violations,
+/// 2 when the tree cannot be walked.
+fn cmd_lint(cli: &Cli) -> i32 {
+    use numasched::analysis;
+    let root = match std::env::current_dir() {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("error: cannot resolve working directory: {e}");
+            return 2;
+        }
+    };
+    let report = if cli.positional.is_empty() {
+        analysis::lint_tree(&root)
+    } else {
+        let paths: Vec<std::path::PathBuf> =
+            cli.positional.iter().map(std::path::PathBuf::from).collect();
+        analysis::lint_paths(&root, &paths)
+    };
+    let report = match report {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: lint walk failed: {e}");
+            return 2;
+        }
+    };
+    if cli.json {
+        println!("{}", report.to_json());
+    } else {
+        print!("{}", report.render());
+    }
+    i32::from(!report.is_clean())
 }
 
 fn cmd_host_monitor(cli: &Cli) -> i32 {

@@ -37,6 +37,14 @@ impl MonitorThread {
         let join = std::thread::Builder::new()
             .name("numasched-monitor".into())
             .spawn(move || {
+                // Live-host sampling clock: stamps real /proc snapshots
+                // with elapsed wall time. Simulation never constructs a
+                // MonitorThread (experiments drive Monitor::sample on
+                // virtual time), so this read reaches no scheduling
+                // decision and no trace bytes — see the quarantine test
+                // in rust/tests/lint_engine.rs.
+                // lint:allow(wall-clock) -- host-mode snapshot timestamps only
+                #[allow(clippy::disallowed_methods)]
                 let t0 = Instant::now();
                 while !stop2.load(Ordering::Relaxed) {
                     let snap =

@@ -23,6 +23,7 @@ use crate::monitor::Snapshot;
 use crate::runtime::pack::{pack, unpack, ScoreProblem, TaskRow};
 use crate::runtime::{ScoreOutputs, ScoringEngine};
 use crate::util::ewma::Ewma;
+use crate::util::stats::cmp_f64_nan_low;
 
 /// Why the Reporter fired (Algorithm 2's condition).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -319,7 +320,7 @@ impl Reporter {
                 let (best_node, best_score) = scores
                     .iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| cmp_f64_nan_low(*a.1, *b.1))
                     .map(|(n, &s)| (n, s))
                     .unwrap_or((t.node, 0.0));
                 RankedTask {
@@ -341,12 +342,12 @@ impl Reporter {
                 }
             })
             .collect();
-        by_speedup.sort_by(|a, b| b.best_score.partial_cmp(&a.best_score).unwrap());
+        rank_by_speedup(&mut by_speedup);
         let mut by_degradation: Vec<(i32, f64)> = by_speedup
             .iter()
             .map(|r| (r.pid, r.degradation))
             .collect();
-        by_degradation.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        by_degradation.sort_by(|a, b| cmp_f64_nan_low(b.1, a.1));
 
         Some(Report {
             t_ms: snap.t_ms,
@@ -372,6 +373,15 @@ impl Reporter {
         };
         Some(unpack(&raw.s, &raw.dcur, &raw.r, &raw.c, t, n))
     }
+}
+
+/// Rank tasks for the report: descending best score, stable order.
+/// NaN-safe: a poisoned score (NaN anywhere in the scoring pipeline)
+/// must neither panic the sort nor outrank healthy rows — it compares
+/// below every real value, and the stable sort keeps repeated runs
+/// byte-identical.
+fn rank_by_speedup(rows: &mut [RankedTask]) {
+    rows.sort_by(|a, b| cmp_f64_nan_low(b.best_score, a.best_score));
 }
 
 #[cfg(test)]
@@ -412,6 +422,41 @@ mod tests {
             vec![vec![10.0, 21.0], vec![21.0, 10.0]],
             vec![12.0, 12.0],
         )
+    }
+
+    fn ranked(pid: i32, best_score: f64) -> RankedTask {
+        RankedTask {
+            pid,
+            comm: format!("task{pid}"),
+            node: 0,
+            threads: 1,
+            importance: 1.0,
+            mem_intensity: 0.0,
+            degradation: 0.0,
+            best_node: 0,
+            best_score,
+            scores: vec![best_score],
+            rss_pages: 0,
+            pages_per_node: vec![0, 0],
+            huge_2m_per_node: vec![0, 0],
+            giant_1g_per_node: vec![0, 0],
+            stale: false,
+        }
+    }
+
+    #[test]
+    fn nan_scores_rank_last_and_never_panic() {
+        // Regression: the speedup ranking used `partial_cmp(..).unwrap()`
+        // and aborted the whole run on the first NaN score. A poisoned
+        // row must sort *after* every healthy one, deterministically.
+        let mut rows = vec![ranked(1, 0.5), ranked(2, f64::NAN), ranked(3, 1.2), ranked(4, 0.8)];
+        rank_by_speedup(&mut rows);
+        let pids: Vec<i32> = rows.iter().map(|r| r.pid).collect();
+        assert_eq!(pids, vec![3, 4, 1, 2], "descending score, NaN last");
+        // Same rows in a different arrival order agree exactly.
+        let mut again = vec![ranked(2, f64::NAN), ranked(3, 1.2), ranked(4, 0.8), ranked(1, 0.5)];
+        rank_by_speedup(&mut again);
+        assert_eq!(again.iter().map(|r| r.pid).collect::<Vec<_>>(), pids);
     }
 
     #[test]

@@ -175,13 +175,11 @@ pub struct EventEngine {
 
 impl EventEngine {
     /// Build an engine; events are stably sorted by time, so same-time
-    /// events fire in declaration order.
+    /// events fire in declaration order. Total order keeps the sort
+    /// panic-free and deterministic even if a fuzzer (or a bad config)
+    /// smuggles in a NaN time — NaN sorts after every real instant.
     pub fn new(mut events: Vec<TimedEvent>) -> Self {
-        events.sort_by(|a, b| {
-            a.t_ms
-                .partial_cmp(&b.t_ms)
-                .expect("event times must not be NaN")
-        });
+        events.sort_by(|a, b| a.t_ms.total_cmp(&b.t_ms));
         Self { events, next: 0, fired: Vec::new() }
     }
 

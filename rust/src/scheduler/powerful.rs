@@ -6,6 +6,8 @@
 //! mean demand; nodes below it by a margin offer powerful cores, nodes
 //! above it shed work.
 
+use crate::util::stats::cmp_f64_nan_low;
+
 /// Per-node capacity assessment.
 #[derive(Clone, Debug, PartialEq)]
 pub struct NodePower {
@@ -46,7 +48,9 @@ pub fn powerful_nodes(
             }
         })
         .collect();
-    out.sort_by(|a, b| b.headroom.partial_cmp(&a.headroom).unwrap());
+    // NaN-safe descending sort: a poisoned demand sample must rank its
+    // node *last* (no headroom claim), not panic the scheduler.
+    out.sort_by(|a, b| cmp_f64_nan_low(b.headroom, a.headroom));
     out
 }
 
@@ -81,5 +85,24 @@ mod tests {
     #[test]
     fn empty_input_is_empty() {
         assert!(powerful_nodes(&[], &[], 4).is_empty());
+    }
+
+    #[test]
+    fn nan_demand_ranks_last_and_offers_no_slots() {
+        // Regression: the headroom sort used `partial_cmp(..).unwrap()`
+        // and panicked when a demand sample was NaN. The poisoned node
+        // must rank last with zero slots, and repeatedly so.
+        let p = powerful_nodes(&[f64::NAN, 1.0, 2.0], &[12.0; 3], 8);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p[0].node, 1);
+        assert_eq!(p[1].node, 2);
+        assert_eq!(p[2].node, 0, "NaN headroom sorts last");
+        assert!(p[2].headroom.is_nan());
+        assert_eq!(p[2].slots, 0, "NaN fraction yields no slots");
+        // Deterministic: the ranking order is stable across reruns
+        // (NodePower's PartialEq can't compare NaN, so compare nodes).
+        let q = powerful_nodes(&[f64::NAN, 1.0, 2.0], &[12.0; 3], 8);
+        let order: Vec<usize> = q.iter().map(|x| x.node).collect();
+        assert_eq!(order, vec![1, 2, 0]);
     }
 }

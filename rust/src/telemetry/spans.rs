@@ -106,6 +106,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(clippy::disallowed_methods)] // spans.rs is the clock quarantine
     fn record_since_measures_something_sane() {
         let mut s = Spans::default();
         let t0 = Instant::now();

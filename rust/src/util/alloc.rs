@@ -65,3 +65,52 @@ pub fn allocations() -> u64 {
 pub fn counting_enabled() -> bool {
     allocations() > 0
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive the `GlobalAlloc` impl directly (the test binary keeps the
+    /// system allocator, so this is the only coverage of the unsafe
+    /// code). The CI Miri job runs exactly this module to check the
+    /// pointer discipline: matching layouts on free, no use after
+    /// realloc, zeroed memory actually zeroed.
+    #[test]
+    fn raw_alloc_realloc_dealloc_roundtrip() {
+        let a = CountingAlloc;
+        let before = allocations();
+        let layout = Layout::from_size_align(64, 8).unwrap();
+        unsafe {
+            let p = a.alloc(layout);
+            assert!(!p.is_null());
+            for i in 0..64 {
+                p.add(i).write(i as u8);
+            }
+            let p = a.realloc(p, layout, 128);
+            assert!(!p.is_null());
+            // The old prefix must survive the move.
+            for i in 0..64 {
+                assert_eq!(p.add(i).read(), i as u8);
+            }
+            let grown = Layout::from_size_align(128, 8).unwrap();
+            a.dealloc(p, grown);
+        }
+        assert!(allocations() >= before + 2, "alloc + realloc must count");
+    }
+
+    #[test]
+    fn alloc_zeroed_returns_zeroed_memory() {
+        let a = CountingAlloc;
+        let before = allocations();
+        let layout = Layout::from_size_align(32, 16).unwrap();
+        unsafe {
+            let p = a.alloc_zeroed(layout);
+            assert!(!p.is_null());
+            for i in 0..32 {
+                assert_eq!(p.add(i).read(), 0, "byte {i} not zeroed");
+            }
+            a.dealloc(p, layout);
+        }
+        assert!(allocations() >= before + 1);
+    }
+}

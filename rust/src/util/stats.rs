@@ -110,6 +110,20 @@ impl Percentiles {
     }
 }
 
+/// NaN-safe descending-friendly comparator: totally ordered, with NaN
+/// ranked *below* every real value (including `-inf`).
+///
+/// `f64::total_cmp` alone sorts NaN above `+inf`, which lets a poisoned
+/// score *win* a `max_by` ranking. Mapping NaN to `-inf` first (via
+/// `f64::max`, which discards NaN operands) makes a poisoned value lose
+/// instead — callers rank healthy data first, never panic, and stay
+/// deterministic. NaN ties against real `-inf` are broken by the
+/// caller's stable sort / first-wins `max_by` position, which is
+/// deterministic too.
+pub fn cmp_f64_nan_low(a: f64, b: f64) -> std::cmp::Ordering {
+    a.max(f64::NEG_INFINITY).total_cmp(&b.max(f64::NEG_INFINITY))
+}
+
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::INFINITY, f64::min)
 }
@@ -294,6 +308,28 @@ mod tests {
         let ys = [1.0, 2.0, 3.0, 4.0, 5.0];
         let rho = spearman(&xs, &ys);
         assert!(rho.is_finite() || rho.is_nan()); // no panic is the contract
+    }
+
+    #[test]
+    fn cmp_f64_nan_low_ranks_nan_below_everything() {
+        use std::cmp::Ordering;
+        assert_eq!(cmp_f64_nan_low(1.0, 2.0), Ordering::Less);
+        assert_eq!(cmp_f64_nan_low(2.0, 1.0), Ordering::Greater);
+        assert_eq!(cmp_f64_nan_low(1.0, 1.0), Ordering::Equal);
+        // NaN loses to every real value, even -inf (ties Equal there).
+        assert_eq!(cmp_f64_nan_low(f64::NAN, f64::NEG_INFINITY), Ordering::Equal);
+        assert_eq!(cmp_f64_nan_low(f64::NAN, -1e308), Ordering::Less);
+        assert_eq!(cmp_f64_nan_low(f64::NAN, f64::INFINITY), Ordering::Less);
+        assert_eq!(cmp_f64_nan_low(f64::INFINITY, f64::NAN), Ordering::Greater);
+        assert_eq!(cmp_f64_nan_low(f64::NAN, f64::NAN), Ordering::Equal);
+        // A max_by ranking with a poisoned entry picks a healthy one.
+        let xs = [0.5, f64::NAN, 0.7, 0.6];
+        let best = xs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| cmp_f64_nan_low(*a.1, *b.1))
+            .map(|(i, _)| i);
+        assert_eq!(best, Some(2));
     }
 
     #[test]

@@ -1,0 +1,190 @@
+//! Integration tests for the determinism lint engine.
+//!
+//! Three layers: (1) every token rule fires on a seeded violation and
+//! stays quiet on the clean variant, (2) the `lint:allow` escape hatch
+//! suppresses exactly its rule and surfaces in the report, and (3) the
+//! self-clean gate — the shipped tree must lint clean, which is the
+//! same invariant the blocking CI job enforces via `numasched lint`.
+
+use std::path::{Path, PathBuf};
+
+use numasched::analysis::{self, rules, scan};
+
+/// Convenience: token rules over an in-memory file.
+fn lint(path: &str, src: &str) -> Vec<analysis::Violation> {
+    rules::check_file(path, &scan::scan(src))
+}
+
+#[test]
+fn each_token_rule_fires_on_a_seeded_violation() {
+    // (rule, path the rule is armed for, minimal violating source)
+    let seeded: [(&str, &str, &str); 6] = [
+        (rules::WALL_CLOCK, "rust/src/monitor/mod.rs", "fn f() { let t = Instant::now(); }\n"),
+        (
+            rules::UNORDERED_COLLECTIONS,
+            "rust/src/scheduler/mod.rs",
+            "use std::collections::HashMap;\n",
+        ),
+        (
+            rules::NAN_ORDERING,
+            "rust/src/reporter/mod.rs",
+            "v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n",
+        ),
+        (rules::PANIC_PARSERS, "rust/src/procfs/stat.rs", "let v = s.parse::<u64>().unwrap();\n"),
+        (rules::OUTPUT_HYGIENE, "rust/src/reporter/mod.rs", "println!(\"progress\");\n"),
+        (
+            rules::ACCESSOR_DISCIPLINE,
+            "rust/src/baselines/autonuma.rs",
+            "m.pages.per_node_mut()[0] += 1;\n",
+        ),
+    ];
+    for (rule, path, src) in seeded {
+        let v = lint(path, src);
+        assert_eq!(v.len(), 1, "{rule} should fire once on {src:?}, got {v:?}");
+        assert_eq!(v[0].rule, rule);
+        assert_eq!(v[0].line, 1);
+        assert!(!v[0].excerpt.is_empty(), "{rule} violation lost its excerpt");
+    }
+}
+
+#[test]
+fn clean_variants_stay_quiet() {
+    let clean: [(&str, &str); 5] = [
+        ("rust/src/monitor/mod.rs", "use std::time::Instant;\n"),
+        ("rust/src/scheduler/mod.rs", "use std::collections::BTreeMap;\n"),
+        ("rust/src/reporter/mod.rs", "v.sort_by(|a, b| a.total_cmp(b));\n"),
+        ("rust/src/procfs/stat.rs", "let v = s.parse::<u64>().map_err(bad)?;\n"),
+        ("rust/src/reporter/mod.rs", "log::debug!(\"progress\");\n"),
+    ];
+    for (path, src) in clean {
+        assert!(lint(path, src).is_empty(), "false positive on {src:?}");
+    }
+}
+
+#[test]
+fn allow_pragma_suppresses_only_its_rule() {
+    // Preceding-comment form, with an attribute line in between — the
+    // standard annotation stack used throughout experiments/runner.rs.
+    let stacked = concat!(
+        "// lint:allow(wall-clock) -- span timing, diff-excluded record\n",
+        "#[allow(clippy::disallowed_methods)]\n",
+        "let t0 = Instant::now();\n",
+    );
+    assert!(lint("rust/src/experiments/runner.rs", stacked).is_empty());
+
+    // Suffix form on the flagged line itself.
+    let suffix = "let t0 = Instant::now(); // lint:allow(wall-clock) -- bench timing\n";
+    assert!(lint("rust/src/experiments/bench_suite.rs", suffix).is_empty());
+
+    // A pragma for a different rule must not suppress the wall clock.
+    let wrong = concat!(
+        "// lint:allow(output-hygiene) -- wrong rule\n",
+        "let t0 = Instant::now();\n",
+    );
+    let v = lint("rust/src/experiments/runner.rs", wrong);
+    assert_eq!(v.len(), 1);
+    assert_eq!(v[0].rule, rules::WALL_CLOCK);
+}
+
+#[test]
+fn pragmas_surface_rule_and_reason() {
+    let src = concat!(
+        "// lint:allow(wall-clock) -- host-mode snapshot timestamps only\n",
+        "let t0 = Instant::now();\n",
+    );
+    let sf = scan::scan(src);
+    assert_eq!(sf.allows.len(), 1);
+    assert_eq!(sf.allows[0].rule, "wall-clock");
+    assert_eq!(sf.allows[0].reason, "host-mode snapshot timestamps only");
+    assert_eq!(sf.allows[0].line, 1);
+}
+
+#[test]
+fn lint_paths_walks_real_files_and_reports_relative_paths() {
+    let dir = std::env::temp_dir().join(format!("numasched-lint-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    let file = dir.join("seeded.rs");
+    std::fs::write(&file, "fn f() { let t = std::time::Instant::now(); }\n")
+        .expect("write seeded violation");
+
+    let report = analysis::lint_paths(&dir, &[PathBuf::from("seeded.rs")]).expect("lint walk");
+    std::fs::remove_dir_all(&dir).ok();
+
+    assert_eq!(report.files_scanned, 1);
+    assert!(!report.is_clean());
+    assert_eq!(report.violations.len(), 1);
+    assert_eq!(report.violations[0].rule, rules::WALL_CLOCK);
+    assert_eq!(report.violations[0].file, "seeded.rs");
+    let json = report.to_json();
+    assert!(json.contains(&format!("\"schema\": \"{}\"", analysis::JSON_SCHEMA)));
+    assert!(json.contains("\"clean\": false"));
+}
+
+/// The self-clean gate: the shipped tree lints clean — token rules over
+/// all of `rust/src` plus the structural checks. This is what the
+/// blocking CI job runs (as `numasched lint --json`); keeping it in the
+/// test suite means `cargo test` alone catches a dirty tree.
+#[test]
+fn shipped_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = analysis::lint_tree(root).expect("lint walk over the repo");
+    assert!(report.is_clean(), "shipped tree is lint-dirty:\n{}", report.render());
+    assert!(
+        report.files_scanned > 60,
+        "only {} files scanned — the rust/src walk is broken",
+        report.files_scanned
+    );
+    // Every escape hatch in use must carry a justification, and must
+    // name a real rule (unknown names are filtered before reporting).
+    assert!(!report.allows.is_empty(), "the sanctioned timing sites should surface");
+    for a in &report.allows {
+        assert!(
+            !a.reason.is_empty(),
+            "{}:{} allow({}) has no justification",
+            a.file,
+            a.line,
+            a.rule
+        );
+        assert!(rules::ALL.contains(&a.rule.as_str()), "unknown rule {:?}", a.rule);
+    }
+    let json = report.to_json();
+    assert!(json.contains("\"clean\": true"));
+    assert!(json.contains(&format!("\"schema\": \"{}\"", analysis::JSON_SCHEMA)));
+}
+
+/// The wall-clock quarantine, stated as data: every `Instant`/
+/// `SystemTime` exemption in the tree lives in one of the three
+/// sanctioned timing sites. `telemetry/spans.rs` is whitelisted
+/// wholesale (the designated quarantine zone) and so never needs a
+/// pragma; everything else reads simulated `t_ms` time. In particular
+/// `monitor/thread.rs` — the live-host sampling loop — stamps host
+/// snapshots with wall time but those timestamps never reach trace
+/// bytes or scheduling decisions (simulation runs never construct a
+/// MonitorThread at all).
+#[test]
+fn wall_clock_allows_are_confined_to_sanctioned_sites() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = analysis::lint_tree(root).expect("lint walk over the repo");
+    let sanctioned = [
+        "rust/src/monitor/thread.rs",
+        "rust/src/experiments/runner.rs",
+        "rust/src/experiments/bench_suite.rs",
+    ];
+    for a in report.allows.iter().filter(|a| a.rule == rules::WALL_CLOCK) {
+        assert!(
+            sanctioned.contains(&a.file.as_str()),
+            "wall-clock allow leaked into {} (line {}): {}",
+            a.file,
+            a.line,
+            a.reason
+        );
+    }
+    // The host sampler's exemption is present and justified.
+    assert!(
+        report
+            .allows
+            .iter()
+            .any(|a| a.file == "rust/src/monitor/thread.rs" && a.rule == rules::WALL_CLOCK),
+        "monitor/thread.rs lost its quarantine annotation"
+    );
+}
