@@ -1,7 +1,7 @@
 //! Structural sync checks: registration drift between the filesystem
 //! and the things that are supposed to know about it.
 //!
-//! Two invariants, both paid for once already:
+//! Three invariants, the first two paid for once already:
 //!
 //! * Every `rust/tests/*.rs`, `rust/benches/*.rs`, and `examples/*.rs`
 //!   file must be registered as a Cargo target — PR 6 found
@@ -11,6 +11,8 @@
 //!   trace a catalog scenario). CI bootstraps goldens on a fresh tree,
 //!   so the missing-golden direction only arms once at least one
 //!   `*.trace.jsonl` exists; orphaned goldens always violate.
+//! * Every CLI verb in the `cli.rs` USAGE block must appear in
+//!   README.md's command table — new verbs ship documented.
 //!
 //! The Cargo.toml and catalog "parsers" here are deliberately dumb
 //! line scanners — the same vendor-nothing bargain as the rest of the
@@ -73,7 +75,76 @@ pub fn check(root: &Path) -> io::Result<Vec<Violation>> {
             }
         }
     }
+    // CLI <-> README verb sync. Tolerant reads: the rule disarms when
+    // either file is absent (a scoped lint over a partial tree), and
+    // only checks the one direction that rots in practice — a verb
+    // added to USAGE without a README row.
+    let cli_src = fs::read_to_string(root.join("rust/src/cli.rs")).unwrap_or_default();
+    let readme = fs::read_to_string(root.join("README.md")).unwrap_or_default();
+    if !cli_src.is_empty() && !readme.is_empty() {
+        let documented = readme_verbs(&readme);
+        for v in cli_verbs(&cli_src) {
+            if !documented.contains(&v) {
+                let msg = format!(
+                    "CLI verb {v} (cli.rs USAGE) is missing from README.md's command table"
+                );
+                out.push(file_violation("README.md", msg));
+            }
+        }
+    }
     Ok(out)
+}
+
+/// Top-level verb names from the USAGE block in `cli.rs` source: the
+/// lines between `COMMANDS:` and `FLAGS:` indented by exactly four
+/// spaces (deeper indentation is subcommand prose).
+pub fn cli_verbs(cli_src: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut in_commands = false;
+    for line in cli_src.lines() {
+        if line.starts_with("COMMANDS:") {
+            in_commands = true;
+            continue;
+        }
+        if line.starts_with("FLAGS:") {
+            break;
+        }
+        if !in_commands {
+            continue;
+        }
+        let Some(rest) = line.strip_prefix("    ") else { continue };
+        if rest.starts_with(' ') {
+            continue;
+        }
+        if let Some(verb) = rest.split_whitespace().next() {
+            out.push(verb.to_string());
+        }
+    }
+    out
+}
+
+/// Backticked command names in README.md's verb table: the first cell
+/// of every `| \`...\` |` row (one row may document several verbs,
+/// e.g. `table1` / `fig6`).
+pub fn readme_verbs(md: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for line in md.lines() {
+        if !line.starts_with("| `") {
+            continue;
+        }
+        let Some(cell) = line.split('|').nth(1) else { continue };
+        for (i, span) in cell.split('`').enumerate() {
+            if i % 2 == 0 {
+                continue;
+            }
+            if let Some(word) = span.split_whitespace().next() {
+                if !word.starts_with('-') {
+                    out.push(word.to_string());
+                }
+            }
+        }
+    }
+    out
 }
 
 /// Parse `(kind, path)` target registrations out of Cargo.toml text:
@@ -199,6 +270,40 @@ mod tests {
     #[test]
     fn catalog_names_tolerates_missing_array() {
         assert!(catalog_names("fn no_names() {}").is_empty());
+    }
+
+    #[test]
+    fn cli_verbs_reads_only_the_four_space_command_rows() {
+        let src = concat!(
+            "pub const USAGE: &str = \"\\\n",
+            "USAGE:\n",
+            "    numasched <COMMAND> [FLAGS]\n",
+            "\n",
+            "COMMANDS:\n",
+            "    run              run a workload\n",
+            "    scenario         timelines:\n",
+            "                       scenario list   not a verb row\n",
+            "    lint             static analysis\n",
+            "\n",
+            "FLAGS:\n",
+            "    --seed <n>       not a command\n",
+            "\";\n",
+        );
+        assert_eq!(cli_verbs(src), vec!["run", "scenario", "lint"]);
+    }
+
+    #[test]
+    fn readme_verbs_reads_every_backtick_span_in_the_command_cell() {
+        let md = concat!(
+            "| Command | What it does |\n",
+            "|---|---|\n",
+            "| `run` | one workload set (`--policy default`) |\n",
+            "| `table1` / `fig6` | regenerate artifacts |\n",
+            "| `scenario run <name>` | run one timeline |\n",
+            "plain prose with `backticks` outside the table\n",
+        );
+        let v = readme_verbs(md);
+        assert_eq!(v, vec!["run", "table1", "fig6", "scenario"]);
     }
 
     #[test]

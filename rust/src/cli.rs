@@ -25,7 +25,8 @@ pub struct Cli {
     /// bit-identity) — the CI arm that guards the fleet-scale paths.
     pub scale_smoke: bool,
     /// Output file override (`bench-suite` writes BENCH_PERF.json here;
-    /// `scenario record <name>` honors it for a single trace).
+    /// `scenario record <name>` honors it for a single trace; `insight`
+    /// writes its `numasched-insight/v1` JSON report here).
     pub out: Option<PathBuf>,
     /// Golden-trace directory for `scenario record|replay` (default
     /// `rust/tests/golden`).
@@ -36,8 +37,23 @@ pub struct Cli {
     pub metrics_out: Option<PathBuf>,
     /// Print the final Prometheus-style text exposition to stdout.
     pub metrics_text: bool,
-    /// `lint`: emit the machine-readable `numasched-lint/v1` report.
+    /// `lint` / `insight`: emit the machine-readable JSON report
+    /// (`numasched-lint/v1` / `numasched-insight/v1`).
     pub json: bool,
+    /// `insight bench`: fail (exit 1) on a confirmed perf regression
+    /// once the history holds enough comparable entries.
+    pub gate: bool,
+    /// `insight bench`: history file (default `BENCH_HISTORY.jsonl`).
+    pub history: Option<PathBuf>,
+    /// `insight bench`: append this measured BENCH_PERF.json snapshot
+    /// to the history before analyzing (provisional snapshots and
+    /// duplicate run ids are skipped).
+    pub append: Option<PathBuf>,
+    /// `insight bench --append`: id recorded with the appended entry
+    /// (CI passes the commit sha; default `local`).
+    pub run_id: Option<String>,
+    /// `insight bench`: noise-threshold override, e.g. `time=1.5,rate=0.8`.
+    pub noise: Option<String>,
     /// Positional arguments after the subcommand.
     pub positional: Vec<String>,
 }
@@ -75,6 +91,22 @@ COMMANDS:
                        proposed policy and print every placement, skip, and
                        consolidation with its candidate table (filter matches
                        outcome or comm, e.g. `skip:cooldown` or `canneal`)
+    insight          cross-run analytics over recorded artifacts:
+                       insight diff <a> <b>        align two runs (traces or
+                                                   metrics streams), rank the
+                                                   divergences, and report the
+                                                   first decision split with
+                                                   both candidate tables
+                                                   (exit 1 when they diverge)
+                       insight timeline <f> [pid]  stitch decisions, occupancy,
+                                                   stale/quarantine transitions
+                                                   and chaos faults from a
+                                                   trace/metrics/flight file
+                                                   into an ordered lifecycle
+                       insight bench               trend BENCH_HISTORY.jsonl,
+                                                   per-metric-family verdicts
+                                                   (see --history / --append /
+                                                   --noise / --gate)
     host-monitor     run the Monitor against this host's real /proc
     inspect          print machine presets and the workload catalog
     lint             determinism static analysis over rust/src (wall-clock
@@ -96,12 +128,22 @@ FLAGS:
     --scale-smoke        bench-suite: smoke mode + validate the 64node-fleet
                          scale tier (epoch-cache hits, sweep bit-identity);
                          exits nonzero when the tier is unhealthy
-    --out <file>         bench-suite: output path (default BENCH_PERF.json)
+    --out <file>         bench-suite: output path (default BENCH_PERF.json);
+                         insight: write the JSON report here as well
     --golden-dir <dir>   scenario: golden-trace dir (default rust/tests/golden)
     --metrics-out <file> write the metrics stream (numasched-metrics/v1 JSONL)
     --metrics-text       print the Prometheus-style exposition to stdout
-    --json               lint: numasched-lint/v1 JSON report (violations +
-                         every lint:allow escape hatch in use)
+    --json               lint / insight: machine-readable JSON report
+                         (numasched-lint/v1 / numasched-insight/v1)
+    --history <file>     insight bench: history file (default BENCH_HISTORY.jsonl)
+    --append <file>      insight bench: append this measured BENCH_PERF.json
+                         to the history first (provisional snapshots and
+                         duplicate run ids are skipped)
+    --run-id <id>        insight bench --append: entry id (default local)
+    --noise <spec>       insight bench: thresholds, e.g. time=1.5,rate=0.8
+                         (defaults time=1.35, rate=0.75)
+    --gate               insight bench: exit 1 on a regression once >= 3
+                         comparable history entries exist
     --verbose            debug logging
 ";
 
@@ -158,6 +200,11 @@ pub fn parse(args: &[String]) -> Result<Cli, String> {
             }
             "--metrics-text" => cli.metrics_text = true,
             "--json" => cli.json = true,
+            "--gate" => cli.gate = true,
+            "--history" => cli.history = Some(PathBuf::from(value("--history")?)),
+            "--append" => cli.append = Some(PathBuf::from(value("--append")?)),
+            "--run-id" => cli.run_id = Some(value("--run-id")?),
+            "--noise" => cli.noise = Some(value("--noise")?),
             "--verbose" => cli.verbose = true,
             "--help" | "-h" => return Err(USAGE.to_string()),
             other if other.starts_with("--") => {
@@ -278,6 +325,44 @@ mod tests {
         let c = parse(&argv("lint")).unwrap();
         assert!(!c.json);
         assert!(c.positional.is_empty());
+    }
+
+    #[test]
+    fn parses_insight_verb() {
+        let c = parse(&argv("insight diff a.jsonl b.jsonl --json --out report.json")).unwrap();
+        assert_eq!(c.command, "insight");
+        assert_eq!(c.positional, vec!["diff", "a.jsonl", "b.jsonl"]);
+        assert!(c.json);
+        assert_eq!(c.out, Some(PathBuf::from("report.json")));
+
+        let c = parse(&argv("insight timeline m.jsonl 42")).unwrap();
+        assert_eq!(c.positional, vec!["timeline", "m.jsonl", "42"]);
+
+        let c = parse(&argv(
+            "insight bench --gate --history H.jsonl --append BENCH_PERF.json \
+             --run-id abc123 --noise time=1.5,rate=0.8",
+        ))
+        .unwrap();
+        assert_eq!(c.positional, vec!["bench"]);
+        assert!(c.gate);
+        assert_eq!(c.history, Some(PathBuf::from("H.jsonl")));
+        assert_eq!(c.append, Some(PathBuf::from("BENCH_PERF.json")));
+        assert_eq!(c.run_id.as_deref(), Some("abc123"));
+        assert_eq!(c.noise.as_deref(), Some("time=1.5,rate=0.8"));
+        assert!(parse(&argv("insight bench --history")).is_err());
+        assert!(parse(&argv("insight bench --run-id")).is_err());
+    }
+
+    #[test]
+    fn chaos_and_explain_accept_metrics_flags() {
+        // Pins the telemetry surface parity: `chaos run` and `explain`
+        // take the same --metrics-out/--metrics-text pair as `run`.
+        let c = parse(&argv("chaos run link-storm --metrics-out c.jsonl --metrics-text")).unwrap();
+        assert_eq!(c.metrics_out, Some(PathBuf::from("c.jsonl")));
+        assert!(c.metrics_text);
+        let c = parse(&argv("explain link-storm --metrics-out e.jsonl --metrics-text")).unwrap();
+        assert_eq!(c.metrics_out, Some(PathBuf::from("e.jsonl")));
+        assert!(c.metrics_text);
     }
 
     #[test]

@@ -584,6 +584,13 @@ fn run_inner(
             events_fired,
             monitor_samples,
         );
+        // One result record per process, in pid (= spawn) order — the
+        // stream carries the same per-pid outcome the RunResult table
+        // prints, so a recorded metrics file is self-contained for
+        // cross-run degradation analysis.
+        for p in machine.processes() {
+            t.push_proc_result(p.pid, &p.comm, p.runtime_ms(), p.mean_speed(), p.migrations);
+        }
         t.finish(machine.now_ms as u64);
     }
 

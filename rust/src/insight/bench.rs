@@ -1,0 +1,510 @@
+//! Perf-regression detection over the append-only bench history.
+//!
+//! `BENCH_HISTORY.jsonl` (schema `numasched-bench-history/v1`) holds one
+//! line per measured `bench-suite` run: an id (CI commit sha or
+//! `local`), the smoke marker, and every numeric leaf of that run's
+//! `BENCH_PERF.json`, flattened to `section.name`. The CI bench job
+//! appends to it — *measured* runs only, never the provisional
+//! placeholder — and `insight bench` reads it back:
+//!
+//! * baseline = the lower median of all prior comparable entries
+//!   (same smoke mode), so one fast outlier cannot ratchet the bar up;
+//! * each metric is classed into a family — [`Family::Time`] (lower is
+//!   better), [`Family::Rate`] (higher is better), [`Family::Info`]
+//!   (shape/config values, never gated) — with per-family noise
+//!   thresholds ([`Noise`], CLI-overridable);
+//! * the gate only arms once ≥ 3 comparable entries exist — below
+//!   that, bare-metal CI runner variance would make verdicts noise.
+
+use crate::telemetry::provenance::esc;
+use crate::telemetry::registry::json_str;
+
+use super::load::{json_bool, BenchDoc};
+use super::{LoadError, INSIGHT_SCHEMA};
+
+/// Schema tag of one `BENCH_HISTORY.jsonl` line.
+pub const HISTORY_SCHEMA: &str = "numasched-bench-history/v1";
+
+/// Minimum comparable history entries before the gate arms.
+pub const GATE_MIN_ENTRIES: usize = 3;
+
+/// One appended bench run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistoryEntry {
+    pub id: String,
+    pub smoke: bool,
+    pub metrics: Vec<(String, f64)>,
+}
+
+/// Parse the whole history file. Every line must carry the schema tag;
+/// a mangled line is a typed error with its line number.
+pub fn parse_history(text: &str) -> Result<Vec<HistoryEntry>, LoadError> {
+    const SURFACE: &str = "bench history";
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let bad = |detail| LoadError { surface: SURFACE, line: lineno, detail };
+        if line.trim().is_empty() {
+            continue;
+        }
+        if !line.contains(HISTORY_SCHEMA) {
+            return Err(bad("missing history schema tag"));
+        }
+        let id = json_str(line, "id").ok_or_else(|| bad("missing id"))?.to_string();
+        let smoke = json_bool(line, "smoke").ok_or_else(|| bad("missing smoke marker"))?;
+        let pat = "\"metrics\":{";
+        let start = line.find(pat).ok_or_else(|| bad("missing metrics object"))? + pat.len();
+        let end = line[start..].find('}').ok_or_else(|| bad("unterminated metrics object"))?;
+        let mut metrics = Vec::new();
+        for pair in line[start..start + end].split(',') {
+            if pair.trim().is_empty() {
+                continue;
+            }
+            let (k, v) = pair.split_once(':').ok_or_else(|| bad("bad metric pair"))?;
+            let name = k.trim().trim_matches('"');
+            let value: f64 = v.trim().parse().map_err(|_| bad("bad metric value"))?;
+            metrics.push((name.to_string(), value));
+        }
+        out.push(HistoryEntry { id, smoke, metrics });
+    }
+    Ok(out)
+}
+
+/// Render one history line from a parsed (measured) bench snapshot.
+/// The caller is responsible for refusing provisional snapshots.
+pub fn render_history_entry(id: &str, doc: &BenchDoc) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{{\"schema\":\"{HISTORY_SCHEMA}\",\"id\":\"{}\",\"smoke\":{},\"metrics\":{{",
+        esc(id),
+        doc.smoke
+    ));
+    for (i, (name, value)) in doc.metrics.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\"{}\":{value}", esc(name)));
+    }
+    out.push_str("}}");
+    out.push('\n');
+    out
+}
+
+/// Metric family — decides direction and whether a metric can gate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// Lower is better (latencies, per-op costs, alloc counts).
+    Time,
+    /// Higher is better (throughputs, speedups, cache hits).
+    Rate,
+    /// Configuration/shape values (iteration counts, node counts):
+    /// reported, never gated.
+    Info,
+}
+
+impl Family {
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::Time => "time",
+            Family::Rate => "rate",
+            Family::Info => "info",
+        }
+    }
+}
+
+/// Classify a flattened metric name. Order matters: rate markers win
+/// (`task_ticks_per_s` is a rate despite containing `ticks`), then
+/// shape counts, then anything time/alloc-flavored.
+pub fn family_of(name: &str) -> Family {
+    let leaf = name.rsplit('.').next().unwrap_or(name);
+    if leaf.ends_with("_per_s") || leaf.contains("speedup") || leaf.ends_with("_hits") {
+        return Family::Rate;
+    }
+    const SHAPE: [&str; 9] =
+        ["iters", "ticks", "cells", "threads", "workers", "pids", "nodes", "renders", "ops"];
+    for s in SHAPE {
+        if leaf == s || leaf.ends_with(&format!("_{s}")) {
+            return Family::Info;
+        }
+    }
+    if leaf.contains("ns") || leaf.contains("ms") || leaf.contains("allocs") {
+        return Family::Time;
+    }
+    Family::Info
+}
+
+/// Per-family noise thresholds. A time metric regresses when it exceeds
+/// `baseline * time_factor`; a rate metric when it drops below
+/// `baseline * rate_factor`. Defaults are deliberately loose — CI
+/// runners are shared hardware.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Noise {
+    pub time_factor: f64,
+    pub rate_factor: f64,
+}
+
+impl Default for Noise {
+    fn default() -> Self {
+        Noise { time_factor: 1.35, rate_factor: 0.75 }
+    }
+}
+
+/// Parse a `--noise time=1.5,rate=0.8` override (either key optional).
+pub fn parse_noise(spec: &str) -> Result<Noise, LoadError> {
+    const SURFACE: &str = "noise spec";
+    let bad = |detail| LoadError { surface: SURFACE, line: 0, detail };
+    let mut n = Noise::default();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (key, value) = part.split_once('=').ok_or_else(|| bad("expected key=factor"))?;
+        let factor: f64 = value.trim().parse().map_err(|_| bad("factor is not a number"))?;
+        if factor.is_nan() || factor <= 0.0 {
+            return Err(bad("factor must be positive"));
+        }
+        match key.trim() {
+            "time" => n.time_factor = factor,
+            "rate" => n.rate_factor = factor,
+            _ => return Err(bad("unknown family (want time= or rate=)")),
+        }
+    }
+    Ok(n)
+}
+
+/// One metric's trend verdict.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrendRow {
+    pub metric: String,
+    pub family: Family,
+    pub baseline: f64,
+    pub latest: f64,
+    /// `latest / baseline` (0 when the baseline is 0).
+    pub ratio: f64,
+    /// `"ok"`, `"regression"`, `"info"`, or `"new"` (no prior sample).
+    pub verdict: &'static str,
+}
+
+/// The full bench analysis.
+#[derive(Debug, Default)]
+pub struct BenchAnalysis {
+    /// Total history entries read.
+    pub entries: usize,
+    /// Entries comparable with the latest (same smoke mode), inclusive.
+    pub comparable: usize,
+    /// Whether `--gate` may fail the build.
+    pub gate_armed: bool,
+    pub rows: Vec<TrendRow>,
+    pub regressions: usize,
+    pub note: String,
+}
+
+/// Lower median: for an even count, the lower of the two middle values
+/// — the conservative baseline choice (never inflated by one fast run).
+fn lower_median(mut values: Vec<f64>) -> f64 {
+    values.sort_by(|a, b| a.total_cmp(b));
+    values[(values.len() - 1) / 2]
+}
+
+/// Analyze the history's latest entry against its prior baseline.
+pub fn analyze(entries: &[HistoryEntry], noise: &Noise) -> BenchAnalysis {
+    let Some(latest) = entries.last() else {
+        return BenchAnalysis {
+            note: "history is empty — nothing to analyze".to_string(),
+            ..BenchAnalysis::default()
+        };
+    };
+    let prior: Vec<&HistoryEntry> = entries[..entries.len() - 1]
+        .iter()
+        .filter(|e| e.smoke == latest.smoke)
+        .collect();
+    let comparable = prior.len() + 1;
+    let gate_armed = comparable >= GATE_MIN_ENTRIES;
+    let mut rows = Vec::new();
+    let mut regressions = 0;
+    for (name, latest_value) in &latest.metrics {
+        let family = family_of(name);
+        let prior_values: Vec<f64> = prior
+            .iter()
+            .flat_map(|e| e.metrics.iter().filter(|(n, _)| n == name).map(|(_, v)| *v))
+            .collect();
+        let (baseline, verdict) = if prior_values.is_empty() {
+            (*latest_value, "new")
+        } else {
+            let base = lower_median(prior_values);
+            let verdict = match family {
+                Family::Info => "info",
+                Family::Time => {
+                    let bar = if base > 0.0 { base * noise.time_factor } else { 0.0 };
+                    if *latest_value > bar {
+                        "regression"
+                    } else {
+                        "ok"
+                    }
+                }
+                Family::Rate => {
+                    if base > 0.0 && *latest_value < base * noise.rate_factor {
+                        "regression"
+                    } else if base > 0.0 {
+                        "ok"
+                    } else {
+                        "info"
+                    }
+                }
+            };
+            (base, verdict)
+        };
+        if verdict == "regression" {
+            regressions += 1;
+        }
+        let ratio = if baseline != 0.0 { latest_value / baseline } else { 0.0 };
+        rows.push(TrendRow {
+            metric: name.clone(),
+            family,
+            baseline,
+            latest: *latest_value,
+            ratio,
+            verdict,
+        });
+    }
+    let note = format!(
+        "{} entries, {} comparable (latest id={} smoke={}); gate {}",
+        entries.len(),
+        comparable,
+        latest.id,
+        latest.smoke,
+        if gate_armed {
+            "armed"
+        } else {
+            "disarmed (needs >= 3 comparable entries)"
+        }
+    );
+    BenchAnalysis {
+        entries: entries.len(),
+        comparable,
+        gate_armed,
+        rows,
+        regressions,
+        note,
+    }
+}
+
+impl BenchAnalysis {
+    /// Text table, one row per metric.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("insight bench: {}\n", self.note));
+        if self.rows.is_empty() {
+            return out;
+        }
+        out.push_str(
+            "metric                          family  baseline      latest        ratio   verdict\n",
+        );
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:<30}  {:<6}  {:<12}  {:<12}  {:<6}  {}\n",
+                r.metric,
+                r.family.name(),
+                r.baseline,
+                r.latest,
+                format!("{:.3}", r.ratio),
+                r.verdict
+            ));
+        }
+        out.push_str(&format!("regressions: {}\n", self.regressions));
+        out
+    }
+
+    /// `numasched-insight/v1` JSON report.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{{\"schema\":\"{INSIGHT_SCHEMA}\",\"verb\":\"bench\",\"entries\":{},\
+             \"comparable\":{},\"gate_armed\":{},\"regressions\":{},\"note\":\"{}\",\"rows\":[",
+            self.entries,
+            self.comparable,
+            self.gate_armed,
+            self.regressions,
+            esc(&self.note)
+        ));
+        for (i, r) in self.rows.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"metric\":\"{}\",\"family\":\"{}\",\"baseline\":{},\"latest\":{},\
+                 \"ratio\":{:.3},\"verdict\":\"{}\"}}",
+                esc(&r.metric),
+                r.family.name(),
+                r.baseline,
+                r.latest,
+                r.ratio,
+                r.verdict
+            ));
+        }
+        out.push_str("]}");
+        out.push('\n');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(id: &str, ns_p50: f64, ticks_per_s: f64) -> HistoryEntry {
+        HistoryEntry {
+            id: id.to_string(),
+            smoke: true,
+            metrics: vec![
+                ("roundtrip.ns_p50".to_string(), ns_p50),
+                ("sim.task_ticks_per_s".to_string(), ticks_per_s),
+                ("roundtrip.iters".to_string(), 2000.0),
+            ],
+        }
+    }
+
+    #[test]
+    fn family_classification_covers_the_bench_leaves() {
+        assert_eq!(family_of("roundtrip.ns_p50"), Family::Time);
+        assert_eq!(family_of("roundtrip.allocs_per_sample"), Family::Time);
+        assert_eq!(family_of("scale.ns_per_tick"), Family::Time);
+        assert_eq!(family_of("metrics.hot_ns_per_op"), Family::Time);
+        assert_eq!(family_of("scale.monitor_full_ms"), Family::Time);
+        assert_eq!(family_of("sim.task_ticks_per_s"), Family::Rate);
+        assert_eq!(family_of("sweep.speedup"), Family::Rate);
+        assert_eq!(family_of("scale.monitor_incr_speedup"), Family::Rate);
+        assert_eq!(family_of("scale.monitor_incr_hits"), Family::Rate);
+        assert_eq!(family_of("roundtrip.iters"), Family::Info);
+        assert_eq!(family_of("sim.ticks"), Family::Info);
+        assert_eq!(family_of("metrics.hot_ops"), Family::Info);
+        assert_eq!(family_of("metrics.epoch_renders"), Family::Info);
+        assert_eq!(family_of("scale.sweep_workers"), Family::Info);
+    }
+
+    #[test]
+    fn history_roundtrips_through_render_and_parse() {
+        let doc = BenchDoc {
+            smoke: true,
+            provisional: false,
+            metrics: vec![
+                ("roundtrip.ns_p50".to_string(), 9000.0),
+                ("sweep.speedup".to_string(), 3.25),
+            ],
+        };
+        let line = render_history_entry("abc123", &doc);
+        assert!(line.starts_with("{\"schema\":\"numasched-bench-history/v1\",\"id\":\"abc123\""));
+        let parsed = parse_history(&line).unwrap();
+        assert_eq!(parsed.len(), 1);
+        assert_eq!(parsed[0].id, "abc123");
+        assert!(parsed[0].smoke);
+        assert_eq!(parsed[0].metrics[0], ("roundtrip.ns_p50".to_string(), 9000.0));
+        assert_eq!(parsed[0].metrics[1], ("sweep.speedup".to_string(), 3.25));
+    }
+
+    #[test]
+    fn mangled_history_lines_yield_typed_errors() {
+        let doc = BenchDoc {
+            smoke: false,
+            provisional: false,
+            metrics: vec![("x.y".to_string(), 1.0)],
+        };
+        let good = render_history_entry("a", &doc);
+        let text = format!("{good}{{\"schema\":\"numasched-bench-history/v1\",\"id\":\"b\"}}\n");
+        let err = parse_history(&text).unwrap_err();
+        assert_eq!(err.line, 2);
+        assert_eq!(err.detail, "missing smoke marker");
+        assert_eq!(parse_history("junk\n").unwrap_err().detail, "missing history schema tag");
+    }
+
+    #[test]
+    fn gate_stays_disarmed_below_three_comparable_entries() {
+        let noise = Noise::default();
+        let a = analyze(&[entry("a", 9000.0, 4e6)], &noise);
+        assert!(!a.gate_armed);
+        assert_eq!(a.comparable, 1);
+        assert!(a.rows.iter().all(|r| r.verdict == "new"));
+
+        let two = [entry("a", 9000.0, 4e6), entry("b", 9100.0, 3.9e6)];
+        assert!(!analyze(&two, &noise).gate_armed);
+
+        // A smoke=false entry in the middle is not comparable.
+        let mut mixed = two.to_vec();
+        mixed.insert(1, HistoryEntry { id: "full".to_string(), smoke: false, metrics: vec![] });
+        let a = analyze(&mixed, &noise);
+        assert_eq!(a.entries, 3);
+        assert_eq!(a.comparable, 2);
+        assert!(!a.gate_armed);
+    }
+
+    #[test]
+    fn time_regressions_and_rate_regressions_are_detected() {
+        let noise = Noise::default();
+        let stable = [
+            entry("a", 9000.0, 4e6),
+            entry("b", 9100.0, 4.1e6),
+            entry("c", 8900.0, 3.9e6),
+            entry("d", 9050.0, 4.0e6),
+        ];
+        let a = analyze(&stable, &noise);
+        assert!(a.gate_armed);
+        assert_eq!(a.regressions, 0);
+        let p50 = a.rows.iter().find(|r| r.metric == "roundtrip.ns_p50").unwrap();
+        assert_eq!(p50.verdict, "ok");
+        assert_eq!(p50.baseline, 9000.0, "lower median of {{9000, 9100, 8900}}");
+
+        // Latency blows past baseline * 1.35.
+        let mut slow = stable.to_vec();
+        slow.push(entry("e", 20000.0, 4.0e6));
+        let a = analyze(&slow, &noise);
+        assert_eq!(a.regressions, 1);
+        assert_eq!(
+            a.rows.iter().find(|r| r.metric == "roundtrip.ns_p50").unwrap().verdict,
+            "regression"
+        );
+
+        // Throughput collapses below baseline * 0.75.
+        let mut choked = stable.to_vec();
+        choked.push(entry("f", 9000.0, 1e6));
+        let a = analyze(&choked, &noise);
+        assert_eq!(a.regressions, 1);
+        let row = a.rows.iter().find(|r| r.metric == "sim.task_ticks_per_s").unwrap();
+        assert_eq!(row.verdict, "regression");
+        // Info metrics never regress, whatever they do.
+        assert!(a.rows.iter().filter(|r| r.family == Family::Info).all(|r| r.verdict == "info"));
+        // Reports render byte-identically.
+        let b = analyze(&choked, &noise);
+        assert_eq!(a.render_text(), b.render_text());
+        assert_eq!(a.to_json(), b.to_json());
+        assert!(a.to_json().contains("\"gate_armed\":true"));
+    }
+
+    #[test]
+    fn zero_baseline_time_metric_regresses_on_any_growth() {
+        let noise = Noise::default();
+        let mk = |allocs: f64| HistoryEntry {
+            id: "x".to_string(),
+            smoke: true,
+            metrics: vec![("roundtrip.allocs_per_sample".to_string(), allocs)],
+        };
+        let grew = [mk(0.0), mk(0.0), mk(0.0), mk(2.0)];
+        let a = analyze(&grew, &noise);
+        assert_eq!(a.regressions, 1, "0 -> 2 allocs is a regression, ratio games aside");
+        let flat = [mk(0.0), mk(0.0), mk(0.0), mk(0.0)];
+        assert_eq!(analyze(&flat, &noise).regressions, 0);
+    }
+
+    #[test]
+    fn noise_spec_parses_and_rejects() {
+        assert_eq!(parse_noise("").unwrap(), Noise::default());
+        let n = parse_noise("time=1.5,rate=0.9").unwrap();
+        assert_eq!(n.time_factor, 1.5);
+        assert_eq!(n.rate_factor, 0.9);
+        assert_eq!(parse_noise("rate=0.5").unwrap().time_factor, Noise::default().time_factor);
+        assert!(parse_noise("time=fast").is_err());
+        assert!(parse_noise("space=1.5").is_err());
+        assert!(parse_noise("time=-1").is_err());
+        assert!(parse_noise("time").is_err());
+    }
+}

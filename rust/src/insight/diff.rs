@@ -1,0 +1,891 @@
+//! Cross-run differ: align two runs of the same scenario and explain
+//! *where* and *why* they diverge.
+//!
+//! The golden-trace gate and the metrics determinism gate both answer
+//! "are these byte-identical?" — useful as a tripwire, useless as a
+//! diagnosis. This differ answers the follow-up: it aligns epochs,
+//! finds the first counter/gauge/histogram divergence per metric
+//! (ranked by how early and how large), the first decision split (both
+//! candidate tables side by side — the actual root cause of almost
+//! every trajectory fork), and per-process degradation deltas.
+//!
+//! Reports are pure functions of the two documents: rendering the same
+//! pair twice yields byte-identical text and JSON.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::telemetry::provenance::esc;
+use crate::telemetry::registry::ParsedEpoch;
+
+use super::load::{ExplainRecord, MetricsDoc, TraceDoc};
+use super::INSIGHT_SCHEMA;
+
+/// One header-level field mismatch (name, policy, seed, ...).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FieldDiff {
+    pub field: &'static str,
+    pub a: String,
+    pub b: String,
+}
+
+/// First divergence of one counter, plus the final values on each side.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CounterDelta {
+    pub name: String,
+    /// Epoch number of the first sample where the sides disagree.
+    pub first_epoch: u64,
+    pub t_ms: u64,
+    pub a_at: u64,
+    pub b_at: u64,
+    pub a_final: u64,
+    pub b_final: u64,
+}
+
+/// First divergence of one gauge.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GaugeDelta {
+    pub name: String,
+    pub first_epoch: u64,
+    pub a_at: f64,
+    pub b_at: f64,
+}
+
+/// First divergence of one histogram (count/sum/buckets compared as a
+/// unit; the report carries the final count and sum per side).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistDelta {
+    pub name: String,
+    pub first_epoch: u64,
+    pub a_n: u64,
+    pub b_n: u64,
+    pub a_sum: u64,
+    pub b_sum: u64,
+}
+
+/// The first explain record where the two runs' decisions split. A
+/// `None` side means that run had fewer explain rows (the streams fell
+/// out of step before any row-level mismatch).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExplainSplit {
+    /// 0-based index into the explain sequence.
+    pub index: usize,
+    pub a: Option<ExplainRecord>,
+    pub b: Option<ExplainRecord>,
+}
+
+/// Per-process degradation-factor delta, keyed by (pid, comm). A `None`
+/// side means the process only exists in the other run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResultDelta {
+    pub pid: i64,
+    pub comm: String,
+    pub a_degradation: Option<f64>,
+    pub b_degradation: Option<f64>,
+}
+
+/// The full metrics-diff report.
+#[derive(Debug, Default)]
+pub struct MetricsDiff {
+    pub a_label: String,
+    pub b_label: String,
+    pub policy_a: String,
+    pub policy_b: String,
+    pub header: Vec<FieldDiff>,
+    pub epochs_a: usize,
+    pub epochs_b: usize,
+    pub explains_a: usize,
+    pub explains_b: usize,
+    pub counters: Vec<CounterDelta>,
+    pub gauges: Vec<GaugeDelta>,
+    pub hists: Vec<HistDelta>,
+    pub explain_split: Option<ExplainSplit>,
+    pub results: Vec<ResultDelta>,
+}
+
+fn counter_at(e: &ParsedEpoch, name: &str) -> u64 {
+    e.counters.get(name).copied().unwrap_or(0)
+}
+
+fn diff_headers(a: &MetricsDoc, b: &MetricsDoc) -> Vec<FieldDiff> {
+    let mut out = Vec::new();
+    if a.name != b.name {
+        out.push(FieldDiff { field: "name", a: a.name.clone(), b: b.name.clone() });
+    }
+    if a.policy != b.policy {
+        out.push(FieldDiff { field: "policy", a: a.policy.clone(), b: b.policy.clone() });
+    }
+    if a.seed != b.seed {
+        out.push(FieldDiff { field: "seed", a: a.seed.to_string(), b: b.seed.to_string() });
+    }
+    out
+}
+
+fn diff_counters(a: &[ParsedEpoch], b: &[ParsedEpoch]) -> Vec<CounterDelta> {
+    let common = a.len().min(b.len());
+    let mut names: BTreeSet<&str> = BTreeSet::new();
+    if let Some(e) = a.last() {
+        names.extend(e.counters.keys().map(|k| k.as_str()));
+    }
+    if let Some(e) = b.last() {
+        names.extend(e.counters.keys().map(|k| k.as_str()));
+    }
+    let mut out = Vec::new();
+    for name in names {
+        let a_final = a.last().map(|e| counter_at(e, name)).unwrap_or(0);
+        let b_final = b.last().map(|e| counter_at(e, name)).unwrap_or(0);
+        let first = (0..common).find(|&i| counter_at(&a[i], name) != counter_at(&b[i], name));
+        let (anchor, a_at, b_at) = match first {
+            Some(i) => (&a[i], counter_at(&a[i], name), counter_at(&b[i], name)),
+            None if a_final != b_final => {
+                // Identical over the common prefix; the divergence is
+                // the extra epochs of the longer run.
+                let longer = if a.len() > b.len() { a } else { b };
+                (&longer[common], a_final, b_final)
+            }
+            None => continue,
+        };
+        out.push(CounterDelta {
+            name: name.to_string(),
+            first_epoch: anchor.epoch,
+            t_ms: anchor.t_ms,
+            a_at,
+            b_at,
+            a_final,
+            b_final,
+        });
+    }
+    // Ranked: earliest divergence first, then by magnitude, then name.
+    out.sort_by(|x, y| {
+        x.first_epoch
+            .cmp(&y.first_epoch)
+            .then(y.a_final.abs_diff(y.b_final).cmp(&x.a_final.abs_diff(x.b_final)))
+            .then(x.name.cmp(&y.name))
+    });
+    out
+}
+
+fn diff_gauges(a: &[ParsedEpoch], b: &[ParsedEpoch]) -> Vec<GaugeDelta> {
+    let common = a.len().min(b.len());
+    let mut names: BTreeSet<&str> = BTreeSet::new();
+    if let Some(e) = a.last() {
+        names.extend(e.gauges.keys().map(|k| k.as_str()));
+    }
+    if let Some(e) = b.last() {
+        names.extend(e.gauges.keys().map(|k| k.as_str()));
+    }
+    let mut out = Vec::new();
+    for name in names {
+        let at = |e: &ParsedEpoch| e.gauges.get(name).copied().unwrap_or(0.0);
+        let first = (0..common).find(|&i| at(&a[i]).to_bits() != at(&b[i]).to_bits());
+        if let Some(i) = first {
+            out.push(GaugeDelta {
+                name: name.to_string(),
+                first_epoch: a[i].epoch,
+                a_at: at(&a[i]),
+                b_at: at(&b[i]),
+            });
+        }
+    }
+    out
+}
+
+fn diff_hists(a: &[ParsedEpoch], b: &[ParsedEpoch]) -> Vec<HistDelta> {
+    let common = a.len().min(b.len());
+    let mut names: BTreeSet<&str> = BTreeSet::new();
+    if let Some(e) = a.last() {
+        names.extend(e.hists.keys().map(|k| k.as_str()));
+    }
+    if let Some(e) = b.last() {
+        names.extend(e.hists.keys().map(|k| k.as_str()));
+    }
+    let mut out = Vec::new();
+    for name in names {
+        let first = (0..common).find(|&i| a[i].hists.get(name) != b[i].hists.get(name));
+        if let Some(i) = first {
+            let n_sum = |e: &ParsedEpoch| {
+                e.hists.get(name).map(|h| (h.0, h.1)).unwrap_or((0, 0))
+            };
+            let (a_n, a_sum) = a.last().map(n_sum).unwrap_or((0, 0));
+            let (b_n, b_sum) = b.last().map(n_sum).unwrap_or((0, 0));
+            out.push(HistDelta {
+                name: name.to_string(),
+                first_epoch: a[i].epoch,
+                a_n,
+                b_n,
+                a_sum,
+                b_sum,
+            });
+        }
+    }
+    out
+}
+
+fn diff_explains(a: &[ExplainRecord], b: &[ExplainRecord]) -> Option<ExplainSplit> {
+    let common = a.len().min(b.len());
+    for i in 0..common {
+        if a[i] != b[i] {
+            return Some(ExplainSplit { index: i, a: Some(a[i].clone()), b: Some(b[i].clone()) });
+        }
+    }
+    if a.len() != b.len() {
+        return Some(ExplainSplit {
+            index: common,
+            a: a.get(common).cloned(),
+            b: b.get(common).cloned(),
+        });
+    }
+    None
+}
+
+fn diff_results(a: &MetricsDoc, b: &MetricsDoc) -> Vec<ResultDelta> {
+    let key = |r: &super::load::ProcOutcome| (r.pid, r.comm.clone());
+    let ma: BTreeMap<(i64, String), f64> =
+        a.results.iter().map(|r| (key(r), r.degradation)).collect();
+    let mb: BTreeMap<(i64, String), f64> =
+        b.results.iter().map(|r| (key(r), r.degradation)).collect();
+    let keys: BTreeSet<&(i64, String)> = ma.keys().chain(mb.keys()).collect();
+    let mut out = Vec::new();
+    for k in keys {
+        let va = ma.get(k).copied();
+        let vb = mb.get(k).copied();
+        let same = match (va, vb) {
+            (Some(x), Some(y)) => x.to_bits() == y.to_bits(),
+            _ => false,
+        };
+        if !same {
+            out.push(ResultDelta {
+                pid: k.0,
+                comm: k.1.clone(),
+                a_degradation: va,
+                b_degradation: vb,
+            });
+        }
+    }
+    out
+}
+
+/// Diff two parsed metrics streams.
+pub fn diff_metrics(a_label: &str, a: &MetricsDoc, b_label: &str, b: &MetricsDoc) -> MetricsDiff {
+    MetricsDiff {
+        a_label: a_label.to_string(),
+        b_label: b_label.to_string(),
+        policy_a: a.policy.clone(),
+        policy_b: b.policy.clone(),
+        header: diff_headers(a, b),
+        epochs_a: a.epochs.len(),
+        epochs_b: b.epochs.len(),
+        explains_a: a.explains.len(),
+        explains_b: b.explains.len(),
+        counters: diff_counters(&a.epochs, &b.epochs),
+        gauges: diff_gauges(&a.epochs, &b.epochs),
+        hists: diff_hists(&a.epochs, &b.epochs),
+        explain_split: diff_explains(&a.explains, &b.explains),
+        results: diff_results(a, b),
+    }
+}
+
+fn opt_u64(v: Option<u64>) -> String {
+    match v {
+        Some(n) => n.to_string(),
+        None => "-".to_string(),
+    }
+}
+
+fn opt_f64(v: Option<f64>) -> String {
+    match v {
+        Some(x) => format!("{x}"),
+        None => "-".to_string(),
+    }
+}
+
+/// Render one explain record with its full candidate table, indented
+/// for embedding under a split header.
+fn render_explain(side: &str, rec: &Option<ExplainRecord>, out: &mut String) {
+    match rec {
+        None => {
+            out.push_str(&format!("  [{side}] <absent: this run emitted fewer explain rows>\n"));
+        }
+        Some(r) => {
+            out.push_str(&format!(
+                "  [{side}] t={} pid={} comm={} outcome={} from={} chosen={} dist_best={}\n",
+                r.t_ms,
+                r.pid,
+                r.comm,
+                r.outcome,
+                r.from,
+                opt_u64(r.chosen),
+                r.dist_best
+            ));
+            out.push_str("      node  distance  score  ctrl_rho  route_rho  fits\n");
+            for c in &r.candidates {
+                out.push_str(&format!(
+                    "      {:<4}  {:<8}  {:<5}  {:<8}  {:<9}  {}\n",
+                    c.node,
+                    c.distance,
+                    c.score,
+                    c.ctrl_rho,
+                    c.route_rho,
+                    if c.fits { "yes" } else { "no" }
+                ));
+            }
+        }
+    }
+}
+
+fn json_explain(rec: &Option<ExplainRecord>) -> String {
+    match rec {
+        None => "null".to_string(),
+        Some(r) => {
+            let mut cands = String::new();
+            for (i, c) in r.candidates.iter().enumerate() {
+                if i > 0 {
+                    cands.push(',');
+                }
+                cands.push_str(&format!(
+                    "{{\"n\":{},\"d\":{},\"s\":{},\"rho\":{},\"lrho\":{},\"fits\":{}}}",
+                    c.node, c.distance, c.score, c.ctrl_rho, c.route_rho, c.fits
+                ));
+            }
+            format!(
+                "{{\"t\":{},\"pid\":{},\"comm\":\"{}\",\"outcome\":\"{}\",\"from\":{},\
+                 \"chosen\":{},\"dist_best\":{},\"cands\":[{cands}]}}",
+                r.t_ms,
+                r.pid,
+                esc(&r.comm),
+                esc(&r.outcome),
+                r.from,
+                r.chosen.map(|n| n.to_string()).unwrap_or_else(|| "null".to_string()),
+                r.dist_best,
+            )
+        }
+    }
+}
+
+impl MetricsDiff {
+    /// Whether anything at all diverged.
+    pub fn divergent(&self) -> bool {
+        !self.header.is_empty()
+            || self.epochs_a != self.epochs_b
+            || self.explains_a != self.explains_b
+            || !self.counters.is_empty()
+            || !self.gauges.is_empty()
+            || !self.hists.is_empty()
+            || self.explain_split.is_some()
+            || !self.results.is_empty()
+    }
+
+    /// Human-readable ranked report. Byte-identical for identical input.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("insight diff (metrics): {} vs {}\n", self.a_label, self.b_label));
+        out.push_str(&format!(
+            "epochs: a={} b={}   explains: a={} b={}\n",
+            self.epochs_a, self.epochs_b, self.explains_a, self.explains_b
+        ));
+        for h in &self.header {
+            out.push_str(&format!("header {}: a={} b={}\n", h.field, h.a, h.b));
+        }
+        if !self.divergent() {
+            out.push_str("no divergences\n");
+            return out;
+        }
+        if let Some(s) = &self.explain_split {
+            out.push_str(&format!(
+                "decision split at explain row {} — both candidate tables:\n",
+                s.index
+            ));
+            render_explain("a", &s.a, &mut out);
+            render_explain("b", &s.b, &mut out);
+        }
+        if !self.counters.is_empty() {
+            out.push_str("counters (ranked by first divergent epoch, then magnitude):\n");
+            out.push_str("  name                        first_epoch  t_ms      a@        b@        a_final   b_final\n");
+            for c in &self.counters {
+                out.push_str(&format!(
+                    "  {:<26}  {:<11}  {:<8}  {:<8}  {:<8}  {:<8}  {}\n",
+                    c.name, c.first_epoch, c.t_ms, c.a_at, c.b_at, c.a_final, c.b_final
+                ));
+            }
+        }
+        if !self.gauges.is_empty() {
+            out.push_str("gauges:\n");
+            for g in &self.gauges {
+                out.push_str(&format!(
+                    "  {:<26}  first_epoch={}  a={}  b={}\n",
+                    g.name, g.first_epoch, g.a_at, g.b_at
+                ));
+            }
+        }
+        if !self.hists.is_empty() {
+            out.push_str("histograms:\n");
+            for h in &self.hists {
+                out.push_str(&format!(
+                    "  {:<26}  first_epoch={}  a: n={} sum={}  b: n={} sum={}\n",
+                    h.name, h.first_epoch, h.a_n, h.a_sum, h.b_n, h.b_sum
+                ));
+            }
+        }
+        if !self.results.is_empty() {
+            out.push_str(&format!(
+                "degradation deltas (policy a={}, b={}):\n",
+                self.policy_a, self.policy_b
+            ));
+            for r in &self.results {
+                out.push_str(&format!(
+                    "  pid={:<6} {:<16}  a={}  b={}\n",
+                    r.pid,
+                    r.comm,
+                    opt_f64(r.a_degradation),
+                    opt_f64(r.b_degradation)
+                ));
+            }
+        }
+        out
+    }
+
+    /// `numasched-insight/v1` JSON report.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{{\"schema\":\"{INSIGHT_SCHEMA}\",\"verb\":\"diff\",\"kind\":\"metrics\",\
+             \"a\":\"{}\",\"b\":\"{}\",\"divergent\":{},",
+            esc(&self.a_label),
+            esc(&self.b_label),
+            self.divergent()
+        ));
+        out.push_str(&format!(
+            "\"epochs\":{{\"a\":{},\"b\":{}}},\"explains\":{{\"a\":{},\"b\":{}}},",
+            self.epochs_a, self.epochs_b, self.explains_a, self.explains_b
+        ));
+        out.push_str("\"header\":[");
+        for (i, h) in self.header.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"field\":\"{}\",\"a\":\"{}\",\"b\":\"{}\"}}",
+                h.field,
+                esc(&h.a),
+                esc(&h.b)
+            ));
+        }
+        out.push_str("],\"counters\":[");
+        for (i, c) in self.counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"first_epoch\":{},\"t_ms\":{},\"a_at\":{},\"b_at\":{},\
+                 \"a_final\":{},\"b_final\":{}}}",
+                esc(&c.name),
+                c.first_epoch,
+                c.t_ms,
+                c.a_at,
+                c.b_at,
+                c.a_final,
+                c.b_final
+            ));
+        }
+        out.push_str("],\"gauges\":[");
+        for (i, g) in self.gauges.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"first_epoch\":{},\"a\":{},\"b\":{}}}",
+                esc(&g.name),
+                g.first_epoch,
+                g.a_at,
+                g.b_at
+            ));
+        }
+        out.push_str("],\"hists\":[");
+        for (i, h) in self.hists.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"first_epoch\":{},\"a_n\":{},\"a_sum\":{},\"b_n\":{},\
+                 \"b_sum\":{}}}",
+                esc(&h.name),
+                h.first_epoch,
+                h.a_n,
+                h.a_sum,
+                h.b_n,
+                h.b_sum
+            ));
+        }
+        out.push_str("],\"explain_split\":");
+        match &self.explain_split {
+            None => out.push_str("null"),
+            Some(s) => {
+                out.push_str(&format!(
+                    "{{\"index\":{},\"a\":{},\"b\":{}}}",
+                    s.index,
+                    json_explain(&s.a),
+                    json_explain(&s.b)
+                ));
+            }
+        }
+        out.push_str(",\"results\":[");
+        for (i, r) in self.results.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let f = |v: Option<f64>| match v {
+                Some(x) => format!("{x}"),
+                None => "null".to_string(),
+            };
+            out.push_str(&format!(
+                "{{\"pid\":{},\"comm\":\"{}\",\"a\":{},\"b\":{}}}",
+                r.pid,
+                esc(&r.comm),
+                f(r.a_degradation),
+                f(r.b_degradation)
+            ));
+        }
+        out.push_str("]}");
+        out.push('\n');
+        out
+    }
+}
+
+// ------------------------------------------------------------------ trace
+
+/// First divergence in one of a trace's record sequences, with both
+/// records rendered compactly. `None` = that side ran out of records.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SeqSplit {
+    pub index: usize,
+    pub a: Option<String>,
+    pub b: Option<String>,
+}
+
+/// The full trace-diff report.
+#[derive(Debug, Default)]
+pub struct TraceDiffReport {
+    pub a_label: String,
+    pub b_label: String,
+    pub header: Vec<FieldDiff>,
+    pub events_a: usize,
+    pub events_b: usize,
+    pub event_split: Option<SeqSplit>,
+    pub decisions_a: usize,
+    pub decisions_b: usize,
+    pub decision_split: Option<SeqSplit>,
+    pub occ_a: usize,
+    pub occ_b: usize,
+    pub occ_split: Option<SeqSplit>,
+    pub summary: Vec<FieldDiff>,
+}
+
+fn seq_split<T: PartialEq, F: Fn(&T) -> String>(a: &[T], b: &[T], render: F) -> Option<SeqSplit> {
+    let common = a.len().min(b.len());
+    for i in 0..common {
+        if a[i] != b[i] {
+            return Some(SeqSplit { index: i, a: Some(render(&a[i])), b: Some(render(&b[i])) });
+        }
+    }
+    if a.len() != b.len() {
+        return Some(SeqSplit {
+            index: common,
+            a: a.get(common).map(&render),
+            b: b.get(common).map(&render),
+        });
+    }
+    None
+}
+
+fn render_event(e: &super::load::TraceEvent) -> String {
+    let pids: Vec<String> = e.pids.iter().map(|p| p.to_string()).collect();
+    format!(
+        "t={} ev={} comm={} pids=[{}] node={} pages={}",
+        e.t,
+        e.kind,
+        e.comm,
+        pids.join(","),
+        opt_u64(e.node),
+        opt_u64(e.pages)
+    )
+}
+
+fn render_decision(d: &super::load::TraceDecision) -> String {
+    format!(
+        "t={} decision={} pid={} comm={} from={} to={} sticky_pages={}",
+        d.t, d.reason, d.pid, d.comm, d.from, d.to, d.sticky_pages
+    )
+}
+
+fn render_occ(o: &super::load::TraceOcc) -> String {
+    let occ: Vec<String> = o.occ.iter().map(|x| x.to_string()).collect();
+    let rho: Vec<String> = o.rho.iter().map(|x| format!("{x}")).collect();
+    format!("t={} occ=[{}] rho=[{}] running={}", o.t, occ.join(","), rho.join(","), o.running)
+}
+
+fn diff_trace_headers(a: &TraceDoc, b: &TraceDoc) -> Vec<FieldDiff> {
+    let mut out = Vec::new();
+    let mut push = |field, x: &str, y: &str| {
+        if x != y {
+            out.push(FieldDiff { field, a: x.to_string(), b: y.to_string() });
+        }
+    };
+    push("scenario", &a.scenario, &b.scenario);
+    push("preset", &a.preset, &b.preset);
+    push("policy", &a.policy, &b.policy);
+    push("seed", &a.seed.to_string(), &b.seed.to_string());
+    push("horizon_ms", &format!("{}", a.horizon_ms), &format!("{}", b.horizon_ms));
+    out
+}
+
+fn diff_trace_summaries(a: &TraceDoc, b: &TraceDoc) -> Vec<FieldDiff> {
+    let sa = match &a.summary {
+        Some(s) => s,
+        None => return Vec::new(),
+    };
+    let sb = match &b.summary {
+        Some(s) => s,
+        None => return Vec::new(),
+    };
+    let fields: [(&'static str, String, String); 6] = [
+        ("end_ms", format!("{}", sa.end_ms), format!("{}", sb.end_ms)),
+        ("procs", sa.procs.to_string(), sb.procs.to_string()),
+        ("finished", sa.finished.to_string(), sb.finished.to_string()),
+        ("migrations", sa.migrations.to_string(), sb.migrations.to_string()),
+        ("pages_migrated", sa.pages_migrated.to_string(), sb.pages_migrated.to_string()),
+        ("decisions", sa.decisions.to_string(), sb.decisions.to_string()),
+    ];
+    fields
+        .into_iter()
+        .filter(|(_, x, y)| x != y)
+        .map(|(field, a, b)| FieldDiff { field, a, b })
+        .collect()
+}
+
+/// Diff two parsed scenario traces.
+pub fn diff_trace(a_label: &str, a: &TraceDoc, b_label: &str, b: &TraceDoc) -> TraceDiffReport {
+    TraceDiffReport {
+        a_label: a_label.to_string(),
+        b_label: b_label.to_string(),
+        header: diff_trace_headers(a, b),
+        events_a: a.events.len(),
+        events_b: b.events.len(),
+        event_split: seq_split(&a.events, &b.events, render_event),
+        decisions_a: a.decisions.len(),
+        decisions_b: b.decisions.len(),
+        decision_split: seq_split(&a.decisions, &b.decisions, render_decision),
+        occ_a: a.occupancy.len(),
+        occ_b: b.occupancy.len(),
+        occ_split: seq_split(&a.occupancy, &b.occupancy, render_occ),
+        summary: diff_trace_summaries(a, b),
+    }
+}
+
+fn render_split(title: &str, s: &Option<SeqSplit>, out: &mut String) {
+    if let Some(s) = s {
+        out.push_str(&format!("{title} split at index {}:\n", s.index));
+        out.push_str(&format!("  a: {}\n", s.a.as_deref().unwrap_or("<absent>")));
+        out.push_str(&format!("  b: {}\n", s.b.as_deref().unwrap_or("<absent>")));
+    }
+}
+
+fn json_split(s: &Option<SeqSplit>) -> String {
+    match s {
+        None => "null".to_string(),
+        Some(s) => {
+            let side = |v: &Option<String>| match v {
+                Some(x) => format!("\"{}\"", esc(x)),
+                None => "null".to_string(),
+            };
+            format!("{{\"index\":{},\"a\":{},\"b\":{}}}", s.index, side(&s.a), side(&s.b))
+        }
+    }
+}
+
+impl TraceDiffReport {
+    pub fn divergent(&self) -> bool {
+        !self.header.is_empty()
+            || self.event_split.is_some()
+            || self.decision_split.is_some()
+            || self.occ_split.is_some()
+            || !self.summary.is_empty()
+    }
+
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("insight diff (trace): {} vs {}\n", self.a_label, self.b_label));
+        out.push_str(&format!(
+            "events: a={} b={}   decisions: a={} b={}   occupancy: a={} b={}\n",
+            self.events_a, self.events_b, self.decisions_a, self.decisions_b, self.occ_a,
+            self.occ_b
+        ));
+        for h in &self.header {
+            out.push_str(&format!("header {}: a={} b={}\n", h.field, h.a, h.b));
+        }
+        if !self.divergent() {
+            out.push_str("no divergences\n");
+            return out;
+        }
+        render_split("decision", &self.decision_split, &mut out);
+        render_split("event", &self.event_split, &mut out);
+        render_split("occupancy", &self.occ_split, &mut out);
+        for s in &self.summary {
+            out.push_str(&format!("summary {}: a={} b={}\n", s.field, s.a, s.b));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{{\"schema\":\"{INSIGHT_SCHEMA}\",\"verb\":\"diff\",\"kind\":\"trace\",\
+             \"a\":\"{}\",\"b\":\"{}\",\"divergent\":{},",
+            esc(&self.a_label),
+            esc(&self.b_label),
+            self.divergent()
+        ));
+        out.push_str(&format!(
+            "\"events\":{{\"a\":{},\"b\":{}}},\"decisions\":{{\"a\":{},\"b\":{}}},\
+             \"occupancy\":{{\"a\":{},\"b\":{}}},",
+            self.events_a, self.events_b, self.decisions_a, self.decisions_b, self.occ_a,
+            self.occ_b
+        ));
+        out.push_str("\"header\":[");
+        for (i, h) in self.header.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"field\":\"{}\",\"a\":\"{}\",\"b\":\"{}\"}}",
+                h.field,
+                esc(&h.a),
+                esc(&h.b)
+            ));
+        }
+        out.push_str("],");
+        out.push_str(&format!("\"event_split\":{},", json_split(&self.event_split)));
+        out.push_str(&format!("\"decision_split\":{},", json_split(&self.decision_split)));
+        out.push_str(&format!("\"occ_split\":{},", json_split(&self.occ_split)));
+        out.push_str("\"summary\":[");
+        for (i, s) in self.summary.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"field\":\"{}\",\"a\":\"{}\",\"b\":\"{}\"}}",
+                s.field,
+                esc(&s.a),
+                esc(&s.b)
+            ));
+        }
+        out.push_str("]}");
+        out.push('\n');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::load::{parse_metrics, parse_trace};
+    use super::*;
+
+    fn stream(seed: u64, moves: u64) -> String {
+        format!(
+            concat!(
+                "{{\"schema\":\"numasched-metrics/v1\",\"name\":\"s\",\"policy\":\"proposed\",\"seed\":{seed}}}\n",
+                "{{\"t\":50,\"epoch\":0,\"c\":{{\"moves\":0}},\"g\":{{\"imbalance\":0.5}},\"h\":{{}}}}\n",
+                "{{\"t\":100,\"epoch\":1,\"c\":{{\"moves\":{moves}}},\"g\":{{\"imbalance\":0.5}},\"h\":{{}}}}\n",
+                "{{\"end_ms\":100,\"epochs\":2,\"explains\":0}}\n",
+            ),
+            seed = seed,
+            moves = moves
+        )
+    }
+
+    #[test]
+    fn identical_streams_report_no_divergences() {
+        let a = parse_metrics(&stream(42, 3)).unwrap();
+        let b = parse_metrics(&stream(42, 3)).unwrap();
+        let d = diff_metrics("a", &a, "b", &b);
+        assert!(!d.divergent());
+        assert!(d.render_text().contains("no divergences"));
+        assert!(d.to_json().contains("\"divergent\":false"));
+    }
+
+    #[test]
+    fn counter_divergence_is_found_and_anchored() {
+        let a = parse_metrics(&stream(42, 3)).unwrap();
+        let b = parse_metrics(&stream(7, 9)).unwrap();
+        let d = diff_metrics("a", &a, "b", &b);
+        assert!(d.divergent());
+        assert_eq!(d.header.len(), 1, "seed differs");
+        assert_eq!(d.counters.len(), 1);
+        assert_eq!(d.counters[0].name, "moves");
+        assert_eq!(d.counters[0].first_epoch, 1);
+        assert_eq!(d.counters[0].t_ms, 100);
+        assert_eq!(d.counters[0].a_at, 3);
+        assert_eq!(d.counters[0].b_at, 9);
+        let text = d.render_text();
+        assert!(text.contains("moves"));
+        assert!(!text.contains("no divergences"));
+    }
+
+    #[test]
+    fn counter_ranking_puts_earlier_then_larger_first() {
+        let mk = |c0: (u64, u64), c1: (u64, u64)| {
+            parse_metrics(&format!(
+                concat!(
+                    "{{\"schema\":\"numasched-metrics/v1\",\"name\":\"s\",\"policy\":\"p\",\"seed\":1}}\n",
+                    "{{\"t\":50,\"epoch\":0,\"c\":{{\"early\":{},\"late\":0,\"big\":0}},\"g\":{{}},\"h\":{{}}}}\n",
+                    "{{\"t\":100,\"epoch\":1,\"c\":{{\"early\":{},\"late\":{},\"big\":{}}},\"g\":{{}},\"h\":{{}}}}\n",
+                ),
+                c0.0, c0.1, c1.0, c1.1
+            ))
+            .unwrap()
+        };
+        let a = mk((1, 1), (1, 1));
+        let b = mk((2, 2), (5, 100));
+        let d = diff_metrics("a", &a, "b", &b);
+        let names: Vec<&str> = d.counters.iter().map(|c| c.name.as_str()).collect();
+        // "early" diverges at epoch 0; "big" and "late" at epoch 1 with
+        // "big" carrying the larger final delta.
+        assert_eq!(names, vec!["early", "big", "late"]);
+    }
+
+    #[test]
+    fn trace_diff_finds_first_decision_split() {
+        let mk = |to: u64| {
+            parse_trace(&format!(
+                concat!(
+                    "{{\"schema\":\"numasched-trace/v1\",\"scenario\":\"s\",\"preset\":\"p\",",
+                    "\"policy\":\"proposed\",\"seed\":1,\"horizon_ms\":1000,\"events\":0}}\n",
+                    "{{\"t\":500,\"decision\":\"speedup\",\"pid\":1,\"comm\":\"w\",\"from\":0,\"to\":{to},\"sticky_pages\":0}}\n",
+                    "{{\"end_ms\":1000,\"procs\":1,\"finished\":1,\"migrations\":{to},\"pages_migrated\":0,\"decisions\":1}}\n",
+                ),
+                to = to
+            ))
+            .unwrap()
+        };
+        let same = diff_trace("x", &mk(1), "y", &mk(1));
+        assert!(!same.divergent());
+        assert!(same.render_text().contains("no divergences"));
+
+        let d = diff_trace("x", &mk(1), "y", &mk(2));
+        assert!(d.divergent());
+        let split = d.decision_split.as_ref().unwrap();
+        assert_eq!(split.index, 0);
+        assert!(split.a.as_deref().unwrap().contains("to=1"));
+        assert!(split.b.as_deref().unwrap().contains("to=2"));
+        assert_eq!(d.summary.len(), 1, "migrations differ in the summary");
+        assert!(d.to_json().contains("\"decision_split\":{\"index\":0"));
+    }
+
+    #[test]
+    fn renders_are_byte_identical_across_invocations() {
+        let a = parse_metrics(&stream(42, 3)).unwrap();
+        let b = parse_metrics(&stream(7, 9)).unwrap();
+        let d1 = diff_metrics("a", &a, "b", &b);
+        let d2 = diff_metrics("a", &a, "b", &b);
+        assert_eq!(d1.render_text(), d2.render_text());
+        assert_eq!(d1.to_json(), d2.to_json());
+    }
+}

@@ -1,0 +1,62 @@
+//! Insight engine: cross-run analytics over the artifacts the rest of
+//! the system emits.
+//!
+//! Every other subsystem *writes* machine-readable surfaces — scenario
+//! traces (`numasched-trace/v1`), metrics sidecars
+//! (`numasched-metrics/v1`), flight-recorder dumps
+//! (`numasched-flight/v1`), the bench snapshot
+//! (`numasched-bench-perf/v1`) — and until this module nothing read
+//! them back. The insight engine closes the loop:
+//!
+//! * [`load`] — typed loaders for all of the above plus the append-only
+//!   bench history (`numasched-bench-history/v1`). Mangled input yields
+//!   a [`LoadError`] with a line number, never a panic — the same
+//!   discipline as `procfs::ParseError`.
+//! * [`diff`] — a cross-run differ: aligns two runs of the same
+//!   scenario epoch by epoch and reports ranked per-counter /
+//!   per-histogram divergences, the first decision split (both
+//!   candidate tables), and per-process degradation deltas.
+//! * [`timeline`] — per-pid causal timelines stitching decisions,
+//!   occupancy, stale/quarantine transitions, and chaos fault counters
+//!   into one ordered lifecycle view.
+//! * [`bench`] — a perf-regression detector over the bench history with
+//!   per-metric-family noise thresholds and gate semantics for CI.
+//!
+//! Everything here is a pure function of its input bytes: reports
+//! render byte-identically across repeated invocations (pinned by
+//! `rust/tests/insight_engine.rs`), and the module never prints —
+//! renderers return `String`s for the CLI layer to emit.
+
+pub mod bench;
+pub mod diff;
+pub mod load;
+pub mod timeline;
+
+/// Schema tag stamped on every JSON report this module emits.
+pub const INSIGHT_SCHEMA: &str = "numasched-insight/v1";
+
+/// A typed artifact-loading failure: which surface, which line (1-based;
+/// 0 when the failure is not tied to a line), and what was wrong. Like
+/// `procfs::ParseError` this is the *only* way a loader rejects input —
+/// mangled artifacts must never panic the analyzer reading them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LoadError {
+    /// Artifact surface, e.g. `"metrics stream"` or `"bench history"`.
+    pub surface: &'static str,
+    /// 1-based line of the offending record (0 = whole-file problem).
+    pub line: usize,
+    /// What was malformed.
+    pub detail: &'static str,
+}
+
+impl std::fmt::Display for LoadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.line == 0 {
+            write!(f, "malformed {}: {}", self.surface, self.detail)
+        } else {
+            write!(f, "malformed {} (line {}): {}", self.surface, self.line, self.detail)
+        }
+    }
+}
+
+impl std::error::Error for LoadError {}

@@ -1,0 +1,369 @@
+//! Per-pid causal timelines: one ordered lifecycle view stitched from
+//! whatever artifact is at hand.
+//!
+//! A metrics stream knows *why* the scheduler acted (explain rows) and
+//! *what the system suffered* (chaos fault and degradation counters); a
+//! trace knows *what happened* (events, executed decisions, occupancy).
+//! Either renders into the same entry list: time-ordered, each entry
+//! tagged with the pid it concerns (or none for machine-wide
+//! transitions), so `insight timeline <file> [pid]` answers "what is
+//! the life story of pid 1004?" from any artifact.
+//!
+//! Ordering is deterministic: entries are collected in a fixed
+//! per-section order and stably sorted by time, so equal timestamps
+//! keep their collection order.
+
+use crate::telemetry::provenance::esc;
+
+use super::load::{FlightDoc, MetricsDoc, TraceDoc};
+use super::INSIGHT_SCHEMA;
+
+/// Counters whose epoch-over-epoch increments are lifecycle transitions
+/// worth surfacing: chaos faults, graceful-degradation recoveries, and
+/// stale/quarantine events. Machine-wide — the metrics registry does
+/// not break these down per pid.
+pub const TRANSITION_COUNTERS: [&str; 12] = [
+    "chaos_reads_faulted",
+    "chaos_pids_vanished",
+    "chaos_migrations_faulted",
+    "chaos_node_events",
+    "monitor_read_retries",
+    "monitor_stale_served",
+    "monitor_quarantines",
+    "skip_stale",
+    "skip_offline",
+    "move_faults",
+    "migrate_faults",
+    "evacuations",
+];
+
+/// One timeline entry. `pid == None` marks a machine-wide entry, kept
+/// under any pid filter — a fault storm is part of every pid's story.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimelineEntry {
+    pub t: f64,
+    pub pid: Option<i64>,
+    pub kind: &'static str,
+    pub detail: String,
+}
+
+/// A rendered lifecycle view over one artifact.
+#[derive(Debug, Default)]
+pub struct Timeline {
+    /// Which artifact kind fed this timeline (`"metrics"`, `"trace"`,
+    /// `"flight"`).
+    pub source: &'static str,
+    /// Run label (scenario/stream name).
+    pub label: String,
+    pub pid_filter: Option<i64>,
+    pub entries: Vec<TimelineEntry>,
+}
+
+fn keep(pid_filter: Option<i64>, pid: Option<i64>) -> bool {
+    match (pid_filter, pid) {
+        (None, _) => true,
+        (Some(_), None) => true,
+        (Some(f), Some(p)) => f == p,
+    }
+}
+
+fn finish(
+    mut entries: Vec<TimelineEntry>,
+    source: &'static str,
+    label: &str,
+    pid: Option<i64>,
+) -> Timeline {
+    entries.retain(|e| keep(pid, e.pid));
+    entries.sort_by(|x, y| x.t.total_cmp(&y.t));
+    Timeline { source, label: label.to_string(), pid_filter: pid, entries }
+}
+
+fn opt_u64(v: Option<u64>) -> String {
+    match v {
+        Some(n) => n.to_string(),
+        None => "-".to_string(),
+    }
+}
+
+/// Build a timeline from a parsed metrics stream: explain rows (the
+/// scheduler's reasoning, per pid), transition-counter increments and
+/// `procs_running` changes (machine-wide), and final per-proc outcomes.
+pub fn from_metrics(doc: &MetricsDoc, pid: Option<i64>) -> Timeline {
+    let mut entries = Vec::new();
+    for r in &doc.explains {
+        entries.push(TimelineEntry {
+            t: r.t_ms as f64,
+            pid: Some(r.pid),
+            kind: "decision",
+            detail: format!(
+                "{} comm={} from={} chosen={} dist_best={} cands={}",
+                r.outcome,
+                r.comm,
+                r.from,
+                opt_u64(r.chosen),
+                r.dist_best,
+                r.candidates.len()
+            ),
+        });
+    }
+    let mut prev = [0u64; TRANSITION_COUNTERS.len()];
+    let mut prev_running: Option<f64> = None;
+    for e in &doc.epochs {
+        for (name, last) in TRANSITION_COUNTERS.iter().zip(prev.iter_mut()) {
+            let cur = e.counters.get(*name).copied().unwrap_or(0);
+            if cur != *last {
+                // saturating: counters are cumulative, but mangled
+                // input must degrade, not panic.
+                entries.push(TimelineEntry {
+                    t: e.t_ms as f64,
+                    pid: None,
+                    kind: "transition",
+                    detail: format!("{name} +{} (cum {cur})", cur.saturating_sub(*last)),
+                });
+                *last = cur;
+            }
+        }
+        if let Some(cur) = e.gauges.get("procs_running").copied() {
+            let changed = match prev_running {
+                Some(p) => p.to_bits() != cur.to_bits(),
+                None => true,
+            };
+            if changed {
+                entries.push(TimelineEntry {
+                    t: e.t_ms as f64,
+                    pid: None,
+                    kind: "population",
+                    detail: format!("procs_running={cur}"),
+                });
+                prev_running = Some(cur);
+            }
+        }
+    }
+    let end = doc
+        .end_ms
+        .map(|m| m as f64)
+        .or_else(|| doc.epochs.last().map(|e| e.t_ms as f64))
+        .unwrap_or(0.0);
+    for r in &doc.results {
+        let runtime = match r.runtime_ms {
+            Some(ms) => format!("{ms}"),
+            None => "-".to_string(),
+        };
+        entries.push(TimelineEntry {
+            t: end,
+            pid: Some(r.pid),
+            kind: "result",
+            detail: format!(
+                "comm={} runtime_ms={runtime} mean_speed={} degradation={} migrations={}",
+                r.comm, r.mean_speed, r.degradation, r.migrations
+            ),
+        });
+    }
+    finish(entries, "metrics", &doc.name, pid)
+}
+
+/// Build a timeline from a parsed scenario trace: fired events fan out
+/// per touched pid (or one machine-wide entry when none), executed
+/// decisions attach to their pid, occupancy samples surface only when
+/// the running count changes, and the summary closes the view.
+pub fn from_trace(doc: &TraceDoc, pid: Option<i64>) -> Timeline {
+    let mut entries = Vec::new();
+    for e in &doc.events {
+        let detail = format!(
+            "{} comm={} node={} pages={}",
+            e.kind,
+            e.comm,
+            opt_u64(e.node),
+            opt_u64(e.pages)
+        );
+        if e.pids.is_empty() {
+            entries.push(TimelineEntry { t: e.t, pid: None, kind: "event", detail });
+        } else {
+            for &p in &e.pids {
+                entries.push(TimelineEntry {
+                    t: e.t,
+                    pid: Some(p),
+                    kind: "event",
+                    detail: detail.clone(),
+                });
+            }
+        }
+    }
+    for d in &doc.decisions {
+        entries.push(TimelineEntry {
+            t: d.t,
+            pid: Some(d.pid),
+            kind: "decision",
+            detail: format!(
+                "{} comm={} from={} to={} sticky_pages={}",
+                d.reason, d.comm, d.from, d.to, d.sticky_pages
+            ),
+        });
+    }
+    let mut prev_running: Option<u64> = None;
+    for o in &doc.occupancy {
+        if prev_running != Some(o.running) {
+            let occ: Vec<String> = o.occ.iter().map(|x| x.to_string()).collect();
+            entries.push(TimelineEntry {
+                t: o.t,
+                pid: None,
+                kind: "population",
+                detail: format!("running={} occ=[{}]", o.running, occ.join(",")),
+            });
+            prev_running = Some(o.running);
+        }
+    }
+    if let Some(s) = &doc.summary {
+        entries.push(TimelineEntry {
+            t: s.end_ms,
+            pid: None,
+            kind: "summary",
+            detail: format!(
+                "procs={} finished={} migrations={} pages_migrated={} decisions={}",
+                s.procs, s.finished, s.migrations, s.pages_migrated, s.decisions
+            ),
+        });
+    }
+    finish(entries, "trace", &doc.scenario, pid)
+}
+
+/// Build a timeline from a flight dump: the retained metrics tail, with
+/// the eviction context noted in the label.
+pub fn from_flight(doc: &FlightDoc, pid: Option<i64>) -> Timeline {
+    let mut t = from_metrics(&doc.metrics, pid);
+    t.source = "flight";
+    t.label = format!("{} ({} frames kept, {} evicted)", doc.reason, doc.frames, doc.evicted);
+    t
+}
+
+impl Timeline {
+    /// Fixed-width text view.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("insight timeline ({}): {}", self.source, self.label));
+        if let Some(p) = self.pid_filter {
+            out.push_str(&format!(", pid {p}"));
+        }
+        out.push('\n');
+        out.push_str(&format!("{} entries\n", self.entries.len()));
+        out.push_str("t_ms       pid     kind        detail\n");
+        for e in &self.entries {
+            let pid = match e.pid {
+                Some(p) => p.to_string(),
+                None => "-".to_string(),
+            };
+            out.push_str(&format!("{:<9}  {:<6}  {:<10}  {}\n", e.t, pid, e.kind, e.detail));
+        }
+        out
+    }
+
+    /// `numasched-insight/v1` JSON report.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{{\"schema\":\"{INSIGHT_SCHEMA}\",\"verb\":\"timeline\",\"source\":\"{}\",\
+             \"label\":\"{}\",\"pid\":{},\"entries\":[",
+            self.source,
+            esc(&self.label),
+            match self.pid_filter {
+                Some(p) => p.to_string(),
+                None => "null".to_string(),
+            }
+        ));
+        for (i, e) in self.entries.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"t\":{},\"pid\":{},\"kind\":\"{}\",\"detail\":\"{}\"}}",
+                e.t,
+                match e.pid {
+                    Some(p) => p.to_string(),
+                    None => "null".to_string(),
+                },
+                e.kind,
+                esc(&e.detail)
+            ));
+        }
+        out.push_str("]}");
+        out.push('\n');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::load::{parse_metrics, parse_trace};
+    use super::*;
+
+    fn metrics_text() -> String {
+        concat!(
+            "{\"schema\":\"numasched-metrics/v1\",\"name\":\"s\",\"policy\":\"proposed\",\"seed\":1}\n",
+            "{\"t\":100,\"explain\":\"moved\",\"pid\":7,\"comm\":\"web\",\"from\":0,\"chosen\":1,",
+            "\"dist_best\":1,\"needed\":1.05,\"cooldown\":false,\"sticky\":0,\"cands\":[]}\n",
+            "{\"t\":150,\"epoch\":0,\"c\":{\"evacuations\":0},\"g\":{\"procs_running\":2},\"h\":{}}\n",
+            "{\"t\":300,\"epoch\":1,\"c\":{\"evacuations\":2},\"g\":{\"procs_running\":1},\"h\":{}}\n",
+            "{\"result\":\"proc\",\"pid\":7,\"comm\":\"web\",\"runtime_ms\":900,\"mean_speed\":0.9,",
+            "\"degradation\":1.2,\"migrations\":1}\n",
+            "{\"end_ms\":1000,\"epochs\":2,\"explains\":1}\n",
+        )
+        .to_string()
+    }
+
+    #[test]
+    fn metrics_timeline_stitches_decisions_transitions_and_results() {
+        let doc = parse_metrics(&metrics_text()).unwrap();
+        let t = from_metrics(&doc, None);
+        let kinds: Vec<&str> = t.entries.iter().map(|e| e.kind).collect();
+        assert_eq!(kinds, vec!["decision", "population", "transition", "population", "result"]);
+        assert!(t.entries[2].detail.contains("evacuations +2 (cum 2)"));
+        assert_eq!(t.entries[4].t, 1000.0, "results anchor at end_ms");
+        let text = t.render_text();
+        assert!(text.starts_with("insight timeline (metrics): s\n"));
+        assert!(text.contains("5 entries"));
+        assert!(t.to_json().contains("\"verb\":\"timeline\""));
+    }
+
+    #[test]
+    fn pid_filter_keeps_global_entries() {
+        let doc = parse_metrics(&metrics_text()).unwrap();
+        let t = from_metrics(&doc, Some(99));
+        let kinds: Vec<&str> = t.entries.iter().map(|e| e.kind).collect();
+        // pid-7 decision and result are filtered out; machine-wide
+        // transitions and population changes stay.
+        assert_eq!(kinds, vec!["population", "transition", "population"]);
+        assert!(t.render_text().contains(", pid 99"));
+    }
+
+    #[test]
+    fn trace_timeline_fans_events_out_per_pid() {
+        let text = concat!(
+            "{\"schema\":\"numasched-trace/v1\",\"scenario\":\"s\",\"preset\":\"p\",",
+            "\"policy\":\"proposed\",\"seed\":1,\"horizon_ms\":1000,\"events\":1}\n",
+            "{\"t\":100,\"ev\":\"daemon_burst\",\"comm\":\"burst\",\"pids\":[10,11]}\n",
+            "{\"t\":200,\"decision\":\"speedup\",\"pid\":10,\"comm\":\"burst-0\",\"from\":0,\"to\":1,\"sticky_pages\":4}\n",
+            "{\"t\":250,\"occ\":[5,5],\"rho\":[0.1,0.2],\"running\":2}\n",
+            "{\"t\":500,\"occ\":[5,5],\"rho\":[0.1,0.2],\"running\":2}\n",
+            "{\"end_ms\":1000,\"procs\":2,\"finished\":2,\"migrations\":1,\"pages_migrated\":4,\"decisions\":1}\n",
+        );
+        let doc = parse_trace(text).unwrap();
+        let all = from_trace(&doc, None);
+        let kinds: Vec<&str> = all.entries.iter().map(|e| e.kind).collect();
+        // Two per-pid event entries, one decision, ONE population entry
+        // (the second occupancy sample repeats running=2), the summary.
+        assert_eq!(kinds, vec!["event", "event", "decision", "population", "summary"]);
+
+        let one = from_trace(&doc, Some(11));
+        let kinds: Vec<&str> = one.entries.iter().map(|e| e.kind).collect();
+        assert_eq!(kinds, vec!["event", "population", "summary"]);
+    }
+
+    #[test]
+    fn renders_are_byte_identical_across_invocations() {
+        let doc = parse_metrics(&metrics_text()).unwrap();
+        let a = from_metrics(&doc, None);
+        let b = from_metrics(&doc, None);
+        assert_eq!(a.render_text(), b.render_text());
+        assert_eq!(a.to_json(), b.to_json());
+    }
+}

@@ -27,6 +27,7 @@ pub mod cli;
 pub mod config;
 pub mod experiments;
 pub mod fabric;
+pub mod insight;
 pub mod mem;
 pub mod monitor;
 pub mod procfs;

@@ -43,6 +43,7 @@ fn main() {
         "scenario" => cmd_scenario(&cli),
         "chaos" => cmd_chaos(&cli),
         "explain" => cmd_explain(&cli),
+        "insight" => cmd_insight(&cli),
         "host-monitor" => cmd_host_monitor(&cli),
         "inspect" => cmd_inspect(&cli),
         "lint" => cmd_lint(&cli),
@@ -756,7 +757,274 @@ fn cmd_explain(cli: &Cli) -> i32 {
         }
         println!("full stream -> {} ({})", path.display(), telemetry::METRICS_SCHEMA);
     }
+    if cli.metrics_text {
+        print!("{}", tel.registry.render_prometheus());
+    }
     0
+}
+
+/// `insight diff|timeline|bench` — cross-run analytics over recorded
+/// artifacts (traces, metrics streams, flight dumps, bench history).
+fn cmd_insight(cli: &Cli) -> i32 {
+    match cli.positional.first().map(String::as_str).unwrap_or("") {
+        "diff" => cmd_insight_diff(cli),
+        "timeline" => cmd_insight_timeline(cli),
+        "bench" => cmd_insight_bench(cli),
+        other => {
+            eprintln!("unknown insight subcommand {other:?} (diff | timeline | bench)");
+            2
+        }
+    }
+}
+
+/// Shared report output for the insight verbs: the JSON report goes to
+/// `--out` when given; stdout gets JSON under `--json`, text otherwise.
+fn emit_insight(cli: &Cli, text: &str, json: &str) -> i32 {
+    if let Some(path) = &cli.out {
+        if let Err(e) = std::fs::write(path, json) {
+            eprintln!("error: write {}: {e}", path.display());
+            return 2;
+        }
+    }
+    if cli.json {
+        print!("{json}");
+    } else {
+        print!("{text}");
+    }
+    0
+}
+
+fn read_artifact(path: &str) -> Result<String, i32> {
+    std::fs::read_to_string(path).map_err(|e| {
+        eprintln!("error: read {path}: {e}");
+        2
+    })
+}
+
+/// `insight diff <a> <b>` — align two recordings of the same kind and
+/// report every divergence, ranked. Exit 0 when the runs match, 1 when
+/// they diverge, 2 on unusable input.
+fn cmd_insight_diff(cli: &Cli) -> i32 {
+    use numasched::insight::{diff, load};
+    let (Some(a_path), Some(b_path)) = (cli.positional.get(1), cli.positional.get(2)) else {
+        eprintln!("error: insight diff needs two artifact files");
+        return 2;
+    };
+    let (a_text, b_text) = match (read_artifact(a_path), read_artifact(b_path)) {
+        (Ok(a), Ok(b)) => (a, b),
+        (Err(c), _) | (_, Err(c)) => return c,
+    };
+    let kind_of = |path: &str, text: &str| -> Result<load::Kind, i32> {
+        load::detect_kind(text).map_err(|e| {
+            eprintln!("error: {path}: {e}");
+            2
+        })
+    };
+    let (a_kind, b_kind) = match (kind_of(a_path, &a_text), kind_of(b_path, &b_text)) {
+        (Ok(a), Ok(b)) => (a, b),
+        (Err(c), _) | (_, Err(c)) => return c,
+    };
+    if a_kind != b_kind {
+        eprintln!(
+            "error: cannot diff a {} against a {}",
+            a_kind.name(),
+            b_kind.name()
+        );
+        return 2;
+    }
+    match a_kind {
+        load::Kind::Trace => {
+            let parsed = (load::parse_trace(&a_text), load::parse_trace(&b_text));
+            let (a, b) = match parsed {
+                (Ok(a), Ok(b)) => (a, b),
+                (Err(e), _) | (_, Err(e)) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            };
+            let report = diff::diff_trace(a_path, &a, b_path, &b);
+            let code = emit_insight(cli, &report.render_text(), &report.to_json());
+            if code != 0 {
+                return code;
+            }
+            i32::from(report.divergent())
+        }
+        load::Kind::Metrics | load::Kind::Flight => {
+            // A flight dump wraps a metrics tail; diff the payload.
+            let parse = |text: &str| -> Result<load::MetricsDoc, numasched::insight::LoadError> {
+                if a_kind == load::Kind::Flight {
+                    load::parse_flight(text).map(|f| f.metrics)
+                } else {
+                    load::parse_metrics(text)
+                }
+            };
+            let (a, b) = match (parse(&a_text), parse(&b_text)) {
+                (Ok(a), Ok(b)) => (a, b),
+                (Err(e), _) | (_, Err(e)) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            };
+            let report = diff::diff_metrics(a_path, &a, b_path, &b);
+            let code = emit_insight(cli, &report.render_text(), &report.to_json());
+            if code != 0 {
+                return code;
+            }
+            i32::from(report.divergent())
+        }
+        other => {
+            eprintln!(
+                "error: insight diff compares traces, metrics streams, or flight \
+                 dumps (got a {})",
+                other.name()
+            );
+            2
+        }
+    }
+}
+
+/// `insight timeline <file> [pid]` — the per-pid causal lifecycle view.
+fn cmd_insight_timeline(cli: &Cli) -> i32 {
+    use numasched::insight::{load, timeline};
+    let Some(path) = cli.positional.get(1) else {
+        eprintln!("error: insight timeline needs an artifact file");
+        return 2;
+    };
+    let pid = match cli.positional.get(2) {
+        Some(s) => match s.parse::<i64>() {
+            Ok(p) => Some(p),
+            Err(_) => {
+                eprintln!("error: pid must be an integer (got {s:?})");
+                return 2;
+            }
+        },
+        None => None,
+    };
+    let text = match read_artifact(path) {
+        Ok(t) => t,
+        Err(c) => return c,
+    };
+    let kind = match load::detect_kind(&text) {
+        Ok(k) => k,
+        Err(e) => {
+            eprintln!("error: {path}: {e}");
+            return 2;
+        }
+    };
+    let parsed = match kind {
+        load::Kind::Metrics => load::parse_metrics(&text).map(|d| timeline::from_metrics(&d, pid)),
+        load::Kind::Trace => load::parse_trace(&text).map(|d| timeline::from_trace(&d, pid)),
+        load::Kind::Flight => load::parse_flight(&text).map(|d| timeline::from_flight(&d, pid)),
+        other => {
+            eprintln!(
+                "error: insight timeline reads a trace, metrics stream, or flight \
+                 dump (got a {})",
+                other.name()
+            );
+            return 2;
+        }
+    };
+    match parsed {
+        Ok(tl) => emit_insight(cli, &tl.render_text(), &tl.to_json()),
+        Err(e) => {
+            eprintln!("error: {path}: {e}");
+            2
+        }
+    }
+}
+
+/// `insight bench` — append a measured BENCH_PERF.json snapshot to the
+/// history (provisional snapshots and duplicate run ids are skipped, so
+/// CI retries are idempotent), then trend every metric against the
+/// lower-median baseline of prior comparable entries. `--gate` turns a
+/// confirmed regression into exit 1 once the gate is armed.
+fn cmd_insight_bench(cli: &Cli) -> i32 {
+    use numasched::insight::{bench, load};
+    let history_path = cli
+        .history
+        .clone()
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_HISTORY.jsonl"));
+    let noise = match &cli.noise {
+        Some(spec) => match bench::parse_noise(spec) {
+            Ok(n) => n,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        },
+        None => bench::Noise::default(),
+    };
+    if let Some(perf_path) = &cli.append {
+        let text = match std::fs::read_to_string(perf_path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("error: read {}: {e}", perf_path.display());
+                return 2;
+            }
+        };
+        let doc = match load::parse_bench_perf(&text) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("error: {}: {e}", perf_path.display());
+                return 2;
+            }
+        };
+        if doc.provisional {
+            println!(
+                "insight bench: {} is a provisional placeholder — not appended",
+                perf_path.display()
+            );
+        } else {
+            let id = cli.run_id.as_deref().unwrap_or("local");
+            let existing = std::fs::read_to_string(&history_path).unwrap_or_default();
+            let entries = match bench::parse_history(&existing) {
+                Ok(e) => e,
+                Err(e) => {
+                    eprintln!("error: {}: {e}", history_path.display());
+                    return 2;
+                }
+            };
+            if entries.iter().any(|e| e.id == id) {
+                println!("insight bench: id {id:?} already in history — append skipped");
+            } else {
+                let mut out = existing;
+                out.push_str(&bench::render_history_entry(id, &doc));
+                if let Err(e) = std::fs::write(&history_path, out) {
+                    eprintln!("error: write {}: {e}", history_path.display());
+                    return 2;
+                }
+                println!(
+                    "insight bench: appended {id:?} ({} metrics, smoke={}) -> {}",
+                    doc.metrics.len(),
+                    doc.smoke,
+                    history_path.display()
+                );
+            }
+        }
+    }
+    let text = match std::fs::read_to_string(&history_path) {
+        Ok(t) => t,
+        Err(_) => {
+            println!(
+                "insight bench: no history at {} yet — nothing to analyze",
+                history_path.display()
+            );
+            return 0;
+        }
+    };
+    let entries = match bench::parse_history(&text) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("error: {}: {e}", history_path.display());
+            return 2;
+        }
+    };
+    let analysis = bench::analyze(&entries, &noise);
+    let code = emit_insight(cli, &analysis.render_text(), &analysis.to_json());
+    if code != 0 {
+        return code;
+    }
+    i32::from(cli.gate && analysis.gate_armed && analysis.regressions > 0)
 }
 
 /// `lint [--json] [paths...]` — the determinism static-analysis verb.

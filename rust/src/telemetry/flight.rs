@@ -69,15 +69,17 @@ impl FlightRecorder {
         self.frames.iter()
     }
 
-    /// Render the dump: a header line with the trigger reason, then each
-    /// retained epoch's metrics record followed by its explain rows.
+    /// Render the dump: a header line with the trigger reason (including
+    /// how many epochs rolled off the ring), then each retained epoch's
+    /// metrics record followed by its explain rows.
     pub fn dump_jsonl(&self, reason: &str) -> String {
         let mut out = String::new();
         let reason = reason.replace(&['"', '\\', '\n'][..], "_");
         out.push_str(&format!(
-            "{{\"schema\":\"{FLIGHT_SCHEMA}\",\"reason\":\"{reason}\",\"frames\":{},\"total_epochs\":{}}}\n",
+            "{{\"schema\":\"{FLIGHT_SCHEMA}\",\"reason\":\"{reason}\",\"frames\":{},\"total_epochs\":{},\"evicted\":{}}}\n",
             self.frames.len(),
-            self.pushed
+            self.pushed,
+            self.pushed.saturating_sub(self.frames.len() as u64)
         ));
         for f in &self.frames {
             out.push_str(&f.epoch_line);
@@ -156,6 +158,7 @@ mod tests {
         assert!(lines[0].contains("\"reason\":\"ledger-oracle\""));
         assert!(lines[0].contains("\"frames\":2"));
         assert!(lines[0].contains("\"total_epochs\":5"));
+        assert!(lines[0].contains("\"evicted\":3"));
         assert!(lines[1].contains("\"epoch\":3"));
         assert!(lines[2].contains("\"explain\""));
         assert!(lines[3].contains("\"epoch\":4"));

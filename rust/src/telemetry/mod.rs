@@ -22,6 +22,7 @@
 //! {"schema":"numasched-metrics/v1","name":...,"policy":...,"seed":...}   header
 //! {"t":...,"explain":"moved",...}                                        explain rows
 //! {"t":...,"epoch":N,"c":{...},"g":{...},"h":{...}}                      epoch records
+//! {"result":"proc","pid":...,"degradation":...}                          per-proc outcomes
 //! {"timing":{...}}                                                       diff-EXCLUDED
 //! {"end_ms":...,"epochs":N,"explains":N}                                 footer
 //! ```
@@ -243,6 +244,36 @@ impl Telemetry {
         self.explain_total
     }
 
+    /// Emit one per-process outcome record (after the final epoch,
+    /// before [`Telemetry::finish`]): runtime, mean speed, the derived
+    /// degradation factor (`1 / mean_speed` — the paper's Table 1
+    /// metric), and migration count. `runtime_ms` is `None` for daemons
+    /// still running at the horizon and renders as JSON `null`. These
+    /// records are what `insight diff` uses for per-policy degradation
+    /// deltas.
+    pub fn push_proc_result(
+        &mut self,
+        pid: i32,
+        comm: &str,
+        runtime_ms: Option<f64>,
+        mean_speed: f64,
+        migrations: u64,
+    ) {
+        if self.finished {
+            return;
+        }
+        let degradation = if mean_speed > 0.0 { 1.0 / mean_speed } else { 0.0 };
+        let runtime = match runtime_ms {
+            Some(ms) => format!("{ms}"),
+            None => "null".to_string(),
+        };
+        self.lines.push(format!(
+            "{{\"result\":\"proc\",\"pid\":{pid},\"comm\":\"{}\",\"runtime_ms\":{runtime},\
+             \"mean_speed\":{mean_speed},\"degradation\":{degradation},\"migrations\":{migrations}}}",
+            provenance::esc(comm),
+        ));
+    }
+
     /// Emit the timing record and the footer. Idempotent.
     pub fn finish(&mut self, end_ms: u64) {
         if self.finished {
@@ -384,5 +415,22 @@ mod tests {
         tel.finish(10);
         tel.finish(10);
         assert_eq!(tel.to_jsonl().lines().count(), 2);
+    }
+
+    #[test]
+    fn proc_results_render_degradation_and_respect_finish() {
+        let mut tel = Telemetry::new();
+        tel.push_proc_result(42, "canneal", Some(1234.5), 0.8, 3);
+        tel.push_proc_result(43, "daemon", None, 0.0, 0);
+        tel.finish(10);
+        tel.push_proc_result(44, "late", Some(1.0), 1.0, 0);
+        let s = tel.to_jsonl();
+        assert!(s.contains(
+            "{\"result\":\"proc\",\"pid\":42,\"comm\":\"canneal\",\"runtime_ms\":1234.5,\
+             \"mean_speed\":0.8,\"degradation\":1.25,\"migrations\":3}"
+        ));
+        assert!(s.contains("\"pid\":43,\"comm\":\"daemon\",\"runtime_ms\":null"));
+        assert!(s.contains("\"mean_speed\":0,\"degradation\":0,"));
+        assert!(!s.contains("\"pid\":44"), "records after finish are dropped");
     }
 }

@@ -160,6 +160,50 @@ fn baseline_policies_share_the_metrics_surface() {
 }
 
 #[test]
+fn flight_ring_wraparound_keeps_exactly_the_last_64_epochs() {
+    use numasched::telemetry::flight::DEFAULT_FLIGHT_EPOCHS;
+    // All-daemon workloads never early-stop, so the run emits one epoch
+    // per report period for the whole horizon — comfortably past the
+    // ring capacity.
+    let mut params = quick_params(PolicyKind::Proposed);
+    for spec in &mut params.specs {
+        spec.behavior.work_units = f64::INFINITY;
+    }
+    params.horizon_ms = 6_000.0;
+    let mut tel = Telemetry::new();
+    tel.push_header("wraparound", "proposed", params.seed);
+    runner::run_instrumented(&params, &mut tel);
+
+    let epochs = tel.epochs();
+    let cap = DEFAULT_FLIGHT_EPOCHS as u64;
+    assert!(
+        epochs > cap,
+        "need more than {cap} epochs to wrap the ring, got {epochs}"
+    );
+    assert_eq!(tel.flight.len(), DEFAULT_FLIGHT_EPOCHS, "ring holds exactly its capacity");
+    let kept: Vec<u64> = tel.flight.frames().map(|f| f.epoch).collect();
+    assert_eq!(kept[0], epochs - cap, "oldest surviving frame");
+    assert_eq!(*kept.last().unwrap(), epochs - 1, "newest frame is the final epoch");
+    assert!(
+        kept.windows(2).all(|w| w[1] == w[0] + 1),
+        "kept epochs are contiguous: {kept:?}"
+    );
+
+    // The dump says how much history rolled off, and every retained
+    // epoch line still parses.
+    let dump = tel.flight.dump_jsonl("wraparound");
+    let header = dump.lines().next().expect("dump header");
+    assert!(header.contains(&format!("\"frames\":{DEFAULT_FLIGHT_EPOCHS}")), "{header}");
+    assert!(header.contains(&format!("\"total_epochs\":{epochs}")), "{header}");
+    assert!(header.contains(&format!("\"evicted\":{}", epochs - cap)), "{header}");
+    assert_eq!(
+        dump.lines().filter_map(parse_epoch_line).count(),
+        DEFAULT_FLIGHT_EPOCHS,
+        "all retained epoch records parse back"
+    );
+}
+
+#[test]
 fn flight_recorder_holds_the_tail_and_dumps_parseable_jsonl() {
     let sc = catalog::by_name("link-storm").expect("catalog scenario");
     let mut tel = Telemetry::new();
